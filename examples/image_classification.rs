@@ -1,0 +1,42 @@
+//! Image classification with ParM (the paper's flagship workload):
+//! full degraded-mode accuracy evaluation on the CIFAR-10 stand-in across
+//! k = 2, 3, 4 and both encoders, printing the accuracy trade-off table.
+//!
+//! Run with: `cargo run --release --example image_classification`
+
+use parm::artifacts::Manifest;
+use parm::experiments::accuracy;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let dataset = "synthvision10";
+    let arch = "microresnet";
+    let dep = m.deployed(dataset, arch)?;
+
+    println!("ParM on {dataset}/{arch} — accuracy under unavailability\n");
+    println!(
+        "{:>4} {:>9} {:>8} {:>8} {:>9} {:>22}",
+        "k", "encoder", "A_a", "A_d", "default", "A_o @ f_u=5% (Eq. 1)"
+    );
+    for (k, enc) in [(2, "sum"), (3, "sum"), (4, "sum"), (2, "concat"), (4, "concat")] {
+        match m.parity(dataset, arch, k, enc, 0) {
+            Ok(par) => {
+                let r = accuracy::evaluate(&m, dep, par, 7)?;
+                println!(
+                    "{:>4} {:>9} {:>8.3} {:>8.3} {:>9.3} {:>22.3}",
+                    k, enc, r.available, r.degraded, r.default_baseline,
+                    r.overall(0.05)
+                );
+            }
+            Err(_) => println!("{k:>4} {enc:>9}   (not in artifacts — rerun `make artifacts`)"),
+        }
+    }
+    println!(
+        "\nreading: A_d degrades as k grows (more queries per parity), the\n\
+         task-specific concat encoder beats the generic sum, and at expected\n\
+         unavailability (f_u <= 10%) overall accuracy stays near A_a — the\n\
+         paper's Figure 7/9/10 story."
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Object localization with ParM (§4.2.1, Figure 8): a regression task
+//! where "return a default prediction" is meaningless — reconstruction is
+//! the only viable fallback. Prints per-example boxes plus the aggregate
+//! IoU of deployed predictions vs ParM reconstructions.
+//!
+//! Run with: `cargo run --release --example object_localization`
+
+use parm::artifacts::Manifest;
+use parm::coordinator::{decoder, encoder::Encoder};
+use parm::experiments::accuracy::{self, run_all};
+use parm::runtime::engine::Executable;
+use parm::workload::QuerySource;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let dep_entry = m.deployed("synthloc", "microresnet")?;
+    let par_entry = m.parity("synthloc", "microresnet", 2, "sum", 0)?;
+    let batch = *dep_entry.files.keys().max().unwrap();
+    let deployed = Executable::load(
+        m.hlo_path(dep_entry, batch)?, &dep_entry.name, &dep_entry.input_shape,
+        batch, dep_entry.out_dim,
+    )?;
+    let parity = Executable::load(
+        m.hlo_path(par_entry, batch)?, &par_entry.name, &par_entry.input_shape,
+        batch, par_entry.out_dim,
+    )?;
+
+    let ds = m.dataset("synthloc")?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let n = (source.len() / 2) * 2;
+    let outs = run_all(&deployed, &source.queries[..n])?;
+
+    let enc = Encoder::sum(2);
+    let mut iou_dep = 0.0f64;
+    let mut iou_rec = 0.0f64;
+    for s in 0..n / 2 {
+        let (a, b) = (2 * s, 2 * s + 1);
+        let p = enc.encode(&[&source.queries[a], &source.queries[b]])?;
+        let fp = run_all(&parity, &[p])?.remove(0);
+        // Each of the two "one slow instance" scenarios.
+        for (miss, have) in [(a, b), (b, a)] {
+            let rec = decoder::decode_r1(
+                &[1.0, 1.0], &fp,
+                &[
+                    if miss == 2 * s { None } else { Some(outs[2 * s].clone()) },
+                    if miss == 2 * s + 1 { None } else { Some(outs[2 * s + 1].clone()) },
+                ],
+                miss - 2 * s,
+            )?;
+            let truth = source.box_of(miss).unwrap();
+            iou_rec += accuracy::iou(rec.data(), &truth) as f64;
+            iou_dep += accuracy::iou(outs[miss].data(), &truth) as f64;
+            let _ = have;
+            if s < 3 && miss == a {
+                println!(
+                    "example {s}: truth={:?}\n  deployed box      ={:?} (IoU {:.3})\n  reconstructed box ={:?} (IoU {:.3})",
+                    truth,
+                    &outs[miss].data()[..4],
+                    accuracy::iou(outs[miss].data(), &truth),
+                    &rec.data()[..4],
+                    accuracy::iou(rec.data(), &truth),
+                );
+            }
+        }
+    }
+    println!(
+        "\nmean IoU over {} scenarios: deployed={:.3}, ParM reconstruction={:.3}",
+        n,
+        iou_dep / n as f64,
+        iou_rec / n as f64
+    );
+    println!("(paper: 0.945 vs 0.674 on CUB-200 — reconstructions capture the gist)");
+    Ok(())
+}

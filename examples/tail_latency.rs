@@ -1,0 +1,67 @@
+//! End-to-end serving demo (the repo's headline E2E driver): serve real
+//! batched queries through the full threaded coordinator against the
+//! simulated GPU cluster with background shuffles, for ParM and all three
+//! baselines, and report median / p99 / p99.9 latency + throughput.
+//!
+//! Run with: `cargo run --release --example tail_latency`
+//! Knobs: PARM_BENCH_QUERIES (default 8000).
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::experiments::latency::{self, LatencyRow};
+use parm::workload::QuerySource;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8_000);
+
+    let k = 2usize;
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let models = latency::load_models(&m, 1, k, 1, true)?;
+    let mean = parm::coordinator::service::measure_service(
+        &models.deployed,
+        &parm::tensor::Tensor::batch(&[source.queries[0].clone()])?,
+        20,
+    );
+    let capacity = GPU.default_m as f64 / mean.as_secs_f64();
+    let rate = 0.55 * capacity;
+    println!(
+        "serving {n} queries at {rate:.0} qps (measured capacity {capacity:.0} qps, m={} + redundancy, 4 shuffles)\n",
+        GPU.default_m
+    );
+
+    let mut rows = Vec::new();
+    for (mode, label) in [
+        (Mode::NoRedundancy, "no-redundancy (m only)"),
+        (Mode::Parm { k, encoders: vec![Encoder::sum(k)] }, "parm (k=2)"),
+        (Mode::EqualResources { k }, "equal-resources"),
+        (Mode::ApproxBackup { k }, "approx-backup"),
+    ] {
+        let mut cfg = ServiceConfig::defaults(mode, &GPU);
+        cfg.seed = 0xE2E;
+        rows.push(latency::run_point(&cfg, &models, &source, n, rate, label)?);
+    }
+
+    println!("{}", LatencyRow::header());
+    for r in &rows {
+        println!("{}", r.line());
+    }
+    let parm = &rows[1];
+    let er = &rows[2];
+    println!(
+        "\nParM p99.9 is {:.0}% {} Equal-Resources' at the same rate; tail-to-median gap {:.1}x vs {:.1}x.",
+        ((er.p999_ms - parm.p999_ms) / er.p999_ms * 100.0).abs(),
+        if parm.p999_ms < er.p999_ms { "below" } else { "above" },
+        parm.p999_ms / parm.median_ms,
+        er.p999_ms / er.median_ms,
+    );
+    println!("reconstructions used: {}", parm.reconstructions);
+    Ok(())
+}

@@ -1,0 +1,339 @@
+"""AOT artifact build: train every model variant and export HLO text.
+
+This is the only place Python runs in the whole system, and it runs once:
+``make artifacts`` invokes ``python -m compile.aot --out ../artifacts`` and
+is a no-op when the manifest is newer than the compile-path sources.
+
+Per model variant we emit one HLO file per serving batch size. HLO **text**
+(not ``.serialize()``) is the interchange format: the image's xla_extension
+0.5.1 rejects jax>=0.5 serialized protos (64-bit instruction ids); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Exported executables close over the trained parameters (they become HLO
+constants), so the Rust runtime sees single-input programs: query -> output.
+The export path routes through the L1 Pallas kernels (``use_pallas=True``)
+so the kernels lower into the shipped HLO; training used the jnp reference
+path (interpret-mode Pallas has no autodiff), and pytest pins the two paths
+to each other.
+
+Build matrix (see DESIGN.md experiment index):
+- deployed models per dataset/arch used by Figures 6-9,
+- parity models for k in {2,3,4}, sum + concat encoders, r in {1,2},
+- the latency workload (synthpets, 1000-dim outputs per §5.1) at batch
+  sizes 1, 2, 4, plus the approximate-backup model of §5.2.6.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax._src.lib import xla_client as xc
+
+from . import datasets, encoders, models, train
+
+FAST = os.environ.get("PARM_FAST", "") not in ("", "0")
+
+# (dataset, arch, deployed_epochs, parity_epochs, parity_ks)
+# Paper mapping: microresnet~ResNet-18, lenet~LeNet-5/VGG-11, mlp~MLP.
+ACCURACY_MATRIX = [
+    # Fig 6 row + Fig 7/9 (k sweep) + Fig 10 (concat)
+    dict(dataset="synthvision10", arch="microresnet", epochs=8, p_epochs=25,
+         ks=(2, 3, 4), concat_ks=(2, 4), r2=True),
+    # CIFAR-100 / ResNet-152 stand-in, top-5 metric
+    dict(dataset="synthvision100", arch="microresnet", epochs=10, p_epochs=25,
+         ks=(2,)),
+    dict(dataset="synthfashion", arch="mlp", epochs=8, p_epochs=20, ks=(2,)),
+    dict(dataset="synthfashion", arch="lenet", epochs=8, p_epochs=20, ks=(2,)),
+    dict(dataset="synthfashion", arch="microresnet", epochs=8, p_epochs=20,
+         ks=(2, 3, 4)),
+    dict(dataset="synthdigits", arch="lenet", epochs=6, p_epochs=15,
+         ks=(2, 3, 4)),
+    # Google Commands / VGG-11 stand-in
+    dict(dataset="synthspeech", arch="lenet", epochs=8, p_epochs=20,
+         ks=(2, 3, 4)),
+    # Object localization (Fig 8), regression
+    dict(dataset="synthloc", arch="microresnet", epochs=10, p_epochs=25,
+         ks=(2,)),
+]
+
+# Latency workload (§5.1): Cat-v-Dog stand-in, ResNet-18 stand-in, outputs
+# padded to 1000 floats, batch sizes 1/2/4, parity k in {2,3,4}, plus the
+# approximate-backup narrow model (§5.2.6).
+LATENCY = dict(dataset="synthpets", arch="microresnet", epochs=8, p_epochs=18,
+               ks=(2, 3, 4), out_dim=1000, batches=(1, 2, 4))
+
+if FAST:
+    for row in ACCURACY_MATRIX:
+        row["epochs"] = min(row["epochs"], 2)
+        row["p_epochs"] = min(row["p_epochs"], 2)
+    LATENCY.update(epochs=2, p_epochs=2)
+
+
+# ----------------------------------------------------------- param cache ----
+def _params_dir(out_dir):
+    d = os.path.join(out_dir, "params")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def cached_train(out_dir, name, train_fn, log=print):
+    """Training is the expensive step (~minutes per model); exporting is
+    seconds. Cache trained parameters under artifacts/params/<name>.npz so
+    export-path changes (e.g. HLO printer options) never force retraining.
+    `make clean-artifacts` wipes the cache."""
+    path = os.path.join(_params_dir(out_dir), f"{name}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        params = {k: z[k] for k in z.files if k != "__metric__"}
+        metric = float(z["__metric__"]) if "__metric__" in z.files else float("nan")
+        log(f"[cache] loaded params for {name} (metric={metric:.3f})")
+        return params, metric
+    result = train_fn()
+    params = {k: np.asarray(v) for k, v in result.params.items()}
+    np.savez(path, __metric__=np.float64(result.eval_metric), **params)
+    return params, result.eval_metric
+
+
+# ----------------------------------------------------------------- export ----
+def to_hlo_text(lowered):
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False,
+        return_tuple=True)
+    # CRITICAL: print_large_constants. The default HLO printer elides big
+    # constants as `constant({...})`, which the XLA text *parser* silently
+    # accepts as zeros — the exported model would run but with all weights
+    # zeroed. (Found the hard way; pinned by test_aot_roundtrip.py.)
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def export_model(out_dir, name, apply_fn, params, input_shape, batches):
+    """Lower apply(params, .) at each batch size; return manifest entries."""
+    files = {}
+    for b in batches:
+        spec = jax.ShapeDtypeStruct((b,) + tuple(input_shape), jnp.float32)
+        fn = functools.partial(_apply_closed, apply_fn, params)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[str(b)] = fname
+    return files
+
+
+def _apply_closed(apply_fn, params, x):
+    return (apply_fn(params, x, use_pallas=True),)
+
+
+def _train_parity_with_ad(ds, arch, dep_params, k, enc_kind, epochs):
+    """Train a parity model and stamp its degraded accuracy as the metric."""
+    par = train.train_parity(ds, arch, dep_params, k, encoder=enc_kind,
+                             epochs=epochs, log=lambda s: None)
+    ad = train.degraded_accuracy(ds, arch, dep_params, par.params, k,
+                                 encoder=enc_kind)
+    par.eval_metric = ad
+    return par
+
+
+def pad_output(apply_fn, out_dim, real_dim):
+    """Wrap apply() to emit `out_dim` floats (§5.1's 1000-float predictions)."""
+    if out_dim == real_dim:
+        return apply_fn
+
+    def wrapped(params, x, use_pallas=False):
+        y = apply_fn(params, x, use_pallas=use_pallas)
+        pad = out_dim - y.shape[-1]
+        return jnp.pad(y, ((0, 0), (0, pad)))
+
+    return wrapped
+
+
+def save_dataset(out_dir, ds, max_test=None):
+    """Dump the test split as raw little-endian binaries for the Rust side."""
+    tx, ty = ds.test_x, ds.test_y
+    if max_test is not None:
+        tx, ty = tx[:max_test], ty[:max_test]
+    xf = f"{ds.name}.test_x.bin"
+    yf = f"{ds.name}.test_y.bin"
+    tx.astype("<f4").tofile(os.path.join(out_dir, xf))
+    if ds.task == "classify":
+        ty.astype("<i4").tofile(os.path.join(out_dir, yf))
+    else:
+        ty.astype("<f4").tofile(os.path.join(out_dir, yf))
+    return dict(name=ds.name, task=ds.task, num_classes=ds.num_classes,
+                input_shape=list(ds.input_shape), n_test=len(tx),
+                test_x=xf, test_y=yf)
+
+
+# ------------------------------------------------------------------ build ----
+def build(out_dir, log=print):
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+    manifest = {"models": [], "datasets": [], "fast_mode": FAST,
+                "format": "hlo-text-v1"}
+    seen_datasets = {}
+
+    def ensure_dataset(name):
+        if name not in seen_datasets:
+            log(f"[data] generating {name}")
+            ds = datasets.load(name)
+            seen_datasets[name] = ds
+            manifest["datasets"].append(save_dataset(out_dir, ds))
+        return seen_datasets[name]
+
+    def add_model(name, role, ds, arch, apply_fn, params, input_shape,
+                  out_dim, batches, metric, *, k=0, r_index=0, encoder="",
+                  train_seconds=0.0):
+        files = export_model(out_dir, name, apply_fn, params, input_shape,
+                             batches)
+        manifest["models"].append(dict(
+            name=name, role=role, dataset=ds.name, arch=arch,
+            input_shape=list(input_shape), out_dim=out_dim,
+            batches=sorted(int(b) for b in files), files=files,
+            k=k, r_index=r_index, encoder=encoder,
+            train_metric=metric, train_seconds=round(train_seconds, 1)))
+        log(f"[aot ] exported {name} (batches {sorted(files)})")
+
+    # ---- accuracy matrix ----
+    for row in ACCURACY_MATRIX:
+        ds = ensure_dataset(row["dataset"])
+        arch = row["arch"]
+        _, apply_fn = models.get(arch)
+        out_dim = ds.num_classes if ds.task == "classify" else 4
+        tag = f"{ds.name}.{arch}"
+
+        log(f"[train] deployed {tag} ({row['epochs']} epochs)")
+        dep_params, dep_metric = cached_train(
+            out_dir, f"{tag}.deployed",
+            lambda: train.train_deployed(ds, arch, epochs=row["epochs"],
+                                         log=lambda s: None), log)
+        log(f"[train] deployed {tag}: metric={dep_metric:.3f}")
+        add_model(f"{tag}.deployed", "deployed", ds, arch, apply_fn,
+                  dep_params, ds.input_shape, out_dim, (1, 50), dep_metric)
+
+        for enc_kind, k_list in (("sum", row.get("ks", ())),
+                                 ("concat", row.get("concat_ks", ()))):
+            for k in k_list:
+                name = f"{tag}.parity.k{k}.{enc_kind}"
+                par_params, ad = cached_train(
+                    out_dir, name,
+                    lambda: _train_parity_with_ad(ds, arch, dep_params, k,
+                                                  enc_kind, row["p_epochs"]),
+                    log)
+                log(f"[train] parity {tag} k={k} {enc_kind}: A_d={ad:.3f}")
+                add_model(name, "parity", ds, arch, apply_fn, par_params,
+                          ds.input_shape, out_dim, (1, 50), ad,
+                          k=k, encoder=enc_kind)
+
+        if row.get("r2"):
+            # §3.5: second parity model with weights [1, 2, ...]; with the
+            # k=2 sum parity above this forms a (k=2, r=2) code.
+            k = 2
+            wts = encoders.parity_weights(k, 1)
+            name = f"{tag}.parity.k{k}.sum.r1"
+            par_params, _ = cached_train(
+                out_dir, name,
+                lambda: train.train_parity(ds, arch, dep_params, k,
+                                           encoder="sum", weights=wts,
+                                           epochs=row["p_epochs"],
+                                           log=lambda s: None), log)
+            log(f"[train] parity {tag} k={k} r_index=1")
+            add_model(name, "parity", ds, arch, apply_fn, par_params,
+                      ds.input_shape, out_dim, (1, 50), float("nan"),
+                      k=k, r_index=1, encoder="sum")
+
+    # ---- latency workload ----
+    row = LATENCY
+    ds = ensure_dataset(row["dataset"])
+    arch = row["arch"]
+    _, apply_raw = models.get(arch)
+    apply_1000 = pad_output(apply_raw, row["out_dim"], ds.num_classes)
+    tag = f"{ds.name}.{arch}"
+
+    log(f"[train] deployed {tag} (latency workload)")
+    dep_params, dep_metric = cached_train(
+        out_dir, f"{tag}.deployed1000",
+        lambda: train.train_deployed(ds, arch, epochs=row["epochs"],
+                                     log=lambda s: None), log)
+    log(f"[train] deployed {tag}: acc={dep_metric:.3f}")
+    add_model(f"{tag}.deployed1000", "deployed", ds, arch, apply_1000,
+              dep_params, ds.input_shape, row["out_dim"], row["batches"],
+              dep_metric)
+
+    for k in row["ks"]:
+        name = f"{tag}.parity1000.k{k}.sum"
+        par_params, ad = cached_train(
+            out_dir, name,
+            lambda: _train_parity_with_ad(ds, arch, dep_params, k, "sum",
+                                          row["p_epochs"]), log)
+        log(f"[train] parity {tag} k={k}: A_d={ad:.3f}")
+        add_model(name, "parity", ds, arch,
+                  pad_output(apply_raw, row["out_dim"], ds.num_classes),
+                  par_params, ds.input_shape, row["out_dim"], row["batches"],
+                  ad, k=k, encoder="sum")
+
+    # Approximate backup (§5.2.6): same family, narrower — NOT k-times faster.
+    _, apply_narrow = models.get("microresnet_narrow")
+    nar_params, nar_metric = cached_train(
+        out_dir, f"{tag}.approx1000",
+        lambda: train.train_deployed(ds, "microresnet_narrow",
+                                     epochs=row["epochs"], log=lambda s: None),
+        log)
+    log(f"[train] approx backup: acc={nar_metric:.3f}")
+    add_model(f"{tag}.approx1000", "approx",
+              ds, "microresnet_narrow",
+              pad_output(apply_narrow, row["out_dim"], ds.num_classes),
+              nar_params, ds.input_shape, row["out_dim"], row["batches"],
+              nar_metric)
+
+    # ---- encoder-as-executable ablation (§3.2 design space) ----
+    # The sum encoder exported as its own Pallas-lowered XLA program, so
+    # the Rust side can compare "encoder on the frontend CPU (native)" vs
+    # "encoder as an accelerator program" (bench: ablation_encoder_exec).
+    from .kernels import encoder as kenc
+
+    for k in (2, 3, 4):
+        ishape = (64, 64, 3)  # latency-workload query shape
+
+        def enc_fn(xs, _k=k):
+            return (kenc.sum_encode(xs),)
+
+        spec = jax.ShapeDtypeStruct((k,) + ishape, jnp.float32)
+        lowered = jax.jit(enc_fn).lower(spec)
+        fname = f"encoder.sum.k{k}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["models"].append(dict(
+            name=f"encoder.sum.k{k}", role="encoder", dataset="synthpets",
+            arch="pallas-sum", input_shape=[k] + list(ishape),
+            out_dim=int(np.prod(ishape)), batches=[1],
+            files={"1": fname}, k=k, r_index=0, encoder="sum",
+            train_metric=float("nan"), train_seconds=0.0))
+        log(f"[aot ] exported {fname}")
+
+    manifest["build_seconds"] = round(time.time() - t_start, 1)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    log(f"[aot ] wrote manifest with {len(manifest['models'])} models, "
+        f"{len(manifest['datasets'])} datasets in "
+        f"{manifest['build_seconds']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build(os.path.abspath(args.out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Synthetic datasets standing in for the paper's benchmarks.
+
+No dataset downloads exist in this image, so each of the paper's tasks is
+replaced by a seeded synthetic generator with matched tensor shapes and
+class cardinalities (see DESIGN.md "Substitutions"). The generators create
+*learnable* tasks: every class has a smooth random prototype (low-frequency
+Gaussian field) and samples are affine-jittered, scaled prototypes plus
+noise. What the paper studies — whether a parity model can learn to act on
+*summed/concatenated* queries — depends on the mixing structure of the
+encoder, not on natural-image statistics, so the shape of the accuracy
+results carries over.
+
+Datasets:
+- synthvision10  : CIFAR-10 stand-in, 32x32x3, 10 classes
+- synthvision100 : CIFAR-100 stand-in, 32x32x3, 100 classes (top-5 metric)
+- synthfashion   : Fashion-MNIST stand-in, 28x28x1, 10 classes
+- synthdigits    : MNIST stand-in, 28x28x1, 10 classes (easier: less noise)
+- synthspeech    : Google Commands stand-in, 32x32x1 "spectrograms", 10 cls
+- synthpets      : Cat v. Dog stand-in, 64x64x3, 2 classes (latency workload)
+- synthloc       : CUB-200 localization stand-in, 32x32x3 -> (cx,cy,w,h)
+"""
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    train_x: np.ndarray  # (N, H, W, C) f32 in [0, 1]-ish
+    train_y: np.ndarray  # (N,) int labels, or (N, 4) f32 boxes for synthloc
+    test_x: np.ndarray
+    test_y: np.ndarray
+    num_classes: int  # 0 for regression
+    task: str  # "classify" | "localize"
+
+    @property
+    def input_shape(self):
+        return self.train_x.shape[1:]
+
+
+def _smooth_field(rng, h, w, c, cutoff=6):
+    """Low-frequency random field in [0,1]: a smooth 'prototype image'."""
+    spec = np.zeros((h, w, c), np.complex128)
+    kh, kw = min(cutoff, h), min(cutoff, w)
+    spec[:kh, :kw] = rng.normal(size=(kh, kw, c)) + 1j * rng.normal(size=(kh, kw, c))
+    img = np.real(np.fft.ifft2(spec, axes=(0, 1)))
+    img -= img.min()
+    rng_span = img.max() - img.min()
+    return (img / (rng_span + 1e-9)).astype(np.float32)
+
+
+def _jitter(rng, proto, max_shift):
+    """Random circular shift + brightness/contrast jitter of a prototype."""
+    dx, dy = rng.integers(-max_shift, max_shift + 1, size=2)
+    img = np.roll(np.roll(proto, dy, axis=0), dx, axis=1)
+    gain = 1.0 + 0.2 * rng.normal()
+    bias = 0.1 * rng.normal()
+    return gain * img + bias
+
+
+def _make_classify(name, rng, n_train, n_test, h, w, c, num_classes,
+                   noise=0.12, max_shift=3, cutoff=6):
+    protos = np.stack([_smooth_field(rng, h, w, c, cutoff) for _ in range(num_classes)])
+    def batch(n):
+        ys = rng.integers(0, num_classes, size=n)
+        xs = np.empty((n, h, w, c), np.float32)
+        for i, y in enumerate(ys):
+            xs[i] = _jitter(rng, protos[y], max_shift) + noise * rng.normal(size=(h, w, c))
+        return xs.astype(np.float32), ys.astype(np.int32)
+    tx, ty = batch(n_train)
+    vx, vy = batch(n_test)
+    return Dataset(name, tx, ty, vx, vy, num_classes, "classify")
+
+
+def _make_localize(name, rng, n_train, n_test, h, w):
+    """Bright smooth blob on textured background; label = (cx, cy, bw, bh)/dim."""
+    def batch(n):
+        xs = np.empty((n, h, w, 3), np.float32)
+        ys = np.empty((n, 4), np.float32)
+        for i in range(n):
+            bg = 0.25 * _smooth_field(rng, h, w, 3, cutoff=4)
+            bw = rng.integers(h // 4, h // 2)
+            bh = rng.integers(h // 4, h // 2)
+            x0 = rng.integers(0, w - bw)
+            y0 = rng.integers(0, h - bh)
+            obj = np.zeros((h, w, 1), np.float32)
+            yy, xx = np.mgrid[0:h, 0:w]
+            cx, cy = x0 + bw / 2, y0 + bh / 2
+            mask = (np.abs(xx - cx) < bw / 2) & (np.abs(yy - cy) < bh / 2)
+            obj[mask, 0] = 1.0
+            img = bg + obj * (0.6 + 0.2 * rng.normal())
+            img += 0.05 * rng.normal(size=(h, w, 3))
+            xs[i] = img
+            ys[i] = [cx / w, cy / h, bw / w, bh / h]
+        return xs.astype(np.float32), ys
+    tx, ty = batch(n_train)
+    vx, vy = batch(n_test)
+    return Dataset(name, tx, ty, vx, vy, 0, "localize")
+
+
+# Sizes kept CPU-trainable: `make artifacts` trains every deployed + parity
+# model in this file on a laptop-class CPU in minutes.
+_SPECS = {
+    "synthvision10": dict(h=32, w=32, c=3, num_classes=10, n_train=4000, n_test=600,
+                          noise=0.12, max_shift=3),
+    "synthvision100": dict(h=32, w=32, c=3, num_classes=100, n_train=8000, n_test=600,
+                           noise=0.08, max_shift=2),
+    "synthfashion": dict(h=28, w=28, c=1, num_classes=10, n_train=4000, n_test=600,
+                         noise=0.15, max_shift=3),
+    "synthdigits": dict(h=28, w=28, c=1, num_classes=10, n_train=3000, n_test=600,
+                        noise=0.08, max_shift=2),
+    "synthspeech": dict(h=32, w=32, c=1, num_classes=10, n_train=4000, n_test=600,
+                        noise=0.15, max_shift=4, cutoff=8),
+    "synthpets": dict(h=64, w=64, c=3, num_classes=2, n_train=2400, n_test=400,
+                      noise=0.15, max_shift=4),
+}
+
+
+def load(name, seed=None):
+    """Build a dataset by name. Deterministic per (name, seed)."""
+    if seed is None:
+        seed = abs(hash(name)) % (2**31)
+        # hash() is salted per-process; derive a stable seed instead.
+        seed = int.from_bytes(name.encode(), "little") % (2**31)
+    rng = np.random.default_rng(seed)
+    if name == "synthloc":
+        return _make_localize(name, rng, n_train=3000, n_test=500, h=32, w=32)
+    if name not in _SPECS:
+        raise KeyError(f"unknown dataset {name!r}; have {sorted(_SPECS)} + ['synthloc']")
+    s = dict(_SPECS[name])
+    return _make_classify(name, rng,
+                          n_train=s.pop("n_train"), n_test=s.pop("n_test"),
+                          h=s.pop("h"), w=s.pop("w"), c=s.pop("c"),
+                          num_classes=s.pop("num_classes"), **s)
+
+
+ALL_NAMES = sorted(_SPECS) + ["synthloc"]

@@ -1,0 +1,90 @@
+"""Build-time encoders/decoders used to construct parity-model training data.
+
+The runtime (Rust, `rust/src/coordinator/{encoder,decoder}.rs`) implements
+the same math on the request path; `python/tests/test_encoders.py` and the
+Rust unit tests pin both sides to these semantics.
+
+- ``sum``    : the paper's generic addition encoder (§3.2), P = sum X_i.
+- ``concat`` : the image-classification-specific encoder (§4.2.3): each of
+  the k queries is downsampled and placed in a grid cell, so the parity
+  query keeps the feature count of a single query.
+
+Decoder is always subtraction (§3.2): Fhat(X_j) = F_P(P) - sum_{i!=j} F(X_i).
+"""
+
+import math
+
+import numpy as np
+
+
+def sum_encode_np(xs, weights=None):
+    """xs: (k, ...) -> (...). Optional per-query weights (r > 1, §3.5)."""
+    if weights is None:
+        return xs.sum(axis=0, dtype=np.float32)
+    w = np.asarray(weights, np.float32).reshape((-1,) + (1,) * (xs.ndim - 1))
+    return (xs * w).sum(axis=0, dtype=np.float32)
+
+
+def downsample_np(x, out_h, out_w):
+    """Area-average downsample of (H, W, C) to (out_h, out_w, C).
+
+    Matches the Rust `tensor::resize_area` implementation bit-for-bit for
+    integer scale factors (the only ones the concat encoder uses).
+    """
+    h, w, c = x.shape
+    assert h % out_h == 0 and w % out_w == 0, (x.shape, out_h, out_w)
+    fh, fw = h // out_h, w // out_w
+    return x.reshape(out_h, fh, out_w, fw, c).mean(axis=(1, 3), dtype=np.float32)
+
+
+def concat_encode_np(xs):
+    """Downsample-and-tile k queries into one same-sized parity query.
+
+    xs: (k, H, W, C). k must be a perfect square (paper uses k=4 -> 2x2
+    grid) or 2 (side-by-side halves, downsampled in H only).
+    """
+    k, h, w, c = xs.shape
+    if k == 2:
+        halves = [downsample_np(x, h // 2, w) for x in xs]
+        return np.concatenate(halves, axis=0).astype(np.float32)
+    g = int(math.isqrt(k))
+    assert g * g == k, f"concat encoder needs square k or k=2, got {k}"
+    cells = [downsample_np(x, h // g, w // g) for x in xs]
+    rows = [np.concatenate(cells[r * g:(r + 1) * g], axis=1) for r in range(g)]
+    return np.concatenate(rows, axis=0).astype(np.float32)
+
+
+def encode_np(xs, kind, weights=None):
+    if kind == "sum":
+        return sum_encode_np(xs, weights)
+    if kind == "concat":
+        assert weights is None, "concat encoder does not support r>1 weights"
+        return concat_encode_np(xs)
+    raise ValueError(f"unknown encoder {kind!r}")
+
+
+def encode_batch_np(xs, kind, weights=None):
+    """xs: (k, B, ...) -> (B, ...): encode across the stripe per sample."""
+    k, b = xs.shape[:2]
+    out = np.stack([encode_np(xs[:, i], kind, weights) for i in range(b)])
+    return out.astype(np.float32)
+
+
+def sub_decode_np(parity_out, available_outs):
+    """parity_out: (n,), available_outs: (k-1, n) -> reconstruction (n,)."""
+    return (parity_out - available_outs.sum(axis=0)).astype(np.float32)
+
+
+def r1_weights(k):
+    """Generic r=1 addition-code weights."""
+    return np.ones((k,), np.float32)
+
+
+def parity_weights(k, r_index):
+    """Weights for the ``r_index``-th parity model in an r > 1 code (§3.5).
+
+    Row j of a k x r Vandermonde-style matrix: w_i = (i+1)^r_index, so
+    r_index=0 is the plain sum and successive parities are independent —
+    any k of the (k+r) outputs determine the k originals.
+    """
+    return np.array([(i + 1) ** r_index for i in range(k)], np.float32)

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for ParM: the inference hot-spot (fused linear /
+conv-as-matmul) and the parity encoder. Each kernel has a pure-jnp oracle
+in :mod:`ref`; pytest asserts agreement (see python/tests/test_kernels.py).
+"""
+
+from . import conv, encoder, linear, ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""L1 conv block: convolution lowered to the Pallas matmul hot-spot.
+
+The paper's deployed models are CNNs; on TPU the standard high-performance
+mapping of a conv is im2col followed by an MXU matmul (this is also what
+XLA's own conv emitters do for small spatial dims). We express exactly
+that: patch extraction is cheap data movement done with jax gathers (L2),
+and the FLOPs all land in the fused Pallas matmul kernel (L1), so the conv
+inherits the kernel's VMEM tiling and fused epilogue.
+
+``conv2d(..., use_pallas=False)`` routes to the pure-jnp/lax reference —
+the path used during training (interpret-mode Pallas has no reverse-mode
+autodiff rule) and by the pytest oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import linear, ref
+
+
+def _im2col(x, kh, kw, stride, padding):
+    """x: (B, H, W, C) -> patches (B, OH, OW, KH*KW*C)."""
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        oh = -(-h // stride)
+        ow = -(-w // stride)
+        pad_h = max((oh - 1) * stride + kh - h, 0)
+        pad_w = max((ow - 1) * stride + kw - w, 0)
+        x = jnp.pad(
+            x,
+            (
+                (0, 0),
+                (pad_h // 2, pad_h - pad_h // 2),
+                (pad_w // 2, pad_w - pad_w // 2),
+                (0, 0),
+            ),
+        )
+    elif padding == "VALID":
+        oh = (h - kh) // stride + 1
+        ow = (w - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+
+    # Gather kh*kw shifted slices; unrolled python loop is fine at these
+    # kernel sizes (3x3, 5x5) and keeps the HLO free of dynamic slicing.
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = x[:, i : i + (oh - 1) * stride + 1 : stride,
+                      j : j + (ow - 1) * stride + 1 : stride, :]
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1)  # (B, OH, OW, KH*KW*C)
+    return patches, oh, ow
+
+
+def conv2d(x, w, b, stride=1, padding="SAME", activation="linear",
+           use_pallas=True, interpret=True):
+    """NHWC conv + bias + activation via im2col + Pallas matmul.
+
+    x: (B, H, W, Cin), w: (KH, KW, Cin, Cout), b: (Cout,).
+    """
+    if not use_pallas:
+        return ref.conv2d(x, w, b, stride=stride, padding=padding,
+                          activation=activation)
+
+    kh, kw, cin, cout = w.shape
+    patches, oh, ow = _im2col(x, kh, kw, stride, padding)
+    bsz = x.shape[0]
+    # Rearrange patch channels to match HWIO weight flattening order:
+    # _im2col emits [(i,j) major, C minor] which is exactly w.reshape(-1, O).
+    mat = patches.reshape(bsz * oh * ow, kh * kw * cin)
+    wmat = w.reshape(kh * kw * cin, cout)
+    y = linear.fused_linear(mat, wmat, b, activation=activation,
+                            interpret=interpret)
+    return y.reshape(bsz, oh, ow, cout)

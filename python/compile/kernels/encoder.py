@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: the ParM parity encoder, P_j = sum_i w_ji * X_i.
+
+The paper's generic encoder (§3.2) is a plain feature-wise sum over the k
+queries of a coding group; the r > 1 extension (§3.5) uses per-parity
+weights (e.g. [1, 1] and [1, 2] for k = 2, r = 2). Both are served by this
+one kernel.
+
+TPU mapping: queries are flattened to (k, F) and the grid walks F in
+lane-aligned tiles; each grid step streams the k rows of one feature tile
+through VMEM and reduces them with the weight vector. On this image it runs
+under ``interpret=True``; the identical math lives in ``ref.py`` for the
+training path and the pytest oracle.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature-tile width: 8 sublanes x 128 lanes of f32.
+BF = 1024
+
+
+def _encode_kernel(x_ref, w_ref, o_ref):
+    # x_ref: (k, BF) tile, w_ref: (k, 1), o_ref: (1, BF).
+    o_ref[...] = jnp.sum(x_ref[...] * w_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def weighted_sum_encode(xs, weights, bf=BF, interpret=True):
+    """Encode k stacked queries into one parity query.
+
+    xs: (k, B, ...) f32 stacked queries; weights: (k,) f32.
+    Returns (B, ...) parity query. ``weights = ones(k)`` is the paper's
+    generic addition encoder.
+    """
+    k = xs.shape[0]
+    batch_shape = xs.shape[1:]
+    flat = xs.reshape(k, -1)
+    f = flat.shape[1]
+
+    rem = (-f) % bf
+    if rem:
+        flat = jnp.pad(flat, ((0, 0), (0, rem)))
+    fp = flat.shape[1]
+
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=(fp // bf,),
+        in_specs=[
+            pl.BlockSpec((k, bf), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, fp), jnp.float32),
+        interpret=interpret,
+    )(flat, weights.reshape(k, 1))
+    return out[0, :f].reshape(batch_shape)
+
+
+def sum_encode(xs, interpret=True):
+    """The paper's generic addition encoder: P = sum_i X_i."""
+    k = xs.shape[0]
+    return weighted_sum_encode(xs, jnp.ones((k,), jnp.float32), interpret=interpret)

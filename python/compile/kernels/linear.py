@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + activation.
+
+This is the compute hot-spot of every model in the zoo (dense layers, and —
+via im2col — convolutions). The kernel is written for the TPU mental model:
+
+- the grid walks (M-tiles, N-tiles, K-tiles); each step holds one
+  (bm, bk) x (bk, bn) product in VMEM and accumulates into the revisited
+  (bm, bn) output tile, i.e. the HBM->VMEM schedule a GPU kernel would
+  express with threadblocks is expressed here with BlockSpec index maps;
+- tile shapes default to multiples of the MXU-native 128 lanes;
+- the epilogue (bias add + activation) is fused into the final K step, so
+  the pre-activation never round-trips to HBM.
+
+Run under ``interpret=True`` (the only mode the CPU PJRT client can
+execute); on a real TPU the same kernel lowers to a Mosaic custom-call.
+VMEM footprint at defaults: (128*128 + 128*128 + 128*128) * 4B = 192 KiB,
+comfortably under the ~16 MiB/core budget; see DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default tile sizes. 128 matches the MXU systolic-array lane width; the
+# K tile is kept equal so a single grid step is one MXU-shaped block.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, activation, nsteps_k):
+    """One grid step: o += x_tile @ w_tile; fused epilogue on the last step.
+
+    The output tile is revisited across the K axis of the grid (its index
+    map ignores ``k``), so it doubles as the accumulator and stays resident
+    in VMEM for the whole K loop.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == nsteps_k - 1)
+    def _epilogue():
+        o_ref[...] = ref.apply_activation(o_ref[...] + b_ref[...], activation)
+
+
+def _pad_to(x, axis, multiple):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _fit_tile(tile, dim):
+    """Shrink a tile to the smallest power-of-two >= dim (min 8)."""
+    p = 8
+    while p < dim:
+        p *= 2
+    return min(tile, p)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "bm", "bn", "bk", "interpret")
+)
+def fused_linear(x, w, b, activation="relu", bm=BM, bn=BN, bk=BK, interpret=True):
+    """act(x @ w + b) as a tiled Pallas kernel.
+
+    x: (B, I) f32, w: (I, O) f32, b: (O,) f32 -> (B, O) f32.
+    Shapes are padded up to tile multiples and the result sliced back, so
+    arbitrary shapes are supported with deterministic semantics (padding is
+    zeros, which contribute nothing to the accumulation).
+    """
+    m, kdim = x.shape
+    kdim2, n = w.shape
+    assert kdim == kdim2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+
+    # Shrink tiles for small problems so padding stays bounded.
+    bm = _fit_tile(bm, m)
+    bn = _fit_tile(bn, n)
+    bk = _fit_tile(bk, kdim)
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b.reshape(1, n), 1, bn)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, bp)
+    return out[:m, :n]

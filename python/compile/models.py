@@ -1,0 +1,173 @@
+"""L2 model zoo: MLP, LeNet-style CNN, MicroResNet — pure-functional JAX.
+
+Scaled-to-CPU stand-ins for the paper's architectures (MLP, LeNet-5,
+VGG-11, ResNet-18/152). Each model is a pair (init, apply):
+
+- ``init(rng, input_shape, out_dim)`` -> params pytree (dict of np arrays)
+- ``apply(params, x, use_pallas)``    -> (B, out_dim) logits / regression
+
+``use_pallas=True`` routes every dense/conv through the L1 Pallas kernels
+(the AOT export path); ``use_pallas=False`` routes through the jnp
+references (the training path — interpret-mode Pallas has no reverse-mode
+autodiff). pytest asserts both paths agree on every architecture.
+
+Initialization follows the paper (§4.1): uniform Xavier for conv weights,
+zero biases, N(0, 0.01) for other weights.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as kconv
+from .kernels import linear as klinear
+from .kernels import ref
+
+
+def _xavier_uniform(rng, shape, fan_in, fan_out):
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-limit, limit, size=shape).astype(np.float32)
+
+
+def _normal(rng, shape, std=0.01):
+    return (std * rng.normal(size=shape)).astype(np.float32)
+
+
+def _dense(params, name, x, activation, use_pallas):
+    w, b = params[f"{name}_w"], params[f"{name}_b"]
+    if use_pallas:
+        return klinear.fused_linear(x, w, b, activation=activation)
+    return ref.fused_linear(x, w, b, activation=activation)
+
+
+def _conv(params, name, x, stride, activation, use_pallas, padding="SAME"):
+    w, b = params[f"{name}_w"], params[f"{name}_b"]
+    return kconv.conv2d(x, w, b, stride=stride, padding=padding,
+                        activation=activation, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------- MLP ----
+def mlp_init(rng, input_shape, out_dim):
+    """The paper's MLP: two hidden layers of 200 and 100 units, ReLU."""
+    d = int(np.prod(input_shape))
+    return {
+        "fc1_w": _normal(rng, (d, 200)),
+        "fc1_b": np.zeros((200,), np.float32),
+        "fc2_w": _normal(rng, (200, 100)),
+        "fc2_b": np.zeros((100,), np.float32),
+        "out_w": _normal(rng, (100, out_dim)),
+        "out_b": np.zeros((out_dim,), np.float32),
+    }
+
+
+def mlp_apply(params, x, use_pallas=False):
+    b = x.shape[0]
+    h = x.reshape(b, -1)
+    h = _dense(params, "fc1", h, "relu", use_pallas)
+    h = _dense(params, "fc2", h, "relu", use_pallas)
+    return _dense(params, "out", h, "linear", use_pallas)
+
+
+# -------------------------------------------------------------- LeNet ----
+def lenet_init(rng, input_shape, out_dim):
+    """LeNet-5-style: two 5x5 conv + avgpool stages, then 120-84-out FCs."""
+    h, w, c = input_shape
+    p = {
+        "c1_w": _xavier_uniform(rng, (5, 5, c, 6), 25 * c, 25 * 6),
+        "c1_b": np.zeros((6,), np.float32),
+        "c2_w": _xavier_uniform(rng, (5, 5, 6, 16), 25 * 6, 25 * 16),
+        "c2_b": np.zeros((16,), np.float32),
+    }
+    fh, fw = h // 4, w // 4  # two 2x2 pools
+    d = fh * fw * 16
+    p.update({
+        "fc1_w": _normal(rng, (d, 120)),
+        "fc1_b": np.zeros((120,), np.float32),
+        "fc2_w": _normal(rng, (120, 84)),
+        "fc2_b": np.zeros((84,), np.float32),
+        "out_w": _normal(rng, (84, out_dim)),
+        "out_b": np.zeros((out_dim,), np.float32),
+    })
+    return p
+
+
+def lenet_apply(params, x, use_pallas=False):
+    b = x.shape[0]
+    h = _conv(params, "c1", x, 1, "relu", use_pallas)
+    h = ref.avg_pool(h, 2)
+    h = _conv(params, "c2", h, 1, "relu", use_pallas)
+    h = ref.avg_pool(h, 2)
+    h = h.reshape(b, -1)
+    h = _dense(params, "fc1", h, "relu", use_pallas)
+    h = _dense(params, "fc2", h, "relu", use_pallas)
+    return _dense(params, "out", h, "linear", use_pallas)
+
+
+# --------------------------------------------------------- MicroResNet ----
+def microresnet_init(rng, input_shape, out_dim, width=16):
+    """ResNet-18 stand-in: conv stem + 2 residual stages + GAP + FC.
+
+    ``width`` scales every channel count; width=16 is the deployed model,
+    width=12 is the "approximate backup" variant of §5.2.6 (cheaper but the
+    same family, ~1.15-1.4x faster — deliberately NOT k-times faster).
+    """
+    h, w, c = input_shape
+    w1, w2 = width, 2 * width
+
+    def cw(shape):
+        kh, kw, ci, co = shape
+        return _xavier_uniform(rng, shape, kh * kw * ci, kh * kw * co)
+
+    return {
+        "stem_w": cw((3, 3, c, w1)), "stem_b": np.zeros((w1,), np.float32),
+        # stage 1: identity residual block at width w1
+        "s1a_w": cw((3, 3, w1, w1)), "s1a_b": np.zeros((w1,), np.float32),
+        "s1b_w": cw((3, 3, w1, w1)), "s1b_b": np.zeros((w1,), np.float32),
+        # stage 2: downsampling residual block w1 -> w2, stride 2
+        "s2a_w": cw((3, 3, w1, w2)), "s2a_b": np.zeros((w2,), np.float32),
+        "s2b_w": cw((3, 3, w2, w2)), "s2b_b": np.zeros((w2,), np.float32),
+        "s2p_w": cw((1, 1, w1, w2)), "s2p_b": np.zeros((w2,), np.float32),
+        "out_w": _normal(rng, (w2, out_dim)),
+        "out_b": np.zeros((out_dim,), np.float32),
+    }
+
+
+def microresnet_apply(params, x, use_pallas=False):
+    # Stride-2 stem (as in full ResNets): downsampling early keeps the
+    # residual stages cheap without losing the architecture's shape.
+    h = _conv(params, "stem", x, 2, "relu", use_pallas)
+    # stage 1
+    r = _conv(params, "s1a", h, 1, "relu", use_pallas)
+    r = _conv(params, "s1b", r, 1, "linear", use_pallas)
+    h = jnp.maximum(h + r, 0.0)
+    # stage 2 (stride-2 downsample + 1x1 projection shortcut)
+    r = _conv(params, "s2a", h, 2, "relu", use_pallas)
+    r = _conv(params, "s2b", r, 1, "linear", use_pallas)
+    p = _conv(params, "s2p", h, 2, "linear", use_pallas)
+    h = jnp.maximum(p + r, 0.0)
+    h = ref.global_avg_pool(h)
+    return _dense(params, "out", h, "linear", use_pallas)
+
+
+# ------------------------------------------------------------- registry ----
+_ZOO = {
+    "mlp": (mlp_init, mlp_apply),
+    "lenet": (lenet_init, lenet_apply),
+    "microresnet": (microresnet_init, microresnet_apply),
+    "microresnet_narrow": (
+        lambda rng, ishape, od: microresnet_init(rng, ishape, od, width=12),
+        microresnet_apply,
+    ),
+}
+
+
+def get(arch):
+    """Return (init, apply) for an architecture name."""
+    if arch not in _ZOO:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(_ZOO)}")
+    return _ZOO[arch]
+
+
+ALL_ARCHS = sorted(_ZOO)

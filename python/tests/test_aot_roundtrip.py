@@ -1,0 +1,102 @@
+"""AOT export invariants (regression tests for the artifact pipeline).
+
+The nastiest failure mode in the compile path: XLA's HLO printer elides
+large constants by default (`constant({...})`) and the HLO *parser*
+accepts the placeholder as zeros — the exported model runs but with all
+weights zeroed (A_d collapses to chance). These tests pin the export
+options that prevent it, plus the manifest/file layout contract the Rust
+loader depends on.
+"""
+
+import functools
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, models
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    rng = np.random.default_rng(5)
+    init, apply = models.get("mlp")
+    params = jax.tree_util.tree_map(jnp.asarray, init(rng, (8, 8, 1), 4))
+    return apply, params
+
+
+def test_hlo_text_contains_full_constants(tiny_model):
+    apply, params = tiny_model
+    spec = jax.ShapeDtypeStruct((2, 8, 8, 1), jnp.float32)
+    lowered = jax.jit(
+        functools.partial(aot._apply_closed, apply, params)
+    ).lower(spec)
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text, "HLO printer elided constants"
+    # The fc1 weight is 64x200 floats; its literal must appear inline.
+    assert "f32[64,200]" in text
+    assert len(text) > 100_000, f"suspiciously small HLO ({len(text)} chars)"
+
+
+def test_hlo_entry_signature_single_arg_tuple_out(tiny_model):
+    apply, params = tiny_model
+    spec = jax.ShapeDtypeStruct((3, 8, 8, 1), jnp.float32)
+    text = aot.to_hlo_text(
+        jax.jit(functools.partial(aot._apply_closed, apply, params)).lower(spec)
+    )
+    # The Rust runtime contract: one input parameter, 1-tuple output.
+    head = text.splitlines()[0]
+    assert "(f32[3,8,8,1]" in head and "->(f32[3,4]" in head, head
+
+
+def test_export_model_writes_per_batch_files(tiny_model, tmp_path):
+    apply, params = tiny_model
+    files = aot.export_model(str(tmp_path), "tiny", apply, params, (8, 8, 1), (1, 2))
+    assert sorted(files) == ["1", "2"]
+    for b, fname in files.items():
+        path = tmp_path / fname
+        assert path.exists()
+        text = path.read_text()
+        assert "{...}" not in text
+        assert f"f32[{b},8,8,1]" in text.splitlines()[0]
+
+
+def test_pad_output_pads_to_1000(tiny_model):
+    apply, params = tiny_model
+    wrapped = aot.pad_output(apply, 1000, 4)
+    x = jnp.zeros((2, 8, 8, 1), jnp.float32)
+    out = wrapped(params, x)
+    assert out.shape == (2, 1000)
+    base = apply(params, x)
+    np.testing.assert_allclose(out[:, :4], base)
+    assert np.all(np.asarray(out[:, 4:]) == 0.0)
+
+
+def test_save_dataset_binary_layout(tmp_path):
+    from compile import datasets
+
+    ds = datasets.load("synthdigits")
+    ds.test_x, ds.test_y = ds.test_x[:10], ds.test_y[:10]
+    entry = aot.save_dataset(str(tmp_path), ds)
+    x = np.fromfile(tmp_path / entry["test_x"], dtype="<f4")
+    y = np.fromfile(tmp_path / entry["test_y"], dtype="<i4")
+    assert x.shape[0] == 10 * 28 * 28 * 1
+    np.testing.assert_array_equal(y, ds.test_y)
+    np.testing.assert_allclose(
+        x.reshape(ds.test_x.shape), ds.test_x, rtol=0, atol=0
+    )
+
+
+def test_manifest_is_valid_json_when_present():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    assert man["format"] == "hlo-text-v1"
+    for m in man["models"]:
+        for f in m["files"].values():
+            assert os.path.exists(os.path.join(os.path.dirname(path), f)), f

@@ -1,0 +1,67 @@
+"""Synthetic dataset generators: shapes, determinism, learnability basics."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.mark.parametrize("name", datasets.ALL_NAMES)
+def test_shapes_and_ranges(name):
+    ds = datasets.load(name)
+    assert ds.train_x.dtype == np.float32
+    assert ds.train_x.ndim == 4
+    assert ds.test_x.shape[1:] == ds.train_x.shape[1:]
+    if ds.task == "classify":
+        assert ds.train_y.min() >= 0
+        assert ds.train_y.max() < ds.num_classes
+    else:
+        assert ds.train_y.shape[1] == 4
+        assert (ds.train_y >= 0).all() and (ds.train_y <= 1.0).all()
+
+
+def test_deterministic_per_name():
+    a = datasets.load("synthdigits")
+    b = datasets.load("synthdigits")
+    np.testing.assert_array_equal(a.train_x, b.train_x)
+    np.testing.assert_array_equal(a.test_y, b.test_y)
+
+
+def test_different_names_differ():
+    a = datasets.load("synthdigits")
+    b = datasets.load("synthfashion")
+    assert a.train_x.shape[1:] == b.train_x.shape[1:]
+    assert not np.allclose(a.train_x[:8], b.train_x[:8])
+
+
+def test_classes_are_separable_by_nearest_prototype():
+    """Sanity: class structure must be strong enough to learn from."""
+    ds = datasets.load("synthdigits")
+    protos = np.stack([
+        ds.train_x[ds.train_y == c].mean(axis=0) for c in range(ds.num_classes)
+    ])
+    correct = 0
+    n = 300
+    for i in range(n):
+        d = ((protos - ds.test_x[i]) ** 2).sum(axis=(1, 2, 3))
+        correct += int(d.argmin() == ds.test_y[i])
+    assert correct / n > 0.6, f"nearest-prototype accuracy {correct / n}"
+
+
+def test_localization_boxes_match_bright_region():
+    ds = datasets.load("synthloc")
+    # The object is the brightest region: the labeled box center should be
+    # brighter than the image average for most samples.
+    hits = 0
+    n = 100
+    h, w = ds.test_x.shape[1:3]
+    for i in range(n):
+        cx, cy = ds.test_y[i, 0] * w, ds.test_y[i, 1] * h
+        px = ds.test_x[i, int(np.clip(cy, 0, h - 1)), int(np.clip(cx, 0, w - 1))].mean()
+        hits += int(px > ds.test_x[i].mean())
+    assert hits / n > 0.9
+
+
+def test_unknown_name_raises():
+    with pytest.raises(KeyError):
+        datasets.load("cifar10")

@@ -1,0 +1,80 @@
+"""Build-time encoder/decoder semantics (must match the Rust runtime
+implementations in rust/src/coordinator/{encoder,decoder}.rs and
+rust/src/tensor/ops.rs — the Rust unit tests mirror these cases)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import encoders
+
+
+def rnd(*shape, seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+def test_sum_encode_is_sum():
+    xs = rnd(3, 4, 4, 1)
+    np.testing.assert_allclose(encoders.sum_encode_np(xs), xs.sum(axis=0), rtol=1e-6)
+
+
+def test_weighted_sum_r2():
+    xs = rnd(2, 5)
+    got = encoders.sum_encode_np(xs, weights=[1.0, 2.0])
+    np.testing.assert_allclose(got, xs[0] + 2 * xs[1], rtol=1e-6)
+
+
+def test_parity_weights_vandermonde():
+    np.testing.assert_array_equal(encoders.parity_weights(3, 0), [1, 1, 1])
+    np.testing.assert_array_equal(encoders.parity_weights(3, 1), [1, 2, 3])
+    np.testing.assert_array_equal(encoders.parity_weights(2, 2), [1, 4])
+
+
+def test_downsample_area_average():
+    x = np.arange(16, dtype=np.float32).reshape(4, 4, 1)
+    y = encoders.downsample_np(x, 2, 2)
+    # top-left quadrant: mean(0,1,4,5) = 2.5
+    assert y[0, 0, 0] == 2.5
+    assert y.shape == (2, 2, 1)
+
+
+def test_downsample_rejects_non_divisible():
+    with pytest.raises(AssertionError):
+        encoders.downsample_np(rnd(5, 4, 1), 2, 2)
+
+
+def test_concat_k4_grid_layout():
+    xs = np.stack([np.full((8, 8, 3), i, np.float32) for i in range(4)])
+    p = encoders.concat_encode_np(xs)
+    assert p.shape == (8, 8, 3)
+    assert p[0, 0, 0] == 0 and p[0, 7, 0] == 1
+    assert p[7, 0, 0] == 2 and p[7, 7, 0] == 3
+
+
+def test_concat_k2_stacks_downsampled_halves():
+    xs = np.stack([np.full((4, 4, 1), 1, np.float32), np.full((4, 4, 1), 2, np.float32)])
+    p = encoders.concat_encode_np(xs)
+    assert p.shape == (4, 4, 1)
+    assert np.all(p[:2] == 1) and np.all(p[2:] == 2)
+
+
+def test_concat_k3_rejected():
+    with pytest.raises(AssertionError):
+        encoders.concat_encode_np(rnd(3, 8, 8, 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 5), n=st.integers(1, 50))
+def test_sub_decode_inverts_sum(k, n):
+    outs = rnd(k, n, seed=k * 100 + n)
+    parity_out = outs.sum(axis=0)
+    for j in range(k):
+        avail = np.delete(outs, j, axis=0)
+        rec = encoders.sub_decode_np(parity_out, avail)
+        np.testing.assert_allclose(rec, outs[j], rtol=1e-4, atol=1e-5)
+
+
+def test_encode_batch_stripes_across_batch():
+    xs = rnd(2, 3, 4)  # k=2, batch of 3, feature 4
+    got = encoders.encode_batch_np(xs, "sum")
+    np.testing.assert_allclose(got, xs[0] + xs[1], rtol=1e-6)

@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the core correctness signal for the compile path: the AOT export
+runs through the Pallas kernels while training ran through the references,
+so their equivalence is what makes the shipped artifacts match the trained
+parameters. Hypothesis sweeps shapes; fixed cases pin the edge geometries
+(non-tile-multiple shapes, tiny dims, every activation).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv, encoder, linear, ref
+
+RNG = np.random.default_rng(0xA0)
+
+
+def arr(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------- linear ----
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 90),
+    n=st.integers(1, 40),
+    act=st.sampled_from(["relu", "linear", "tanh"]),
+)
+def test_fused_linear_matches_ref(m, k, n, act):
+    x, w, b = arr(m, k), arr(k, n), arr(n)
+    got = linear.fused_linear(x, w, b, activation=act)
+    want = ref.fused_linear(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (128, 128, 128), (129, 257, 65), (8, 1024, 8)])
+def test_fused_linear_tile_boundaries(m, k, n):
+    x, w, b = arr(m, k), arr(k, n), arr(n)
+    np.testing.assert_allclose(
+        linear.fused_linear(x, w, b, "relu"),
+        ref.fused_linear(x, w, b, "relu"),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_fused_linear_relu_clamps():
+    x = jnp.asarray([[-100.0, 100.0]], dtype=jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    out = np.asarray(linear.fused_linear(x, w, b, "relu"))
+    assert out[0, 0] == 0.0 and out[0, 1] == 100.0
+
+
+def test_fused_linear_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        linear.fused_linear(arr(4, 5), arr(6, 3), arr(3))
+
+
+# ----------------------------------------------------------------- conv ----
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.integers(6, 20),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 6),
+    ksz=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+)
+def test_conv2d_matches_ref(b, hw, cin, cout, ksz, stride, padding):
+    x = arr(b, hw, hw, cin)
+    w = arr(ksz, ksz, cin, cout)
+    bias = arr(cout)
+    got = conv.conv2d(x, w, bias, stride=stride, padding=padding, activation="relu")
+    want = ref.conv2d(x, w, bias, stride=stride, padding=padding, activation="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_identity_kernel():
+    # 1x1 identity conv must reproduce the input exactly.
+    x = arr(2, 8, 8, 3)
+    w = jnp.eye(3, dtype=jnp.float32).reshape(1, 1, 3, 3)
+    b = jnp.zeros((3,), jnp.float32)
+    np.testing.assert_allclose(conv.conv2d(x, w, b), x, rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- encoder ----
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(2, 5),
+    feat=st.integers(1, 2000),
+)
+def test_sum_encode_matches_ref(k, feat):
+    xs = arr(k, feat)
+    np.testing.assert_allclose(
+        encoder.sum_encode(xs), ref.sum_encode(xs), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(2, 4))
+def test_weighted_encode_matches_ref(k):
+    xs = arr(k, 3, 10, 10, 3)
+    wts = jnp.asarray(np.arange(1, k + 1, dtype=np.float32))
+    np.testing.assert_allclose(
+        encoder.weighted_sum_encode(xs, wts),
+        ref.weighted_sum_encode(xs, wts),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_encoder_decoder_roundtrip_linear_world():
+    """For a linear F, sum-encode + sub-decode is exact (Table 1, row 1)."""
+    k, d = 3, 17
+    xs = arr(k, d)
+    m = arr(d, d)  # linear F(x) = x @ m
+    outs = jnp.stack([x @ m for x in xs])
+    parity_out = encoder.sum_encode(xs) @ m
+    for j in range(k):
+        avail = jnp.stack([outs[i] for i in range(k) if i != j])
+        rec = ref.sub_decode(parity_out, avail)
+        np.testing.assert_allclose(rec, outs[j], rtol=1e-3, atol=1e-3)

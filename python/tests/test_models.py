@@ -1,0 +1,71 @@
+"""L2 model zoo: shapes, pallas/ref path agreement, and initialization."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import models
+
+RNG = np.random.default_rng(7)
+
+CASES = [
+    ("mlp", (28, 28, 1), 10),
+    ("lenet", (28, 28, 1), 10),
+    ("lenet", (32, 32, 3), 10),
+    ("microresnet", (32, 32, 3), 10),
+    ("microresnet", (64, 64, 3), 2),
+    ("microresnet_narrow", (64, 64, 3), 2),
+]
+
+
+@pytest.mark.parametrize("arch,ishape,odim", CASES)
+def test_output_shape(arch, ishape, odim):
+    init, apply = models.get(arch)
+    params = init(RNG, ishape, odim)
+    x = jnp.asarray(RNG.normal(size=(3,) + ishape).astype(np.float32))
+    out = apply(params, x, use_pallas=False)
+    assert out.shape == (3, odim)
+
+
+@pytest.mark.parametrize("arch,ishape,odim", CASES)
+def test_pallas_path_matches_ref_path(arch, ishape, odim):
+    """The property the AOT export depends on: use_pallas=True computes the
+    same function as the training path."""
+    init, apply = models.get(arch)
+    params = init(RNG, ishape, odim)
+    x = jnp.asarray(RNG.normal(size=(2,) + ishape).astype(np.float32))
+    a = apply(params, x, use_pallas=False)
+    b = apply(params, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_narrow_variant_is_smaller():
+    i1, _ = models.get("microresnet")
+    i2, _ = models.get("microresnet_narrow")
+    p1 = i1(np.random.default_rng(0), (32, 32, 3), 10)
+    p2 = i2(np.random.default_rng(0), (32, 32, 3), 10)
+    n1 = sum(int(np.prod(v.shape)) for v in p1.values())
+    n2 = sum(int(np.prod(v.shape)) for v in p2.values())
+    assert n2 < n1, (n1, n2)
+
+
+def test_biases_zero_initialized():
+    init, _ = models.get("lenet")
+    params = init(np.random.default_rng(0), (28, 28, 1), 10)
+    for name, v in params.items():
+        if name.endswith("_b"):
+            assert np.all(v == 0.0), name
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        models.get("resnet152")
+
+
+def test_deterministic_init_given_rng_seed():
+    init, _ = models.get("mlp")
+    a = init(np.random.default_rng(11), (28, 28, 1), 10)
+    b = init(np.random.default_rng(11), (28, 28, 1), 10)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])

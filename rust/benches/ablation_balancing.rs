@@ -1,0 +1,58 @@
+//! Ablation (§5.1 "Load balancing"): single-queue vs round-robin
+//! dispatch. The paper notes single-queue is optimal for mean response
+//! time and that sub-optimal balancers make ParM look even better —
+//! round-robin keeps feeding slowed instances, so Equal-Resources' tail
+//! inflates further while ParM's reconstructions cap it.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::experiments::latency;
+use parm::runtime::pool::Balancing;
+use parm::workload::QuerySource;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let k = 2usize;
+    let models = latency::load_models(&m, 1, k, 1, false)?;
+    let mean = parm::coordinator::service::measure_service(
+        &models.deployed,
+        &parm::tensor::Tensor::batch(&[source.queries[0].clone()])?,
+        20,
+    );
+    let capacity = GPU.default_m as f64 / mean.as_secs_f64();
+    let rate = 0.5 * capacity;
+
+    let mut rows = Vec::new();
+    for (bal, bname) in [
+        (Balancing::SingleQueue, "single-queue"),
+        (Balancing::RoundRobin, "round-robin"),
+    ] {
+        for (mode, tag) in [
+            (Mode::Parm { k, encoders: vec![Encoder::sum(k)] }, "parm"),
+            (Mode::EqualResources { k }, "equal-res"),
+        ] {
+            let mut cfg = ServiceConfig::defaults(mode, &GPU);
+            cfg.balancing = bal;
+            cfg.seed = 0xBA1;
+            rows.push(latency::run_point(
+                &cfg,
+                &models,
+                &source,
+                n,
+                rate,
+                &format!("{tag}[{bname}]"),
+            )?);
+        }
+    }
+    latency::emit("ablation_balancing", &rows);
+    Ok(())
+}

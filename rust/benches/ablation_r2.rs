@@ -1,0 +1,40 @@
+//! Ablation (§3.5): tolerating TWO concurrent unavailabilities with two
+//! parity models (k=2, r=2). Both data outputs of each stripe are dropped
+//! and reconstructed from the two parity outputs alone — the hardest
+//! decode the framework supports. Compares against the r=1 single-loss
+//! accuracy to show the cost of stacking parities.
+
+use parm::artifacts::Manifest;
+use parm::experiments::accuracy;
+
+const DATASET: &str = "synthvision10";
+const ARCH: &str = "microresnet";
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let dep = m.deployed(DATASET, ARCH)?;
+    let p0 = m.parity(DATASET, ARCH, 2, "sum", 0)?;
+    let p1 = m.parity(DATASET, ARCH, 2, "sum", 1)?;
+
+    let r1 = accuracy::evaluate(&m, dep, p0, 7)?;
+    let r2 = accuracy::evaluate_r2(&m, dep, p0, p1, 7)?;
+
+    println!("=== §3.5 ablation: r=1 vs r=2 (k=2, {DATASET}/{ARCH}) ===");
+    println!("{:<34} {:>8} {:>8}", "scenario", "A_a", "A_d");
+    println!(
+        "{:<34} {:>8.3} {:>8.3}",
+        "r=1: one loss per stripe", r1.available, r1.degraded
+    );
+    println!(
+        "{:<34} {:>8.3} {:>8.3}",
+        "r=2: BOTH outputs lost", r2.available, r2.degraded
+    );
+    println!(
+        "\nreading: with a second learned parity model ParM still recovers\n\
+         useful predictions when an entire stripe goes dark — at lower\n\
+         accuracy than the single-loss case, mirroring the paper's\n\
+         redundancy/accuracy trade-off."
+    );
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! §5.2.3: ParM vs Equal-Resources at batch sizes 1, 2, 4 on the
+//! GPU-profile cluster. Rates scale with the throughput gain of batching
+//! (the paper scales 300 -> 460 -> 584 qps; we scale by measured batched
+//! service time).
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware;
+use parm::experiments::latency;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+
+    let mut rows = Vec::new();
+    for batch in [1usize, 2, 4] {
+        let mut r = latency::parm_vs_equal_resources(
+            &m,
+            &hardware::GPU,
+            2,
+            batch,
+            n,
+            &[0.55],
+            4,
+            false,
+            0xBA7C4 + batch as u64,
+        )?;
+        for row in &mut r {
+            row.label = format!("{} b={batch}", row.label);
+        }
+        rows.extend(r);
+    }
+    latency::emit("batch_size", &rows);
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! §5.2.5: latency of ParM's own components — encoding and decoding — for
+//! k = 2, 3, 4 on the latency workload's tensors (64x64x3 queries,
+//! 1000-float predictions). The paper reports 93-193 us encode and
+//! 8-19 us decode; the point to reproduce is that both are orders of
+//! magnitude below model inference (tens of ms), i.e. ParM's codes are
+//! effectively free on the request path.
+
+use std::time::Duration;
+
+use parm::coordinator::decoder;
+use parm::coordinator::encoder::Encoder;
+use parm::tensor::Tensor;
+use parm::util::rng::Pcg64;
+use parm::util::stats;
+
+fn rand_tensor(rng: &mut Pcg64, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+    Tensor::new(shape, data).unwrap()
+}
+
+fn main() {
+    parm::util::logging::init();
+    let mut rng = Pcg64::new(0x5257);
+    println!("=== §5.2.5 component latency (64x64x3 queries, 1000-f32 preds) ===");
+    println!(
+        "{:<24} {:>4} {:>12} {:>12} {:>12}",
+        "component", "k", "p50(us)", "p99(us)", "mean(us)"
+    );
+    let mut lines = Vec::new();
+    for k in [2usize, 3, 4] {
+        let queries: Vec<Tensor> =
+            (0..k).map(|_| rand_tensor(&mut rng, vec![64, 64, 3])).collect();
+        let qrefs: Vec<&Tensor> = queries.iter().collect();
+
+        for (enc, name) in [
+            (Encoder::sum(k), "encode/sum"),
+            (Encoder::concat(k), "encode/concat"),
+        ] {
+            if matches!(enc, Encoder::Concat { k } if k == 3) {
+                continue; // concat needs k=2 or square k
+            }
+            let mut s = stats::bench(name, 50, 2_000, Duration::from_millis(300), || {
+                std::hint::black_box(enc.encode(&qrefs).unwrap());
+            });
+            let line = format!(
+                "{:<24} {:>4} {:>12.1} {:>12.1} {:>12.1}",
+                name,
+                k,
+                s.median() * 1e3,
+                s.p99() * 1e3,
+                s.mean() * 1e3
+            );
+            println!("{line}");
+            lines.push(line);
+        }
+
+        // Decode: parity output + (k-1) available 1000-float predictions.
+        let outs: Vec<Option<Tensor>> = (0..k)
+            .map(|i| if i == 0 { None } else { Some(rand_tensor(&mut rng, vec![1000])) })
+            .collect();
+        let parity_out = rand_tensor(&mut rng, vec![1000]);
+        let weights = vec![1.0f32; k];
+        let mut s = stats::bench("decode/sub", 50, 5_000, Duration::from_millis(300), || {
+            std::hint::black_box(
+                decoder::decode_r1(&weights, &parity_out, &outs, 0).unwrap(),
+            );
+        });
+        let line = format!(
+            "{:<24} {:>4} {:>12.1} {:>12.1} {:>12.1}",
+            "decode/sub",
+            k,
+            s.median() * 1e3,
+            s.p99() * 1e3,
+            s.mean() * 1e3
+        );
+        println!("{line}");
+        lines.push(line);
+    }
+    let _ = std::fs::create_dir_all("bench_out");
+    let _ = std::fs::write("bench_out/component_latency.txt", lines.join("\n"));
+    println!("(wrote bench_out/component_latency.txt)");
+}

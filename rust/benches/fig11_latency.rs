@@ -1,0 +1,50 @@
+//! Figure 11: median and 99.9th-percentile latency of ParM (k=2) vs the
+//! Equal-Resources baseline across query rates, on both the GPU-profile
+//! and CPU-profile clusters, under 4 background shuffles.
+//!
+//! Query rates are expressed as utilization of the no-redundancy system
+//! and converted via the measured service time, so the sweep lands at the
+//! same operating points as the paper regardless of host speed.
+//! Env knobs: PARM_BENCH_QUERIES (default 12000), PARM_BENCH_UTILS.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware;
+use parm::experiments::latency;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+    let utils: Vec<f64> = std::env::var("PARM_BENCH_UTILS")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![0.3, 0.42, 0.55]);
+
+    let mut rows = Vec::new();
+    for profile in [&hardware::GPU, &hardware::CPU] {
+        rows.extend(latency::parm_vs_equal_resources(
+            &m, profile, 2, 1, n, &utils, 4, false, 0xF16_11,
+        )?);
+    }
+    latency::emit("fig11_latency", &rows);
+
+    // Paper shape check: at matching rates ParM's p99.9 should sit well
+    // below Equal-Resources' while medians stay comparable.
+    for pair in rows.chunks(2) {
+        if let [parm, er] = pair {
+            let gap_parm = parm.p999_ms - parm.median_ms;
+            let gap_er = er.p999_ms - er.median_ms;
+            println!(
+                "util {:.2} [{}]: tail-gap parm={:.2}ms er={:.2}ms ({}x closer)",
+                parm.utilization,
+                parm.label,
+                gap_parm,
+                gap_er,
+                if gap_parm > 0.0 { gap_er / gap_parm } else { f64::NAN }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Figure 12: latency of ParM at k = 2, 3, 4 (33%/25%/20% redundancy) at a
+//! fixed query rate on the GPU-profile cluster, vs Equal-Resources with
+//! 33% redundancy — the paper's redundancy/latency trade-off.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::experiments::latency;
+use parm::workload::QuerySource;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+
+    let mut rows = Vec::new();
+    // Fixed operating point ~ the paper's 270 qps on the GPU cluster.
+    let util = 0.55;
+    for k in [2usize, 3, 4] {
+        let models = latency::load_models(&m, 1, k, 1, false)?;
+        let mean = parm::coordinator::service::measure_service(
+            &models.deployed,
+            &parm::tensor::Tensor::batch(&[source.queries[0].clone()])?,
+            20,
+        );
+        let capacity = GPU.default_m as f64 / mean.as_secs_f64();
+        let rate = util * capacity;
+        let mut cfg = ServiceConfig::defaults(
+            Mode::Parm { k, encoders: vec![Encoder::sum(k)] },
+            &GPU,
+        );
+        cfg.seed = 0xF16_12 + k as u64;
+        rows.push(latency::run_point(
+            &cfg,
+            &models,
+            &source,
+            n,
+            rate,
+            &format!("parm[k={k},{}% red.]", 100 / k),
+        )?);
+        if k == 2 {
+            let mut cfg = ServiceConfig::defaults(Mode::EqualResources { k }, &GPU);
+            cfg.seed = 0xF16_12;
+            rows.push(latency::run_point(
+                &cfg, &models, &source, n, rate, "equal-resources[33% red.]",
+            )?);
+        }
+    }
+    latency::emit("fig12_latency_k", &rows);
+    Ok(())
+}

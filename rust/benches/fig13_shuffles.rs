@@ -1,0 +1,36 @@
+//! Figure 13: ParM vs Equal-Resources under varying network imbalance —
+//! 2, 3, 4, 5 concurrent background shuffles on the GPU-profile cluster.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware;
+use parm::experiments::latency;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+
+    let mut rows = Vec::new();
+    for shuffles in [2usize, 3, 4, 5] {
+        let mut r = latency::parm_vs_equal_resources(
+            &m,
+            &hardware::GPU,
+            2,
+            1,
+            n,
+            &[0.55],
+            shuffles,
+            false,
+            0xF16_13 + shuffles as u64,
+        )?;
+        for row in &mut r {
+            row.label = format!("{} sh={shuffles}", row.label);
+        }
+        rows.extend(r);
+    }
+    latency::emit("fig13_shuffles", &rows);
+    Ok(())
+}

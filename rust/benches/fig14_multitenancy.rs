@@ -1,0 +1,30 @@
+//! Figure 14: light multitenancy (§5.2.4) — a co-located tenant on one
+//! ninth of instances at <5% load, no network imbalance. ParM vs
+//! Equal-Resources across query rates on the GPU-profile cluster.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware;
+use parm::experiments::latency;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+
+    let rows = latency::parm_vs_equal_resources(
+        &m,
+        &hardware::GPU,
+        2,
+        1,
+        n,
+        &[0.3, 0.45, 0.6],
+        0,    // no shuffles —
+        true, // — tenancy is the only imbalance
+        0xF16_14,
+    )?;
+    latency::emit("fig14_multitenancy", &rows);
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Figure 15: ParM vs the approximate-backup-model alternative (§5.2.6).
+//! The approx pool has m/k instances of a cheaper model that is NOT
+//! k-times faster, so every query replicated to it queues — its tail
+//! blows up as the rate approaches (pool capacity), while ParM's parity
+//! pool only sees 1/k of the rate and keeps pace.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::experiments::latency;
+use parm::workload::QuerySource;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12_000);
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let k = 2usize;
+    let models = latency::load_models(&m, 1, k, 1, true)?;
+    let mean = parm::coordinator::service::measure_service(
+        &models.deployed,
+        &parm::tensor::Tensor::batch(&[source.queries[0].clone()])?,
+        20,
+    );
+    let capacity = GPU.default_m as f64 / mean.as_secs_f64();
+
+    let mut rows = Vec::new();
+    for util in [0.3f64, 0.45, 0.6] {
+        let rate = util * capacity;
+        for (mode, tag) in [
+            (Mode::Parm { k, encoders: vec![Encoder::sum(k)] }, "parm"),
+            (Mode::ApproxBackup { k }, "approx-backup"),
+        ] {
+            let mut cfg = ServiceConfig::defaults(mode, &GPU);
+            cfg.seed = 0xF16_15;
+            rows.push(latency::run_point(
+                &cfg,
+                &models,
+                &source,
+                n,
+                rate,
+                &format!("{tag}[util={util:.2}]"),
+            )?);
+        }
+    }
+    latency::emit("fig15_approx_backup", &rows);
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Figure 6: degraded-mode accuracy (A_d) of ParM with k=2 and the generic
+//! sum encoder, per task, vs the deployed model (A_a) and the Clipper
+//! default-prediction baseline. Regenerates the paper's bar chart as rows.
+
+use parm::artifacts::Manifest;
+use parm::experiments::accuracy;
+use parm::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+
+    println!("=== Figure 6: A_a vs ParM A_d vs default (k=2, sum encoder) ===");
+    println!(
+        "{:<16} {:<13} {:<8} {:>8} {:>8} {:>9} {:>10}",
+        "dataset", "arch", "metric", "A_a", "A_d", "default", "stripes"
+    );
+    let mut out = Vec::new();
+    for model in m.models.iter().filter(|x| x.role == "parity") {
+        if model.k != 2 || model.encoder != "sum" || model.r_index != 0 {
+            continue;
+        }
+        if model.name.contains("1000") {
+            continue; // latency-workload variant; fig6 uses task models
+        }
+        let dep = m.deployed(&model.dataset, &model.arch)?;
+        let r = accuracy::evaluate(&m, dep, model, 7)?;
+        println!(
+            "{:<16} {:<13} {:<8} {:>8.3} {:>8.3} {:>9.3} {:>10}",
+            r.dataset, r.arch, r.metric, r.available, r.degraded,
+            r.default_baseline, r.n_stripes
+        );
+        out.push(
+            Json::obj()
+                .set("dataset", r.dataset.as_str())
+                .set("arch", r.arch.as_str())
+                .set("metric", r.metric)
+                .set("available", r.available)
+                .set("degraded", r.degraded)
+                .set("default", r.default_baseline),
+        );
+    }
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/fig6_accuracy.json", Json::Arr(out).to_string())?;
+    println!("(wrote bench_out/fig6_accuracy.json)");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Figure 7: overall accuracy A_o (Eq. 1) on the CIFAR-10 stand-in as the
+//! unavailability fraction f_u sweeps 0..0.2, for ParM k=2,3,4 vs the
+//! default-prediction baseline; horizontal reference is A_a.
+
+use parm::artifacts::Manifest;
+use parm::experiments::accuracy;
+use parm::util::json::Json;
+
+const DATASET: &str = "synthvision10";
+const ARCH: &str = "microresnet";
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let dep = m.deployed(DATASET, ARCH)?;
+
+    let f_us: Vec<f64> = (0..=10).map(|i| i as f64 * 0.02).collect();
+    println!("=== Figure 7: overall accuracy A_o vs f_u ({DATASET}/{ARCH}) ===");
+    print!("{:<10}", "f_u");
+    for f in &f_us {
+        print!(" {f:>7.2}");
+    }
+    println!();
+
+    let mut out = Vec::new();
+    let mut reference_aa = None;
+    for k in [2usize, 3, 4] {
+        let par = m.parity(DATASET, ARCH, k, "sum", 0)?;
+        let r = accuracy::evaluate(&m, dep, par, 7)?;
+        reference_aa.get_or_insert(r.available);
+        print!("{:<10}", format!("parm k={k}"));
+        let series: Vec<f64> = f_us.iter().map(|&f| r.overall(f)).collect();
+        for v in &series {
+            print!(" {v:>7.3}");
+        }
+        println!();
+        if k == 2 {
+            print!("{:<10}", "default");
+            for &f in &f_us {
+                print!(" {:>7.3}", r.overall_default(f));
+            }
+            println!();
+            out.push(Json::obj().set("series", "default").set(
+                "values",
+                f_us.iter().map(|&f| r.overall_default(f)).collect::<Vec<_>>(),
+            ));
+        }
+        out.push(Json::obj().set("series", format!("parm_k{k}")).set("values", series));
+    }
+    println!("A_a (horizontal reference) = {:.3}", reference_aa.unwrap());
+    out.push(Json::obj().set("series", "A_a").set("values", vec![reference_aa.unwrap()]));
+
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/fig7_overall.json", Json::Arr(out).to_string())?;
+    println!("(wrote bench_out/fig7_overall.json)");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Figure 9: degraded-mode accuracy A_d for k = 2, 3, 4 (sum encoder)
+//! across datasets, plus §4.2.3 / Figure 10: the task-specific concat
+//! encoder (k = 2, 4) on the CIFAR-10 stand-in.
+
+use parm::artifacts::Manifest;
+use parm::experiments::accuracy;
+use parm::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+
+    println!("=== Figure 9 (sum) + Figure 10 (concat): A_d vs k ===");
+    println!(
+        "{:<16} {:<13} {:>4} {:>9} {:>8} {:>8} {:>9}",
+        "dataset", "arch", "k", "encoder", "A_a", "A_d", "default"
+    );
+    let mut out = Vec::new();
+    let mut parities: Vec<_> = m
+        .models
+        .iter()
+        .filter(|x| x.role == "parity" && x.r_index == 0 && !x.name.contains("1000"))
+        .collect();
+    parities.sort_by(|a, b| {
+        (&a.dataset, &a.arch, &a.encoder, a.k).cmp(&(&b.dataset, &b.arch, &b.encoder, b.k))
+    });
+    for model in parities {
+        let dep = m.deployed(&model.dataset, &model.arch)?;
+        let r = accuracy::evaluate(&m, dep, model, 7)?;
+        println!(
+            "{:<16} {:<13} {:>4} {:>9} {:>8.3} {:>8.3} {:>9.3}",
+            r.dataset, r.arch, r.k, r.encoder, r.available, r.degraded,
+            r.default_baseline
+        );
+        out.push(
+            Json::obj()
+                .set("dataset", r.dataset.as_str())
+                .set("arch", r.arch.as_str())
+                .set("k", r.k)
+                .set("encoder", r.encoder.as_str())
+                .set("available", r.available)
+                .set("degraded", r.degraded)
+                .set("default", r.default_baseline),
+        );
+    }
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/fig9_vary_k.json", Json::Arr(out).to_string())?;
+    println!("(wrote bench_out/fig9_vary_k.json)");
+    Ok(())
+}

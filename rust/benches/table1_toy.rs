@@ -1,0 +1,32 @@
+//! Table 1: the toy coded-computation example — linear F decodes exactly
+//! under the addition code; non-linear F is off by the cross term.
+
+use parm::experiments::table1;
+
+fn main() {
+    println!("=== Table 1: parity P = X1 + X2, X1=3, X2=4 ===");
+    println!(
+        "{:<12} {:>10} {:>12} {:>18}",
+        "F", "F(P)", "desired", "naive decode err"
+    );
+    for r in table1::rows(3.0, 4.0) {
+        println!(
+            "{:<12} {:>10.2} {:>12.2} {:>18.2}",
+            r.f_name, r.f_p, r.desired, r.naive_decode_err
+        );
+    }
+    // Sweep a grid to show the error is exactly the 2*x1*x2 cross term.
+    let mut max_linear_err = 0.0f64;
+    let mut max_cross_gap = 0.0f64;
+    for i in -5..=5 {
+        for j in -5..=5 {
+            let (x1, x2) = (i as f64 * 0.7, j as f64 * 1.3);
+            let rows = table1::rows(x1, x2);
+            max_linear_err = max_linear_err.max(rows[0].naive_decode_err);
+            max_cross_gap =
+                max_cross_gap.max((rows[1].naive_decode_err - (2.0 * x1 * x2).abs()).abs());
+        }
+    }
+    println!("\nmax linear decode error over grid: {max_linear_err:.2e} (exact)");
+    println!("max |square error - 2*x1*x2| over grid: {max_cross_gap:.2e} (the cross term)");
+}

@@ -1,0 +1,68 @@
+//! Hard-failure injection: the limiting case of a slowdown.
+//!
+//! ParM is agnostic to the cause of unavailability (§1); a crashed or
+//! hung instance is simply one that never returns. The fault plan marks
+//! instances as failed during configured windows; the instance worker
+//! drops (never answers) jobs received while failed. Used by the
+//! failure-injection integration tests and the `quickstart` example.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Lock-free fault schedule: per-instance "failed until" timestamps,
+/// stored as nanos since the plan's epoch.
+pub struct FaultPlan {
+    epoch: std::time::Instant,
+    failed_until: Vec<AtomicU64>,
+}
+
+impl FaultPlan {
+    pub fn new(n_instances: usize) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            epoch: std::time::Instant::now(),
+            failed_until: (0..n_instances).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    /// Mark `instance` failed for `dur` starting now.
+    pub fn fail_for(&self, instance: usize, dur: Duration) {
+        let until = (self.epoch.elapsed() + dur).as_nanos() as u64;
+        self.failed_until[instance].store(until, Ordering::Relaxed);
+    }
+
+    /// Permanently fail an instance.
+    pub fn kill(&self, instance: usize) {
+        self.failed_until[instance].store(u64::MAX, Ordering::Relaxed);
+    }
+
+    /// Clear any failure on an instance.
+    pub fn heal(&self, instance: usize) {
+        self.failed_until[instance].store(0, Ordering::Relaxed);
+    }
+
+    pub fn is_failed(&self, instance: usize) -> bool {
+        let until = self.failed_until[instance].load(Ordering::Relaxed);
+        until == u64::MAX || (self.epoch.elapsed().as_nanos() as u64) < until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fail_heal_cycle() {
+        let plan = FaultPlan::new(3);
+        assert!(!plan.is_failed(1));
+        plan.fail_for(1, Duration::from_millis(30));
+        assert!(plan.is_failed(1));
+        assert!(!plan.is_failed(0));
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(!plan.is_failed(1), "failure window expired");
+        plan.kill(2);
+        assert!(plan.is_failed(2));
+        plan.heal(2);
+        assert!(!plan.is_failed(2));
+    }
+}

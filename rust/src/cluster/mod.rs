@@ -1,0 +1,51 @@
+//! Simulated multi-tenant cluster substrate.
+//!
+//! The paper evaluates on EC2 GPU/CPU clusters where tail latency comes
+//! from *load imbalance*: background network shuffles and multi-tenant
+//! inference slow a random subset of model instances (§5.1). No cluster
+//! exists in this image, so we reproduce the same mechanisms in-process:
+//!
+//! - every model instance is an OS thread running real PJRT inference;
+//! - a [`hardware::Profile`] scales its effective service time (GPU-class
+//!   vs CPU-class instances, and the §5.2.6 approximate model's
+//!   hardware-dependent speedup);
+//! - [`network::Network`] models per-instance links with background
+//!   shuffles that inflate transfer times while in flight;
+//! - [`tenancy::Tenancy`] adds light co-located inference load on a subset
+//!   of instances (§5.2.4);
+//! - [`faults::FaultPlan`] injects hard failures (instances that stop
+//!   responding), the limiting case of a slowdown.
+//!
+//! All injected delays scale by `time_scale` so experiments can run
+//! compressed (e.g. 0.2x) while preserving the ratios that determine
+//! queueing behaviour; EXPERIMENTS.md records the scale used per figure.
+
+pub mod faults;
+pub mod hardware;
+pub mod network;
+pub mod tenancy;
+
+use std::time::Duration;
+
+/// Scale a duration by the experiment's time-compression factor.
+pub fn scaled(d: Duration, time_scale: f64) -> Duration {
+    Duration::from_secs_f64(d.as_secs_f64() * time_scale)
+}
+
+/// Sleep for an injected delay. Spinning is only used for genuinely tiny
+/// waits (< 50 us): the build host may have very few cores (the CI image
+/// has one), where busy-waiting in tens of worker threads would starve
+/// the PJRT execution pool and corrupt every measurement.
+pub fn precise_sleep(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    if d > Duration::from_micros(50) {
+        std::thread::sleep(d);
+    } else {
+        let start = std::time::Instant::now();
+        while start.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Link-contention model with background shuffles (§5.1 "Background
+//! traffic").
+//!
+//! The paper's main source of load imbalance: pairs of randomly chosen
+//! instances transfer 128-256 MB to each other; while such a shuffle is in
+//! flight, the two instances' frontend links are contended and query /
+//! prediction transfers on them slow down. A scheduler thread keeps a
+//! target number of shuffles alive at all times (the paper uses 4 by
+//! default, 2/3/5 in Figure 13).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+
+use super::hardware::Profile;
+
+/// Shared per-instance contention counters.
+pub struct Network {
+    /// Number of active background flows on each instance's link.
+    contention: Vec<AtomicU32>,
+    profile: &'static Profile,
+}
+
+impl Network {
+    pub fn new(n_instances: usize, profile: &'static Profile) -> Arc<Self> {
+        Arc::new(Self {
+            contention: (0..n_instances).map(|_| AtomicU32::new(0)).collect(),
+            profile,
+        })
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.contention.len()
+    }
+
+    pub fn active_flows(&self, instance: usize) -> u32 {
+        self.contention[instance].load(Ordering::Relaxed)
+    }
+
+    /// Transfer time of `bytes` to/from `instance` under current contention:
+    /// fair-share bandwidth across (1 + active background flows).
+    pub fn transfer_time(&self, instance: usize, bytes: usize) -> Duration {
+        let flows = 1 + self.active_flows(instance) as u64;
+        Duration::from_secs_f64(
+            bytes as f64 * flows as f64 / self.profile.link_bandwidth,
+        )
+    }
+
+    fn enter(&self, instance: usize) {
+        self.contention[instance].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn leave(&self, instance: usize) {
+        self.contention[instance].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Background-shuffle generator: keeps `concurrent` shuffles alive, each
+/// between a random pair of instances, transferring 128-256 MB.
+pub struct ShuffleGen {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ShuffleGen {
+    pub fn start(
+        net: Arc<Network>,
+        concurrent: usize,
+        time_scale: f64,
+        seed: u64,
+    ) -> ShuffleGen {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("shuffle-gen".into())
+            .spawn(move || shuffle_loop(net, concurrent, time_scale, seed, stop2))
+            .expect("spawn shuffle-gen");
+        ShuffleGen { stop, handle: Some(handle) }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShuffleGen {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct ActiveShuffle {
+    a: usize,
+    b: usize,
+    ends_at: std::time::Instant,
+}
+
+fn shuffle_loop(
+    net: Arc<Network>,
+    concurrent: usize,
+    time_scale: f64,
+    seed: u64,
+    stop: Arc<AtomicBool>,
+) {
+    let mut rng = Pcg64::new(seed);
+    let n = net.n_instances();
+    if n < 2 || concurrent == 0 {
+        return;
+    }
+    let mut active: Vec<ActiveShuffle> = Vec::with_capacity(concurrent);
+    while !stop.load(Ordering::Relaxed) {
+        let now = std::time::Instant::now();
+        // Retire finished shuffles.
+        active.retain(|s| {
+            if s.ends_at <= now {
+                net.leave(s.a);
+                net.leave(s.b);
+                false
+            } else {
+                true
+            }
+        });
+        // Launch new ones to hold the target concurrency.
+        while active.len() < concurrent {
+            let pair = rng.choose_distinct(n, 2);
+            let (a, b) = (pair[0], pair[1]);
+            // 128-256 MB at the shuffle's fair share of link bandwidth.
+            let bytes = rng.range_u64(128 << 20, 256 << 20) as f64;
+            let secs = bytes / (1.5e9 / 8.0) * time_scale;
+            net.enter(a);
+            net.enter(b);
+            active.push(ActiveShuffle {
+                a,
+                b,
+                ends_at: now + Duration::from_secs_f64(secs),
+            });
+            log::trace!("shuffle {a}<->{b} for {secs:.2}s");
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for s in active {
+        net.leave(s.a);
+        net.leave(s.b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::hardware::GPU;
+
+    #[test]
+    fn contention_inflates_transfer() {
+        let net = Network::new(4, &GPU);
+        let base = net.transfer_time(0, 1 << 20);
+        net.enter(0);
+        net.enter(0);
+        let contended = net.transfer_time(0, 1 << 20);
+        assert!((contended.as_secs_f64() / base.as_secs_f64() - 3.0).abs() < 1e-6);
+        net.leave(0);
+        net.leave(0);
+        assert_eq!(net.transfer_time(0, 1 << 20), base);
+    }
+
+    #[test]
+    fn shuffle_gen_creates_contention_and_cleans_up() {
+        let net = Network::new(8, &GPU);
+        let gen = ShuffleGen::start(net.clone(), 3, 0.001, 42);
+        // Give the scheduler a moment to start shuffles.
+        std::thread::sleep(Duration::from_millis(50));
+        let total: u32 = (0..8).map(|i| net.active_flows(i)).sum();
+        assert_eq!(total, 6, "3 shuffles x 2 endpoints");
+        gen.stop();
+        let total: u32 = (0..8).map(|i| net.active_flows(i)).sum();
+        assert_eq!(total, 0, "all flows released on stop");
+    }
+
+    #[test]
+    fn zero_concurrent_is_noop() {
+        let net = Network::new(4, &GPU);
+        let gen = ShuffleGen::start(net.clone(), 0, 1.0, 1);
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!((0..4).map(|i| net.active_flows(i)).sum::<u32>(), 0);
+        gen.stop();
+    }
+}

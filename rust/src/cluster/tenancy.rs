@@ -1,0 +1,83 @@
+//! Light multi-tenant inference load (§5.2.4, Figure 14).
+//!
+//! The paper deploys a second copy of the serving system on one ninth of
+//! the instances and sends it < 5% of cluster capacity — a light,
+//! compute-level form of imbalance (no network component). We model the
+//! co-located tenant as a Poisson stream of background jobs per tenant
+//! instance; while a background job runs, the instance's effective
+//! service rate halves (two processes share the accelerator/cores).
+
+use crate::util::rng::Pcg64;
+use std::time::Duration;
+
+#[derive(Clone, Debug)]
+pub struct Tenancy {
+    /// Which instances host a tenant.
+    pub tenant_instances: Vec<usize>,
+    /// Per-tenant-instance background arrival rate (jobs/sec, already
+    /// time-scaled).
+    pub bg_rate: f64,
+    /// Background job service time.
+    pub bg_service: Duration,
+    /// Service-time multiplier applied to foreground queries while a
+    /// background job overlaps.
+    pub slowdown: f64,
+}
+
+impl Tenancy {
+    /// No multitenancy.
+    pub fn none() -> Tenancy {
+        Tenancy {
+            tenant_instances: Vec::new(),
+            bg_rate: 0.0,
+            bg_service: Duration::ZERO,
+            slowdown: 1.0,
+        }
+    }
+
+    /// The paper's configuration: tenants on 1/9th of instances, load
+    /// under 5% of what the tenant instances could sustain.
+    pub fn light(m: usize, mean_service: Duration, rng: &mut Pcg64) -> Tenancy {
+        let n_tenants = (m as f64 / 9.0).ceil() as usize;
+        let tenant_instances = rng.choose_distinct(m, n_tenants);
+        let per_instance_capacity = 1.0 / mean_service.as_secs_f64().max(1e-6);
+        Tenancy {
+            tenant_instances,
+            bg_rate: 0.05 * per_instance_capacity,
+            bg_service: mean_service,
+            slowdown: 2.0,
+        }
+    }
+
+    pub fn is_tenant(&self, instance: usize) -> bool {
+        self.tenant_instances.contains(&instance)
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.tenant_instances.is_empty() && self.bg_rate > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn light_config_matches_paper_shape() {
+        let mut rng = Pcg64::new(5);
+        let t = Tenancy::light(18, Duration::from_millis(10), &mut rng);
+        assert_eq!(t.tenant_instances.len(), 2); // ceil(18/9)
+        // <5% of a 100 qps instance => 5 jobs/sec.
+        assert!((t.bg_rate - 5.0).abs() < 1e-9);
+        assert!(t.enabled());
+        let inst = t.tenant_instances[0];
+        assert!(t.is_tenant(inst));
+    }
+
+    #[test]
+    fn none_is_disabled() {
+        let t = Tenancy::none();
+        assert!(!t.enabled());
+        assert!(!t.is_tenant(0));
+    }
+}

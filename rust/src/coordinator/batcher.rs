@@ -1,0 +1,153 @@
+//! Query batching policy (§2.1, §5.2.3).
+//!
+//! Most latency-sensitive deployments serve batch size 1; GPU-friendly
+//! deployments batch a few queries with a short timeout. The batcher is a
+//! pure state machine: `offer()` queries, receive sealed batches when the
+//! size threshold is met; `flush_due()` seals a partial batch whose oldest
+//! query has waited past the timeout.
+
+use std::time::{Duration, Instant};
+
+use crate::tensor::Tensor;
+
+#[derive(Debug)]
+pub struct PendingQuery {
+    pub id: u64,
+    pub input: Tensor,
+    pub arrived: Instant,
+}
+
+#[derive(Debug)]
+pub struct SealedBatch {
+    pub query_ids: Vec<u64>,
+    pub input: Tensor,
+    /// Arrival of the oldest member (latency accounting starts here).
+    pub oldest_arrival: Instant,
+}
+
+pub struct Batcher {
+    batch_size: usize,
+    timeout: Duration,
+    pending: Vec<PendingQuery>,
+}
+
+impl Batcher {
+    pub fn new(batch_size: usize, timeout: Duration) -> Batcher {
+        assert!(batch_size >= 1);
+        Batcher { batch_size, timeout, pending: Vec::new() }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a query; returns a sealed batch when full.
+    pub fn offer(&mut self, q: PendingQuery) -> Option<SealedBatch> {
+        self.pending.push(q);
+        if self.pending.len() >= self.batch_size {
+            return Some(self.seal());
+        }
+        None
+    }
+
+    /// Seal a partial batch if the oldest query exceeded the timeout.
+    pub fn flush_due(&mut self, now: Instant) -> Option<SealedBatch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if now.duration_since(self.pending[0].arrived) >= self.timeout {
+            return Some(self.seal());
+        }
+        None
+    }
+
+    /// Force-seal whatever is pending (shutdown path).
+    pub fn flush_all(&mut self) -> Option<SealedBatch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.seal())
+        }
+    }
+
+    /// Next deadline at which `flush_due` could fire.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.first().map(|q| q.arrived + self.timeout)
+    }
+
+    fn seal(&mut self) -> SealedBatch {
+        let taken: Vec<PendingQuery> =
+            self.pending.drain(..self.pending.len().min(self.batch_size)).collect();
+        let oldest = taken.iter().map(|q| q.arrived).min().unwrap();
+        let ids = taken.iter().map(|q| q.id).collect();
+        let tensors: Vec<Tensor> = taken.into_iter().map(|q| q.input).collect();
+        SealedBatch {
+            query_ids: ids,
+            input: Tensor::batch(&tensors).expect("uniform query shapes"),
+            oldest_arrival: oldest,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(id: u64) -> PendingQuery {
+        PendingQuery { id, input: Tensor::filled(vec![2], id as f32), arrived: Instant::now() }
+    }
+
+    #[test]
+    fn batch_size_one_seals_immediately() {
+        let mut b = Batcher::new(1, Duration::from_millis(10));
+        let sealed = b.offer(q(1)).expect("immediate seal");
+        assert_eq!(sealed.query_ids, vec![1]);
+        assert_eq!(sealed.input.shape(), &[1, 2]);
+    }
+
+    #[test]
+    fn accumulates_to_batch_size() {
+        let mut b = Batcher::new(3, Duration::from_secs(1));
+        assert!(b.offer(q(1)).is_none());
+        assert!(b.offer(q(2)).is_none());
+        let sealed = b.offer(q(3)).unwrap();
+        assert_eq!(sealed.query_ids, vec![1, 2, 3]);
+        assert_eq!(sealed.input.shape(), &[3, 2]);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn timeout_flushes_partial() {
+        let mut b = Batcher::new(4, Duration::from_millis(5));
+        b.offer(q(1));
+        assert!(b.flush_due(Instant::now()).is_none(), "not due yet");
+        let later = Instant::now() + Duration::from_millis(6);
+        let sealed = b.flush_due(later).expect("due");
+        assert_eq!(sealed.query_ids, vec![1]);
+    }
+
+    #[test]
+    fn flush_all_on_shutdown() {
+        let mut b = Batcher::new(4, Duration::from_secs(10));
+        b.offer(q(1));
+        b.offer(q(2));
+        let sealed = b.flush_all().unwrap();
+        assert_eq!(sealed.query_ids, vec![1, 2]);
+        assert!(b.flush_all().is_none());
+    }
+
+    #[test]
+    fn oldest_arrival_tracked() {
+        let mut b = Batcher::new(2, Duration::from_secs(1));
+        let first = q(1);
+        let t0 = first.arrived;
+        b.offer(first);
+        std::thread::sleep(Duration::from_millis(2));
+        let sealed = b.offer(q(2)).unwrap();
+        assert_eq!(sealed.oldest_arrival, t0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Coding groups (§3.1): the stripes of ParM.
+//!
+//! As query batches are dispatched, they are appended to the open coding
+//! group; when the group holds k batches it is sealed, encoded into a
+//! parity batch, and the parity is dispatched to the parity-model pool.
+//! [`GroupTracker`] then tracks completions for the group and decides —
+//! purely as a function of which outputs have arrived — which unavailable
+//! predictions can be reconstructed. It is deliberately free of threads
+//! and clocks so its invariants are property-testable.
+
+use std::collections::HashMap;
+
+use crate::coordinator::decoder;
+use crate::coordinator::encoder::Encoder;
+use crate::tensor::Tensor;
+
+/// A sealed coding group's bookkeeping.
+#[derive(Debug)]
+pub struct GroupState {
+    pub id: u64,
+    /// Per-slot deployed-model outputs (batched), as they arrive.
+    pub data_outs: Vec<Option<Tensor>>,
+    /// Per-parity outputs (batched), as they arrive.
+    pub parity_outs: Vec<Option<Tensor>>,
+    /// Per-slot query ids (for routing reconstructions back to clients).
+    pub query_ids: Vec<Vec<u64>>,
+    /// Slots already resolved (own prediction arrived or reconstructed).
+    pub resolved: Vec<bool>,
+}
+
+/// Outcome of feeding one completion to the tracker.
+#[derive(Debug, Default)]
+pub struct Resolutions {
+    /// (slot, query ids, outputs, was_reconstruction)
+    pub resolved: Vec<(usize, Vec<u64>, Tensor, bool)>,
+}
+
+/// Tracks in-flight coding groups and applies the decode rule.
+pub struct GroupTracker {
+    k: usize,
+    /// Weight vectors per parity model (r rows of k).
+    weights: Vec<Vec<f32>>,
+    groups: HashMap<u64, GroupState>,
+    /// Groups fully resolved and removed (stats).
+    pub completed_groups: u64,
+    /// Total reconstructions performed.
+    pub reconstructions: u64,
+}
+
+impl GroupTracker {
+    pub fn new(k: usize, encoders: &[Encoder]) -> GroupTracker {
+        let weights = encoders
+            .iter()
+            .map(|e| match e {
+                Encoder::Sum { weights } => weights.clone(),
+                // Concat parity models are trained for the plain sum of
+                // predictions, so decode weights are all-ones.
+                Encoder::Concat { k } => vec![1.0; *k],
+            })
+            .collect();
+        GroupTracker {
+            k,
+            weights,
+            groups: HashMap::new(),
+            completed_groups: 0,
+            reconstructions: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn r(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn open_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Register a sealed group (slot -> query ids, in dispatch order).
+    pub fn register(&mut self, id: u64, query_ids: Vec<Vec<u64>>) {
+        assert_eq!(query_ids.len(), self.k, "group must have k slots");
+        self.groups.insert(
+            id,
+            GroupState {
+                id,
+                data_outs: (0..self.k).map(|_| None).collect(),
+                parity_outs: (0..self.weights.len()).map(|_| None).collect(),
+                query_ids,
+                resolved: vec![false; self.k],
+            },
+        );
+    }
+
+    /// Feed a deployed-model completion for (group, slot).
+    pub fn on_data(&mut self, group: u64, slot: usize, output: Tensor) -> Resolutions {
+        let mut res = Resolutions::default();
+        let Some(g) = self.groups.get_mut(&group) else {
+            return res; // group already fully resolved and evicted
+        };
+        if g.data_outs[slot].is_none() {
+            g.data_outs[slot] = Some(output);
+        }
+        if !g.resolved[slot] {
+            g.resolved[slot] = true;
+            res.resolved.push((
+                slot,
+                g.query_ids[slot].clone(),
+                g.data_outs[slot].clone().unwrap(),
+                false,
+            ));
+        }
+        self.try_decode(group, &mut res);
+        self.evict_if_done(group);
+        res
+    }
+
+    /// Feed a parity-model completion for (group, r_index).
+    pub fn on_parity(&mut self, group: u64, r_index: usize, output: Tensor) -> Resolutions {
+        let mut res = Resolutions::default();
+        let Some(g) = self.groups.get_mut(&group) else {
+            return res;
+        };
+        if g.parity_outs[r_index].is_none() {
+            g.parity_outs[r_index] = Some(output);
+        }
+        self.try_decode(group, &mut res);
+        self.evict_if_done(group);
+        res
+    }
+
+    /// Drop a group (e.g. SLO expired for all of its queries).
+    pub fn abandon(&mut self, group: u64) {
+        self.groups.remove(&group);
+    }
+
+    fn try_decode(&mut self, group: u64, res: &mut Resolutions) {
+        let Some(g) = self.groups.get_mut(&group) else {
+            return;
+        };
+        let missing: Vec<usize> = (0..self.k).filter(|&i| !g.resolved[i]).collect();
+        if missing.is_empty() {
+            return;
+        }
+        let parities_avail = g.parity_outs.iter().filter(|p| p.is_some()).count();
+        if missing.len() > parities_avail {
+            return; // cannot decode yet
+        }
+        match decoder::decode_general(&self.weights, &g.data_outs, &g.parity_outs) {
+            Ok(recs) => {
+                for (slot, tensor) in recs {
+                    if !g.resolved[slot] {
+                        g.resolved[slot] = true;
+                        self.reconstructions += 1;
+                        res.resolved.push((
+                            slot,
+                            g.query_ids[slot].clone(),
+                            tensor,
+                            true,
+                        ));
+                    }
+                }
+            }
+            Err(e) => log::debug!("group {group}: decode not possible: {e}"),
+        }
+    }
+
+    fn evict_if_done(&mut self, group: u64) {
+        if let Some(g) = self.groups.get(&group) {
+            if g.resolved.iter().all(|&r| r) {
+                self.groups.remove(&group);
+                self.completed_groups += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::new(vec![1, v.len()], v).unwrap()
+    }
+
+    fn tracker(k: usize) -> GroupTracker {
+        GroupTracker::new(k, &[Encoder::sum(k)])
+    }
+
+    #[test]
+    fn all_data_arrives_no_reconstruction() {
+        let mut tr = tracker(2);
+        tr.register(1, vec![vec![10], vec![11]]);
+        let r = tr.on_data(1, 0, t(vec![1., 0.]));
+        assert_eq!(r.resolved.len(), 1);
+        assert!(!r.resolved[0].3);
+        let r = tr.on_data(1, 1, t(vec![0., 1.]));
+        assert_eq!(r.resolved.len(), 1);
+        assert_eq!(tr.reconstructions, 0);
+        assert_eq!(tr.completed_groups, 1);
+        assert_eq!(tr.open_groups(), 0);
+    }
+
+    #[test]
+    fn parity_plus_k_minus_1_reconstructs_straggler() {
+        let mut tr = tracker(2);
+        tr.register(7, vec![vec![1], vec![2]]);
+        tr.on_data(7, 0, t(vec![1., 2.]));
+        // Parity output = sum of the two data outputs.
+        let r = tr.on_parity(7, 0, t(vec![4., 6.]));
+        assert_eq!(r.resolved.len(), 1);
+        let (slot, ids, out, reconstructed) = &r.resolved[0];
+        assert_eq!(*slot, 1);
+        assert_eq!(ids, &vec![2]);
+        assert_eq!(out.data(), &[3., 4.]);
+        assert!(*reconstructed);
+        assert_eq!(tr.reconstructions, 1);
+        assert_eq!(tr.completed_groups, 1);
+    }
+
+    #[test]
+    fn parity_first_then_data_reconstructs() {
+        let mut tr = tracker(3);
+        tr.register(1, vec![vec![1], vec![2], vec![3]]);
+        tr.on_parity(1, 0, t(vec![6.]));
+        assert_eq!(tr.reconstructions, 0, "two still missing, r=1");
+        tr.on_data(1, 0, t(vec![1.]));
+        let r = tr.on_data(1, 1, t(vec![2.]));
+        // Slot 1 resolves natively AND slot 2 reconstructs (6-1-2=3).
+        assert_eq!(r.resolved.len(), 2);
+        let rec = r.resolved.iter().find(|x| x.3).unwrap();
+        assert_eq!(rec.0, 2);
+        assert_eq!(rec.2.data(), &[3.]);
+    }
+
+    #[test]
+    fn late_straggler_after_reconstruction_is_ignored() {
+        let mut tr = tracker(2);
+        tr.register(1, vec![vec![1], vec![2]]);
+        tr.on_data(1, 0, t(vec![1.]));
+        tr.on_parity(1, 0, t(vec![3.]));
+        assert_eq!(tr.completed_groups, 1);
+        // The straggler finally answers: group is gone, no double-resolve.
+        let r = tr.on_data(1, 1, t(vec![2.]));
+        assert!(r.resolved.is_empty());
+    }
+
+    #[test]
+    fn r2_tolerates_two_stragglers() {
+        let encs = [Encoder::sum_r(2, 0), Encoder::sum_r(2, 1)];
+        let mut tr = GroupTracker::new(2, &encs);
+        tr.register(1, vec![vec![1], vec![2]]);
+        tr.on_parity(1, 0, t(vec![3.])); // f1+f2
+        let r = tr.on_parity(1, 1, t(vec![5.])); // f1+2*f2
+        assert_eq!(r.resolved.len(), 2, "both reconstructed from parities");
+        let mut outs: Vec<(usize, f32)> =
+            r.resolved.iter().map(|x| (x.0, x.2.data()[0])).collect();
+        outs.sort_by_key(|x| x.0);
+        assert!((outs[0].1 - 1.0).abs() < 1e-5);
+        assert!((outs[1].1 - 2.0).abs() < 1e-5);
+        assert_eq!(tr.reconstructions, 2);
+    }
+
+    #[test]
+    fn abandon_removes_group() {
+        let mut tr = tracker(2);
+        tr.register(9, vec![vec![1], vec![2]]);
+        tr.abandon(9);
+        assert_eq!(tr.open_groups(), 0);
+        assert!(tr.on_data(9, 0, t(vec![1.])).resolved.is_empty());
+    }
+
+    #[test]
+    fn duplicate_completions_are_idempotent() {
+        let mut tr = tracker(2);
+        tr.register(1, vec![vec![1], vec![2]]);
+        tr.on_data(1, 0, t(vec![1.]));
+        let r = tr.on_data(1, 0, t(vec![99.]));
+        assert!(r.resolved.is_empty(), "second completion for same slot ignored");
+    }
+}

@@ -1,0 +1,278 @@
+//! ParM decoder (§3.2, §3.5): reconstructs unavailable predictions from
+//! the parity model's output plus the available predictions.
+//!
+//! r = 1 (the common case, fast path): a single subtraction pass,
+//!   Fhat(X_j) = (F_P(P) - Σ_{i≠j} w_i·F(X_i)) / w_j.
+//!
+//! r > 1: each parity model was trained for a different weight vector
+//! (§3.5); with u ≤ r data outputs missing we solve the u×u linear system
+//! given by any u parity outputs via Gaussian elimination with partial
+//! pivoting (coefficients are the parity weights; the right-hand sides
+//! are whole prediction vectors).
+//!
+//! The decoder runs on the frontend collector thread; the paper measures
+//! 8-19 us for it, so the r = 1 path is a single allocation + one fused
+//! subtract loop.
+
+use crate::tensor::{ops, Tensor};
+
+#[derive(Debug, thiserror::Error)]
+pub enum DecodeError {
+    #[error("need {need} available of k={k} data outputs for r=1 decode, have {have}")]
+    NotEnoughData { k: usize, need: usize, have: usize },
+    #[error("cannot decode {missing} missing outputs with {parities} parity outputs")]
+    TooManyMissing { missing: usize, parities: usize },
+    #[error("singular decode system (weights not independent)")]
+    Singular,
+    #[error("tensor error: {0}")]
+    Tensor(#[from] crate::tensor::TensorError),
+}
+
+/// r = 1 subtraction decode: reconstruct slot `j` from the parity output
+/// and the other k-1 data outputs.
+pub fn decode_r1(
+    weights: &[f32],
+    parity_out: &Tensor,
+    data_outs: &[Option<Tensor>],
+    j: usize,
+) -> Result<Tensor, DecodeError> {
+    let k = weights.len();
+    debug_assert_eq!(data_outs.len(), k);
+    let have = data_outs.iter().filter(|d| d.is_some()).count();
+    if have < k - 1 || data_outs[j].is_some() && have < k {
+        // (if slot j itself is present this is a no-op decode; still allow)
+    }
+    let mut acc = parity_out.clone();
+    let mut missing_weight = None;
+    for (i, (d, &w)) in data_outs.iter().zip(weights).enumerate() {
+        if i == j {
+            missing_weight = Some(w);
+            continue;
+        }
+        match d {
+            Some(t) => ops::add_scaled_assign(&mut acc, t, -w)?,
+            None => {
+                return Err(DecodeError::NotEnoughData { k, need: k - 1, have })
+            }
+        }
+    }
+    let w = missing_weight.expect("slot index in range");
+    if (w - 1.0).abs() > f32::EPSILON {
+        for v in acc.data_mut() {
+            *v /= w;
+        }
+    }
+    Ok(acc)
+}
+
+/// General decode: given per-parity weight vectors (r x k), the available
+/// data outputs, and the available parity outputs, reconstruct all missing
+/// data slots. Returns (slot, reconstruction) pairs.
+pub fn decode_general(
+    weights: &[Vec<f32>],
+    data_outs: &[Option<Tensor>],
+    parity_outs: &[Option<Tensor>],
+) -> Result<Vec<(usize, Tensor)>, DecodeError> {
+    let k = data_outs.len();
+    let missing: Vec<usize> = (0..k).filter(|&i| data_outs[i].is_none()).collect();
+    if missing.is_empty() {
+        return Ok(Vec::new());
+    }
+    let avail_parities: Vec<usize> = (0..parity_outs.len())
+        .filter(|&j| parity_outs[j].is_some())
+        .collect();
+    let u = missing.len();
+    if u > avail_parities.len() {
+        return Err(DecodeError::TooManyMissing {
+            missing: u,
+            parities: avail_parities.len(),
+        });
+    }
+
+    // Fast path: one missing, first available parity.
+    if u == 1 {
+        let pj = avail_parities[0];
+        let rec = decode_r1(
+            &weights[pj],
+            parity_outs[pj].as_ref().unwrap(),
+            data_outs,
+            missing[0],
+        )?;
+        return Ok(vec![(missing[0], rec)]);
+    }
+
+    // Build the u x u system: rows = first u available parities,
+    // cols = missing slots. RHS_j = P_j - sum_{i available} w_ji F(X_i).
+    let rows: Vec<usize> = avail_parities[..u].to_vec();
+    let mut a = vec![vec![0.0f64; u]; u];
+    let mut rhs: Vec<Tensor> = Vec::with_capacity(u);
+    for (ri, &pj) in rows.iter().enumerate() {
+        for (ci, &m) in missing.iter().enumerate() {
+            a[ri][ci] = weights[pj][m] as f64;
+        }
+        let mut b = parity_outs[pj].as_ref().unwrap().clone();
+        for (i, d) in data_outs.iter().enumerate() {
+            if let Some(t) = d {
+                ops::add_scaled_assign(&mut b, t, -weights[pj][i])?;
+            }
+        }
+        rhs.push(b);
+    }
+
+    // Gaussian elimination with partial pivoting; the RHS entries are
+    // whole tensors, so row ops apply to prediction vectors.
+    for col in 0..u {
+        let (pivot, pv) = (col..u)
+            .map(|r| (r, a[r][col].abs()))
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+            .unwrap();
+        if pv < 1e-9 {
+            return Err(DecodeError::Singular);
+        }
+        a.swap(col, pivot);
+        rhs.swap(col, pivot);
+        for r in (col + 1)..u {
+            let f = a[r][col] / a[col][col];
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..u {
+                a[r][c] -= f * a[col][c];
+            }
+            let (lo, hi) = rhs.split_at_mut(r);
+            ops::add_scaled_assign(&mut hi[0], &lo[col], -(f as f32))?;
+        }
+    }
+    // Back substitution.
+    let mut out: Vec<Option<Tensor>> = vec![None; u];
+    for col in (0..u).rev() {
+        let mut x = rhs[col].clone();
+        for c in (col + 1)..u {
+            let coeff = a[col][c];
+            let solved = out[c].as_ref().unwrap();
+            ops::add_scaled_assign(&mut x, solved, -(coeff as f32))?;
+        }
+        let diag = a[col][col] as f32;
+        for v in x.data_mut() {
+            *v /= diag;
+        }
+        out[col] = Some(x);
+    }
+    Ok(missing
+        .into_iter()
+        .zip(out.into_iter().map(Option::unwrap))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: Vec<f32>) -> Tensor {
+        Tensor::new(vec![data.len()], data).unwrap()
+    }
+
+    #[test]
+    fn r1_subtraction_roundtrip() {
+        // F(X1)=[1,2], F(X2)=[3,4]; parity model output = their sum.
+        let f1 = t(vec![1., 2.]);
+        let f2 = t(vec![3., 4.]);
+        let fp = t(vec![4., 6.]);
+        let w = vec![1.0, 1.0];
+        let rec = decode_r1(&w, &fp, &[Some(f1.clone()), None], 1).unwrap();
+        assert_eq!(rec.data(), f2.data());
+        let rec = decode_r1(&w, &fp, &[None, Some(f2)], 0).unwrap();
+        assert_eq!(rec.data(), f1.data());
+    }
+
+    #[test]
+    fn r1_weighted_divides() {
+        // P encodes X1 + 2*X2 => F_P approximates F(X1) + 2 F(X2).
+        let f1 = t(vec![1., 1.]);
+        let fp = t(vec![7., 9.]); // 1 + 2*3, 1 + 2*4
+        let w = vec![1.0, 2.0];
+        let rec = decode_r1(&w, &fp, &[Some(f1), None], 1).unwrap();
+        assert_eq!(rec.data(), &[3., 4.]);
+    }
+
+    #[test]
+    fn r1_insufficient_data_errors() {
+        let fp = t(vec![0.]);
+        let err = decode_r1(&[1., 1., 1.], &fp, &[Some(t(vec![1.])), None, None], 1);
+        assert!(matches!(err, Err(DecodeError::NotEnoughData { .. })));
+    }
+
+    #[test]
+    fn general_two_missing_two_parities() {
+        // k=2, r=2; weights rows: [1,1] and [1,2] (§3.5).
+        let f1 = t(vec![2., 0.]);
+        let f2 = t(vec![1., 5.]);
+        let p0 = t(vec![3., 5.]); // f1 + f2
+        let p1 = t(vec![4., 10.]); // f1 + 2 f2
+        let w = vec![vec![1., 1.], vec![1., 2.]];
+        let rec =
+            decode_general(&w, &[None, None], &[Some(p0), Some(p1)]).unwrap();
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec[0].0, 0);
+        for (v, e) in rec[0].1.data().iter().zip(f1.data()) {
+            assert!((v - e).abs() < 1e-5);
+        }
+        for (v, e) in rec[1].1.data().iter().zip(f2.data()) {
+            assert!((v - e).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn general_one_missing_uses_fast_path() {
+        let f1 = t(vec![2.]);
+        let p0 = t(vec![5.]);
+        let w = vec![vec![1., 1.]];
+        let rec = decode_general(&w, &[Some(f1), None], &[Some(p0)]).unwrap();
+        assert_eq!(rec, vec![(1, t(vec![3.]))]);
+    }
+
+    #[test]
+    fn general_too_many_missing() {
+        let w = vec![vec![1., 1.]];
+        let err = decode_general(&w, &[None, None], &[Some(t(vec![1.]))]);
+        assert!(matches!(err, Err(DecodeError::TooManyMissing { .. })));
+    }
+
+    #[test]
+    fn general_none_missing_is_empty() {
+        let w = vec![vec![1., 1.]];
+        let rec = decode_general(
+            &w,
+            &[Some(t(vec![1.])), Some(t(vec![2.]))],
+            &[Some(t(vec![3.]))],
+        )
+        .unwrap();
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn general_k3_r2_various_missing_pairs() {
+        // k=3, r=2; weights [1,1,1] and [1,2,3].
+        let fs = [t(vec![1.]), t(vec![4.]), t(vec![9.])];
+        let p0 = t(vec![14.]);
+        let p1 = t(vec![1. + 8. + 27.]);
+        let w = vec![vec![1., 1., 1.], vec![1., 2., 3.]];
+        for (m1, m2) in [(0usize, 1usize), (0, 2), (1, 2)] {
+            let mut data: Vec<Option<Tensor>> =
+                fs.iter().map(|f| Some(f.clone())).collect();
+            data[m1] = None;
+            data[m2] = None;
+            let rec = decode_general(&w, &data, &[Some(p0.clone()), Some(p1.clone())])
+                .unwrap();
+            assert_eq!(rec.len(), 2);
+            for (slot, tensor) in rec {
+                assert!(
+                    (tensor.data()[0] - fs[slot].data()[0]).abs() < 1e-4,
+                    "slot {slot}: {} vs {}",
+                    tensor.data()[0],
+                    fs[slot].data()[0]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! ParM encoders (§3.2, §4.2.3): run on the frontend for every coding
+//! group, so they must be fast (the paper measures 93-193 us).
+//!
+//! - [`Encoder::Sum`]: the generic addition encoder, P = Σ w_i · X_i.
+//!   Weights are all-ones for r = 1; for r > 1 each parity model gets its
+//!   own weight vector (§3.5).
+//! - [`Encoder::Concat`]: the image-classification-specific encoder:
+//!   each query is area-downsampled and placed into a cell of the parity
+//!   query, preserving the original feature count (Figure 10).
+//!
+//! Semantics are pinned to `python/compile/encoders.py` (which generated
+//! the parity models' training data) — a mismatch would silently destroy
+//! reconstruction accuracy, so the end-to-end accuracy experiments double
+//! as integration tests of this equivalence.
+
+use crate::tensor::{ops, Tensor, TensorError};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Encoder {
+    /// Weighted sum across the k queries of a group.
+    Sum { weights: Vec<f32> },
+    /// Downsample-and-tile (k = 2 stacks halves; square k tiles a grid).
+    Concat { k: usize },
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EncodeError {
+    #[error("expected {expected} queries, got {actual}")]
+    WrongGroupSize { expected: usize, actual: usize },
+    #[error("concat encoder needs k=2 or a perfect square, got {0}")]
+    BadConcatK(usize),
+    #[error(transparent)]
+    Tensor(#[from] TensorError),
+}
+
+impl Encoder {
+    /// The paper's generic addition encoder for a given k.
+    pub fn sum(k: usize) -> Encoder {
+        Encoder::Sum { weights: vec![1.0; k] }
+    }
+
+    /// Weights for the `r_index`-th parity model (§3.5): w_i = (i+1)^r_index.
+    pub fn sum_r(k: usize, r_index: usize) -> Encoder {
+        Encoder::Sum {
+            weights: (0..k)
+                .map(|i| ((i + 1) as f32).powi(r_index as i32))
+                .collect(),
+        }
+    }
+
+    pub fn concat(k: usize) -> Encoder {
+        Encoder::Concat { k }
+    }
+
+    pub fn from_name(name: &str, k: usize, r_index: usize) -> Option<Encoder> {
+        match name {
+            "sum" => Some(Encoder::sum_r(k, r_index)),
+            "concat" => Some(Encoder::concat(k)),
+            _ => None,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            Encoder::Sum { weights } => weights.len(),
+            Encoder::Concat { k } => *k,
+        }
+    }
+
+    /// Encode k same-shaped queries into one parity query.
+    pub fn encode(&self, queries: &[&Tensor]) -> Result<Tensor, EncodeError> {
+        if queries.len() != self.k() {
+            return Err(EncodeError::WrongGroupSize {
+                expected: self.k(),
+                actual: queries.len(),
+            });
+        }
+        match self {
+            Encoder::Sum { weights } => Ok(ops::weighted_sum(queries, weights)?),
+            Encoder::Concat { k } => concat_encode(queries, *k),
+        }
+    }
+
+    /// Encode batched queries elementwise: the i-th queries of each of the
+    /// k batches form stripe i (§3.1 "Encoding takes place across
+    /// individual queries of a coding group").
+    pub fn encode_batches(&self, batches: &[&Tensor]) -> Result<Tensor, EncodeError> {
+        if batches.len() != self.k() {
+            return Err(EncodeError::WrongGroupSize {
+                expected: self.k(),
+                actual: batches.len(),
+            });
+        }
+        match self {
+            // Sum commutes with batching: sum whole batch tensors at once
+            // (single pass, no per-sample splitting on the hot path).
+            Encoder::Sum { weights } => Ok(ops::weighted_sum(batches, weights)?),
+            Encoder::Concat { .. } => {
+                let split: Vec<Vec<Tensor>> =
+                    batches.iter().map(|b| b.unbatch()).collect();
+                let bsz = split[0].len();
+                let mut out = Vec::with_capacity(bsz);
+                for i in 0..bsz {
+                    let stripe: Vec<&Tensor> = split.iter().map(|s| &s[i]).collect();
+                    out.push(self.encode(&stripe)?);
+                }
+                Ok(Tensor::batch(&out)?)
+            }
+        }
+    }
+}
+
+fn concat_encode(queries: &[&Tensor], k: usize) -> Result<Tensor, EncodeError> {
+    let shape = queries[0].shape();
+    if shape.len() != 3 {
+        return Err(EncodeError::Tensor(TensorError::Invalid {
+            op: "concat_encode",
+            msg: format!("need (H, W, C) queries, got {shape:?}"),
+        }));
+    }
+    let (h, w) = (shape[0], shape[1]);
+    if k == 2 {
+        // Halve height, stack vertically (matches encoders.py k=2 branch).
+        let halves: Vec<Tensor> = queries
+            .iter()
+            .map(|q| ops::resize_area(q, h / 2, w))
+            .collect::<Result<_, _>>()?;
+        return Ok(ops::concat_rows(&halves)?);
+    }
+    let g = (k as f64).sqrt() as usize;
+    if g * g != k {
+        return Err(EncodeError::BadConcatK(k));
+    }
+    let cells: Vec<Tensor> = queries
+        .iter()
+        .map(|q| ops::resize_area(q, h / g, w / g))
+        .collect::<Result<_, _>>()?;
+    let rows: Vec<Tensor> = (0..g)
+        .map(|r| ops::concat_cols(&cells[r * g..(r + 1) * g]))
+        .collect::<Result<_, _>>()?;
+    Ok(ops::concat_rows(&rows)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::new(shape.to_vec(), data).unwrap()
+    }
+
+    #[test]
+    fn sum_encoder_adds() {
+        let a = t(&[2, 2, 1], vec![1., 2., 3., 4.]);
+        let b = t(&[2, 2, 1], vec![10., 20., 30., 40.]);
+        let enc = Encoder::sum(2);
+        let p = enc.encode(&[&a, &b]).unwrap();
+        assert_eq!(p.data(), &[11., 22., 33., 44.]);
+    }
+
+    #[test]
+    fn sum_r_weights_match_35() {
+        // §3.5 example: second parity for k=2 encodes X1 + 2*X2.
+        let enc = Encoder::sum_r(2, 1);
+        match &enc {
+            Encoder::Sum { weights } => assert_eq!(weights, &vec![1.0, 2.0]),
+            _ => unreachable!(),
+        }
+        let a = t(&[1], vec![3.0]);
+        let b = t(&[1], vec![5.0]);
+        assert_eq!(enc.encode(&[&a, &b]).unwrap().data(), &[13.0]);
+    }
+
+    #[test]
+    fn wrong_group_size_rejected() {
+        let a = t(&[1], vec![1.0]);
+        assert!(matches!(
+            Encoder::sum(2).encode(&[&a]),
+            Err(EncodeError::WrongGroupSize { expected: 2, actual: 1 })
+        ));
+    }
+
+    #[test]
+    fn concat_k4_preserves_feature_count() {
+        let qs: Vec<Tensor> = (0..4)
+            .map(|i| Tensor::filled(vec![8, 8, 3], i as f32))
+            .collect();
+        let refs: Vec<&Tensor> = qs.iter().collect();
+        let p = Encoder::concat(4).encode(&refs).unwrap();
+        assert_eq!(p.shape(), &[8, 8, 3]);
+        // top-left cell = query 0, top-right = query 1, etc.
+        assert_eq!(p.data()[0], 0.0);
+        assert_eq!(p.data()[4 * 3], 1.0); // (0, 4, 0)
+        assert_eq!(p.data()[4 * 8 * 3], 2.0); // (4, 0, 0)
+        assert_eq!(p.data()[(4 * 8 + 4) * 3], 3.0); // (4, 4, 0)
+    }
+
+    #[test]
+    fn concat_k2_stacks_halves() {
+        let a = Tensor::filled(vec![4, 4, 1], 1.0);
+        let b = Tensor::filled(vec![4, 4, 1], 2.0);
+        let p = Encoder::concat(2).encode(&[&a, &b]).unwrap();
+        assert_eq!(p.shape(), &[4, 4, 1]);
+        assert!(p.data()[..8].iter().all(|&v| v == 1.0));
+        assert!(p.data()[8..].iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn concat_k3_rejected() {
+        let qs: Vec<Tensor> = (0..3).map(|_| Tensor::zeros(vec![4, 4, 1])).collect();
+        let refs: Vec<&Tensor> = qs.iter().collect();
+        assert!(matches!(
+            Encoder::concat(3).encode(&refs),
+            Err(EncodeError::BadConcatK(3))
+        ));
+    }
+
+    #[test]
+    fn encode_batches_elementwise() {
+        // Two batches of 2 samples each; stripe i = i-th sample of each.
+        let b1 = t(&[2, 1], vec![1., 2.]);
+        let b2 = t(&[2, 1], vec![10., 20.]);
+        let p = Encoder::sum(2).encode_batches(&[&b1, &b2]).unwrap();
+        assert_eq!(p.shape(), &[2, 1]);
+        assert_eq!(p.data(), &[11., 22.]);
+    }
+
+    #[test]
+    fn from_name_lookup() {
+        assert_eq!(Encoder::from_name("sum", 3, 0), Some(Encoder::sum(3)));
+        assert_eq!(Encoder::from_name("concat", 4, 0), Some(Encoder::concat(4)));
+        assert_eq!(Encoder::from_name("fft", 2, 0), None);
+    }
+}

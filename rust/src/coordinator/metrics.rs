@@ -1,0 +1,117 @@
+//! Per-query latency accounting and serving metrics.
+//!
+//! Latency is measured exactly as in the paper (§5.1): from frontend
+//! arrival to the moment a prediction for the query is available at the
+//! frontend — from the deployed model, from a reconstruction, from a
+//! replica, or (failing all by the SLO) a default prediction.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Deployed model's own prediction arrived first.
+    Native,
+    /// ParM reconstruction arrived first.
+    Reconstructed,
+    /// A replica / approximate backup answered first.
+    Replica,
+    /// Nothing by the SLO: default prediction returned.
+    Default,
+}
+
+#[derive(Debug)]
+pub struct QueryRecord {
+    pub id: u64,
+    pub arrived: Instant,
+    pub resolved: Option<(Instant, Outcome)>,
+}
+
+/// Aggregates a full run.
+#[derive(Default)]
+pub struct RunMetrics {
+    pub latency: Summary,
+    pub native: u64,
+    pub reconstructed: u64,
+    pub replica: u64,
+    pub defaulted: u64,
+    /// Encode / decode time accounting (§5.2.5).
+    pub encode_us: Summary,
+    pub decode_us: Summary,
+}
+
+impl RunMetrics {
+    pub fn record(&mut self, arrived: Instant, resolved: Instant, outcome: Outcome) {
+        self.latency
+            .record(resolved.duration_since(arrived).as_secs_f64() * 1e3);
+        match outcome {
+            Outcome::Native => self.native += 1,
+            Outcome::Reconstructed => self.reconstructed += 1,
+            Outcome::Replica => self.replica += 1,
+            Outcome::Default => self.defaulted += 1,
+        }
+    }
+
+    pub fn record_default(&mut self, slo: Duration) {
+        self.latency.record(slo.as_secs_f64() * 1e3);
+        self.defaulted += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.native + self.reconstructed + self.replica + self.defaulted
+    }
+
+    /// Fraction of queries that needed something other than the deployed
+    /// model's own prediction — the realized unavailability f_u.
+    pub fn f_unavailable(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        (t - self.native) as f64 / t as f64
+    }
+
+    pub fn report(&mut self, label: &str) -> String {
+        format!(
+            "{} | native={} recon={} replica={} default={} (f_u={:.4})",
+            self.latency.report(label),
+            self.native,
+            self.reconstructed,
+            self.replica,
+            self.defaulted,
+            self.f_unavailable(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_counting_and_fu() {
+        let mut m = RunMetrics::default();
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(10);
+        m.record(t0, t1, Outcome::Native);
+        m.record(t0, t1, Outcome::Native);
+        m.record(t0, t1, Outcome::Reconstructed);
+        m.record_default(Duration::from_millis(100));
+        assert_eq!(m.total(), 4);
+        assert_eq!(m.native, 2);
+        assert_eq!(m.reconstructed, 1);
+        assert_eq!(m.defaulted, 1);
+        assert!((m.f_unavailable() - 0.5).abs() < 1e-12);
+        // Default queries contribute the SLO as latency.
+        assert_eq!(m.latency.max(), 100.0);
+    }
+
+    #[test]
+    fn latency_in_ms() {
+        let mut m = RunMetrics::default();
+        let t0 = Instant::now();
+        m.record(t0, t0 + Duration::from_millis(25), Outcome::Native);
+        assert!((m.latency.median() - 25.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The ParM coordinator (the paper's system contribution): encoders,
+//! decoders, coding groups, batching, SLO handling, metrics, and the
+//! serving frontend that wires them to instance pools.
+
+pub mod batcher;
+pub mod coding;
+pub mod decoder;
+pub mod encoder;
+pub mod metrics;
+pub mod service;

@@ -1,0 +1,362 @@
+//! Accuracy experiments (§4, Figures 6-10): run the *full Rust path* —
+//! encode with the coordinator's encoder, infer via PJRT executables,
+//! decode with the coordinator's decoder — over a dataset's test split,
+//! simulating every single-unavailability scenario per stripe exactly as
+//! the paper does (§4.1 Metrics).
+//!
+//! This doubles as the strongest integration test in the repo: if the
+//! Rust encoder/decoder semantics diverged from the Python build-time
+//! encoders that generated the parity training data, A_d would collapse
+//! to chance.
+
+use crate::artifacts::{Labels, Manifest, ModelEntry};
+use crate::coordinator::decoder;
+use crate::coordinator::encoder::Encoder;
+use crate::runtime::engine::Executable;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::workload::QuerySource;
+
+#[derive(Clone, Debug)]
+pub struct AccuracyResult {
+    pub dataset: String,
+    pub arch: String,
+    pub k: usize,
+    pub encoder: String,
+    /// Accuracy when predictions are available (deployed model, A_a).
+    pub available: f64,
+    /// Degraded-mode accuracy of ParM reconstructions (A_d).
+    pub degraded: f64,
+    /// Accuracy of the Clipper-style default prediction.
+    pub default_baseline: f64,
+    /// "accuracy" is top-1 / top-5 / mean IoU depending on the dataset.
+    pub metric: &'static str,
+    pub n_stripes: usize,
+}
+
+impl AccuracyResult {
+    /// Eq. (1): overall accuracy at unavailability fraction f_u.
+    pub fn overall(&self, f_u: f64) -> f64 {
+        (1.0 - f_u) * self.available + f_u * self.degraded
+    }
+
+    /// Overall accuracy of the default-prediction baseline at f_u.
+    pub fn overall_default(&self, f_u: f64) -> f64 {
+        (1.0 - f_u) * self.available + f_u * self.default_baseline
+    }
+}
+
+/// Batched inference over arbitrary-length sample lists, padding the tail.
+pub fn run_all(
+    exe: &Executable,
+    samples: &[Tensor],
+) -> Result<Vec<Tensor>, crate::runtime::engine::EngineError> {
+    let b = exe.batch;
+    let mut outs = Vec::with_capacity(samples.len());
+    let mut i = 0;
+    while i < samples.len() {
+        let end = (i + b).min(samples.len());
+        let mut chunk: Vec<Tensor> = samples[i..end].to_vec();
+        while chunk.len() < b {
+            chunk.push(chunk.last().unwrap().clone()); // pad tail
+        }
+        let batched = Tensor::batch(&chunk).expect("uniform shapes");
+        let out = exe.run(&batched)?;
+        let per = out.unbatch();
+        outs.extend(per.into_iter().take(end - i));
+        i = end;
+    }
+    Ok(outs)
+}
+
+fn score(outputs: &[Tensor], indices: &[usize], source: &QuerySource, top5: bool) -> f64 {
+    let mut correct = 0.0;
+    for (out, &idx) in outputs.iter().zip(indices) {
+        match &source.labels {
+            Labels::Classes(labels) => {
+                let label = labels[idx] as usize;
+                if top5 {
+                    if out.top_n(5).contains(&label) {
+                        correct += 1.0;
+                    }
+                } else if out.argmax() == label {
+                    correct += 1.0;
+                }
+            }
+            Labels::Boxes(boxes) => {
+                correct += iou(out.data(), &boxes[idx]) as f64;
+            }
+        }
+    }
+    correct / outputs.len() as f64
+}
+
+/// IoU of (cx, cy, w, h) boxes in normalized coordinates.
+pub fn iou(a: &[f32], b: &[f32; 4]) -> f32 {
+    let (ax0, ay0) = (a[0] - a[2] / 2.0, a[1] - a[3] / 2.0);
+    let (ax1, ay1) = (a[0] + a[2] / 2.0, a[1] + a[3] / 2.0);
+    let (bx0, by0) = (b[0] - b[2] / 2.0, b[1] - b[3] / 2.0);
+    let (bx1, by1) = (b[0] + b[2] / 2.0, b[1] + b[3] / 2.0);
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = a[2].max(0.0) * a[3].max(0.0) + b[2].max(0.0) * b[3].max(0.0) - inter;
+    if union > 0.0 {
+        inter / union
+    } else {
+        0.0
+    }
+}
+
+/// Accuracy of the Clipper default-prediction fallback: a fixed prediction
+/// (class 0 / centered box), evaluated against the test labels.
+fn default_accuracy(source: &QuerySource, top5: bool, out_dim: usize) -> f64 {
+    match &source.labels {
+        Labels::Classes(labels) => {
+            if top5 {
+                // Default logits are all-zero: "top 5" is classes 0..5.
+                labels.iter().filter(|&&l| (l as usize) < 5).count() as f64
+                    / labels.len() as f64
+            } else {
+                labels.iter().filter(|&&l| l == 0).count() as f64 / labels.len() as f64
+            }
+        }
+        Labels::Boxes(boxes) => {
+            let default = [0.5f32, 0.5, 0.5, 0.5];
+            let _ = out_dim;
+            boxes.iter().map(|b| iou(&default, b) as f64).sum::<f64>()
+                / boxes.len() as f64
+        }
+    }
+}
+
+/// Full degraded-mode evaluation for one (dataset, arch, k, encoder).
+pub fn evaluate(
+    manifest: &Manifest,
+    deployed: &ModelEntry,
+    parity: &ModelEntry,
+    seed: u64,
+) -> anyhow::Result<AccuracyResult> {
+    let ds = manifest.dataset(&deployed.dataset)?;
+    let source = QuerySource::from_dataset(manifest, ds)?;
+    let k = parity.k;
+    let enc = Encoder::from_name(&parity.encoder, k, parity.r_index)
+        .ok_or_else(|| anyhow::anyhow!("unknown encoder {:?}", parity.encoder))?;
+    let top5 = ds.task == "classify" && ds.num_classes > 10;
+
+    let eval_batch = *deployed
+        .files
+        .keys()
+        .max()
+        .ok_or_else(|| anyhow::anyhow!("no batches for {}", deployed.name))?;
+    let dep_exe = Executable::load(
+        manifest.hlo_path(deployed, eval_batch)?,
+        &deployed.name,
+        &deployed.input_shape,
+        eval_batch,
+        deployed.out_dim,
+    )?;
+    let par_exe = Executable::load(
+        manifest.hlo_path(parity, eval_batch)?,
+        &parity.name,
+        &parity.input_shape,
+        eval_batch,
+        parity.out_dim,
+    )?;
+
+    // Stripe the test set: random groups of k (paper §4.1).
+    let mut rng = Pcg64::new(seed);
+    let order = source.shuffled_indices(&mut rng);
+    let n = (order.len() / k) * k;
+    let order = &order[..n];
+
+    // Deployed outputs for every test sample (also gives A_a).
+    let samples: Vec<Tensor> = order.iter().map(|&i| source.queries[i].clone()).collect();
+    let outs = run_all(&dep_exe, &samples)?;
+    let available = score(&outs, order, &source, top5);
+
+    // Encode each stripe, run the parity model.
+    let mut parities = Vec::with_capacity(n / k);
+    for stripe in samples.chunks(k) {
+        let refs: Vec<&Tensor> = stripe.iter().collect();
+        parities.push(enc.encode(&refs)?);
+    }
+    let parity_outs = run_all(&par_exe, &parities)?;
+
+    // Decode every single-unavailability scenario.
+    let weights = match &enc {
+        Encoder::Sum { weights } => weights.clone(),
+        Encoder::Concat { k } => vec![1.0; *k],
+    };
+    let mut recon = Vec::with_capacity(n);
+    for (s, pout) in parity_outs.iter().enumerate() {
+        let group = &outs[s * k..(s + 1) * k];
+        for j in 0..k {
+            let data: Vec<Option<Tensor>> = group
+                .iter()
+                .enumerate()
+                .map(|(i, t)| if i == j { None } else { Some(t.clone()) })
+                .collect();
+            recon.push(decoder::decode_r1(&weights, pout, &data, j)?);
+        }
+    }
+    let degraded = score(&recon, order, &source, top5);
+    let default_baseline = default_accuracy(&source, top5, deployed.out_dim);
+
+    Ok(AccuracyResult {
+        dataset: deployed.dataset.clone(),
+        arch: deployed.arch.clone(),
+        k,
+        encoder: parity.encoder.clone(),
+        available,
+        degraded,
+        default_baseline,
+        metric: if ds.task == "localize" {
+            "mean-IoU"
+        } else if top5 {
+            "top-5"
+        } else {
+            "top-1"
+        },
+        n_stripes: n / k,
+    })
+}
+
+/// §3.5: degraded accuracy under TWO concurrent unavailabilities, using
+/// two parity models (r = 2, weights [1,1] and [1,2]). Every stripe loses
+/// both data outputs; the decoder solves the 2x2 system from the two
+/// parity outputs alone.
+pub fn evaluate_r2(
+    manifest: &Manifest,
+    deployed: &ModelEntry,
+    parity0: &ModelEntry,
+    parity1: &ModelEntry,
+    seed: u64,
+) -> anyhow::Result<AccuracyResult> {
+    let ds = manifest.dataset(&deployed.dataset)?;
+    let source = QuerySource::from_dataset(manifest, ds)?;
+    let k = parity0.k;
+    assert_eq!(k, 2, "r2 evaluation shipped for k=2");
+    let encs = [
+        Encoder::from_name(&parity0.encoder, k, parity0.r_index).unwrap(),
+        Encoder::from_name(&parity1.encoder, k, parity1.r_index).unwrap(),
+    ];
+    let weights: Vec<Vec<f32>> = encs
+        .iter()
+        .map(|e| match e {
+            Encoder::Sum { weights } => weights.clone(),
+            Encoder::Concat { k } => vec![1.0; *k],
+        })
+        .collect();
+
+    let eval_batch = *deployed.files.keys().max().unwrap();
+    let dep_exe = Executable::load(
+        manifest.hlo_path(deployed, eval_batch)?,
+        &deployed.name,
+        &deployed.input_shape,
+        eval_batch,
+        deployed.out_dim,
+    )?;
+    let par_exes = [
+        Executable::load(
+            manifest.hlo_path(parity0, eval_batch)?,
+            &parity0.name,
+            &parity0.input_shape,
+            eval_batch,
+            parity0.out_dim,
+        )?,
+        Executable::load(
+            manifest.hlo_path(parity1, eval_batch)?,
+            &parity1.name,
+            &parity1.input_shape,
+            eval_batch,
+            parity1.out_dim,
+        )?,
+    ];
+
+    let mut rng = Pcg64::new(seed);
+    let order = source.shuffled_indices(&mut rng);
+    let n = (order.len() / k) * k;
+    let order = &order[..n];
+    let samples: Vec<Tensor> = order.iter().map(|&i| source.queries[i].clone()).collect();
+    let outs = run_all(&dep_exe, &samples)?;
+    let top5 = ds.task == "classify" && ds.num_classes > 10;
+    let available = score(&outs, order, &source, top5);
+
+    let mut recon = Vec::with_capacity(n);
+    for s in 0..n / k {
+        let stripe: Vec<&Tensor> = samples[s * k..(s + 1) * k].iter().collect();
+        let pouts: Vec<Option<Tensor>> = encs
+            .iter()
+            .zip(&par_exes)
+            .map(|(enc, exe)| {
+                let p = enc.encode(&stripe).unwrap();
+                Some(run_all(exe, &[p]).unwrap().remove(0))
+            })
+            .collect();
+        // Both data outputs unavailable: decode from parities alone.
+        let data: Vec<Option<Tensor>> = vec![None, None];
+        let mut recs = decoder::decode_general(&weights, &data, &pouts)?;
+        recs.sort_by_key(|(slot, _)| *slot);
+        for (_, t) in recs {
+            recon.push(t);
+        }
+    }
+    let degraded = score(&recon, order, &source, top5);
+
+    Ok(AccuracyResult {
+        dataset: deployed.dataset.clone(),
+        arch: deployed.arch.clone(),
+        k,
+        encoder: format!("{}+r1", parity0.encoder),
+        available,
+        degraded,
+        default_baseline: if ds.task == "classify" {
+            1.0 / ds.num_classes.max(1) as f64
+        } else {
+            0.0
+        },
+        metric: if top5 { "top-5" } else { "top-1" },
+        n_stripes: n / k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identical_and_disjoint() {
+        let a = [0.5f32, 0.5, 0.2, 0.2];
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-6);
+        let b = [0.9f32, 0.9, 0.1, 0.1];
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // Box B shifted by half its width: I = 0.5*1, U = 1.5 => 1/3.
+        let a = [0.5f32, 0.5, 1.0, 1.0];
+        let b = [1.0f32, 0.5, 1.0, 1.0];
+        assert!((iou(&a, &b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overall_accuracy_eq1() {
+        let r = AccuracyResult {
+            dataset: "d".into(),
+            arch: "a".into(),
+            k: 2,
+            encoder: "sum".into(),
+            available: 0.9,
+            degraded: 0.8,
+            default_baseline: 0.1,
+            metric: "top-1",
+            n_stripes: 10,
+        };
+        assert!((r.overall(0.0) - 0.9).abs() < 1e-12);
+        assert!((r.overall(1.0) - 0.8).abs() < 1e-12);
+        assert!((r.overall(0.1) - 0.89).abs() < 1e-12);
+        assert!((r.overall_default(0.1) - 0.82).abs() < 1e-12);
+    }
+}

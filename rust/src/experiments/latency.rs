@@ -1,0 +1,278 @@
+//! Latency experiments (§5, Figures 11-15): drive the full threaded
+//! service against the simulated cluster and report the paper's rows
+//! (median and 99.9th percentile per query rate / k / background load).
+
+use std::time::Duration;
+
+use crate::artifacts::Manifest;
+use crate::cluster::hardware::Profile;
+use crate::coordinator::encoder::Encoder;
+use crate::coordinator::service::{Mode, ModelSet, RunResult, Service, ServiceConfig};
+use crate::runtime::engine::Executable;
+use crate::util::json::Json;
+use crate::workload::QuerySource;
+
+/// The latency workload of §5.1: Cat-v-Dog stand-in queries against the
+/// ResNet-18 stand-in with 1000-float predictions.
+pub const LATENCY_DATASET: &str = "synthpets";
+pub const LATENCY_ARCH: &str = "microresnet";
+
+#[derive(Clone, Debug)]
+pub struct LatencyRow {
+    pub label: String,
+    pub rate_qps: f64,
+    pub utilization: f64,
+    pub median_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub mean_ms: f64,
+    pub f_u: f64,
+    pub reconstructions: u64,
+    pub n: usize,
+}
+
+impl LatencyRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set("rate_qps", self.rate_qps)
+            .set("utilization", self.utilization)
+            .set("median_ms", self.median_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("p999_ms", self.p999_ms)
+            .set("mean_ms", self.mean_ms)
+            .set("f_u", self.f_u)
+            .set("reconstructions", self.reconstructions)
+            .set("n", self.n)
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<28} {:>9} {:>6} {:>9} {:>9} {:>9} {:>8}",
+            "config", "qps", "util", "p50(ms)", "p99(ms)", "p99.9(ms)", "f_u"
+        )
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<28} {:>9.1} {:>6.2} {:>9.3} {:>9.3} {:>9.3} {:>8.4}",
+            self.label, self.rate_qps, self.utilization, self.median_ms,
+            self.p99_ms, self.p999_ms, self.f_u
+        )
+    }
+}
+
+/// Load the executables for a latency run at the given batch size.
+pub fn load_models(
+    manifest: &Manifest,
+    batch: usize,
+    k: usize,
+    r: usize,
+    with_approx: bool,
+) -> anyhow::Result<ModelSet> {
+    let dep = manifest.model(&format!("{LATENCY_DATASET}.{LATENCY_ARCH}.deployed1000"))?;
+    let deployed = Executable::load(
+        manifest.hlo_path(dep, batch)?,
+        &dep.name,
+        &dep.input_shape,
+        batch,
+        dep.out_dim,
+    )?;
+    let mut parities = Vec::new();
+    for ri in 0..r {
+        // The latency artifacts ship r_index=0 parities per k; reuse the
+        // k-th parity for every r index (service-time identical, which is
+        // all the latency path observes).
+        let _ = ri;
+        let par = manifest.model(&format!(
+            "{LATENCY_DATASET}.{LATENCY_ARCH}.parity1000.k{k}.sum"
+        ))?;
+        parities.push(Executable::load(
+            manifest.hlo_path(par, batch)?,
+            &par.name,
+            &par.input_shape,
+            batch,
+            par.out_dim,
+        )?);
+    }
+    let approx = if with_approx {
+        let ap = manifest.model(&format!("{LATENCY_DATASET}.{LATENCY_ARCH}.approx1000"))?;
+        Some(Executable::load(
+            manifest.hlo_path(ap, batch)?,
+            &ap.name,
+            &ap.input_shape,
+            batch,
+            ap.out_dim,
+        )?)
+    } else {
+        None
+    };
+    Ok(ModelSet { deployed, parities, approx })
+}
+
+/// Convert a target utilization of the *no-redundancy* system into a qps
+/// rate, given measured mean service time: rate = util * m / E[S].
+/// Assumes m truly parallel servers — use [`measure_capacity`] on hosts
+/// where instances share cores (PJRT's pool serializes concurrent execs).
+pub fn rate_for_utilization(util: f64, m: usize, mean_service: Duration) -> f64 {
+    util * m as f64 / mean_service.as_secs_f64()
+}
+
+/// Empirically measure the cluster's saturation throughput (qps): `m`
+/// threads hammer the executable for ~1.5 s and we count completions.
+/// This captures whatever real parallelism the host provides (on a
+/// 1-core CI image, capacity ≈ 1 / E[S] no matter how large m is), so
+/// utilization-derived rates stay meaningful everywhere.
+pub fn measure_capacity(exe: &std::sync::Arc<Executable>, m: usize, probe: &crate::tensor::Tensor) -> f64 {
+    // Warmup.
+    for _ in 0..3 {
+        let _ = exe.run(probe);
+    }
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let count = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..m.min(8))
+        .map(|_| {
+            let exe = exe.clone();
+            let probe = probe.clone();
+            let stop = stop.clone();
+            let count = count.clone();
+            std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    if exe.run(&probe).is_ok() {
+                        count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(1500));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let batch = probe.shape()[0] as f64;
+    (count.load(std::sync::atomic::Ordering::Relaxed) as f64 * batch / elapsed).max(1.0)
+}
+
+/// Run one (config, rate) point and summarize.
+pub fn run_point(
+    cfg: &ServiceConfig,
+    models: &ModelSet,
+    source: &QuerySource,
+    n_queries: u64,
+    rate: f64,
+    label: &str,
+) -> anyhow::Result<LatencyRow> {
+    let RunResult { mut metrics, mean_service, wall, reconstructions, .. } =
+        Service::run(cfg, models, &source.queries, n_queries, rate)?;
+    // mean_service is per *batch*; rate is per query.
+    let util = rate * mean_service.as_secs_f64() / (cfg.batch_size.max(1) as f64 * cfg.m as f64);
+    log::info!(
+        "{label}: {} queries in {:.1}s (service {:.2}ms, util {:.2})",
+        metrics.total(),
+        wall.as_secs_f64(),
+        mean_service.as_secs_f64() * 1e3,
+        util
+    );
+    Ok(LatencyRow {
+        label: label.to_string(),
+        rate_qps: rate,
+        utilization: util,
+        median_ms: metrics.latency.median(),
+        p99_ms: metrics.latency.p99(),
+        p999_ms: metrics.latency.p999(),
+        mean_ms: metrics.latency.mean(),
+        f_u: metrics.f_unavailable(),
+        reconstructions,
+        n: metrics.latency.len(),
+    })
+}
+
+/// ParM vs Equal-Resources at one rate (the Figure 11 comparison pair).
+pub fn parm_vs_equal_resources(
+    manifest: &Manifest,
+    profile: &'static Profile,
+    k: usize,
+    batch: usize,
+    n_queries: u64,
+    utils: &[f64],
+    shuffles: usize,
+    light_tenancy: bool,
+    seed: u64,
+) -> anyhow::Result<Vec<LatencyRow>> {
+    let ds = manifest.dataset(LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(manifest, ds)?;
+    let models = load_models(manifest, batch, k, 1, false)?;
+    // Modeled execution gives m truly parallel servers, so capacity is
+    // m / E[S] with E[S] measured from the real executable.
+    let mean = crate::coordinator::service::measure_service(
+        &models.deployed, &batched_probe(&source, batch), 20);
+    // Effective service time includes the profile's hardware scaling.
+    let eff = mean.as_secs_f64() * profile.exec_scale.max(1.0);
+    let capacity = batch as f64 * profile.default_m as f64 / eff;
+    log::info!("calibrated capacity: {capacity:.0} qps (E[S]={:.2}ms eff)", eff * 1e3);
+
+    let mut rows = Vec::new();
+    for &util in utils {
+        let rate = util * capacity;
+        for (mode, tag) in [
+            (Mode::Parm { k, encoders: vec![Encoder::sum(k)] }, "parm"),
+            (Mode::EqualResources { k }, "equal-resources"),
+        ] {
+            let mut cfg = ServiceConfig::defaults(mode, profile);
+            cfg.batch_size = batch;
+            if batch > 1 {
+                // Buffer long enough that batches usually fill (the paper
+                // batches at rates scaled to keep throughput-per-batch
+                // constant); padding half-empty batches would double the
+                // offered compute and overload the cluster.
+                cfg.batch_timeout =
+                    Duration::from_secs_f64(3.0 * batch as f64 / rate);
+            }
+            cfg.shuffles = shuffles;
+            cfg.light_tenancy = light_tenancy;
+            cfg.seed = seed;
+            let label = format!("{tag}[k={k},{},b{batch}]", profile.name);
+            rows.push(run_point(&cfg, &models, &source, n_queries, rate, &label)?);
+        }
+    }
+    Ok(rows)
+}
+
+fn batched_probe(source: &QuerySource, batch: usize) -> crate::tensor::Tensor {
+    crate::tensor::Tensor::batch(
+        &std::iter::repeat(source.queries[0].clone())
+            .take(batch)
+            .collect::<Vec<_>>(),
+    )
+    .unwrap()
+}
+
+/// Write rows to bench_out/<name>.json and print the table.
+pub fn emit(name: &str, rows: &[LatencyRow]) {
+    println!("\n=== {name} ===");
+    println!("{}", LatencyRow::header());
+    for r in rows {
+        println!("{}", r.line());
+    }
+    let json = Json::Arr(rows.iter().map(|r| r.to_json()).collect());
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{name}.json");
+    if std::fs::write(&path, json.to_string()).is_ok() {
+        println!("(wrote {path})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_from_utilization() {
+        // 12 instances, 10 ms service => capacity 1200 qps; 50% = 600.
+        let r = rate_for_utilization(0.5, 12, Duration::from_millis(10));
+        assert!((r - 600.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Paper-figure experiment harnesses. Each figure in the paper's
+//! evaluation maps to a bench target (see DESIGN.md's experiment index):
+//!
+//! | Figure / table | module | bench |
+//! |---|---|---|
+//! | Table 1 (toy)       | [`table1`]   | `table1_toy` |
+//! | Fig 6, 8, 9, 10 (accuracy) | [`accuracy`] | `fig6_accuracy`, `fig9_vary_k` |
+//! | Fig 7 (overall A_o) | [`accuracy`] | `fig7_overall_accuracy` |
+//! | Fig 11-15, §5.2.3/5 (latency) | [`latency`] | `fig11_latency` … |
+
+pub mod accuracy;
+pub mod latency;
+pub mod table1;

@@ -1,0 +1,59 @@
+//! Table 1: the toy example motivating parity models.
+//!
+//! For linear F the plain addition code decodes exactly; for non-linear F
+//! (here F(x) = x²) the naive decode F(P) - F(X1) is wrong by the cross
+//! term 2·X1·X2 — the gap ParM closes by *learning* F_P. This module
+//! computes the table's rows numerically so the bench can print them and
+//! the tests can pin them.
+
+#[derive(Debug, Clone)]
+pub struct ToyRow {
+    pub f_name: &'static str,
+    pub f_p: f64,
+    pub desired: f64,
+    pub naive_decode_err: f64,
+}
+
+/// Evaluate the two Table-1 rows at (x1, x2) with parity P = x1 + x2.
+pub fn rows(x1: f64, x2: f64) -> Vec<ToyRow> {
+    let p = x1 + x2;
+    let linear = |x: f64| 2.0 * x;
+    let square = |x: f64| x * x;
+    vec![
+        ToyRow {
+            f_name: "F(x) = 2x",
+            f_p: linear(p),
+            desired: linear(x1) + linear(x2),
+            naive_decode_err: ((linear(p) - linear(x1)) - linear(x2)).abs(),
+        },
+        ToyRow {
+            f_name: "F(x) = x^2",
+            f_p: square(p),
+            desired: square(x1) + square(x2),
+            naive_decode_err: ((square(p) - square(x1)) - square(x2)).abs(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_decodes_exactly() {
+        for (a, b) in [(1.0, 2.0), (-3.5, 7.25), (0.0, 0.0)] {
+            let r = &rows(a, b)[0];
+            assert!(r.naive_decode_err < 1e-12);
+            assert!((r.f_p - r.desired).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn square_off_by_cross_term() {
+        let r = &rows(3.0, 4.0)[1];
+        // F(P) = 49, desired 25; naive decode error = 2*x1*x2 = 24.
+        assert!((r.f_p - 49.0).abs() < 1e-12);
+        assert!((r.desired - 25.0).abs() < 1e-12);
+        assert!((r.naive_decode_err - 24.0).abs() < 1e-12);
+    }
+}

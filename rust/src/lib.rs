@@ -1,0 +1,25 @@
+//! # ParM: coding-based resilience for ML prediction serving
+//!
+//! A full-system reproduction of *"Parity Models: A General Framework for
+//! Coding-Based Resilience in ML Inference"* (Kosaian, Rashmi,
+//! Venkataraman, 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build time, Python)**: Pallas kernels + JAX models, trained
+//!   and AOT-lowered to HLO text by `python/compile/aot.py`;
+//! - **L3 (this crate)**: a Clipper-style prediction-serving coordinator
+//!   with ParM — encoder, parity models, decoder — as a first-class
+//!   redundancy scheme, running the AOT artifacts via PJRT with Python
+//!   never on the request path.
+//!
+//! Start at [`coordinator::service::Service`] for the serving loop, or
+//! [`experiments`] for the paper-figure harnesses.
+
+pub mod artifacts;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,221 @@
+//! `parm` CLI: the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   list                      — show artifact inventory
+//!   accuracy                  — degraded-mode accuracy for one config
+//!   serve                     — run the serving loop at a rate and report
+//!   table1                    — the toy coded-computation example
+//!
+//! Every paper figure has a dedicated bench (`cargo bench --bench …`);
+//! this binary is the interactive/manual entry point.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::experiments::{accuracy, latency, table1};
+use parm::util::cli::Cli;
+use parm::workload::QuerySource;
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest: Vec<String> = args.iter().skip(1).cloned().collect();
+    match cmd {
+        "list" => cmd_list(),
+        "accuracy" => cmd_accuracy(rest),
+        "serve" => cmd_serve(rest),
+        "experiment" => cmd_experiment(rest),
+        "table1" => cmd_table1(),
+        _ => {
+            println!(
+                "parm — Parity Models prediction serving\n\n\
+                 usage: parm <list|accuracy|serve|experiment|table1> [options]\n\
+                 run `parm <cmd> --help` for per-command options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let m = Manifest::load_default()?;
+    println!(
+        "artifacts at {} ({} models, {} datasets{})",
+        m.dir.display(),
+        m.models.len(),
+        m.datasets.len(),
+        if m.fast_mode { ", FAST build" } else { "" }
+    );
+    println!("\n{:<44} {:>6} {:>3} {:>8} {:>8}", "model", "role", "k", "enc", "metric");
+    for model in &m.models {
+        println!(
+            "{:<44} {:>6} {:>3} {:>8} {:>8.3}",
+            model.name, model.role, model.k, model.encoder, model.train_metric
+        );
+    }
+    println!("\ndatasets:");
+    for d in &m.datasets {
+        println!(
+            "  {:<16} {:<9} classes={:<4} shape={:?} n_test={}",
+            d.name, d.task, d.num_classes, d.input_shape, d.n_test
+        );
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("parm accuracy", "degraded-mode accuracy for one configuration")
+        .opt("dataset", "synthvision10", "dataset name")
+        .opt("arch", "microresnet", "architecture")
+        .opt("k", "2", "queries per coding group")
+        .opt("encoder", "sum", "encoder: sum | concat")
+        .opt("seed", "7", "stripe-sampling seed");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let m = Manifest::load_default()?;
+    let dep = m.deployed(a.get("dataset"), a.get("arch"))?;
+    let par = m.parity(a.get("dataset"), a.get("arch"), a.get_usize("k"), a.get("encoder"), 0)?;
+    let r = accuracy::evaluate(&m, dep, par, a.get_u64("seed"))?;
+    println!(
+        "{} / {} k={} enc={} ({} stripes, metric {})",
+        r.dataset, r.arch, r.k, r.encoder, r.n_stripes, r.metric
+    );
+    println!("  A_a (available)        = {:.4}", r.available);
+    println!("  A_d (ParM degraded)    = {:.4}", r.degraded);
+    println!("  A_d (default baseline) = {:.4}", r.default_baseline);
+    println!("  A_o at f_u=0.05        = {:.4}", r.overall(0.05));
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("parm serve", "run the serving loop and report latency")
+        .opt("mode", "parm", "parm | none | equal-resources | approx-backup | replication")
+        .opt("k", "2", "coding-group size")
+        .opt("cluster", "gpu", "hardware profile: gpu | cpu")
+        .opt("rate", "0", "query rate qps (0 = 60% utilization)")
+        .opt("queries", "20000", "number of queries")
+        .opt("batch", "1", "batch size")
+        .opt("shuffles", "4", "concurrent background shuffles")
+        .opt("seed", "49374", "rng seed")
+        .flag("tenancy", "enable light multitenancy instead of shuffles");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let m = Manifest::load_default()?;
+    let profile = hardware::by_name(a.get("cluster"))
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster {:?}", a.get("cluster")))?;
+    let k = a.get_usize("k");
+    let batch = a.get_usize("batch");
+    let with_approx = a.get("mode") == "approx-backup";
+    let models = latency::load_models(&m, batch, k, 1, with_approx)?;
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+
+    let mode = match a.get("mode") {
+        "parm" => Mode::Parm { k, encoders: vec![Encoder::sum(k)] },
+        "none" => Mode::NoRedundancy,
+        "equal-resources" => Mode::EqualResources { k },
+        "approx-backup" => Mode::ApproxBackup { k },
+        "replication" => Mode::Replication { copies: 2 },
+        other => anyhow::bail!("unknown mode {other:?}"),
+    };
+    let mut cfg = ServiceConfig::defaults(mode, profile);
+    cfg.batch_size = batch;
+    cfg.shuffles = if a.has_flag("tenancy") { 0 } else { a.get_usize("shuffles") };
+    cfg.light_tenancy = a.has_flag("tenancy");
+    cfg.seed = a.get_u64("seed");
+
+    let mut rate = a.get_f64("rate");
+    if rate == 0.0 {
+        let probe = parm::tensor::Tensor::batch(
+            &std::iter::repeat(source.queries[0].clone()).take(batch).collect::<Vec<_>>(),
+        )?;
+        let mean = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
+        rate = 0.6 * profile.default_m as f64 / mean.as_secs_f64();
+    }
+    let row = latency::run_point(&cfg, &models, &source, a.get_u64("queries"), rate, a.get("mode"))?;
+    println!("{}", parm::experiments::latency::LatencyRow::header());
+    println!("{}", row.line());
+    Ok(())
+}
+
+fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("parm experiment", "run a JSON-defined experiment config")
+        .req("config", "path to experiment config (see rust/src/config)");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let exp = parm::config::ExperimentConfig::from_file(a.get("config"))?;
+    let m = Manifest::load_default()?;
+    let (k, with_approx) = match &exp.service.mode {
+        Mode::Parm { k, .. } | Mode::EqualResources { k } => (*k, false),
+        Mode::ApproxBackup { k } => (*k, true),
+        _ => (2, false),
+    };
+    let r = match &exp.service.mode {
+        Mode::Parm { encoders, .. } => encoders.len(),
+        _ => 1,
+    };
+    let models = latency::load_models(&m, exp.service.batch_size, k, r, with_approx)?;
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+
+    let mut cfg = exp.service.clone();
+    cfg.fault_schedule = exp
+        .faults
+        .iter()
+        .map(|f| {
+            (
+                f.instance,
+                std::time::Duration::from_millis(f.at_ms),
+                std::time::Duration::from_millis(f.for_ms),
+            )
+        })
+        .collect();
+    let rate = if exp.rate_qps > 0.0 {
+        exp.rate_qps
+    } else {
+        let probe = parm::tensor::Tensor::batch(
+            &std::iter::repeat(source.queries[0].clone())
+                .take(cfg.batch_size)
+                .collect::<Vec<_>>(),
+        )?;
+        let mean = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
+        exp.utilization * cfg.m as f64 / mean.as_secs_f64()
+    };
+    let row = latency::run_point(&cfg, &models, &source, exp.queries, rate, cfg.mode.name())?;
+    println!("{}", parm::experiments::latency::LatencyRow::header());
+    println!("{}", row.line());
+    Ok(())
+}
+
+fn cmd_table1() -> anyhow::Result<()> {
+    println!("Table 1 toy example (X1=3, X2=4, P = X1+X2):");
+    println!("{:<12} {:>10} {:>12} {:>18}", "F", "F(P)", "desired", "naive decode err");
+    for r in table1::rows(3.0, 4.0) {
+        println!(
+            "{:<12} {:>10.2} {:>12.2} {:>18.2}",
+            r.f_name, r.f_p, r.desired, r.naive_decode_err
+        );
+    }
+    println!("\nnon-linear F breaks the plain addition code — the gap parity models close.");
+    Ok(())
+}

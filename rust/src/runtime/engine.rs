@@ -1,0 +1,184 @@
+//! PJRT engine: loads AOT HLO-text artifacts and executes them.
+//!
+//! One process-wide `PjRtClient` (CPU) compiles each artifact once into a
+//! `PjRtLoadedExecutable`; `Executable::run` then moves a query tensor in,
+//! executes, and copies the prediction out. This is the only place the
+//! request path touches XLA — everything above it deals in `Tensor`s.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): jax>=0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use once_cell::sync::OnceCell;
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("executable expects input shape {expected:?}, got {actual:?}")]
+    InputShape { expected: Vec<usize>, actual: Vec<usize> },
+    #[error("artifact {0} not found")]
+    NotFound(String),
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// Process-wide PJRT CPU client.
+///
+/// SAFETY: the `xla` crate wraps the client handle in an `Rc`, which makes
+/// it `!Send + !Sync` even though the underlying XLA `PjRtClient` (TFRT CPU)
+/// is documented thread-safe (`Compile`/`Execute` may be called from any
+/// thread). We never clone the inner `Rc` after construction — the wrapper
+/// lives in a `'static` OnceCell and is only ever *borrowed* by worker
+/// threads — so the non-atomic refcount is never mutated concurrently.
+/// `runtime_smoke` integration tests exercise concurrent execution.
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+static CLIENT: OnceCell<SharedClient> = OnceCell::new();
+
+pub fn client() -> Result<&'static xla::PjRtClient, EngineError> {
+    CLIENT
+        .get_or_try_init(|| xla::PjRtClient::cpu().map(SharedClient).map_err(EngineError::from))
+        .map(|c| &c.0)
+}
+
+/// A compiled model program: fixed input shape (batch, ...), one output.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Full input shape including the batch dim.
+    pub input_shape: Vec<usize>,
+    /// Output vector length per sample.
+    pub out_dim: usize,
+    /// Batch size baked into the program.
+    pub batch: usize,
+    pub name: String,
+}
+
+// SAFETY: `PjRtLoadedExecutable::Execute` is thread-safe in XLA; the Rust
+// wrapper is only `!Send` because of raw pointers and the `Rc` back to the
+// client. We share `Executable` via `Arc` (so the inner `Rc` count is
+// mutated only at construction and final drop, both single-threaded) and
+// call `execute` concurrently, which XLA supports. Exercised by the
+// `runtime_smoke` concurrent-execution test.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Compile an HLO-text artifact.
+    pub fn load(
+        path: impl AsRef<Path>,
+        name: &str,
+        input_shape: &[usize],
+        batch: usize,
+        out_dim: usize,
+    ) -> Result<Arc<Executable>, EngineError> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(EngineError::NotFound(path.display().to_string()));
+        }
+        let client = client()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("non-utf8 artifact path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let mut full_shape = vec![batch];
+        full_shape.extend_from_slice(input_shape);
+        log::debug!("compiled {name} from {} (batch {batch})", path.display());
+        Ok(Arc::new(Executable {
+            exe,
+            input_shape: full_shape,
+            out_dim,
+            batch,
+            name: name.to_string(),
+        }))
+    }
+
+    /// Execute on one batched input tensor; returns (batch, out_dim).
+    pub fn run(&self, input: &Tensor) -> Result<Tensor, EngineError> {
+        if input.shape() != self.input_shape.as_slice() {
+            return Err(EngineError::InputShape {
+                expected: self.input_shape.clone(),
+                actual: input.shape().to_vec(),
+            });
+        }
+        // Single-copy literal creation (vec1 + reshape would copy twice —
+        // measured ~2x input-marshalling cost on the 64x64x3 workload;
+        // see EXPERIMENTS.md §Perf).
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                input.data().as_ptr() as *const u8,
+                input.data().len() * std::mem::size_of::<f32>(),
+            )
+        };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            input.shape(),
+            bytes,
+        )?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        Tensor::new(vec![self.batch, self.out_dim], data)
+            .map_err(|e| EngineError::Xla(e.to_string()))
+    }
+
+    /// Execute and return the flat output regardless of declared out_dim
+    /// (used by non-model programs such as the exported encoder kernel,
+    /// whose output is a query tensor rather than (batch, out_dim)).
+    pub fn run_raw(&self, input: &Tensor) -> Result<Tensor, EngineError> {
+        if input.shape() != self.input_shape.as_slice() {
+            return Err(EngineError::InputShape {
+                expected: self.input_shape.clone(),
+                actual: input.shape().to_vec(),
+            });
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                input.data().as_ptr() as *const u8,
+                input.data().len() * std::mem::size_of::<f32>(),
+            )
+        };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            input.shape(),
+            bytes,
+        )?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        let n = data.len();
+        Tensor::new(vec![n], data).map_err(|e| EngineError::Xla(e.to_string()))
+    }
+
+    /// Execute on a single sample (pads/errors if batch != 1).
+    pub fn run_one(&self, sample: &Tensor) -> Result<Tensor, EngineError> {
+        let batched = Tensor::batch(std::slice::from_ref(sample))
+            .map_err(|e| EngineError::Xla(e.to_string()))?;
+        let out = self.run(&batched)?;
+        Ok(out.unbatch().into_iter().next().unwrap())
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable")
+            .field("name", &self.name)
+            .field("input_shape", &self.input_shape)
+            .field("out_dim", &self.out_dim)
+            .finish()
+    }
+}

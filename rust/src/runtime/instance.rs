@@ -1,0 +1,278 @@
+//! Model-instance worker: one OS thread per simulated cluster instance.
+//!
+//! Each worker owns a compiled PJRT executable (its copy of the deployed
+//! or parity model) and loops: pull a job from its queue (the shared
+//! single queue, or a private queue under round-robin), simulate the
+//! network transfer of the query under current link contention, run real
+//! inference, apply the hardware profile's residual and any tenancy
+//! slowdown, then send a completion back to the frontend.
+//!
+//! The *real* PJRT execution is always on the path — injected delays only
+//! add to it — so the latency distributions inherit genuine execution
+//! jitter rather than being fully synthetic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::faults::FaultPlan;
+use crate::cluster::hardware::Profile;
+use crate::cluster::network::Network;
+use crate::cluster::tenancy::Tenancy;
+use crate::cluster::{precise_sleep, scaled};
+use crate::runtime::engine::Executable;
+use crate::tensor::Tensor;
+use crate::util::queue::Queue;
+use crate::util::rng::Pcg64;
+
+/// What a dispatched batch is for (drives the completion routing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// A batch of k consecutive query batches' worth of real queries.
+    Data { group: u64, slot: usize },
+    /// The parity batch of a coding group (slot = r_index).
+    Parity { group: u64, r_index: usize },
+    /// Replicated query batch (replication / approx-backup baselines).
+    Replica { group: u64, slot: usize },
+    /// Co-located tenant work (never routed back to clients).
+    Background,
+}
+
+#[derive(Debug)]
+pub struct Job {
+    pub kind: JobKind,
+    pub input: Tensor,
+    /// Ids of the client queries in this batch (empty for background).
+    pub query_ids: Vec<u64>,
+    pub dispatched_at: Instant,
+}
+
+#[derive(Debug)]
+pub struct Completion {
+    pub kind: JobKind,
+    pub instance: usize,
+    pub query_ids: Vec<u64>,
+    pub output: Tensor,
+    pub finished_at: Instant,
+    /// Pure PJRT execution time (for §Perf accounting).
+    pub exec_time: Duration,
+}
+
+/// Knobs shared by all workers of a pool.
+pub struct WorkerEnv {
+    pub profile: &'static Profile,
+    pub network: Arc<Network>,
+    pub tenancy: Tenancy,
+    pub faults: Arc<FaultPlan>,
+    /// Multiplier on injected (non-PJRT) delays; < 1 compresses time.
+    pub time_scale: f64,
+    /// Extra head-of-line delay per active background flow, as a fraction
+    /// of mean service time, sampled uniformly in [lo, hi] per query.
+    /// Models transport-level interference beyond fair-share bandwidth
+    /// (see DESIGN.md "Substitutions").
+    pub hol_range: (f64, f64),
+    /// Mean uncontended service time, measured at pool startup.
+    pub mean_service: Duration,
+}
+
+/// How workers produce predictions.
+///
+/// `Real` executes the PJRT program per query — ground truth, but on a
+/// host with fewer cores than instances the instances contend for the
+/// PJRT pool and the "cluster" stops being parallel (a 1-core CI image
+/// serializes everything, so ParM's parity work would steal CPU from the
+/// deployed pool — the opposite of the paper's extra-machines premise).
+///
+/// `Modeled` replays service times *measured from the real executable* at
+/// startup (an empirical distribution, sampled per query and slept), with
+/// a template output tensor from a real execution. Sleeps are truly
+/// parallel on any host, so m instances behave like m servers. Latency
+/// experiments default to Modeled; accuracy experiments and the
+/// quickstart/localization examples always run Real inference.
+#[derive(Clone)]
+pub enum Execution {
+    Real,
+    Modeled(Arc<ServiceModel>),
+}
+
+/// Empirical service-time distribution + template output for one model.
+pub struct ServiceModel {
+    /// Measured per-execution times (seconds), sampled uniformly.
+    pub samples: Vec<f64>,
+    /// A real output of the executable (values irrelevant to timing paths).
+    pub template_output: Tensor,
+}
+
+impl ServiceModel {
+    /// Calibrate from real executions.
+    pub fn measure(exe: &Executable, probe: &Tensor, n: usize) -> Result<ServiceModel, crate::runtime::engine::EngineError> {
+        let mut samples = Vec::with_capacity(n);
+        let mut out = None;
+        for _ in 0..3 {
+            let _ = exe.run(probe)?;
+        }
+        for _ in 0..n {
+            let t0 = Instant::now();
+            let o = exe.run(probe)?;
+            samples.push(t0.elapsed().as_secs_f64());
+            out.get_or_insert(o);
+        }
+        Ok(ServiceModel { samples, template_output: out.unwrap() })
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> Duration {
+        Duration::from_secs_f64(self.samples[rng.below(self.samples.len() as u64) as usize])
+    }
+}
+
+pub struct InstanceWorker {
+    pub id: usize,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Run inference per the execution mode: real PJRT, or calibrated sleep.
+fn execute(
+    exe: &Executable,
+    execution: &Execution,
+    input: &Tensor,
+    rng: &mut Pcg64,
+    time_scale: f64,
+) -> Result<(Tensor, Duration), crate::runtime::engine::EngineError> {
+    match execution {
+        Execution::Real => {
+            let t0 = Instant::now();
+            let out = exe.run(input)?;
+            Ok((out, t0.elapsed()))
+        }
+        Execution::Modeled(model) => {
+            let d = model.sample(rng);
+            precise_sleep(scaled(d, time_scale));
+            Ok((model.template_output.clone(), d))
+        }
+    }
+}
+
+/// Count of jobs dropped because the instance was failed (observability).
+pub static DROPPED_JOBS: AtomicU64 = AtomicU64::new(0);
+
+impl InstanceWorker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        id: usize,
+        exe: Arc<Executable>,
+        execution: Execution,
+        queue: Queue<Job>,
+        completions: Sender<Completion>,
+        env: Arc<WorkerEnv>,
+        seed: u64,
+    ) -> InstanceWorker {
+        let handle = std::thread::Builder::new()
+            .name(format!("instance-{id}"))
+            .spawn(move || worker_loop(id, exe, execution, queue, completions, env, seed))
+            .expect("spawn instance worker");
+        InstanceWorker { id, handle: Some(handle) }
+    }
+
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    id: usize,
+    exe: Arc<Executable>,
+    execution: Execution,
+    queue: Queue<Job>,
+    completions: Sender<Completion>,
+    env: Arc<WorkerEnv>,
+    seed: u64,
+) {
+    let mut rng = Pcg64::new(seed ^ (id as u64) << 32);
+    // Tenancy: schedule the co-located tenant's next arrival.
+    let mut next_bg: Option<Instant> = if env.tenancy.enabled() && env.tenancy.is_tenant(id) {
+        Some(Instant::now() + Duration::from_secs_f64(rng.exponential(env.tenancy.bg_rate)))
+    } else {
+        None
+    };
+
+    while let Some(job) = queue.pop() {
+        // Failed instances are zombies: they keep accepting work at their
+        // normal pace (an undetected dead backend in a push-RPC system)
+        // but never respond — the limiting case of slowness. Pacing the
+        // drops keeps a dead instance from draining the shared queue.
+        if env.faults.is_failed(id) {
+            DROPPED_JOBS.fetch_add(1, Ordering::Relaxed);
+            precise_sleep(scaled(env.mean_service, env.time_scale));
+            continue;
+        }
+
+        // ---- network: query transfer under current link contention ----
+        let bytes = job.input.len() * 4;
+        let base = env.profile.transfer_time(bytes);
+        let contended = env.network.transfer_time(id, bytes);
+        let flows = env.network.active_flows(id);
+        let mut delay = contended.max(base) + env.profile.dispatch_overhead;
+        if flows > 0 && rng.next_f64() < 0.25 {
+            // Head-of-line blocking behind shuffle bursts. Bursty by
+            // nature: only a fraction of queries on a contended link land
+            // behind a burst, so medians stay clean while the tail
+            // inflates — the paper's Figure 11 shape.
+            let (lo, hi) = env.hol_range;
+            let frac = rng.range_f64(lo, hi) * flows as f64;
+            delay += Duration::from_secs_f64(env.mean_service.as_secs_f64() * frac);
+        }
+        precise_sleep(scaled(delay, env.time_scale));
+
+        // ---- co-located tenant work that arrived while we were away ----
+        if let Some(due) = next_bg {
+            let now = Instant::now();
+            if now >= due {
+                // Run the tenant's job first (it shares our accelerator).
+                precise_sleep(scaled(env.tenancy.bg_service, env.time_scale));
+                next_bg = Some(
+                    now + Duration::from_secs_f64(rng.exponential(env.tenancy.bg_rate)),
+                );
+            }
+        }
+
+        // ---- inference (real PJRT or calibrated service-time model) ----
+        let (output, exec_time) =
+            match execute(&exe, &execution, &job.input, &mut rng, env.time_scale) {
+                Ok(pair) => pair,
+                Err(e) => {
+                    log::error!("instance {id}: exec failed: {e}");
+                    continue;
+                }
+            };
+
+        // ---- hardware profile residual + tenant contention ----
+        let mut residual = env.profile.residual(exec_time);
+        if next_bg.is_some() && env.tenancy.slowdown > 1.0 && rng.next_f64() < 0.5 {
+            // Probabilistic overlap with tenant activity.
+            residual += Duration::from_secs_f64(
+                exec_time.as_secs_f64() * (env.tenancy.slowdown - 1.0),
+            );
+        }
+        precise_sleep(scaled(residual, env.time_scale));
+
+        let done = Completion {
+            kind: job.kind,
+            instance: id,
+            query_ids: job.query_ids,
+            output,
+            finished_at: Instant::now(),
+            exec_time,
+        };
+        if completions.send(done).is_err() {
+            return; // frontend gone; shut down
+        }
+    }
+}

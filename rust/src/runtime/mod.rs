@@ -1,0 +1,6 @@
+//! Runtime layer: PJRT engine (AOT artifact loading + execution) and the
+//! simulated-cluster worker/pool model built on top of it.
+
+pub mod engine;
+pub mod instance;
+pub mod pool;

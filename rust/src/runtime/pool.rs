@@ -1,0 +1,115 @@
+//! Instance pools: groups of workers sharing a load-balancing strategy.
+//!
+//! A `Pool` owns the queue(s) feeding a set of instance workers that all
+//! serve the same executable — the paper's "m instances of the deployed
+//! model" and "m/k instances of the parity model" are two pools. The
+//! single-queue strategy is the paper's default (optimal for mean response
+//! time [37]); round-robin is provided for the §5.1 comparison note.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::runtime::engine::Executable;
+use crate::runtime::instance::{Completion, Execution, InstanceWorker, Job, WorkerEnv};
+use crate::util::queue::Queue;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Balancing {
+    /// One shared queue; idle instances pull (paper default).
+    SingleQueue,
+    /// Per-instance queues; dispatcher assigns cyclically.
+    RoundRobin,
+}
+
+pub struct Pool {
+    pub name: String,
+    balancing: Balancing,
+    /// SingleQueue: one entry; RoundRobin: one per instance.
+    queues: Vec<Queue<Job>>,
+    workers: Vec<InstanceWorker>,
+    rr_next: std::sync::atomic::AtomicUsize,
+    /// Global instance ids (indices into the cluster-wide Network/FaultPlan).
+    pub instance_ids: Vec<usize>,
+}
+
+impl Pool {
+    /// Spawn `instance_ids.len()` workers for `exe`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        name: &str,
+        exe: Arc<Executable>,
+        execution: Execution,
+        instance_ids: Vec<usize>,
+        balancing: Balancing,
+        completions: Sender<Completion>,
+        env: Arc<WorkerEnv>,
+        seed: u64,
+    ) -> Pool {
+        let queues: Vec<Queue<Job>> = match balancing {
+            Balancing::SingleQueue => vec![Queue::new()],
+            Balancing::RoundRobin => instance_ids.iter().map(|_| Queue::new()).collect(),
+        };
+        let workers = instance_ids
+            .iter()
+            .enumerate()
+            .map(|(i, &gid)| {
+                let q = match balancing {
+                    Balancing::SingleQueue => queues[0].clone(),
+                    Balancing::RoundRobin => queues[i].clone(),
+                };
+                InstanceWorker::spawn(
+                    gid,
+                    exe.clone(),
+                    execution.clone(),
+                    q,
+                    completions.clone(),
+                    env.clone(),
+                    seed,
+                )
+            })
+            .collect();
+        Pool {
+            name: name.to_string(),
+            balancing,
+            queues,
+            workers,
+            rr_next: std::sync::atomic::AtomicUsize::new(0),
+            instance_ids,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Dispatch a job according to the balancing strategy.
+    pub fn dispatch(&self, job: Job) {
+        match self.balancing {
+            Balancing::SingleQueue => {
+                let _ = self.queues[0].push(job);
+            }
+            Balancing::RoundRobin => {
+                let i = self
+                    .rr_next
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+                    % self.queues.len();
+                let _ = self.queues[i].push(job);
+            }
+        }
+    }
+
+    /// Total queued (not yet started) jobs — backpressure signal.
+    pub fn backlog(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Close queues and join all workers.
+    pub fn shutdown(self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers {
+            w.join();
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Row-major f32 tensor used on the request path.
+//!
+//! Deliberately minimal: queries and predictions are dense f32 arrays, and
+//! the only math the coordinator does on them is the ParM encoder (adds,
+//! scales, area-downsampling, tiling) and decoder (subtraction) — everything
+//! else happens inside the PJRT executables. Hot-path ops are written as
+//! straight contiguous-slice loops that LLVM auto-vectorizes.
+
+pub mod ops;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements, got {actual}")]
+    ShapeMismatch { shape: Vec<usize>, expected: usize, actual: usize },
+    #[error("incompatible shapes: {0:?} vs {1:?}")]
+    Incompatible(Vec<usize>, Vec<usize>),
+    #[error("invalid {op}: {msg}")]
+    Invalid { op: &'static str, msg: String },
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape,
+                expected,
+                actual: data.len(),
+            });
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn filled(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self, TensorError> {
+        let expected: usize = shape.iter().product();
+        if expected != self.data.len() {
+            return Err(TensorError::ShapeMismatch {
+                shape,
+                expected,
+                actual: self.data.len(),
+            });
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Split a batched tensor (leading dim = batch) into per-sample tensors.
+    pub fn unbatch(&self) -> Vec<Tensor> {
+        assert!(!self.shape.is_empty(), "unbatch of scalar");
+        let b = self.shape[0];
+        let inner: Vec<usize> = self.shape[1..].to_vec();
+        let stride: usize = inner.iter().product();
+        (0..b)
+            .map(|i| Tensor {
+                shape: inner.clone(),
+                data: self.data[i * stride..(i + 1) * stride].to_vec(),
+            })
+            .collect()
+    }
+
+    /// Stack per-sample tensors into a batch (leading dim = len).
+    pub fn batch(samples: &[Tensor]) -> Result<Tensor, TensorError> {
+        assert!(!samples.is_empty());
+        let inner = samples[0].shape.clone();
+        let mut data = Vec::with_capacity(samples.len() * samples[0].len());
+        for s in samples {
+            if s.shape != inner {
+                return Err(TensorError::Incompatible(inner, s.shape.clone()));
+            }
+            data.extend_from_slice(&s.data);
+        }
+        let mut shape = vec![samples.len()];
+        shape.extend_from_slice(&inner);
+        Ok(Tensor { shape, data })
+    }
+
+    /// Index of the maximum element (argmax over the flat data).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Indices of the top-n elements, descending.
+    pub fn top_n(&self, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.data.len()).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            self.data[b].partial_cmp(&self.data[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(n);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn batch_unbatch_roundtrip() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let batched = Tensor::batch(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(batched.shape(), &[2, 2, 2]);
+        let back = batched.unbatch();
+        assert_eq!(back, vec![a, b]);
+    }
+
+    #[test]
+    fn batch_rejects_mixed_shapes() {
+        let a = Tensor::zeros(vec![2]);
+        let b = Tensor::zeros(vec![3]);
+        assert!(Tensor::batch(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn argmax_and_topn() {
+        let t = Tensor::new(vec![5], vec![0.1, 0.9, 0.3, 0.9, 0.05]).unwrap();
+        assert_eq!(t.argmax(), 1);
+        assert_eq!(t.top_n(3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn reshape() {
+        let t = Tensor::zeros(vec![2, 6]);
+        let t = t.reshape(vec![3, 4]).unwrap();
+        assert_eq!(t.shape(), &[3, 4]);
+        assert!(t.reshape(vec![5]).is_err());
+    }
+}

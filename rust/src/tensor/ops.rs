@@ -1,0 +1,246 @@
+//! Hot-path tensor ops for the ParM encoder/decoder.
+//!
+//! These run on the frontend for every coding group, so they are written as
+//! contiguous-slice loops (auto-vectorized by LLVM) with no per-element
+//! bounds checks in the inner loops. Semantics are pinned to the Python
+//! build-time encoders (`python/compile/encoders.py`) by unit tests and by
+//! the end-to-end accuracy experiments (a semantic mismatch between the two
+//! sides would destroy reconstruction accuracy, which the experiments would
+//! surface immediately).
+
+use super::{Tensor, TensorError};
+
+/// `acc += x` elementwise.
+pub fn add_assign(acc: &mut Tensor, x: &Tensor) -> Result<(), TensorError> {
+    if acc.shape() != x.shape() {
+        return Err(TensorError::Incompatible(
+            acc.shape().to_vec(),
+            x.shape().to_vec(),
+        ));
+    }
+    let a = acc.data_mut();
+    let b = x.data();
+    for i in 0..a.len() {
+        a[i] += b[i];
+    }
+    Ok(())
+}
+
+/// `acc += w * x` elementwise (r > 1 parity weights).
+pub fn add_scaled_assign(acc: &mut Tensor, x: &Tensor, w: f32) -> Result<(), TensorError> {
+    if acc.shape() != x.shape() {
+        return Err(TensorError::Incompatible(
+            acc.shape().to_vec(),
+            x.shape().to_vec(),
+        ));
+    }
+    let a = acc.data_mut();
+    let b = x.data();
+    for i in 0..a.len() {
+        a[i] += w * b[i];
+    }
+    Ok(())
+}
+
+/// `acc -= x` elementwise (the subtraction decoder).
+pub fn sub_assign(acc: &mut Tensor, x: &Tensor) -> Result<(), TensorError> {
+    if acc.shape() != x.shape() {
+        return Err(TensorError::Incompatible(
+            acc.shape().to_vec(),
+            x.shape().to_vec(),
+        ));
+    }
+    let a = acc.data_mut();
+    let b = x.data();
+    for i in 0..a.len() {
+        a[i] -= b[i];
+    }
+    Ok(())
+}
+
+/// Weighted sum of equal-shaped tensors: `sum_i w_i * xs[i]`.
+pub fn weighted_sum(xs: &[&Tensor], weights: &[f32]) -> Result<Tensor, TensorError> {
+    assert_eq!(xs.len(), weights.len());
+    assert!(!xs.is_empty());
+    let mut acc = Tensor::zeros(xs[0].shape().to_vec());
+    for (x, &w) in xs.iter().zip(weights) {
+        add_scaled_assign(&mut acc, x, w)?;
+    }
+    Ok(acc)
+}
+
+/// Area-average downsample of an (H, W, C) tensor by integer factors.
+/// Matches `python/compile/encoders.py::downsample_np` exactly.
+pub fn resize_area(x: &Tensor, out_h: usize, out_w: usize) -> Result<Tensor, TensorError> {
+    let s = x.shape();
+    if s.len() != 3 {
+        return Err(TensorError::Invalid {
+            op: "resize_area",
+            msg: format!("need (H, W, C), got {s:?}"),
+        });
+    }
+    let (h, w, c) = (s[0], s[1], s[2]);
+    if out_h == 0 || out_w == 0 || h % out_h != 0 || w % out_w != 0 {
+        return Err(TensorError::Invalid {
+            op: "resize_area",
+            msg: format!("{h}x{w} not divisible into {out_h}x{out_w}"),
+        });
+    }
+    let (fh, fw) = (h / out_h, w / out_w);
+    let scale = 1.0 / (fh * fw) as f32;
+    let src = x.data();
+    let mut out = vec![0.0f32; out_h * out_w * c];
+    for oy in 0..out_h {
+        for ox in 0..out_w {
+            let obase = (oy * out_w + ox) * c;
+            for iy in 0..fh {
+                let row = ((oy * fh + iy) * w + ox * fw) * c;
+                for ix in 0..fw {
+                    let ibase = row + ix * c;
+                    for ch in 0..c {
+                        out[obase + ch] += src[ibase + ch];
+                    }
+                }
+            }
+        }
+    }
+    for v in &mut out {
+        *v *= scale;
+    }
+    Tensor::new(vec![out_h, out_w, c], out)
+}
+
+/// Concatenate (H, W, C) tensors vertically (axis 0).
+pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor, TensorError> {
+    assert!(!parts.is_empty());
+    let s0 = parts[0].shape().to_vec();
+    let mut total_h = 0;
+    for p in parts {
+        let s = p.shape();
+        if s.len() != 3 || s[1] != s0[1] || s[2] != s0[2] {
+            return Err(TensorError::Incompatible(s0, s.to_vec()));
+        }
+        total_h += s[0];
+    }
+    let mut data = Vec::with_capacity(total_h * s0[1] * s0[2]);
+    for p in parts {
+        data.extend_from_slice(p.data());
+    }
+    Tensor::new(vec![total_h, s0[1], s0[2]], data)
+}
+
+/// Concatenate (H, W, C) tensors horizontally (axis 1). All must share H, C.
+pub fn concat_cols(parts: &[Tensor]) -> Result<Tensor, TensorError> {
+    assert!(!parts.is_empty());
+    let s0 = parts[0].shape().to_vec();
+    let h = s0[0];
+    let c = s0[2];
+    let mut total_w = 0;
+    for p in parts {
+        let s = p.shape();
+        if s.len() != 3 || s[0] != h || s[2] != c {
+            return Err(TensorError::Incompatible(s0, s.to_vec()));
+        }
+        total_w += s[1];
+    }
+    let mut data = vec![0.0f32; h * total_w * c];
+    for y in 0..h {
+        let mut xoff = 0;
+        for p in parts {
+            let pw = p.shape()[1];
+            let src = &p.data()[y * pw * c..(y + 1) * pw * c];
+            let dst = &mut data[(y * total_w + xoff) * c..(y * total_w + xoff + pw) * c];
+            dst.copy_from_slice(src);
+            xoff += pw;
+        }
+    }
+    Tensor::new(vec![h, total_w, c], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: &[f32]) -> Tensor {
+        Tensor::new(shape.to_vec(), data.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut acc = t(&[4], &[1., 2., 3., 4.]);
+        let x = t(&[4], &[0.5, 0.5, 0.5, 0.5]);
+        add_assign(&mut acc, &x).unwrap();
+        assert_eq!(acc.data(), &[1.5, 2.5, 3.5, 4.5]);
+        sub_assign(&mut acc, &x).unwrap();
+        assert_eq!(acc.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut acc = Tensor::zeros(vec![3]);
+        let x = Tensor::zeros(vec![4]);
+        assert!(add_assign(&mut acc, &x).is_err());
+        assert!(sub_assign(&mut acc, &x).is_err());
+    }
+
+    #[test]
+    fn weighted_sum_r2_weights() {
+        let a = t(&[2], &[1., 2.]);
+        let b = t(&[2], &[10., 20.]);
+        let s = weighted_sum(&[&a, &b], &[1.0, 2.0]).unwrap();
+        assert_eq!(s.data(), &[21., 42.]);
+    }
+
+    #[test]
+    fn resize_area_2x() {
+        // 2x2 -> 1x1 average, single channel.
+        let x = t(&[2, 2, 1], &[1., 2., 3., 4.]);
+        let y = resize_area(&x, 1, 1).unwrap();
+        assert_eq!(y.data(), &[2.5]);
+        // 4x4 -> 2x2, values laid out so each quadrant is constant.
+        let mut data = vec![0.0; 16];
+        for y_ in 0..4 {
+            for x_ in 0..4 {
+                data[y_ * 4 + x_] = ((y_ / 2) * 2 + x_ / 2) as f32;
+            }
+        }
+        let x = t(&[4, 4, 1], &data);
+        let y = resize_area(&x, 2, 2).unwrap();
+        assert_eq!(y.data(), &[0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn resize_area_multichannel_independent() {
+        // 2 channels interleaved: averages must not mix channels.
+        let x = t(&[2, 2, 2], &[1., 10., 2., 20., 3., 30., 4., 40.]);
+        let y = resize_area(&x, 1, 1).unwrap();
+        assert_eq!(y.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn resize_rejects_non_divisible() {
+        let x = Tensor::zeros(vec![5, 4, 1]);
+        assert!(resize_area(&x, 2, 2).is_err());
+    }
+
+    #[test]
+    fn concat_rows_and_cols() {
+        let a = t(&[1, 2, 1], &[1., 2.]);
+        let b = t(&[1, 2, 1], &[3., 4.]);
+        let v = concat_rows(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(v.shape(), &[2, 2, 1]);
+        assert_eq!(v.data(), &[1., 2., 3., 4.]);
+        let h = concat_cols(&[a, b]).unwrap();
+        assert_eq!(h.shape(), &[1, 4, 1]);
+        assert_eq!(h.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn concat_cols_interleaves_rows() {
+        let a = t(&[2, 1, 1], &[1., 3.]);
+        let b = t(&[2, 1, 1], &[2., 4.]);
+        let h = concat_cols(&[a, b]).unwrap();
+        assert_eq!(h.shape(), &[2, 2, 1]);
+        assert_eq!(h.data(), &[1., 2., 3., 4.]);
+    }
+}

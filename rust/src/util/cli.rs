@@ -1,0 +1,230 @@
+//! Tiny argument-parsing substrate (clap is not in the build image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each experiment binary declares its options up front so `--help` output
+//! is uniform across the CLI, benches, and examples.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+    #[error("help requested")]
+    Help,
+}
+
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self { program, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, default: Some(default), help, is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, default: None, help, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, default: None, help, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let d = match (spec.is_flag, spec.default) {
+                (true, _) => String::new(),
+                (false, Some(d)) => format!(" [default: {d}]"),
+                (false, None) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s.push_str("  --help               show this message\n");
+        s
+    }
+
+    /// Parse an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.is_flag {
+                    args.flags.push(name);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        // Fill defaults.
+        for spec in &self.specs {
+            if !spec.is_flag && !args.values.contains_key(spec.name) {
+                if let Some(d) = spec.default {
+                    args.values.insert(spec.name.to_string(), d.to_string());
+                } else {
+                    return Err(CliError::MissingValue(spec.name.to_string()));
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args(); print usage and exit on --help or error.
+    pub fn parse_env(&self) -> Args {
+        match self.parse(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(CliError::Help) => {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: {e}"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list, e.g. `--ks 2,3,4`.
+    pub fn get_list_usize(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn get_list_f64(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("--{name}: {e}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rate", "100", "query rate")
+            .opt("ks", "2,3,4", "k values")
+            .req("model", "model name")
+            .flag("verbose", "more output")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, CliError> {
+        cli().parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&["--model", "m1"]).unwrap();
+        assert_eq!(a.get("rate"), "100");
+        let a = parse(&["--model", "m1", "--rate=250"]).unwrap();
+        assert_eq!(a.get_usize("rate"), 250);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["--model", "m", "--verbose", "pos1"]).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(!parse(&["--model", "m"]).unwrap().has_flag("verbose"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--model", "m", "--ks", "2, 3,4"]).unwrap();
+        assert_eq!(a.get_list_usize("ks"), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(parse(&[]), Err(CliError::MissingValue(_))));
+        assert!(matches!(parse(&["--bogus", "1"]), Err(CliError::Unknown(_))));
+        assert!(matches!(parse(&["--model"]), Err(CliError::MissingValue(_))));
+        assert!(matches!(parse(&["--help"]), Err(CliError::Help)));
+    }
+}

@@ -1,0 +1,63 @@
+//! Stderr logger wired to the `log` facade. Level via `PARM_LOG`
+//! (error|warn|info|debug|trace); defaults to `info`.
+
+use std::io::Write;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+
+struct StderrLogger {
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Safe to call multiple times (subsequent calls no-op).
+pub fn init() {
+    let _ = START.set(Instant::now());
+    let level = match std::env::var("PARM_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { level }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::Trace);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_twice_is_fine() {
+        super::init();
+        super::init();
+        log::info!("logging test line");
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch substrates the build image lacks crates for: PRNG, JSON,
+//! latency statistics, CLI parsing, and logging.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod queue;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,188 @@
+//! Blocking MPMC queue substrate (crossbeam-channel is not in the build
+//! image; std::sync::mpsc receivers cannot be shared).
+//!
+//! This is the paper's "single queue" (§5.1 Load balancing): the frontend
+//! pushes query batches, idle model instances pop them. Also used for the
+//! parity queue and the completion stream. Mutex + Condvar is entirely
+//! adequate at prediction-serving rates (thousands of ops/sec against
+//! millisecond-scale service times).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Shared handle: clone freely across producers and consumers.
+pub struct Queue<T>(Arc<Inner<T>>);
+
+impl<T> Clone for Queue<T> {
+    fn clone(&self) -> Self {
+        Queue(self.0.clone())
+    }
+}
+
+impl<T> Default for Queue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Queue<T> {
+    pub fn new() -> Self {
+        Queue(Arc::new(Inner {
+            q: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }))
+    }
+
+    /// Push an item. Returns Err(item) if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.0.q.lock().unwrap();
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.0.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.0.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with a timeout; None on timeout or closed-and-drained.
+    pub fn pop_timeout(&self, dur: Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, res) = self.0.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+            if res.timed_out() && st.items.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    pub fn try_pop(&self) -> Option<T> {
+        self.0.q.lock().unwrap().items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: wakes all blocked consumers; further pushes fail.
+    pub fn close(&self) {
+        self.0.q.lock().unwrap().closed = true;
+        self.0.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.0.q.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let q = Queue::new();
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Queue::new();
+        q.push(1).unwrap();
+        q.close();
+        assert!(q.push(2).is_err());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn multi_consumer_receives_all() {
+        let q: Queue<u32> = Queue::new();
+        let n = 1000u32;
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let qc = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = qc.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for i in 0..n {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: Queue<u32> = Queue::new();
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(20)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q: Queue<u32> = Queue::new();
+        let qc = q.clone();
+        let h = std::thread::spawn(move || qc.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(7).unwrap();
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+}

@@ -1,0 +1,216 @@
+//! Latency statistics substrate: exact percentile summaries and the
+//! fixed-duration sampling harness used by `rust/benches/*` (criterion is
+//! not in the build image).
+
+use std::time::{Duration, Instant};
+
+/// Collects raw samples; computes exact order-statistics on demand.
+/// The paper reports median and 99.9th percentile over 100k queries —
+/// at that scale exact sorting is cheap and avoids sketch error.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { samples: Vec::with_capacity(n), sorted: false }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64() * 1e3); // milliseconds
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile via nearest-rank (p in [0, 100]).
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "percentile of empty summary");
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        self.samples[rank.clamp(1, n) - 1]
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn p999(&mut self) -> f64 {
+        self.percentile(99.9)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples[0]
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    /// One-line report: `n=… mean=… p50=… p99=… p99.9=… max=…` (ms units by
+    /// convention when filled via `record_duration`).
+    pub fn report(&mut self, label: &str) -> String {
+        if self.is_empty() {
+            return format!("{label}: (no samples)");
+        }
+        format!(
+            "{label}: n={} mean={:.3} p50={:.3} p99={:.3} p99.9={:.3} max={:.3}",
+            self.len(),
+            self.mean(),
+            self.median(),
+            self.p99(),
+            self.p999(),
+            self.max()
+        )
+    }
+}
+
+/// Micro-benchmark harness: warm up, then sample `f` for at least
+/// `min_duration` and `min_iters`, reporting per-iteration latency stats.
+pub fn bench<F: FnMut()>(
+    label: &str,
+    warmup: usize,
+    min_iters: usize,
+    min_duration: Duration,
+    mut f: F,
+) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::with_capacity(min_iters);
+    let start = Instant::now();
+    let mut iters = 0usize;
+    while iters < min_iters || start.elapsed() < min_duration {
+        let t = Instant::now();
+        f();
+        s.record(t.elapsed().as_secs_f64() * 1e3);
+        iters += 1;
+        if iters >= 10_000_000 {
+            break;
+        }
+    }
+    log::debug!("{}", s.clone().report(label));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact_on_known_data() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.median(), 50.0);
+        assert_eq!(s.percentile(99.0), 99.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert_eq!(s.percentile(1.0), 1.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn p999_picks_tail() {
+        let mut s = Summary::new();
+        for _ in 0..999 {
+            s.record(1.0);
+        }
+        s.record(100.0);
+        assert_eq!(s.p999(), 100.0);
+        assert_eq!(s.median(), 1.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Summary::new();
+        s.record(3.5);
+        assert_eq!(s.median(), 3.5);
+        assert_eq!(s.p999(), 3.5);
+        assert_eq!(s.mean(), 3.5);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        a.record(1.0);
+        b.record(3.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.max(), 3.0);
+    }
+
+    #[test]
+    fn mean_std() {
+        let mut s = Summary::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(v);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std_dev() - 2.138_089_935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let s = bench("noop", 2, 10, Duration::from_millis(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.len() >= 10);
+    }
+}

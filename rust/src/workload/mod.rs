@@ -1,0 +1,89 @@
+//! Workload generation: query sources and open-loop arrival schedules.
+//!
+//! The paper's clients send 100k queries at Poisson arrival rates (§5.1).
+//! [`QuerySource`] cycles a dataset's test split (the latency experiments
+//! draw from the Cat-v-Dog stand-in); arrival pacing itself lives in the
+//! service generator loop (`coordinator::service`), which consumes
+//! exponential inter-arrival gaps from the experiment RNG.
+
+pub mod trace;
+
+use crate::artifacts::{DatasetEntry, Labels, Manifest};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// A pool of query tensors sampled or cycled by experiments.
+pub struct QuerySource {
+    pub queries: Vec<Tensor>,
+    pub labels: Labels,
+    pub dataset: String,
+}
+
+impl QuerySource {
+    /// Load a dataset's full test split as the query pool.
+    pub fn from_dataset(
+        manifest: &Manifest,
+        ds: &DatasetEntry,
+    ) -> Result<QuerySource, crate::artifacts::ArtifactError> {
+        let (queries, labels) = manifest.load_test_set(ds)?;
+        Ok(QuerySource { queries, labels, dataset: ds.name.clone() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    /// A random permutation of indices, for stripe sampling.
+    pub fn shuffled_indices(&self, rng: &mut Pcg64) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.queries.len()).collect();
+        rng.shuffle(&mut idx);
+        idx
+    }
+
+    /// Class label of sample i (classification datasets only).
+    pub fn class_of(&self, i: usize) -> Option<i32> {
+        match &self.labels {
+            Labels::Classes(c) => c.get(i).copied(),
+            _ => None,
+        }
+    }
+
+    /// Bounding box of sample i (localization datasets only).
+    pub fn box_of(&self, i: usize) -> Option<[f32; 4]> {
+        match &self.labels {
+            Labels::Boxes(b) => b.get(i).copied(),
+            _ => None,
+        }
+    }
+}
+
+/// Deterministic Poisson arrival schedule: cumulative seconds for n events
+/// at `rate` per second. Used by trace-replay tests; the live generator
+/// draws incrementally instead.
+pub fn poisson_schedule(rng: &mut Pcg64, n: usize, rate: f64) -> Vec<f64> {
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exponential(rate);
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_schedule_monotone_with_correct_mean_gap() {
+        let mut rng = Pcg64::new(3);
+        let s = poisson_schedule(&mut rng, 10_000, 200.0);
+        assert!(s.windows(2).all(|w| w[1] >= w[0]));
+        let mean_gap = s.last().unwrap() / s.len() as f64;
+        assert!((mean_gap - 0.005).abs() < 0.0003, "{mean_gap}");
+    }
+}

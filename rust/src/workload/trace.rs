@@ -1,0 +1,167 @@
+//! Arrival-trace record / replay.
+//!
+//! Latency experiments default to live Poisson arrivals, but production
+//! postmortems replay recorded traces. A trace is a JSON document of
+//! arrival offsets (seconds) plus the query index each arrival drew —
+//! replaying one reproduces a run's offered load exactly, independent of
+//! the RNG, which also makes A/B comparisons across schemes noise-free.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Cumulative arrival offsets in seconds, non-decreasing.
+    pub arrivals: Vec<f64>,
+    /// Index into the query pool per arrival.
+    pub query_idx: Vec<usize>,
+    /// Nominal rate the trace was generated at (metadata).
+    pub rate_qps: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TraceError {
+    #[error("trace io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("trace parse: {0}")]
+    Parse(#[from] crate::util::json::ParseError),
+    #[error("invalid trace: {0}")]
+    Invalid(String),
+}
+
+impl Trace {
+    /// Generate a Poisson trace (the paper's client behaviour).
+    pub fn poisson(rng: &mut Pcg64, n: usize, rate: f64, pool_size: usize) -> Trace {
+        let mut t = 0.0;
+        let mut arrivals = Vec::with_capacity(n);
+        let mut query_idx = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += rng.exponential(rate);
+            arrivals.push(t);
+            query_idx.push(rng.below(pool_size as u64) as usize);
+        }
+        Trace { arrivals, query_idx, rate_qps: rate }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Offered-load summary: mean inter-arrival gap and burstiness (CV²).
+    pub fn stats(&self) -> (f64, f64) {
+        if self.arrivals.len() < 2 {
+            return (f64::NAN, f64::NAN);
+        }
+        let gaps: Vec<f64> = self.arrivals.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        (mean, var / (mean * mean))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("rate_qps", self.rate_qps)
+            .set("arrivals", self.arrivals.clone())
+            .set("query_idx", self.query_idx.iter().map(|&i| i as f64).collect::<Vec<_>>())
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Trace, TraceError> {
+        let j = Json::parse(text)?;
+        let arrivals: Vec<f64> = j
+            .at(&["arrivals"])
+            .as_arr()
+            .ok_or_else(|| TraceError::Invalid("missing arrivals".into()))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let query_idx: Vec<usize> = j
+            .at(&["query_idx"])
+            .as_arr()
+            .ok_or_else(|| TraceError::Invalid("missing query_idx".into()))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        if arrivals.len() != query_idx.len() {
+            return Err(TraceError::Invalid(format!(
+                "arrivals ({}) vs query_idx ({}) length mismatch",
+                arrivals.len(),
+                query_idx.len()
+            )));
+        }
+        if arrivals.windows(2).any(|w| w[1] < w[0]) {
+            return Err(TraceError::Invalid("arrivals must be non-decreasing".into()));
+        }
+        Ok(Trace {
+            arrivals,
+            query_idx,
+            rate_qps: j.at(&["rate_qps"]).as_f64().unwrap_or(f64::NAN),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), TraceError> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Trace, TraceError> {
+        Ok(Self::from_json_text(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_shape() {
+        let mut rng = Pcg64::new(1);
+        let t = Trace::poisson(&mut rng, 5000, 100.0, 32);
+        assert_eq!(t.len(), 5000);
+        assert!(t.arrivals.windows(2).all(|w| w[1] >= w[0]));
+        assert!(t.query_idx.iter().all(|&i| i < 32));
+        let (mean, cv2) = t.stats();
+        assert!((mean - 0.01).abs() < 0.001, "{mean}");
+        // Poisson gaps are exponential: CV² ≈ 1.
+        assert!((cv2 - 1.0).abs() < 0.15, "{cv2}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let t = Trace::poisson(&mut rng, 50, 10.0, 4);
+        let back = Trace::from_json_text(&t.to_json().to_string()).unwrap();
+        assert_eq!(back.query_idx, t.query_idx);
+        assert_eq!(back.arrivals.len(), t.arrivals.len());
+        for (a, b) in back.arrivals.iter().zip(&t.arrivals) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::from_json_text("{}").is_err());
+        assert!(Trace::from_json_text(
+            r#"{"arrivals": [1, 0], "query_idx": [0, 0]}"#
+        )
+        .is_err());
+        assert!(Trace::from_json_text(
+            r#"{"arrivals": [1], "query_idx": [0, 1]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let t = Trace::poisson(&mut rng, 10, 5.0, 2);
+        let path = std::env::temp_dir().join(format!("parm-trace-{}.json", std::process::id()));
+        t.save(path.to_str().unwrap()).unwrap();
+        let back = Trace::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back.query_idx, t.query_idx);
+        std::fs::remove_file(path).unwrap();
+    }
+}

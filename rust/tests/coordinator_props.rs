@@ -1,0 +1,235 @@
+//! Property-based tests on coordinator invariants (hand-rolled generators
+//! over our own PRNG — proptest is not in the build image; each property
+//! runs hundreds of randomized cases with printable seeds).
+
+use parm::coordinator::batcher::{Batcher, PendingQuery};
+use parm::coordinator::coding::GroupTracker;
+use parm::coordinator::decoder;
+use parm::coordinator::encoder::Encoder;
+use parm::tensor::{ops, Tensor};
+use parm::util::json::Json;
+use parm::util::rng::Pcg64;
+
+fn rand_tensor(rng: &mut Pcg64, n: usize) -> Tensor {
+    Tensor::new(vec![n], (0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect()).unwrap()
+}
+
+/// INVARIANT: whatever order completions arrive in, every slot of every
+/// group resolves exactly once, and reconstructions only happen when the
+/// group is decodable (k-1 data + parity for r=1).
+#[test]
+fn tracker_resolves_each_slot_exactly_once_any_order() {
+    for seed in 0..200 {
+        let mut rng = Pcg64::new(seed);
+        let k = 2 + (seed as usize % 3); // k in 2..=4
+        let mut tr = GroupTracker::new(k, &[Encoder::sum(k)]);
+        let n = 8;
+
+        // Build groups with known outputs; parity output = exact sum.
+        let mut events = Vec::new();
+        for g in 0..n {
+            let ids: Vec<Vec<u64>> = (0..k).map(|s| vec![(g * k + s) as u64]).collect();
+            tr.register(g as u64, ids);
+            let outs: Vec<Tensor> = (0..k).map(|_| rand_tensor(&mut rng, 6)).collect();
+            let mut parity = Tensor::zeros(vec![6]);
+            for o in &outs {
+                ops::add_assign(&mut parity, o).unwrap();
+            }
+            // Drop one random data completion per group (the straggler).
+            let straggler = rng.below(k as u64) as usize;
+            for (s, o) in outs.into_iter().enumerate() {
+                if s != straggler {
+                    events.push((g as u64, Some(s), o));
+                }
+            }
+            events.push((g as u64, None, parity));
+        }
+        rng.shuffle(&mut events);
+
+        let mut resolved = std::collections::HashMap::new();
+        for (g, slot, t) in events {
+            let res = match slot {
+                Some(s) => tr.on_data(g, s, t),
+                None => tr.on_parity(g, 0, t),
+            };
+            for (_, ids, _, _) in res.resolved {
+                for id in ids {
+                    *resolved.entry(id).or_insert(0) += 1;
+                }
+            }
+        }
+        assert_eq!(resolved.len(), n * k, "seed {seed}: every query resolves");
+        assert!(
+            resolved.values().all(|&c| c == 1),
+            "seed {seed}: no double resolution"
+        );
+        assert_eq!(tr.completed_groups, n as u64, "seed {seed}");
+        assert_eq!(tr.reconstructions, n as u64, "seed {seed}: one straggler per group");
+        assert_eq!(tr.open_groups(), 0, "seed {seed}: no leaked groups");
+    }
+}
+
+/// INVARIANT: reconstruction through the real decoder equals the dropped
+/// output exactly when the parity output is the exact coded sum — for any
+/// k, any weights, any missing slot.
+#[test]
+fn decode_r1_exact_for_exact_parities() {
+    for seed in 0..300 {
+        let mut rng = Pcg64::new(1000 + seed);
+        let k = 2 + (seed as usize % 4);
+        let dim = 1 + (rng.below(40) as usize);
+        let weights: Vec<f32> = (0..k).map(|_| 0.5 + rng.next_f32() * 2.0).collect();
+        let outs: Vec<Tensor> = (0..k).map(|_| rand_tensor(&mut rng, dim)).collect();
+        let mut parity = Tensor::zeros(vec![dim]);
+        for (o, &w) in outs.iter().zip(&weights) {
+            ops::add_scaled_assign(&mut parity, o, w).unwrap();
+        }
+        let j = rng.below(k as u64) as usize;
+        let data: Vec<Option<Tensor>> = outs
+            .iter()
+            .enumerate()
+            .map(|(i, o)| if i == j { None } else { Some(o.clone()) })
+            .collect();
+        let rec = decoder::decode_r1(&weights, &parity, &data, j).unwrap();
+        for (r, e) in rec.data().iter().zip(outs[j].data()) {
+            assert!(
+                (r - e).abs() < 1e-3,
+                "seed {seed} k={k} j={j}: {r} vs {e}"
+            );
+        }
+    }
+}
+
+/// INVARIANT: general decode (r >= 2) recovers any u <= r missing slots.
+#[test]
+fn decode_general_recovers_any_missing_subset() {
+    for seed in 0..150 {
+        let mut rng = Pcg64::new(2000 + seed);
+        let k = 2 + (seed as usize % 3);
+        let r = 2;
+        let dim = 5;
+        let weights: Vec<Vec<f32>> = (0..r)
+            .map(|ri| (0..k).map(|i| ((i + 1) as f32).powi(ri as i32)).collect())
+            .collect();
+        let outs: Vec<Tensor> = (0..k).map(|_| rand_tensor(&mut rng, dim)).collect();
+        let parities: Vec<Option<Tensor>> = weights
+            .iter()
+            .map(|ws| {
+                let mut p = Tensor::zeros(vec![dim]);
+                for (o, &w) in outs.iter().zip(ws) {
+                    ops::add_scaled_assign(&mut p, o, w).unwrap();
+                }
+                Some(p)
+            })
+            .collect();
+        // Choose up to r missing slots.
+        let miss = rng.choose_distinct(k, 1 + (seed as usize % 2).min(k - 1));
+        let data: Vec<Option<Tensor>> = outs
+            .iter()
+            .enumerate()
+            .map(|(i, o)| if miss.contains(&i) { None } else { Some(o.clone()) })
+            .collect();
+        let recs = decoder::decode_general(&weights, &data, &parities).unwrap();
+        assert_eq!(recs.len(), miss.len(), "seed {seed}");
+        for (slot, rec) in recs {
+            for (a, b) in rec.data().iter().zip(outs[slot].data()) {
+                assert!((a - b).abs() < 1e-2, "seed {seed} slot {slot}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// INVARIANT: the batcher neither drops nor duplicates queries, and every
+/// sealed batch is at most batch_size.
+#[test]
+fn batcher_conserves_queries() {
+    for seed in 0..100 {
+        let mut rng = Pcg64::new(3000 + seed);
+        let bs = 1 + (rng.below(5) as usize);
+        let mut b = Batcher::new(bs, std::time::Duration::from_millis(1));
+        let n = 50 + rng.below(100);
+        let mut seen = Vec::new();
+        for id in 0..n {
+            let sealed = b.offer(PendingQuery {
+                id,
+                input: Tensor::filled(vec![2], id as f32),
+                arrived: std::time::Instant::now(),
+            });
+            if let Some(s) = sealed {
+                assert!(s.query_ids.len() <= bs);
+                seen.extend(s.query_ids);
+            }
+        }
+        if let Some(s) = b.flush_all() {
+            seen.extend(s.query_ids);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "seed {seed} bs={bs}");
+    }
+}
+
+/// INVARIANT: sum-encode then per-slot subtract-decode round-trips the
+/// encoder math itself (no model in the loop) for batched tensors too.
+#[test]
+fn encoder_batch_consistent_with_per_sample() {
+    for seed in 0..60 {
+        let mut rng = Pcg64::new(4000 + seed);
+        let k = 2 + (seed as usize % 3);
+        let bsz = 1 + (rng.below(4) as usize);
+        let shape = vec![bsz, 6, 4, 3];
+        let batches: Vec<Tensor> = (0..k)
+            .map(|_| {
+                let n: usize = shape.iter().product();
+                Tensor::new(shape.clone(), (0..n).map(|_| rng.next_f32()).collect()).unwrap()
+            })
+            .collect();
+        let refs: Vec<&Tensor> = batches.iter().collect();
+        let enc = Encoder::sum(k);
+        let whole = enc.encode_batches(&refs).unwrap();
+        // Per-sample encode must agree.
+        let split: Vec<Vec<Tensor>> = batches.iter().map(|b| b.unbatch()).collect();
+        for i in 0..bsz {
+            let stripe: Vec<&Tensor> = split.iter().map(|s| &s[i]).collect();
+            let per = enc.encode(&stripe).unwrap();
+            assert_eq!(per, whole.unbatch()[i], "seed {seed} sample {i}");
+        }
+    }
+}
+
+/// INVARIANT: JSON writer output always re-parses to the same value
+/// (fuzzed over random nested documents).
+#[test]
+fn json_roundtrip_fuzz() {
+    fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12) as usize;
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            char::from_u32(32 + rng.below(90) as u32).unwrap_or('x')
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), gen(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for seed in 0..300 {
+        let mut rng = Pcg64::new(5000 + seed);
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+    }
+}

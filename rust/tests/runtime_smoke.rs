@@ -1,0 +1,139 @@
+//! Integration tests over the PJRT runtime + artifacts.
+//!
+//! These need `make artifacts` to have run; they skip (with a loud
+//! message) when the manifest is missing so `cargo test` stays green on a
+//! fresh checkout.
+
+use std::sync::Arc;
+
+use parm::artifacts::Manifest;
+use parm::coordinator::{decoder, encoder::Encoder};
+use parm::experiments::accuracy::run_all;
+use parm::runtime::engine::Executable;
+use parm::tensor::Tensor;
+use parm::workload::QuerySource;
+
+fn manifest() -> Option<Manifest> {
+    // Tests run from the workspace root.
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_smoke: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn load_and_execute_deployed_model() {
+    let Some(m) = manifest() else { return };
+    let e = m.deployed("synthdigits", "lenet").unwrap();
+    let exe = Executable::load(m.hlo_path(e, 1).unwrap(), &e.name, &e.input_shape, 1, e.out_dim)
+        .unwrap();
+    let ds = m.dataset("synthdigits").unwrap();
+    let src = QuerySource::from_dataset(&m, ds).unwrap();
+    let out = exe.run_one(&src.queries[0]).unwrap();
+    assert_eq!(out.shape(), &[e.out_dim]);
+    assert!(out.data().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn deployed_model_beats_chance_through_full_runtime() {
+    // The strongest wiring test: exported weights + PJRT execution + test
+    // set loading must all line up or accuracy collapses to ~10%.
+    let Some(m) = manifest() else { return };
+    let e = m.deployed("synthdigits", "lenet").unwrap();
+    let batch = *e.files.keys().max().unwrap();
+    let exe =
+        Executable::load(m.hlo_path(e, batch).unwrap(), &e.name, &e.input_shape, batch, e.out_dim)
+            .unwrap();
+    let ds = m.dataset("synthdigits").unwrap();
+    let src = QuerySource::from_dataset(&m, ds).unwrap();
+    let n = 200.min(src.len());
+    let outs = run_all(&exe, &src.queries[..n]).unwrap();
+    let correct = outs
+        .iter()
+        .enumerate()
+        .filter(|(i, o)| o.argmax() as i32 == src.class_of(*i).unwrap())
+        .count();
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.5, "runtime accuracy {acc} — artifacts or runtime broken");
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some(m) = manifest() else { return };
+    let e = m.deployed("synthdigits", "lenet").unwrap();
+    let exe = Executable::load(m.hlo_path(e, 1).unwrap(), &e.name, &e.input_shape, 1, e.out_dim)
+        .unwrap();
+    let bad = Tensor::zeros(vec![1, 3, 3, 1]);
+    assert!(exe.run(&bad).is_err());
+}
+
+#[test]
+fn concurrent_execution_is_consistent() {
+    // Validates the Send/Sync wrappers around PJRT (see engine.rs SAFETY
+    // comments): many threads execute the same compiled program and must
+    // all observe identical results.
+    let Some(m) = manifest() else { return };
+    let e = m.deployed("synthdigits", "lenet").unwrap();
+    let exe: Arc<Executable> =
+        Executable::load(m.hlo_path(e, 1).unwrap(), &e.name, &e.input_shape, 1, e.out_dim)
+            .unwrap();
+    let ds = m.dataset("synthdigits").unwrap();
+    let src = QuerySource::from_dataset(&m, ds).unwrap();
+    let q = Arc::new(src.queries[0].clone());
+    let expected = exe.run_one(&q).unwrap();
+
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let exe = exe.clone();
+            let q = q.clone();
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                for _ in 0..25 {
+                    let out = exe.run_one(&q).unwrap();
+                    assert_eq!(out.data(), expected.data());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("concurrent execution thread panicked");
+    }
+}
+
+#[test]
+fn parity_pipeline_reconstructs_through_runtime() {
+    // encode -> parity inference -> decode == usable reconstruction.
+    let Some(m) = manifest() else { return };
+    let dep = m.deployed("synthdigits", "lenet").unwrap();
+    let par = m.parity("synthdigits", "lenet", 2, "sum", 0).unwrap();
+    let dep_exe =
+        Executable::load(m.hlo_path(dep, 1).unwrap(), &dep.name, &dep.input_shape, 1, dep.out_dim)
+            .unwrap();
+    let par_exe =
+        Executable::load(m.hlo_path(par, 1).unwrap(), &par.name, &par.input_shape, 1, par.out_dim)
+            .unwrap();
+    let ds = m.dataset("synthdigits").unwrap();
+    let src = QuerySource::from_dataset(&m, ds).unwrap();
+
+    let enc = Encoder::sum(2);
+    let n_pairs = 40;
+    let mut recon_correct = 0;
+    for s in 0..n_pairs {
+        let (a, b) = (2 * s, 2 * s + 1);
+        let p = enc.encode(&[&src.queries[a], &src.queries[b]]).unwrap();
+        let fa = dep_exe.run_one(&src.queries[a]).unwrap();
+        let fp = par_exe.run_one(&p).unwrap();
+        let rec = decoder::decode_r1(&[1.0, 1.0], &fp, &[Some(fa), None], 1).unwrap();
+        if rec.argmax() as i32 == src.class_of(b).unwrap() {
+            recon_correct += 1;
+        }
+    }
+    let acc = recon_correct as f64 / n_pairs as f64;
+    assert!(
+        acc > 0.4,
+        "reconstruction accuracy {acc} through full runtime — decode wiring broken?"
+    );
+}

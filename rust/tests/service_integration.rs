@@ -1,0 +1,163 @@
+//! End-to-end service integration: the full threaded coordinator against
+//! the simulated cluster, at small scale (fast enough for `cargo test`).
+//! Requires artifacts; skips with a message otherwise.
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, Service, ServiceConfig};
+use parm::experiments::latency;
+use parm::workload::QuerySource;
+
+/// Each test spawns a full simulated cluster (many worker threads doing
+/// real PJRT inference with precise-sleep pacing). Running them
+/// concurrently oversubscribes the host and distorts/wedges the timing
+/// paths, so serialize them.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() -> Option<(Manifest, QuerySource)> {
+    let m = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP service_integration: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    Some((m, src))
+}
+
+fn quick_cfg(mode: Mode) -> ServiceConfig {
+    let mut cfg = ServiceConfig::defaults(mode, &GPU);
+    cfg.m = 4; // small cluster for test speed
+    cfg.shuffles = 1;
+    cfg.seed = 0x7E57;
+    cfg
+}
+
+#[test]
+fn parm_serves_all_queries() {
+    let _guard = serial();
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
+    let res = Service::run(&cfg, &models, &src.queries, 300, 120.0).unwrap();
+    let mut metrics = res.metrics;
+    assert_eq!(metrics.total(), 300, "every query must resolve");
+    assert_eq!(metrics.defaulted, 0, "no SLO configured, nothing defaults");
+    assert!(metrics.latency.median() > 0.0);
+}
+
+#[test]
+fn no_redundancy_serves_all_queries() {
+    let _guard = serial();
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let cfg = quick_cfg(Mode::NoRedundancy);
+    let res = Service::run(&cfg, &models, &src.queries, 200, 100.0).unwrap();
+    assert_eq!(res.metrics.total(), 200);
+    assert_eq!(res.reconstructions, 0);
+}
+
+#[test]
+fn equal_resources_uses_extra_instances() {
+    let _guard = serial();
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let mode = Mode::EqualResources { k: 2 };
+    assert_eq!(mode.extra_instances(4), 2);
+    let cfg = quick_cfg(mode);
+    let res = Service::run(&cfg, &models, &src.queries, 200, 100.0).unwrap();
+    assert_eq!(res.metrics.total(), 200);
+}
+
+#[test]
+fn approx_backup_resolves_from_either_pool() {
+    let _guard = serial();
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, true).unwrap();
+    let cfg = quick_cfg(Mode::ApproxBackup { k: 2 });
+    let res = Service::run(&cfg, &models, &src.queries, 200, 100.0).unwrap();
+    let metrics = res.metrics;
+    assert_eq!(metrics.total(), 200);
+    // With healthy instances the deployed pool usually wins, but both
+    // paths must be live.
+    assert!(metrics.native + metrics.replica == 200);
+}
+
+#[test]
+fn parm_reconstructs_under_instance_failure() {
+    let _guard = serial();
+    // Kill one deployed instance permanently at t=0: every query the dead
+    // instance swallows must come back via ParM reconstruction, and no
+    // query may be lost (SLO backstop would mark stragglers Default —
+    // there should be none while the group's siblings + parity survive).
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let mut cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
+    cfg.shuffles = 0;
+    cfg.slo = Some(std::time::Duration::from_secs(3));
+    cfg.fault_schedule = vec![(0, std::time::Duration::ZERO, std::time::Duration::ZERO)];
+    let res = Service::run(&cfg, &models, &src.queries, 300, 150.0).unwrap();
+    let metrics = res.metrics;
+    assert_eq!(metrics.total(), 300);
+    assert!(
+        res.reconstructions > 0,
+        "a dead instance must trigger reconstructions (got {})",
+        res.reconstructions
+    );
+    assert!(res.dropped_jobs > 0, "the fault plan must actually drop jobs");
+    assert!(
+        metrics.reconstructed > 0,
+        "queries on the dead instance resolve via decode"
+    );
+}
+
+#[test]
+fn equal_resources_defaults_under_failure_where_parm_reconstructs() {
+    let _guard = serial();
+    // The qualitative contrast of §4: with an instance dead, the
+    // Equal-Resources baseline can only miss SLOs (single-queue keeps
+    // most queries off the dead instance, but whatever lands there is
+    // lost), while ParM recovered those queries above.
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let mut cfg = quick_cfg(Mode::EqualResources { k: 2 });
+    cfg.shuffles = 0;
+    cfg.slo = Some(std::time::Duration::from_millis(400));
+    cfg.fault_schedule = vec![(0, std::time::Duration::ZERO, std::time::Duration::ZERO)];
+    let res = Service::run(&cfg, &models, &src.queries, 300, 150.0).unwrap();
+    let metrics = res.metrics;
+    assert_eq!(metrics.total(), 300);
+    assert!(
+        metrics.defaulted > 0,
+        "queries swallowed by the dead instance must fall back to defaults"
+    );
+}
+
+#[test]
+fn replication_mode_halves_effective_capacity_but_serves() {
+    let _guard = serial();
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let cfg = quick_cfg(Mode::Replication { copies: 2 });
+    let res = Service::run(&cfg, &models, &src.queries, 150, 60.0).unwrap();
+    assert_eq!(res.metrics.total(), 150);
+}
+
+#[test]
+fn batched_service_works() {
+    let _guard = serial();
+    let Some((m, src)) = setup() else { return };
+    let models = latency::load_models(&m, 2, 2, 1, false).unwrap();
+    let mut cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
+    cfg.batch_size = 2;
+    cfg.batch_timeout = std::time::Duration::from_millis(5);
+    let res = Service::run(&cfg, &models, &src.queries, 300, 150.0).unwrap();
+    assert_eq!(res.metrics.total(), 300);
+}
