@@ -1,0 +1,640 @@
+//! Artifact inventory: the manifest written by `python/compile/aot.py`
+//! (`make artifacts`) describing every AOT-lowered model, plus the dumped
+//! test splits the Rust side serves as queries.
+//!
+//! Two sources:
+//!
+//! - **On-disk**: `<dir>/manifest.json` in the `hlo-text-v1` format of
+//!   `aot.py`, with `<name>.b<batch>.hlo.txt` programs and
+//!   `<dataset>.test_{x,y}.bin` raw little-endian splits next to it.
+//! - **Synthetic fallback**: when no artifacts directory exists,
+//!   [`Manifest::load_default`] fabricates a deterministic inventory that
+//!   mirrors `aot.py`'s build matrix (same names, roles, k/r/encoder
+//!   combinations) with small input shapes and seeded pseudo test sets.
+//!   Paired with the synthetic execution backend (see
+//!   [`crate::runtime::engine`]) this keeps every serving-path test and
+//!   bench runnable on hosts that never ran `make artifacts`. Trained
+//!   accuracy semantics are absent, so accuracy-asserting tests must skip
+//!   when [`Manifest::synthetic`] is in effect.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::{fnv1a, Pcg64};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("artifact io {path}: {err}")]
+    Io { path: String, err: std::io::Error },
+    #[error("manifest parse: {0}")]
+    Parse(#[from] crate::util::json::ParseError),
+    #[error("manifest invalid: {0}")]
+    Invalid(String),
+    #[error("no model {0:?} in manifest")]
+    NoModel(String),
+    #[error("no dataset {0:?} in manifest")]
+    NoDataset(String),
+    #[error("model {model:?} has no batch-{batch} artifact (have {have:?})")]
+    NoBatch { model: String, batch: usize, have: Vec<usize> },
+}
+
+/// One AOT-exported model variant.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    /// "deployed" | "parity" | "approx" | "encoder".
+    pub role: String,
+    pub dataset: String,
+    pub arch: String,
+    /// Per-sample input shape (no batch dim).
+    pub input_shape: Vec<usize>,
+    /// Output vector length per sample.
+    pub out_dim: usize,
+    /// Coding-group size (parity models; 0 otherwise).
+    pub k: usize,
+    /// Which parity of an r > 1 code this model is (§3.5).
+    pub r_index: usize,
+    /// Encoder the parity model was trained against ("" for deployed).
+    pub encoder: String,
+    /// Eval metric stamped at train time (accuracy / A_d / IoU).
+    pub train_metric: f64,
+    /// batch size -> HLO file name.
+    pub files: BTreeMap<usize, String>,
+}
+
+/// One dumped dataset test split.
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: String,
+    /// "classify" | "localize".
+    pub task: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub n_test: usize,
+    /// Raw little-endian f32 sample file.
+    pub test_x: String,
+    /// Raw label file (i32 classes or f32 boxes).
+    pub test_y: String,
+}
+
+/// Test-split labels.
+pub enum Labels {
+    Classes(Vec<i32>),
+    /// (cx, cy, w, h) in normalized coordinates.
+    Boxes(Vec<[f32; 4]>),
+}
+
+/// The artifact inventory.
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub datasets: Vec<DatasetEntry>,
+    pub fast_mode: bool,
+    /// True when this inventory was fabricated (no artifacts on disk).
+    pub synthetic: bool,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|err| ArtifactError::Io { path: path.display().to_string(), err })?;
+        let j = Json::parse(&text)?;
+
+        let mut models = Vec::new();
+        for m in j.at(&["models"]).as_arr().unwrap_or(&[]) {
+            models.push(parse_model(m)?);
+        }
+        let mut datasets = Vec::new();
+        for d in j.at(&["datasets"]).as_arr().unwrap_or(&[]) {
+            datasets.push(parse_dataset(d)?);
+        }
+        if models.is_empty() {
+            return Err(ArtifactError::Invalid("manifest lists no models".into()));
+        }
+        Ok(Manifest {
+            dir,
+            models,
+            datasets,
+            fast_mode: j.at(&["fast_mode"]).as_bool().unwrap_or(false),
+            synthetic: false,
+        })
+    }
+
+    /// Load the default artifacts: `$PARM_ARTIFACTS`, then `./artifacts`,
+    /// then `../artifacts` (package dir vs repo root), falling back to the
+    /// deterministic synthetic inventory when none exists.
+    pub fn load_default() -> Result<Manifest, ArtifactError> {
+        let mut candidates: Vec<PathBuf> = Vec::new();
+        if let Ok(dir) = std::env::var("PARM_ARTIFACTS") {
+            candidates.push(PathBuf::from(dir));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        candidates.push(PathBuf::from("../artifacts"));
+        for dir in candidates {
+            if dir.join("manifest.json").exists() {
+                return Manifest::load(dir);
+            }
+        }
+        log::warn!(
+            "no AOT artifacts found (run `make artifacts`); using the synthetic inventory"
+        );
+        Ok(Manifest::synthetic())
+    }
+
+    /// The fabricated inventory mirroring `aot.py`'s build matrix.
+    pub fn synthetic() -> Manifest {
+        synthetic_manifest()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry, ArtifactError> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| ArtifactError::NoModel(name.to_string()))
+    }
+
+    /// The deployed model for (dataset, arch).
+    pub fn deployed(&self, dataset: &str, arch: &str) -> Result<&ModelEntry, ArtifactError> {
+        self.models
+            .iter()
+            .find(|m| m.role == "deployed" && m.dataset == dataset && m.arch == arch)
+            .ok_or_else(|| ArtifactError::NoModel(format!("{dataset}.{arch}.deployed")))
+    }
+
+    /// The parity model for (dataset, arch, k, encoder, r_index).
+    pub fn parity(
+        &self,
+        dataset: &str,
+        arch: &str,
+        k: usize,
+        encoder: &str,
+        r_index: usize,
+    ) -> Result<&ModelEntry, ArtifactError> {
+        self.models
+            .iter()
+            .find(|m| {
+                m.role == "parity"
+                    && m.dataset == dataset
+                    && m.arch == arch
+                    && m.k == k
+                    && m.encoder == encoder
+                    && m.r_index == r_index
+            })
+            .ok_or_else(|| {
+                ArtifactError::NoModel(format!(
+                    "{dataset}.{arch}.parity.k{k}.{encoder} (r_index {r_index})"
+                ))
+            })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetEntry, ArtifactError> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| ArtifactError::NoDataset(name.to_string()))
+    }
+
+    /// Path of `entry`'s HLO program for `batch`.
+    pub fn hlo_path(&self, entry: &ModelEntry, batch: usize) -> Result<PathBuf, ArtifactError> {
+        let f = entry.files.get(&batch).ok_or_else(|| ArtifactError::NoBatch {
+            model: entry.name.clone(),
+            batch,
+            have: entry.files.keys().copied().collect(),
+        })?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Load a dataset's test split: per-sample query tensors plus labels.
+    pub fn load_test_set(&self, ds: &DatasetEntry) -> Result<(Vec<Tensor>, Labels), ArtifactError> {
+        if self.synthetic {
+            return Ok(synthetic_test_set(ds));
+        }
+        let per: usize = ds.input_shape.iter().product();
+        let xs = read_f32(&self.dir.join(&ds.test_x))?;
+        let n = ds.n_test.min(xs.len() / per.max(1));
+        let queries: Vec<Tensor> = (0..n)
+            .map(|i| {
+                Tensor::new(ds.input_shape.clone(), xs[i * per..(i + 1) * per].to_vec())
+                    .expect("shape matches stride")
+            })
+            .collect();
+        let ypath = self.dir.join(&ds.test_y);
+        let labels = if ds.task == "classify" {
+            Labels::Classes(read_i32(&ypath)?.into_iter().take(n).collect())
+        } else {
+            let raw = read_f32(&ypath)?;
+            Labels::Boxes(
+                raw.chunks_exact(4)
+                    .take(n)
+                    .map(|c| [c[0], c[1], c[2], c[3]])
+                    .collect(),
+            )
+        };
+        Ok((queries, labels))
+    }
+}
+
+fn parse_model(j: &Json) -> Result<ModelEntry, ArtifactError> {
+    let name = j
+        .at(&["name"])
+        .as_str()
+        .ok_or_else(|| ArtifactError::Invalid("model entry missing name".into()))?
+        .to_string();
+    let mut files = BTreeMap::new();
+    if let Some(obj) = j.at(&["files"]).as_obj() {
+        for (batch, fname) in obj {
+            let b: usize = batch
+                .parse()
+                .map_err(|_| ArtifactError::Invalid(format!("{name}: bad batch key {batch:?}")))?;
+            let f = fname
+                .as_str()
+                .ok_or_else(|| ArtifactError::Invalid(format!("{name}: non-string file")))?;
+            files.insert(b, f.to_string());
+        }
+    }
+    if files.is_empty() {
+        return Err(ArtifactError::Invalid(format!("{name}: no artifact files")));
+    }
+    let input_shape = parse_shape(j.at(&["input_shape"]), &name)?;
+    Ok(ModelEntry {
+        role: j.at(&["role"]).as_str().unwrap_or("deployed").to_string(),
+        dataset: j.at(&["dataset"]).as_str().unwrap_or("").to_string(),
+        arch: j.at(&["arch"]).as_str().unwrap_or("").to_string(),
+        input_shape,
+        out_dim: j.at(&["out_dim"]).as_usize().unwrap_or(0),
+        k: j.at(&["k"]).as_usize().unwrap_or(0),
+        r_index: j.at(&["r_index"]).as_usize().unwrap_or(0),
+        encoder: j.at(&["encoder"]).as_str().unwrap_or("").to_string(),
+        train_metric: j.at(&["train_metric"]).as_f64().unwrap_or(f64::NAN),
+        files,
+        name,
+    })
+}
+
+fn parse_dataset(j: &Json) -> Result<DatasetEntry, ArtifactError> {
+    let name = j
+        .at(&["name"])
+        .as_str()
+        .ok_or_else(|| ArtifactError::Invalid("dataset entry missing name".into()))?
+        .to_string();
+    let input_shape = parse_shape(j.at(&["input_shape"]), &name)?;
+    Ok(DatasetEntry {
+        task: j.at(&["task"]).as_str().unwrap_or("classify").to_string(),
+        num_classes: j.at(&["num_classes"]).as_usize().unwrap_or(0),
+        input_shape,
+        n_test: j.at(&["n_test"]).as_usize().unwrap_or(0),
+        test_x: match j.at(&["test_x"]).as_str() {
+            Some(s) => s.to_string(),
+            None => format!("{name}.test_x.bin"),
+        },
+        test_y: match j.at(&["test_y"]).as_str() {
+            Some(s) => s.to_string(),
+            None => format!("{name}.test_y.bin"),
+        },
+        name,
+    })
+}
+
+fn parse_shape(j: &Json, name: &str) -> Result<Vec<usize>, ArtifactError> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| ArtifactError::Invalid(format!("{name}: missing input_shape")))?;
+    arr.iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| ArtifactError::Invalid(format!("{name}: bad shape dim")))
+        })
+        .collect()
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>, ArtifactError> {
+    let bytes = std::fs::read(path)
+        .map_err(|err| ArtifactError::Io { path: path.display().to_string(), err })?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_i32(path: &Path) -> Result<Vec<i32>, ArtifactError> {
+    let bytes = std::fs::read(path)
+        .map_err(|err| ArtifactError::Io { path: path.display().to_string(), err })?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+// ------------------------------------------------------------------------
+// Synthetic inventory
+// ------------------------------------------------------------------------
+
+/// Samples per synthetic test split: divisible by every supported k.
+const SYNTH_N_TEST: usize = 240;
+
+struct SynthBuilder {
+    models: Vec<ModelEntry>,
+    datasets: Vec<DatasetEntry>,
+}
+
+impl SynthBuilder {
+    fn dataset(&mut self, name: &str, task: &str, num_classes: usize, shape: &[usize]) {
+        self.datasets.push(DatasetEntry {
+            name: name.to_string(),
+            task: task.to_string(),
+            num_classes,
+            input_shape: shape.to_vec(),
+            n_test: SYNTH_N_TEST,
+            test_x: format!("{name}.test_x.bin"),
+            test_y: format!("{name}.test_y.bin"),
+        });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn model(
+        &mut self,
+        name: String,
+        role: &str,
+        dataset: &str,
+        arch: &str,
+        input_shape: Vec<usize>,
+        out_dim: usize,
+        batches: &[usize],
+        k: usize,
+        r_index: usize,
+        encoder: &str,
+    ) {
+        let files = batches
+            .iter()
+            .map(|&b| (b, format!("{name}.b{b}.hlo.txt")))
+            .collect();
+        // Deterministic plausible metric per entry (not trained semantics).
+        let h = fnv1a(name.as_bytes());
+        let train_metric = match role {
+            "deployed" => 0.85 + (h % 100) as f64 / 1000.0,
+            "parity" => 0.55 + (h % 200) as f64 / 1000.0,
+            "approx" => 0.70 + (h % 100) as f64 / 1000.0,
+            _ => f64::NAN,
+        };
+        self.models.push(ModelEntry {
+            name,
+            role: role.to_string(),
+            dataset: dataset.to_string(),
+            arch: arch.to_string(),
+            input_shape,
+            out_dim,
+            k,
+            r_index,
+            encoder: encoder.to_string(),
+            train_metric,
+            files,
+        });
+    }
+}
+
+/// Mirror `aot.py`'s ACCURACY_MATRIX + LATENCY build matrix with small
+/// shapes so everything the benches and tests look up by name exists.
+fn synthetic_manifest() -> Manifest {
+    let mut b = SynthBuilder { models: Vec::new(), datasets: Vec::new() };
+
+    b.dataset("synthvision10", "classify", 10, &[16, 16, 3]);
+    b.dataset("synthvision100", "classify", 100, &[16, 16, 3]);
+    b.dataset("synthfashion", "classify", 10, &[16, 16, 1]);
+    b.dataset("synthdigits", "classify", 10, &[16, 16, 1]);
+    b.dataset("synthspeech", "classify", 10, &[16, 16, 1]);
+    b.dataset("synthloc", "localize", 0, &[16, 16, 3]);
+    b.dataset("synthpets", "classify", 2, &[16, 16, 3]);
+
+    // (dataset, arch, sum ks, concat ks, second r=2 parity)
+    let matrix: &[(&str, &str, &[usize], &[usize], bool)] = &[
+        ("synthvision10", "microresnet", &[2, 3, 4], &[2, 4], true),
+        ("synthvision100", "microresnet", &[2], &[], false),
+        ("synthfashion", "mlp", &[2], &[], false),
+        ("synthfashion", "lenet", &[2], &[], false),
+        ("synthfashion", "microresnet", &[2, 3, 4], &[], false),
+        ("synthdigits", "lenet", &[2, 3, 4], &[], false),
+        ("synthspeech", "lenet", &[2, 3, 4], &[], false),
+        ("synthloc", "microresnet", &[2], &[], false),
+    ];
+    for &(ds_name, arch, sum_ks, concat_ks, r2) in matrix {
+        let ds = b.datasets.iter().find(|d| d.name == ds_name).unwrap().clone();
+        let out_dim = if ds.task == "classify" { ds.num_classes } else { 4 };
+        let tag = format!("{ds_name}.{arch}");
+        b.model(
+            format!("{tag}.deployed"),
+            "deployed",
+            ds_name,
+            arch,
+            ds.input_shape.clone(),
+            out_dim,
+            &[1, 50],
+            0,
+            0,
+            "",
+        );
+        for (enc, ks) in [("sum", sum_ks), ("concat", concat_ks)] {
+            for &k in ks {
+                b.model(
+                    format!("{tag}.parity.k{k}.{enc}"),
+                    "parity",
+                    ds_name,
+                    arch,
+                    ds.input_shape.clone(),
+                    out_dim,
+                    &[1, 50],
+                    k,
+                    0,
+                    enc,
+                );
+            }
+        }
+        if r2 {
+            b.model(
+                format!("{tag}.parity.k2.sum.r1"),
+                "parity",
+                ds_name,
+                arch,
+                ds.input_shape.clone(),
+                out_dim,
+                &[1, 50],
+                2,
+                1,
+                "sum",
+            );
+        }
+    }
+
+    // Latency workload (§5.1): 1000-float predictions, batches 1/2/4.
+    let pets_shape = vec![16usize, 16, 3];
+    let tag = "synthpets.microresnet";
+    b.model(
+        format!("{tag}.deployed1000"),
+        "deployed",
+        "synthpets",
+        "microresnet",
+        pets_shape.clone(),
+        1000,
+        &[1, 2, 4],
+        0,
+        0,
+        "",
+    );
+    for k in [2usize, 3, 4] {
+        b.model(
+            format!("{tag}.parity1000.k{k}.sum"),
+            "parity",
+            "synthpets",
+            "microresnet",
+            pets_shape.clone(),
+            1000,
+            &[1, 2, 4],
+            k,
+            0,
+            "sum",
+        );
+    }
+    b.model(
+        format!("{tag}.approx1000"),
+        "approx",
+        "synthpets",
+        "microresnet_narrow",
+        pets_shape.clone(),
+        1000,
+        &[1, 2, 4],
+        0,
+        0,
+        "",
+    );
+    let pets_elems: usize = pets_shape.iter().product();
+    for k in [2usize, 3, 4] {
+        let mut shape = vec![k];
+        shape.extend_from_slice(&pets_shape);
+        b.model(
+            format!("encoder.sum.k{k}"),
+            "encoder",
+            "synthpets",
+            "pallas-sum",
+            shape,
+            pets_elems,
+            &[1],
+            k,
+            0,
+            "sum",
+        );
+    }
+
+    Manifest {
+        dir: PathBuf::from("<synthetic>"),
+        models: b.models,
+        datasets: b.datasets,
+        fast_mode: true,
+        synthetic: true,
+    }
+}
+
+/// Seeded pseudo test split: queries in [0, 1), labels uniform.
+fn synthetic_test_set(ds: &DatasetEntry) -> (Vec<Tensor>, Labels) {
+    let mut rng = Pcg64::new(fnv1a(ds.name.as_bytes()));
+    let per: usize = ds.input_shape.iter().product();
+    let queries: Vec<Tensor> = (0..ds.n_test)
+        .map(|_| {
+            Tensor::new(ds.input_shape.clone(), (0..per).map(|_| rng.next_f32()).collect())
+                .expect("shape matches data")
+        })
+        .collect();
+    let labels = if ds.task == "classify" {
+        Labels::Classes(
+            (0..ds.n_test)
+                .map(|_| rng.below(ds.num_classes.max(1) as u64) as i32)
+                .collect(),
+        )
+    } else {
+        Labels::Boxes(
+            (0..ds.n_test)
+                .map(|_| {
+                    [
+                        rng.range_f64(0.2, 0.8) as f32,
+                        rng.range_f64(0.2, 0.8) as f32,
+                        rng.range_f64(0.1, 0.5) as f32,
+                        rng.range_f64(0.1, 0.5) as f32,
+                    ]
+                })
+                .collect(),
+        )
+    };
+    (queries, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_mirrors_build_matrix() {
+        let m = Manifest::synthetic();
+        assert!(m.synthetic);
+        // Name-based lookups used across the benches and experiments.
+        assert!(m.model("synthpets.microresnet.deployed1000").is_ok());
+        assert!(m.model("synthpets.microresnet.parity1000.k2.sum").is_ok());
+        assert!(m.model("synthpets.microresnet.approx1000").is_ok());
+        assert!(m.model("encoder.sum.k3").is_ok());
+        assert!(m.deployed("synthdigits", "lenet").is_ok());
+        assert!(m.parity("synthvision10", "microresnet", 2, "sum", 1).is_ok());
+        assert!(m.parity("synthvision10", "microresnet", 4, "concat", 0).is_ok());
+        assert!(m.dataset("synthloc").is_ok());
+        assert!(m.model("no.such.model").is_err());
+    }
+
+    #[test]
+    fn synthetic_test_set_is_deterministic_and_shaped() {
+        let m = Manifest::synthetic();
+        let ds = m.dataset("synthpets").unwrap();
+        let (q1, l1) = m.load_test_set(ds).unwrap();
+        let (q2, _) = m.load_test_set(ds).unwrap();
+        assert_eq!(q1.len(), SYNTH_N_TEST);
+        assert_eq!(q1[0].shape(), &[16, 16, 3]);
+        assert_eq!(q1[0], q2[0], "seeded by dataset name");
+        match l1 {
+            Labels::Classes(c) => {
+                assert_eq!(c.len(), SYNTH_N_TEST);
+                assert!(c.iter().all(|&l| (0..2).contains(&l)));
+            }
+            _ => panic!("synthpets is a classification dataset"),
+        }
+    }
+
+    #[test]
+    fn localization_labels_are_boxes() {
+        let m = Manifest::synthetic();
+        let ds = m.dataset("synthloc").unwrap();
+        let (_, labels) = m.load_test_set(ds).unwrap();
+        match labels {
+            Labels::Boxes(b) => {
+                assert_eq!(b.len(), SYNTH_N_TEST);
+                assert!(b.iter().all(|x| x.iter().all(|v| (0.0..=1.0).contains(v))));
+            }
+            _ => panic!("synthloc is a localization dataset"),
+        }
+    }
+
+    #[test]
+    fn hlo_path_reports_missing_batches() {
+        let m = Manifest::synthetic();
+        let e = m.model("synthpets.microresnet.deployed1000").unwrap();
+        assert!(m.hlo_path(e, 2).is_ok());
+        match m.hlo_path(e, 7) {
+            Err(ArtifactError::NoBatch { batch: 7, .. }) => {}
+            other => panic!("expected NoBatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Manifest::load("/no/such/artifact/dir").is_err());
+    }
+}

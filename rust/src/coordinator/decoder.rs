@@ -239,6 +239,58 @@ mod tests {
     }
 
     #[test]
+    fn general_singular_weights_error() {
+        // Two missing slots but linearly dependent parity weights: the
+        // 2x2 system [[1,1],[2,2]] has no solution set to pick from.
+        let w = vec![vec![1., 1.], vec![2., 2.]];
+        let err = decode_general(&w, &[None, None], &[Some(t(vec![3.])), Some(t(vec![6.]))]);
+        assert!(matches!(err, Err(DecodeError::Singular)), "{err:?}");
+    }
+
+    #[test]
+    fn general_near_zero_pivot_forces_row_swap() {
+        // First parity's weight on the first missing slot is ~0: naive
+        // elimination would divide by 1e-12 and destroy precision; partial
+        // pivoting swaps rows and recovers both slots exactly.
+        let f0 = t(vec![3., -1.]);
+        let f1 = t(vec![2., 5.]);
+        let w = vec![vec![1e-12, 1.], vec![1., 1.]];
+        let p0 = t(vec![
+            1e-12 * 3. + 2.,
+            1e-12 * -1. + 5.,
+        ]);
+        let p1 = t(vec![5., 4.]);
+        let rec = decode_general(&w, &[None, None], &[Some(p0), Some(p1)]).unwrap();
+        assert_eq!(rec.len(), 2);
+        for (slot, tensor) in rec {
+            let truth = if slot == 0 { &f0 } else { &f1 };
+            for (a, b) in tensor.data().iter().zip(truth.data()) {
+                assert!((a - b).abs() < 1e-4, "slot {slot}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn general_single_missing_matches_r1_fast_path() {
+        // With exactly one output missing the general decoder must agree
+        // with the r=1 subtraction fast path bit-for-bit (it delegates).
+        let f0 = t(vec![1.5, -2.0, 0.25]);
+        let f2 = t(vec![0.5, 4.0, -1.0]);
+        let weights = vec![vec![1.0f32, 2.0, 3.0], vec![1.0, 4.0, 9.0]];
+        // Parity 0 output for F(X1) = [2, 7, 1]: p = f0 + 2*f1 + 3*f2.
+        let f1 = t(vec![2., 7., 1.]);
+        let mut p0 = t(vec![0.; 3]);
+        for (i, f) in [&f0, &f1, &f2].into_iter().enumerate() {
+            crate::tensor::ops::add_scaled_assign(&mut p0, f, weights[0][i]).unwrap();
+        }
+        let data = [Some(f0.clone()), None, Some(f2.clone())];
+        let general =
+            decode_general(&weights, &data, &[Some(p0.clone()), None]).unwrap();
+        let fast = decode_r1(&weights[0], &p0, &data, 1).unwrap();
+        assert_eq!(general, vec![(1, fast)]);
+    }
+
+    #[test]
     fn general_none_missing_is_empty() {
         let w = vec![vec![1., 1.]];
         let rec = decode_general(

@@ -1,10 +1,31 @@
 //! The ParM coordinator (the paper's system contribution): encoders,
 //! decoders, coding groups, batching, SLO handling, metrics, and the
-//! serving frontend that wires them to instance pools.
+//! serving sessions that wire them to instance pools.
+//!
+//! Architecture (post service-API redesign):
+//!
+//! - [`service`] holds the declarative surface: [`service::Mode`],
+//!   [`service::ServiceConfig`], [`service::ModelSet`], plus the one-shot
+//!   [`service::Service::run`] experiment shim.
+//! - [`session`] is the serving engine: [`session::ServiceBuilder`]
+//!   assembles the cluster substrate (network, faults, tenancy, shuffles,
+//!   instance pools) from a config; [`session::ServiceHandle`] is the
+//!   long-lived client surface — `submit(query) -> QueryId`,
+//!   `poll()`/`drain() -> Vec<Resolved>`, `shutdown() -> RunResult`.
+//! - [`scheme`] is the extension seam: an object-safe
+//!   [`scheme::RedundancyScheme`] trait consulted at dispatch and
+//!   completion time, with ParM and the paper's four baselines as
+//!   implementations. **To add a new redundancy scheme**, implement the
+//!   trait (pool layout, dispatch plan, completion→resolution rule) and
+//!   expose it via a [`service::Mode`] variant; batching, pools, faults,
+//!   shuffles, tenancy, SLO handling, and metrics all come for free. See
+//!   the `scheme` module docs for the walk-through.
 
 pub mod batcher;
 pub mod coding;
 pub mod decoder;
 pub mod encoder;
 pub mod metrics;
+pub mod scheme;
 pub mod service;
+pub mod session;

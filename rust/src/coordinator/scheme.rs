@@ -1,0 +1,680 @@
+//! Pluggable redundancy schemes: the paper's framing made executable.
+//!
+//! ParM's contribution is a *general* coding-based resilience layer —
+//! encoder, parity model, and decoder are interchangeable components, and
+//! the evaluation's baselines differ from ParM only in how queries are
+//! given redundancy and how completions resolve them. [`RedundancyScheme`]
+//! is that seam: an object-safe strategy consulted by the serving session
+//! at exactly two points —
+//!
+//! - [`RedundancyScheme::plan_dispatch`]: a sealed query batch arrives;
+//!   the scheme decides which pools receive which jobs (and, for ParM,
+//!   accumulates the coding group and emits the encoded parity job when
+//!   the group seals);
+//! - [`RedundancyScheme::on_completion`]: a worker finished a job; the
+//!   scheme decides which queries that resolves and with what
+//!   [`Outcome`] (for ParM this is where the decoder runs).
+//!
+//! The five schemes of the paper ship as implementations: [`ParmScheme`]
+//! (§3), [`NoRedundancyScheme`], [`EqualResourcesScheme`] (§5.1),
+//! [`ApproxBackupScheme`] (§5.2.6), and [`ReplicationScheme`] (§2.2).
+//! To add a new scheme (an ApproxIFER-style rateless code, multi-group
+//! striping, …): implement the trait, give [`Mode`] a variant (or
+//! construct the scheme directly and hand it to the session), and the
+//! whole substrate — pools, faults, shuffles, tenancy, batching, metrics
+//! — comes for free.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::coordinator::batcher::SealedBatch;
+use crate::coordinator::coding::GroupTracker;
+use crate::coordinator::encoder::Encoder;
+use crate::coordinator::metrics::Outcome;
+use crate::coordinator::service::Mode;
+use crate::runtime::instance::{Completion, Job, JobKind};
+
+/// Which pool a planned job goes to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    Deployed,
+    /// The r_index-th parity pool.
+    Parity(usize),
+    /// The approximate-backup pool.
+    Approx,
+}
+
+/// Instance-id layout a scheme needs, consumed by the session builder.
+/// Ids are global (indices into the cluster-wide Network/FaultPlan).
+pub struct PoolLayout {
+    pub deployed: Vec<usize>,
+    /// One id set per parity pool (index = r_index).
+    pub parity: Vec<Vec<usize>>,
+    pub approx: Option<Vec<usize>>,
+}
+
+/// A scheme's verdict that some queries now have predictions.
+#[derive(Debug)]
+pub struct Resolution {
+    pub query_ids: Vec<u64>,
+    /// When the resolving completion finished (latency accounting).
+    pub at: Instant,
+    pub outcome: Outcome,
+}
+
+/// What to do with one sealed batch.
+#[derive(Debug, Default)]
+pub struct DispatchPlan {
+    pub jobs: Vec<(Target, Job)>,
+    /// Resolutions surfaced as a side effect (e.g. buffered completions
+    /// that became decodable when their coding group registered).
+    pub resolutions: Vec<Resolution>,
+}
+
+/// A redundancy scheme: object-safe so sessions hold `Box<dyn ...>`.
+///
+/// A scheme instance is owned by one [`crate::coordinator::session::ServiceHandle`]
+/// and called from its thread only — implementations keep plain mutable
+/// state (coding groups, dedup maps) without locking.
+pub trait RedundancyScheme: Send {
+    fn name(&self) -> &'static str;
+
+    /// Extra instances beyond the m deployed ones this scheme uses.
+    fn extra_instances(&self, m: usize) -> usize;
+
+    /// How the `m + extra_instances(m)` instance ids split into pools.
+    fn layout(&self, m: usize) -> PoolLayout;
+
+    /// Plan the dispatch of one sealed (already padded) query batch.
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan;
+
+    /// Fold in a worker completion; returns the queries it resolves.
+    /// Duplicate resolutions for a query id are fine — the session
+    /// resolves each query at most once (first verdict wins).
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution>;
+
+    /// Total decoder reconstructions performed so far.
+    fn reconstructions(&self) -> u64 {
+        0
+    }
+}
+
+impl Mode {
+    /// Instantiate the scheme this mode describes.
+    pub fn scheme(&self) -> Box<dyn RedundancyScheme> {
+        match self {
+            Mode::Parm { k, encoders } => Box::new(ParmScheme::new(*k, encoders.clone())),
+            Mode::NoRedundancy => Box::new(NoRedundancyScheme::default()),
+            Mode::EqualResources { k } => Box::new(EqualResourcesScheme::new(*k)),
+            Mode::ApproxBackup { k } => Box::new(ApproxBackupScheme::new(*k)),
+            Mode::Replication { copies } => Box::new(ReplicationScheme::new(*copies)),
+        }
+    }
+}
+
+fn job(kind: JobKind, batch: &SealedBatch) -> Job {
+    Job {
+        kind,
+        input: batch.input.clone(),
+        query_ids: batch.query_ids.clone(),
+        dispatched_at: Instant::now(),
+    }
+}
+
+/// ceil(m / k): instances per parity/backup pool.
+fn per_pool(m: usize, k: usize) -> usize {
+    (m + k - 1) / k
+}
+
+// ------------------------------------------------------------------------
+// ParM (§3)
+// ------------------------------------------------------------------------
+
+/// ParM: accumulate k data batches per coding group, dispatch one encoded
+/// parity batch per parity model, decode stragglers on completion.
+pub struct ParmScheme {
+    k: usize,
+    encoders: Vec<Encoder>,
+    tracker: GroupTracker,
+    /// The open (unsealed) coding group's batches, in slot order.
+    accum: Vec<(Vec<u64>, crate::tensor::Tensor)>,
+    /// Id of the open group; every id below it is sealed & registered, so
+    /// "is this group registered?" is a comparison, not a set lookup.
+    next_group: u64,
+    /// Data completions that raced ahead of their group's registration
+    /// (only ever for the open group; drained when it seals).
+    orphans: HashMap<u64, Vec<Completion>>,
+}
+
+impl ParmScheme {
+    pub fn new(k: usize, encoders: Vec<Encoder>) -> ParmScheme {
+        assert!(k >= 1, "coding group size must be >= 1");
+        assert!(!encoders.is_empty(), "ParM needs at least one encoder");
+        ParmScheme {
+            tracker: GroupTracker::new(k, &encoders),
+            k,
+            encoders,
+            accum: Vec::new(),
+            next_group: 0,
+            orphans: HashMap::new(),
+        }
+    }
+
+    fn registered(&self, group: u64) -> bool {
+        group < self.next_group
+    }
+
+    fn apply_tracked(&mut self, c: Completion, out: &mut Vec<Resolution>) {
+        let at = c.finished_at;
+        let res = match c.kind {
+            JobKind::Data { group, slot } => self.tracker.on_data(group, slot, c.output),
+            JobKind::Parity { group, r_index } => {
+                self.tracker.on_parity(group, r_index, c.output)
+            }
+            _ => return,
+        };
+        for (_slot, ids, _out, reconstructed) in res.resolved {
+            out.push(Resolution {
+                query_ids: ids,
+                at,
+                outcome: if reconstructed {
+                    Outcome::Reconstructed
+                } else {
+                    Outcome::Native
+                },
+            });
+        }
+    }
+}
+
+impl RedundancyScheme for ParmScheme {
+    fn name(&self) -> &'static str {
+        "parm"
+    }
+
+    fn extra_instances(&self, m: usize) -> usize {
+        per_pool(m, self.k) * self.encoders.len().max(1)
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        let per = per_pool(m, self.k);
+        PoolLayout {
+            deployed: (0..m).collect(),
+            parity: (0..self.encoders.len())
+                .map(|ri| (m + ri * per..m + (ri + 1) * per).collect())
+                .collect(),
+            approx: None,
+        }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let mut plan = DispatchPlan::default();
+        let gid = self.next_group;
+        let slot = self.accum.len();
+        plan.jobs
+            .push((Target::Deployed, job(JobKind::Data { group: gid, slot }, &batch)));
+        self.accum.push((batch.query_ids, batch.input));
+
+        if self.accum.len() == self.k {
+            // Seal the coding group: register, encode, dispatch parities.
+            let ids: Vec<Vec<u64>> = self.accum.iter().map(|(i, _)| i.clone()).collect();
+            self.tracker.register(gid, ids);
+            self.next_group += 1;
+            let inputs: Vec<&crate::tensor::Tensor> =
+                self.accum.iter().map(|(_, t)| t).collect();
+            for (ri, enc) in self.encoders.iter().enumerate() {
+                match enc.encode_batches(&inputs) {
+                    Ok(parity) => plan.jobs.push((
+                        Target::Parity(ri),
+                        Job {
+                            kind: JobKind::Parity { group: gid, r_index: ri },
+                            input: parity,
+                            query_ids: Vec::new(),
+                            dispatched_at: Instant::now(),
+                        },
+                    )),
+                    Err(e) => log::error!("encode failed: {e}"),
+                }
+            }
+            self.accum.clear();
+            // Completions that arrived before the group registered.
+            if let Some(cs) = self.orphans.remove(&gid) {
+                for c in cs {
+                    self.apply_tracked(c, &mut plan.resolutions);
+                }
+            }
+        }
+        plan
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        let mut out = Vec::new();
+        match c.kind {
+            JobKind::Data { group, .. } => {
+                // §3.1: predictions returned by model instances go straight
+                // back to clients, independent of coding-group state.
+                out.push(Resolution {
+                    query_ids: c.query_ids.clone(),
+                    at: c.finished_at,
+                    outcome: Outcome::Native,
+                });
+                if self.registered(group) {
+                    self.apply_tracked(c, &mut out);
+                } else {
+                    self.orphans.entry(group).or_default().push(c);
+                }
+            }
+            JobKind::Parity { group, .. } => {
+                // Parities dispatch at seal time, so the group is always
+                // registered; buffer defensively anyway.
+                if self.registered(group) {
+                    self.apply_tracked(c, &mut out);
+                } else {
+                    self.orphans.entry(group).or_default().push(c);
+                }
+            }
+            JobKind::Replica { .. } | JobKind::Background => {}
+        }
+        out
+    }
+
+    fn reconstructions(&self) -> u64 {
+        self.tracker.reconstructions
+    }
+}
+
+// ------------------------------------------------------------------------
+// Replica-style schemes (baselines)
+// ------------------------------------------------------------------------
+
+/// First-copy-wins bookkeeping shared by every replica-style scheme.
+/// Entries are removed once all copies of a group completed, so memory
+/// stays bounded by in-flight work (plus any copies lost to failures).
+#[derive(Default)]
+struct ReplicaTracker {
+    /// group -> (resolved?, completions seen).
+    inflight: HashMap<u64, (bool, usize)>,
+}
+
+impl ReplicaTracker {
+    /// Returns the outcome to resolve with, if this completion is first.
+    fn on_completion(&mut self, c: &Completion, copies: usize) -> Option<Outcome> {
+        let JobKind::Replica { group, slot } = c.kind else { return None };
+        let entry = self.inflight.entry(group).or_insert((false, 0));
+        entry.1 += 1;
+        let first = !entry.0;
+        entry.0 = true;
+        if entry.1 >= copies {
+            self.inflight.remove(&group);
+        }
+        if first {
+            Some(if slot > 0 { Outcome::Replica } else { Outcome::Native })
+        } else {
+            None
+        }
+    }
+}
+
+fn replica_resolution(c: &Completion, outcome: Outcome) -> Resolution {
+    Resolution { query_ids: c.query_ids.clone(), at: c.finished_at, outcome }
+}
+
+/// No redundancy: just the m deployed instances (§5.1 baseline floor).
+#[derive(Default)]
+pub struct NoRedundancyScheme {
+    next_group: u64,
+}
+
+impl RedundancyScheme for NoRedundancyScheme {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn extra_instances(&self, _m: usize) -> usize {
+        0
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        PoolLayout { deployed: (0..m).collect(), parity: Vec::new(), approx: None }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let gid = self.next_group;
+        self.next_group += 1;
+        DispatchPlan {
+            jobs: vec![(
+                Target::Deployed,
+                job(JobKind::Replica { group: gid, slot: 0 }, &batch),
+            )],
+            resolutions: Vec::new(),
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        match c.kind {
+            // Single copy: every replica completion resolves its queries.
+            JobKind::Replica { .. } => vec![replica_resolution(&c, Outcome::Native)],
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Equal-Resources (§5.1): ParM's instance count, all serving the
+/// deployed model behind one load balancer.
+pub struct EqualResourcesScheme {
+    k: usize,
+    next_group: u64,
+}
+
+impl EqualResourcesScheme {
+    pub fn new(k: usize) -> EqualResourcesScheme {
+        EqualResourcesScheme { k, next_group: 0 }
+    }
+}
+
+impl RedundancyScheme for EqualResourcesScheme {
+    fn name(&self) -> &'static str {
+        "equal-resources"
+    }
+
+    fn extra_instances(&self, m: usize) -> usize {
+        per_pool(m, self.k)
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        // The extra instances join the deployed pool.
+        PoolLayout {
+            deployed: (0..m + self.extra_instances(m)).collect(),
+            parity: Vec::new(),
+            approx: None,
+        }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let gid = self.next_group;
+        self.next_group += 1;
+        DispatchPlan {
+            jobs: vec![(
+                Target::Deployed,
+                job(JobKind::Replica { group: gid, slot: 0 }, &batch),
+            )],
+            resolutions: Vec::new(),
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        match c.kind {
+            JobKind::Replica { .. } => vec![replica_resolution(&c, Outcome::Native)],
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Approximate backup (§5.2.6): every batch also goes to a pool of m/k
+/// cheaper models; whichever prediction arrives first wins.
+pub struct ApproxBackupScheme {
+    k: usize,
+    next_group: u64,
+    replicas: ReplicaTracker,
+}
+
+impl ApproxBackupScheme {
+    pub fn new(k: usize) -> ApproxBackupScheme {
+        ApproxBackupScheme { k, next_group: 0, replicas: ReplicaTracker::default() }
+    }
+}
+
+impl RedundancyScheme for ApproxBackupScheme {
+    fn name(&self) -> &'static str {
+        "approx-backup"
+    }
+
+    fn extra_instances(&self, m: usize) -> usize {
+        per_pool(m, self.k)
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        PoolLayout {
+            deployed: (0..m).collect(),
+            parity: Vec::new(),
+            approx: Some((m..m + self.extra_instances(m)).collect()),
+        }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let gid = self.next_group;
+        self.next_group += 1;
+        DispatchPlan {
+            jobs: vec![
+                (Target::Deployed, job(JobKind::Replica { group: gid, slot: 0 }, &batch)),
+                (Target::Approx, job(JobKind::Replica { group: gid, slot: 1 }, &batch)),
+            ],
+            resolutions: Vec::new(),
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        match self.replicas.on_completion(&c, 2) {
+            Some(outcome) => vec![replica_resolution(&c, outcome)],
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Full replication (§2.2): every batch dispatched `copies` times to the
+/// deployed pool; first copy wins.
+pub struct ReplicationScheme {
+    copies: usize,
+    next_group: u64,
+    replicas: ReplicaTracker,
+}
+
+impl ReplicationScheme {
+    pub fn new(copies: usize) -> ReplicationScheme {
+        assert!(copies >= 1);
+        ReplicationScheme { copies, next_group: 0, replicas: ReplicaTracker::default() }
+    }
+}
+
+impl RedundancyScheme for ReplicationScheme {
+    fn name(&self) -> &'static str {
+        "replication"
+    }
+
+    fn extra_instances(&self, _m: usize) -> usize {
+        0
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        PoolLayout { deployed: (0..m).collect(), parity: Vec::new(), approx: None }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let gid = self.next_group;
+        self.next_group += 1;
+        DispatchPlan {
+            jobs: (0..self.copies)
+                .map(|c| {
+                    (Target::Deployed, job(JobKind::Replica { group: gid, slot: c }, &batch))
+                })
+                .collect(),
+            resolutions: Vec::new(),
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        match self.replicas.on_completion(&c, self.copies) {
+            Some(outcome) => vec![replica_resolution(&c, outcome)],
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn sealed(ids: Vec<u64>, v: f32) -> SealedBatch {
+        SealedBatch {
+            input: Tensor::filled(vec![ids.len().max(1), 2], v),
+            query_ids: ids,
+            oldest_arrival: Instant::now(),
+        }
+    }
+
+    fn completion(kind: JobKind, ids: Vec<u64>, out: Tensor) -> Completion {
+        Completion {
+            kind,
+            instance: 0,
+            query_ids: ids,
+            output: out,
+            finished_at: Instant::now(),
+            exec_time: std::time::Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn mode_scheme_names_and_extras_match_legacy_enum() {
+        let modes = [
+            Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
+            Mode::NoRedundancy,
+            Mode::EqualResources { k: 3 },
+            Mode::ApproxBackup { k: 2 },
+            Mode::Replication { copies: 2 },
+        ];
+        for m in &modes {
+            let s = m.scheme();
+            assert_eq!(s.name(), m.name());
+            for inst in [1usize, 4, 12, 24] {
+                assert_eq!(s.extra_instances(inst), m.extra_instances(inst), "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn layouts_partition_the_cluster() {
+        for (mode, m) in [
+            (Mode::Parm { k: 2, encoders: vec![Encoder::sum(2), Encoder::sum_r(2, 1)] }, 4),
+            (Mode::NoRedundancy, 5),
+            (Mode::EqualResources { k: 2 }, 4),
+            (Mode::ApproxBackup { k: 2 }, 4),
+            (Mode::Replication { copies: 3 }, 6),
+        ] {
+            let s = mode.scheme();
+            let total = m + s.extra_instances(m);
+            let l = s.layout(m);
+            let mut all: Vec<usize> = l.deployed.clone();
+            for p in &l.parity {
+                all.extend(p);
+            }
+            if let Some(a) = &l.approx {
+                all.extend(a);
+            }
+            all.sort_unstable();
+            assert_eq!(all, (0..total).collect::<Vec<_>>(), "{} m={m}", s.name());
+        }
+    }
+
+    #[test]
+    fn parm_seals_group_and_emits_parity() {
+        let mut s = ParmScheme::new(2, vec![Encoder::sum(2)]);
+        let p1 = s.plan_dispatch(sealed(vec![0], 1.0));
+        assert_eq!(p1.jobs.len(), 1, "first batch: data only");
+        assert!(matches!(p1.jobs[0].1.kind, JobKind::Data { group: 0, slot: 0 }));
+        let p2 = s.plan_dispatch(sealed(vec![1], 2.0));
+        assert_eq!(p2.jobs.len(), 2, "second batch seals: data + parity");
+        assert!(matches!(p2.jobs[1].0, Target::Parity(0)));
+        assert!(matches!(p2.jobs[1].1.kind, JobKind::Parity { group: 0, r_index: 0 }));
+        // Parity input = sum of the two batches.
+        assert_eq!(p2.jobs[1].1.input.data()[0], 3.0);
+        // Next batch opens group 1.
+        let p3 = s.plan_dispatch(sealed(vec![2], 0.0));
+        assert!(matches!(p3.jobs[0].1.kind, JobKind::Data { group: 1, slot: 0 }));
+    }
+
+    #[test]
+    fn parm_reconstructs_straggler_via_on_completion() {
+        let mut s = ParmScheme::new(2, vec![Encoder::sum(2)]);
+        let _ = s.plan_dispatch(sealed(vec![10], 0.0));
+        let _ = s.plan_dispatch(sealed(vec![11], 0.0));
+        // Data slot 0 arrives; slot 1 never does; parity decodes it.
+        let f0 = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let fp = Tensor::new(vec![1, 2], vec![4.0, 6.0]).unwrap();
+        let r0 = s.on_completion(completion(
+            JobKind::Data { group: 0, slot: 0 },
+            vec![10],
+            f0,
+        ));
+        assert!(r0.iter().any(|r| r.outcome == Outcome::Native && r.query_ids == vec![10]));
+        let r1 = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 0 },
+            vec![],
+            fp,
+        ));
+        let rec = r1.iter().find(|r| r.outcome == Outcome::Reconstructed).unwrap();
+        assert_eq!(rec.query_ids, vec![11]);
+        assert_eq!(s.reconstructions(), 1);
+    }
+
+    #[test]
+    fn parm_buffers_orphan_completions_until_seal() {
+        let mut s = ParmScheme::new(2, vec![Encoder::sum(2)]);
+        let _ = s.plan_dispatch(sealed(vec![0], 0.0));
+        // Completion for the open group's slot 0 before the group seals.
+        let r = s.on_completion(completion(
+            JobKind::Data { group: 0, slot: 0 },
+            vec![0],
+            Tensor::new(vec![1, 2], vec![1.0, 1.0]).unwrap(),
+        ));
+        assert_eq!(r.len(), 1, "native resolution still immediate");
+        // Sealing replays the orphan into the tracker; the parity can now
+        // decode the other slot with no further data completions.
+        let plan = s.plan_dispatch(sealed(vec![1], 0.0));
+        assert!(plan.resolutions.iter().all(|x| x.outcome == Outcome::Native));
+        let r = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 0 },
+            vec![],
+            Tensor::new(vec![1, 2], vec![3.0, 3.0]).unwrap(),
+        ));
+        let rec = r.iter().find(|x| x.outcome == Outcome::Reconstructed).unwrap();
+        assert_eq!(rec.query_ids, vec![1]);
+    }
+
+    #[test]
+    fn replication_first_copy_wins_and_state_is_pruned() {
+        let mut s = ReplicationScheme::new(2);
+        let plan = s.plan_dispatch(sealed(vec![5], 0.0));
+        assert_eq!(plan.jobs.len(), 2);
+        let out = Tensor::new(vec![1, 2], vec![0.0, 0.0]).unwrap();
+        let r1 = s.on_completion(completion(
+            JobKind::Replica { group: 0, slot: 1 },
+            vec![5],
+            out.clone(),
+        ));
+        assert_eq!(r1.len(), 1);
+        assert_eq!(r1[0].outcome, Outcome::Replica, "backup copy answered first");
+        let r2 = s.on_completion(completion(
+            JobKind::Replica { group: 0, slot: 0 },
+            vec![5],
+            out,
+        ));
+        assert!(r2.is_empty(), "second copy deduplicated");
+        assert!(s.replicas.inflight.is_empty(), "entry pruned after all copies");
+    }
+
+    #[test]
+    fn approx_backup_dispatches_to_both_pools() {
+        let mut s = ApproxBackupScheme::new(2);
+        let plan = s.plan_dispatch(sealed(vec![7], 0.0));
+        let targets: Vec<Target> = plan.jobs.iter().map(|(t, _)| *t).collect();
+        assert_eq!(targets, vec![Target::Deployed, Target::Approx]);
+        let out = Tensor::new(vec![1, 2], vec![0.0, 0.0]).unwrap();
+        let r = s.on_completion(completion(
+            JobKind::Replica { group: 0, slot: 0 },
+            vec![7],
+            out,
+        ));
+        assert_eq!(r[0].outcome, Outcome::Native);
+    }
+}

@@ -1,40 +1,27 @@
-//! The serving frontend: query intake, batching, dispatch, coding groups,
-//! completion collection, decoding, SLO handling — the full ParM data
-//! path of Figure 4, plus the paper's baselines in the same machinery.
+//! Serving-surface types and the one-shot experiment shim.
 //!
-//! Threads:
-//! - the caller's thread runs the open-loop Poisson generator (arrivals
-//!   never wait for completions, as in the paper's client);
-//! - one worker thread per model instance (deployed, parity, approx);
-//! - one collector thread owns the [`GroupTracker`], resolves queries,
-//!   applies the decode rule, and records latency.
-//!
-//! Baselines share every component except the redundancy scheme:
-//! `NoRedundancy` (m instances), `EqualResources` (m + m/k deployed
-//! instances, §5.1), `ApproxBackup` (replicate to m/k cheap models,
-//! §5.2.6), `Replication` (full query replication, §2.2).
+//! The full ParM data path of Figure 4 lives in two sibling modules now:
+//! [`crate::coordinator::scheme`] (the pluggable redundancy strategies)
+//! and [`crate::coordinator::session`] (the `ServiceBuilder`/
+//! `ServiceHandle` serving session). This module keeps the declarative
+//! surface — [`Mode`], [`ServiceConfig`], [`ModelSet`], [`RunResult`] —
+//! and [`Service::run`], the seed's one-shot open-loop experiment entry
+//! point, now a thin compatibility shim: build a session, drive the
+//! Poisson client through it, drain, shut down.
 
-use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cluster::faults::FaultPlan;
 use crate::cluster::hardware::Profile;
-use crate::cluster::network::{Network, ShuffleGen};
-use crate::cluster::tenancy::Tenancy;
-use crate::coordinator::batcher::{Batcher, PendingQuery};
-use crate::coordinator::coding::GroupTracker;
 use crate::coordinator::encoder::Encoder;
-use crate::coordinator::metrics::{Outcome, RunMetrics};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::session::ServiceBuilder;
 use crate::runtime::engine::Executable;
-use crate::runtime::instance::{Completion, Execution, Job, JobKind, WorkerEnv};
-use crate::runtime::pool::{Balancing, Pool};
+use crate::runtime::pool::Balancing;
 use crate::tensor::Tensor;
-use crate::util::rng::Pcg64;
 
-/// Redundancy scheme under test.
+/// Redundancy scheme under test (declarative form; [`Mode::scheme`] in
+/// `coordinator::scheme` instantiates the strategy object).
 #[derive(Clone, Debug)]
 pub enum Mode {
     /// ParM with k data batches per coding group and r parity models.
@@ -50,12 +37,13 @@ pub enum Mode {
 }
 
 impl Mode {
-    /// Extra instances beyond m that this mode uses.
+    /// Extra instances beyond m that this mode uses. (Kept as a pure
+    /// function of the enum so config validation never has to build a
+    /// scheme; `RedundancyScheme::extra_instances` must agree — pinned by
+    /// a test in `coordinator::scheme`.)
     pub fn extra_instances(&self, m: usize) -> usize {
         match self {
-            Mode::Parm { k, encoders } => {
-                (m + k - 1) / k * encoders.len().max(1)
-            }
+            Mode::Parm { k, encoders } => (m + k - 1) / k * encoders.len().max(1),
             Mode::NoRedundancy => 0,
             Mode::EqualResources { k } | Mode::ApproxBackup { k } => (m + k - 1) / k,
             Mode::Replication { .. } => 0,
@@ -96,10 +84,10 @@ pub struct ServiceConfig {
     pub balancing: Balancing,
     pub seed: u64,
     /// Scheduled hard failures: (instance, start offset, duration;
-    /// Duration::ZERO = permanent). Applied by a scheduler thread.
+    /// Duration::ZERO = permanent). Applied by the session's injector.
     pub fault_schedule: Vec<(usize, Duration, Duration)>,
     /// true (default): replay calibrated service times (parallel on any
-    /// host); false: execute PJRT per query (needs >= total-instances
+    /// host); false: execute the engine per query (needs >= total-instances
     /// cores for faithful parallelism). See runtime::instance::Execution.
     pub modeled_execution: bool,
 }
@@ -134,20 +122,13 @@ pub struct ModelSet {
     pub approx: Option<Arc<Executable>>,
 }
 
-/// Result of a service run.
+/// Result of a service run / session.
 pub struct RunResult {
     pub metrics: RunMetrics,
     pub mean_service: Duration,
     pub wall: Duration,
     pub dropped_jobs: u64,
     pub reconstructions: u64,
-}
-
-enum Event {
-    Register { group: u64, query_ids: Vec<Vec<u64>> },
-    Arrived { query_ids: Vec<u64>, at: Instant },
-    Done(Completion),
-    GeneratorDone { total_queries: u64 },
 }
 
 /// Measure the deployed model's uncontended mean service time.
@@ -168,6 +149,11 @@ pub struct Service;
 impl Service {
     /// Run an open-loop experiment: `n_queries` Poisson arrivals at `rate`
     /// qps, drawing query tensors cyclically from `queries`.
+    ///
+    /// Compatibility shim over the session API — equivalent to
+    /// [`ServiceBuilder::build`] + [`crate::coordinator::session::ServiceHandle::run_open_loop`]
+    /// + `drain` + `shutdown`. New code that wants to submit its own
+    /// traffic should use the session API directly.
     pub fn run(
         cfg: &ServiceConfig,
         models: &ModelSet,
@@ -175,517 +161,9 @@ impl Service {
         n_queries: u64,
         rate: f64,
     ) -> anyhow::Result<RunResult> {
-        let t_run0 = Instant::now();
-        let mut rng = Pcg64::new(cfg.seed);
-
-        // ---- cluster substrate ----
-        let extra = cfg.mode.extra_instances(cfg.m);
-        let total_instances = cfg.m + extra;
-        let network = Network::new(total_instances, cfg.profile);
-        let faults = FaultPlan::new(total_instances);
-        let sample = Tensor::batch(
-            &std::iter::repeat(queries[0].clone())
-                .take(cfg.batch_size)
-                .collect::<Vec<_>>(),
-        )?;
-        // Per-pool execution mode: calibrate a service-time model from the
-        // real executable, or run real PJRT per query (see Execution docs).
-        let make_execution = |exe: &Arc<Executable>| -> anyhow::Result<Execution> {
-            if cfg.modeled_execution {
-                let model = crate::runtime::instance::ServiceModel::measure(exe, &sample, 60)
-                    .map_err(|e| anyhow::anyhow!("calibration failed: {e}"))?;
-                Ok(Execution::Modeled(Arc::new(model)))
-            } else {
-                Ok(Execution::Real)
-            }
-        };
-        let deployed_execution = make_execution(&models.deployed)?;
-        let mean_service = match &deployed_execution {
-            Execution::Modeled(m) => m.mean(),
-            Execution::Real => measure_service(&models.deployed, &sample, 10),
-        };
-        let tenancy = if cfg.light_tenancy {
-            Tenancy::light(total_instances, mean_service, &mut rng)
-        } else {
-            Tenancy::none()
-        };
-        let env = Arc::new(WorkerEnv {
-            profile: cfg.profile,
-            network: network.clone(),
-            tenancy,
-            faults: faults.clone(),
-            time_scale: cfg.time_scale,
-            hol_range: cfg.hol_range,
-            mean_service,
-        });
-
-        let shuffles = if cfg.shuffles > 0 {
-            Some(ShuffleGen::start(
-                network.clone(),
-                cfg.shuffles,
-                cfg.time_scale,
-                rng.next_u64(),
-            ))
-        } else {
-            None
-        };
-
-        // Scheduled hard failures (failure-injection experiments/tests).
-        let fault_thread = if !cfg.fault_schedule.is_empty() {
-            let plan = faults.clone();
-            let schedule = cfg.fault_schedule.clone();
-            Some(std::thread::spawn(move || {
-                let start = Instant::now();
-                let mut pending = schedule;
-                pending.sort_by_key(|&(_, at, _)| at);
-                for (inst, at, dur) in pending {
-                    let now = start.elapsed();
-                    if at > now {
-                        std::thread::sleep(at - now);
-                    }
-                    if dur.is_zero() {
-                        plan.kill(inst);
-                        log::info!("fault: instance {inst} killed");
-                    } else {
-                        plan.fail_for(inst, dur);
-                        log::info!("fault: instance {inst} down for {dur:?}");
-                    }
-                }
-            }))
-        } else {
-            None
-        };
-
-        // ---- pools ----
-        let (done_tx, done_rx) = mpsc::channel::<Event>();
-        let comp_tx = {
-            let tx = done_tx.clone();
-            move |c: Completion| {
-                let _ = tx.send(Event::Done(c));
-            }
-        };
-        // Adapter: workers send Completion over an mpsc Sender<Completion>;
-        // wrap via a relay thread-free trick: give workers their own channel
-        // and forward. Simpler: a dedicated Sender<Completion> relay thread.
-        let (raw_tx, raw_rx) = mpsc::channel::<Completion>();
-        let relay = std::thread::spawn(move || {
-            while let Ok(c) = raw_rx.recv() {
-                comp_tx(c);
-            }
-        });
-
-        let deployed_ids: Vec<usize> = match &cfg.mode {
-            Mode::EqualResources { .. } => (0..total_instances).collect(),
-            _ => (0..cfg.m).collect(),
-        };
-        let deployed_pool = Pool::spawn(
-            "deployed",
-            models.deployed.clone(),
-            deployed_execution.clone(),
-            deployed_ids,
-            cfg.balancing,
-            raw_tx.clone(),
-            env.clone(),
-            rng.next_u64(),
-        );
-
-        let (parity_pools, encoders): (Vec<Pool>, Vec<Encoder>) = match &cfg.mode {
-            Mode::Parm { k, encoders } => {
-                let per = (cfg.m + k - 1) / k;
-                let mut pools = Vec::new();
-                for (ri, _) in encoders.iter().enumerate() {
-                    let ids: Vec<usize> =
-                        (cfg.m + ri * per..cfg.m + (ri + 1) * per).collect();
-                    pools.push(Pool::spawn(
-                        &format!("parity{ri}"),
-                        models.parities[ri].clone(),
-                        make_execution(&models.parities[ri])?,
-                        ids,
-                        cfg.balancing,
-                        raw_tx.clone(),
-                        env.clone(),
-                        rng.next_u64(),
-                    ));
-                }
-                (pools, encoders.clone())
-            }
-            _ => (Vec::new(), Vec::new()),
-        };
-
-        let approx_pool = match &cfg.mode {
-            Mode::ApproxBackup { k } => {
-                let per = (cfg.m + k - 1) / k;
-                let ids: Vec<usize> = (cfg.m..cfg.m + per).collect();
-                Some(Pool::spawn(
-                    "approx",
-                    models
-                        .approx
-                        .clone()
-                        .ok_or_else(|| anyhow::anyhow!("ApproxBackup needs models.approx"))?,
-                    make_execution(models.approx.as_ref().unwrap())?,
-                    ids,
-                    cfg.balancing,
-                    raw_tx.clone(),
-                    env.clone(),
-                    rng.next_u64(),
-                ))
-            }
-            _ => None,
-        };
-        drop(raw_tx);
-
-        // ---- collector ----
-        let k_for_tracker = match &cfg.mode {
-            Mode::Parm { k, .. } => *k,
-            _ => 0,
-        };
-        let collector_cfg = CollectorCfg {
-            k: k_for_tracker,
-            encoders: encoders.clone(),
-            slo: cfg.slo,
-        };
-        let collector =
-            std::thread::spawn(move || collector_loop(done_rx, collector_cfg));
-
-        // ---- open-loop generation ----
-        let start = Instant::now();
-        let mut batcher = Batcher::new(cfg.batch_size, cfg.batch_timeout);
-        let mut next_arrival = 0.0f64;
-        let mut group_accum: Vec<(Vec<u64>, Tensor)> = Vec::new();
-        let mut group_id = 0u64;
-        let dispatch_batch = |mut sealed: crate::coordinator::batcher::SealedBatch,
-                                  group_accum: &mut Vec<(Vec<u64>, Tensor)>,
-                                  group_id: &mut u64| {
-            // Executables are compiled for a fixed batch size: pad partial
-            // batches (timeout / shutdown flushes) by repeating the last
-            // sample. Padded rows' outputs are never routed to a query id,
-            // and padding keeps data/parity tensor shapes aligned for the
-            // decoder.
-            if sealed.input.shape()[0] < cfg.batch_size {
-                let mut rows = sealed.input.unbatch();
-                while rows.len() < cfg.batch_size {
-                    rows.push(rows.last().unwrap().clone());
-                }
-                sealed.input = Tensor::batch(&rows).expect("uniform rows");
-            }
-            let slot = group_accum.len();
-            let gid = *group_id;
-            let job = Job {
-                kind: if matches!(cfg.mode, Mode::Parm { .. }) {
-                    JobKind::Data { group: gid, slot }
-                } else {
-                    JobKind::Replica { group: gid, slot: 0 }
-                },
-                input: sealed.input.clone(),
-                query_ids: sealed.query_ids.clone(),
-                dispatched_at: Instant::now(),
-            };
-            match &cfg.mode {
-                Mode::Replication { copies } => {
-                    for c in 0..*copies {
-                        deployed_pool.dispatch(Job {
-                            kind: JobKind::Replica { group: gid, slot: c },
-                            input: sealed.input.clone(),
-                            query_ids: sealed.query_ids.clone(),
-                            dispatched_at: Instant::now(),
-                        });
-                    }
-                    *group_id += 1;
-                }
-                Mode::ApproxBackup { .. } => {
-                    deployed_pool.dispatch(job);
-                    if let Some(ap) = &approx_pool {
-                        ap.dispatch(Job {
-                            kind: JobKind::Replica { group: gid, slot: 1 },
-                            input: sealed.input.clone(),
-                            query_ids: sealed.query_ids.clone(),
-                            dispatched_at: Instant::now(),
-                        });
-                    }
-                    *group_id += 1;
-                }
-                Mode::Parm { k, .. } => {
-                    deployed_pool.dispatch(job);
-                    group_accum.push((sealed.query_ids.clone(), sealed.input));
-                    if group_accum.len() == *k {
-                        // Seal the coding group: register, encode, dispatch.
-                        let ids: Vec<Vec<u64>> =
-                            group_accum.iter().map(|(i, _)| i.clone()).collect();
-                        let _ = done_tx.send(Event::Register {
-                            group: gid,
-                            query_ids: ids,
-                        });
-                        let inputs: Vec<&Tensor> =
-                            group_accum.iter().map(|(_, t)| t).collect();
-                        for (ri, enc) in encoders.iter().enumerate() {
-                            match enc.encode_batches(&inputs) {
-                                Ok(parity) => parity_pools[ri].dispatch(Job {
-                                    kind: JobKind::Parity { group: gid, r_index: ri },
-                                    input: parity,
-                                    query_ids: Vec::new(),
-                                    dispatched_at: Instant::now(),
-                                }),
-                                Err(e) => log::error!("encode failed: {e}"),
-                            }
-                        }
-                        group_accum.clear();
-                        *group_id += 1;
-                    }
-                }
-                _ => {
-                    deployed_pool.dispatch(job);
-                    *group_id += 1;
-                }
-            }
-        };
-
-        let mut qid = 0u64;
-        while qid < n_queries {
-            // Pace the open loop.
-            next_arrival += rng.exponential(rate);
-            let due = start + Duration::from_secs_f64(next_arrival);
-            let now = Instant::now();
-            if due > now {
-                // Honor batch timeouts while idle.
-                if let Some(deadline) = batcher.next_deadline() {
-                    if deadline < due {
-                        let wait = deadline.saturating_duration_since(now);
-                        std::thread::sleep(wait);
-                        if let Some(sealed) = batcher.flush_due(Instant::now()) {
-                            dispatch_batch(sealed, &mut group_accum, &mut group_id);
-                        }
-                    }
-                }
-                let now2 = Instant::now();
-                if due > now2 {
-                    std::thread::sleep(due - now2);
-                }
-            }
-            let arrived = Instant::now();
-            let input = queries[(qid as usize) % queries.len()].clone();
-            let _ = done_tx.send(Event::Arrived { query_ids: vec![qid], at: arrived });
-            if let Some(sealed) = batcher.offer(PendingQuery { id: qid, input, arrived }) {
-                dispatch_batch(sealed, &mut group_accum, &mut group_id);
-            }
-            qid += 1;
-        }
-        if let Some(sealed) = batcher.flush_all() {
-            dispatch_batch(sealed, &mut group_accum, &mut group_id);
-        }
-        // Incomplete trailing coding group: its batches were already
-        // dispatched to deployed instances; they resolve natively.
-        let _ = done_tx.send(Event::GeneratorDone { total_queries: n_queries });
-        drop(done_tx);
-
-        // ---- wait for completion ----
-        let (metrics, reconstructions) = collector.join().expect("collector panicked");
-        if let Some(s) = shuffles {
-            s.stop();
-        }
-        if let Some(t) = fault_thread {
-            let _ = t.join();
-        }
-        deployed_pool.shutdown();
-        for p in parity_pools {
-            p.shutdown();
-        }
-        if let Some(p) = approx_pool {
-            p.shutdown();
-        }
-        let _ = relay.join();
-
-        Ok(RunResult {
-            metrics,
-            mean_service,
-            wall: t_run0.elapsed(),
-            dropped_jobs: crate::runtime::instance::DROPPED_JOBS.load(Ordering::Relaxed),
-            reconstructions,
-        })
-    }
-}
-
-struct CollectorCfg {
-    k: usize,
-    encoders: Vec<Encoder>,
-    slo: Option<Duration>,
-}
-
-fn collector_loop(rx: mpsc::Receiver<Event>, cfg: CollectorCfg) -> (RunMetrics, u64) {
-    let mut metrics = RunMetrics::default();
-    let mut tracker = if cfg.k > 0 {
-        Some(GroupTracker::new(cfg.k, &cfg.encoders))
-    } else {
-        None
-    };
-    // query id -> arrival (pending only).
-    let mut pending: HashMap<u64, Instant> = HashMap::new();
-    // Completions that raced ahead of their group registration.
-    let mut orphans: HashMap<u64, Vec<Completion>> = HashMap::new();
-    // Groups ever registered (distinguishes "evicted" from "not yet
-    // registered": completions for the former are safe no-ops in the
-    // tracker, the latter must be buffered).
-    let mut registered: std::collections::HashSet<u64> = std::collections::HashSet::new();
-    let mut expected: Option<u64> = None;
-    let mut resolved_count = 0u64;
-    // Replica de-dup: group id -> resolved?
-    let mut replica_done: HashMap<u64, bool> = HashMap::new();
-
-    let resolve =
-        |metrics: &mut RunMetrics,
-         pending: &mut HashMap<u64, Instant>,
-         ids: &[u64],
-         at: Instant,
-         outcome: Outcome,
-         resolved_count: &mut u64| {
-            for id in ids {
-                if let Some(arrived) = pending.remove(id) {
-                    metrics.record(arrived, at, outcome);
-                    *resolved_count += 1;
-                }
-            }
-        };
-
-    loop {
-        // SLO sweep granularity.
-        let ev = match rx.recv_timeout(Duration::from_millis(5)) {
-            Ok(ev) => Some(ev),
-            Err(mpsc::RecvTimeoutError::Timeout) => None,
-            Err(mpsc::RecvTimeoutError::Disconnected) => break,
-        };
-        if let Some(ev) = ev {
-            match ev {
-                Event::Arrived { query_ids, at } => {
-                    for id in query_ids {
-                        pending.insert(id, at);
-                    }
-                }
-                Event::Register { group, query_ids } => {
-                    if let Some(tr) = tracker.as_mut() {
-                        tr.register(group, query_ids);
-                        registered.insert(group);
-                        if let Some(cs) = orphans.remove(&group) {
-                            for c in cs {
-                                apply_completion(
-                                    tr,
-                                    c,
-                                    &mut metrics,
-                                    &mut pending,
-                                    &mut resolved_count,
-                                );
-                            }
-                        }
-                    }
-                }
-                Event::Done(c) => match c.kind {
-                    JobKind::Data { group, .. } | JobKind::Parity { group, .. } => {
-                        // §3.1: predictions returned by model instances go
-                        // straight back to clients, independent of coding
-                        // group state.
-                        if matches!(c.kind, JobKind::Data { .. }) {
-                            resolve(
-                                &mut metrics,
-                                &mut pending,
-                                &c.query_ids,
-                                c.finished_at,
-                                Outcome::Native,
-                                &mut resolved_count,
-                            );
-                        }
-                        if let Some(tr) = tracker.as_mut() {
-                            if registered.contains(&group) {
-                                apply_completion(
-                                    tr,
-                                    c,
-                                    &mut metrics,
-                                    &mut pending,
-                                    &mut resolved_count,
-                                );
-                            } else {
-                                orphans.entry(group).or_default().push(c);
-                            }
-                        }
-                    }
-                    JobKind::Replica { group, .. } => {
-                        let done = replica_done.entry(group).or_insert(false);
-                        let outcome = if c.instance_is_backup() {
-                            Outcome::Replica
-                        } else {
-                            Outcome::Native
-                        };
-                        if !*done {
-                            *done = true;
-                            resolve(
-                                &mut metrics,
-                                &mut pending,
-                                &c.query_ids,
-                                c.finished_at,
-                                outcome,
-                                &mut resolved_count,
-                            );
-                        }
-                    }
-                    JobKind::Background => {}
-                },
-                Event::GeneratorDone { total_queries } => {
-                    expected = Some(total_queries);
-                }
-            }
-        }
-
-        // SLO expirations.
-        if let Some(slo) = cfg.slo {
-            let now = Instant::now();
-            let expired: Vec<u64> = pending
-                .iter()
-                .filter(|(_, &t)| now.duration_since(t) >= slo)
-                .map(|(&id, _)| id)
-                .collect();
-            for id in expired {
-                pending.remove(&id);
-                metrics.record_default(slo);
-                resolved_count += 1;
-            }
-        }
-
-        if let Some(total) = expected {
-            if resolved_count >= total {
-                break;
-            }
-        }
-    }
-    let recon = tracker.map(|t| t.reconstructions).unwrap_or(0);
-    (metrics, recon)
-}
-
-impl Completion {
-    fn instance_is_backup(&self) -> bool {
-        matches!(self.kind, JobKind::Replica { slot, .. } if slot > 0)
-    }
-}
-
-fn apply_completion(
-    tr: &mut GroupTracker,
-    c: Completion,
-    metrics: &mut RunMetrics,
-    pending: &mut HashMap<u64, Instant>,
-    resolved_count: &mut u64,
-) {
-    let res = match c.kind {
-        JobKind::Data { group, slot } => tr.on_data(group, slot, c.output),
-        JobKind::Parity { group, r_index } => tr.on_parity(group, r_index, c.output),
-        _ => return,
-    };
-    for (_slot, ids, _out, reconstructed) in res.resolved {
-        let outcome = if reconstructed {
-            Outcome::Reconstructed
-        } else {
-            Outcome::Native
-        };
-        for id in ids {
-            if let Some(arrived) = pending.remove(&id) {
-                metrics.record(arrived, c.finished_at, outcome);
-                *resolved_count += 1;
-            }
-        }
+        let mut handle = ServiceBuilder::new(cfg.clone()).build(models, &queries[0])?;
+        handle.run_open_loop(queries, n_queries, rate);
+        let _ = handle.drain();
+        Ok(handle.shutdown())
     }
 }

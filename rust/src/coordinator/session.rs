@@ -1,0 +1,600 @@
+//! Long-lived serving sessions: [`ServiceBuilder`] assembles the cluster
+//! substrate, [`ServiceHandle`] serves queries against it.
+//!
+//! The seed's `Service::run` was a one-shot batch experiment: it built the
+//! cluster, generated a Poisson arrival stream, collected completions on a
+//! dedicated thread (fed through a relay thread), and tore everything
+//! down. This module splits that monolith along the paper's own seams:
+//!
+//! - [`ServiceBuilder::build`] constructs the substrate once — network,
+//!   fault plan, tenancy, background shuffles, and one instance pool per
+//!   [`crate::coordinator::scheme::PoolLayout`] entry — and calibrates the
+//!   service-time model from the real executables;
+//! - [`ServiceHandle`] is the client surface: [`ServiceHandle::submit`]
+//!   enqueues a query and returns its [`QueryId`]; [`ServiceHandle::poll`]
+//!   / [`ServiceHandle::drain`] return [`Resolved`] predictions;
+//!   [`ServiceHandle::shutdown`] stops the cluster and yields the run's
+//!   [`RunMetrics`]-bearing [`RunResult`].
+//!
+//! Threading: instance workers send [`Completion`]s directly on a cloned
+//! channel sender (the old worker→relay→collector hop is gone); the
+//! handle owns the receiving end plus all coordination state — batcher,
+//! scheme, pending map, metrics — and processes events on the caller's
+//! thread. Completions are timestamped by the workers, so lazy processing
+//! never distorts latency accounting. The handle is `Send`: move it to a
+//! dedicated serving thread for multi-client frontends.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::faults::FaultPlan;
+use crate::cluster::network::{Network, ShuffleGen};
+use crate::cluster::tenancy::Tenancy;
+use crate::coordinator::batcher::{Batcher, PendingQuery, SealedBatch};
+use crate::coordinator::metrics::{Outcome, RunMetrics};
+use crate::coordinator::scheme::{RedundancyScheme, Resolution, Target};
+use crate::coordinator::service::{measure_service, ModelSet, RunResult, ServiceConfig};
+use crate::runtime::engine::Executable;
+use crate::runtime::instance::{Completion, Execution, ServiceModel, WorkerEnv, DROPPED_JOBS};
+use crate::runtime::pool::Pool;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Identifier handed back by [`ServiceHandle::submit`].
+pub type QueryId = u64;
+
+/// A query whose prediction is now available at the frontend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resolved {
+    pub id: QueryId,
+    pub outcome: Outcome,
+    /// Frontend arrival -> prediction available (SLO value for defaults).
+    pub latency: Duration,
+}
+
+/// Builds the cluster substrate for a [`ServiceHandle`].
+pub struct ServiceBuilder {
+    cfg: ServiceConfig,
+}
+
+impl ServiceBuilder {
+    pub fn new(cfg: ServiceConfig) -> ServiceBuilder {
+        ServiceBuilder { cfg }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Tweak the configuration before building.
+    pub fn config_mut(&mut self) -> &mut ServiceConfig {
+        &mut self.cfg
+    }
+
+    /// Assemble the cluster and start serving. `sample_query` calibrates
+    /// the service-time model (any representative query tensor).
+    pub fn build(self, models: &ModelSet, sample_query: &Tensor) -> anyhow::Result<ServiceHandle> {
+        let cfg = self.cfg;
+        let started = Instant::now();
+        let mut rng = Pcg64::new(cfg.seed);
+        let scheme = cfg.mode.scheme();
+
+        // ---- cluster substrate ----
+        let extra = scheme.extra_instances(cfg.m);
+        let total_instances = cfg.m + extra;
+        let network = Network::new(total_instances, cfg.profile);
+        let faults = FaultPlan::new(total_instances);
+        let sample = Tensor::batch(&vec![sample_query.clone(); cfg.batch_size.max(1)])?;
+
+        // Per-pool execution mode: calibrate a service-time model from the
+        // real executable, or run inference per query (see Execution docs).
+        let make_execution = |exe: &Arc<Executable>| -> anyhow::Result<Execution> {
+            if cfg.modeled_execution {
+                let model = ServiceModel::measure(exe, &sample, 60)
+                    .map_err(|e| anyhow::anyhow!("calibration failed: {e}"))?;
+                Ok(Execution::Modeled(Arc::new(model)))
+            } else {
+                Ok(Execution::Real)
+            }
+        };
+        let deployed_execution = make_execution(&models.deployed)?;
+        let mean_service = match &deployed_execution {
+            Execution::Modeled(m) => m.mean(),
+            Execution::Real => measure_service(&models.deployed, &sample, 10),
+        };
+        let tenancy = if cfg.light_tenancy {
+            Tenancy::light(total_instances, mean_service, &mut rng)
+        } else {
+            Tenancy::none()
+        };
+        let env = Arc::new(WorkerEnv {
+            profile: cfg.profile,
+            network: network.clone(),
+            tenancy,
+            faults: faults.clone(),
+            time_scale: cfg.time_scale,
+            hol_range: cfg.hol_range,
+            mean_service,
+        });
+
+        let shuffles = if cfg.shuffles > 0 {
+            Some(ShuffleGen::start(network.clone(), cfg.shuffles, cfg.time_scale, rng.next_u64()))
+        } else {
+            None
+        };
+        let fault_injector = if cfg.fault_schedule.is_empty() {
+            None
+        } else {
+            Some(FaultInjector::start(faults.clone(), cfg.fault_schedule.clone()))
+        };
+
+        // ---- pools (layout dictated by the scheme) ----
+        let layout = scheme.layout(cfg.m);
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let deployed = Pool::spawn(
+            "deployed",
+            models.deployed.clone(),
+            deployed_execution,
+            layout.deployed,
+            cfg.balancing,
+            done_tx.clone(),
+            env.clone(),
+            rng.next_u64(),
+        );
+        let mut parity = Vec::new();
+        for (ri, ids) in layout.parity.into_iter().enumerate() {
+            let exe = models.parities.get(ri).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "scheme {:?} needs parity model {ri}, ModelSet has {}",
+                    scheme.name(),
+                    models.parities.len()
+                )
+            })?;
+            parity.push(Pool::spawn(
+                &format!("parity{ri}"),
+                exe.clone(),
+                make_execution(exe)?,
+                ids,
+                cfg.balancing,
+                done_tx.clone(),
+                env.clone(),
+                rng.next_u64(),
+            ));
+        }
+        let approx = match layout.approx {
+            Some(ids) => {
+                let exe = models
+                    .approx
+                    .clone()
+                    .ok_or_else(|| anyhow::anyhow!("{} needs models.approx", scheme.name()))?;
+                Some(Pool::spawn(
+                    "approx",
+                    exe.clone(),
+                    make_execution(&exe)?,
+                    ids,
+                    cfg.balancing,
+                    done_tx.clone(),
+                    env.clone(),
+                    rng.next_u64(),
+                ))
+            }
+            None => None,
+        };
+        // Workers hold the only senders: the channel disconnects once all
+        // pools shut down.
+        drop(done_tx);
+
+        log::debug!(
+            "session up: scheme={} m={} extra={} batch={}",
+            scheme.name(),
+            cfg.m,
+            extra,
+            cfg.batch_size
+        );
+        Ok(ServiceHandle {
+            batcher: Batcher::new(cfg.batch_size, cfg.batch_timeout),
+            slo: cfg.slo,
+            scheme,
+            pools: Some(PoolSet { deployed, parity, approx }),
+            rx: done_rx,
+            faults,
+            shuffles,
+            fault_injector,
+            pending: HashMap::new(),
+            resolved_out: VecDeque::new(),
+            metrics: RunMetrics::default(),
+            submitted: 0,
+            resolved_count: 0,
+            next_qid: 0,
+            mean_service,
+            started,
+            dropped_at_start: DROPPED_JOBS.load(Ordering::Relaxed),
+            // The handle inherits the builder's stream, so experiment
+            // randomness (tenancy, shuffles, pools, then arrivals) stays
+            // one continuous seeded sequence as in the seed's Service::run.
+            rng,
+        })
+    }
+}
+
+struct PoolSet {
+    deployed: Pool,
+    parity: Vec<Pool>,
+    approx: Option<Pool>,
+}
+
+impl PoolSet {
+    fn dispatch(&self, target: Target, job: crate::runtime::instance::Job) {
+        match target {
+            Target::Deployed => self.deployed.dispatch(job),
+            Target::Parity(ri) => match self.parity.get(ri) {
+                Some(p) => p.dispatch(job),
+                None => log::error!("dispatch to missing parity pool {ri}"),
+            },
+            Target::Approx => match &self.approx {
+                Some(p) => p.dispatch(job),
+                None => log::error!("dispatch to missing approx pool"),
+            },
+        }
+    }
+
+    fn close_all(&self) {
+        self.deployed.close();
+        for p in &self.parity {
+            p.close();
+        }
+        if let Some(p) = &self.approx {
+            p.close();
+        }
+    }
+
+    fn shutdown_all(self) {
+        self.deployed.shutdown();
+        for p in self.parity {
+            p.shutdown();
+        }
+        if let Some(p) = self.approx {
+            p.shutdown();
+        }
+    }
+}
+
+/// A live serving session. Single consumer: all methods take `&mut self`;
+/// the handle is `Send`, so a frontend can own it on a serving thread.
+pub struct ServiceHandle {
+    scheme: Box<dyn RedundancyScheme>,
+    batcher: Batcher,
+    slo: Option<Duration>,
+    pools: Option<PoolSet>,
+    rx: mpsc::Receiver<Completion>,
+    faults: Arc<FaultPlan>,
+    shuffles: Option<ShuffleGen>,
+    fault_injector: Option<FaultInjector>,
+    /// query id -> frontend arrival (pending queries only).
+    pending: HashMap<QueryId, Instant>,
+    /// Resolved records not yet retrieved via poll()/drain().
+    resolved_out: VecDeque<Resolved>,
+    metrics: RunMetrics,
+    submitted: u64,
+    resolved_count: u64,
+    next_qid: u64,
+    mean_service: Duration,
+    started: Instant,
+    dropped_at_start: u64,
+    /// Continuation of the builder's seeded stream (open-loop arrivals).
+    rng: Pcg64,
+}
+
+impl ServiceHandle {
+    /// Scheme serving this session.
+    pub fn scheme_name(&self) -> &'static str {
+        self.scheme.name()
+    }
+
+    /// Measured uncontended mean service time of the deployed model.
+    pub fn mean_service(&self) -> Duration {
+        self.mean_service
+    }
+
+    /// Queries submitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Queries still awaiting a prediction.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted - self.resolved_count
+    }
+
+    /// Queued-but-unstarted jobs across all pools (backpressure signal).
+    pub fn backlog(&self) -> usize {
+        self.pools.as_ref().map_or(0, |p| {
+            p.deployed.backlog()
+                + p.parity.iter().map(Pool::backlog).sum::<usize>()
+                + p.approx.as_ref().map_or(0, Pool::backlog)
+        })
+    }
+
+    /// Fault-injection surface for tests and chaos drills: permanently
+    /// kill an instance (undetected zombie, the paper's failure model).
+    pub fn kill_instance(&self, instance: usize) {
+        self.faults.kill(instance);
+    }
+
+    /// Fail an instance for a bounded window.
+    pub fn fail_instance_for(&self, instance: usize, dur: Duration) {
+        self.faults.fail_for(instance, dur);
+    }
+
+    /// Submit one query; returns its id. The query joins the current
+    /// batch and is dispatched per the scheme when the batch seals (or on
+    /// the batch timeout — serviced by `poll`/`drain`).
+    pub fn submit(&mut self, input: Tensor) -> QueryId {
+        let id = self.next_qid;
+        self.next_qid += 1;
+        self.submitted += 1;
+        let arrived = Instant::now();
+        self.pending.insert(id, arrived);
+        if let Some(sealed) = self.batcher.offer(PendingQuery { id, input, arrived }) {
+            self.dispatch_sealed(sealed);
+        }
+        id
+    }
+
+    /// Earliest instant at which a partial batch becomes due (pacing aid
+    /// for open-loop drivers).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.batcher.next_deadline()
+    }
+
+    /// Service the session without blocking: flush due batches, fold in
+    /// completions, apply SLO defaults; returns newly resolved queries.
+    pub fn poll(&mut self) -> Vec<Resolved> {
+        self.pump(None);
+        self.take_resolved()
+    }
+
+    /// Block until every submitted query has resolved (flushing any
+    /// partial batch first); returns the newly resolved queries. With
+    /// lost predictions and no SLO configured this waits forever — give
+    /// the config an SLO when serving under failures.
+    pub fn drain(&mut self) -> Vec<Resolved> {
+        if let Some(sealed) = self.batcher.flush_all() {
+            self.dispatch_sealed(sealed);
+        }
+        while self.resolved_count < self.submitted {
+            // 5 ms granularity bounds SLO-sweep latency, as in the seed.
+            self.pump(Some(Duration::from_millis(5)));
+        }
+        self.take_resolved()
+    }
+
+    /// Drain outstanding work, stop shuffles/fault injection, shut down
+    /// every pool, and report the session's metrics.
+    pub fn shutdown(mut self) -> RunResult {
+        let _ = self.drain();
+        if let Some(s) = self.shuffles.take() {
+            s.stop();
+        }
+        if let Some(f) = self.fault_injector.take() {
+            f.stop();
+        }
+        if let Some(pools) = self.pools.take() {
+            pools.shutdown_all();
+        }
+        RunResult {
+            metrics: std::mem::take(&mut self.metrics),
+            mean_service: self.mean_service,
+            wall: self.started.elapsed(),
+            dropped_jobs: DROPPED_JOBS
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.dropped_at_start),
+            reconstructions: self.scheme.reconstructions(),
+        }
+    }
+
+    /// Drive the paper's open-loop Poisson client through this handle:
+    /// `n_queries` arrivals at `rate` qps, drawn cyclically from
+    /// `queries`. Arrivals never wait for completions (§5.1); completions
+    /// are folded in opportunistically between arrivals. Inter-arrival
+    /// gaps come from the session's own seeded stream (continuing the
+    /// builder's draws, exactly like the pre-session `Service::run`).
+    /// Does not drain.
+    pub fn run_open_loop(&mut self, queries: &[Tensor], n_queries: u64, rate: f64) {
+        assert!(!queries.is_empty(), "open loop needs at least one query tensor");
+        assert!(rate > 0.0, "open loop needs a positive rate");
+        let start = Instant::now();
+        let mut next_arrival = 0.0f64;
+        for i in 0..n_queries {
+            next_arrival += self.rng.exponential(rate);
+            let due = start + Duration::from_secs_f64(next_arrival);
+            loop {
+                self.pump(None);
+                let now = Instant::now();
+                if now >= due {
+                    break;
+                }
+                // Honor batch timeouts while pacing.
+                let mut wake = due;
+                if let Some(d) = self.next_deadline() {
+                    if d < wake {
+                        wake = d;
+                    }
+                }
+                let now = Instant::now();
+                if wake > now {
+                    std::thread::sleep(wake - now);
+                }
+            }
+            self.submit(queries[(i as usize) % queries.len()].clone());
+        }
+    }
+
+    /// Process due batches, available completions, and SLO expirations.
+    /// `wait`: block up to this long for the first completion.
+    fn pump(&mut self, wait: Option<Duration>) {
+        if let Some(sealed) = self.batcher.flush_due(Instant::now()) {
+            self.dispatch_sealed(sealed);
+        }
+        if let Some(dur) = wait {
+            if let Ok(c) = self.rx.recv_timeout(dur) {
+                self.on_completion(c);
+            }
+        }
+        while let Ok(c) = self.rx.try_recv() {
+            self.on_completion(c);
+        }
+        self.sweep_slo();
+    }
+
+    fn dispatch_sealed(&mut self, mut sealed: SealedBatch) {
+        // Executables are compiled for a fixed batch size: pad partial
+        // batches (timeout / shutdown flushes) by repeating the last
+        // sample. Padded rows' outputs are never routed to a query id,
+        // and padding keeps data/parity tensor shapes aligned for the
+        // decoder.
+        let batch_size = self.batcher.batch_size();
+        if sealed.input.shape()[0] < batch_size {
+            let mut rows = sealed.input.unbatch();
+            while rows.len() < batch_size {
+                rows.push(rows.last().unwrap().clone());
+            }
+            sealed.input = Tensor::batch(&rows).expect("uniform rows");
+        }
+        let plan = self.scheme.plan_dispatch(sealed);
+        for r in plan.resolutions {
+            self.apply_resolution(r);
+        }
+        if let Some(pools) = &self.pools {
+            for (target, job) in plan.jobs {
+                pools.dispatch(target, job);
+            }
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) {
+        for r in self.scheme.on_completion(c) {
+            self.apply_resolution(r);
+        }
+    }
+
+    /// First verdict per query wins; later ones are no-ops (the pending
+    /// map is the dedup).
+    fn apply_resolution(&mut self, r: Resolution) {
+        for id in r.query_ids {
+            if let Some(arrived) = self.pending.remove(&id) {
+                self.metrics.record(arrived, r.at, r.outcome);
+                self.resolved_count += 1;
+                self.resolved_out.push_back(Resolved {
+                    id,
+                    outcome: r.outcome,
+                    latency: r.at.saturating_duration_since(arrived),
+                });
+            }
+        }
+    }
+
+    fn sweep_slo(&mut self) {
+        let Some(slo) = self.slo else { return };
+        let now = Instant::now();
+        let expired: Vec<QueryId> = self
+            .pending
+            .iter()
+            .filter(|(_, &t)| now.duration_since(t) >= slo)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            self.pending.remove(&id);
+            self.metrics.record_default(slo);
+            self.resolved_count += 1;
+            self.resolved_out.push_back(Resolved {
+                id,
+                outcome: Outcome::Default,
+                latency: slo,
+            });
+        }
+    }
+
+    fn take_resolved(&mut self) -> Vec<Resolved> {
+        self.resolved_out.drain(..).collect()
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        // Graceful best-effort teardown when dropped without shutdown():
+        // closing the queues lets workers exit once drained; shuffle and
+        // fault threads stop via their own Drop/stop.
+        if let Some(pools) = self.pools.take() {
+            pools.close_all();
+        }
+        if let Some(s) = self.shuffles.take() {
+            s.stop();
+        }
+        if let Some(f) = self.fault_injector.take() {
+            f.stop();
+        }
+    }
+}
+
+/// Scheduled hard failures: applies (instance, start, duration) triples,
+/// interruptible so shutdown never waits out a long schedule.
+struct FaultInjector {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl FaultInjector {
+    fn start(plan: Arc<FaultPlan>, schedule: Vec<(usize, Duration, Duration)>) -> FaultInjector {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("fault-injector".into())
+            .spawn(move || {
+                let start = Instant::now();
+                let mut pending = schedule;
+                pending.sort_by_key(|&(_, at, _)| at);
+                let (lock, cv) = &*stop2;
+                for (inst, at, dur) in pending {
+                    let mut stopped = lock.lock().unwrap();
+                    loop {
+                        if *stopped {
+                            return;
+                        }
+                        let now = start.elapsed();
+                        if now >= at {
+                            break;
+                        }
+                        let (g, _) = cv.wait_timeout(stopped, at - now).unwrap();
+                        stopped = g;
+                    }
+                    drop(stopped);
+                    if dur.is_zero() {
+                        plan.kill(inst);
+                        log::info!("fault: instance {inst} killed");
+                    } else {
+                        plan.fail_for(inst, dur);
+                        log::info!("fault: instance {inst} down for {dur:?}");
+                    }
+                }
+            })
+            .expect("spawn fault-injector");
+        FaultInjector { stop, handle: Some(handle) }
+    }
+
+    fn stop(self) {}
+}
+
+impl Drop for FaultInjector {
+    fn drop(&mut self) {
+        *self.stop.0.lock().unwrap() = true;
+        self.stop.1.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -8,6 +8,11 @@
 //! Rust encoder/decoder semantics diverged from the Python build-time
 //! encoders that generated the parity training data, A_d would collapse
 //! to chance.
+//!
+//! Meaningful only with trained artifacts and the `pjrt` engine backend;
+//! under the synthetic backend the pipeline runs but A_a/A_d are noise
+//! (the latency/serving experiments are the ones that stay faithful
+//! there — see `runtime::engine`).
 
 use crate::artifacts::{Labels, Manifest, ModelEntry};
 use crate::coordinator::decoder;

@@ -7,7 +7,8 @@ use std::time::Duration;
 use crate::artifacts::Manifest;
 use crate::cluster::hardware::Profile;
 use crate::coordinator::encoder::Encoder;
-use crate::coordinator::service::{Mode, ModelSet, RunResult, Service, ServiceConfig};
+use crate::coordinator::service::{Mode, ModelSet, RunResult, ServiceConfig};
+use crate::coordinator::session::ServiceBuilder;
 use crate::runtime::engine::Executable;
 use crate::util::json::Json;
 use crate::workload::QuerySource;
@@ -156,7 +157,8 @@ pub fn measure_capacity(exe: &std::sync::Arc<Executable>, m: usize, probe: &crat
     (count.load(std::sync::atomic::Ordering::Relaxed) as f64 * batch / elapsed).max(1.0)
 }
 
-/// Run one (config, rate) point and summarize.
+/// Run one (config, rate) point and summarize: build a serving session,
+/// drive the open-loop Poisson client through the handle, shut down.
 pub fn run_point(
     cfg: &ServiceConfig,
     models: &ModelSet,
@@ -165,8 +167,10 @@ pub fn run_point(
     rate: f64,
     label: &str,
 ) -> anyhow::Result<LatencyRow> {
-    let RunResult { mut metrics, mean_service, wall, reconstructions, .. } =
-        Service::run(cfg, models, &source.queries, n_queries, rate)?;
+    let mut handle = ServiceBuilder::new(cfg.clone()).build(models, &source.queries[0])?;
+    handle.run_open_loop(&source.queries, n_queries, rate);
+    let _ = handle.drain();
+    let RunResult { mut metrics, mean_service, wall, reconstructions, .. } = handle.shutdown();
     // mean_service is per *batch*; rate is per query.
     let util = rate * mean_service.as_secs_f64() / (cfg.batch_size.max(1) as f64 * cfg.m as f64);
     log::info!(

@@ -8,11 +8,21 @@
 //!   and AOT-lowered to HLO text by `python/compile/aot.py`;
 //! - **L3 (this crate)**: a Clipper-style prediction-serving coordinator
 //!   with ParM — encoder, parity models, decoder — as a first-class
-//!   redundancy scheme, running the AOT artifacts via PJRT with Python
+//!   redundancy scheme, running the AOT artifacts via PJRT (feature
+//!   `pjrt`; a deterministic synthetic backend otherwise) with Python
 //!   never on the request path.
 //!
-//! Start at [`coordinator::service::Service`] for the serving loop, or
-//! [`experiments`] for the paper-figure harnesses.
+//! The serving surface is a session API:
+//! [`coordinator::session::ServiceBuilder`] assembles the simulated
+//! cluster (pools, network, faults, tenancy, shuffles) from a
+//! [`coordinator::service::ServiceConfig`];
+//! [`coordinator::session::ServiceHandle`] then serves live traffic —
+//! `submit` / `poll` / `drain` / `shutdown`. Redundancy strategies plug
+//! in through the [`coordinator::scheme::RedundancyScheme`] trait (ParM
+//! plus the paper's four baselines ship as implementations).
+//! [`coordinator::service::Service::run`] remains as the one-shot
+//! open-loop experiment shim used by the paper-figure harnesses in
+//! [`experiments`].
 
 pub mod artifacts;
 pub mod cluster;

@@ -7,7 +7,9 @@
 //!   table1                    — the toy coded-computation example
 //!
 //! Every paper figure has a dedicated bench (`cargo bench --bench …`);
-//! this binary is the interactive/manual entry point.
+//! this binary is the interactive/manual entry point. All serving
+//! subcommands are clients of the coordinator's session API
+//! (`ServiceBuilder`/`ServiceHandle`, see `coordinator::session`).
 
 use parm::artifacts::Manifest;
 use parm::cluster::hardware;

@@ -1,19 +1,26 @@
-//! PJRT engine: loads AOT HLO-text artifacts and executes them.
+//! Execution engine: loads AOT artifacts and executes them.
 //!
-//! One process-wide `PjRtClient` (CPU) compiles each artifact once into a
-//! `PjRtLoadedExecutable`; `Executable::run` then moves a query tensor in,
-//! executes, and copies the prediction out. This is the only place the
-//! request path touches XLA — everything above it deals in `Tensor`s.
+//! Two backends, selected at compile time:
 //!
-//! Interchange is HLO **text** (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): jax>=0.5 serialized protos use 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids and round-trips cleanly.
+//! - **`pjrt` feature**: one process-wide `PjRtClient` (CPU) compiles each
+//!   HLO-text artifact once into a `PjRtLoadedExecutable`; `Executable::run`
+//!   moves a query tensor in, executes, and copies the prediction out. This
+//!   is the only place the request path touches XLA — everything above it
+//!   deals in `Tensor`s. Interchange is HLO **text** (see
+//!   `python/compile/aot.py`): jax>=0.5 serialized protos use 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids and round-trips cleanly. The `xla` bindings are not on
+//!   crates.io — see the `pjrt` feature note in `Cargo.toml`.
+//!
+//! - **default (synthetic)**: every `Executable` is a deterministic pure
+//!   function of `(model name, input)` — a cheap hashed linear map. No
+//!   artifact files are required, predictions carry no trained semantics
+//!   (accuracy experiments are meaningless and skip), but service times,
+//!   shapes, and the full coordinator/cluster machinery behave exactly as
+//!   with the real backend, so the serving-path tests run everywhere.
 
 use std::path::Path;
 use std::sync::Arc;
-
-use once_cell::sync::OnceCell;
 
 use crate::tensor::Tensor;
 
@@ -27,6 +34,7 @@ pub enum EngineError {
     NotFound(String),
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for EngineError {
     fn from(e: xla::Error) -> Self {
         EngineError::Xla(e.to_string())
@@ -39,24 +47,44 @@ impl From<xla::Error> for EngineError {
 /// it `!Send + !Sync` even though the underlying XLA `PjRtClient` (TFRT CPU)
 /// is documented thread-safe (`Compile`/`Execute` may be called from any
 /// thread). We never clone the inner `Rc` after construction — the wrapper
-/// lives in a `'static` OnceCell and is only ever *borrowed* by worker
+/// lives in a `'static` OnceLock and is only ever *borrowed* by worker
 /// threads — so the non-atomic refcount is never mutated concurrently.
 /// `runtime_smoke` integration tests exercise concurrent execution.
+#[cfg(feature = "pjrt")]
 struct SharedClient(xla::PjRtClient);
+#[cfg(feature = "pjrt")]
 unsafe impl Send for SharedClient {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for SharedClient {}
 
-static CLIENT: OnceCell<SharedClient> = OnceCell::new();
+#[cfg(feature = "pjrt")]
+static CLIENT: std::sync::OnceLock<SharedClient> = std::sync::OnceLock::new();
+#[cfg(feature = "pjrt")]
+static CLIENT_INIT: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
+#[cfg(feature = "pjrt")]
 pub fn client() -> Result<&'static xla::PjRtClient, EngineError> {
-    CLIENT
-        .get_or_try_init(|| xla::PjRtClient::cpu().map(SharedClient).map_err(EngineError::from))
-        .map(|c| &c.0)
+    if let Some(c) = CLIENT.get() {
+        return Ok(&c.0);
+    }
+    // Serialize creation so only one client is ever constructed, without
+    // caching transient failures (a failed attempt may be retried later).
+    let _guard = CLIENT_INIT.lock().unwrap();
+    if let Some(c) = CLIENT.get() {
+        return Ok(&c.0);
+    }
+    let made = xla::PjRtClient::cpu().map(SharedClient).map_err(EngineError::from)?;
+    let _ = CLIENT.set(made);
+    Ok(&CLIENT.get().expect("just set").0)
 }
 
 /// A compiled model program: fixed input shape (batch, ...), one output.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
+    /// Seed for the synthetic backend (derived from the model name).
+    #[cfg(not(feature = "pjrt"))]
+    seed: u64,
     /// Full input shape including the batch dim.
     pub input_shape: Vec<usize>,
     /// Output vector length per sample.
@@ -66,17 +94,19 @@ pub struct Executable {
     pub name: String,
 }
 
-// SAFETY: `PjRtLoadedExecutable::Execute` is thread-safe in XLA; the Rust
-// wrapper is only `!Send` because of raw pointers and the `Rc` back to the
-// client. We share `Executable` via `Arc` (so the inner `Rc` count is
+// SAFETY (pjrt): `PjRtLoadedExecutable::Execute` is thread-safe in XLA; the
+// Rust wrapper is only `!Send` because of raw pointers and the `Rc` back to
+// the client. We share `Executable` via `Arc` (so the inner `Rc` count is
 // mutated only at construction and final drop, both single-threaded) and
 // call `execute` concurrently, which XLA supports. Exercised by the
-// `runtime_smoke` concurrent-execution test.
+// `runtime_smoke` concurrent-execution test. The synthetic backend is plain
+// data and trivially thread-safe.
 unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 
 impl Executable {
-    /// Compile an HLO-text artifact.
+    /// Compile an artifact. Under the synthetic backend the path is only
+    /// recorded for diagnostics — no file is required.
     pub fn load(
         path: impl AsRef<Path>,
         name: &str,
@@ -85,35 +115,104 @@ impl Executable {
         out_dim: usize,
     ) -> Result<Arc<Executable>, EngineError> {
         let path = path.as_ref();
-        if !path.exists() {
-            return Err(EngineError::NotFound(path.display().to_string()));
-        }
-        let client = client()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().expect("non-utf8 artifact path"),
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
         let mut full_shape = vec![batch];
         full_shape.extend_from_slice(input_shape);
-        log::debug!("compiled {name} from {} (batch {batch})", path.display());
-        Ok(Arc::new(Executable {
-            exe,
-            input_shape: full_shape,
-            out_dim,
-            batch,
-            name: name.to_string(),
-        }))
+
+        #[cfg(feature = "pjrt")]
+        {
+            if !path.exists() {
+                return Err(EngineError::NotFound(path.display().to_string()));
+            }
+            let client = client()?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("non-utf8 artifact path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            log::debug!("compiled {name} from {} (batch {batch})", path.display());
+            Ok(Arc::new(Executable {
+                exe,
+                input_shape: full_shape,
+                out_dim,
+                batch,
+                name: name.to_string(),
+            }))
+        }
+
+        #[cfg(not(feature = "pjrt"))]
+        {
+            log::debug!(
+                "synthetic executable {name} (batch {batch}, artifact {} ignored)",
+                path.display()
+            );
+            Ok(Arc::new(Executable {
+                seed: crate::util::rng::fnv1a(name.as_bytes()),
+                input_shape: full_shape,
+                out_dim,
+                batch,
+                name: name.to_string(),
+            }))
+        }
     }
 
-    /// Execute on one batched input tensor; returns (batch, out_dim).
-    pub fn run(&self, input: &Tensor) -> Result<Tensor, EngineError> {
+    fn check_shape(&self, input: &Tensor) -> Result<(), EngineError> {
         if input.shape() != self.input_shape.as_slice() {
             return Err(EngineError::InputShape {
                 expected: self.input_shape.clone(),
                 actual: input.shape().to_vec(),
             });
         }
+        Ok(())
+    }
+
+    /// Execute on one batched input tensor; returns (batch, out_dim).
+    pub fn run(&self, input: &Tensor) -> Result<Tensor, EngineError> {
+        self.check_shape(input)?;
+
+        #[cfg(feature = "pjrt")]
+        {
+            let data = self.execute_pjrt(input)?;
+            Tensor::new(vec![self.batch, self.out_dim], data)
+                .map_err(|e| EngineError::Xla(e.to_string()))
+        }
+
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let per = input.len() / self.batch;
+            let mut out = Vec::with_capacity(self.batch * self.out_dim);
+            for s in 0..self.batch {
+                let xs = &input.data()[s * per..(s + 1) * per];
+                synthetic_forward(self.seed, xs, self.out_dim, &mut out);
+            }
+            Tensor::new(vec![self.batch, self.out_dim], out)
+                .map_err(|e| EngineError::Xla(e.to_string()))
+        }
+    }
+
+    /// Execute and return the flat output regardless of declared out_dim
+    /// (used by non-model programs such as the exported encoder kernel,
+    /// whose output is a query tensor rather than (batch, out_dim)).
+    pub fn run_raw(&self, input: &Tensor) -> Result<Tensor, EngineError> {
+        self.check_shape(input)?;
+
+        #[cfg(feature = "pjrt")]
+        {
+            let data = self.execute_pjrt(input)?;
+            let n = data.len();
+            Tensor::new(vec![n], data).map_err(|e| EngineError::Xla(e.to_string()))
+        }
+
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let mut out = Vec::with_capacity(self.out_dim);
+            synthetic_forward(self.seed, input.data(), self.out_dim, &mut out);
+            let n = out.len();
+            Tensor::new(vec![n], out).map_err(|e| EngineError::Xla(e.to_string()))
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute_pjrt(&self, input: &Tensor) -> Result<Vec<f32>, EngineError> {
         // Single-copy literal creation (vec1 + reshape would copy twice —
         // measured ~2x input-marshalling cost on the 64x64x3 workload;
         // see EXPERIMENTS.md §Perf).
@@ -131,37 +230,7 @@ impl Executable {
         let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
         let out = result.to_tuple1()?;
-        let data = out.to_vec::<f32>()?;
-        Tensor::new(vec![self.batch, self.out_dim], data)
-            .map_err(|e| EngineError::Xla(e.to_string()))
-    }
-
-    /// Execute and return the flat output regardless of declared out_dim
-    /// (used by non-model programs such as the exported encoder kernel,
-    /// whose output is a query tensor rather than (batch, out_dim)).
-    pub fn run_raw(&self, input: &Tensor) -> Result<Tensor, EngineError> {
-        if input.shape() != self.input_shape.as_slice() {
-            return Err(EngineError::InputShape {
-                expected: self.input_shape.clone(),
-                actual: input.shape().to_vec(),
-            });
-        }
-        let bytes = unsafe {
-            std::slice::from_raw_parts(
-                input.data().as_ptr() as *const u8,
-                input.data().len() * std::mem::size_of::<f32>(),
-            )
-        };
-        let lit = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            input.shape(),
-            bytes,
-        )?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let data = out.to_vec::<f32>()?;
-        let n = data.len();
-        Tensor::new(vec![n], data).map_err(|e| EngineError::Xla(e.to_string()))
+        Ok(out.to_vec::<f32>()?)
     }
 
     /// Execute on a single sample (pads/errors if batch != 1).
@@ -180,5 +249,64 @@ impl std::fmt::Debug for Executable {
             .field("input_shape", &self.input_shape)
             .field("out_dim", &self.out_dim)
             .finish()
+    }
+}
+
+/// Deterministic pseudo-model: each output is a sparse hashed linear
+/// combination of the input (16 taps), so predictions depend on both the
+/// model identity and the query while staying cheap enough to "serve" at
+/// microsecond scale.
+#[cfg(not(feature = "pjrt"))]
+fn synthetic_forward(seed: u64, xs: &[f32], out_dim: usize, out: &mut Vec<f32>) {
+    debug_assert!(!xs.is_empty());
+    for j in 0..out_dim {
+        let mut h = seed ^ (j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut acc = 0.0f32;
+        for _ in 0..16 {
+            // splitmix64 step
+            h = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = h;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^= z >> 31;
+            let idx = (z as usize) % xs.len();
+            let w = ((z >> 40) as f32) / (1u32 << 24) as f32 - 0.5;
+            acc += xs[idx] * w;
+        }
+        out.push(acc);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic_and_shaped() {
+        let exe = Executable::load("no/such/file", "m.test", &[4, 4, 1], 2, 10).unwrap();
+        let input = Tensor::new(vec![2, 4, 4, 1], (0..32).map(|i| i as f32 * 0.1).collect())
+            .unwrap();
+        let a = exe.run(&input).unwrap();
+        let b = exe.run(&input).unwrap();
+        assert_eq!(a, b, "pure function of input");
+        assert_eq!(a.shape(), &[2, 10]);
+        assert!(a.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn synthetic_differs_across_models_and_inputs() {
+        let e1 = Executable::load("x", "model.a", &[4], 1, 8).unwrap();
+        let e2 = Executable::load("x", "model.b", &[4], 1, 8).unwrap();
+        let q1 = Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let q2 = Tensor::new(vec![1, 4], vec![4.0, 3.0, 2.0, 1.0]).unwrap();
+        assert_ne!(e1.run(&q1).unwrap(), e2.run(&q1).unwrap());
+        assert_ne!(e1.run(&q1).unwrap(), e1.run(&q2).unwrap());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let exe = Executable::load("x", "m", &[4], 1, 4).unwrap();
+        let bad = Tensor::zeros(vec![1, 5]);
+        assert!(matches!(exe.run(&bad), Err(EngineError::InputShape { .. })));
     }
 }

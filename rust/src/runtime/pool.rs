@@ -103,6 +103,15 @@ impl Pool {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Close the queues without joining: workers exit once they drain.
+    /// Used by best-effort teardown paths (session handle drop); orderly
+    /// shutdown should prefer [`Pool::shutdown`].
+    pub fn close(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+
     /// Close queues and join all workers.
     pub fn shutdown(self) {
         for q in &self.queues {

@@ -2,12 +2,12 @@
 //! (error|warn|info|debug|trace); defaults to `info`.
 
 use std::io::Write;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
 
-static START: OnceCell<Instant> = OnceCell::new();
+static START: OnceLock<Instant> = OnceLock::new();
 
 struct StderrLogger {
     level: Level,

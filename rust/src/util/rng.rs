@@ -5,6 +5,18 @@
 //! tests. All experiment configs carry explicit seeds so every figure is
 //! exactly reproducible.
 
+/// FNV-1a over arbitrary bytes: stable, dependency-free way to derive a
+/// deterministic seed from a name (synthetic models and datasets must
+/// agree on it, so there is exactly one copy).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
 /// SplitMix64: used to expand a single u64 seed into stream seeds.
 #[derive(Clone, Debug)]
 pub struct SplitMix64 {

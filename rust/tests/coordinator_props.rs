@@ -139,6 +139,104 @@ fn decode_general_recovers_any_missing_subset() {
     }
 }
 
+/// INVARIANT: with exactly one output missing, the general (r >= 1)
+/// Gaussian-elimination decoder and the r = 1 subtraction fast path agree
+/// exactly, for any k, any invertible weights, any missing slot, whichever
+/// parity is available.
+#[test]
+fn decode_general_single_missing_agrees_with_fast_path() {
+    for seed in 0..200 {
+        let mut rng = Pcg64::new(6000 + seed);
+        let k = 2 + (seed as usize % 3);
+        let r = 1 + (seed as usize % 2);
+        let dim = 1 + (rng.below(20) as usize);
+        let weights: Vec<Vec<f32>> = (0..r)
+            .map(|ri| (0..k).map(|i| ((i + 1) as f32).powi(ri as i32)).collect())
+            .collect();
+        let outs: Vec<Tensor> = (0..k).map(|_| rand_tensor(&mut rng, dim)).collect();
+        let parities: Vec<Option<Tensor>> = weights
+            .iter()
+            .enumerate()
+            .map(|(_ri, ws)| {
+                // Randomly withhold parities when r = 2 (decode must use
+                // whichever is available).
+                if r == 2 && rng.next_f64() < 0.5 {
+                    return None;
+                }
+                let mut p = Tensor::zeros(vec![dim]);
+                for (o, &w) in outs.iter().zip(ws) {
+                    ops::add_scaled_assign(&mut p, o, w).unwrap();
+                }
+                Some(p)
+            })
+            .collect();
+        if parities.iter().all(Option::is_none) {
+            continue;
+        }
+        let j = rng.below(k as u64) as usize;
+        let data: Vec<Option<Tensor>> = outs
+            .iter()
+            .enumerate()
+            .map(|(i, o)| if i == j { None } else { Some(o.clone()) })
+            .collect();
+        let general = decoder::decode_general(&weights, &data, &parities).unwrap();
+        let pj = (0..parities.len()).find(|&x| parities[x].is_some()).unwrap();
+        let fast =
+            decoder::decode_r1(&weights[pj], parities[pj].as_ref().unwrap(), &data, j).unwrap();
+        assert_eq!(general, vec![(j, fast)], "seed {seed} k={k} r={r} j={j}");
+    }
+}
+
+/// INVARIANT: a live serving session conserves queries — across schemes
+/// and seeds, submit/poll/drain returns every submitted id exactly once.
+/// (Skips when no executables are loadable, e.g. `pjrt` without
+/// artifacts.)
+#[test]
+fn session_conserves_queries_across_seeds() {
+    use parm::coordinator::service::{Mode, ServiceConfig};
+    use parm::coordinator::session::ServiceBuilder;
+    use parm::experiments::latency;
+    use parm::workload::QuerySource;
+
+    let Ok(m) = parm::artifacts::Manifest::load_default() else { return };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    let Ok(models) = latency::load_models(&m, 1, 2, 1, false) else {
+        eprintln!("SKIP session_conserves_queries_across_seeds: no executables");
+        return;
+    };
+    for seed in 0..3u64 {
+        for mode in [
+            Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
+            Mode::Replication { copies: 2 },
+        ] {
+            let mut cfg =
+                ServiceConfig::defaults(mode, &parm::cluster::hardware::GPU);
+            cfg.m = 2;
+            cfg.shuffles = 0;
+            cfg.seed = 0x5E55 + seed;
+            let mut handle =
+                ServiceBuilder::new(cfg).build(&models, &src.queries[0]).unwrap();
+            let mut rng = Pcg64::new(seed);
+            let n = 40 + rng.below(40);
+            let mut ids = Vec::new();
+            let mut resolved = Vec::new();
+            for i in 0..n {
+                ids.push(handle.submit(src.queries[(i as usize) % src.len()].clone()));
+                if rng.next_f64() < 0.3 {
+                    resolved.extend(handle.poll());
+                }
+            }
+            resolved.extend(handle.drain());
+            let mut got: Vec<u64> = resolved.iter().map(|r| r.id).collect();
+            got.sort_unstable();
+            assert_eq!(got, ids, "seed {seed}: each id exactly once");
+            let res = handle.shutdown();
+            assert_eq!(res.metrics.total(), n);
+        }
+    }
+}
+
 /// INVARIANT: the batcher neither drops nor duplicates queries, and every
 /// sealed batch is at most batch_size.
 #[test]

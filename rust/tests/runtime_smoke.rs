@@ -14,8 +14,19 @@ use parm::tensor::Tensor;
 use parm::workload::QuerySource;
 
 fn manifest() -> Option<Manifest> {
-    // Tests run from the workspace root.
-    match Manifest::load("artifacts") {
+    // These tests assert *trained* model semantics (accuracy beats
+    // chance, parity reconstructions classify correctly), which the
+    // synthetic engine backend cannot provide — skip unless the real
+    // PJRT backend is compiled in.
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!(
+            "SKIP runtime_smoke: synthetic engine backend \
+             (build with --features pjrt and run `make artifacts`)"
+        );
+        return None;
+    }
+    // Tests run from the package root; `make artifacts` writes ../artifacts.
+    match Manifest::load("artifacts").or_else(|_| Manifest::load("../artifacts")) {
         Ok(m) => Some(m),
         Err(e) => {
             eprintln!("SKIP runtime_smoke: {e}");

@@ -1,18 +1,29 @@
 //! End-to-end service integration: the full threaded coordinator against
-//! the simulated cluster, at small scale (fast enough for `cargo test`).
-//! Requires artifacts; skips with a message otherwise.
+//! the simulated cluster, at small scale (fast enough for `cargo test`),
+//! driven through the session API (`ServiceBuilder` + `ServiceHandle`).
+//!
+//! Under the default synthetic engine backend these run against the
+//! fabricated artifact inventory (timing/shape semantics are real, trained
+//! accuracy is not — which the serving-path assertions never rely on).
+//! With `--features pjrt` they require `make artifacts` and skip with a
+//! message otherwise.
+
+use std::collections::HashSet;
+use std::time::Duration;
 
 use parm::artifacts::Manifest;
 use parm::cluster::hardware::GPU;
 use parm::coordinator::encoder::Encoder;
-use parm::coordinator::service::{Mode, Service, ServiceConfig};
+use parm::coordinator::metrics::Outcome;
+use parm::coordinator::service::{Mode, ModelSet, RunResult, Service, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
 use parm::experiments::latency;
 use parm::workload::QuerySource;
 
 /// Each test spawns a full simulated cluster (many worker threads doing
-/// real PJRT inference with precise-sleep pacing). Running them
-/// concurrently oversubscribes the host and distorts/wedges the timing
-/// paths, so serialize them.
+/// real inference with precise-sleep pacing). Running them concurrently
+/// oversubscribes the host and distorts/wedges the timing paths, so
+/// serialize them.
 static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 fn serial() -> std::sync::MutexGuard<'static, ()> {
@@ -20,7 +31,7 @@ fn serial() -> std::sync::MutexGuard<'static, ()> {
 }
 
 fn setup() -> Option<(Manifest, QuerySource)> {
-    let m = match Manifest::load("artifacts") {
+    let m = match Manifest::load_default() {
         Ok(m) => m,
         Err(e) => {
             eprintln!("SKIP service_integration: {e}");
@@ -32,6 +43,16 @@ fn setup() -> Option<(Manifest, QuerySource)> {
     Some((m, src))
 }
 
+fn models(m: &Manifest, batch: usize, k: usize, r: usize, approx: bool) -> Option<ModelSet> {
+    match latency::load_models(m, batch, k, r, approx) {
+        Ok(ms) => Some(ms),
+        Err(e) => {
+            eprintln!("SKIP service_integration: {e}");
+            None
+        }
+    }
+}
+
 fn quick_cfg(mode: Mode) -> ServiceConfig {
     let mut cfg = ServiceConfig::defaults(mode, &GPU);
     cfg.m = 4; // small cluster for test speed
@@ -40,13 +61,29 @@ fn quick_cfg(mode: Mode) -> ServiceConfig {
     cfg
 }
 
+/// Build a session, drive the open-loop client, drain, shut down.
+fn run_via_session(
+    cfg: ServiceConfig,
+    models: &ModelSet,
+    src: &QuerySource,
+    n: u64,
+    rate: f64,
+) -> RunResult {
+    let mut handle = ServiceBuilder::new(cfg)
+        .build(models, &src.queries[0])
+        .expect("session builds");
+    handle.run_open_loop(&src.queries, n, rate);
+    let _ = handle.drain();
+    handle.shutdown()
+}
+
 #[test]
 fn parm_serves_all_queries() {
     let _guard = serial();
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
     let cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
-    let res = Service::run(&cfg, &models, &src.queries, 300, 120.0).unwrap();
+    let res = run_via_session(cfg, &models, &src, 300, 120.0);
     let mut metrics = res.metrics;
     assert_eq!(metrics.total(), 300, "every query must resolve");
     assert_eq!(metrics.defaulted, 0, "no SLO configured, nothing defaults");
@@ -57,9 +94,9 @@ fn parm_serves_all_queries() {
 fn no_redundancy_serves_all_queries() {
     let _guard = serial();
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
     let cfg = quick_cfg(Mode::NoRedundancy);
-    let res = Service::run(&cfg, &models, &src.queries, 200, 100.0).unwrap();
+    let res = run_via_session(cfg, &models, &src, 200, 100.0);
     assert_eq!(res.metrics.total(), 200);
     assert_eq!(res.reconstructions, 0);
 }
@@ -68,11 +105,11 @@ fn no_redundancy_serves_all_queries() {
 fn equal_resources_uses_extra_instances() {
     let _guard = serial();
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
     let mode = Mode::EqualResources { k: 2 };
     assert_eq!(mode.extra_instances(4), 2);
     let cfg = quick_cfg(mode);
-    let res = Service::run(&cfg, &models, &src.queries, 200, 100.0).unwrap();
+    let res = run_via_session(cfg, &models, &src, 200, 100.0);
     assert_eq!(res.metrics.total(), 200);
 }
 
@@ -80,9 +117,9 @@ fn equal_resources_uses_extra_instances() {
 fn approx_backup_resolves_from_either_pool() {
     let _guard = serial();
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, true).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, true) else { return };
     let cfg = quick_cfg(Mode::ApproxBackup { k: 2 });
-    let res = Service::run(&cfg, &models, &src.queries, 200, 100.0).unwrap();
+    let res = run_via_session(cfg, &models, &src, 200, 100.0);
     let metrics = res.metrics;
     assert_eq!(metrics.total(), 200);
     // With healthy instances the deployed pool usually wins, but both
@@ -98,12 +135,12 @@ fn parm_reconstructs_under_instance_failure() {
     // query may be lost (SLO backstop would mark stragglers Default —
     // there should be none while the group's siblings + parity survive).
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
     let mut cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
     cfg.shuffles = 0;
-    cfg.slo = Some(std::time::Duration::from_secs(3));
-    cfg.fault_schedule = vec![(0, std::time::Duration::ZERO, std::time::Duration::ZERO)];
-    let res = Service::run(&cfg, &models, &src.queries, 300, 150.0).unwrap();
+    cfg.slo = Some(Duration::from_secs(3));
+    cfg.fault_schedule = vec![(0, Duration::ZERO, Duration::ZERO)];
+    let res = run_via_session(cfg, &models, &src, 300, 150.0);
     let metrics = res.metrics;
     assert_eq!(metrics.total(), 300);
     assert!(
@@ -126,12 +163,12 @@ fn equal_resources_defaults_under_failure_where_parm_reconstructs() {
     // most queries off the dead instance, but whatever lands there is
     // lost), while ParM recovered those queries above.
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
     let mut cfg = quick_cfg(Mode::EqualResources { k: 2 });
     cfg.shuffles = 0;
-    cfg.slo = Some(std::time::Duration::from_millis(400));
-    cfg.fault_schedule = vec![(0, std::time::Duration::ZERO, std::time::Duration::ZERO)];
-    let res = Service::run(&cfg, &models, &src.queries, 300, 150.0).unwrap();
+    cfg.slo = Some(Duration::from_millis(400));
+    cfg.fault_schedule = vec![(0, Duration::ZERO, Duration::ZERO)];
+    let res = run_via_session(cfg, &models, &src, 300, 150.0);
     let metrics = res.metrics;
     assert_eq!(metrics.total(), 300);
     assert!(
@@ -144,9 +181,9 @@ fn equal_resources_defaults_under_failure_where_parm_reconstructs() {
 fn replication_mode_halves_effective_capacity_but_serves() {
     let _guard = serial();
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 1, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
     let cfg = quick_cfg(Mode::Replication { copies: 2 });
-    let res = Service::run(&cfg, &models, &src.queries, 150, 60.0).unwrap();
+    let res = run_via_session(cfg, &models, &src, 150, 60.0);
     assert_eq!(res.metrics.total(), 150);
 }
 
@@ -154,10 +191,66 @@ fn replication_mode_halves_effective_capacity_but_serves() {
 fn batched_service_works() {
     let _guard = serial();
     let Some((m, src)) = setup() else { return };
-    let models = latency::load_models(&m, 2, 2, 1, false).unwrap();
+    let Some(models) = models(&m, 2, 2, 1, false) else { return };
     let mut cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
     cfg.batch_size = 2;
-    cfg.batch_timeout = std::time::Duration::from_millis(5);
-    let res = Service::run(&cfg, &models, &src.queries, 300, 150.0).unwrap();
+    cfg.batch_timeout = Duration::from_millis(5);
+    let res = run_via_session(cfg, &models, &src, 300, 150.0);
     assert_eq!(res.metrics.total(), 300);
+}
+
+#[test]
+fn legacy_service_run_shim_still_works() {
+    let _guard = serial();
+    // Service::run survives as a compatibility shim over the session API.
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
+    let cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
+    let res = Service::run(&cfg, &models, &src.queries, 150, 100.0).unwrap();
+    assert_eq!(res.metrics.total(), 150);
+}
+
+#[test]
+fn live_handle_submit_drain_across_instance_failure() {
+    let _guard = serial();
+    // The new session surface end-to-end: a client submits queries against
+    // a live handle, an instance dies mid-stream, and every submitted
+    // query still comes back exactly once — stragglers via ParM decode.
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 1, 2, 1, false) else { return };
+    let mut cfg = quick_cfg(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] });
+    cfg.shuffles = 0;
+    cfg.slo = Some(Duration::from_secs(3)); // backstop for doubly-lost groups
+    let mut handle = ServiceBuilder::new(cfg)
+        .build(&models, &src.queries[0])
+        .expect("session builds");
+
+    let mut submitted = HashSet::new();
+    let mut resolved = Vec::new();
+    for i in 0..200u64 {
+        if i == 50 {
+            // Undetected zombie from here on: keeps taking jobs, never
+            // answers. The handle's fault surface injects it live.
+            handle.kill_instance(0);
+        }
+        let id = handle.submit(src.queries[(i as usize) % src.len()].clone());
+        assert!(submitted.insert(id), "ids must be unique");
+        resolved.extend(handle.poll());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    resolved.extend(handle.drain());
+    assert_eq!(handle.in_flight(), 0, "drain resolves everything");
+
+    let ids: HashSet<u64> = resolved.iter().map(|r| r.id).collect();
+    assert_eq!(ids, submitted, "every submitted query resolves");
+    assert_eq!(resolved.len(), 200, "exactly once each");
+    assert!(
+        resolved.iter().any(|r| r.outcome == Outcome::Reconstructed),
+        "queries swallowed by the dead instance come back via decode"
+    );
+
+    let res = handle.shutdown();
+    assert_eq!(res.metrics.total(), 200);
+    assert!(res.reconstructions > 0);
+    assert!(res.dropped_jobs > 0, "the killed instance must drop jobs");
 }
