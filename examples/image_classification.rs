@@ -2,6 +2,12 @@
 //! full degraded-mode accuracy evaluation on the CIFAR-10 stand-in across
 //! k = 2, 3, 4 and both encoders, printing the accuracy trade-off table.
 //!
+//! Paper scenario: §4.2 / Figures 6-7-9-10 — how much accuracy a
+//! *reconstructed* prediction loses relative to the deployed model's own
+//! output (A_d vs A_a), how that degrades as k grows, how the
+//! task-specific concat encoder compares to the generic sum, and the
+//! Eq. 1 overall accuracy A_o at the expected unavailability rate.
+//!
 //! Run with: `cargo run --release --example image_classification`
 
 use parm::artifacts::Manifest;

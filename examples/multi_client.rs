@@ -1,0 +1,158 @@
+//! Multi-client serving under overload and failure — the paper's
+//! deployment scenario (§2.1): a prediction-serving frontend takes
+//! concurrent query streams from many users while the cluster misbehaves.
+//! Eight (or `PARM_CLIENTS`) client threads drive three phases through
+//! the multi-client frontend: (1) paced Poisson traffic against the
+//! healthy cluster; (2) a synchronized overload burst, where admission
+//! control (`RejectAbove`) sheds load at `submit` instead of letting the
+//! pool backlog grow without bound; (3) paced traffic again, during which
+//! one deployed instance is killed permanently (the undetected-zombie
+//! failure model of §5.1) — ParM keeps answering the dead instance's
+//! queries via parity reconstruction, with the SLO default as the
+//! backstop. Prints per-client windowed p50/p99, recovery and reject
+//! counts — the serving-system view of Figure 11's tail-latency story.
+//!
+//! Run with: `cargo run --release --example multi_client`
+//! Knobs: PARM_CLIENTS (default 8), PARM_QUERIES_PER_CLIENT (default 150).
+
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::AdmissionPolicy;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
+use parm::experiments::latency;
+use parm::util::rng::Pcg64;
+use parm::workload::QuerySource;
+
+fn env_or(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let clients = env_or("PARM_CLIENTS", 8).max(1) as usize;
+    let per = env_or("PARM_QUERIES_PER_CLIENT", 150).max(20);
+
+    let m = Manifest::load_default()?;
+    let k = 2usize;
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let models = latency::load_models(&m, 1, k, 1, false)?;
+
+    // Phase split per client: 40% paced, 20% burst, 40% paced.
+    let paced1 = per * 2 / 5;
+    let burst = per / 5;
+    let paced2 = per - paced1 - burst;
+    let m_instances = 4usize;
+    let rate = 160.0; // total qps, comfortably inside the simulated capacity
+    let per_rate = rate / clients as f64;
+    // The instance kill lands mid-way through phase 3.
+    let kill_at = Duration::from_secs_f64(
+        (paced1 as f64 / per_rate) + 0.5 + (paced2 as f64 / per_rate) * 0.4,
+    );
+
+    let mut cfg =
+        ServiceConfig::defaults(Mode::Parm { k, encoders: vec![Encoder::sum(k)] }, &GPU);
+    cfg.m = m_instances;
+    cfg.shuffles = 1;
+    cfg.seed = 0xC11E77;
+    cfg.slo = Some(Duration::from_secs(2)); // backstop for doubly-lost groups
+    // Low enough that even one client's burst alone overruns it — the
+    // paced phases never get near it.
+    cfg.admission = AdmissionPolicy::RejectAbove { backlog: 24 };
+    cfg.metrics_window = Duration::from_secs(60); // cover the whole run
+    cfg.fault_schedule = vec![(0, kill_at, Duration::ZERO)];
+
+    println!(
+        "{clients} clients x {per} queries (paced {paced1} + burst {burst} + paced {paced2}) \
+         at {rate:.0} qps total, m={m_instances}, k={k}; instance 0 dies at t={:.1}s\n",
+        kill_at.as_secs_f64()
+    );
+
+    let frontend = ServiceBuilder::new(cfg).serve(&models, &source.queries[0])?;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let client = frontend.client();
+        let queries = source.queries.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(0xFACADE ^ (c as u64) << 13);
+            let mut due = Instant::now();
+            let mut accepted = 0u64;
+            for i in 0..per {
+                let paced = i < paced1 || i >= paced1 + burst;
+                if paced {
+                    due += Duration::from_secs_f64(rng.exponential(per_rate));
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                } else if i == paced1 {
+                    // Burst phase starts: submit as fast as possible and
+                    // let admission control do its job.
+                    due = Instant::now();
+                }
+                if client.submit(queries[i as usize % queries.len()].clone()).is_ok() {
+                    accepted += 1;
+                }
+                let _ = client.poll();
+                if !paced && i + 1 == paced1 + burst {
+                    // Re-anchor pacing after the burst.
+                    due = Instant::now();
+                }
+            }
+            while client.stats().resolved < accepted {
+                if client.next(Duration::from_secs(8)).is_none() {
+                    break;
+                }
+            }
+            client
+        }));
+    }
+
+    println!(
+        "{:<8} {:>9} {:>9} {:>9} {:>10} {:>10} {:>10} {:>9}",
+        "client", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)", "recovered",
+        "default"
+    );
+    let (mut total_rejected, mut total_recovered) = (0u64, 0u64);
+    for j in joins {
+        let client = j.join().expect("client thread");
+        let st = client.stats();
+        let w = client.window();
+        total_rejected += st.rejected;
+        total_recovered += st.recovered;
+        println!(
+            "{:<8} {:>9} {:>9} {:>9} {:>10.3} {:>10.3} {:>10} {:>9}",
+            client.id(),
+            st.submitted,
+            st.resolved,
+            st.rejected,
+            w.p50_ms,
+            w.p99_ms,
+            st.recovered,
+            st.defaulted
+        );
+    }
+
+    println!("\nfrontend window: {}", frontend.window().report("all-clients"));
+    let res = frontend.shutdown()?;
+    let mut metrics = res.metrics;
+    println!("{}", metrics.report("run total"));
+    println!(
+        "wall={:.1}s reconstructions={} dropped_jobs={} rejected={}",
+        res.wall.as_secs_f64(),
+        res.reconstructions,
+        res.dropped_jobs,
+        res.rejected
+    );
+    if total_recovered > 0 {
+        println!("\n✓ queries swallowed by the dead instance came back via redundancy");
+    }
+    if total_rejected > 0 {
+        println!("✓ admission control shed load during the overload burst");
+    }
+    Ok(())
+}

@@ -1,7 +1,13 @@
-//! Object localization with ParM (§4.2.1, Figure 8): a regression task
-//! where "return a default prediction" is meaningless — reconstruction is
-//! the only viable fallback. Prints per-example boxes plus the aggregate
-//! IoU of deployed predictions vs ParM reconstructions.
+//! Object localization with ParM.
+//!
+//! Paper scenario: §4.2.1 / Figure 8 — the regression task that shows
+//! parity models generalize beyond classification. A bounding-box
+//! regressor has no "default prediction" worth returning, so
+//! reconstruction is the only viable fallback when an instance is
+//! unavailable; the measure of degraded quality is IoU against the
+//! deployed model's own boxes rather than top-1 accuracy. Prints
+//! per-example boxes plus the aggregate IoU of deployed predictions vs
+//! ParM reconstructions.
 //!
 //! Run with: `cargo run --release --example object_localization`
 

@@ -1,5 +1,10 @@
 //! Quickstart: the whole ParM pipeline on one coding group, end to end.
 //!
+//! Paper scenario: Figure 2's single coding group — the paper's core
+//! mechanism in isolation. One encode (§3.2), one parity inference on a
+//! learned parity model (§3.3), one decode of a "lost" prediction (§3.2),
+//! with no cluster, batching, or failure simulation around it.
+//!
 //! 1. load the AOT artifacts (deployed + parity model, k = 2),
 //! 2. encode two real queries into a parity query (Rust encoder),
 //! 3. run all three inferences via PJRT,

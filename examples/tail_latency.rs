@@ -3,6 +3,13 @@
 //! simulated GPU cluster with background shuffles, for ParM and all three
 //! baselines, and report median / p99 / p99.9 latency + throughput.
 //!
+//! Paper scenario: §5.1 / Figure 11 — open-loop Poisson traffic against a
+//! cluster whose network is perturbed by background data shuffles, with
+//! the paper's comparison set (no-redundancy floor, ParM k=2,
+//! Equal-Resources, approximate backup). The claim being reproduced:
+//! ParM trims the 99.9th-percentile tail toward the median where
+//! resource-equalized baselines cannot, at equal offered rate.
+//!
 //! Run with: `cargo run --release --example tail_latency`
 //! Knobs: PARM_BENCH_QUERIES (default 8000).
 

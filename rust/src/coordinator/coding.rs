@@ -7,6 +7,11 @@
 //! purely as a function of which outputs have arrived — which unavailable
 //! predictions can be reconstructed. It is deliberately free of threads
 //! and clocks so its invariants are property-testable.
+//!
+//! In the serving stack this sits inside
+//! [`crate::coordinator::scheme::ParmScheme`], which feeds it from the
+//! session's dispatch/completion callbacks; the decode math itself lives
+//! in [`crate::coordinator::decoder`].
 
 use std::collections::HashMap;
 

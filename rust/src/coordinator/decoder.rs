@@ -30,6 +30,18 @@ pub enum DecodeError {
 
 /// r = 1 subtraction decode: reconstruct slot `j` from the parity output
 /// and the other k-1 data outputs.
+///
+/// ```
+/// use parm::coordinator::decoder::decode_r1;
+/// use parm::tensor::Tensor;
+///
+/// // F(X1) = [1, 2] is unavailable; F(X2) = [3, 4] arrived, and the
+/// // parity model produced F_P(P) ~ F(X1) + F(X2) = [4, 6].
+/// let f2 = Tensor::new(vec![1, 2], vec![3.0, 4.0]).unwrap();
+/// let fp = Tensor::new(vec![1, 2], vec![4.0, 6.0]).unwrap();
+/// let rec = decode_r1(&[1.0, 1.0], &fp, &[None, Some(f2)], 0).unwrap();
+/// assert_eq!(rec.data(), &[1.0, 2.0][..]);
+/// ```
 pub fn decode_r1(
     weights: &[f32],
     parity_out: &Tensor,

@@ -68,6 +68,20 @@ impl Encoder {
     }
 
     /// Encode k same-shaped queries into one parity query.
+    ///
+    /// ```
+    /// use parm::coordinator::encoder::Encoder;
+    /// use parm::tensor::Tensor;
+    ///
+    /// // The paper's generic addition code: P = X1 + X2.
+    /// let x1 = Tensor::filled(vec![4], 1.0);
+    /// let x2 = Tensor::filled(vec![4], 2.0);
+    /// let p = Encoder::sum(2).encode(&[&x1, &x2]).unwrap();
+    /// assert_eq!(p.data(), &[3.0, 3.0, 3.0, 3.0][..]);
+    ///
+    /// // Group-size mismatches are rejected, not silently mis-encoded.
+    /// assert!(Encoder::sum(3).encode(&[&x1, &x2]).is_err());
+    /// ```
     pub fn encode(&self, queries: &[&Tensor]) -> Result<Tensor, EncodeError> {
         if queries.len() != self.k() {
             return Err(EncodeError::WrongGroupSize {

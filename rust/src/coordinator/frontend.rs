@@ -1,0 +1,728 @@
+//! Multi-client serving frontend: admission control and per-client
+//! accounting over a single-consumer [`ServiceHandle`].
+//!
+//! The paper's setting is a prediction-serving system fronting many
+//! concurrent users (§2.1), but [`ServiceHandle`] is deliberately
+//! single-consumer — all of its methods take `&mut self` so the scheme,
+//! batcher, and pending map stay lock-free. This module closes the gap:
+//!
+//! ```text
+//!  client threads                dispatcher thread             workers
+//!  ──────────────               ───────────────────            ───────
+//!  ServiceClient::submit ──┐
+//!  ServiceClient::submit ──┼─ mpsc ─▶ ServiceHandle::submit ─▶ pools…
+//!  ServiceClient::submit ──┘          ServiceHandle::poll  ◀── completions
+//!                 ▲                        │
+//!                 └── per-client inboxes ◀─┘ (routed by query id)
+//! ```
+//!
+//! [`ServingFrontend::start`] moves the handle onto a dedicated
+//! dispatcher thread. [`ServiceClient`]s (cloneable, `Send + Sync`) feed
+//! it through an mpsc channel; the dispatcher routes every [`Resolved`]
+//! back to the inbox of the client that submitted it (keyed by
+//! [`QueryId`]) and keeps per-client counts and latency windows.
+//!
+//! **Admission control** runs on the client thread at `submit`, against
+//! the dispatcher-published load (session [`ServiceHandle::backlog`] plus
+//! submissions still in the channel): [`AdmissionPolicy::Unbounded`]
+//! always admits, [`AdmissionPolicy::RejectAbove`] fails fast, and
+//! [`AdmissionPolicy::Block`] waits for headroom up to a timeout. Rejects
+//! are folded back into the session's [`RunResult`] so a run's record
+//! covers the *offered* traffic, not just the admitted part.
+//!
+//! ```no_run
+//! use parm::artifacts::Manifest;
+//! use parm::cluster::hardware::GPU;
+//! use parm::coordinator::encoder::Encoder;
+//! use parm::coordinator::frontend::AdmissionPolicy;
+//! use parm::coordinator::service::{Mode, ServiceConfig};
+//! use parm::coordinator::session::ServiceBuilder;
+//! use parm::experiments::latency;
+//! use parm::workload::QuerySource;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let manifest = Manifest::load_default()?;
+//! let models = latency::load_models(&manifest, 1, 2, 1, false)?;
+//! let source = QuerySource::from_dataset(&manifest, manifest.dataset(latency::LATENCY_DATASET)?)?;
+//! let mut cfg =
+//!     ServiceConfig::defaults(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] }, &GPU);
+//! cfg.admission = AdmissionPolicy::RejectAbove { backlog: 64 };
+//!
+//! let frontend = ServiceBuilder::new(cfg).serve(&models, &source.queries[0])?;
+//! let client = frontend.client(); // one per submitter thread
+//! let id = client.submit(source.queries[0].clone())?;
+//! let answers = client.poll(); // routed back to *this* client only
+//! println!("{}", client.window().report("client 0"));
+//! # let _ = (id, answers);
+//! let result = frontend.shutdown()?;
+//! # let _ = result;
+//! # Ok(())
+//! # }
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{LatencyWindow, Outcome, WindowSnapshot};
+use crate::coordinator::service::{ModelSet, RunResult};
+use crate::coordinator::session::{QueryId, Resolved, ServiceBuilder, ServiceHandle};
+use crate::tensor::Tensor;
+
+/// How the frontend admits queries when the cluster falls behind.
+///
+/// Enforced on the submitting client's thread against the most recently
+/// published frontend load (session backlog + queued submissions), so it
+/// is approximate by a few queries under racing submitters — the point is
+/// bounding queue growth, not an exact semaphore.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything (the open-loop experiment default).
+    Unbounded,
+    /// Fail `submit` immediately once the load reaches `backlog`.
+    RejectAbove { backlog: usize },
+    /// Wait up to `timeout` for the load to drop below `backlog`, then
+    /// fail with [`SubmitError::Timeout`].
+    Block { backlog: usize, timeout: Duration },
+}
+
+/// Why a [`ServiceClient::submit`] did not enqueue the query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    #[error("admission control rejected the query (load {load} >= limit {limit})")]
+    Rejected { load: usize, limit: usize },
+    #[error("admission control timed out after {timeout:?} (load {load} >= limit {limit})")]
+    Timeout { load: usize, limit: usize, timeout: Duration },
+    #[error("frontend is shut down")]
+    Closed,
+}
+
+/// Per-client counters, readable at any time via [`ServiceClient::stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Queries this client successfully enqueued.
+    pub submitted: u64,
+    /// Queries resolved and routed back to this client.
+    pub resolved: u64,
+    /// Queries admission control turned away.
+    pub rejected: u64,
+    /// Resolved by the deployed model's own prediction.
+    pub native: u64,
+    /// Recovered by redundancy (ParM reconstruction or a replica).
+    pub recovered: u64,
+    /// Fell back to the SLO default prediction.
+    pub defaulted: u64,
+}
+
+impl ClientStats {
+    /// Accepted queries still awaiting their prediction. Saturating: the
+    /// counters are snapshotted independently, so a concurrent submit +
+    /// delivery between the two loads can make `resolved` read ahead.
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.saturating_sub(self.resolved)
+    }
+}
+
+/// Identity and accounting of one logical client.
+struct ClientCore {
+    id: u64,
+    submitted: AtomicU64,
+    resolved: AtomicU64,
+    rejected: AtomicU64,
+    native: AtomicU64,
+    recovered: AtomicU64,
+    defaulted: AtomicU64,
+    /// This client's latency sketch over the sliding window.
+    window: Mutex<LatencyWindow>,
+    /// Completions routed to this client, awaiting pickup.
+    inbox: Mutex<VecDeque<Resolved>>,
+    inbox_cv: Condvar,
+}
+
+impl ClientCore {
+    fn new(id: u64, window: Duration) -> ClientCore {
+        ClientCore {
+            id,
+            submitted: AtomicU64::new(0),
+            resolved: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            native: AtomicU64::new(0),
+            recovered: AtomicU64::new(0),
+            defaulted: AtomicU64::new(0),
+            window: Mutex::new(LatencyWindow::new(window)),
+            inbox: Mutex::new(VecDeque::new()),
+            inbox_cv: Condvar::new(),
+        }
+    }
+
+    /// Dispatcher-side delivery: account, record latency, wake waiters.
+    fn deliver(&self, r: Resolved) {
+        self.resolved.fetch_add(1, Ordering::Relaxed);
+        match r.outcome {
+            Outcome::Native => self.native.fetch_add(1, Ordering::Relaxed),
+            Outcome::Reconstructed | Outcome::Replica => {
+                self.recovered.fetch_add(1, Ordering::Relaxed)
+            }
+            Outcome::Default => self.defaulted.fetch_add(1, Ordering::Relaxed),
+        };
+        self.window.lock().unwrap().record(r.outcome, r.latency, Instant::now());
+        let mut inbox = self.inbox.lock().unwrap();
+        inbox.push_back(r);
+        self.inbox_cv.notify_all();
+    }
+}
+
+/// State shared by the frontend handle, every client, and the dispatcher.
+struct FrontendShared {
+    policy: AdmissionPolicy,
+    /// Window length for the frontend-wide and per-client aggregators.
+    client_window: Duration,
+    /// Next frontend-level query id (ids are unique across clients).
+    next_id: AtomicU64,
+    next_client: AtomicU64,
+    /// Submissions accepted but not yet handed to the session.
+    queued: AtomicUsize,
+    /// Client threads currently inside `submit` (passed the open check,
+    /// message possibly not sent yet). The dispatcher's shutdown path
+    /// waits for this to clear so an accepted submit is never dropped.
+    in_submit: AtomicUsize,
+    /// Last [`ServiceHandle::backlog`] published by the dispatcher.
+    session_backlog: AtomicUsize,
+    /// Total admission rejects (all clients, whole run).
+    rejected_total: AtomicU64,
+    /// Rejects not yet folded into the session's metrics.
+    rejects_unfolded: AtomicU64,
+    /// Cleared by `shutdown`; new submits fail with [`SubmitError::Closed`].
+    open: AtomicBool,
+    /// Wait/notify surface for [`AdmissionPolicy::Block`] submitters.
+    gate: Mutex<()>,
+    gate_cv: Condvar,
+    /// Frontend-wide sliding window across all clients.
+    window: Mutex<LatencyWindow>,
+}
+
+impl FrontendShared {
+    /// Outstanding work the admission policies bound: session pool
+    /// backlog plus submissions still queued toward the dispatcher.
+    fn load(&self) -> usize {
+        self.session_backlog.load(Ordering::Acquire) + self.queued.load(Ordering::Acquire)
+    }
+}
+
+/// Decrements the in-submit counter on every exit path of `submit`.
+struct SubmitGuard<'a>(&'a AtomicUsize);
+
+impl Drop for SubmitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Messages from clients (and the frontend handle) to the dispatcher.
+enum Msg {
+    Submit { fid: QueryId, client: Arc<ClientCore>, input: Tensor },
+    Shutdown { reply: mpsc::Sender<RunResult> },
+}
+
+/// A handle for one logical client of a [`ServingFrontend`].
+///
+/// `Send + Sync` and cheap to clone; a clone shares this client's
+/// identity (inbox, counters, window) — use [`ServiceClient::fork`] or
+/// [`ServingFrontend::client`] for a *new* identity with its own
+/// accounting. All methods take `&self`, so one client can be driven
+/// from several threads at once.
+pub struct ServiceClient {
+    core: Arc<ClientCore>,
+    shared: Arc<FrontendShared>,
+    /// Shared with the frontend handle only — the dispatcher must not
+    /// hold a sender or it would never observe disconnect. The Mutex is
+    /// for portability, not correctness: `mpsc::Sender` is only `Sync`
+    /// on Rust >= 1.72, and the lock is held for a single non-blocking
+    /// `send`, so contention is a few hundred nanoseconds per submit.
+    tx: Arc<Mutex<mpsc::Sender<Msg>>>,
+}
+
+impl Clone for ServiceClient {
+    fn clone(&self) -> ServiceClient {
+        ServiceClient {
+            core: self.core.clone(),
+            shared: self.shared.clone(),
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl ServiceClient {
+    /// This client's frontend-assigned id (stable across clones).
+    pub fn id(&self) -> u64 {
+        self.core.id
+    }
+
+    /// A new client identity on the same frontend (fresh inbox, counters,
+    /// and latency window).
+    pub fn fork(&self) -> ServiceClient {
+        ServiceClient {
+            core: Arc::new(ClientCore::new(
+                self.shared.next_client.fetch_add(1, Ordering::Relaxed),
+                self.shared.client_window,
+            )),
+            shared: self.shared.clone(),
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Submit one query through admission control. On success the query
+    /// id is returned immediately; the prediction arrives later in this
+    /// client's inbox ([`ServiceClient::poll`] / [`ServiceClient::next`]).
+    pub fn submit(&self, input: Tensor) -> Result<QueryId, SubmitError> {
+        // SeqCst pairs with the SeqCst open-store in shutdown: if the
+        // open check below passes, this increment is globally ordered
+        // before the store, so the dispatcher's shutdown wait loop is
+        // guaranteed to observe it and absorb our message.
+        self.shared.in_submit.fetch_add(1, Ordering::SeqCst);
+        let _guard = SubmitGuard(&self.shared.in_submit);
+        if !self.shared.open.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed);
+        }
+        self.admit()?;
+        let fid = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        self.core.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.queued.fetch_add(1, Ordering::AcqRel);
+        let sent = self
+            .tx
+            .lock()
+            .unwrap()
+            .send(Msg::Submit { fid, client: self.core.clone(), input });
+        if sent.is_err() {
+            // Dispatcher already gone (shutdown raced this submit).
+            self.shared.queued.fetch_sub(1, Ordering::AcqRel);
+            self.core.submitted.fetch_sub(1, Ordering::Relaxed);
+            return Err(SubmitError::Closed);
+        }
+        Ok(fid)
+    }
+
+    /// Non-blocking: take every prediction routed to this client so far.
+    pub fn poll(&self) -> Vec<Resolved> {
+        self.core.inbox.lock().unwrap().drain(..).collect()
+    }
+
+    /// Block up to `timeout` for the next prediction for this client.
+    pub fn next(&self, timeout: Duration) -> Option<Resolved> {
+        let deadline = Instant::now() + timeout;
+        let mut inbox = self.core.inbox.lock().unwrap();
+        loop {
+            if let Some(r) = inbox.pop_front() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .core
+                .inbox_cv
+                .wait_timeout(inbox, deadline - now)
+                .unwrap();
+            inbox = guard;
+        }
+    }
+
+    /// This client's counters (monotonic over the client's lifetime).
+    pub fn stats(&self) -> ClientStats {
+        ClientStats {
+            submitted: self.core.submitted.load(Ordering::Relaxed),
+            resolved: self.core.resolved.load(Ordering::Relaxed),
+            rejected: self.core.rejected.load(Ordering::Relaxed),
+            native: self.core.native.load(Ordering::Relaxed),
+            recovered: self.core.recovered.load(Ordering::Relaxed),
+            defaulted: self.core.defaulted.load(Ordering::Relaxed),
+        }
+    }
+
+    /// This client's live windowed latency/recovery/reject summary.
+    pub fn window(&self) -> WindowSnapshot {
+        self.core.window.lock().unwrap().snapshot(Instant::now())
+    }
+
+    fn admit(&self) -> Result<(), SubmitError> {
+        match self.shared.policy {
+            AdmissionPolicy::Unbounded => Ok(()),
+            AdmissionPolicy::RejectAbove { backlog: limit } => {
+                let load = self.shared.load();
+                if load < limit {
+                    Ok(())
+                } else {
+                    self.note_reject();
+                    Err(SubmitError::Rejected { load, limit })
+                }
+            }
+            AdmissionPolicy::Block { backlog: limit, timeout } => {
+                let deadline = Instant::now() + timeout;
+                let mut waited = self.shared.gate.lock().unwrap();
+                loop {
+                    let load = self.shared.load();
+                    if load < limit {
+                        return Ok(());
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(waited);
+                        self.note_reject();
+                        return Err(SubmitError::Timeout { load, limit, timeout });
+                    }
+                    // Re-check at a few-ms cadence even without a notify,
+                    // since load also drains via dispatcher publishes.
+                    let wait = (deadline - now).min(Duration::from_millis(2));
+                    let (guard, _) = self.shared.gate_cv.wait_timeout(waited, wait).unwrap();
+                    waited = guard;
+                }
+            }
+        }
+    }
+
+    fn note_reject(&self) {
+        self.core.rejected.fetch_add(1, Ordering::Relaxed);
+        self.shared.rejected_total.fetch_add(1, Ordering::Relaxed);
+        self.shared.rejects_unfolded.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        self.core.window.lock().unwrap().record_rejects(1, now);
+        self.shared.window.lock().unwrap().record_rejects(1, now);
+    }
+}
+
+/// Owner of the dispatcher thread that multiplexes [`ServiceClient`]s
+/// onto a [`ServiceHandle`]. Create with [`ServingFrontend::start`] (or
+/// [`ServiceBuilder::serve`]), mint clients with
+/// [`ServingFrontend::client`], and finish with
+/// [`ServingFrontend::shutdown`] to get the session's [`RunResult`].
+pub struct ServingFrontend {
+    shared: Arc<FrontendShared>,
+    tx: Arc<Mutex<mpsc::Sender<Msg>>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl ServingFrontend {
+    /// Wrap a built session, serving it from a new dispatcher thread,
+    /// with the default 10 s metrics window.
+    pub fn start(handle: ServiceHandle, policy: AdmissionPolicy) -> ServingFrontend {
+        ServingFrontend::start_with_window(handle, policy, Duration::from_secs(10))
+    }
+
+    /// [`ServingFrontend::start`] with an explicit window length for the
+    /// frontend-wide and per-client metrics aggregators.
+    pub fn start_with_window(
+        handle: ServiceHandle,
+        policy: AdmissionPolicy,
+        window: Duration,
+    ) -> ServingFrontend {
+        let (tx, rx) = mpsc::channel();
+        let shared = Arc::new(FrontendShared {
+            policy,
+            client_window: window,
+            next_id: AtomicU64::new(0),
+            next_client: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            in_submit: AtomicUsize::new(0),
+            session_backlog: AtomicUsize::new(0),
+            rejected_total: AtomicU64::new(0),
+            rejects_unfolded: AtomicU64::new(0),
+            open: AtomicBool::new(true),
+            gate: Mutex::new(()),
+            gate_cv: Condvar::new(),
+            window: Mutex::new(LatencyWindow::new(window)),
+        });
+        let dispatcher_shared = shared.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("frontend-dispatcher".into())
+            .spawn(move || dispatcher_loop(handle, rx, dispatcher_shared))
+            .expect("spawn frontend dispatcher");
+        ServingFrontend { shared, tx: Arc::new(Mutex::new(tx)), dispatcher: Some(dispatcher) }
+    }
+
+    /// Mint a new client (own inbox, counters, latency window).
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient {
+            core: Arc::new(ClientCore::new(
+                self.shared.next_client.fetch_add(1, Ordering::Relaxed),
+                self.shared.client_window,
+            )),
+            shared: self.shared.clone(),
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// The admission policy clients are subject to.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.shared.policy
+    }
+
+    /// Current admission-control load estimate (session backlog plus
+    /// queued submissions).
+    pub fn load(&self) -> usize {
+        self.shared.load()
+    }
+
+    /// Total queries rejected so far, across all clients.
+    pub fn rejected(&self) -> u64 {
+        self.shared.rejected_total.load(Ordering::Relaxed)
+    }
+
+    /// Frontend-wide live windowed metrics across all clients.
+    pub fn window(&self) -> WindowSnapshot {
+        self.shared.window.lock().unwrap().snapshot(Instant::now())
+    }
+
+    /// Stop admitting, let in-flight queries resolve (deliveries keep
+    /// flowing to client inboxes), shut the session down, and return its
+    /// [`RunResult`]. Like [`ServiceHandle::drain`], resolution of *lost*
+    /// queries needs an SLO in the config — give it one when serving
+    /// under failures.
+    pub fn shutdown(mut self) -> anyhow::Result<RunResult> {
+        self.shared.open.store(false, Ordering::SeqCst);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Msg::Shutdown { reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("frontend dispatcher already exited"))?;
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("frontend dispatcher dropped the run result"))
+    }
+}
+
+impl Drop for ServingFrontend {
+    fn drop(&mut self) {
+        // Dropped without shutdown(): stop admitting. Once the last
+        // client's sender clone is gone the dispatcher observes
+        // disconnect and exits WITHOUT draining (nobody is left to
+        // receive results), tearing the session down via
+        // ServiceHandle's Drop.
+        self.shared.open.store(false, Ordering::SeqCst);
+    }
+}
+
+impl ServiceBuilder {
+    /// Build the session and wrap it in a [`ServingFrontend`] configured
+    /// from this builder's `admission` policy and `metrics_window`.
+    pub fn serve(
+        self,
+        models: &ModelSet,
+        sample_query: &Tensor,
+    ) -> anyhow::Result<ServingFrontend> {
+        let policy = self.config().admission;
+        let window = self.config().metrics_window;
+        let handle = self.build(models, sample_query)?;
+        Ok(ServingFrontend::start_with_window(handle, policy, window))
+    }
+}
+
+// ------------------------------------------------------------------------
+// Dispatcher thread
+// ------------------------------------------------------------------------
+
+/// Pump cadence: how long the dispatcher blocks for a submission before
+/// servicing completions anyway. Workers timestamp completions, so this
+/// granularity never distorts recorded latency.
+const PUMP: Duration = Duration::from_millis(1);
+
+fn dispatcher_loop(
+    mut handle: ServiceHandle,
+    rx: mpsc::Receiver<Msg>,
+    shared: Arc<FrontendShared>,
+) {
+    // Session query id -> (frontend query id, submitting client).
+    let mut routes: HashMap<QueryId, (QueryId, Arc<ClientCore>)> = HashMap::new();
+    let mut shutdown_reply: Option<mpsc::Sender<RunResult>> = None;
+    let mut disconnected = false;
+
+    while shutdown_reply.is_none() && !disconnected {
+        match rx.recv_timeout(PUMP) {
+            Ok(Msg::Submit { fid, client, input }) => {
+                submit_one(&mut handle, &mut routes, &shared, fid, client, input);
+                // Drain the burst that accumulated behind the first one.
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Submit { fid, client, input }) => {
+                            submit_one(&mut handle, &mut routes, &shared, fid, client, input);
+                        }
+                        Ok(Msg::Shutdown { reply }) => {
+                            shutdown_reply = Some(reply);
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown { reply }) => shutdown_reply = Some(reply),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => disconnected = true,
+        }
+        for r in handle.poll() {
+            route(&mut routes, &shared, r);
+        }
+        publish(&handle, &shared);
+        fold_rejects(&mut handle, &shared);
+        // Wake Block-policy submitters; cheap when nobody waits.
+        shared.gate_cv.notify_all();
+    }
+
+    if disconnected {
+        // Every client and the frontend handle are gone (mpsc reports
+        // Disconnected only once the buffer is empty), so there is
+        // nobody to deliver to and no reply destination. Skip the drain
+        // — with lost queries and no SLO it could never terminate — and
+        // let ServiceHandle's Drop close the pools gracefully.
+        return;
+    }
+
+    // Absorb submissions that raced the shutdown message so "accepted"
+    // always implies "will resolve": any client past the `open` check
+    // shows up in `in_submit` (SeqCst, see submit), and anything it sent
+    // shows up in `queued` until handed to the session — so drain until
+    // both clear. Bounded: once `open` is false new submits fail fast,
+    // and a Block-policy waiter gives up by its admission timeout.
+    loop {
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                Msg::Submit { fid, client, input } => {
+                    submit_one(&mut handle, &mut routes, &shared, fid, client, input);
+                }
+                Msg::Shutdown { reply } => {
+                    if shutdown_reply.is_none() {
+                        shutdown_reply = Some(reply);
+                    }
+                }
+            }
+        }
+        if shared.in_submit.load(Ordering::SeqCst) == 0
+            && shared.queued.load(Ordering::SeqCst) == 0
+        {
+            break;
+        }
+        // Keep the published load fresh and Block waiters awake so they
+        // either get admitted or time out promptly.
+        publish(&handle, &shared);
+        shared.gate_cv.notify_all();
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    // Only now is the reject tally final (a Block waiter that timed out
+    // during shutdown has noted its reject by the time in_submit clears).
+    fold_rejects(&mut handle, &shared);
+    for r in handle.drain() {
+        route(&mut routes, &shared, r);
+    }
+    publish(&handle, &shared);
+    let result = handle.shutdown();
+    if let Some(reply) = shutdown_reply {
+        let _ = reply.send(result);
+    }
+    shared.gate_cv.notify_all();
+}
+
+fn submit_one(
+    handle: &mut ServiceHandle,
+    routes: &mut HashMap<QueryId, (QueryId, Arc<ClientCore>)>,
+    shared: &FrontendShared,
+    fid: QueryId,
+    client: Arc<ClientCore>,
+    input: Tensor,
+) {
+    let sid = handle.submit(input);
+    routes.insert(sid, (fid, client));
+    // Publish *before* decrementing `queued` so admission never observes
+    // the query in neither place (transient double-count is the safe
+    // direction for a load bound).
+    publish(handle, shared);
+    shared.queued.fetch_sub(1, Ordering::AcqRel);
+}
+
+fn route(
+    routes: &mut HashMap<QueryId, (QueryId, Arc<ClientCore>)>,
+    shared: &FrontendShared,
+    r: Resolved,
+) {
+    match routes.remove(&r.id) {
+        Some((fid, client)) => {
+            let out = Resolved { id: fid, outcome: r.outcome, latency: r.latency };
+            shared.window.lock().unwrap().record(out.outcome, out.latency, Instant::now());
+            client.deliver(out);
+        }
+        None => log::warn!("frontend: resolution for unknown query id {}", r.id),
+    }
+}
+
+fn publish(handle: &ServiceHandle, shared: &FrontendShared) {
+    shared.session_backlog.store(handle.backlog(), Ordering::Release);
+}
+
+fn fold_rejects(handle: &mut ServiceHandle, shared: &FrontendShared) {
+    let n = shared.rejects_unfolded.swap(0, Ordering::AcqRel);
+    handle.note_rejected(n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_send_sync_clone() {
+        fn assert_traits<T: Send + Sync + Clone>() {}
+        assert_traits::<ServiceClient>();
+    }
+
+    #[test]
+    fn frontend_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ServingFrontend>();
+    }
+
+    #[test]
+    fn client_stats_in_flight() {
+        let s = ClientStats { submitted: 10, resolved: 7, ..ClientStats::default() };
+        assert_eq!(s.in_flight(), 3);
+    }
+
+    #[test]
+    fn submit_errors_render() {
+        let r = SubmitError::Rejected { load: 70, limit: 64 };
+        assert!(r.to_string().contains("70"));
+        let t = SubmitError::Timeout {
+            load: 70,
+            limit: 64,
+            timeout: Duration::from_millis(50),
+        };
+        assert!(t.to_string().contains("50ms"));
+        assert_eq!(SubmitError::Closed.to_string(), "frontend is shut down");
+    }
+
+    /// End-to-end routing is covered by `tests/frontend_concurrency.rs`
+    /// against a real simulated cluster; here we only pin the pure
+    /// admission arithmetic.
+    #[test]
+    fn load_is_backlog_plus_queued() {
+        let shared = FrontendShared {
+            policy: AdmissionPolicy::Unbounded,
+            client_window: Duration::from_secs(1),
+            next_id: AtomicU64::new(0),
+            next_client: AtomicU64::new(0),
+            queued: AtomicUsize::new(3),
+            in_submit: AtomicUsize::new(0),
+            session_backlog: AtomicUsize::new(5),
+            rejected_total: AtomicU64::new(0),
+            rejects_unfolded: AtomicU64::new(0),
+            open: AtomicBool::new(true),
+            gate: Mutex::new(()),
+            gate_cv: Condvar::new(),
+            window: Mutex::new(LatencyWindow::default()),
+        };
+        assert_eq!(shared.load(), 8);
+    }
+}

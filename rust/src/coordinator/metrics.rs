@@ -4,7 +4,18 @@
 //! arrival to the moment a prediction for the query is available at the
 //! frontend — from the deployed model, from a reconstruction, from a
 //! replica, or (failing all by the SLO) a default prediction.
+//!
+//! Two aggregation surfaces:
+//!
+//! - [`RunMetrics`] accumulates a whole run and is reported once at
+//!   [`crate::coordinator::session::ServiceHandle::shutdown`];
+//! - [`LatencyWindow`] is the *live* view: a sliding window of recent
+//!   resolutions (and admission rejects) that can be snapshotted at any
+//!   moment — by a [`crate::coordinator::session::ServiceHandle`] owner
+//!   via `window_snapshot()`, or per client through the multi-client
+//!   frontend in [`crate::coordinator::frontend`].
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
@@ -36,6 +47,10 @@ pub struct RunMetrics {
     pub reconstructed: u64,
     pub replica: u64,
     pub defaulted: u64,
+    /// Queries turned away by admission control before entering the
+    /// session (never dispatched, so they contribute no latency sample
+    /// and are excluded from [`RunMetrics::total`]).
+    pub rejected: u64,
     /// Encode / decode time accounting (§5.2.5).
     pub encode_us: Summary,
     pub decode_us: Summary,
@@ -58,8 +73,20 @@ impl RunMetrics {
         self.defaulted += 1;
     }
 
+    /// Fold in queries rejected by admission control (frontend-side).
+    pub fn record_rejected(&mut self, n: u64) {
+        self.rejected += n;
+    }
+
+    /// Queries that *resolved* (with any outcome). Rejected queries never
+    /// entered the session and are counted separately in `rejected`.
     pub fn total(&self) -> u64 {
         self.native + self.reconstructed + self.replica + self.defaulted
+    }
+
+    /// All queries offered to the service: resolved plus rejected.
+    pub fn offered(&self) -> u64 {
+        self.total() + self.rejected
     }
 
     /// Fraction of queries that needed something other than the deployed
@@ -74,13 +101,195 @@ impl RunMetrics {
 
     pub fn report(&mut self, label: &str) -> String {
         format!(
-            "{} | native={} recon={} replica={} default={} (f_u={:.4})",
+            "{} | native={} recon={} replica={} default={} rejected={} (f_u={:.4})",
             self.latency.report(label),
             self.native,
             self.reconstructed,
             self.replica,
             self.defaulted,
+            self.rejected,
             self.f_unavailable(),
+        )
+    }
+}
+
+// ------------------------------------------------------------------------
+// Windowed live metrics
+// ------------------------------------------------------------------------
+
+/// Sliding-window aggregator for *live* serving metrics.
+///
+/// Holds the resolutions (and admission rejects) of the last `window` of
+/// wall time and summarizes them on demand — tail percentiles, recovery
+/// rate, reject rate — so a serving session can be observed while it runs
+/// instead of only at shutdown. Events older than the window are pruned
+/// on every `record`/`snapshot`, so memory is bounded by the event rate
+/// times the window length.
+///
+/// ```
+/// use std::time::{Duration, Instant};
+/// use parm::coordinator::metrics::{LatencyWindow, Outcome};
+///
+/// let mut w = LatencyWindow::new(Duration::from_secs(60));
+/// let t0 = Instant::now();
+/// w.record(Outcome::Native, Duration::from_millis(10), t0);
+/// w.record(Outcome::Reconstructed, Duration::from_millis(30), t0);
+/// w.record_rejects(2, t0);
+/// let s = w.snapshot(t0);
+/// assert_eq!(s.resolved, 2);
+/// assert_eq!(s.rejected, 2);
+/// assert_eq!(s.p50_ms, 10.0);
+/// assert_eq!(s.p99_ms, 30.0);
+/// assert!((s.recovery_rate - 0.5).abs() < 1e-9); // the reconstruction
+/// assert!((s.reject_rate - 0.5).abs() < 1e-9); // 2 rejected of 4 offered
+/// ```
+pub struct LatencyWindow {
+    window: Duration,
+    /// When the window was created (run start for a session's window) —
+    /// the observation-span floor for throughput before the first full
+    /// window elapses.
+    created: Instant,
+    /// (event time, latency in ms, outcome) per resolved query, oldest first.
+    events: VecDeque<(Instant, f64, Outcome)>,
+    /// Event times of admission rejects, oldest first.
+    rejects: VecDeque<Instant>,
+}
+
+impl Default for LatencyWindow {
+    /// A 10-second window — long enough for stable tail percentiles at
+    /// the paper's query rates, short enough to track load shifts.
+    fn default() -> LatencyWindow {
+        LatencyWindow::new(Duration::from_secs(10))
+    }
+}
+
+impl LatencyWindow {
+    pub fn new(window: Duration) -> LatencyWindow {
+        assert!(!window.is_zero(), "window must be non-zero");
+        LatencyWindow {
+            window,
+            created: Instant::now(),
+            events: VecDeque::new(),
+            rejects: VecDeque::new(),
+        }
+    }
+
+    pub fn window(&self) -> Duration {
+        self.window
+    }
+
+    /// Record one resolved query. `at` is when the resolution happened
+    /// (workers timestamp completions, so lazy recording stays accurate).
+    pub fn record(&mut self, outcome: Outcome, latency: Duration, at: Instant) {
+        self.events.push_back((at, latency.as_secs_f64() * 1e3, outcome));
+        self.prune(at);
+    }
+
+    /// Record `n` admission-control rejects at `at`.
+    pub fn record_rejects(&mut self, n: u64, at: Instant) {
+        for _ in 0..n {
+            self.rejects.push_back(at);
+        }
+        self.prune(at);
+    }
+
+    fn prune(&mut self, now: Instant) {
+        while self
+            .events
+            .front()
+            .is_some_and(|&(t, _, _)| now.saturating_duration_since(t) > self.window)
+        {
+            self.events.pop_front();
+        }
+        while self
+            .rejects
+            .front()
+            .is_some_and(|&t| now.saturating_duration_since(t) > self.window)
+        {
+            self.rejects.pop_front();
+        }
+    }
+
+    /// Summarize the events still inside the window as of `now`.
+    pub fn snapshot(&mut self, now: Instant) -> WindowSnapshot {
+        self.prune(now);
+        let resolved = self.events.len() as u64;
+        let rejected = self.rejects.len() as u64;
+        let mut lat = Summary::with_capacity(self.events.len());
+        let (mut recovered, mut defaulted) = (0u64, 0u64);
+        for &(_, ms, outcome) in &self.events {
+            lat.record(ms);
+            match outcome {
+                Outcome::Reconstructed | Outcome::Replica => recovered += 1,
+                Outcome::Default => defaulted += 1,
+                Outcome::Native => {}
+            }
+        }
+        let (p50_ms, p99_ms, p999_ms) = if lat.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (lat.median(), lat.p99(), lat.p999())
+        };
+        let offered = resolved + rejected;
+        // Throughput denominator: the full window once it has elapsed,
+        // otherwise the time observed so far — idle time counts, so a
+        // burst right before the snapshot is not reported as a high
+        // sustained rate. Floored to avoid division blow-ups (the floor
+        // must not exceed the window: Ord::clamp panics on min > max and
+        // sub-millisecond windows are configurable).
+        let floor = Duration::from_millis(1).min(self.window);
+        let span = now.saturating_duration_since(self.created).clamp(floor, self.window);
+        WindowSnapshot {
+            window: self.window,
+            resolved,
+            rejected,
+            p50_ms,
+            p99_ms,
+            p999_ms,
+            recovery_rate: if resolved == 0 { 0.0 } else { recovered as f64 / resolved as f64 },
+            reject_rate: if offered == 0 { 0.0 } else { rejected as f64 / offered as f64 },
+            default_rate: if resolved == 0 { 0.0 } else { defaulted as f64 / resolved as f64 },
+            qps: resolved as f64 / span.as_secs_f64(),
+        }
+    }
+}
+
+/// Point-in-time summary of a [`LatencyWindow`].
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSnapshot {
+    /// Length of the sliding window this snapshot summarizes.
+    pub window: Duration,
+    /// Queries resolved inside the window.
+    pub resolved: u64,
+    /// Queries rejected by admission control inside the window.
+    pub rejected: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Fraction of resolved queries recovered by redundancy
+    /// (reconstruction or replica) rather than the deployed model.
+    pub recovery_rate: f64,
+    /// rejected / (resolved + rejected).
+    pub reject_rate: f64,
+    /// Fraction of resolved queries that fell back to the SLO default.
+    pub default_rate: f64,
+    /// Resolved-query throughput over the observed span.
+    pub qps: f64,
+}
+
+impl WindowSnapshot {
+    /// One-line report, e.g. for periodic printing from a live client.
+    pub fn report(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} p50={:.3}ms p99={:.3}ms p99.9={:.3}ms qps={:.0} recovery={:.3} rejects={} ({:.3})",
+            self.resolved,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+            self.qps,
+            self.recovery_rate,
+            self.rejected,
+            self.reject_rate,
         )
     }
 }
@@ -113,5 +322,78 @@ mod tests {
         let t0 = Instant::now();
         m.record(t0, t0 + Duration::from_millis(25), Outcome::Native);
         assert!((m.latency.median() - 25.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn rejected_counts_separately_from_total() {
+        let mut m = RunMetrics::default();
+        let t0 = Instant::now();
+        m.record(t0, t0 + Duration::from_millis(5), Outcome::Native);
+        m.record_rejected(3);
+        assert_eq!(m.total(), 1);
+        assert_eq!(m.rejected, 3);
+        assert_eq!(m.offered(), 4);
+        assert_eq!(m.latency.len(), 1, "rejects contribute no latency sample");
+    }
+
+    #[test]
+    fn window_prunes_expired_events() {
+        let mut w = LatencyWindow::new(Duration::from_millis(100));
+        let t0 = Instant::now();
+        w.record(Outcome::Native, Duration::from_millis(1), t0);
+        w.record_rejects(1, t0);
+        let s = w.snapshot(t0);
+        assert_eq!((s.resolved, s.rejected), (1, 1));
+        // 50 ms later, both still inside the window; a fresh event joins.
+        let t1 = t0 + Duration::from_millis(50);
+        w.record(Outcome::Reconstructed, Duration::from_millis(2), t1);
+        assert_eq!(w.snapshot(t1).resolved, 2);
+        // 150 ms after t0, only the t1 event survives.
+        let t2 = t0 + Duration::from_millis(150);
+        let s = w.snapshot(t2);
+        assert_eq!(s.resolved, 1);
+        assert_eq!(s.rejected, 0);
+        assert!((s.recovery_rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_percentiles_and_rates() {
+        let mut w = LatencyWindow::new(Duration::from_secs(60));
+        let t0 = Instant::now();
+        for i in 1..=100u64 {
+            let outcome = if i % 10 == 0 { Outcome::Replica } else { Outcome::Native };
+            w.record(outcome, Duration::from_millis(i), t0);
+        }
+        w.record_rejects(25, t0);
+        let s = w.snapshot(t0);
+        assert_eq!(s.resolved, 100);
+        assert_eq!(s.p50_ms, 50.0);
+        assert_eq!(s.p99_ms, 99.0);
+        assert_eq!(s.p999_ms, 100.0);
+        assert!((s.recovery_rate - 0.1).abs() < 1e-12);
+        assert!((s.reject_rate - 0.2).abs() < 1e-12);
+        assert!(s.report("w").contains("n=100"));
+    }
+
+    #[test]
+    fn submillisecond_window_does_not_panic() {
+        // Regression: the span floor used to be a hard 1 ms, which made
+        // Ord::clamp panic (min > max) for configurable sub-ms windows.
+        let mut w = LatencyWindow::new(Duration::from_micros(500));
+        let t = Instant::now();
+        w.record(Outcome::Native, Duration::from_micros(100), t);
+        let s = w.snapshot(t + Duration::from_micros(200));
+        assert_eq!(s.resolved, 1);
+        assert!(s.qps > 0.0);
+    }
+
+    #[test]
+    fn empty_window_snapshot_is_zeroed() {
+        let mut w = LatencyWindow::default();
+        let s = w.snapshot(Instant::now());
+        assert_eq!(s.resolved, 0);
+        assert_eq!(s.p99_ms, 0.0);
+        assert_eq!(s.qps, 0.0);
+        assert_eq!(s.reject_rate, 0.0);
     }
 }

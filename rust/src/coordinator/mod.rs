@@ -20,11 +20,23 @@
 //!   expose it via a [`service::Mode`] variant; batching, pools, faults,
 //!   shuffles, tenancy, SLO handling, and metrics all come for free. See
 //!   the `scheme` module docs for the walk-through.
+//! - [`frontend`] is the multi-client surface: a dispatcher thread owns
+//!   the single-consumer handle, [`frontend::ServiceClient`]s submit
+//!   concurrently through admission control
+//!   ([`frontend::AdmissionPolicy`]) and get completions routed back to
+//!   per-client inboxes with per-client accounting.
+//! - [`metrics`] carries both aggregation surfaces: cumulative
+//!   [`metrics::RunMetrics`] for a whole run and the sliding
+//!   [`metrics::LatencyWindow`] behind every live snapshot.
+//!
+//! The thread-and-channel map of the whole stack is drawn in
+//! `docs/ARCHITECTURE.md`.
 
 pub mod batcher;
 pub mod coding;
 pub mod decoder;
 pub mod encoder;
+pub mod frontend;
 pub mod metrics;
 pub mod scheme;
 pub mod service;

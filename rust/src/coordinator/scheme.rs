@@ -18,11 +18,102 @@
 //! The five schemes of the paper ship as implementations: [`ParmScheme`]
 //! (§3), [`NoRedundancyScheme`], [`EqualResourcesScheme`] (§5.1),
 //! [`ApproxBackupScheme`] (§5.2.6), and [`ReplicationScheme`] (§2.2).
+//!
+//! # Adding a scheme
+//!
 //! To add a new scheme (an ApproxIFER-style rateless code, multi-group
-//! striping, …): implement the trait, give [`Mode`] a variant (or
-//! construct the scheme directly and hand it to the session), and the
-//! whole substrate — pools, faults, shuffles, tenancy, batching, metrics
-//! — comes for free.
+//! striping, …) you answer three questions and the whole substrate —
+//! pools, faults, shuffles, tenancy, batching, SLO handling, metrics,
+//! and the multi-client frontend — comes for free:
+//!
+//! 1. **Topology** — [`RedundancyScheme::extra_instances`] and
+//!    [`RedundancyScheme::layout`]: how many instances beyond the m
+//!    deployed ones you need and how the global instance ids partition
+//!    into pools. Layouts must partition `0..m + extra` exactly (pinned
+//!    by a test below).
+//! 2. **Dispatch** — [`RedundancyScheme::plan_dispatch`]: for each sealed
+//!    query batch, which pools get which [`Job`]s. Stateful schemes (like
+//!    ParM's coding groups) accumulate here and emit extra jobs when a
+//!    group seals.
+//! 3. **Resolution** — [`RedundancyScheme::on_completion`]: for each
+//!    worker completion, which query ids now have predictions and with
+//!    what [`Outcome`]. Duplicates are fine; the session deduplicates
+//!    (first verdict wins).
+//!
+//! A minimal complete implementation — every batch to the deployed pool,
+//! every completion resolves its queries:
+//!
+//! ```
+//! use std::time::Instant;
+//! use parm::coordinator::batcher::SealedBatch;
+//! use parm::coordinator::metrics::Outcome;
+//! use parm::coordinator::scheme::{
+//!     DispatchPlan, PoolLayout, RedundancyScheme, Resolution, Target,
+//! };
+//! use parm::runtime::instance::{Completion, Job, JobKind};
+//!
+//! struct PassThrough {
+//!     next_group: u64,
+//! }
+//!
+//! impl RedundancyScheme for PassThrough {
+//!     fn name(&self) -> &'static str {
+//!         "pass-through"
+//!     }
+//!     fn extra_instances(&self, _m: usize) -> usize {
+//!         0 // no redundancy: deployed instances only
+//!     }
+//!     fn layout(&self, m: usize) -> PoolLayout {
+//!         PoolLayout { deployed: (0..m).collect(), parity: Vec::new(), approx: None }
+//!     }
+//!     fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+//!         let group = self.next_group;
+//!         self.next_group += 1;
+//!         DispatchPlan {
+//!             jobs: vec![(
+//!                 Target::Deployed,
+//!                 Job {
+//!                     kind: JobKind::Replica { group, slot: 0 },
+//!                     input: batch.input,
+//!                     query_ids: batch.query_ids,
+//!                     dispatched_at: Instant::now(),
+//!                 },
+//!             )],
+//!             resolutions: Vec::new(),
+//!         }
+//!     }
+//!     fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+//!         vec![Resolution {
+//!             query_ids: c.query_ids,
+//!             at: c.finished_at,
+//!             outcome: Outcome::Native,
+//!         }]
+//!     }
+//! }
+//!
+//! // The session calls it exactly like this:
+//! use parm::tensor::Tensor;
+//! let mut s = PassThrough { next_group: 0 };
+//! let plan = s.plan_dispatch(SealedBatch {
+//!     query_ids: vec![0, 1],
+//!     input: Tensor::filled(vec![2, 4], 1.0),
+//!     oldest_arrival: Instant::now(),
+//! });
+//! assert_eq!(plan.jobs.len(), 1);
+//! let resolved = s.on_completion(Completion {
+//!     kind: JobKind::Replica { group: 0, slot: 0 },
+//!     instance: 0,
+//!     query_ids: vec![0, 1],
+//!     output: Tensor::filled(vec![2, 4], 0.5),
+//!     finished_at: Instant::now(),
+//!     exec_time: std::time::Duration::ZERO,
+//! });
+//! assert_eq!(resolved[0].query_ids, vec![0, 1]);
+//! ```
+//!
+//! To expose it declaratively (config files, CLI), also give [`Mode`] a
+//! variant and an arm in [`Mode::scheme`]; for programmatic use, handing
+//! the boxed scheme to a session directly works just as well.
 
 use std::collections::HashMap;
 use std::time::Instant;

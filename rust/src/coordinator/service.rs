@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::hardware::Profile;
 use crate::coordinator::encoder::Encoder;
+use crate::coordinator::frontend::AdmissionPolicy;
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::session::ServiceBuilder;
 use crate::runtime::engine::Executable;
@@ -90,6 +91,14 @@ pub struct ServiceConfig {
     /// host); false: execute the engine per query (needs >= total-instances
     /// cores for faithful parallelism). See runtime::instance::Execution.
     pub modeled_execution: bool,
+    /// Admission policy applied by the multi-client frontend
+    /// ([`crate::coordinator::frontend`]) at `submit`. A bare
+    /// `ServiceHandle` does not enforce it — single-consumer callers
+    /// already control their own offered load.
+    pub admission: AdmissionPolicy,
+    /// Length of the live sliding-window metrics aggregator (see
+    /// [`crate::coordinator::session::ServiceHandle::window_snapshot`]).
+    pub metrics_window: Duration,
 }
 
 impl ServiceConfig {
@@ -109,6 +118,8 @@ impl ServiceConfig {
             seed: 0xC0DE,
             fault_schedule: Vec::new(),
             modeled_execution: true,
+            admission: AdmissionPolicy::Unbounded,
+            metrics_window: Duration::from_secs(10),
         }
     }
 }
@@ -129,6 +140,12 @@ pub struct RunResult {
     pub wall: Duration,
     pub dropped_jobs: u64,
     pub reconstructions: u64,
+    /// Queries turned away by admission control (reject-vs-resolve split:
+    /// `metrics.total()` resolved, `rejected` never entered the session).
+    /// At-a-glance mirror of `metrics.rejected` — the session sets both
+    /// from the same counter. Nonzero only when traffic arrived through a
+    /// frontend with a bounding [`AdmissionPolicy`].
+    pub rejected: u64,
 }
 
 /// Measure the deployed model's uncontended mean service time.

@@ -21,8 +21,16 @@
 //! handle owns the receiving end plus all coordination state — batcher,
 //! scheme, pending map, metrics — and processes events on the caller's
 //! thread. Completions are timestamped by the workers, so lazy processing
-//! never distorts latency accounting. The handle is `Send`: move it to a
-//! dedicated serving thread for multi-client frontends.
+//! never distorts latency accounting. The handle is `Send` but
+//! single-consumer: to serve many concurrent submitters, hand it to
+//! [`crate::coordinator::frontend::ServingFrontend`], whose dispatcher
+//! thread multiplexes [`crate::coordinator::frontend::ServiceClient`]s
+//! onto it (see `docs/ARCHITECTURE.md` for the full thread/channel map).
+//!
+//! Live observability: the handle keeps a sliding [`LatencyWindow`]
+//! alongside the cumulative [`RunMetrics`], so callers can
+//! [`ServiceHandle::window_snapshot`] a running session at any time
+//! instead of waiting for `shutdown`.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
@@ -35,7 +43,7 @@ use crate::cluster::faults::FaultPlan;
 use crate::cluster::network::{Network, ShuffleGen};
 use crate::cluster::tenancy::Tenancy;
 use crate::coordinator::batcher::{Batcher, PendingQuery, SealedBatch};
-use crate::coordinator::metrics::{Outcome, RunMetrics};
+use crate::coordinator::metrics::{LatencyWindow, Outcome, RunMetrics, WindowSnapshot};
 use crate::coordinator::scheme::{RedundancyScheme, Resolution, Target};
 use crate::coordinator::service::{measure_service, ModelSet, RunResult, ServiceConfig};
 use crate::runtime::engine::Executable;
@@ -207,6 +215,7 @@ impl ServiceBuilder {
             pending: HashMap::new(),
             resolved_out: VecDeque::new(),
             metrics: RunMetrics::default(),
+            window: LatencyWindow::new(cfg.metrics_window),
             submitted: 0,
             resolved_count: 0,
             next_qid: 0,
@@ -279,6 +288,8 @@ pub struct ServiceHandle {
     /// Resolved records not yet retrieved via poll()/drain().
     resolved_out: VecDeque<Resolved>,
     metrics: RunMetrics,
+    /// Sliding window over recent resolutions (live observability).
+    window: LatencyWindow,
     submitted: u64,
     resolved_count: u64,
     next_qid: u64,
@@ -358,6 +369,40 @@ impl ServiceHandle {
         self.take_resolved()
     }
 
+    /// Like [`ServiceHandle::poll`], but block up to `wait` for the first
+    /// completion before folding in whatever else is ready. For
+    /// single-consumer serving loops that would otherwise busy-poll
+    /// between completions. (The multi-client frontend's dispatcher does
+    /// *not* use this — it blocks on its submission channel instead and
+    /// calls `poll` at its pump cadence.)
+    pub fn poll_timeout(&mut self, wait: Duration) -> Vec<Resolved> {
+        self.pump(Some(wait));
+        self.take_resolved()
+    }
+
+    /// Live sliding-window metrics: tail percentiles, recovery rate, and
+    /// reject rate over the most recent `metrics_window` (a
+    /// [`ServiceConfig`] knob, default 10 s) of resolutions. Callable at
+    /// any point in a session — the streamed counterpart of the
+    /// cumulative [`RunResult`] metrics that [`ServiceHandle::shutdown`]
+    /// returns.
+    pub fn window_snapshot(&mut self) -> WindowSnapshot {
+        self.window.snapshot(Instant::now())
+    }
+
+    /// Fold `n` admission-control rejects into this session's accounting
+    /// (cumulative metrics and the live window). Rejections happen at the
+    /// frontend, before a query ever reaches `submit` — this hook is how
+    /// the frontend keeps the session's `RunResult` a complete record of
+    /// the offered traffic.
+    pub fn note_rejected(&mut self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.metrics.record_rejected(n);
+        self.window.record_rejects(n, Instant::now());
+    }
+
     /// Block until every submitted query has resolved (flushing any
     /// partial batch first); returns the newly resolved queries. With
     /// lost predictions and no SLO configured this waits forever — give
@@ -386,8 +431,10 @@ impl ServiceHandle {
         if let Some(pools) = self.pools.take() {
             pools.shutdown_all();
         }
+        let metrics = std::mem::take(&mut self.metrics);
         RunResult {
-            metrics: std::mem::take(&mut self.metrics),
+            rejected: metrics.rejected,
+            metrics,
             mean_service: self.mean_service,
             wall: self.started.elapsed(),
             dropped_jobs: DROPPED_JOBS
@@ -487,13 +534,11 @@ impl ServiceHandle {
     fn apply_resolution(&mut self, r: Resolution) {
         for id in r.query_ids {
             if let Some(arrived) = self.pending.remove(&id) {
+                let latency = r.at.saturating_duration_since(arrived);
                 self.metrics.record(arrived, r.at, r.outcome);
+                self.window.record(r.outcome, latency, r.at);
                 self.resolved_count += 1;
-                self.resolved_out.push_back(Resolved {
-                    id,
-                    outcome: r.outcome,
-                    latency: r.at.saturating_duration_since(arrived),
-                });
+                self.resolved_out.push_back(Resolved { id, outcome: r.outcome, latency });
             }
         }
     }
@@ -510,6 +555,7 @@ impl ServiceHandle {
         for id in expired {
             self.pending.remove(&id);
             self.metrics.record_default(slo);
+            self.window.record(Outcome::Default, slo, now);
             self.resolved_count += 1;
             self.resolved_out.push_back(Resolved {
                 id,

@@ -254,7 +254,7 @@ fn batched_probe(source: &QuerySource, batch: usize) -> crate::tensor::Tensor {
     .unwrap()
 }
 
-/// Write rows to bench_out/<name>.json and print the table.
+/// Write rows to `bench_out/<name>.json` and print the table.
 pub fn emit(name: &str, rows: &[LatencyRow]) {
     println!("\n=== {name} ===");
     println!("{}", LatencyRow::header());

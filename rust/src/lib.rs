@@ -23,6 +23,18 @@
 //! [`coordinator::service::Service::run`] remains as the one-shot
 //! open-loop experiment shim used by the paper-figure harnesses in
 //! [`experiments`].
+//!
+//! For concurrent traffic, the multi-client frontend
+//! ([`coordinator::frontend::ServingFrontend`]) multiplexes any number of
+//! cloneable [`coordinator::frontend::ServiceClient`]s onto one session,
+//! with admission control
+//! ([`coordinator::frontend::AdmissionPolicy`]) at `submit`, per-client
+//! accounting, and live windowed metrics
+//! ([`coordinator::metrics::LatencyWindow`]) on every surface.
+//!
+//! Orientation: the top-level `README.md` covers the what and the
+//! quickstart; `docs/ARCHITECTURE.md` maps every thread and channel from
+//! builder to completion fan-out.
 
 pub mod artifacts;
 pub mod cluster;

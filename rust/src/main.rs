@@ -4,6 +4,9 @@
 //!   list                      — show artifact inventory
 //!   accuracy                  — degraded-mode accuracy for one config
 //!   serve                     — run the serving loop at a rate and report
+//!                               (--clients N > 1 serves N concurrent
+//!                               submitters through the multi-client
+//!                               frontend with --admission control)
 //!   table1                    — the toy coded-computation example
 //!
 //! Every paper figure has a dedicated bench (`cargo bench --bench …`);
@@ -14,6 +17,7 @@
 use parm::artifacts::Manifest;
 use parm::cluster::hardware;
 use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::AdmissionPolicy;
 use parm::coordinator::service::{Mode, ServiceConfig};
 use parm::experiments::{accuracy, latency, table1};
 use parm::util::cli::Cli;
@@ -107,6 +111,11 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("batch", "1", "batch size")
         .opt("shuffles", "4", "concurrent background shuffles")
         .opt("seed", "49374", "rng seed")
+        .opt("clients", "1", "concurrent client threads (>1 serves via the multi-client frontend)")
+        .opt("admission", "unbounded", "admission policy: unbounded | reject-above | block")
+        .opt("admission-backlog", "64", "load limit for reject-above / block")
+        .opt("admission-timeout-ms", "50", "max wait for block admission")
+        .opt("slo-ms", "0", "SLO in ms (0 = none; stragglers past it get default predictions)")
         .flag("tenancy", "enable light multitenancy instead of shuffles");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -139,6 +148,30 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     cfg.shuffles = if a.has_flag("tenancy") { 0 } else { a.get_usize("shuffles") };
     cfg.light_tenancy = a.has_flag("tenancy");
     cfg.seed = a.get_u64("seed");
+    let slo_ms = a.get_f64("slo-ms");
+    if slo_ms > 0.0 {
+        cfg.slo = Some(a.get_duration_ms("slo-ms"));
+    }
+    // Same validation the JSON config path (config/mod.rs) enforces.
+    let backlog = a.get_usize("admission-backlog");
+    cfg.admission = match a.get("admission") {
+        "unbounded" => AdmissionPolicy::Unbounded,
+        "reject-above" | "block" => {
+            if backlog == 0 {
+                anyhow::bail!("--admission-backlog must be >= 1");
+            }
+            if a.get("admission") == "reject-above" {
+                AdmissionPolicy::RejectAbove { backlog }
+            } else {
+                let timeout = a.get_duration_ms("admission-timeout-ms");
+                if timeout.is_zero() {
+                    anyhow::bail!("--admission-timeout-ms must be > 0");
+                }
+                AdmissionPolicy::Block { backlog, timeout }
+            }
+        }
+        other => anyhow::bail!("unknown admission policy {other:?}"),
+    };
 
     let mut rate = a.get_f64("rate");
     if rate == 0.0 {
@@ -148,9 +181,99 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         let mean = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
         rate = 0.6 * profile.default_m as f64 / mean.as_secs_f64();
     }
-    let row = latency::run_point(&cfg, &models, &source, a.get_u64("queries"), rate, a.get("mode"))?;
-    println!("{}", parm::experiments::latency::LatencyRow::header());
-    println!("{}", row.line());
+    let clients = a.get_usize("clients").max(1);
+    // A bare session enforces no admission policy (see ServiceConfig
+    // docs), so any bounding policy routes through the frontend — even
+    // with a single client.
+    if clients == 1 && cfg.admission == AdmissionPolicy::Unbounded {
+        let row =
+            latency::run_point(&cfg, &models, &source, a.get_u64("queries"), rate, a.get("mode"))?;
+        println!("{}", parm::experiments::latency::LatencyRow::header());
+        println!("{}", row.line());
+        return Ok(());
+    }
+    serve_multi_client(cfg, &models, &source, a.get_u64("queries"), rate, clients)
+}
+
+/// Drive `clients` concurrent submitter threads through the multi-client
+/// frontend, splitting `n` queries and `rate` evenly, then report
+/// per-client windowed stats and the session's run result.
+fn serve_multi_client(
+    cfg: ServiceConfig,
+    models: &parm::coordinator::service::ModelSet,
+    source: &QuerySource,
+    n: u64,
+    rate: f64,
+    clients: usize,
+) -> anyhow::Result<()> {
+    use parm::util::rng::Pcg64;
+    use std::time::{Duration, Instant};
+
+    let seed = cfg.seed;
+    let frontend = parm::coordinator::session::ServiceBuilder::new(cfg)
+        .serve(models, &source.queries[0])?;
+    println!(
+        "serving {n} queries from {clients} clients at {rate:.0} qps total (policy {:?})",
+        frontend.policy()
+    );
+    let per = n / clients as u64;
+    let rem = n % clients as u64;
+    let per_rate = rate / clients as f64;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        // Distribute the remainder so exactly n queries are offered.
+        let quota = per + u64::from((c as u64) < rem);
+        let client = frontend.client();
+        let queries = source.queries.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(seed ^ 0x5EED ^ (c as u64) << 17);
+            let mut due = Instant::now();
+            let mut accepted = 0u64;
+            for i in 0..quota {
+                due += Duration::from_secs_f64(rng.exponential(per_rate));
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if client.submit(queries[i as usize % queries.len()].clone()).is_ok() {
+                    accepted += 1;
+                }
+                let _ = client.poll(); // keep the inbox from growing
+            }
+            // Wait for everything this client was promised.
+            while client.stats().resolved < accepted {
+                if client.next(Duration::from_secs(10)).is_none() {
+                    break;
+                }
+            }
+            client
+        }));
+    }
+    println!(
+        "{:<8} {:>9} {:>9} {:>9} {:>10} {:>10} {:>9} {:>9}",
+        "client", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)", "recovered", "default"
+    );
+    for j in joins {
+        let client = j.join().expect("client thread");
+        let st = client.stats();
+        let w = client.window();
+        println!(
+            "{:<8} {:>9} {:>9} {:>9} {:>10.3} {:>10.3} {:>9} {:>9}",
+            client.id(), st.submitted, st.resolved, st.rejected, w.p50_ms, w.p99_ms,
+            st.recovered, st.defaulted
+        );
+    }
+    println!("\nfrontend window: {}", frontend.window().report("all-clients"));
+    let res = frontend.shutdown()?;
+    let mut metrics = res.metrics;
+    println!("{}", metrics.report("run total"));
+    println!(
+        "wall={:.1}s reconstructions={} dropped_jobs={} rejected={}",
+        res.wall.as_secs_f64(),
+        res.reconstructions,
+        res.dropped_jobs,
+        res.rejected
+    );
     Ok(())
 }
 

@@ -164,6 +164,16 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Millisecond-valued option as a `Duration` (fractional ok, e.g.
+    /// `--admission-timeout-ms 2.5`).
+    pub fn get_duration_ms(&self, name: &str) -> std::time::Duration {
+        let ms = self.get_f64(name);
+        if !(ms >= 0.0) {
+            panic!("--{name}: must be >= 0 ms, got {ms}");
+        }
+        std::time::Duration::from_secs_f64(ms / 1e3)
+    }
+
     /// Comma-separated list, e.g. `--ks 2,3,4`.
     pub fn get_list_usize(&self, name: &str) -> Vec<usize> {
         self.get(name)
@@ -218,6 +228,15 @@ mod tests {
     fn lists() {
         let a = parse(&["--model", "m", "--ks", "2, 3,4"]).unwrap();
         assert_eq!(a.get_list_usize("ks"), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn durations() {
+        let cli = Cli::new("t", "test").opt("timeout-ms", "50", "timeout");
+        let a = cli.parse(Vec::new()).unwrap();
+        assert_eq!(a.get_duration_ms("timeout-ms"), std::time::Duration::from_millis(50));
+        let a = cli.parse(vec!["--timeout-ms=2.5".to_string()]).unwrap();
+        assert_eq!(a.get_duration_ms("timeout-ms"), std::time::Duration::from_micros(2500));
     }
 
     #[test]

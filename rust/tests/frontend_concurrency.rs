@@ -1,0 +1,203 @@
+//! Concurrency properties of the multi-client serving frontend
+//! (`coordinator::frontend`) against a real simulated cluster:
+//!
+//! - **query conservation**: N concurrent clients x M queries each, with
+//!   an instance failure mid-run — every accepted query resolves exactly
+//!   once, and every resolution lands in the inbox of the client that
+//!   submitted it;
+//! - **admission control**: with the cluster stalled (drain rate slowed
+//!   far below the offered burst rate), `RejectAbove` sheds load at
+//!   `submit` instead of letting the backlog grow unboundedly, and every
+//!   accepted query still resolves.
+//!
+//! Like `service_integration.rs`, these spawn full simulated clusters, so
+//! they run serialized and skip (with a message) if artifacts are
+//! missing under `--features pjrt`.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::{AdmissionPolicy, SubmitError};
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
+use parm::experiments::latency;
+use parm::workload::QuerySource;
+
+/// Each test spawns a full simulated cluster; running them concurrently
+/// oversubscribes the host and distorts the timing paths.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() -> Option<(Manifest, QuerySource)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP frontend_concurrency: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    Some((m, src))
+}
+
+fn models(m: &Manifest, k: usize) -> Option<ModelSet> {
+    match latency::load_models(m, 1, k, 1, false) {
+        Ok(ms) => Some(ms),
+        Err(e) => {
+            eprintln!("SKIP frontend_concurrency: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_conserve_queries() {
+    let _guard = serial();
+    const CLIENTS: usize = 6;
+    const PER: u64 = 40;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg =
+        ServiceConfig::defaults(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] }, &GPU);
+    cfg.m = 4;
+    cfg.shuffles = 0;
+    cfg.seed = 0xFACE;
+    cfg.slo = Some(Duration::from_secs(3)); // backstop for doubly-lost groups
+    // Undetected zombie mid-run (well inside the ~80 ms submit phase):
+    // the fan-out must keep routing correctly while resolutions switch to
+    // Reconstructed/Default.
+    cfg.fault_schedule = vec![(0, Duration::from_millis(40), Duration::ZERO)];
+
+    let frontend = ServiceBuilder::new(cfg)
+        .serve(&models, &src.queries[0])
+        .expect("frontend builds");
+
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let client = frontend.client();
+        let queries = src.queries.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut submitted = HashSet::new();
+            let mut got = Vec::new();
+            for i in 0..PER {
+                let id = client
+                    .submit(queries[(c + i as usize) % queries.len()].clone())
+                    .expect("unbounded admission accepts");
+                assert!(submitted.insert(id), "frontend ids must be unique");
+                got.extend(client.poll());
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            while got.len() < PER as usize {
+                match client.next(Duration::from_secs(10)) {
+                    Some(r) => got.push(r),
+                    None => break,
+                }
+            }
+            (submitted, got, client)
+        }));
+    }
+
+    let mut grand_total = 0u64;
+    for j in joins {
+        let (submitted, got, client) = j.join().expect("client thread");
+        assert_eq!(got.len(), PER as usize, "every query resolves exactly once");
+        let ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), got.len(), "no duplicate resolutions");
+        assert_eq!(ids, submitted, "resolutions routed to the submitting client");
+        let st = client.stats();
+        assert_eq!(st.submitted, PER);
+        assert_eq!(st.resolved, PER);
+        assert_eq!(st.rejected, 0);
+        assert_eq!(st.in_flight(), 0);
+        assert_eq!(
+            st.native + st.recovered + st.defaulted,
+            PER,
+            "outcome counts partition the client's queries"
+        );
+        grand_total += st.resolved;
+    }
+
+    let res = frontend.shutdown().expect("clean shutdown");
+    assert_eq!(res.metrics.total(), grand_total, "session metrics agree with clients");
+    assert_eq!(res.rejected, 0);
+    assert!(
+        res.dropped_jobs > 0,
+        "the killed instance must actually have swallowed jobs"
+    );
+}
+
+#[test]
+fn reject_above_bounds_backlog_under_stall() {
+    let _guard = serial();
+    const LIMIT: usize = 16;
+    const ATTEMPTS: u64 = 400;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(Mode::NoRedundancy, &GPU);
+    cfg.m = 2;
+    cfg.shuffles = 0;
+    cfg.seed = 0xDEAD;
+    // Induced stall: scale every injected delay 5x, so each of the two
+    // instances is busy >= ~0.75 ms per query (5x the 150 us dispatch
+    // overhead alone) while the client submits in tight bursts — offered
+    // load far beyond the drain rate, and the pool queue can only grow.
+    cfg.time_scale = 5.0;
+    cfg.admission = AdmissionPolicy::RejectAbove { backlog: LIMIT };
+
+    let frontend = ServiceBuilder::new(cfg)
+        .serve(&models, &src.queries[0])
+        .expect("frontend builds");
+    let client = frontend.client();
+
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    let mut max_load = 0usize;
+    for i in 0..ATTEMPTS {
+        match client.submit(src.queries[(i as usize) % src.len()].clone()) {
+            Ok(_) => accepted += 1,
+            Err(SubmitError::Rejected { .. }) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        max_load = max_load.max(frontend.load());
+        if i % 16 == 15 {
+            // Brief gap between bursts: lets the dispatcher hand
+            // submissions to the session, so the test exercises the
+            // published-backlog path and not just the `queued` count.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    assert!(accepted > 0, "admission must still admit up to the limit");
+    assert!(
+        rejected > 0,
+        "a stalled cluster must shed load ({accepted} accepted of {ATTEMPTS})"
+    );
+    assert_eq!(accepted + rejected, ATTEMPTS);
+    assert!(
+        max_load <= LIMIT + 8,
+        "backlog must stay bounded near the limit: saw {max_load} (limit {LIMIT})"
+    );
+    assert_eq!(client.stats().rejected, rejected, "per-client reject accounting");
+    let w = client.window();
+    assert_eq!(w.rejected, rejected, "rejects visible in the windowed metrics");
+    assert!(w.reject_rate > 0.0);
+
+    // Accepting a query remains a promise: the bounded backlog drains and
+    // every accepted query resolves (healthy instances, so all native).
+    let res = frontend.shutdown().expect("clean shutdown");
+    let st = client.stats();
+    assert_eq!(st.resolved, accepted, "accepted queries all resolve");
+    assert_eq!(st.native, accepted, "healthy cluster resolves natively");
+    assert_eq!(res.rejected, rejected, "rejects surface in the RunResult");
+    assert_eq!(res.metrics.total(), accepted);
+    assert_eq!(res.metrics.offered(), ATTEMPTS);
+}
