@@ -25,8 +25,10 @@
 //! **Admission control** runs on the client thread at `submit`, against
 //! the dispatcher-published load (session [`ServiceHandle::backlog`] plus
 //! submissions still in the channel): [`AdmissionPolicy::Unbounded`]
-//! always admits, [`AdmissionPolicy::RejectAbove`] fails fast, and
-//! [`AdmissionPolicy::Block`] waits for headroom up to a timeout. Rejects
+//! always admits, [`AdmissionPolicy::RejectAbove`] fails fast,
+//! [`AdmissionPolicy::Block`] waits for headroom up to a timeout, and
+//! [`AdmissionPolicy::SloAware`] sheds adaptively when the live windowed
+//! p99 breaches the target (with a backlog backstop). Rejects
 //! are folded back into the session's [`RunResult`] so a run's record
 //! covers the *offered* traffic, not just the admitted part.
 //!
@@ -67,6 +69,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::cluster::faults::FaultPlan;
 use crate::coordinator::metrics::{LatencyWindow, Outcome, WindowSnapshot};
 use crate::coordinator::service::{ModelSet, RunResult};
 use crate::coordinator::session::{QueryId, Resolved, ServiceBuilder, ServiceHandle};
@@ -87,6 +90,15 @@ pub enum AdmissionPolicy {
     /// Wait up to `timeout` for the load to drop below `backlog`, then
     /// fail with [`SubmitError::Timeout`].
     Block { backlog: usize, timeout: Duration },
+    /// Adaptive shedding against the *live* windowed tail: fail `submit`
+    /// when the frontend-wide windowed p99 latency has breached `p99`
+    /// (published by the dispatcher at a ~10 ms cadence), or — the hard
+    /// backstop — when the load reaches `backlog`. Unlike `RejectAbove`,
+    /// this reacts to what clients are actually experiencing (queueing
+    /// *and* service-time inflation from faults or contention), not just
+    /// to queue depth; once the breach slides out of the metrics window,
+    /// admission reopens on its own.
+    SloAware { p99: Duration, backlog: usize },
 }
 
 /// Why a [`ServiceClient::submit`] did not enqueue the query.
@@ -96,6 +108,8 @@ pub enum SubmitError {
     Rejected { load: usize, limit: usize },
     #[error("admission control timed out after {timeout:?} (load {load} >= limit {limit})")]
     Timeout { load: usize, limit: usize, timeout: Duration },
+    #[error("admission shed load (windowed p99 {live_p99:?} breaches SLO {slo:?})")]
+    SloShed { live_p99: Duration, slo: Duration },
     #[error("frontend is shut down")]
     Closed,
 }
@@ -191,6 +205,10 @@ struct FrontendShared {
     in_submit: AtomicUsize,
     /// Last [`ServiceHandle::backlog`] published by the dispatcher.
     session_backlog: AtomicUsize,
+    /// Frontend-wide windowed p99 in microseconds, published by the
+    /// dispatcher (~10 ms cadence) for [`AdmissionPolicy::SloAware`];
+    /// 0 = no samples yet. Only refreshed when the policy needs it.
+    window_p99_us: AtomicU64,
     /// Total admission rejects (all clients, whole run).
     rejected_total: AtomicU64,
     /// Rejects not yet folded into the session's metrics.
@@ -310,6 +328,19 @@ impl ServiceClient {
         self.core.inbox.lock().unwrap().drain(..).collect()
     }
 
+    /// Non-blocking: take the single oldest prediction for this client,
+    /// if any (the sharded tier sweeps many inboxes without draining).
+    pub fn try_next(&self) -> Option<Resolved> {
+        self.core.inbox.lock().unwrap().pop_front()
+    }
+
+    /// This frontend's current admission-load estimate (session backlog
+    /// plus queued submissions) — the same number
+    /// [`ServingFrontend::load`] reports, readable from any client.
+    pub fn load(&self) -> usize {
+        self.shared.load()
+    }
+
     /// Block up to `timeout` for the next prediction for this client.
     pub fn next(&self, timeout: Duration) -> Option<Resolved> {
         let deadline = Instant::now() + timeout;
@@ -364,6 +395,18 @@ impl ServiceClient {
                 let deadline = Instant::now() + timeout;
                 let mut waited = self.shared.gate.lock().unwrap();
                 loop {
+                    // A shutdown mid-wait interrupts the waiter: the query
+                    // was offered while the frontend was open, so it is
+                    // tallied as shed load *before* this thread leaves
+                    // `submit` (and therefore before the dispatcher's
+                    // final reject fold — see the shutdown wait loop).
+                    // Without this check, shutdown would have to wait out
+                    // the waiter's full admission timeout.
+                    if !self.shared.open.load(Ordering::SeqCst) {
+                        drop(waited);
+                        self.note_reject();
+                        return Err(SubmitError::Closed);
+                    }
                     let load = self.shared.load();
                     if load < limit {
                         return Ok(());
@@ -381,10 +424,27 @@ impl ServiceClient {
                     waited = guard;
                 }
             }
+            AdmissionPolicy::SloAware { p99, backlog: limit } => {
+                let load = self.shared.load();
+                if load >= limit {
+                    self.note_reject();
+                    return Err(SubmitError::Rejected { load, limit });
+                }
+                let live = Duration::from_micros(self.shared.window_p99_us.load(Ordering::Relaxed));
+                if !live.is_zero() && live >= p99 {
+                    self.note_reject();
+                    return Err(SubmitError::SloShed { live_p99: live, slo: p99 });
+                }
+                Ok(())
+            }
         }
     }
 
-    fn note_reject(&self) {
+    /// Tally one shed query against this client, its frontend window, and
+    /// (via the dispatcher's fold) the session's `RunResult`. Crate-wide
+    /// so the sharded tier's global offered-load cap lands its rejects in
+    /// the same accounting as per-shard admission.
+    pub(crate) fn note_reject(&self) {
         self.core.rejected.fetch_add(1, Ordering::Relaxed);
         self.shared.rejected_total.fetch_add(1, Ordering::Relaxed);
         self.shared.rejects_unfolded.fetch_add(1, Ordering::Relaxed);
@@ -402,6 +462,9 @@ impl ServiceClient {
 pub struct ServingFrontend {
     shared: Arc<FrontendShared>,
     tx: Arc<Mutex<mpsc::Sender<Msg>>>,
+    /// The session's fault plan, retained so chaos drills can target
+    /// this frontend's cluster after the handle moved to the dispatcher.
+    faults: Arc<FaultPlan>,
     dispatcher: Option<JoinHandle<()>>,
 }
 
@@ -428,6 +491,7 @@ impl ServingFrontend {
             queued: AtomicUsize::new(0),
             in_submit: AtomicUsize::new(0),
             session_backlog: AtomicUsize::new(0),
+            window_p99_us: AtomicU64::new(0),
             rejected_total: AtomicU64::new(0),
             rejects_unfolded: AtomicU64::new(0),
             open: AtomicBool::new(true),
@@ -435,12 +499,18 @@ impl ServingFrontend {
             gate_cv: Condvar::new(),
             window: Mutex::new(LatencyWindow::new(window)),
         });
+        let faults = handle.fault_plan();
         let dispatcher_shared = shared.clone();
         let dispatcher = std::thread::Builder::new()
             .name("frontend-dispatcher".into())
             .spawn(move || dispatcher_loop(handle, rx, dispatcher_shared))
             .expect("spawn frontend dispatcher");
-        ServingFrontend { shared, tx: Arc::new(Mutex::new(tx)), dispatcher: Some(dispatcher) }
+        ServingFrontend {
+            shared,
+            tx: Arc::new(Mutex::new(tx)),
+            faults,
+            dispatcher: Some(dispatcher),
+        }
     }
 
     /// Mint a new client (own inbox, counters, latency window).
@@ -476,6 +546,18 @@ impl ServingFrontend {
         self.shared.window.lock().unwrap().snapshot(Instant::now())
     }
 
+    /// Fault-injection surface (mirrors
+    /// [`crate::coordinator::session::ServiceHandle::kill_instance`]):
+    /// permanently kill an instance of this frontend's cluster.
+    pub fn kill_instance(&self, instance: usize) {
+        self.faults.kill(instance);
+    }
+
+    /// Fail an instance of this frontend's cluster for a bounded window.
+    pub fn fail_instance_for(&self, instance: usize, dur: Duration) {
+        self.faults.fail_for(instance, dur);
+    }
+
     /// Stop admitting, let in-flight queries resolve (deliveries keep
     /// flowing to client inboxes), shut the session down, and return its
     /// [`RunResult`]. Like [`ServiceHandle::drain`], resolution of *lost*
@@ -483,6 +565,10 @@ impl ServingFrontend {
     /// under failures.
     pub fn shutdown(mut self) -> anyhow::Result<RunResult> {
         self.shared.open.store(false, Ordering::SeqCst);
+        // Wake Block-policy waiters so they observe the close and bail
+        // (tallying themselves as shed) instead of sitting out their
+        // admission timeout.
+        self.shared.gate_cv.notify_all();
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .lock()
@@ -506,6 +592,7 @@ impl Drop for ServingFrontend {
         // receive results), tearing the session down via
         // ServiceHandle's Drop.
         self.shared.open.store(false, Ordering::SeqCst);
+        self.shared.gate_cv.notify_all();
     }
 }
 
@@ -542,6 +629,12 @@ fn dispatcher_loop(
     let mut routes: HashMap<QueryId, (QueryId, Arc<ClientCore>)> = HashMap::new();
     let mut shutdown_reply: Option<mpsc::Sender<RunResult>> = None;
     let mut disconnected = false;
+    // SloAware admission reads the published windowed p99; refreshing a
+    // snapshot sorts the window's events, so throttle it and skip the
+    // work entirely for policies that never read it.
+    let publish_p99 = matches!(shared.policy, AdmissionPolicy::SloAware { .. });
+    const P99_REFRESH: Duration = Duration::from_millis(10);
+    let mut p99_published_at = Instant::now();
 
     while shutdown_reply.is_none() && !disconnected {
         match rx.recv_timeout(PUMP) {
@@ -569,6 +662,15 @@ fn dispatcher_loop(
             route(&mut routes, &shared, r);
         }
         publish(&handle, &shared);
+        if publish_p99 && p99_published_at.elapsed() >= P99_REFRESH {
+            let now = Instant::now();
+            // p99_ms is the cheap O(n)-selection path, not a full sorted
+            // snapshot — this runs under the shared window lock that
+            // route() also takes per completion.
+            let p99 = shared.window.lock().unwrap().p99_ms(now);
+            shared.window_p99_us.store((p99 * 1e3) as u64, Ordering::Relaxed);
+            p99_published_at = now;
+        }
         fold_rejects(&mut handle, &shared);
         // Wake Block-policy submitters; cheap when nobody waits.
         shared.gate_cv.notify_all();
@@ -587,8 +689,11 @@ fn dispatcher_loop(
     // always implies "will resolve": any client past the `open` check
     // shows up in `in_submit` (SeqCst, see submit), and anything it sent
     // shows up in `queued` until handed to the session — so drain until
-    // both clear. Bounded: once `open` is false new submits fail fast,
-    // and a Block-policy waiter gives up by its admission timeout.
+    // both clear. Bounded and prompt: once `open` is false new submits
+    // fail fast, and a Block-policy waiter observes the close on its next
+    // gate wake-up and bails, noting its reject *before* it leaves
+    // `submit` (i.e. before `in_submit` can reach zero) — which is what
+    // guarantees the fold below sees every shed waiter.
     loop {
         while let Ok(msg) = rx.try_recv() {
             match msg {
@@ -613,8 +718,11 @@ fn dispatcher_loop(
         shared.gate_cv.notify_all();
         std::thread::sleep(Duration::from_micros(100));
     }
-    // Only now is the reject tally final (a Block waiter that timed out
-    // during shutdown has noted its reject by the time in_submit clears).
+    // Only now is the reject tally final: every Block waiter that gave up
+    // (timeout or interrupted by the close) tallied itself while it still
+    // held `in_submit`, so the loop above could not exit before those
+    // rejects were noted — fold them into the session before its metrics
+    // are frozen by `shutdown()`.
     fold_rejects(&mut handle, &shared);
     for r in handle.drain() {
         route(&mut routes, &shared, r);
@@ -700,6 +808,11 @@ mod tests {
             timeout: Duration::from_millis(50),
         };
         assert!(t.to_string().contains("50ms"));
+        let s = SubmitError::SloShed {
+            live_p99: Duration::from_millis(120),
+            slo: Duration::from_millis(100),
+        };
+        assert!(s.to_string().contains("120ms"));
         assert_eq!(SubmitError::Closed.to_string(), "frontend is shut down");
     }
 
@@ -716,6 +829,7 @@ mod tests {
             queued: AtomicUsize::new(3),
             in_submit: AtomicUsize::new(0),
             session_backlog: AtomicUsize::new(5),
+            window_p99_us: AtomicU64::new(0),
             rejected_total: AtomicU64::new(0),
             rejects_unfolded: AtomicU64::new(0),
             open: AtomicBool::new(true),

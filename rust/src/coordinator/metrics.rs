@@ -78,6 +78,21 @@ impl RunMetrics {
         self.rejected += n;
     }
 
+    /// Fold another run's metrics into this one (used by the sharded
+    /// tier to merge per-shard sessions into one fleet-wide record).
+    /// Latency summaries concatenate raw samples, so merged percentiles
+    /// are exact, not approximated.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        self.latency.merge(&other.latency);
+        self.native += other.native;
+        self.reconstructed += other.reconstructed;
+        self.replica += other.replica;
+        self.defaulted += other.defaulted;
+        self.rejected += other.rejected;
+        self.encode_us.merge(&other.encode_us);
+        self.decode_us.merge(&other.decode_us);
+    }
+
     /// Queries that *resolved* (with any outcome). Rejected queries never
     /// entered the session and are counted separately in `rejected`.
     pub fn total(&self) -> u64 {
@@ -210,6 +225,24 @@ impl LatencyWindow {
         }
     }
 
+    /// Just the windowed p99 latency (ms), `0.0` with no samples. Cheaper
+    /// than a full [`LatencyWindow::snapshot`]: one latency copy plus an
+    /// O(n) selection instead of building and sorting a whole summary —
+    /// this runs on the frontend dispatcher's hot path at a ~10 ms
+    /// cadence for [`crate::coordinator::frontend::AdmissionPolicy::SloAware`].
+    pub fn p99_ms(&mut self, now: Instant) -> f64 {
+        self.prune(now);
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        let mut lat: Vec<f64> = self.events.iter().map(|&(_, ms, _)| ms).collect();
+        // Nearest-rank p99, matching Summary::percentile.
+        let rank = ((0.99 * lat.len() as f64).ceil() as usize).clamp(1, lat.len());
+        let (_, v, _) =
+            lat.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).expect("NaN latency"));
+        *v
+    }
+
     /// Summarize the events still inside the window as of `now`.
     pub fn snapshot(&mut self, now: Instant) -> WindowSnapshot {
         self.prune(now);
@@ -278,6 +311,73 @@ pub struct WindowSnapshot {
 }
 
 impl WindowSnapshot {
+    /// An all-zero snapshot (identity element for [`WindowSnapshot::merge`]).
+    pub fn zero(window: Duration) -> WindowSnapshot {
+        WindowSnapshot {
+            window,
+            resolved: 0,
+            rejected: 0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            p999_ms: 0.0,
+            recovery_rate: 0.0,
+            reject_rate: 0.0,
+            default_rate: 0.0,
+            qps: 0.0,
+        }
+    }
+
+    /// Combine two snapshots into a fleet-wide view (used by the sharded
+    /// serving tier, where each shard keeps its own window).
+    ///
+    /// Counts, and therefore rates, merge exactly: `resolved`/`rejected`
+    /// add, `qps` adds, and the outcome rates are recomputed from the
+    /// merged counts. Quantiles cannot be merged exactly from two
+    /// summaries, so they are combined as resolved-weighted averages —
+    /// exact when the shards are homogeneous, and always bounded by the
+    /// per-shard minimum and maximum (a weighted mean never leaves the
+    /// hull of its inputs; a side with `resolved == 0` carries no
+    /// weight). For exact fleet quantiles over a whole run, merge
+    /// [`RunMetrics`] instead, which keeps raw samples.
+    pub fn merge(&self, other: &WindowSnapshot) -> WindowSnapshot {
+        let resolved = self.resolved + other.resolved;
+        let rejected = self.rejected + other.rejected;
+        let offered = resolved + rejected;
+        let wavg = |a: f64, b: f64| {
+            if resolved == 0 {
+                0.0
+            } else {
+                (a * self.resolved as f64 + b * other.resolved as f64) / resolved as f64
+            }
+        };
+        // The rates are per-snapshot fractions; scale back to counts so
+        // the merged rates are count-exact.
+        let recovered =
+            self.recovery_rate * self.resolved as f64 + other.recovery_rate * other.resolved as f64;
+        let defaulted =
+            self.default_rate * self.resolved as f64 + other.default_rate * other.resolved as f64;
+        WindowSnapshot {
+            window: self.window.max(other.window),
+            resolved,
+            rejected,
+            p50_ms: wavg(self.p50_ms, other.p50_ms),
+            p99_ms: wavg(self.p99_ms, other.p99_ms),
+            p999_ms: wavg(self.p999_ms, other.p999_ms),
+            recovery_rate: if resolved == 0 { 0.0 } else { recovered / resolved as f64 },
+            reject_rate: if offered == 0 { 0.0 } else { rejected as f64 / offered as f64 },
+            default_rate: if resolved == 0 { 0.0 } else { defaulted / resolved as f64 },
+            qps: self.qps + other.qps,
+        }
+    }
+
+    /// Merge a whole fleet of per-shard snapshots (empty input yields
+    /// [`WindowSnapshot::zero`]).
+    pub fn merge_all(snaps: &[WindowSnapshot]) -> WindowSnapshot {
+        snaps
+            .iter()
+            .fold(WindowSnapshot::zero(Duration::ZERO), |acc, s| acc.merge(s))
+    }
+
     /// One-line report, e.g. for periodic printing from a live client.
     pub fn report(&self, label: &str) -> String {
         format!(
@@ -376,6 +476,18 @@ mod tests {
     }
 
     #[test]
+    fn p99_only_path_matches_snapshot() {
+        let mut w = LatencyWindow::new(Duration::from_secs(60));
+        let t0 = Instant::now();
+        assert_eq!(w.p99_ms(t0), 0.0, "empty window");
+        for i in 1..=100u64 {
+            w.record(Outcome::Native, Duration::from_millis(i), t0);
+        }
+        assert_eq!(w.p99_ms(t0), w.snapshot(t0).p99_ms);
+        assert_eq!(w.p99_ms(t0), 99.0);
+    }
+
+    #[test]
     fn submillisecond_window_does_not_panic() {
         // Regression: the span floor used to be a hard 1 ms, which made
         // Ord::clamp panic (min > max) for configurable sub-ms windows.
@@ -385,6 +497,65 @@ mod tests {
         let s = w.snapshot(t + Duration::from_micros(200));
         assert_eq!(s.resolved, 1);
         assert!(s.qps > 0.0);
+    }
+
+    #[test]
+    fn run_metrics_merge_adds_counts_and_samples() {
+        let t0 = Instant::now();
+        let mut a = RunMetrics::default();
+        a.record(t0, t0 + Duration::from_millis(10), Outcome::Native);
+        a.record_rejected(2);
+        let mut b = RunMetrics::default();
+        b.record(t0, t0 + Duration::from_millis(30), Outcome::Reconstructed);
+        b.record_default(Duration::from_millis(100));
+        a.merge(&b);
+        assert_eq!(a.total(), 3);
+        assert_eq!(a.native, 1);
+        assert_eq!(a.reconstructed, 1);
+        assert_eq!(a.defaulted, 1);
+        assert_eq!(a.rejected, 2);
+        assert_eq!(a.offered(), 5);
+        assert_eq!(a.latency.len(), 3, "raw samples concatenate");
+        assert_eq!(a.latency.max(), 100.0);
+    }
+
+    #[test]
+    fn window_snapshot_merge_counts_exact_quantiles_bounded() {
+        let mk = |resolved: u64, rejected: u64, p50: f64, p99: f64, recovery: f64| {
+            let mut s = WindowSnapshot::zero(Duration::from_secs(10));
+            s.resolved = resolved;
+            s.rejected = rejected;
+            s.p50_ms = p50;
+            s.p99_ms = p99;
+            s.p999_ms = p99 * 1.5;
+            s.recovery_rate = recovery;
+            s.reject_rate = rejected as f64 / (resolved + rejected).max(1) as f64;
+            s.qps = resolved as f64 / 10.0;
+            s
+        };
+        let a = mk(100, 20, 10.0, 50.0, 0.1);
+        let b = mk(300, 0, 20.0, 90.0, 0.3);
+        let m = a.merge(&b);
+        assert_eq!(m.resolved, 400);
+        assert_eq!(m.rejected, 20);
+        assert!((m.reject_rate - 20.0 / 420.0).abs() < 1e-12);
+        // Recovered counts: 10 + 90 = 100 of 400.
+        assert!((m.recovery_rate - 0.25).abs() < 1e-12);
+        assert!((m.qps - 40.0).abs() < 1e-12);
+        // Quantiles bounded by the per-shard extremes, weighted toward b.
+        assert!(m.p50_ms >= 10.0 && m.p50_ms <= 20.0);
+        assert!(m.p99_ms >= 50.0 && m.p99_ms <= 90.0);
+        assert!((m.p50_ms - 17.5).abs() < 1e-9, "resolved-weighted mean");
+
+        // Zero-weight sides carry nothing; zero() is the identity.
+        let z = WindowSnapshot::zero(Duration::ZERO);
+        let zm = z.merge(&a);
+        assert_eq!(zm.resolved, a.resolved);
+        assert!((zm.p99_ms - a.p99_ms).abs() < 1e-12);
+        assert_eq!(WindowSnapshot::merge_all(&[]).resolved, 0);
+        let all = WindowSnapshot::merge_all(&[a, b]);
+        assert_eq!(all.resolved, m.resolved);
+        assert!((all.p99_ms - m.p99_ms).abs() < 1e-12);
     }
 
     #[test]

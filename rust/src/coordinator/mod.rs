@@ -25,6 +25,12 @@
 //!   concurrently through admission control
 //!   ([`frontend::AdmissionPolicy`]) and get completions routed back to
 //!   per-client inboxes with per-client accounting.
+//! - [`shards`] is the scale-out tier: [`shards::ShardedFrontend`] runs
+//!   N independent frontends (one session per shard, each its own fault
+//!   domain) behind a consistent-hash [`shards::ShardRouter`], with
+//!   shard-transparent [`shards::ShardedClient`]s, an optional fleet-wide
+//!   offered-load cap, per-shard fault injection, and shutdown that
+//!   merges per-shard results into one run record.
 //! - [`metrics`] carries both aggregation surfaces: cumulative
 //!   [`metrics::RunMetrics`] for a whole run and the sliding
 //!   [`metrics::LatencyWindow`] behind every live snapshot.
@@ -41,3 +47,4 @@ pub mod metrics;
 pub mod scheme;
 pub mod service;
 pub mod session;
+pub mod shards;

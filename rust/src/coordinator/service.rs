@@ -148,6 +148,43 @@ pub struct RunResult {
     pub rejected: u64,
 }
 
+impl RunResult {
+    /// Merge per-shard run results into one fleet-wide record (the
+    /// shutdown path of [`crate::coordinator::shards::ShardedFrontend`]).
+    ///
+    /// Counters add; latency summaries concatenate raw samples, so the
+    /// merged percentiles are exact. `wall` is the slowest shard (the
+    /// shards ran concurrently) and `mean_service` is weighted by each
+    /// shard's resolved-query count.
+    pub fn merged(parts: &[RunResult]) -> RunResult {
+        let mut metrics = RunMetrics::default();
+        let mut wall = Duration::ZERO;
+        let mut dropped_jobs = 0u64;
+        let mut reconstructions = 0u64;
+        let mut rejected = 0u64;
+        let mut svc_weighted = 0.0f64;
+        let mut svc_weight = 0u64;
+        for p in parts {
+            metrics.merge(&p.metrics);
+            wall = wall.max(p.wall);
+            dropped_jobs += p.dropped_jobs;
+            reconstructions += p.reconstructions;
+            rejected += p.rejected;
+            // Weight by resolved count, floored at 1 so an idle shard
+            // still contributes its calibration instead of vanishing.
+            let w = p.metrics.total().max(1);
+            svc_weighted += p.mean_service.as_secs_f64() * w as f64;
+            svc_weight += w;
+        }
+        let mean_service = if svc_weight == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(svc_weighted / svc_weight as f64)
+        };
+        RunResult { metrics, mean_service, wall, dropped_jobs, reconstructions, rejected }
+    }
+}
+
 /// Measure the deployed model's uncontended mean service time.
 pub fn measure_service(exe: &Executable, input: &Tensor, iters: usize) -> Duration {
     // Warmup.

@@ -33,7 +33,7 @@
 //! instead of waiting for `shutdown`.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -47,7 +47,7 @@ use crate::coordinator::metrics::{LatencyWindow, Outcome, RunMetrics, WindowSnap
 use crate::coordinator::scheme::{RedundancyScheme, Resolution, Target};
 use crate::coordinator::service::{measure_service, ModelSet, RunResult, ServiceConfig};
 use crate::runtime::engine::Executable;
-use crate::runtime::instance::{Completion, Execution, ServiceModel, WorkerEnv, DROPPED_JOBS};
+use crate::runtime::instance::{Completion, Execution, ServiceModel, WorkerEnv};
 use crate::runtime::pool::Pool;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -127,6 +127,7 @@ impl ServiceBuilder {
             time_scale: cfg.time_scale,
             hol_range: cfg.hol_range,
             mean_service,
+            dropped: AtomicU64::new(0),
         });
 
         let shuffles = if cfg.shuffles > 0 {
@@ -221,7 +222,7 @@ impl ServiceBuilder {
             next_qid: 0,
             mean_service,
             started,
-            dropped_at_start: DROPPED_JOBS.load(Ordering::Relaxed),
+            env,
             // The handle inherits the builder's stream, so experiment
             // randomness (tenancy, shuffles, pools, then arrivals) stays
             // one continuous seeded sequence as in the seed's Service::run.
@@ -295,7 +296,9 @@ pub struct ServiceHandle {
     next_qid: u64,
     mean_service: Duration,
     started: Instant,
-    dropped_at_start: u64,
+    /// Worker environment, kept for session-scoped observability (the
+    /// per-session dropped-job counter; see [`WorkerEnv::dropped`]).
+    env: Arc<WorkerEnv>,
     /// Continuation of the builder's seeded stream (open-loop arrivals).
     rng: Pcg64,
 }
@@ -339,6 +342,14 @@ impl ServiceHandle {
     /// Fail an instance for a bounded window.
     pub fn fail_instance_for(&self, instance: usize, dur: Duration) {
         self.faults.fail_for(instance, dur);
+    }
+
+    /// The session's shared fault-injection plan (the same one the
+    /// instance workers consult). Lets a frontend keep chaos-drill access
+    /// (`kill_instance` and friends) after the handle itself has moved
+    /// onto a dispatcher thread.
+    pub fn fault_plan(&self) -> Arc<FaultPlan> {
+        self.faults.clone()
     }
 
     /// Submit one query; returns its id. The query joins the current
@@ -437,9 +448,10 @@ impl ServiceHandle {
             metrics,
             mean_service: self.mean_service,
             wall: self.started.elapsed(),
-            dropped_jobs: DROPPED_JOBS
-                .load(Ordering::Relaxed)
-                .saturating_sub(self.dropped_at_start),
+            // Session-scoped counter: concurrent sessions (shards) must
+            // not cross-count each other's drops through the global
+            // DROPPED_JOBS static.
+            dropped_jobs: self.env.dropped.load(Ordering::Relaxed),
             reconstructions: self.scheme.reconstructions(),
         }
     }
@@ -452,9 +464,31 @@ impl ServiceHandle {
     /// builder's draws, exactly like the pre-session `Service::run`).
     /// Does not drain.
     pub fn run_open_loop(&mut self, queries: &[Tensor], n_queries: u64, rate: f64) {
+        self.run_open_loop_observed(queries, n_queries, rate, None, &mut |_, _| {});
+    }
+
+    /// [`ServiceHandle::run_open_loop`] with periodic live-metrics
+    /// sampling: when `sample_every` is set, `sink(elapsed, snapshot)` is
+    /// called at that cadence with the sliding-window snapshot — the
+    /// time-series view behind Figure 11-style "p99 across a fault event"
+    /// plots. Sampling shares the arrival loop's pacing, so it costs no
+    /// extra thread and never distorts the offered load (snapshots are
+    /// O(window events) and taken between arrivals).
+    pub fn run_open_loop_observed(
+        &mut self,
+        queries: &[Tensor],
+        n_queries: u64,
+        rate: f64,
+        sample_every: Option<Duration>,
+        sink: &mut dyn FnMut(Duration, WindowSnapshot),
+    ) {
         assert!(!queries.is_empty(), "open loop needs at least one query tensor");
         assert!(rate > 0.0, "open loop needs a positive rate");
+        if let Some(every) = sample_every {
+            assert!(!every.is_zero(), "sample cadence must be non-zero");
+        }
         let start = Instant::now();
+        let mut next_sample = sample_every.map(|every| start + every);
         let mut next_arrival = 0.0f64;
         for i in 0..n_queries {
             next_arrival += self.rng.exponential(rate);
@@ -462,14 +496,30 @@ impl ServiceHandle {
             loop {
                 self.pump(None);
                 let now = Instant::now();
+                if let (Some(every), Some(at)) = (sample_every, next_sample) {
+                    if now >= at {
+                        sink(now - start, self.window.snapshot(now));
+                        // Fixed cadence; skip forward if we lagged a tick.
+                        let mut next = at + every;
+                        while next <= now {
+                            next += every;
+                        }
+                        next_sample = Some(next);
+                    }
+                }
                 if now >= due {
                     break;
                 }
-                // Honor batch timeouts while pacing.
+                // Honor batch timeouts and the sample cadence while pacing.
                 let mut wake = due;
                 if let Some(d) = self.next_deadline() {
                     if d < wake {
                         wake = d;
+                    }
+                }
+                if let Some(at) = next_sample {
+                    if at < wake {
+                        wake = at;
                     }
                 }
                 let now = Instant::now();

@@ -63,6 +63,68 @@ impl LatencyRow {
     }
 }
 
+/// One periodic sample of a run's live window — the time-series view
+/// behind "p99 over time across a fault event" plots (Figure 11's story
+/// told as a timeline instead of end-of-run aggregates).
+#[derive(Clone, Debug)]
+pub struct TimeSeriesRow {
+    /// Milliseconds since the run started.
+    pub t_ms: f64,
+    /// Queries resolved inside the window at this instant.
+    pub resolved: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub qps: f64,
+    pub recovery_rate: f64,
+    pub reject_rate: f64,
+    pub default_rate: f64,
+}
+
+impl TimeSeriesRow {
+    pub fn from_snapshot(t: Duration, w: &crate::coordinator::metrics::WindowSnapshot) -> TimeSeriesRow {
+        TimeSeriesRow {
+            t_ms: t.as_secs_f64() * 1e3,
+            resolved: w.resolved,
+            p50_ms: w.p50_ms,
+            p99_ms: w.p99_ms,
+            p999_ms: w.p999_ms,
+            qps: w.qps,
+            recovery_rate: w.recovery_rate,
+            reject_rate: w.reject_rate,
+            default_rate: w.default_rate,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("t_ms", self.t_ms)
+            .set("resolved", self.resolved as usize)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("p999_ms", self.p999_ms)
+            .set("qps", self.qps)
+            .set("recovery_rate", self.recovery_rate)
+            .set("reject_rate", self.reject_rate)
+            .set("default_rate", self.default_rate)
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:>9} {:>7} {:>9} {:>9} {:>9} {:>8} {:>9}",
+            "t(ms)", "n", "p50(ms)", "p99(ms)", "p99.9(ms)", "qps", "recovery"
+        )
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:>9.0} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>8.0} {:>9.3}",
+            self.t_ms, self.resolved, self.p50_ms, self.p99_ms, self.p999_ms, self.qps,
+            self.recovery_rate
+        )
+    }
+}
+
 /// Load the executables for a latency run at the given batch size.
 pub fn load_models(
     manifest: &Manifest,
@@ -194,7 +256,53 @@ pub fn run_point(
     })
 }
 
+/// Like [`run_point`], but also sample the session's live window every
+/// `sample_every`, returning the aggregate row *and* the time series.
+/// Pair it with a `cfg.fault_schedule` entry to watch the tail latency
+/// spike and (under ParM) recover across a fault event.
+pub fn run_point_timeseries(
+    cfg: &ServiceConfig,
+    models: &ModelSet,
+    source: &QuerySource,
+    n_queries: u64,
+    rate: f64,
+    label: &str,
+    sample_every: Duration,
+) -> anyhow::Result<(LatencyRow, Vec<TimeSeriesRow>)> {
+    let mut handle = ServiceBuilder::new(cfg.clone()).build(models, &source.queries[0])?;
+    let mut series = Vec::new();
+    let run_start = std::time::Instant::now();
+    handle.run_open_loop_observed(
+        &source.queries,
+        n_queries,
+        rate,
+        Some(sample_every),
+        &mut |t, w| series.push(TimeSeriesRow::from_snapshot(t, &w)),
+    );
+    let _ = handle.drain();
+    // One last sample, stamped at the real elapsed time, so the series
+    // covers the drain tail (which can run long under faults/SLO).
+    let w = handle.window_snapshot();
+    series.push(TimeSeriesRow::from_snapshot(run_start.elapsed(), &w));
+    let RunResult { mut metrics, mean_service, reconstructions, .. } = handle.shutdown();
+    let util = rate * mean_service.as_secs_f64() / (cfg.batch_size.max(1) as f64 * cfg.m as f64);
+    let row = LatencyRow {
+        label: label.to_string(),
+        rate_qps: rate,
+        utilization: util,
+        median_ms: metrics.latency.median(),
+        p99_ms: metrics.latency.p99(),
+        p999_ms: metrics.latency.p999(),
+        mean_ms: metrics.latency.mean(),
+        f_u: metrics.f_unavailable(),
+        reconstructions,
+        n: metrics.latency.len(),
+    };
+    Ok((row, series))
+}
+
 /// ParM vs Equal-Resources at one rate (the Figure 11 comparison pair).
+#[allow(clippy::too_many_arguments)]
 pub fn parm_vs_equal_resources(
     manifest: &Manifest,
     profile: &'static Profile,
@@ -252,6 +360,21 @@ fn batched_probe(source: &QuerySource, batch: usize) -> crate::tensor::Tensor {
             .collect::<Vec<_>>(),
     )
     .unwrap()
+}
+
+/// Write time-series rows to `bench_out/<name>.json` and print the table.
+pub fn emit_timeseries(name: &str, rows: &[TimeSeriesRow]) {
+    println!("\n=== {name} ===");
+    println!("{}", TimeSeriesRow::header());
+    for r in rows {
+        println!("{}", r.line());
+    }
+    let json = Json::Arr(rows.iter().map(|r| r.to_json()).collect());
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{name}.json");
+    if std::fs::write(&path, json.to_string()).is_ok() {
+        println!("(wrote {path})");
+    }
 }
 
 /// Write rows to `bench_out/<name>.json` and print the table.

@@ -19,6 +19,7 @@ use parm::cluster::hardware;
 use parm::coordinator::encoder::Encoder;
 use parm::coordinator::frontend::AdmissionPolicy;
 use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::shards::{ShardSpec, ShardedFrontend};
 use parm::experiments::{accuracy, latency, table1};
 use parm::util::cli::Cli;
 use parm::workload::QuerySource;
@@ -112,10 +113,13 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("shuffles", "4", "concurrent background shuffles")
         .opt("seed", "49374", "rng seed")
         .opt("clients", "1", "concurrent client threads (>1 serves via the multi-client frontend)")
-        .opt("admission", "unbounded", "admission policy: unbounded | reject-above | block")
-        .opt("admission-backlog", "64", "load limit for reject-above / block")
+        .opt("shards", "1", "serving shards (>1 serves via the consistent-hash sharded tier)")
+        .opt("vnodes", "64", "virtual nodes per shard on the hash ring")
+        .opt("global-backlog", "0", "fleet-wide offered-load cap over all shards (0 = none)")
+        .opt("admission", "unbounded", "admission policy: unbounded | reject-above | block | slo-aware")
+        .opt("admission-backlog", "64", "load limit for reject-above / block / slo-aware")
         .opt("admission-timeout-ms", "50", "max wait for block admission")
-        .opt("slo-ms", "0", "SLO in ms (0 = none; stragglers past it get default predictions)")
+        .opt("slo-ms", "0", "SLO in ms (0 = none; stragglers past it get default predictions; slo-aware admission sheds at this p99)")
         .flag("tenancy", "enable light multitenancy instead of shuffles");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -156,18 +160,25 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let backlog = a.get_usize("admission-backlog");
     cfg.admission = match a.get("admission") {
         "unbounded" => AdmissionPolicy::Unbounded,
-        "reject-above" | "block" => {
+        "reject-above" | "block" | "slo-aware" => {
             if backlog == 0 {
                 anyhow::bail!("--admission-backlog must be >= 1");
             }
-            if a.get("admission") == "reject-above" {
-                AdmissionPolicy::RejectAbove { backlog }
-            } else {
-                let timeout = a.get_duration_ms("admission-timeout-ms");
-                if timeout.is_zero() {
-                    anyhow::bail!("--admission-timeout-ms must be > 0");
+            match a.get("admission") {
+                "reject-above" => AdmissionPolicy::RejectAbove { backlog },
+                "slo-aware" => {
+                    if slo_ms <= 0.0 {
+                        anyhow::bail!("--admission slo-aware needs --slo-ms > 0");
+                    }
+                    AdmissionPolicy::SloAware { p99: a.get_duration_ms("slo-ms"), backlog }
                 }
-                AdmissionPolicy::Block { backlog, timeout }
+                _ => {
+                    let timeout = a.get_duration_ms("admission-timeout-ms");
+                    if timeout.is_zero() {
+                        anyhow::bail!("--admission-timeout-ms must be > 0");
+                    }
+                    AdmissionPolicy::Block { backlog, timeout }
+                }
             }
         }
         other => anyhow::bail!("unknown admission policy {other:?}"),
@@ -182,6 +193,18 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         rate = 0.6 * profile.default_m as f64 / mean.as_secs_f64();
     }
     let clients = a.get_usize("clients").max(1);
+    let shards = a.get_usize("shards");
+    if shards > 1 {
+        let spec = ShardSpec {
+            shards,
+            vnodes: a.get_usize("vnodes"),
+            global_backlog: match a.get_usize("global-backlog") {
+                0 => None,
+                n => Some(n),
+            },
+        };
+        return serve_sharded(cfg, spec, &models, &source, a.get_u64("queries"), rate, clients);
+    }
     // A bare session enforces no admission policy (see ServiceConfig
     // docs), so any bounding policy routes through the frontend — even
     // with a single client.
@@ -195,35 +218,68 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     serve_multi_client(cfg, &models, &source, a.get_u64("queries"), rate, clients)
 }
 
-/// Drive `clients` concurrent submitter threads through the multi-client
-/// frontend, splitting `n` queries and `rate` evenly, then report
-/// per-client windowed stats and the session's run result.
-fn serve_multi_client(
-    cfg: ServiceConfig,
-    models: &parm::coordinator::service::ModelSet,
-    source: &QuerySource,
+/// The submit/poll/next/stats surface the paced CLI driver needs — the
+/// seam that lets `serve` and `serve --shards` share one driver loop
+/// instead of diverging copies.
+trait PacedClient: Send + 'static {
+    fn offer(&self, input: parm::tensor::Tensor) -> bool;
+    fn sweep(&self);
+    fn resolved(&self) -> u64;
+    fn wait_next(&self, timeout: std::time::Duration) -> bool;
+}
+
+impl PacedClient for parm::coordinator::frontend::ServiceClient {
+    fn offer(&self, input: parm::tensor::Tensor) -> bool {
+        self.submit(input).is_ok()
+    }
+    fn sweep(&self) {
+        let _ = self.poll();
+    }
+    fn resolved(&self) -> u64 {
+        self.stats().resolved
+    }
+    fn wait_next(&self, timeout: std::time::Duration) -> bool {
+        self.next(timeout).is_some()
+    }
+}
+
+impl PacedClient for parm::coordinator::shards::ShardedClient {
+    fn offer(&self, input: parm::tensor::Tensor) -> bool {
+        self.submit(input).is_ok()
+    }
+    fn sweep(&self) {
+        let _ = self.poll();
+    }
+    fn resolved(&self) -> u64 {
+        self.stats().resolved
+    }
+    fn wait_next(&self, timeout: std::time::Duration) -> bool {
+        self.next(timeout).is_some()
+    }
+}
+
+/// Drive `clients` paced-Poisson submitter threads (splitting `n`
+/// queries and `rate` evenly, remainder spread so exactly `n` are
+/// offered), wait for everything each client was promised, and return
+/// the clients for reporting.
+fn drive_paced_clients<C: PacedClient>(
     n: u64,
     rate: f64,
     clients: usize,
-) -> anyhow::Result<()> {
+    seed: u64,
+    source: &QuerySource,
+    mut mint: impl FnMut() -> C,
+) -> Vec<C> {
     use parm::util::rng::Pcg64;
     use std::time::{Duration, Instant};
 
-    let seed = cfg.seed;
-    let frontend = parm::coordinator::session::ServiceBuilder::new(cfg)
-        .serve(models, &source.queries[0])?;
-    println!(
-        "serving {n} queries from {clients} clients at {rate:.0} qps total (policy {:?})",
-        frontend.policy()
-    );
     let per = n / clients as u64;
     let rem = n % clients as u64;
     let per_rate = rate / clients as f64;
     let mut joins = Vec::new();
     for c in 0..clients {
-        // Distribute the remainder so exactly n queries are offered.
         let quota = per + u64::from((c as u64) < rem);
-        let client = frontend.client();
+        let client = mint();
         let queries = source.queries.clone();
         joins.push(std::thread::spawn(move || {
             let mut rng = Pcg64::new(seed ^ 0x5EED ^ (c as u64) << 17);
@@ -235,26 +291,111 @@ fn serve_multi_client(
                 if due > now {
                     std::thread::sleep(due - now);
                 }
-                if client.submit(queries[i as usize % queries.len()].clone()).is_ok() {
+                if client.offer(queries[i as usize % queries.len()].clone()) {
                     accepted += 1;
                 }
-                let _ = client.poll(); // keep the inbox from growing
+                client.sweep(); // keep inboxes from growing
             }
             // Wait for everything this client was promised.
-            while client.stats().resolved < accepted {
-                if client.next(Duration::from_secs(10)).is_none() {
+            while client.resolved() < accepted {
+                if !client.wait_next(Duration::from_secs(10)) {
                     break;
                 }
             }
             client
         }));
     }
+    joins.into_iter().map(|j| j.join().expect("client thread")).collect()
+}
+
+/// Drive `clients` concurrent submitter threads through the sharded tier
+/// (`shards` independent sessions behind a consistent-hash router),
+/// splitting `n` queries and `rate` evenly, then report per-client and
+/// per-shard stats plus the merged fleet-wide run result.
+fn serve_sharded(
+    cfg: ServiceConfig,
+    spec: ShardSpec,
+    models: &parm::coordinator::service::ModelSet,
+    source: &QuerySource,
+    n: u64,
+    rate: f64,
+    clients: usize,
+) -> anyhow::Result<()> {
+    let seed = cfg.seed;
+    let tier = ShardedFrontend::start(cfg, spec, models, &source.queries[0])?;
+    println!(
+        "serving {n} queries from {clients} clients over {} shards at {rate:.0} qps total",
+        tier.shards()
+    );
+    let done = drive_paced_clients(n, rate, clients, seed, source, || tier.client());
+    println!(
+        "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10}",
+        "client", "shard", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)"
+    );
+    for client in done {
+        let st = client.stats();
+        let w = client.window();
+        println!(
+            "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10.3} {:>10.3}",
+            client.id(),
+            client.shard().map_or_else(|| "-".into(), |s| s.to_string()),
+            st.submitted,
+            st.resolved,
+            st.rejected,
+            w.p50_ms,
+            w.p99_ms,
+        );
+    }
+    for s in 0..tier.shards() {
+        println!("shard {s} window: {}", tier.shard_window(s).report("live"));
+    }
+    println!("fleet window:   {}", tier.window().report("merged"));
+    let res = tier.shutdown()?;
+    for (s, r) in res.per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: resolved={} rejected={} reconstructions={} dropped_jobs={}",
+            r.metrics.total(),
+            r.rejected,
+            r.reconstructions,
+            r.dropped_jobs
+        );
+    }
+    let mut metrics = res.merged.metrics;
+    println!("{}", metrics.report("fleet total"));
+    println!(
+        "wall={:.1}s reconstructions={} dropped_jobs={} rejected={}",
+        res.merged.wall.as_secs_f64(),
+        res.merged.reconstructions,
+        res.merged.dropped_jobs,
+        res.merged.rejected
+    );
+    Ok(())
+}
+
+/// Drive `clients` concurrent submitter threads through the multi-client
+/// frontend, splitting `n` queries and `rate` evenly, then report
+/// per-client windowed stats and the session's run result.
+fn serve_multi_client(
+    cfg: ServiceConfig,
+    models: &parm::coordinator::service::ModelSet,
+    source: &QuerySource,
+    n: u64,
+    rate: f64,
+    clients: usize,
+) -> anyhow::Result<()> {
+    let seed = cfg.seed;
+    let frontend = parm::coordinator::session::ServiceBuilder::new(cfg)
+        .serve(models, &source.queries[0])?;
+    println!(
+        "serving {n} queries from {clients} clients at {rate:.0} qps total (policy {:?})",
+        frontend.policy()
+    );
+    let done = drive_paced_clients(n, rate, clients, seed, source, || frontend.client());
     println!(
         "{:<8} {:>9} {:>9} {:>9} {:>10} {:>10} {:>9} {:>9}",
         "client", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)", "recovered", "default"
     );
-    for j in joins {
-        let client = j.join().expect("client thread");
+    for client in done {
         let st = client.stats();
         let w = client.window();
         println!(
@@ -326,6 +467,13 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
         let mean = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
         exp.utilization * cfg.m as f64 / mean.as_secs_f64()
     };
+    if exp.shards.shards > 1 {
+        // Sharded experiments serve paced concurrent clients (4 per
+        // shard) through the consistent-hash tier and report the merged
+        // fleet record instead of a single-session latency row.
+        let clients = exp.shards.shards * 4;
+        return serve_sharded(cfg, exp.shards, &models, &source, exp.queries, rate, clients);
+    }
     let row = latency::run_point(&cfg, &models, &source, exp.queries, rate, cfg.mode.name())?;
     println!("{}", parm::experiments::latency::LatencyRow::header());
     println!("{}", row.line());

@@ -75,6 +75,12 @@ pub struct WorkerEnv {
     pub hol_range: (f64, f64),
     /// Mean uncontended service time, measured at pool startup.
     pub mean_service: Duration,
+    /// Jobs dropped by *this session's* failed instances. The global
+    /// [`DROPPED_JOBS`] static spans every live session, so concurrent
+    /// sessions (e.g. the shards of a
+    /// [`crate::coordinator::shards::ShardedFrontend`]) would cross-count
+    /// each other through it; per-shard accounting reads this counter.
+    pub dropped: AtomicU64,
 }
 
 /// How workers produce predictions.
@@ -210,6 +216,7 @@ fn worker_loop(
         // drops keeps a dead instance from draining the shared queue.
         if env.faults.is_failed(id) {
             DROPPED_JOBS.fetch_add(1, Ordering::Relaxed);
+            env.dropped.fetch_add(1, Ordering::Relaxed);
             precise_sleep(scaled(env.mean_service, env.time_scale));
             continue;
         }

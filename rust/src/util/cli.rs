@@ -168,7 +168,7 @@ impl Args {
     /// `--admission-timeout-ms 2.5`).
     pub fn get_duration_ms(&self, name: &str) -> std::time::Duration {
         let ms = self.get_f64(name);
-        if !(ms >= 0.0) {
+        if ms.is_nan() || ms < 0.0 {
             panic!("--{name}: must be >= 0 ms, got {ms}");
         }
         std::time::Duration::from_secs_f64(ms / 1e3)

@@ -15,7 +15,9 @@
 //! missing under `--features pjrt`.
 
 use std::collections::HashSet;
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use parm::artifacts::Manifest;
 use parm::cluster::hardware::GPU;
@@ -200,4 +202,92 @@ fn reject_above_bounds_backlog_under_stall() {
     assert_eq!(res.rejected, rejected, "rejects surface in the RunResult");
     assert_eq!(res.metrics.total(), accepted);
     assert_eq!(res.metrics.offered(), ATTEMPTS);
+}
+
+/// Regression: `Block`-policy waiters interrupted by `shutdown` must be
+/// tallied as shed load *before* the dispatcher folds rejects into the
+/// session's `RunResult` — and shutdown must interrupt them promptly
+/// instead of waiting out their (long) admission timeout. Before the
+/// fix, a waiter blocked in admission never observed the close: it was
+/// either silently admitted during teardown or sat until its own
+/// timeout, and the run record under-counted the offered load.
+#[test]
+fn shutdown_tallies_interrupted_block_waiters() {
+    let _guard = serial();
+    const LIMIT: usize = 2;
+    const WAITERS: usize = 8;
+    const PER: usize = 200;
+    const BLOCK_TIMEOUT: Duration = Duration::from_secs(8);
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(Mode::NoRedundancy, &GPU);
+    cfg.m = 2;
+    cfg.shuffles = 0;
+    cfg.seed = 0xB10C;
+    // Stall the drain (as in reject_above_bounds_backlog_under_stall) so
+    // the load hovers at the limit and most waiters are blocked in
+    // admission at any instant.
+    cfg.time_scale = 25.0;
+    cfg.admission = AdmissionPolicy::Block { backlog: LIMIT, timeout: BLOCK_TIMEOUT };
+
+    let frontend = ServiceBuilder::new(cfg)
+        .serve(&models, &src.queries[0])
+        .expect("frontend builds");
+
+    let accepted_total = Arc::new(AtomicU64::new(0));
+    let mut joins = Vec::new();
+    let mut clients = Vec::new();
+    for c in 0..WAITERS {
+        let client = frontend.client();
+        clients.push(client.clone());
+        let queries = src.queries.clone();
+        let accepted_total = accepted_total.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..PER {
+                match client.submit(queries[(c + i) % queries.len()].clone()) {
+                    Ok(_) => {
+                        accepted_total.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Interrupted by the close (tallied as a reject by
+                    // the frontend) or failed fast after it (not
+                    // tallied): either way, stop offering.
+                    Err(SubmitError::Closed) => break,
+                    Err(SubmitError::Timeout { .. }) => {
+                        panic!("no waiter should sit out its 8 s timeout")
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+            }
+        }));
+    }
+
+    // Let the storm saturate admission, then shut down mid-storm while
+    // (with LIMIT=2 and 8 submitters) several waiters are blocked.
+    std::thread::sleep(Duration::from_millis(60));
+    let t0 = Instant::now();
+    let res = frontend.shutdown().expect("clean shutdown");
+    let shutdown_took = t0.elapsed();
+    for j in joins {
+        j.join().expect("waiter thread");
+    }
+
+    assert!(
+        shutdown_took < BLOCK_TIMEOUT / 2,
+        "shutdown must interrupt Block waiters promptly, took {shutdown_took:?}"
+    );
+    let accepted = accepted_total.load(Ordering::Relaxed);
+    let client_rejects: u64 = clients.iter().map(|c| c.stats().rejected).sum();
+    assert!(
+        client_rejects > 0,
+        "with {WAITERS} submitters over limit {LIMIT}, shutdown must interrupt some waiter"
+    );
+    assert_eq!(
+        res.rejected, client_rejects,
+        "every interrupted waiter's reject is folded into the RunResult"
+    );
+    assert_eq!(res.metrics.total(), accepted, "accepted still implies resolved");
+    assert_eq!(res.metrics.offered(), accepted + client_rejects);
+    let client_resolved: u64 = clients.iter().map(|c| c.stats().resolved).sum();
+    assert_eq!(client_resolved, accepted, "deliveries kept flowing through shutdown");
 }

@@ -1,0 +1,358 @@
+//! Properties of the sharded serving tier (`coordinator::shards`)
+//! against real simulated clusters:
+//!
+//! - **cross-shard query conservation**: 16 concurrent clients over 4
+//!   shards, with one shard's instance killed mid-run — every accepted
+//!   query resolves exactly once, back to the client (and shard) that
+//!   submitted it, and the merged shutdown record's totals equal the
+//!   per-shard sums;
+//! - **drain rerouting**: taking a shard out of the ring reroutes that
+//!   client's *subsequent* submits to a surviving shard without losing
+//!   anything already in flight;
+//! - **global admission cap**: the fleet-wide offered-load cap sheds and
+//!   its rejects land in the merged accounting;
+//! - **`WindowSnapshot::merge`**: seeded property trials — merged counts
+//!   are exact sums and merged quantiles stay bounded by the per-shard
+//!   extremes.
+//!
+//! Like `frontend_concurrency.rs`, the cluster tests spawn full
+//! simulated clusters, so they run serialized and skip (with a message)
+//! if artifacts are missing under `--features pjrt`.
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::SubmitError;
+use parm::coordinator::metrics::{LatencyWindow, Outcome, WindowSnapshot};
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::shards::{shard_of, ShardSpec, ShardedFrontend};
+use parm::experiments::latency;
+use parm::util::rng::Pcg64;
+use parm::workload::QuerySource;
+
+/// Each test spawns a full simulated cluster; running them concurrently
+/// oversubscribes the host and distorts the timing paths.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() -> Option<(Manifest, QuerySource)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP shard_routing: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    Some((m, src))
+}
+
+fn models(m: &Manifest, k: usize) -> Option<ModelSet> {
+    match latency::load_models(m, 1, k, 1, false) {
+        Ok(ms) => Some(ms),
+        Err(e) => {
+            eprintln!("SKIP shard_routing: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn cross_shard_conservation_with_shard_kill() {
+    let _guard = serial();
+    const CLIENTS: usize = 16;
+    const SHARDS: usize = 4;
+    const PER: u64 = 25;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg =
+        ServiceConfig::defaults(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] }, &GPU);
+    cfg.m = 2;
+    cfg.shuffles = 0;
+    cfg.seed = 0x5A4D;
+    cfg.slo = Some(Duration::from_secs(3)); // backstop for doubly-lost groups
+
+    let tier = ShardedFrontend::start(
+        cfg,
+        ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None },
+        &models,
+        &src.queries[0],
+    )
+    .expect("sharded tier builds");
+    assert_eq!(tier.shards(), SHARDS);
+
+    let mut joins = Vec::new();
+    for c in 0..CLIENTS {
+        let client = tier.client();
+        let queries = src.queries.clone();
+        joins.push(std::thread::spawn(move || {
+            let home = client.shard().expect("live shard");
+            let mut submitted = HashSet::new();
+            let mut got = Vec::new();
+            for i in 0..PER {
+                let id = client
+                    .submit(queries[(c + i as usize) % queries.len()].clone())
+                    .expect("unbounded admission accepts");
+                assert!(submitted.insert(id), "sharded ids must be unique");
+                assert_eq!(shard_of(id), home, "no drain: routing is stable");
+                got.extend(client.poll());
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            while got.len() < PER as usize {
+                match client.next(Duration::from_secs(10)) {
+                    Some(r) => got.push(r),
+                    None => break,
+                }
+            }
+            (submitted, got, client)
+        }));
+    }
+
+    // Undetected zombies mid-run, scoped to the shard serving client 0:
+    // with *both* deployed instances (ids 0..m=2) dead, that shard
+    // degrades to parity reconstructions and SLO defaults, while the
+    // other shards' routing and accounting must stay untouched.
+    std::thread::sleep(Duration::from_millis(20));
+    let killed_shard = tier.route_of(0).expect("live shard");
+    tier.kill_instance(killed_shard, 0);
+    tier.kill_instance(killed_shard, 1);
+
+    let mut grand_total = 0u64;
+    for j in joins {
+        let (submitted, got, client) = j.join().expect("client thread");
+        assert_eq!(got.len(), PER as usize, "every query resolves exactly once");
+        let ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), got.len(), "no duplicate resolutions");
+        assert_eq!(ids, submitted, "resolutions routed to the submitting client");
+        let st = client.stats();
+        assert_eq!(st.submitted, PER);
+        assert_eq!(st.resolved, PER);
+        assert_eq!(st.rejected, 0);
+        assert_eq!(
+            st.native + st.recovered + st.defaulted,
+            PER,
+            "outcome counts partition the client's queries"
+        );
+        grand_total += st.resolved;
+    }
+    assert_eq!(grand_total, CLIENTS as u64 * PER);
+
+    let res = tier.shutdown().expect("clean shutdown");
+    assert_eq!(res.per_shard.len(), SHARDS);
+    // The merged record's totals equal the per-shard sums.
+    let sum_resolved: u64 = res.per_shard.iter().map(|r| r.metrics.total()).sum();
+    let sum_rejected: u64 = res.per_shard.iter().map(|r| r.rejected).sum();
+    let sum_dropped: u64 = res.per_shard.iter().map(|r| r.dropped_jobs).sum();
+    let sum_recon: u64 = res.per_shard.iter().map(|r| r.reconstructions).sum();
+    assert_eq!(res.merged.metrics.total(), sum_resolved);
+    assert_eq!(res.merged.rejected, sum_rejected);
+    assert_eq!(res.merged.dropped_jobs, sum_dropped);
+    assert_eq!(res.merged.reconstructions, sum_recon);
+    assert_eq!(res.merged.metrics.total(), grand_total, "fleet metrics agree with clients");
+    assert_eq!(res.merged.rejected, 0);
+    assert!(
+        res.per_shard[killed_shard].dropped_jobs > 0,
+        "the killed shard's zombie must actually have swallowed jobs"
+    );
+    for (s, r) in res.per_shard.iter().enumerate() {
+        if s != killed_shard {
+            assert_eq!(
+                r.dropped_jobs, 0,
+                "shard {s} is a separate fault domain and must drop nothing"
+            );
+        }
+    }
+}
+
+#[test]
+fn drained_shard_reroutes_subsequent_submits() {
+    let _guard = serial();
+    const SHARDS: usize = 4;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(Mode::NoRedundancy, &GPU);
+    cfg.m = 1;
+    cfg.shuffles = 0;
+    cfg.seed = 0xD2A1;
+
+    let tier = ShardedFrontend::start(
+        cfg,
+        ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None },
+        &models,
+        &src.queries[0],
+    )
+    .expect("sharded tier builds");
+    let client = tier.client();
+    let home = client.shard().expect("live shard");
+
+    let mut ids = HashSet::new();
+    for i in 0..8 {
+        let id = client.submit(src.queries[i % src.len()].clone()).expect("healthy accepts");
+        assert_eq!(shard_of(id), home, "pre-drain submits land on the home shard");
+        ids.insert(id);
+    }
+
+    tier.drain_shard(home);
+    assert_eq!(tier.live_shards(), SHARDS - 1);
+    let rerouted = client.shard().expect("surviving shards stay live");
+    assert_ne!(rerouted, home, "drained shard must not receive new routes");
+    assert_eq!(tier.route_of(client.id()), Some(rerouted));
+
+    for i in 0..8 {
+        let id = client.submit(src.queries[i % src.len()].clone()).expect("reroute accepts");
+        assert_eq!(shard_of(id), rerouted, "post-drain submits land on the rerouted shard");
+        ids.insert(id);
+    }
+
+    // Everything resolves exactly once — including the in-flight queries
+    // of the drained shard.
+    let mut got = Vec::new();
+    while got.len() < 16 {
+        match client.next(Duration::from_secs(10)) {
+            Some(r) => got.push(r),
+            None => break,
+        }
+    }
+    assert_eq!(got.len(), 16, "drain must not strand in-flight queries");
+    let got_ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+    assert_eq!(got_ids, ids);
+    assert_eq!(client.stats().resolved, 16);
+
+    // Restoring the shard brings the original route back (consistent
+    // hashing: nothing else moved in between).
+    tier.restore_shard(home);
+    assert_eq!(client.shard(), Some(home));
+
+    let res = tier.shutdown().expect("clean shutdown");
+    assert_eq!(res.merged.metrics.total(), 16);
+    let sum: u64 = res.per_shard.iter().map(|r| r.metrics.total()).sum();
+    assert_eq!(sum, 16);
+}
+
+#[test]
+fn global_cap_sheds_and_lands_in_merged_accounting() {
+    let _guard = serial();
+    const CAP: usize = 4;
+    const ATTEMPTS: usize = 120;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(Mode::NoRedundancy, &GPU);
+    cfg.m = 1;
+    cfg.shuffles = 0;
+    cfg.seed = 0xCA9;
+    // Slow the drain far below the offered burst so the fleet load pins
+    // above the cap (same stall technique as frontend_concurrency.rs).
+    cfg.time_scale = 25.0;
+
+    let tier = ShardedFrontend::start(
+        cfg,
+        ShardSpec { shards: 2, vnodes: 32, global_backlog: Some(CAP) },
+        &models,
+        &src.queries[0],
+    )
+    .expect("sharded tier builds");
+    let client = tier.client();
+
+    let (mut accepted, mut rejected) = (0u64, 0u64);
+    for i in 0..ATTEMPTS {
+        match client.submit(src.queries[i % src.len()].clone()) {
+            Ok(_) => accepted += 1,
+            Err(SubmitError::Rejected { limit, .. }) => {
+                assert_eq!(limit, CAP, "global cap is the binding limit");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(accepted > 0, "the cap must still admit up to the limit");
+    assert!(rejected > 0, "a stalled fleet must shed load");
+    assert_eq!(accepted + rejected, ATTEMPTS as u64);
+    assert_eq!(client.stats().rejected, rejected, "per-client tally");
+
+    let res = tier.shutdown().expect("clean shutdown");
+    assert_eq!(res.merged.rejected, rejected, "global-cap rejects land in the merged record");
+    assert_eq!(res.merged.metrics.total(), accepted, "accepted queries all resolve");
+    assert_eq!(res.merged.metrics.offered(), ATTEMPTS as u64);
+    let sum_rejected: u64 = res.per_shard.iter().map(|r| r.rejected).sum();
+    assert_eq!(sum_rejected, rejected, "rejects tallied against the routed shards");
+}
+
+#[test]
+fn window_snapshot_merge_property_trials() {
+    // Pure property trials — no cluster. For seeded random per-shard
+    // windows: merged counts are exact sums, merged quantiles stay inside
+    // the per-shard [min, max] hull, and qps adds.
+    let mut rng = Pcg64::new(0x3A9E);
+    let t0 = Instant::now();
+    for trial in 0..50 {
+        let shards = 2 + (rng.below(4) as usize); // 2..=5
+        let mut snaps: Vec<WindowSnapshot> = Vec::new();
+        let mut total_events = 0u64;
+        let mut total_rejects = 0u64;
+        let mut total_recovered = 0u64;
+        for _ in 0..shards {
+            let mut w = LatencyWindow::new(Duration::from_secs(60));
+            let events = 20 + rng.below(200);
+            for _ in 0..events {
+                let outcome = match rng.below(10) {
+                    0 => Outcome::Reconstructed,
+                    1 => Outcome::Replica,
+                    2 => Outcome::Default,
+                    _ => Outcome::Native,
+                };
+                if matches!(outcome, Outcome::Reconstructed | Outcome::Replica) {
+                    total_recovered += 1;
+                }
+                let latency = Duration::from_secs_f64(0.001 + rng.exponential(100.0));
+                w.record(outcome, latency, t0);
+            }
+            let rejects = rng.below(30);
+            w.record_rejects(rejects, t0);
+            total_events += events;
+            total_rejects += rejects;
+            snaps.push(w.snapshot(t0));
+        }
+
+        let merged = WindowSnapshot::merge_all(&snaps);
+        assert_eq!(merged.resolved, total_events, "trial {trial}: resolved adds");
+        assert_eq!(merged.rejected, total_rejects, "trial {trial}: rejected adds");
+        let offered = (total_events + total_rejects) as f64;
+        assert!(
+            (merged.reject_rate - total_rejects as f64 / offered).abs() < 1e-9,
+            "trial {trial}: reject rate recomputed from merged counts"
+        );
+        assert!(
+            (merged.recovery_rate * merged.resolved as f64 - total_recovered as f64).abs() < 1e-6,
+            "trial {trial}: recovery rate preserves the recovered count"
+        );
+        let sum_qps: f64 = snaps.iter().map(|s| s.qps).sum();
+        assert!((merged.qps - sum_qps).abs() < 1e-6 * sum_qps.max(1.0), "trial {trial}: qps adds");
+
+        // Every quantile stays inside the per-shard hull (all shards have
+        // events, so every input carries weight).
+        let picks: [(fn(&WindowSnapshot) -> f64, &str); 3] = [
+            (|s| s.p50_ms, "p50"),
+            (|s| s.p99_ms, "p99"),
+            (|s| s.p999_ms, "p99.9"),
+        ];
+        for (pick, name) in picks {
+            let lo = snaps.iter().map(pick).fold(f64::INFINITY, f64::min);
+            let hi = snaps.iter().map(pick).fold(f64::NEG_INFINITY, f64::max);
+            let got = pick(&merged);
+            assert!(
+                got >= lo - 1e-9 && got <= hi + 1e-9,
+                "trial {trial}: merged {name} {got} outside per-shard hull [{lo}, {hi}]"
+            );
+        }
+    }
+}
