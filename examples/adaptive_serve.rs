@@ -1,0 +1,150 @@
+//! Adaptive redundancy under a straggler burst — the rateless scheme's
+//! predictor watching a fault arrive and clear. A paced Poisson client
+//! drives one serving session in `mode: rateless` (k=2, r in [1, 2]);
+//! mid-run, *two* of the four deployed instances fail for a window (the
+//! undetected-zombie model of §5.1, twice over, so coding groups can
+//! lose both slots — beyond what fixed-r ParM could ever reconstruct).
+//! The periodic log shows the live windowed tail next to the scheme's
+//! telemetry: the unavailability estimate jumps when losses appear, the
+//! per-group parity count `r` ramps from the floor to the ceiling, and
+//! after the burst clears both decay back — redundancy priced to the
+//! cluster's actual health, not provisioned for the worst case.
+//!
+//! Run with: `cargo run --release --example adaptive_serve`
+//! Knobs: PARM_QUERIES (default 1500), PARM_HALFLIFE_MS (default 250).
+
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
+use parm::experiments::latency;
+use parm::util::rng::Pcg64;
+use parm::workload::QuerySource;
+
+fn env_or(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let n = env_or("PARM_QUERIES", 1500).max(200);
+    let halflife = Duration::from_millis(env_or("PARM_HALFLIFE_MS", 250).max(50));
+    let (k, r_min, r_max, m_inst) = (2usize, 1usize, 2usize, 4usize);
+
+    let manifest = Manifest::load_default()?;
+    let ds = manifest.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&manifest, ds)?;
+    let models = latency::load_models(&manifest, 1, k, r_max, false)?;
+
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Rateless { k, r_min, r_max, halflife },
+        &GPU,
+    );
+    cfg.m = m_inst;
+    cfg.shuffles = 1;
+    cfg.seed = 0xADAB;
+    cfg.slo = Some(Duration::from_millis(1500)); // unrecoverable queries default
+    cfg.metrics_window = Duration::from_secs(1); // responsive live tail
+
+    // Pace so the run lasts >= 4 s (several predictor half-lives on each
+    // side of the burst) without exceeding ~40% of modeled capacity.
+    let probe = source.queries[0].clone();
+    let measured = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
+    let mean = measured.as_secs_f64() * GPU.exec_scale.max(1.0);
+    let rate = (0.4 * m_inst as f64 / mean).min(n as f64 / 4.0);
+    let run_secs = n as f64 / rate;
+    let burst_at = Duration::from_secs_f64(run_secs * 0.35);
+    let burst_len = Duration::from_secs_f64(run_secs * 0.30);
+    // Instances 0 and 1 fail together: a two-deep straggler burst.
+    cfg.fault_schedule = vec![(0, burst_at, burst_len), (1, burst_at, burst_len)];
+    let mut handle = ServiceBuilder::new(cfg).build(&models, &source.queries[0])?;
+
+    println!(
+        "{n} queries at {rate:.0} qps over ~{run_secs:.1}s; instances 0+1 fail at \
+         t={:.1}s for {:.1}s (predictor half-life {halflife:?})\n",
+        burst_at.as_secs_f64(),
+        burst_len.as_secs_f64()
+    );
+    println!(
+        "{:>7} {:>9} {:>9} {:>9} {:>6} {:>9} {:>10}",
+        "t(s)", "resolved", "p99(ms)", "recovery", "r", "unavail", "overhead"
+    );
+
+    let start = Instant::now();
+    let mut rng = Pcg64::new(0x5EED);
+    let mut due = start;
+    let sample_every = Duration::from_millis(200);
+    let mut next_sample = start + sample_every;
+    let mut max_r_seen = 0usize;
+    for i in 0..n {
+        due += Duration::from_secs_f64(rng.exponential(rate));
+        loop {
+            let _ = handle.poll();
+            let now = Instant::now();
+            if now >= next_sample {
+                let w = handle.window_snapshot();
+                let t = handle.scheme_telemetry().expect("rateless exposes telemetry");
+                max_r_seen = max_r_seen.max(t.last_r);
+                let overhead = if t.groups_sealed > 0 {
+                    t.parity_jobs as f64 / t.groups_sealed as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "{:>7.1} {:>9} {:>9.2} {:>9.3} {:>6} {:>9.3} {:>10.3}",
+                    now.duration_since(start).as_secs_f64(),
+                    w.resolved,
+                    w.p99_ms,
+                    w.recovery_rate,
+                    t.last_r,
+                    t.unavailability,
+                    overhead,
+                );
+                next_sample += sample_every;
+            }
+            if now >= due {
+                break;
+            }
+            let wake = due.min(next_sample);
+            let now = Instant::now();
+            if wake > now {
+                std::thread::sleep((wake - now).min(Duration::from_millis(2)));
+            }
+        }
+        handle.submit(source.queries[(i as usize) % source.queries.len()].clone());
+    }
+    let _ = handle.drain();
+    let final_t = handle.scheme_telemetry().expect("telemetry");
+    let r_after_decay = final_t.last_r;
+    let res = handle.shutdown();
+
+    let mut metrics = res.metrics;
+    println!("\n{}", metrics.report("run total"));
+    println!(
+        "wall={:.1}s reconstructions={} dropped_jobs={} parity_overhead={:.3}",
+        res.wall.as_secs_f64(),
+        res.reconstructions,
+        res.dropped_jobs,
+        final_t.parity_jobs as f64 / final_t.groups_sealed.max(1) as f64,
+    );
+
+    assert!(
+        max_r_seen >= r_max,
+        "the straggler burst must ramp r to the ceiling (max seen {max_r_seen})"
+    );
+    println!("✓ r ramped to {max_r_seen} during the burst");
+    if r_after_decay == r_min {
+        println!("✓ r decayed back to the floor after the burst cleared");
+    } else {
+        println!(
+            "! r still at {r_after_decay} at the last sample (tail too short for \
+             full decay on this host)"
+        );
+    }
+    if res.reconstructions > 0 {
+        println!("✓ {} predictions recovered by parity decode", res.reconstructions);
+    }
+    Ok(())
+}

@@ -108,7 +108,10 @@ fn main() -> anyhow::Result<()> {
     };
     sleep_until(kill_at);
     tier.kill_instance(degraded, 0);
-    println!("t={:.1}s: killed shard {degraded} instance 0 (undetected zombie)", start.elapsed().as_secs_f64());
+    println!(
+        "t={:.1}s: killed shard {degraded} instance 0 (undetected zombie)",
+        start.elapsed().as_secs_f64()
+    );
     sleep_until(drain_at);
     tier.drain_shard(degraded);
     println!(

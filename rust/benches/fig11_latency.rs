@@ -7,21 +7,18 @@
 //! same operating points as the paper regardless of host speed.
 //!
 //! Besides the end-of-run aggregate rows, this bench also emits a
-//! **time series**: the live windowed p50/p99/p99.9 sampled periodically
-//! through a run in which one deployed instance is killed mid-way — the
-//! tail spikes at the fault and, under ParM, settles back as parity
-//! reconstructions absorb the dead instance's queries (emitted to
+//! **time series** (via the shared `run_fault_timeseries` scaffold): the
+//! live windowed p50/p99/p99.9 sampled periodically through a run in
+//! which one deployed instance is killed mid-way — the tail spikes at
+//! the fault and, under ParM, settles back as parity reconstructions
+//! absorb the dead instance's queries (emitted to
 //! `bench_out/fig11_timeseries.json` for Figure 11-style timeline plots).
 //!
 //! Env knobs: PARM_BENCH_QUERIES (default 12000), PARM_BENCH_UTILS,
 //! PARM_BENCH_TS_QUERIES (default 6000), PARM_BENCH_TS_SAMPLE_MS (250).
 
-use std::time::Duration;
-
 use parm::artifacts::Manifest;
 use parm::cluster::hardware;
-use parm::coordinator::encoder::Encoder;
-use parm::coordinator::service::{Mode, ServiceConfig};
 use parm::experiments::latency;
 
 fn env_u64(name: &str, default: u64) -> u64 {
@@ -61,37 +58,9 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // ---- time series across a fault event ----
-    let ts_n = env_u64("PARM_BENCH_TS_QUERIES", 6_000);
-    let sample = Duration::from_millis(env_u64("PARM_BENCH_TS_SAMPLE_MS", 250).max(1));
-    let models = latency::load_models(&m, 1, 2, 1, false)?;
-    let ds = m.dataset(latency::LATENCY_DATASET)?;
-    let source = parm::workload::QuerySource::from_dataset(&m, ds)?;
-    let probe = source.queries[0].clone();
-    let mean = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
-    let profile = &hardware::GPU;
-    let rate = 0.42 * profile.default_m as f64 / (mean.as_secs_f64() * profile.exec_scale.max(1.0));
-
-    let mut cfg = ServiceConfig::defaults(
-        Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
-        profile,
-    );
-    cfg.seed = 0xF16_11;
-    cfg.slo = Some(Duration::from_secs(2)); // backstop for doubly-lost groups
-    // A short window makes the timeline responsive: each sample reflects
-    // roughly the last second of traffic, so the fault transient shows as
-    // a spike instead of being averaged away.
-    cfg.metrics_window = Duration::from_secs(1);
-    // Kill one deployed instance ~40% of the way through the run.
-    let kill_at = Duration::from_secs_f64(0.4 * ts_n as f64 / rate);
-    cfg.fault_schedule = vec![(0, kill_at, Duration::ZERO)];
-    println!(
-        "\ntime series: {ts_n} queries at {rate:.0} qps, instance 0 dies at t={:.1}s",
-        kill_at.as_secs_f64()
-    );
-    let (row, series) =
-        latency::run_point_timeseries(&cfg, &models, &source, ts_n, rate, "parm-fault", sample)?;
-    latency::emit_timeseries("fig11_timeseries", &series);
-    println!("aggregate: {}", row.line());
+    // Time series across a fault event (default shuffle load).
+    latency::run_fault_timeseries(
+        &m, "fig11_timeseries", "parm-fault", 0.42, 4, false, 0xF16_11,
+    )?;
     Ok(())
 }

@@ -1,5 +1,14 @@
 //! Figure 13: ParM vs Equal-Resources under varying network imbalance —
 //! 2, 3, 4, 5 concurrent background shuffles on the GPU-profile cluster.
+//!
+//! Also emits a fault-event **time series** (`bench_out/fig13_timeseries.json`,
+//! via the shared `run_fault_timeseries` scaffold): the live windowed
+//! tail sampled through a run at the heaviest shuffle load with one
+//! deployed instance killed mid-way, so the shuffle-imbalance story can
+//! be read as a timeline.
+//!
+//! Env knobs: PARM_BENCH_QUERIES (default 12000),
+//! PARM_BENCH_TS_QUERIES (default 6000), PARM_BENCH_TS_SAMPLE_MS (250).
 
 use parm::artifacts::Manifest;
 use parm::cluster::hardware;
@@ -32,5 +41,10 @@ fn main() -> anyhow::Result<()> {
         rows.extend(r);
     }
     latency::emit("fig13_shuffles", &rows);
+
+    // Time series at the sweep's heaviest imbalance (5 shuffles).
+    latency::run_fault_timeseries(
+        &m, "fig13_timeseries", "parm-sh5-fault", 0.42, 5, false, 0xF16_13,
+    )?;
     Ok(())
 }

@@ -1,6 +1,14 @@
 //! Figure 14: light multitenancy (§5.2.4) — a co-located tenant on one
 //! ninth of instances at <5% load, no network imbalance. ParM vs
 //! Equal-Resources across query rates on the GPU-profile cluster.
+//!
+//! Also emits a fault-event **time series**
+//! (`bench_out/fig14_timeseries.json`, via the shared
+//! `run_fault_timeseries` scaffold): the live windowed tail sampled
+//! through a tenancy-only run with one deployed instance killed mid-way.
+//!
+//! Env knobs: PARM_BENCH_QUERIES (default 12000),
+//! PARM_BENCH_TS_QUERIES (default 6000), PARM_BENCH_TS_SAMPLE_MS (250).
 
 use parm::artifacts::Manifest;
 use parm::cluster::hardware;
@@ -26,5 +34,10 @@ fn main() -> anyhow::Result<()> {
         0xF16_14,
     )?;
     latency::emit("fig14_multitenancy", &rows);
+
+    // Time series: tenancy-only imbalance across a fault event.
+    latency::run_fault_timeseries(
+        &m, "fig14_timeseries", "parm-tenancy-fault", 0.45, 0, true, 0xF16_14,
+    )?;
     Ok(())
 }

@@ -1,0 +1,855 @@
+//! Adaptive redundancy: a learned straggler predictor driving a rateless
+//! parity scheme.
+//!
+//! ParM (§3) fixes its redundancy — one parity per k-query coding group —
+//! at deployment time. But the paper's own framing (encoder, parity
+//! model, decoder as interchangeable components) admits schemes whose
+//! redundancy *adapts* to observed cluster health: ApproxIFER-style
+//! rateless codes tolerate a variable number of stragglers, and NeRCC
+//! frames straggler resilience as regression over observed worker
+//! behavior. This module combines the two ideas:
+//!
+//! - [`StragglerPredictor`] learns, online, how unavailable the deployed
+//!   pool currently is: per-instance EWMA latencies plus exponentially
+//!   decayed slowdown/loss incidence counters, fed from the session's
+//!   completion callbacks (completions carry worker timestamps and
+//!   instance ids) and from coding-group outcomes (a reconstructed slot
+//!   means its own prediction never arrived in time; a group still
+//!   unresolved past the loss horizon means hard losses). From those it
+//!   publishes a per-pool unavailability estimate and — via a binomial
+//!   tail bound — a recommended per-group parity count.
+//! - [`RatelessScheme`] implements
+//!   [`crate::coordinator::scheme::RedundancyScheme`] with ParM's
+//!   accumulate-k-batches group structure, but chooses `r ∈ [r_min,
+//!   r_max]` *at group-seal time* from the predictor. Pools are
+//!   provisioned for `r_max` (topology is the ceiling); healthy clusters
+//!   pay `r_min` parities per group, and a straggler burst ramps `r`
+//!   toward `r_max` within a few predictor half-lives, then decays back.
+//!
+//! The decoder side needs nothing new: each group registers its own `r`
+//! with the shared [`GroupTracker`]
+//! ([`GroupTracker::register_with_r`]), and the r>1 Gaussian-elimination
+//! path in [`crate::coordinator::decoder`] reconstructs up to `r`
+//! unavailable predictions per group.
+//!
+//! The predictor is deliberately clock-free — every method takes the
+//! observation instant — so its ramp-up/decay behavior is testable
+//! without sleeping (see the unit tests below).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::SealedBatch;
+use crate::coordinator::coding::GroupTracker;
+use crate::coordinator::encoder::Encoder;
+use crate::coordinator::metrics::Outcome;
+use crate::coordinator::scheme::{
+    job, per_pool, DispatchPlan, PoolLayout, RedundancyScheme, Resolution, SchemeTelemetry,
+    Target,
+};
+use crate::runtime::instance::{Completion, JobKind};
+use crate::tensor::Tensor;
+
+// ------------------------------------------------------------------------
+// Straggler predictor
+// ------------------------------------------------------------------------
+
+/// Knobs of the [`StragglerPredictor`]. Only `halflife` is exposed in
+/// the JSON config / CLI (`predictor_halflife_ms`); the rest have
+/// defaults that match the paper's regime and can be set
+/// programmatically.
+#[derive(Clone, Debug)]
+pub struct PredictorConfig {
+    /// Half-life of the decayed incidence counters: how fast evidence of
+    /// past stragglers fades. Shorter = faster ramp-down after a burst.
+    pub halflife: Duration,
+    /// A completion slower than `slow_factor` x the pool's mean latency
+    /// counts as a slowdown event.
+    pub slow_factor: f64,
+    /// Weight of a slowdown event relative to a hard loss when
+    /// estimating unavailability.
+    pub slow_weight: f64,
+    /// Target residual probability that a coding group loses more slots
+    /// than its parities can recover; `recommend_r` picks the smallest r
+    /// meeting it.
+    pub target_miss: f64,
+    /// Prior unavailability assumed before any evidence arrives.
+    pub prior: f64,
+    /// Strength of the prior, in pseudo-observations. Larger = slower to
+    /// react to the first few events.
+    pub prior_strength: f64,
+}
+
+impl Default for PredictorConfig {
+    fn default() -> PredictorConfig {
+        PredictorConfig {
+            halflife: Duration::from_millis(1000),
+            slow_factor: 4.0,
+            slow_weight: 0.25,
+            target_miss: 0.02,
+            prior: 0.01,
+            prior_strength: 8.0,
+        }
+    }
+}
+
+/// Per-instance view kept by the predictor (observability surface).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InstanceStats {
+    /// EWMA of this instance's completion latency, in ms.
+    pub ewma_ms: f64,
+    /// Completions observed from this instance.
+    pub completions: u64,
+    /// Of those, how many were classified as slowdowns.
+    pub slow_events: u64,
+}
+
+/// Online estimator of deployed-pool unavailability.
+///
+/// State is a handful of exponentially time-decayed counters (`ok`,
+/// `slow`, `loss` events) plus per-instance latency EWMAs. All methods
+/// take the observation instant explicitly, so the estimator is a pure
+/// function of its inputs — property-testable without a clock, like
+/// [`GroupTracker`].
+pub struct StragglerPredictor {
+    cfg: PredictorConfig,
+    /// Decayed count of timely completions.
+    ok: f64,
+    /// Decayed count of slowdown events (late but arrived).
+    slow: f64,
+    /// Decayed count of hard losses (reconstructed or never arrived).
+    loss: f64,
+    /// EWMA of completion latency across the pool, in ms (0 until the
+    /// first observation).
+    mean_ms: f64,
+    /// Instant the decayed counters were last brought current.
+    last: Option<Instant>,
+    instances: HashMap<usize, InstanceStats>,
+}
+
+impl StragglerPredictor {
+    pub fn new(cfg: PredictorConfig) -> StragglerPredictor {
+        assert!(!cfg.halflife.is_zero(), "predictor half-life must be non-zero");
+        StragglerPredictor {
+            cfg,
+            ok: 0.0,
+            slow: 0.0,
+            loss: 0.0,
+            mean_ms: 0.0,
+            last: None,
+            instances: HashMap::new(),
+        }
+    }
+
+    /// Multiplier that brings the decayed counters current at `now`.
+    fn decay_factor(&self, now: Instant) -> f64 {
+        match self.last {
+            None => 1.0,
+            Some(last) => {
+                let dt = now.saturating_duration_since(last).as_secs_f64();
+                0.5f64.powf(dt / self.cfg.halflife.as_secs_f64())
+            }
+        }
+    }
+
+    fn decay_to(&mut self, now: Instant) {
+        let f = self.decay_factor(now);
+        self.ok *= f;
+        self.slow *= f;
+        self.loss *= f;
+        // `last` only moves forward: out-of-order worker timestamps must
+        // not re-inflate already-decayed counts.
+        if self.last.map_or(true, |l| now > l) {
+            self.last = Some(now);
+        }
+    }
+
+    /// Feed one completion: `latency` is dispatch -> worker-timestamped
+    /// finish for `instance`. Classifies it as timely or a slowdown
+    /// against the pool's running mean.
+    pub fn observe_completion(&mut self, instance: usize, latency: Duration, now: Instant) {
+        self.decay_to(now);
+        let ms = latency.as_secs_f64() * 1e3;
+        let slow = self.mean_ms > 0.0 && ms > self.cfg.slow_factor * self.mean_ms;
+        if slow {
+            self.slow += 1.0;
+        } else {
+            self.ok += 1.0;
+        }
+        self.mean_ms = if self.mean_ms == 0.0 {
+            ms
+        } else {
+            self.mean_ms + 0.2 * (ms - self.mean_ms)
+        };
+        let inst = self.instances.entry(instance).or_default();
+        inst.completions += 1;
+        if slow {
+            inst.slow_events += 1;
+        }
+        inst.ewma_ms =
+            if inst.completions == 1 { ms } else { inst.ewma_ms + 0.3 * (ms - inst.ewma_ms) };
+    }
+
+    /// Feed `n` hard losses: predictions that never arrived in time (a
+    /// reconstructed slot, or a group still unresolved past the loss
+    /// horizon).
+    pub fn observe_losses(&mut self, n: usize, now: Instant) {
+        self.decay_to(now);
+        self.loss += n as f64;
+    }
+
+    /// Current per-pool unavailability estimate in `[0, 0.95]`: the
+    /// decayed loss (+ discounted slowdown) incidence, regularized by the
+    /// prior.
+    pub fn unavailability(&self, now: Instant) -> f64 {
+        let f = self.decay_factor(now);
+        let (ok, slow, loss) = (self.ok * f, self.slow * f, self.loss * f);
+        let c = &self.cfg;
+        let p = (loss + c.slow_weight * slow + c.prior * c.prior_strength)
+            / (ok + slow + loss + c.prior_strength);
+        p.clamp(0.0, 0.95)
+    }
+
+    /// Smallest `r` in `[r_min, r_max]` such that the probability of a
+    /// k-slot coding group losing more than `r` slots (binomial at the
+    /// current unavailability estimate) stays under `target_miss`;
+    /// `r_max` if none does.
+    pub fn recommend_r(&self, k: usize, r_min: usize, r_max: usize, now: Instant) -> usize {
+        let p = self.unavailability(now);
+        for r in r_min..=r_max {
+            if binomial_tail(k, p, r) <= self.cfg.target_miss {
+                return r;
+            }
+        }
+        r_max
+    }
+
+    /// Pool-wide EWMA completion latency in ms (0 before any completion).
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.mean_ms
+    }
+
+    /// Per-instance stats, if this instance has completed anything.
+    pub fn instance(&self, id: usize) -> Option<InstanceStats> {
+        self.instances.get(&id).copied()
+    }
+}
+
+/// P(X > r) for X ~ Binomial(k, p). k is a coding-group size (<= 8 in
+/// every supported config), so the exact sum is cheapest.
+fn binomial_tail(k: usize, p: f64, r: usize) -> f64 {
+    if r >= k {
+        return 0.0;
+    }
+    let q = 1.0 - p;
+    let mut head = 0.0f64;
+    for i in 0..=r {
+        head += choose(k, i) * p.powi(i as i32) * q.powi((k - i) as i32);
+    }
+    (1.0 - head).max(0.0)
+}
+
+fn choose(n: usize, k: usize) -> f64 {
+    let k = k.min(n - k);
+    let mut c = 1.0f64;
+    for i in 0..k {
+        c = c * (n - i) as f64 / (i + 1) as f64;
+    }
+    c
+}
+
+// ------------------------------------------------------------------------
+// Rateless scheme
+// ------------------------------------------------------------------------
+
+/// Configuration of [`RatelessScheme`].
+#[derive(Clone, Debug)]
+pub struct RatelessConfig {
+    /// Coding-group size (the paper's k).
+    pub k: usize,
+    /// Redundancy floor: every group gets at least this many parities.
+    pub r_min: usize,
+    /// Redundancy ceiling: pools are provisioned for this many parity
+    /// pools; no group ever gets more.
+    pub r_max: usize,
+    pub predictor: PredictorConfig,
+    /// A sealed group still unresolved after this long counts its
+    /// missing slots as hard losses (raised automatically when the
+    /// observed service time is larger). Groups are abandoned — their
+    /// queries left to the session SLO — at 4x this horizon, which
+    /// bounds tracker memory under persistent faults.
+    pub miss_horizon: Duration,
+}
+
+impl RatelessConfig {
+    /// The declarative form used by `mode: "rateless"` configs: bounds
+    /// plus the predictor half-life, defaults for the rest.
+    pub fn new(k: usize, r_min: usize, r_max: usize, halflife: Duration) -> RatelessConfig {
+        RatelessConfig {
+            k,
+            r_min,
+            r_max,
+            predictor: PredictorConfig { halflife, ..PredictorConfig::default() },
+            miss_horizon: (halflife * 2).max(Duration::from_millis(200)),
+        }
+    }
+}
+
+/// Bookkeeping for the stale-group sweep.
+struct SealedMeta {
+    group: u64,
+    at: Instant,
+    losses_counted: bool,
+}
+
+/// Rateless redundancy: k-batch coding groups encoded into a
+/// predictor-chosen number of parities, decoded by the shared r>1 path.
+///
+/// Group structure and orphan handling mirror
+/// [`crate::coordinator::scheme::ParmScheme`]; what differs is that the
+/// group's parity count is decided per group at seal time, and every
+/// completion doubles as a training observation for the predictor.
+pub struct RatelessScheme {
+    cfg: RatelessConfig,
+    /// `r_max` encoders with §3.5 weight rows; group `g` with redundancy
+    /// `r` uses the first `r`.
+    encoders: Vec<Encoder>,
+    tracker: GroupTracker,
+    /// The open (unsealed) coding group's batches, in slot order.
+    accum: Vec<(Vec<u64>, Tensor)>,
+    /// Id of the open group (ids below it are sealed & registered).
+    next_group: u64,
+    /// Completions that raced ahead of their group's registration.
+    orphans: HashMap<u64, Vec<Completion>>,
+    predictor: StragglerPredictor,
+    /// (group, slot) -> data-job dispatch instant, for latency
+    /// observations; cleaned by the stale sweep once a group retires.
+    dispatch_at: HashMap<(u64, usize), Instant>,
+    /// Sealed groups awaiting the stale sweep, oldest first.
+    sealed: VecDeque<SealedMeta>,
+    /// Groups whose missing slots the sweep already counted as losses —
+    /// a late reconstruction of such a slot must not count a second
+    /// time. Entries are dropped when the group's meta retires.
+    loss_counted: HashSet<u64>,
+    last_sweep: Instant,
+    last_r: usize,
+    groups_sealed: u64,
+    parity_jobs: u64,
+}
+
+/// Throttle on the stale-group sweep.
+const SWEEP_EVERY: Duration = Duration::from_millis(25);
+
+impl RatelessScheme {
+    pub fn new(cfg: RatelessConfig) -> RatelessScheme {
+        assert!(cfg.k >= 1, "coding group size must be >= 1");
+        assert!(
+            cfg.r_min >= 1 && cfg.r_min <= cfg.r_max && cfg.r_max <= cfg.k,
+            "need 1 <= r_min <= r_max <= k, got r_min={} r_max={} k={}",
+            cfg.r_min,
+            cfg.r_max,
+            cfg.k
+        );
+        let encoders: Vec<Encoder> =
+            (0..cfg.r_max).map(|ri| Encoder::sum_r(cfg.k, ri)).collect();
+        RatelessScheme {
+            tracker: GroupTracker::new(cfg.k, &encoders),
+            predictor: StragglerPredictor::new(cfg.predictor.clone()),
+            encoders,
+            accum: Vec::new(),
+            next_group: 0,
+            orphans: HashMap::new(),
+            dispatch_at: HashMap::new(),
+            sealed: VecDeque::new(),
+            loss_counted: HashSet::new(),
+            last_sweep: Instant::now(),
+            last_r: cfg.r_min,
+            groups_sealed: 0,
+            parity_jobs: 0,
+            cfg,
+        }
+    }
+
+    /// Read access to the predictor (tests, dashboards).
+    pub fn predictor(&self) -> &StragglerPredictor {
+        &self.predictor
+    }
+
+    fn registered(&self, group: u64) -> bool {
+        group < self.next_group
+    }
+
+    fn apply_tracked(&mut self, c: Completion, out: &mut Vec<Resolution>) {
+        let at = c.finished_at;
+        let (group, res) = match c.kind {
+            JobKind::Data { group, slot } => {
+                // Every data completion is a predictor observation: its
+                // latency (dispatch -> worker-stamped finish) classifies
+                // the instance as timely or slow.
+                if let Some(t0) = self.dispatch_at.remove(&(group, slot)) {
+                    self.predictor.observe_completion(
+                        c.instance,
+                        at.saturating_duration_since(t0),
+                        at,
+                    );
+                }
+                (group, self.tracker.on_data(group, slot, c.output))
+            }
+            JobKind::Parity { group, r_index } => {
+                (group, self.tracker.on_parity(group, r_index, c.output))
+            }
+            _ => return,
+        };
+        // If the stale sweep already counted this group's missing slots
+        // as losses, a late reconstruction must not count them again.
+        let already_counted = self.loss_counted.contains(&group);
+        for (_slot, ids, _out, reconstructed) in res.resolved {
+            if reconstructed && !already_counted {
+                // A reconstructed slot's own prediction never arrived in
+                // time: one hard-loss observation.
+                self.predictor.observe_losses(1, at);
+            }
+            out.push(Resolution {
+                query_ids: ids,
+                at,
+                outcome: if reconstructed {
+                    Outcome::Reconstructed
+                } else {
+                    Outcome::Native
+                },
+            });
+        }
+    }
+
+    /// Turn groups stuck past the loss horizon into predictor
+    /// observations (and eventually abandon them so memory stays bounded
+    /// under persistent faults — their queries default via the session
+    /// SLO, and late-arriving data still resolves natively through
+    /// `on_completion`'s immediate path).
+    fn sweep_stale(&mut self, now: Instant) {
+        if now.saturating_duration_since(self.last_sweep) < SWEEP_EVERY {
+            return;
+        }
+        self.last_sweep = now;
+        // Raise the horizon when the cluster itself is slow, so healthy
+        // but slow groups are not misread as losses.
+        let mean = self.predictor.mean_latency_ms();
+        let horizon = self
+            .cfg
+            .miss_horizon
+            .max(Duration::from_secs_f64(8.0 * mean / 1e3));
+        let abandon_after = horizon * 4;
+        let mut keep = VecDeque::with_capacity(self.sealed.len());
+        while let Some(mut meta) = self.sealed.pop_front() {
+            let age = now.saturating_duration_since(meta.at);
+            if !self.tracker.contains(meta.group) {
+                // Fully resolved (or already abandoned): once old enough
+                // that no in-flight completion can still reference it,
+                // drop any dispatch stamps its zombies never consumed.
+                if age > horizon {
+                    for s in 0..self.cfg.k {
+                        self.dispatch_at.remove(&(meta.group, s));
+                    }
+                    self.loss_counted.remove(&meta.group);
+                } else {
+                    keep.push_back(meta);
+                }
+                continue;
+            }
+            if age > horizon && !meta.losses_counted {
+                let unresolved = self.tracker.unresolved_slots(meta.group);
+                if !unresolved.is_empty() {
+                    self.predictor.observe_losses(unresolved.len(), now);
+                    self.loss_counted.insert(meta.group);
+                }
+                meta.losses_counted = true;
+            }
+            if age > abandon_after {
+                self.tracker.abandon(meta.group);
+                for s in 0..self.cfg.k {
+                    self.dispatch_at.remove(&(meta.group, s));
+                }
+                self.loss_counted.remove(&meta.group);
+                continue;
+            }
+            keep.push_back(meta);
+        }
+        self.sealed = keep;
+    }
+}
+
+impl RedundancyScheme for RatelessScheme {
+    fn name(&self) -> &'static str {
+        "rateless"
+    }
+
+    fn extra_instances(&self, m: usize) -> usize {
+        per_pool(m, self.cfg.k) * self.cfg.r_max
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        let per = per_pool(m, self.cfg.k);
+        PoolLayout {
+            deployed: (0..m).collect(),
+            parity: (0..self.cfg.r_max)
+                .map(|ri| (m + ri * per..m + (ri + 1) * per).collect())
+                .collect(),
+            approx: None,
+        }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let mut plan = DispatchPlan::default();
+        let now = Instant::now();
+        let gid = self.next_group;
+        let slot = self.accum.len();
+        self.dispatch_at.insert((gid, slot), now);
+        plan.jobs
+            .push((Target::Deployed, job(JobKind::Data { group: gid, slot }, &batch)));
+        self.accum.push((batch.query_ids, batch.input));
+
+        if self.accum.len() == self.cfg.k {
+            // Seal: pick r from the predictor, register, encode, dispatch.
+            let r = self
+                .predictor
+                .recommend_r(self.cfg.k, self.cfg.r_min, self.cfg.r_max, now);
+            self.last_r = r;
+            self.groups_sealed += 1;
+            let ids: Vec<Vec<u64>> = self.accum.iter().map(|(i, _)| i.clone()).collect();
+            self.tracker.register_with_r(gid, ids, r);
+            self.next_group += 1;
+            self.sealed
+                .push_back(SealedMeta { group: gid, at: now, losses_counted: false });
+            let inputs: Vec<&Tensor> = self.accum.iter().map(|(_, t)| t).collect();
+            for (ri, enc) in self.encoders.iter().take(r).enumerate() {
+                match enc.encode_batches(&inputs) {
+                    Ok(parity) => {
+                        self.parity_jobs += 1;
+                        plan.jobs.push((
+                            Target::Parity(ri),
+                            crate::runtime::instance::Job {
+                                kind: JobKind::Parity { group: gid, r_index: ri },
+                                input: parity,
+                                query_ids: Vec::new(),
+                                dispatched_at: now,
+                            },
+                        ));
+                    }
+                    Err(e) => log::error!("rateless encode failed: {e}"),
+                }
+            }
+            self.accum.clear();
+            if let Some(cs) = self.orphans.remove(&gid) {
+                for c in cs {
+                    self.apply_tracked(c, &mut plan.resolutions);
+                }
+            }
+        }
+        self.sweep_stale(now);
+        plan
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        let mut out = Vec::new();
+        match c.kind {
+            JobKind::Data { group, .. } => {
+                // Predictions from model instances go straight back to
+                // clients, independent of coding-group state (§3.1).
+                out.push(Resolution {
+                    query_ids: c.query_ids.clone(),
+                    at: c.finished_at,
+                    outcome: Outcome::Native,
+                });
+                if self.registered(group) {
+                    self.apply_tracked(c, &mut out);
+                } else {
+                    self.orphans.entry(group).or_default().push(c);
+                }
+            }
+            JobKind::Parity { group, .. } => {
+                if self.registered(group) {
+                    self.apply_tracked(c, &mut out);
+                } else {
+                    self.orphans.entry(group).or_default().push(c);
+                }
+            }
+            JobKind::Replica { .. } | JobKind::Background => {}
+        }
+        self.sweep_stale(Instant::now());
+        out
+    }
+
+    fn reconstructions(&self) -> u64 {
+        self.tracker.reconstructions
+    }
+
+    fn telemetry(&self) -> Option<SchemeTelemetry> {
+        Some(SchemeTelemetry {
+            last_r: self.last_r,
+            unavailability: self.predictor.unavailability(Instant::now()),
+            groups_sealed: self.groups_sealed,
+            parity_jobs: self.parity_jobs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn predictor(halflife_ms: u64) -> StragglerPredictor {
+        StragglerPredictor::new(PredictorConfig {
+            halflife: Duration::from_millis(halflife_ms),
+            ..PredictorConfig::default()
+        })
+    }
+
+    #[test]
+    fn binomial_tail_sanity() {
+        // P(X > 1) for X ~ B(2, p) is p^2.
+        assert!((binomial_tail(2, 0.5, 1) - 0.25).abs() < 1e-12);
+        assert!((binomial_tail(2, 0.1, 1) - 0.01).abs() < 1e-12);
+        // r >= k can never be exceeded.
+        assert_eq!(binomial_tail(2, 0.9, 2), 0.0);
+        // P(X > 0) = 1 - (1-p)^k.
+        let p = 0.3;
+        assert!((binomial_tail(3, p, 0) - (1.0 - (1.0 - p).powi(3))).abs() < 1e-12);
+    }
+
+    /// The predictor's ramp is a pure function of timestamped
+    /// observations: misses push the recommendation up, the half-life
+    /// decays it back — no sleeping needed to test either direction.
+    #[test]
+    fn predictor_ramps_up_on_losses_and_decays_back() {
+        let hl = 100u64;
+        let mut p = predictor(hl);
+        let base = Instant::now();
+        assert_eq!(p.recommend_r(2, 1, 2, base), 1, "prior alone stays at the floor");
+
+        for i in 0..50 {
+            p.observe_completion(i % 4, Duration::from_millis(10), base);
+        }
+        assert_eq!(p.recommend_r(2, 1, 2, base), 1, "healthy traffic stays at the floor");
+        let healthy = p.unavailability(base);
+        assert!(healthy < 0.05, "healthy estimate ~prior, got {healthy}");
+
+        // Burst: a third of recent slots are hard losses.
+        p.observe_losses(25, base);
+        let burst = p.unavailability(base);
+        assert!(burst > 0.2, "losses must raise the estimate, got {burst}");
+        assert_eq!(p.recommend_r(2, 1, 2, base), 2, "burst ramps r to the ceiling");
+
+        // 20 half-lives later the evidence has decayed away.
+        let later = base + Duration::from_millis(20 * hl);
+        assert!(p.unavailability(later) < 0.05);
+        assert_eq!(p.recommend_r(2, 1, 2, later), 1, "estimate decays back to the floor");
+    }
+
+    #[test]
+    fn predictor_classifies_slowdowns_per_instance() {
+        let mut p = predictor(1000);
+        let base = Instant::now();
+        for _ in 0..20 {
+            p.observe_completion(0, Duration::from_millis(10), base);
+        }
+        // Instance 1 answers 10x slower than the pool mean: slowdowns.
+        for _ in 0..5 {
+            p.observe_completion(1, Duration::from_millis(100), base);
+        }
+        let healthy = p.instance(0).unwrap();
+        let slowpoke = p.instance(1).unwrap();
+        assert_eq!(healthy.slow_events, 0);
+        assert!(slowpoke.slow_events > 0, "10x-mean completions classify as slow");
+        assert!(slowpoke.ewma_ms > healthy.ewma_ms);
+        // Slowdowns raise the estimate, but less than hard losses would.
+        let with_slow = p.unavailability(base);
+        assert!(with_slow > 0.005 && with_slow < 0.5, "got {with_slow}");
+    }
+
+    #[test]
+    fn predictor_tolerates_out_of_order_timestamps() {
+        let mut p = predictor(100);
+        let base = Instant::now();
+        p.observe_losses(10, base + Duration::from_millis(500));
+        // A worker-stamped completion from the past must not panic or
+        // re-inflate decayed counts.
+        p.observe_completion(0, Duration::from_millis(5), base);
+        assert!(p.unavailability(base + Duration::from_millis(500)) > 0.1);
+    }
+
+    fn sealed(ids: Vec<u64>, v: f32) -> SealedBatch {
+        SealedBatch {
+            input: Tensor::filled(vec![ids.len().max(1), 2], v),
+            query_ids: ids,
+            oldest_arrival: Instant::now(),
+        }
+    }
+
+    fn completion(kind: JobKind, ids: Vec<u64>, out: Tensor) -> Completion {
+        Completion {
+            kind,
+            instance: 0,
+            query_ids: ids,
+            output: out,
+            finished_at: Instant::now(),
+            exec_time: Duration::ZERO,
+        }
+    }
+
+    fn scheme(k: usize, r_min: usize, r_max: usize) -> RatelessScheme {
+        RatelessScheme::new(RatelessConfig::new(
+            k,
+            r_min,
+            r_max,
+            Duration::from_millis(200),
+        ))
+    }
+
+    #[test]
+    fn healthy_group_seals_with_r_min_parities() {
+        let mut s = scheme(2, 1, 2);
+        let p1 = s.plan_dispatch(sealed(vec![0], 1.0));
+        assert_eq!(p1.jobs.len(), 1, "first batch: data only");
+        let p2 = s.plan_dispatch(sealed(vec![1], 2.0));
+        // No straggler evidence yet: r = r_min = 1 parity.
+        assert_eq!(p2.jobs.len(), 2, "data + r_min parities");
+        assert!(matches!(p2.jobs[1].0, Target::Parity(0)));
+        assert!(matches!(p2.jobs[1].1.kind, JobKind::Parity { group: 0, r_index: 0 }));
+        // First parity weights are all-ones: sum of the two batches.
+        assert_eq!(p2.jobs[1].1.input.data()[0], 3.0);
+        let t = s.telemetry().unwrap();
+        assert_eq!((t.last_r, t.groups_sealed, t.parity_jobs), (1, 1, 1));
+    }
+
+    #[test]
+    fn losses_ramp_next_groups_to_more_parities() {
+        let mut s = scheme(2, 1, 2);
+        // Pump straggler evidence straight into the predictor (the unit
+        // seam; the end-to-end path is covered by tests/adaptive.rs).
+        s.predictor.observe_losses(30, Instant::now());
+        let _ = s.plan_dispatch(sealed(vec![0], 1.0));
+        let plan = s.plan_dispatch(sealed(vec![1], 2.0));
+        assert_eq!(plan.jobs.len(), 3, "data + 2 parities under a burst");
+        assert!(matches!(plan.jobs[1].1.kind, JobKind::Parity { group: 0, r_index: 0 }));
+        assert!(matches!(plan.jobs[2].1.kind, JobKind::Parity { group: 0, r_index: 1 }));
+        // §3.5 weights on the second parity: X1 + 2*X2 = 1 + 2*2 = 5.
+        assert_eq!(plan.jobs[2].1.input.data()[0], 5.0);
+        let t = s.telemetry().unwrap();
+        assert_eq!(t.last_r, 2);
+        assert_eq!(t.parity_jobs, 2);
+
+        // An r=2 group recovers a double loss entirely from parities.
+        let r1 = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 0 },
+            vec![],
+            Tensor::new(vec![1, 2], vec![3.0, 3.0]).unwrap(),
+        ));
+        assert!(r1.is_empty(), "one parity cannot decode two losses");
+        let r2 = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 1 },
+            vec![],
+            Tensor::new(vec![1, 2], vec![5.0, 5.0]).unwrap(),
+        ));
+        let recon: Vec<_> =
+            r2.iter().filter(|r| r.outcome == Outcome::Reconstructed).collect();
+        assert_eq!(recon.len(), 2, "both slots reconstructed");
+        assert_eq!(s.reconstructions(), 2);
+    }
+
+    #[test]
+    fn reconstruction_feeds_the_predictor() {
+        let mut s = scheme(2, 1, 2);
+        let _ = s.plan_dispatch(sealed(vec![10], 0.0));
+        let _ = s.plan_dispatch(sealed(vec![11], 0.0));
+        let before = s.predictor.unavailability(Instant::now());
+        let _ = s.on_completion(completion(
+            JobKind::Data { group: 0, slot: 0 },
+            vec![10],
+            Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap(),
+        ));
+        let r = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 0 },
+            vec![],
+            Tensor::new(vec![1, 2], vec![4.0, 6.0]).unwrap(),
+        ));
+        assert!(r.iter().any(|x| x.outcome == Outcome::Reconstructed));
+        let after = s.predictor.unavailability(Instant::now());
+        assert!(
+            after > before,
+            "a reconstructed slot is a loss observation ({before} -> {after})"
+        );
+    }
+
+    /// Regression: a slot the stale sweep already counted as lost must
+    /// not count a second time when a late parity reconstructs it.
+    #[test]
+    fn sweep_counted_losses_not_double_counted_on_late_decode() {
+        // Long half-life so decay is negligible over the test; short
+        // horizon so the sweep fires quickly.
+        let mut cfg = RatelessConfig::new(2, 1, 2, Duration::from_secs(5));
+        cfg.miss_horizon = Duration::from_millis(40);
+        let mut s = RatelessScheme::new(cfg);
+        let _ = s.plan_dispatch(sealed(vec![0], 0.0));
+        let _ = s.plan_dispatch(sealed(vec![1], 0.0)); // seals group 0
+        // Both slots stay lost past the horizon: the sweep counts them.
+        std::thread::sleep(Duration::from_millis(70));
+        let _ = s.plan_dispatch(sealed(vec![2], 0.0)); // runs the sweep
+        let swept = s.predictor.unavailability(Instant::now());
+        assert!(swept > 0.1, "sweep must observe the stuck group, got {swept}");
+        // The data for slot 0 and the parity finally straggle in; the
+        // parity reconstructs slot 1 — already counted, so the estimate
+        // must not rise further (the ok observation even lowers it).
+        let _ = s.on_completion(completion(
+            JobKind::Data { group: 0, slot: 0 },
+            vec![0],
+            Tensor::new(vec![1, 2], vec![1.0, 1.0]).unwrap(),
+        ));
+        let r = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 0 },
+            vec![],
+            Tensor::new(vec![1, 2], vec![3.0, 3.0]).unwrap(),
+        ));
+        assert!(r.iter().any(|x| x.outcome == Outcome::Reconstructed));
+        let after = s.predictor.unavailability(Instant::now());
+        assert!(
+            after <= swept,
+            "late decode of swept losses must not re-count them ({swept} -> {after})"
+        );
+    }
+
+    #[test]
+    fn orphan_completions_buffer_until_seal() {
+        let mut s = scheme(2, 1, 2);
+        let _ = s.plan_dispatch(sealed(vec![0], 0.0));
+        let r = s.on_completion(completion(
+            JobKind::Data { group: 0, slot: 0 },
+            vec![0],
+            Tensor::new(vec![1, 2], vec![1.0, 1.0]).unwrap(),
+        ));
+        assert_eq!(r.len(), 1, "native resolution still immediate");
+        let plan = s.plan_dispatch(sealed(vec![1], 0.0));
+        assert!(plan.resolutions.iter().all(|x| x.outcome == Outcome::Native));
+        let r = s.on_completion(completion(
+            JobKind::Parity { group: 0, r_index: 0 },
+            vec![],
+            Tensor::new(vec![1, 2], vec![3.0, 3.0]).unwrap(),
+        ));
+        let rec = r.iter().find(|x| x.outcome == Outcome::Reconstructed).unwrap();
+        assert_eq!(rec.query_ids, vec![1]);
+    }
+
+    #[test]
+    fn config_bounds_are_enforced() {
+        for (k, r_min, r_max) in [(2usize, 0usize, 1usize), (2, 2, 1), (2, 1, 3)] {
+            let res = std::panic::catch_unwind(|| {
+                RatelessScheme::new(RatelessConfig::new(
+                    k,
+                    r_min,
+                    r_max,
+                    Duration::from_millis(100),
+                ))
+            });
+            assert!(res.is_err(), "k={k} r_min={r_min} r_max={r_max} must be rejected");
+        }
+    }
+}

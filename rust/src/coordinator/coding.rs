@@ -12,6 +12,12 @@
 //! [`crate::coordinator::scheme::ParmScheme`], which feeds it from the
 //! session's dispatch/completion callbacks; the decode math itself lives
 //! in [`crate::coordinator::decoder`].
+//!
+//! Groups do not all have to carry the same redundancy: a tracker built
+//! with `r_max` encoders can register any group with `r <= r_max`
+//! parities ([`GroupTracker::register_with_r`]), which is what lets the
+//! adaptive rateless scheme ([`crate::coordinator::adaptive`]) pick a
+//! per-group parity count at seal time while sharing this bookkeeping.
 
 use std::collections::HashMap;
 
@@ -84,19 +90,55 @@ impl GroupTracker {
         self.groups.len()
     }
 
-    /// Register a sealed group (slot -> query ids, in dispatch order).
+    /// Register a sealed group (slot -> query ids, in dispatch order)
+    /// using every configured parity.
     pub fn register(&mut self, id: u64, query_ids: Vec<Vec<u64>>) {
+        let r = self.weights.len();
+        self.register_with_r(id, query_ids, r);
+    }
+
+    /// Register a sealed group that will receive only the first `r` of
+    /// the configured parities — the per-group-r form used by adaptive
+    /// schemes whose redundancy is chosen at seal time. Completions for
+    /// parity indices `>= r` are ignored for this group.
+    pub fn register_with_r(&mut self, id: u64, query_ids: Vec<Vec<u64>>, r: usize) {
         assert_eq!(query_ids.len(), self.k, "group must have k slots");
+        assert!(
+            r >= 1 && r <= self.weights.len(),
+            "group r={r} outside 1..={}",
+            self.weights.len()
+        );
         self.groups.insert(
             id,
             GroupState {
                 id,
                 data_outs: (0..self.k).map(|_| None).collect(),
-                parity_outs: (0..self.weights.len()).map(|_| None).collect(),
+                parity_outs: (0..r).map(|_| None).collect(),
                 query_ids,
                 resolved: vec![false; self.k],
             },
         );
+    }
+
+    /// Whether a group is still tracked (registered and not fully
+    /// resolved or abandoned).
+    pub fn contains(&self, group: u64) -> bool {
+        self.groups.contains_key(&group)
+    }
+
+    /// Parity count this group was registered with (None once gone).
+    pub fn group_r(&self, group: u64) -> Option<usize> {
+        self.groups.get(&group).map(|g| g.parity_outs.len())
+    }
+
+    /// Slots of a tracked group that have not resolved yet (empty when
+    /// the group is gone). Used by adaptive schemes to turn stale groups
+    /// into straggler-predictor loss observations.
+    pub fn unresolved_slots(&self, group: u64) -> Vec<usize> {
+        match self.groups.get(&group) {
+            Some(g) => (0..self.k).filter(|&i| !g.resolved[i]).collect(),
+            None => Vec::new(),
+        }
     }
 
     /// Feed a deployed-model completion for (group, slot).
@@ -105,6 +147,10 @@ impl GroupTracker {
         let Some(g) = self.groups.get_mut(&group) else {
             return res; // group already fully resolved and evicted
         };
+        if slot >= g.data_outs.len() {
+            log::warn!("group {group}: data completion for slot {slot} out of range");
+            return res;
+        }
         if g.data_outs[slot].is_none() {
             g.data_outs[slot] = Some(output);
         }
@@ -128,6 +174,13 @@ impl GroupTracker {
         let Some(g) = self.groups.get_mut(&group) else {
             return res;
         };
+        if r_index >= g.parity_outs.len() {
+            // A parity beyond this group's registered r (possible when an
+            // adaptive scheme lowered r between groups): ignore, never
+            // panic — the group decodes from the parities it does carry.
+            log::debug!("group {group}: parity {r_index} beyond group r, ignored");
+            return res;
+        }
         if g.parity_outs[r_index].is_none() {
             g.parity_outs[r_index] = Some(output);
         }
@@ -275,6 +328,49 @@ mod tests {
         tr.abandon(9);
         assert_eq!(tr.open_groups(), 0);
         assert!(tr.on_data(9, 0, t(vec![1.])).resolved.is_empty());
+    }
+
+    #[test]
+    fn per_group_r_limits_decode_and_never_panics() {
+        // Tracker provisioned for r_max=2, but this group registered with
+        // r=1: the second parity must be ignored, so two losses are
+        // undecodable (they default via the session SLO) — and nothing
+        // panics along the way.
+        let encs = [Encoder::sum_r(2, 0), Encoder::sum_r(2, 1)];
+        let mut tr = GroupTracker::new(2, &encs);
+        tr.register_with_r(5, vec![vec![1], vec![2]], 1);
+        assert_eq!(tr.group_r(5), Some(1));
+        let r = tr.on_parity(5, 0, t(vec![3.]));
+        assert!(r.resolved.is_empty(), "one parity cannot decode two losses");
+        // A parity index beyond the group's r is ignored, not a panic.
+        let r = tr.on_parity(5, 1, t(vec![5.]));
+        assert!(r.resolved.is_empty());
+        assert_eq!(tr.unresolved_slots(5), vec![0, 1]);
+        assert_eq!(tr.reconstructions, 0);
+        // One data arrival + the single parity decodes the remaining loss.
+        let r = tr.on_data(5, 0, t(vec![1.]));
+        assert_eq!(r.resolved.len(), 2, "native + reconstruction");
+        assert!(r.resolved.iter().any(|x| x.3 && x.0 == 1));
+        assert!(!tr.contains(5), "fully resolved group evicted");
+    }
+
+    #[test]
+    fn variable_r_groups_coexist_in_one_tracker() {
+        let encs = [Encoder::sum_r(2, 0), Encoder::sum_r(2, 1)];
+        let mut tr = GroupTracker::new(2, &encs);
+        tr.register_with_r(1, vec![vec![10], vec![11]], 1);
+        tr.register_with_r(2, vec![vec![20], vec![21]], 2);
+        // Group 2 (r=2) recovers a double loss from its two parities...
+        tr.on_parity(2, 0, t(vec![3.])); // f1 + f2
+        let r = tr.on_parity(2, 1, t(vec![5.])); // f1 + 2*f2
+        assert_eq!(r.resolved.len(), 2);
+        assert_eq!(tr.reconstructions, 2);
+        // ...while group 1 (r=1) still needs k-1 data outputs.
+        tr.on_data(1, 0, t(vec![7.]));
+        let r = tr.on_parity(1, 0, t(vec![9.]));
+        let rec = r.resolved.iter().find(|x| x.3).unwrap();
+        assert_eq!(rec.2.data(), &[2.]);
+        assert_eq!(tr.open_groups(), 0);
     }
 
     #[test]

@@ -32,6 +32,14 @@
 //! are folded back into the session's [`RunResult`] so a run's record
 //! covers the *offered* traffic, not just the admitted part.
 //!
+//! Admission under the bounding policies is **weight-fair**: clients
+//! carry a fairness weight ([`ServingFrontend::client_with_weight`];
+//! default 1), and when the frontend saturates, clients still under
+//! their weighted share keep admitting while the ones above it — the
+//! greedy ones — absorb the rejects. The carve-out stops entirely at
+//! twice the configured limit (a hard aggregate ceiling), and it is
+//! weighted admission only; dispatch order is unchanged.
+//!
 //! ```no_run
 //! use parm::artifacts::Manifest;
 //! use parm::cluster::hardware::GPU;
@@ -143,6 +151,9 @@ impl ClientStats {
 /// Identity and accounting of one logical client.
 struct ClientCore {
     id: u64,
+    /// Admission-fairness weight (see [`ServingFrontend::client_with_weight`]):
+    /// this client's share of the load limit is `weight / Σ weights`.
+    weight: f64,
     submitted: AtomicU64,
     resolved: AtomicU64,
     rejected: AtomicU64,
@@ -157,9 +168,11 @@ struct ClientCore {
 }
 
 impl ClientCore {
-    fn new(id: u64, window: Duration) -> ClientCore {
+    fn new(id: u64, window: Duration, weight: f64) -> ClientCore {
+        assert!(weight.is_finite() && weight > 0.0, "client weight must be finite and > 0");
         ClientCore {
             id,
+            weight,
             submitted: AtomicU64::new(0),
             resolved: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -205,6 +218,9 @@ struct FrontendShared {
     in_submit: AtomicUsize,
     /// Last [`ServiceHandle::backlog`] published by the dispatcher.
     session_backlog: AtomicUsize,
+    /// Sum of all minted clients' fairness weights (f64 bits; clients are
+    /// never unregistered, matching their cores' lifetime).
+    total_weight: AtomicU64,
     /// Frontend-wide windowed p99 in microseconds, published by the
     /// dispatcher (~10 ms cadence) for [`AdmissionPolicy::SloAware`];
     /// 0 = no samples yet. Only refreshed when the policy needs it.
@@ -227,6 +243,28 @@ impl FrontendShared {
     /// backlog plus submissions still queued toward the dispatcher.
     fn load(&self) -> usize {
         self.session_backlog.load(Ordering::Acquire) + self.queued.load(Ordering::Acquire)
+    }
+
+    /// Register a freshly minted client's fairness weight (CAS loop on
+    /// the f64 bit pattern — contention only at client-mint time).
+    fn add_weight(&self, w: f64) {
+        let mut cur = self.total_weight.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + w).to_bits();
+            match self.total_weight.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn total_weight(&self) -> f64 {
+        f64::from_bits(self.total_weight.load(Ordering::Relaxed))
     }
 }
 
@@ -280,16 +318,20 @@ impl ServiceClient {
     }
 
     /// A new client identity on the same frontend (fresh inbox, counters,
-    /// and latency window).
+    /// and latency window), inheriting this client's fairness weight.
     pub fn fork(&self) -> ServiceClient {
-        ServiceClient {
-            core: Arc::new(ClientCore::new(
-                self.shared.next_client.fetch_add(1, Ordering::Relaxed),
-                self.shared.client_window,
-            )),
-            shared: self.shared.clone(),
-            tx: self.tx.clone(),
-        }
+        let core = Arc::new(ClientCore::new(
+            self.shared.next_client.fetch_add(1, Ordering::Relaxed),
+            self.shared.client_window,
+            self.core.weight,
+        ));
+        self.shared.add_weight(self.core.weight);
+        ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
+    }
+
+    /// This client's admission-fairness weight.
+    pub fn weight(&self) -> f64 {
+        self.core.weight
     }
 
     /// Submit one query through admission control. On success the query
@@ -379,12 +421,41 @@ impl ServiceClient {
         self.core.window.lock().unwrap().snapshot(Instant::now())
     }
 
+    /// Weighted-fairness carve-out: when the frontend is saturated, a
+    /// client whose own in-flight count is still under its weighted
+    /// share of `pool` keeps admitting — the clients above their share
+    /// (the greedy ones) absorb the rejects. `pool` is the quantity
+    /// being divided fairly: the load limit for backlog-style bounds, or
+    /// the current load for SLO shedding (so uniformly loaded clients
+    /// all shed during a breach instead of all dodging it). Every client
+    /// gets a floor of one in-flight slot so many-client deployments
+    /// never starve anyone outright — which is why the carve-out also
+    /// has a hard ceiling: it never applies once the load reaches twice
+    /// the limit, so the aggregate stays bounded (< 2x limit) no matter
+    /// how many clients are minted.
+    fn under_fair_share(&self, limit: usize, pool: usize) -> bool {
+        if self.shared.load() >= limit.saturating_mul(2) {
+            return false;
+        }
+        let total = self.shared.total_weight();
+        if total <= 0.0 {
+            return false;
+        }
+        let share = (pool as f64 * self.core.weight / total).max(1.0);
+        let in_flight = self
+            .core
+            .submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.core.resolved.load(Ordering::Relaxed));
+        (in_flight as f64) < share
+    }
+
     fn admit(&self) -> Result<(), SubmitError> {
         match self.shared.policy {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::RejectAbove { backlog: limit } => {
                 let load = self.shared.load();
-                if load < limit {
+                if load < limit || self.under_fair_share(limit, limit) {
                     Ok(())
                 } else {
                     self.note_reject();
@@ -426,12 +497,18 @@ impl ServiceClient {
             }
             AdmissionPolicy::SloAware { p99, backlog: limit } => {
                 let load = self.shared.load();
-                if load >= limit {
+                if load >= limit && !self.under_fair_share(limit, limit) {
                     self.note_reject();
                     return Err(SubmitError::Rejected { load, limit });
                 }
                 let live = Duration::from_micros(self.shared.window_p99_us.load(Ordering::Relaxed));
-                if !live.is_zero() && live >= p99 {
+                // Under an SLO breach, shedding is weighted against the
+                // *current load*, not the backlog limit: uniformly loaded
+                // clients are all at their share of the load and shed
+                // (preserving the policy's breach behavior), while a
+                // client well below its share — the one not causing the
+                // pressure — keeps service, down to the one-slot floor.
+                if !live.is_zero() && live >= p99 && !self.under_fair_share(limit, load) {
                     self.note_reject();
                     return Err(SubmitError::SloShed { live_p99: live, slo: p99 });
                 }
@@ -491,6 +568,7 @@ impl ServingFrontend {
             queued: AtomicUsize::new(0),
             in_submit: AtomicUsize::new(0),
             session_backlog: AtomicUsize::new(0),
+            total_weight: AtomicU64::new(0.0f64.to_bits()),
             window_p99_us: AtomicU64::new(0),
             rejected_total: AtomicU64::new(0),
             rejects_unfolded: AtomicU64::new(0),
@@ -513,16 +591,32 @@ impl ServingFrontend {
         }
     }
 
-    /// Mint a new client (own inbox, counters, latency window).
+    /// Mint a new client (own inbox, counters, latency window) with the
+    /// default fairness weight of 1.
     pub fn client(&self) -> ServiceClient {
-        ServiceClient {
-            core: Arc::new(ClientCore::new(
-                self.shared.next_client.fetch_add(1, Ordering::Relaxed),
-                self.shared.client_window,
-            )),
-            shared: self.shared.clone(),
-            tx: self.tx.clone(),
-        }
+        self.client_with_weight(1.0)
+    }
+
+    /// Mint a new client with an explicit fairness weight. Under the
+    /// bounding admission policies ([`AdmissionPolicy::RejectAbove`],
+    /// [`AdmissionPolicy::SloAware`]) a saturated frontend keeps
+    /// admitting any client whose own in-flight count is below its
+    /// weighted share of the load limit (`weight / Σ weights x backlog`),
+    /// so a greedy client absorbs the rejects instead of starving light
+    /// ones; the carve-out cuts off once the load reaches twice the
+    /// limit, so the aggregate stays hard-bounded regardless of how many
+    /// clients exist. Weights do not grant priority in *scheduling* —
+    /// dispatch order is unchanged — only in admission.
+    pub fn client_with_weight(&self, weight: f64) -> ServiceClient {
+        // ClientCore::new validates the weight before it is folded into
+        // the shared total.
+        let core = Arc::new(ClientCore::new(
+            self.shared.next_client.fetch_add(1, Ordering::Relaxed),
+            self.shared.client_window,
+            weight,
+        ));
+        self.shared.add_weight(weight);
+        ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
     }
 
     /// The admission policy clients are subject to.
@@ -816,6 +910,68 @@ mod tests {
         assert_eq!(SubmitError::Closed.to_string(), "frontend is shut down");
     }
 
+    /// The weighted carve-out, pinned at the unit level (end-to-end
+    /// fairness under a real stalled cluster is in
+    /// `tests/frontend_concurrency.rs`): with the load saturated, the
+    /// client over its weighted share is rejected while the one under
+    /// its share keeps admitting.
+    #[test]
+    fn fair_share_carve_out_arithmetic() {
+        const LIMIT: usize = 16;
+        let (tx, _rx) = mpsc::channel();
+        let tx = Arc::new(Mutex::new(tx));
+        let shared = Arc::new(FrontendShared {
+            policy: AdmissionPolicy::RejectAbove { backlog: LIMIT },
+            client_window: Duration::from_secs(1),
+            next_id: AtomicU64::new(0),
+            next_client: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            in_submit: AtomicUsize::new(0),
+            // Saturated: load == limit, so only the carve-out admits.
+            session_backlog: AtomicUsize::new(LIMIT),
+            total_weight: AtomicU64::new(0.0f64.to_bits()),
+            window_p99_us: AtomicU64::new(0),
+            rejected_total: AtomicU64::new(0),
+            rejects_unfolded: AtomicU64::new(0),
+            open: AtomicBool::new(true),
+            gate: Mutex::new(()),
+            gate_cv: Condvar::new(),
+            window: Mutex::new(LatencyWindow::default()),
+        });
+        let mint = |weight: f64| {
+            shared.add_weight(weight);
+            ServiceClient {
+                core: Arc::new(ClientCore::new(
+                    shared.next_client.fetch_add(1, Ordering::Relaxed),
+                    shared.client_window,
+                    weight,
+                )),
+                shared: shared.clone(),
+                tx: tx.clone(),
+            }
+        };
+        let light = mint(1.0);
+        let heavy = mint(3.0);
+        assert!((shared.total_weight() - 4.0).abs() < 1e-12);
+        // Shares of the 16-limit: light 4, heavy 12.
+        heavy.core.submitted.store(12, Ordering::Relaxed);
+        assert!(!heavy.under_fair_share(LIMIT, LIMIT), "heavy is at its share");
+        light.core.submitted.store(3, Ordering::Relaxed);
+        assert!(light.under_fair_share(LIMIT, LIMIT), "light is under its share");
+        assert!(light.admit().is_ok(), "under-share client admits at saturation");
+        assert!(matches!(heavy.admit(), Err(SubmitError::Rejected { .. })));
+        assert_eq!(heavy.stats().rejected, 1);
+        // Resolutions free share again.
+        heavy.core.resolved.store(5, Ordering::Relaxed);
+        assert!(heavy.under_fair_share(LIMIT, LIMIT));
+        assert!(heavy.admit().is_ok());
+        // Hard ceiling: past 2x the limit the carve-out stops entirely —
+        // no client count or weight can stretch the aggregate further.
+        shared.session_backlog.store(2 * LIMIT, Ordering::Release);
+        assert!(!light.under_fair_share(LIMIT, LIMIT));
+        assert!(matches!(light.admit(), Err(SubmitError::Rejected { .. })));
+    }
+
     /// End-to-end routing is covered by `tests/frontend_concurrency.rs`
     /// against a real simulated cluster; here we only pin the pure
     /// admission arithmetic.
@@ -829,6 +985,7 @@ mod tests {
             queued: AtomicUsize::new(3),
             in_submit: AtomicUsize::new(0),
             session_backlog: AtomicUsize::new(5),
+            total_weight: AtomicU64::new(0.0f64.to_bits()),
             window_p99_us: AtomicU64::new(0),
             rejected_total: AtomicU64::new(0),
             rejects_unfolded: AtomicU64::new(0),

@@ -20,6 +20,10 @@
 //!   expose it via a [`service::Mode`] variant; batching, pools, faults,
 //!   shuffles, tenancy, SLO handling, and metrics all come for free. See
 //!   the `scheme` module docs for the walk-through.
+//! - [`adaptive`] is the first *dynamic-topology* scheme: a learned
+//!   straggler predictor ([`adaptive::StragglerPredictor`]) feeding an
+//!   ApproxIFER-style rateless code ([`adaptive::RatelessScheme`]) whose
+//!   per-group parity count is chosen at group-seal time.
 //! - [`frontend`] is the multi-client surface: a dispatcher thread owns
 //!   the single-consumer handle, [`frontend::ServiceClient`]s submit
 //!   concurrently through admission control
@@ -38,6 +42,7 @@
 //! The thread-and-channel map of the whole stack is drawn in
 //! `docs/ARCHITECTURE.md`.
 
+pub mod adaptive;
 pub mod batcher;
 pub mod coding;
 pub mod decoder;

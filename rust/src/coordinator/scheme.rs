@@ -17,7 +17,11 @@
 //!
 //! The five schemes of the paper ship as implementations: [`ParmScheme`]
 //! (§3), [`NoRedundancyScheme`], [`EqualResourcesScheme`] (§5.1),
-//! [`ApproxBackupScheme`] (§5.2.6), and [`ReplicationScheme`] (§2.2).
+//! [`ApproxBackupScheme`] (§5.2.6), and [`ReplicationScheme`] (§2.2). A
+//! sixth — the adaptive rateless scheme, whose per-group redundancy
+//! follows a learned straggler predictor — lives in
+//! [`crate::coordinator::adaptive`] and is the worked example of a
+//! *dynamic-topology* scheme (see below).
 //!
 //! # Adding a scheme
 //!
@@ -114,6 +118,34 @@
 //! To expose it declaratively (config files, CLI), also give [`Mode`] a
 //! variant and an arm in [`Mode::scheme`]; for programmatic use, handing
 //! the boxed scheme to a session directly works just as well.
+//!
+//! ## Dynamic-topology schemes
+//!
+//! Nothing above forces the three answers to be *constants*. A scheme
+//! whose redundancy adapts at runtime — the rateless scheme in
+//! [`crate::coordinator::adaptive`] is the shipped example — answers
+//! them as follows:
+//!
+//! - **Topology is the ceiling, not the operating point.**
+//!   [`RedundancyScheme::extra_instances`] / [`RedundancyScheme::layout`]
+//!   are consulted once at build time, so provision pools for the
+//!   *maximum* redundancy you may ever dispatch (`r_max` parity pools for
+//!   rateless). Idle provisioned pools cost threads, not work.
+//! - **Dispatch decides the fan-out per group.** `plan_dispatch` may emit
+//!   any number of jobs: rateless consults its straggler predictor at
+//!   group-seal time and emits `r ∈ [r_min, r_max]` parity jobs for that
+//!   group only. Per-group bookkeeping must then carry the group's own
+//!   `r` — [`crate::coordinator::coding::GroupTracker::register_with_r`]
+//!   exists for exactly this.
+//! - **Resolution must tolerate mixed generations.** Completions from
+//!   groups sealed under a different `r` arrive interleaved; keying all
+//!   state by group id (as `GroupTracker` does) makes this free. Feed
+//!   your estimator from completions here — they carry the worker's
+//!   timestamp and instance id.
+//! - **Expose what you adapt.** Implement [`RedundancyScheme::telemetry`]
+//!   so sessions ([`crate::coordinator::session::ServiceHandle::scheme_telemetry`])
+//!   can surface the live operating point (last chosen `r`, the
+//!   unavailability estimate) to examples, benches, and dashboards.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -142,6 +174,22 @@ pub struct PoolLayout {
     /// One id set per parity pool (index = r_index).
     pub parity: Vec<Vec<usize>>,
     pub approx: Option<Vec<usize>>,
+}
+
+/// Live operating point of an adaptive scheme (see
+/// [`RedundancyScheme::telemetry`]): what the scheme is *currently*
+/// doing, as opposed to the cumulative [`RedundancyScheme::reconstructions`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeTelemetry {
+    /// Redundancy chosen for the most recently sealed coding group.
+    pub last_r: usize,
+    /// The scheme's current estimate of per-slot unavailability.
+    pub unavailability: f64,
+    /// Coding groups sealed so far.
+    pub groups_sealed: u64,
+    /// Parity jobs dispatched so far (sum of per-group r); divided by
+    /// `groups_sealed` this is the realized redundancy overhead.
+    pub parity_jobs: u64,
 }
 
 /// A scheme's verdict that some queries now have predictions.
@@ -188,6 +236,12 @@ pub trait RedundancyScheme: Send {
     fn reconstructions(&self) -> u64 {
         0
     }
+
+    /// Live telemetry for adaptive schemes; `None` (the default) for
+    /// fixed-topology schemes whose dispatch never changes shape.
+    fn telemetry(&self) -> Option<SchemeTelemetry> {
+        None
+    }
 }
 
 impl Mode {
@@ -199,11 +253,18 @@ impl Mode {
             Mode::EqualResources { k } => Box::new(EqualResourcesScheme::new(*k)),
             Mode::ApproxBackup { k } => Box::new(ApproxBackupScheme::new(*k)),
             Mode::Replication { copies } => Box::new(ReplicationScheme::new(*copies)),
+            Mode::Rateless { k, r_min, r_max, halflife } => {
+                Box::new(crate::coordinator::adaptive::RatelessScheme::new(
+                    crate::coordinator::adaptive::RatelessConfig::new(
+                        *k, *r_min, *r_max, *halflife,
+                    ),
+                ))
+            }
         }
     }
 }
 
-fn job(kind: JobKind, batch: &SealedBatch) -> Job {
+pub(crate) fn job(kind: JobKind, batch: &SealedBatch) -> Job {
     Job {
         kind,
         input: batch.input.clone(),
@@ -213,7 +274,7 @@ fn job(kind: JobKind, batch: &SealedBatch) -> Job {
 }
 
 /// ceil(m / k): instances per parity/backup pool.
-fn per_pool(m: usize, k: usize) -> usize {
+pub(crate) fn per_pool(m: usize, k: usize) -> usize {
     (m + k - 1) / k
 }
 
@@ -633,6 +694,12 @@ mod tests {
             Mode::EqualResources { k: 3 },
             Mode::ApproxBackup { k: 2 },
             Mode::Replication { copies: 2 },
+            Mode::Rateless {
+                k: 2,
+                r_min: 1,
+                r_max: 2,
+                halflife: std::time::Duration::from_millis(500),
+            },
         ];
         for m in &modes {
             let s = m.scheme();
@@ -651,6 +718,15 @@ mod tests {
             (Mode::EqualResources { k: 2 }, 4),
             (Mode::ApproxBackup { k: 2 }, 4),
             (Mode::Replication { copies: 3 }, 6),
+            (
+                Mode::Rateless {
+                    k: 3,
+                    r_min: 1,
+                    r_max: 3,
+                    halflife: std::time::Duration::from_millis(500),
+                },
+                7,
+            ),
         ] {
             let s = mode.scheme();
             let total = m + s.extra_instances(m);

@@ -35,6 +35,12 @@ pub enum Mode {
     ApproxBackup { k: usize },
     /// Replicate every batch `copies` times across the deployed pool.
     Replication { copies: usize },
+    /// Adaptive rateless coding ([`crate::coordinator::adaptive`]): pools
+    /// are provisioned for `r_max` parities per coding group, but the
+    /// parity count actually dispatched is chosen at group-seal time in
+    /// `[r_min, r_max]` from a learned straggler predictor whose
+    /// observations decay with the given half-life.
+    Rateless { k: usize, r_min: usize, r_max: usize, halflife: Duration },
 }
 
 impl Mode {
@@ -48,6 +54,8 @@ impl Mode {
             Mode::NoRedundancy => 0,
             Mode::EqualResources { k } | Mode::ApproxBackup { k } => (m + k - 1) / k,
             Mode::Replication { .. } => 0,
+            // Provisioned for the ceiling: r_max parity pools.
+            Mode::Rateless { k, r_max, .. } => (m + k - 1) / k * r_max,
         }
     }
 
@@ -58,6 +66,7 @@ impl Mode {
             Mode::EqualResources { .. } => "equal-resources",
             Mode::ApproxBackup { .. } => "approx-backup",
             Mode::Replication { .. } => "replication",
+            Mode::Rateless { .. } => "rateless",
         }
     }
 }

@@ -44,7 +44,7 @@ use crate::cluster::network::{Network, ShuffleGen};
 use crate::cluster::tenancy::Tenancy;
 use crate::coordinator::batcher::{Batcher, PendingQuery, SealedBatch};
 use crate::coordinator::metrics::{LatencyWindow, Outcome, RunMetrics, WindowSnapshot};
-use crate::coordinator::scheme::{RedundancyScheme, Resolution, Target};
+use crate::coordinator::scheme::{RedundancyScheme, Resolution, SchemeTelemetry, Target};
 use crate::coordinator::service::{measure_service, ModelSet, RunResult, ServiceConfig};
 use crate::runtime::engine::Executable;
 use crate::runtime::instance::{Completion, Execution, ServiceModel, WorkerEnv};
@@ -312,6 +312,13 @@ impl ServiceHandle {
     /// Measured uncontended mean service time of the deployed model.
     pub fn mean_service(&self) -> Duration {
         self.mean_service
+    }
+
+    /// Live telemetry from an adaptive scheme — the last chosen per-group
+    /// redundancy, the straggler predictor's unavailability estimate, and
+    /// the realized parity overhead. `None` for fixed-topology schemes.
+    pub fn scheme_telemetry(&self) -> Option<SchemeTelemetry> {
+        self.scheme.telemetry()
     }
 
     /// Queries submitted so far.

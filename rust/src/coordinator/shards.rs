@@ -251,6 +251,13 @@ impl ShardedFrontend {
 
     /// Mint a shard-transparent client (a fresh identity on every shard,
     /// routed by its id).
+    ///
+    /// Note on admission fairness: each leg registers the default weight
+    /// on *every* shard, so a shard's fair-share denominator counts the
+    /// whole fleet of tier clients, not just the ones routed to it —
+    /// weighted shares are diluted by the shard count (the per-client
+    /// one-slot floor and the 2x-limit ceiling still apply). Per-routed-
+    /// shard weight accounting is an open item (see ROADMAP).
     pub fn client(&self) -> ShardedClient {
         ShardedClient {
             id: self.shared.next_client.fetch_add(1, Ordering::Relaxed),

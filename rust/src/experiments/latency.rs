@@ -82,7 +82,10 @@ pub struct TimeSeriesRow {
 }
 
 impl TimeSeriesRow {
-    pub fn from_snapshot(t: Duration, w: &crate::coordinator::metrics::WindowSnapshot) -> TimeSeriesRow {
+    pub fn from_snapshot(
+        t: Duration,
+        w: &crate::coordinator::metrics::WindowSnapshot,
+    ) -> TimeSeriesRow {
         TimeSeriesRow {
             t_ms: t.as_secs_f64() * 1e3,
             resolved: w.resolved,
@@ -186,7 +189,11 @@ pub fn rate_for_utilization(util: f64, m: usize, mean_service: Duration) -> f64 
 /// This captures whatever real parallelism the host provides (on a
 /// 1-core CI image, capacity ≈ 1 / E[S] no matter how large m is), so
 /// utilization-derived rates stay meaningful everywhere.
-pub fn measure_capacity(exe: &std::sync::Arc<Executable>, m: usize, probe: &crate::tensor::Tensor) -> f64 {
+pub fn measure_capacity(
+    exe: &std::sync::Arc<Executable>,
+    m: usize,
+    probe: &crate::tensor::Tensor,
+) -> f64 {
     // Warmup.
     for _ in 0..3 {
         let _ = exe.run(probe);
@@ -299,6 +306,63 @@ pub fn run_point_timeseries(
         n: metrics.latency.len(),
     };
     Ok((row, series))
+}
+
+/// The shared fault-event time-series scenario behind the fig11/13/14
+/// benches: ParM (k=2, sum) under the given background load, one
+/// deployed instance killed 40% into the run, the live window sampled
+/// periodically, rows emitted to `bench_out/<name>.json`.
+///
+/// Env knobs: PARM_BENCH_TS_QUERIES (default 6000),
+/// PARM_BENCH_TS_SAMPLE_MS (default 250).
+pub fn run_fault_timeseries(
+    manifest: &Manifest,
+    name: &str,
+    label: &str,
+    util: f64,
+    shuffles: usize,
+    light_tenancy: bool,
+    seed: u64,
+) -> anyhow::Result<LatencyRow> {
+    let env_u64 = |key: &str, default: u64| {
+        std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    };
+    let ts_n = env_u64("PARM_BENCH_TS_QUERIES", 6_000);
+    let sample = Duration::from_millis(env_u64("PARM_BENCH_TS_SAMPLE_MS", 250).max(1));
+    let models = load_models(manifest, 1, 2, 1, false)?;
+    let ds = manifest.dataset(LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(manifest, ds)?;
+    let probe = source.queries[0].clone();
+    let mean = crate::coordinator::service::measure_service(&models.deployed, &probe, 20);
+    let profile = &crate::cluster::hardware::GPU;
+    let rate =
+        util * profile.default_m as f64 / (mean.as_secs_f64() * profile.exec_scale.max(1.0));
+
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
+        profile,
+    );
+    cfg.seed = seed;
+    cfg.shuffles = shuffles;
+    cfg.light_tenancy = light_tenancy;
+    cfg.slo = Some(Duration::from_secs(2)); // backstop for doubly-lost groups
+    // A short window makes the timeline responsive: each sample reflects
+    // roughly the last second of traffic, so the fault transient shows
+    // as a spike instead of being averaged away.
+    cfg.metrics_window = Duration::from_secs(1);
+    // Kill one deployed instance ~40% of the way through the run.
+    let kill_at = Duration::from_secs_f64(0.4 * ts_n as f64 / rate);
+    cfg.fault_schedule = vec![(0, kill_at, Duration::ZERO)];
+    println!(
+        "\ntime series [{label}]: {ts_n} queries at {rate:.0} qps, \
+         instance 0 dies at t={:.1}s",
+        kill_at.as_secs_f64()
+    );
+    let (row, series) =
+        run_point_timeseries(&cfg, &models, &source, ts_n, rate, label, sample)?;
+    emit_timeseries(name, &series);
+    println!("aggregate: {}", row.line());
+    Ok(row)
 }
 
 /// ParM vs Equal-Resources at one rate (the Figure 11 comparison pair).

@@ -104,22 +104,50 @@ fn cmd_accuracy(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new("parm serve", "run the serving loop and report latency")
-        .opt("mode", "parm", "parm | none | equal-resources | approx-backup | replication")
+        .opt(
+            "mode",
+            "parm",
+            "parm | none | equal-resources | approx-backup | replication | rateless",
+        )
         .opt("k", "2", "coding-group size")
+        .opt("redundancy-min", "1", "rateless: parity floor per coding group")
+        .opt(
+            "redundancy-max",
+            "2",
+            "rateless: parity ceiling per coding group (pools are provisioned for this)",
+        )
+        .opt(
+            "predictor-halflife-ms",
+            "1000",
+            "rateless: straggler-predictor evidence half-life",
+        )
         .opt("cluster", "gpu", "hardware profile: gpu | cpu")
         .opt("rate", "0", "query rate qps (0 = 60% utilization)")
         .opt("queries", "20000", "number of queries")
         .opt("batch", "1", "batch size")
         .opt("shuffles", "4", "concurrent background shuffles")
         .opt("seed", "49374", "rng seed")
-        .opt("clients", "1", "concurrent client threads (>1 serves via the multi-client frontend)")
+        .opt(
+            "clients",
+            "1",
+            "concurrent client threads (>1 serves via the multi-client frontend)",
+        )
         .opt("shards", "1", "serving shards (>1 serves via the consistent-hash sharded tier)")
         .opt("vnodes", "64", "virtual nodes per shard on the hash ring")
         .opt("global-backlog", "0", "fleet-wide offered-load cap over all shards (0 = none)")
-        .opt("admission", "unbounded", "admission policy: unbounded | reject-above | block | slo-aware")
+        .opt(
+            "admission",
+            "unbounded",
+            "admission policy: unbounded | reject-above | block | slo-aware",
+        )
         .opt("admission-backlog", "64", "load limit for reject-above / block / slo-aware")
         .opt("admission-timeout-ms", "50", "max wait for block admission")
-        .opt("slo-ms", "0", "SLO in ms (0 = none; stragglers past it get default predictions; slo-aware admission sheds at this p99)")
+        .opt(
+            "slo-ms",
+            "0",
+            "SLO in ms (0 = none; stragglers past it get default predictions; \
+             slo-aware admission sheds at this p99)",
+        )
         .flag("tenancy", "enable light multitenancy instead of shuffles");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -135,7 +163,11 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let k = a.get_usize("k");
     let batch = a.get_usize("batch");
     let with_approx = a.get("mode") == "approx-backup";
-    let models = latency::load_models(&m, batch, k, 1, with_approx)?;
+    // Rateless provisions parity pools for the ceiling, so it needs
+    // redundancy-max parity executables; every other mode needs one.
+    let parities =
+        if a.get("mode") == "rateless" { a.get_usize("redundancy-max").max(1) } else { 1 };
+    let models = latency::load_models(&m, batch, k, parities, with_approx)?;
     let ds = m.dataset(latency::LATENCY_DATASET)?;
     let source = QuerySource::from_dataset(&m, ds)?;
 
@@ -145,6 +177,18 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         "equal-resources" => Mode::EqualResources { k },
         "approx-backup" => Mode::ApproxBackup { k },
         "replication" => Mode::Replication { copies: 2 },
+        "rateless" => {
+            let r_min = a.get_usize("redundancy-min");
+            let r_max = a.get_usize("redundancy-max");
+            if !(1..=r_max).contains(&r_min) || r_max > k {
+                anyhow::bail!("need 1 <= --redundancy-min <= --redundancy-max <= k");
+            }
+            let halflife = a.get_duration_ms("predictor-halflife-ms");
+            if halflife.is_zero() {
+                anyhow::bail!("--predictor-halflife-ms must be > 0");
+            }
+            Mode::Rateless { k, r_min, r_max, halflife }
+        }
         other => anyhow::bail!("unknown mode {other:?}"),
     };
     let mut cfg = ServiceConfig::defaults(mode, profile);
@@ -432,12 +476,15 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
     let exp = parm::config::ExperimentConfig::from_file(a.get("config"))?;
     let m = Manifest::load_default()?;
     let (k, with_approx) = match &exp.service.mode {
-        Mode::Parm { k, .. } | Mode::EqualResources { k } => (*k, false),
+        Mode::Parm { k, .. } | Mode::EqualResources { k } | Mode::Rateless { k, .. } => {
+            (*k, false)
+        }
         Mode::ApproxBackup { k } => (*k, true),
         _ => (2, false),
     };
     let r = match &exp.service.mode {
         Mode::Parm { encoders, .. } => encoders.len(),
+        Mode::Rateless { r_max, .. } => *r_max,
         _ => 1,
     };
     let models = latency::load_models(&m, exp.service.batch_size, k, r, with_approx)?;

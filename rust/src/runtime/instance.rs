@@ -113,7 +113,11 @@ pub struct ServiceModel {
 
 impl ServiceModel {
     /// Calibrate from real executions.
-    pub fn measure(exe: &Executable, probe: &Tensor, n: usize) -> Result<ServiceModel, crate::runtime::engine::EngineError> {
+    pub fn measure(
+        exe: &Executable,
+        probe: &Tensor,
+        n: usize,
+    ) -> Result<ServiceModel, crate::runtime::engine::EngineError> {
         let mut samples = Vec::with_capacity(n);
         let mut out = None;
         for _ in 0..3 {

@@ -1,0 +1,188 @@
+//! End-to-end behavior of the adaptive redundancy subsystem
+//! (`coordinator::adaptive`) against a real simulated cluster:
+//!
+//! - **ramp**: under an injected straggler burst (two deployed instances
+//!   zombied together) the straggler predictor's unavailability estimate
+//!   rises and the rateless scheme seals groups with more parities; after
+//!   the burst clears, the evidence decays and `r` returns to the floor;
+//! - **conservation**: a rateless session under a permanent instance
+//!   failure still resolves every submitted query exactly once (natively,
+//!   reconstructed, or — beyond the group's parities — by SLO default).
+//!
+//! Like the other cluster tests, these run serialized and skip with a
+//! message if artifacts are missing under `--features pjrt`.
+
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
+use parm::experiments::latency;
+use parm::util::rng::Pcg64;
+use parm::workload::QuerySource;
+
+/// Each test spawns a full simulated cluster; serialize to keep the
+/// timing paths representative.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(r_max: usize) -> Option<(QuerySource, ModelSet)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP adaptive: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    match latency::load_models(&m, 1, 2, r_max, false) {
+        Ok(models) => Some((src, models)),
+        Err(e) => {
+            eprintln!("SKIP adaptive: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn predictor_ramps_r_through_a_straggler_burst_and_back() {
+    let _guard = serial();
+    let Some((src, models)) = setup(2) else { return };
+
+    let halflife = Duration::from_millis(250);
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Rateless { k: 2, r_min: 1, r_max: 2, halflife },
+        &GPU,
+    );
+    cfg.m = 4;
+    cfg.shuffles = 0;
+    cfg.seed = 0xADA0;
+    cfg.slo = Some(Duration::from_secs(2)); // backstop for >r-loss groups
+    // Burst: instances 0 and 1 fail together from 0.9s to 2.1s — half
+    // the deployed pool, so coding groups lose one or both slots.
+    let burst_start = Duration::from_millis(900);
+    let burst_len = Duration::from_millis(1200);
+    cfg.fault_schedule = vec![(0, burst_start, burst_len), (1, burst_start, burst_len)];
+
+    let mut handle = ServiceBuilder::new(cfg).build(&models, &src.queries[0]).unwrap();
+    assert_eq!(handle.scheme_name(), "rateless");
+    // Pace arrivals so the whole run spans ~4.2s: ~0.9s healthy lead-in,
+    // the 1.2s burst, and a >= 2s healthy tail (8 half-lives) for decay.
+    let run = Duration::from_millis(4200);
+    let mean = handle.mean_service().as_secs_f64() * GPU.exec_scale.max(1.0);
+    let capacity_rate = 0.4 * 4.0 / mean;
+    let n = ((run.as_secs_f64() * capacity_rate) as u64).clamp(200, 4000);
+    let interval = run.div_f64(n as f64);
+
+    let start = Instant::now();
+    let mut r_before_burst = 0usize;
+    let mut max_r_burst = 0usize;
+    for i in 0..n {
+        let due = start + interval.mul_f64(i as f64);
+        loop {
+            let _ = handle.poll();
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            std::thread::sleep((due - now).min(Duration::from_millis(2)));
+        }
+        handle.submit(src.queries[(i as usize) % src.len()].clone());
+        let elapsed = start.elapsed();
+        if let Some(t) = handle.scheme_telemetry() {
+            if elapsed < burst_start {
+                r_before_burst = r_before_burst.max(t.last_r);
+            } else if elapsed < burst_start + burst_len + Duration::from_millis(300) {
+                max_r_burst = max_r_burst.max(t.last_r);
+            }
+        }
+    }
+    let _ = handle.drain();
+    let t = handle.scheme_telemetry().expect("rateless exposes telemetry");
+
+    assert_eq!(r_before_burst, 1, "healthy lead-in stays at the floor");
+    assert_eq!(
+        max_r_burst, 2,
+        "the burst must ramp r to the ceiling (unavailability {:.3})",
+        t.unavailability
+    );
+    assert_eq!(
+        t.last_r, 1,
+        "r must decay back to the floor after the burst (unavailability {:.3})",
+        t.unavailability
+    );
+    assert!(
+        t.unavailability < 0.1,
+        "evidence must decay within the healthy tail, got {:.3}",
+        t.unavailability
+    );
+    assert!(
+        t.parity_jobs > t.groups_sealed,
+        "some groups carried extra parities ({} jobs over {} groups)",
+        t.parity_jobs,
+        t.groups_sealed
+    );
+    assert!(
+        t.parity_jobs < 2 * t.groups_sealed,
+        "not every group paid the ceiling ({} jobs over {} groups)",
+        t.parity_jobs,
+        t.groups_sealed
+    );
+
+    let res = handle.shutdown();
+    assert!(
+        res.reconstructions > 0,
+        "the burst's lost predictions must be recovered by decode"
+    );
+    assert!(res.dropped_jobs > 0, "the zombied instances must have dropped jobs");
+}
+
+#[test]
+fn rateless_session_conserves_queries_under_permanent_failure() {
+    let _guard = serial();
+    let Some((src, models)) = setup(2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Rateless {
+            k: 2,
+            r_min: 1,
+            r_max: 2,
+            halflife: Duration::from_millis(200),
+        },
+        &GPU,
+    );
+    cfg.m = 2;
+    cfg.shuffles = 0;
+    cfg.seed = 0xADA1;
+    cfg.slo = Some(Duration::from_secs(2));
+    // One of two deployed instances is a zombie from 30ms on.
+    cfg.fault_schedule = vec![(0, Duration::from_millis(30), Duration::ZERO)];
+
+    let mut handle = ServiceBuilder::new(cfg).build(&models, &src.queries[0]).unwrap();
+    let mut rng = Pcg64::new(0xC0FE);
+    let n = 120u64;
+    let mut ids = Vec::new();
+    let mut resolved = Vec::new();
+    for i in 0..n {
+        ids.push(handle.submit(src.queries[(i as usize) % src.len()].clone()));
+        if rng.next_f64() < 0.3 {
+            resolved.extend(handle.poll());
+        }
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    resolved.extend(handle.drain());
+    let mut got: Vec<u64> = resolved.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids, "every query resolves exactly once");
+    let res = handle.shutdown();
+    assert_eq!(res.metrics.total(), n);
+    assert!(
+        res.metrics.native + res.metrics.reconstructed + res.metrics.defaulted == n,
+        "outcomes partition the queries"
+    );
+}

@@ -69,6 +69,119 @@ fn tracker_resolves_each_slot_exactly_once_any_order() {
     }
 }
 
+/// INVARIANT (variable per-group r): in a tracker provisioned for r_max
+/// parities, groups registered with any `r <= r_max` reconstruct any
+/// `<= r` losses once their parities arrive; groups with `> r` losses
+/// never decode (their queries are left to the session's SLO default)
+/// and nothing panics — including parity completions beyond the group's
+/// own r. Completion order is irrelevant.
+#[test]
+fn tracker_variable_r_recovers_up_to_r_losses_never_panics() {
+    enum Ev {
+        Data { slot: usize, out: Tensor },
+        Parity { r_index: usize, out: Tensor },
+    }
+    for seed in 0..200 {
+        let mut rng = Pcg64::new(7000 + seed);
+        let k = 2 + (seed as usize % 3); // k in 2..=4
+        let encoders: Vec<Encoder> = (0..k).map(|ri| Encoder::sum_r(k, ri)).collect();
+        let weights: Vec<Vec<f32>> = (0..k)
+            .map(|ri| (0..k).map(|i| ((i + 1) as f32).powi(ri as i32)).collect())
+            .collect();
+        let mut tr = GroupTracker::new(k, &encoders);
+        let n_groups = 6;
+
+        let mut events: Vec<(u64, Ev)> = Vec::new();
+        let mut expect_recovered: Vec<(u64, Vec<Tensor>)> = Vec::new();
+        let mut expect_stuck: Vec<(u64, Vec<usize>)> = Vec::new();
+        for g in 0..n_groups as u64 {
+            let r = 1 + (rng.below(k as u64) as usize); // r in 1..=k
+            let ids: Vec<Vec<u64>> = (0..k).map(|s| vec![g * k as u64 + s as u64]).collect();
+            tr.register_with_r(g, ids, r);
+            assert_eq!(tr.group_r(g), Some(r));
+            let outs: Vec<Tensor> = (0..k).map(|_| rand_tensor(&mut rng, 5)).collect();
+            let losses = rng.below(k as u64 + 1) as usize; // 0..=k slots lost
+            let lost = rng.choose_distinct(k, losses);
+            for (s, o) in outs.iter().enumerate() {
+                if !lost.contains(&s) {
+                    events.push((g, Ev::Data { slot: s, out: o.clone() }));
+                }
+            }
+            // Only the group's own r parities were dispatched...
+            for (ri, ws) in weights.iter().take(r).enumerate() {
+                let mut p = Tensor::zeros(vec![5]);
+                for (o, &w) in outs.iter().zip(ws) {
+                    ops::add_scaled_assign(&mut p, o, w).unwrap();
+                }
+                events.push((g, Ev::Parity { r_index: ri, out: p }));
+            }
+            // ...plus, occasionally, a stray parity beyond the group's r
+            // (an adaptive scheme racing its own ramp): must be a
+            // harmless no-op, never a panic.
+            if r < k && rng.next_f64() < 0.5 {
+                events.push((g, Ev::Parity { r_index: r, out: rand_tensor(&mut rng, 5) }));
+            }
+            if losses <= r {
+                expect_recovered.push((g, outs));
+            } else {
+                expect_stuck.push((g, lost));
+            }
+        }
+        rng.shuffle(&mut events);
+
+        let mut resolved: std::collections::HashMap<u64, (u32, Tensor)> =
+            std::collections::HashMap::new();
+        for (g, ev) in events {
+            let res = match ev {
+                Ev::Data { slot, out } => tr.on_data(g, slot, out),
+                Ev::Parity { r_index, out } => tr.on_parity(g, r_index, out),
+            };
+            for (_, ids, out, _) in res.resolved {
+                for id in ids {
+                    resolved
+                        .entry(id)
+                        .and_modify(|e| e.0 += 1)
+                        .or_insert((1, out.clone()));
+                }
+            }
+        }
+
+        for (g, outs) in &expect_recovered {
+            for s in 0..k {
+                let qid = g * k as u64 + s as u64;
+                let (count, out) = resolved
+                    .get(&qid)
+                    .unwrap_or_else(|| panic!("seed {seed} group {g} slot {s} must resolve"));
+                assert_eq!(*count, 1, "seed {seed} group {g} slot {s}: exactly once");
+                // Tolerance is looser than the r=2 decode tests: at
+                // r=k=4 the §3.5 weight rows reach (i+1)^3 and the
+                // 4x4 solve amplifies f32 rounding in the coded sums.
+                for (a, b) in out.data().iter().zip(outs[s].data()) {
+                    assert!(
+                        (a - b).abs() < 0.1,
+                        "seed {seed} group {g} slot {s}: {a} vs {b}"
+                    );
+                }
+            }
+            assert!(!tr.contains(*g), "seed {seed}: recovered group evicted");
+        }
+        for (g, lost) in &expect_stuck {
+            assert!(tr.contains(*g), "seed {seed}: >r-loss group stays open");
+            let unresolved = tr.unresolved_slots(*g);
+            assert_eq!(
+                unresolved.len(),
+                lost.len(),
+                "seed {seed} group {g}: exactly the lost slots stay unresolved"
+            );
+            for s in &unresolved {
+                assert!(lost.contains(s), "seed {seed}: unresolved slot {s} was lost");
+            }
+            tr.abandon(*g);
+        }
+        assert_eq!(tr.open_groups(), 0, "seed {seed}: no leaked groups");
+    }
+}
+
 /// INVARIANT: reconstruction through the real decoder equals the dropped
 /// output exactly when the parity output is the exact coded sum — for any
 /// k, any weights, any missing slot.

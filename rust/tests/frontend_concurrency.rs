@@ -204,6 +204,88 @@ fn reject_above_bounds_backlog_under_stall() {
     assert_eq!(res.metrics.offered(), ATTEMPTS);
 }
 
+/// Weighted fairness: under `RejectAbove` with a stalled cluster, a
+/// greedy flooder must absorb the rejects while a light paced client
+/// keeps being admitted — one client can no longer starve the others by
+/// racing the shared load limit.
+#[test]
+fn weighted_fairness_shields_light_client_from_flooder() {
+    let _guard = serial();
+    const LIMIT: usize = 16;
+    // Safety cap only — the light client's window ends the flood.
+    const FLOOD: u64 = 20_000;
+    const LIGHT: u64 = 40;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(Mode::NoRedundancy, &GPU);
+    cfg.m = 2;
+    cfg.shuffles = 0;
+    cfg.seed = 0xFA12;
+    // Same induced stall as reject_above_bounds_backlog_under_stall: the
+    // flooder's burst rate far exceeds the drain rate.
+    cfg.time_scale = 5.0;
+    cfg.admission = AdmissionPolicy::RejectAbove { backlog: LIMIT };
+
+    let frontend = ServiceBuilder::new(cfg)
+        .serve(&models, &src.queries[0])
+        .expect("frontend builds");
+    let flooder = frontend.client_with_weight(1.0);
+    let light = frontend.client_with_weight(1.0);
+    assert_eq!(light.weight(), 1.0);
+
+    // The flooder hammers submit for the whole light-client window.
+    let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flood_handle = {
+        let queries = src.queries.clone();
+        let flooder = flooder.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            let (mut attempts, mut rejected) = (0u64, 0u64);
+            while !done.load(Ordering::Relaxed) && attempts < FLOOD {
+                if flooder
+                    .submit(queries[(attempts as usize) % queries.len()].clone())
+                    .is_err()
+                {
+                    rejected += 1;
+                }
+                attempts += 1;
+                if attempts % 32 == 0 {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+            }
+            (attempts, rejected)
+        })
+    };
+    // The light client offers one query every few ms — far below its
+    // fair share of the limit — concurrently with the flood.
+    let mut light_rejects = 0u64;
+    for i in 0..LIGHT {
+        if light.submit(src.queries[(i as usize) % src.len()].clone()).is_err() {
+            light_rejects += 1;
+        }
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    done.store(true, Ordering::Relaxed);
+    let (flood_attempts, flood_rejects) = flood_handle.join().expect("flooder thread");
+
+    assert!(
+        flood_rejects > flood_attempts / 4,
+        "the flooder must absorb rejects under the stall, saw {flood_rejects} of {flood_attempts}"
+    );
+    assert!(
+        light_rejects <= LIGHT / 10,
+        "the light client must keep its fair share: {light_rejects} of {LIGHT} rejected \
+         (flooder: {flood_rejects} of {flood_attempts})"
+    );
+
+    // Accepting is still a promise for both clients.
+    let res = frontend.shutdown().expect("clean shutdown");
+    assert_eq!(light.stats().resolved, LIGHT - light_rejects);
+    assert_eq!(flooder.stats().resolved, flood_attempts - flood_rejects);
+    assert_eq!(res.rejected, light_rejects + flood_rejects);
+}
+
 /// Regression: `Block`-policy waiters interrupted by `shutdown` must be
 /// tallied as shed load *before* the dispatcher folds rejects into the
 /// session's `RunResult` — and shutdown must interrupt them promptly
