@@ -1,0 +1,299 @@
+//! Cross-shard coding vs. per-shard ParM under whole-shard faults:
+//! recovery rate as a function of how many entire fault domains die
+//! mid-run.
+//!
+//! For each shard-fault count f, both tiers serve the same paced
+//! multi-client workload from the same seed over the same 4-shard spec;
+//! at 30% of the run, f whole shards are killed (every instance — for
+//! ParM that includes its in-shard parity instances, because the shard
+//! IS the fault domain). Intra-shard ParM then loses its killed shards'
+//! queries to SLO defaults — data and parity die together — while the
+//! cross-shard tier loses at most one slot per coding group and decodes
+//! from the shared parity pool, ramping per-group r via the fleet
+//! predictor when the losses register.
+//!
+//! Emits `bench_out/cross_shard.json` (recovery-rate vs.
+//! shard-fault-count, per scheme) and asserts the headline: for f >= 1
+//! the cross-shard tier recovers strictly more and defaults strictly
+//! less than per-shard ParM under the same seed.
+//!
+//! Env knobs: PARM_BENCH_QUERIES (default 1600), PARM_BENCH_SHARD_FAULTS
+//! (comma list, default "0,1,2").
+
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedClient, ShardedFrontend};
+use parm::experiments::latency;
+use parm::util::json::Json;
+use parm::util::rng::Pcg64;
+use parm::workload::QuerySource;
+
+const SHARDS: usize = 4;
+const M: usize = 2;
+const K: usize = 2;
+const R_MAX: usize = 2;
+const CLIENTS: usize = 8;
+const SEED: u64 = 0xC5B3;
+
+struct Row {
+    scheme: &'static str,
+    shard_faults: usize,
+    resolved: u64,
+    reconstructed: u64,
+    defaulted: u64,
+    recovery_rate: f64,
+    parity_overhead: f64,
+    p50_ms: f64,
+    p999_ms: f64,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme)
+            .set("shard_faults", self.shard_faults)
+            .set("resolved", self.resolved as usize)
+            .set("reconstructed", self.reconstructed as usize)
+            .set("defaulted", self.defaulted as usize)
+            .set("recovery_rate", self.recovery_rate)
+            .set("parity_overhead", self.parity_overhead)
+            .set("p50_ms", self.p50_ms)
+            .set("p999_ms", self.p999_ms)
+    }
+}
+
+/// Paced Poisson clients against any tier minting `ShardedClient`s;
+/// returns once every accepted query resolved (SLO-backstopped).
+fn drive(clients: Vec<ShardedClient>, queries: &[parm::tensor::Tensor], per: u64, per_rate: f64) {
+    let mut joins = Vec::new();
+    for (c, client) in clients.into_iter().enumerate() {
+        let queries = queries.to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(SEED ^ 0xD51 ^ (c as u64) << 9);
+            let mut due = Instant::now();
+            let mut accepted = 0u64;
+            for i in 0..per {
+                due += Duration::from_secs_f64(rng.exponential(per_rate));
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if client.submit(queries[i as usize % queries.len()].clone()).is_ok() {
+                    accepted += 1;
+                }
+                let _ = client.poll();
+            }
+            while client.stats().resolved < accepted {
+                if client.next(Duration::from_secs(8)).is_none() {
+                    break;
+                }
+            }
+        }));
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_600);
+    let fault_counts: Vec<usize> = std::env::var("PARM_BENCH_SHARD_FAULTS")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![0, 1, 2]);
+
+    let models = latency::load_models(&m, 1, K, R_MAX, false)?;
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let rate = 320.0;
+    let per = n / CLIENTS as u64;
+    let per_rate = rate / CLIENTS as f64;
+    let run_secs = per as f64 / per_rate;
+    let kill_after = Duration::from_secs_f64(run_secs * 0.3);
+    let spec = ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None };
+    let slo = Duration::from_millis(1500);
+
+    println!(
+        "cross-shard sweep: {n} queries, {CLIENTS} clients, {SHARDS} shards (m={M}), \
+         whole-shard fault counts {fault_counts:?}"
+    );
+    println!(
+        "{:<12} {:>7} {:>9} {:>9} {:>9} {:>9} {:>10} {:>9} {:>10}",
+        "scheme", "faults", "resolved", "recon", "default", "recovery", "overhead", "p50(ms)", "p99.9(ms)"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &f in &fault_counts {
+        let f = f.min(SHARDS - 1); // keep at least one live shard
+        // Deterministic victim set: the highest-numbered shards.
+        let victims: Vec<usize> = (SHARDS - f..SHARDS).collect();
+
+        // --- cross-shard coding tier ---
+        let mut cfg = ServiceConfig::defaults(
+            Mode::CrossShard {
+                k: K,
+                r_min: 1,
+                r_max: R_MAX,
+                halflife: Duration::from_millis(300),
+            },
+            &GPU,
+        );
+        cfg.m = M;
+        cfg.shuffles = 0;
+        cfg.seed = SEED + f as u64;
+        cfg.slo = Some(slo);
+        let tier = CrossShardFrontend::start(cfg, spec, &models, &source.queries[0])?;
+        let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+        let killer = {
+            let plans: Vec<_> = victims.iter().map(|&s| tier.fault_plan(s)).collect();
+            std::thread::spawn(move || {
+                std::thread::sleep(kill_after);
+                for p in &plans {
+                    for i in 0..M {
+                        p.kill(i);
+                    }
+                }
+            })
+        };
+        drive(clients, &source.queries, per, per_rate);
+        let _ = killer.join();
+        tier.flush_open_groups();
+        let res = tier.shutdown()?;
+        let t = &res.telemetry;
+        let overhead = if t.groups_sealed > 0 {
+            t.parity_jobs as f64 / t.groups_sealed as f64
+        } else {
+            0.0
+        };
+        let mut metrics = res.fleet.merged.metrics;
+        rows.push(Row {
+            scheme: "cross-shard",
+            shard_faults: f,
+            resolved: metrics.total(),
+            reconstructed: metrics.reconstructed,
+            defaulted: metrics.defaulted,
+            recovery_rate: recovery(metrics.reconstructed, metrics.defaulted),
+            parity_overhead: overhead,
+            p50_ms: metrics.latency.median(),
+            p999_ms: metrics.latency.p999(),
+        });
+        print_row(rows.last().unwrap());
+
+        // --- baseline: per-shard ParM, same seed and victim shards ---
+        let mut cfg = ServiceConfig::defaults(
+            Mode::Parm { k: K, encoders: vec![Encoder::sum(K)] },
+            &GPU,
+        );
+        cfg.m = M;
+        cfg.shuffles = 0;
+        cfg.seed = SEED + f as u64;
+        cfg.slo = Some(slo);
+        let tier = ShardedFrontend::start(cfg, spec, &models, &source.queries[0])?;
+        let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+        let per_shard_instances = M + (M + K - 1) / K; // deployed + parity pool
+        let killer = {
+            let plans: Vec<_> = victims.iter().map(|&s| tier.fault_plan(s)).collect();
+            std::thread::spawn(move || {
+                std::thread::sleep(kill_after);
+                for p in &plans {
+                    for i in 0..per_shard_instances {
+                        p.kill(i);
+                    }
+                }
+            })
+        };
+        drive(clients, &source.queries, per, per_rate);
+        let _ = killer.join();
+        let res = tier.shutdown()?;
+        let mut metrics = res.merged.metrics;
+        rows.push(Row {
+            scheme: "parm",
+            shard_faults: f,
+            resolved: metrics.total(),
+            reconstructed: metrics.reconstructed,
+            defaulted: metrics.defaulted,
+            recovery_rate: recovery(metrics.reconstructed, metrics.defaulted),
+            parity_overhead: 1.0,
+            p50_ms: metrics.latency.median(),
+            p999_ms: metrics.latency.p999(),
+        });
+        print_row(rows.last().unwrap());
+    }
+
+    let json = Json::Arr(rows.iter().map(Row::to_json).collect());
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = "bench_out/cross_shard.json";
+    if std::fs::write(path, json.to_string()).is_ok() {
+        println!("(wrote {path})");
+    }
+
+    // Headline: whole-shard faults that drown per-shard ParM in SLO
+    // defaults are absorbed by the cross-shard code.
+    for &f in &fault_counts {
+        if f == 0 {
+            continue;
+        }
+        let f = f.min(SHARDS - 1);
+        let pick = |scheme: &str| {
+            rows.iter().find(|r| r.scheme == scheme && r.shard_faults == f).unwrap()
+        };
+        let (cross, parm) = (pick("cross-shard"), pick("parm"));
+        assert!(
+            parm.defaulted > 0,
+            "faults={f}: whole-shard kills must cost per-shard ParM defaults"
+        );
+        assert!(
+            cross.defaulted < parm.defaulted,
+            "faults={f}: cross-shard must lose strictly less \
+             ({} vs {} defaults)",
+            cross.defaulted,
+            parm.defaulted
+        );
+        assert!(
+            cross.recovery_rate > parm.recovery_rate,
+            "faults={f}: cross-shard recovery rate must dominate \
+             ({:.3} vs {:.3})",
+            cross.recovery_rate,
+            parm.recovery_rate
+        );
+        println!(
+            "faults={f}: cross-shard defaulted {} (recovery {:.3}) vs parm {} ({:.3})",
+            cross.defaulted, cross.recovery_rate, parm.defaulted, parm.recovery_rate
+        );
+    }
+    println!("ok: cross-shard coding absorbs whole-shard faults that sink per-shard ParM");
+    Ok(())
+}
+
+/// Of the queries that lost their own prediction, the fraction decode
+/// brought back (1.0 when nothing was lost at all).
+fn recovery(reconstructed: u64, defaulted: u64) -> f64 {
+    let lost = reconstructed + defaulted;
+    if lost == 0 {
+        return 1.0;
+    }
+    reconstructed as f64 / lost as f64
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<12} {:>7} {:>9} {:>9} {:>9} {:>9.3} {:>10.3} {:>9.3} {:>10.3}",
+        r.scheme,
+        r.shard_faults,
+        r.resolved,
+        r.reconstructed,
+        r.defaulted,
+        r.recovery_rate,
+        r.parity_overhead,
+        r.p50_ms,
+        r.p999_ms,
+    );
+}

@@ -259,6 +259,121 @@ fn choose(n: usize, k: usize) -> f64 {
 }
 
 // ------------------------------------------------------------------------
+// Fleet predictor (cross-shard)
+// ------------------------------------------------------------------------
+
+/// P(X > r) for X = Σ Bernoulli(p_i) with independent, heterogeneous
+/// p_i (Poisson-binomial). The exact DP is O(n²); n is a coding-group
+/// size (≤ 8), so this is cheaper than any approximation.
+pub(crate) fn poisson_binomial_tail(ps: &[f64], r: usize) -> f64 {
+    if r >= ps.len() {
+        return 0.0;
+    }
+    // dp[j] = P(exactly j of the first i slots fail); update descending
+    // so dp[j-1] is still the previous iteration's value.
+    let mut dp = vec![0.0f64; ps.len() + 1];
+    dp[0] = 1.0;
+    for (i, &p) in ps.iter().enumerate() {
+        for j in (0..=i + 1).rev() {
+            dp[j] = dp[j] * (1.0 - p) + if j > 0 { dp[j - 1] * p } else { 0.0 };
+        }
+    }
+    let head: f64 = dp[..=r].iter().sum();
+    (1.0 - head).max(0.0)
+}
+
+/// Fleet-level straggler estimate: one [`StragglerPredictor`] per shard
+/// (fault domain), merged when sizing redundancy for coding groups that
+/// *span* shards ([`crate::coordinator::cross_shard`]).
+///
+/// Why merge instead of keeping per-shard recommendations: a cross-shard
+/// group's slots sit on k distinct shards, so its loss distribution is
+/// the Poisson-binomial over those domains' unavailabilities — and a
+/// correlated fault observed on one shard must warm *every* group's
+/// redundancy, not just the groups whose traffic happened to touch the
+/// faulted shard (ROADMAP's "rateless over the sharded tier" gap).
+/// [`FleetPredictor::recommend_r`] therefore evaluates the tail over the
+/// k *most unavailable* shards: conservative for groups striped over
+/// healthy shards, exact for the groups most at risk.
+pub struct FleetPredictor {
+    shards: Vec<StragglerPredictor>,
+    target_miss: f64,
+}
+
+impl FleetPredictor {
+    pub fn new(shards: usize, cfg: PredictorConfig) -> FleetPredictor {
+        assert!(shards >= 1, "fleet predictor needs at least one shard");
+        FleetPredictor {
+            target_miss: cfg.target_miss,
+            shards: (0..shards).map(|_| StragglerPredictor::new(cfg.clone())).collect(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Feed one data completion observed on `shard`.
+    pub fn observe_completion(
+        &mut self,
+        shard: usize,
+        instance: usize,
+        latency: Duration,
+        now: Instant,
+    ) {
+        self.shards[shard].observe_completion(instance, latency, now);
+    }
+
+    /// Feed `n` hard losses attributed to `shard`.
+    pub fn observe_losses(&mut self, shard: usize, n: usize, now: Instant) {
+        self.shards[shard].observe_losses(n, now);
+    }
+
+    /// One shard's unavailability estimate.
+    pub fn shard_unavailability(&self, shard: usize, now: Instant) -> f64 {
+        self.shards[shard].unavailability(now)
+    }
+
+    /// The worst per-shard estimate — the headline number (a group's
+    /// weakest fault domain dominates its loss probability).
+    pub fn fleet_unavailability(&self, now: Instant) -> f64 {
+        self.shards
+            .iter()
+            .map(|p| p.unavailability(now))
+            .fold(0.0, f64::max)
+    }
+
+    /// The slowest shard's pool-wide EWMA latency in ms (0 before any
+    /// completion) — drives loss-horizon scaling like the single-pool
+    /// predictor's mean.
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.shards.iter().map(StragglerPredictor::mean_latency_ms).fold(0.0, f64::max)
+    }
+
+    /// Smallest `r` in `[r_min, r_max]` keeping the Poisson-binomial
+    /// tail over the k most unavailable shards under `target_miss`;
+    /// `r_max` if none does.
+    pub fn recommend_r(&self, k: usize, r_min: usize, r_max: usize, now: Instant) -> usize {
+        let mut ps: Vec<f64> =
+            self.shards.iter().map(|p| p.unavailability(now)).collect();
+        ps.sort_by(|a, b| b.total_cmp(a));
+        ps.truncate(k);
+        // Guarded by the tier (shards >= k), but stay total: pad with
+        // the least unavailable estimate if there are fewer shards.
+        let pad = ps.last().copied().unwrap_or(0.0);
+        while ps.len() < k {
+            ps.push(pad);
+        }
+        for r in r_min..=r_max {
+            if poisson_binomial_tail(&ps, r) <= self.target_miss {
+                return r;
+            }
+        }
+        r_max
+    }
+}
+
+// ------------------------------------------------------------------------
 // Rateless scheme
 // ------------------------------------------------------------------------
 
@@ -403,16 +518,16 @@ impl RatelessScheme {
         // If the stale sweep already counted this group's missing slots
         // as losses, a late reconstruction must not count them again.
         let already_counted = self.loss_counted.contains(&group);
-        for (_slot, ids, _out, reconstructed) in res.resolved {
-            if reconstructed && !already_counted {
+        for sr in res.resolved {
+            if sr.reconstructed && !already_counted {
                 // A reconstructed slot's own prediction never arrived in
                 // time: one hard-loss observation.
                 self.predictor.observe_losses(1, at);
             }
             out.push(Resolution {
-                query_ids: ids,
+                query_ids: sr.query_ids,
                 at,
-                outcome: if reconstructed {
+                outcome: if sr.reconstructed {
                     Outcome::Reconstructed
                 } else {
                     Outcome::Native
@@ -836,6 +951,60 @@ mod tests {
         ));
         let rec = r.iter().find(|x| x.outcome == Outcome::Reconstructed).unwrap();
         assert_eq!(rec.query_ids, vec![1]);
+    }
+
+    #[test]
+    fn poisson_binomial_matches_binomial_when_homogeneous() {
+        for &(k, p, r) in &[(2usize, 0.3f64, 1usize), (4, 0.1, 2), (5, 0.5, 0), (3, 0.9, 2)] {
+            let ps = vec![p; k];
+            let a = poisson_binomial_tail(&ps, r);
+            let b = binomial_tail(k, p, r);
+            assert!((a - b).abs() < 1e-12, "k={k} p={p} r={r}: {a} vs {b}");
+        }
+        // r >= n can never be exceeded.
+        assert_eq!(poisson_binomial_tail(&[0.9, 0.9], 2), 0.0);
+        // Heterogeneous sanity: P(X > 1) for p = [0.5, 0.1] is 0.05.
+        assert!((poisson_binomial_tail(&[0.5, 0.1], 1) - 0.05).abs() < 1e-12);
+    }
+
+    /// The fleet merge the cross-shard tier relies on: one dead fault
+    /// domain alone does NOT force r=2 (a group loses at most its one
+    /// slot there), but a *correlated* two-domain fault does — and the
+    /// evidence decays per shard like the single-pool predictor.
+    #[test]
+    fn fleet_predictor_sizes_r_to_correlated_domain_faults() {
+        let cfg = PredictorConfig {
+            halflife: Duration::from_millis(100),
+            ..PredictorConfig::default()
+        };
+        let mut f = FleetPredictor::new(4, cfg);
+        let base = Instant::now();
+        for shard in 0..4 {
+            for i in 0..30 {
+                f.observe_completion(shard, i % 2, Duration::from_millis(10), base);
+            }
+        }
+        assert_eq!(f.recommend_r(2, 1, 2, base), 1, "healthy fleet stays at the floor");
+
+        // Shard 2 dies hard: its estimate saturates, the others stay low.
+        f.observe_losses(2, 60, base);
+        assert!(f.shard_unavailability(2, base) > 0.5);
+        assert!(f.shard_unavailability(0, base) < 0.05);
+        assert!(f.fleet_unavailability(base) > 0.5);
+        assert_eq!(
+            f.recommend_r(2, 1, 2, base),
+            1,
+            "one dead domain costs a group at most one slot — r=1 still suffices"
+        );
+
+        // A correlated second domain fault must warm r for every group.
+        f.observe_losses(0, 60, base);
+        assert_eq!(f.recommend_r(2, 1, 2, base), 2, "two hot domains need two parities");
+
+        // Per-shard decay brings the fleet back to the floor.
+        let later = base + Duration::from_secs(5);
+        assert!(f.fleet_unavailability(later) < 0.05);
+        assert_eq!(f.recommend_r(2, 1, 2, later), 1);
     }
 
     #[test]

@@ -35,15 +35,33 @@ pub struct GroupState {
     pub parity_outs: Vec<Option<Tensor>>,
     /// Per-slot query ids (for routing reconstructions back to clients).
     pub query_ids: Vec<Vec<u64>>,
+    /// Per-slot fault-domain tag (shard index for cross-shard groups;
+    /// all zero for intra-session groups). Reconstructions report it so
+    /// a fleet-level coordinator can route the decoded slot back to the
+    /// session that owns its queries.
+    pub tags: Vec<usize>,
     /// Slots already resolved (own prediction arrived or reconstructed).
     pub resolved: Vec<bool>,
+}
+
+/// One slot of a coding group whose prediction just became available.
+#[derive(Debug)]
+pub struct SlotResolution {
+    pub slot: usize,
+    pub query_ids: Vec<u64>,
+    pub output: Tensor,
+    /// true when the decoder produced the output (the slot's own
+    /// prediction never arrived); false for a native arrival.
+    pub reconstructed: bool,
+    /// The fault-domain tag the slot was registered with (see
+    /// [`GroupTracker::register_tagged`]); 0 for untagged groups.
+    pub tag: usize,
 }
 
 /// Outcome of feeding one completion to the tracker.
 #[derive(Debug, Default)]
 pub struct Resolutions {
-    /// (slot, query ids, outputs, was_reconstruction)
-    pub resolved: Vec<(usize, Vec<u64>, Tensor, bool)>,
+    pub resolved: Vec<SlotResolution>,
 }
 
 /// Tracks in-flight coding groups and applies the decode rule.
@@ -102,7 +120,24 @@ impl GroupTracker {
     /// schemes whose redundancy is chosen at seal time. Completions for
     /// parity indices `>= r` are ignored for this group.
     pub fn register_with_r(&mut self, id: u64, query_ids: Vec<Vec<u64>>, r: usize) {
+        let k = query_ids.len();
+        self.register_tagged(id, query_ids, r, vec![0; k]);
+    }
+
+    /// [`GroupTracker::register_with_r`] with a fault-domain tag per slot
+    /// (the shard serving that slot's data queries, for groups that span
+    /// shards). Tags ride every [`SlotResolution`], so the caller can
+    /// route a decoded slot back to the session that owns its queries
+    /// and attribute the loss to the right fault domain.
+    pub fn register_tagged(
+        &mut self,
+        id: u64,
+        query_ids: Vec<Vec<u64>>,
+        r: usize,
+        tags: Vec<usize>,
+    ) {
         assert_eq!(query_ids.len(), self.k, "group must have k slots");
+        assert_eq!(tags.len(), self.k, "group must have k slot tags");
         assert!(
             r >= 1 && r <= self.weights.len(),
             "group r={r} outside 1..={}",
@@ -115,6 +150,7 @@ impl GroupTracker {
                 data_outs: (0..self.k).map(|_| None).collect(),
                 parity_outs: (0..r).map(|_| None).collect(),
                 query_ids,
+                tags,
                 resolved: vec![false; self.k],
             },
         );
@@ -129,6 +165,13 @@ impl GroupTracker {
     /// Parity count this group was registered with (None once gone).
     pub fn group_r(&self, group: u64) -> Option<usize> {
         self.groups.get(&group).map(|g| g.parity_outs.len())
+    }
+
+    /// Fault-domain tag a slot was registered with (None once the group
+    /// is gone). Used by fleet-level coordinators to attribute stuck
+    /// slots to their shard.
+    pub fn slot_tag(&self, group: u64, slot: usize) -> Option<usize> {
+        self.groups.get(&group).and_then(|g| g.tags.get(slot).copied())
     }
 
     /// Slots of a tracked group that have not resolved yet (empty when
@@ -156,12 +199,13 @@ impl GroupTracker {
         }
         if !g.resolved[slot] {
             g.resolved[slot] = true;
-            res.resolved.push((
+            res.resolved.push(SlotResolution {
                 slot,
-                g.query_ids[slot].clone(),
-                g.data_outs[slot].clone().unwrap(),
-                false,
-            ));
+                query_ids: g.query_ids[slot].clone(),
+                output: g.data_outs[slot].clone().unwrap(),
+                reconstructed: false,
+                tag: g.tags[slot],
+            });
         }
         self.try_decode(group, &mut res);
         self.evict_if_done(group);
@@ -212,12 +256,13 @@ impl GroupTracker {
                     if !g.resolved[slot] {
                         g.resolved[slot] = true;
                         self.reconstructions += 1;
-                        res.resolved.push((
+                        res.resolved.push(SlotResolution {
                             slot,
-                            g.query_ids[slot].clone(),
-                            tensor,
-                            true,
-                        ));
+                            query_ids: g.query_ids[slot].clone(),
+                            output: tensor,
+                            reconstructed: true,
+                            tag: g.tags[slot],
+                        });
                     }
                 }
             }
@@ -253,7 +298,7 @@ mod tests {
         tr.register(1, vec![vec![10], vec![11]]);
         let r = tr.on_data(1, 0, t(vec![1., 0.]));
         assert_eq!(r.resolved.len(), 1);
-        assert!(!r.resolved[0].3);
+        assert!(!r.resolved[0].reconstructed);
         let r = tr.on_data(1, 1, t(vec![0., 1.]));
         assert_eq!(r.resolved.len(), 1);
         assert_eq!(tr.reconstructions, 0);
@@ -269,11 +314,12 @@ mod tests {
         // Parity output = sum of the two data outputs.
         let r = tr.on_parity(7, 0, t(vec![4., 6.]));
         assert_eq!(r.resolved.len(), 1);
-        let (slot, ids, out, reconstructed) = &r.resolved[0];
-        assert_eq!(*slot, 1);
-        assert_eq!(ids, &vec![2]);
-        assert_eq!(out.data(), &[3., 4.]);
-        assert!(*reconstructed);
+        let rec = &r.resolved[0];
+        assert_eq!(rec.slot, 1);
+        assert_eq!(rec.query_ids, vec![2]);
+        assert_eq!(rec.output.data(), &[3., 4.]);
+        assert!(rec.reconstructed);
+        assert_eq!(rec.tag, 0, "untagged groups report tag 0");
         assert_eq!(tr.reconstructions, 1);
         assert_eq!(tr.completed_groups, 1);
     }
@@ -288,9 +334,9 @@ mod tests {
         let r = tr.on_data(1, 1, t(vec![2.]));
         // Slot 1 resolves natively AND slot 2 reconstructs (6-1-2=3).
         assert_eq!(r.resolved.len(), 2);
-        let rec = r.resolved.iter().find(|x| x.3).unwrap();
-        assert_eq!(rec.0, 2);
-        assert_eq!(rec.2.data(), &[3.]);
+        let rec = r.resolved.iter().find(|x| x.reconstructed).unwrap();
+        assert_eq!(rec.slot, 2);
+        assert_eq!(rec.output.data(), &[3.]);
     }
 
     #[test]
@@ -314,7 +360,7 @@ mod tests {
         let r = tr.on_parity(1, 1, t(vec![5.])); // f1+2*f2
         assert_eq!(r.resolved.len(), 2, "both reconstructed from parities");
         let mut outs: Vec<(usize, f32)> =
-            r.resolved.iter().map(|x| (x.0, x.2.data()[0])).collect();
+            r.resolved.iter().map(|x| (x.slot, x.output.data()[0])).collect();
         outs.sort_by_key(|x| x.0);
         assert!((outs[0].1 - 1.0).abs() < 1e-5);
         assert!((outs[1].1 - 2.0).abs() < 1e-5);
@@ -350,8 +396,24 @@ mod tests {
         // One data arrival + the single parity decodes the remaining loss.
         let r = tr.on_data(5, 0, t(vec![1.]));
         assert_eq!(r.resolved.len(), 2, "native + reconstruction");
-        assert!(r.resolved.iter().any(|x| x.3 && x.0 == 1));
+        assert!(r.resolved.iter().any(|x| x.reconstructed && x.slot == 1));
         assert!(!tr.contains(5), "fully resolved group evicted");
+    }
+
+    #[test]
+    fn tagged_registration_rides_tags_on_resolutions() {
+        // A cross-shard-style group: slot 0 on shard 3, slot 1 on shard 1.
+        let mut tr = tracker(2);
+        tr.register_tagged(4, vec![vec![40], vec![41]], 1, vec![3, 1]);
+        assert_eq!(tr.slot_tag(4, 0), Some(3));
+        assert_eq!(tr.slot_tag(4, 1), Some(1));
+        let r = tr.on_data(4, 0, t(vec![1., 2.]));
+        assert_eq!(r.resolved[0].tag, 3, "native resolution carries its slot's tag");
+        let r = tr.on_parity(4, 0, t(vec![4., 6.]));
+        let rec = r.resolved.iter().find(|x| x.reconstructed).unwrap();
+        assert_eq!(rec.tag, 1, "the decoded slot reports the shard that lost it");
+        assert_eq!(rec.query_ids, vec![41]);
+        assert_eq!(tr.slot_tag(4, 0), None, "evicted group has no tags");
     }
 
     #[test]
@@ -368,8 +430,8 @@ mod tests {
         // ...while group 1 (r=1) still needs k-1 data outputs.
         tr.on_data(1, 0, t(vec![7.]));
         let r = tr.on_parity(1, 0, t(vec![9.]));
-        let rec = r.resolved.iter().find(|x| x.3).unwrap();
-        assert_eq!(rec.2.data(), &[2.]);
+        let rec = r.resolved.iter().find(|x| x.reconstructed).unwrap();
+        assert_eq!(rec.output.data(), &[2.]);
         assert_eq!(tr.open_groups(), 0);
     }
 

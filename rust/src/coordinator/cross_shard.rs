@@ -1,0 +1,1117 @@
+//! Cross-shard coding groups: one erasure code spanning fault domains.
+//!
+//! Every scheme so far kept a coding group *inside* one shard's session,
+//! so a whole-shard fault killed the k data queries and their parity
+//! together — exactly the correlated failure the paper's erasure-coding
+//! framing is meant to absorb. This module stripes each group across
+//! shards instead:
+//!
+//! ```text
+//!   shard 0 session      shard 1 session       shard k-1 session
+//!   CrossShardScheme     CrossShardScheme  …   CrossShardScheme
+//!        │ offer(batch)       │ offer(batch)        │ offer(batch)
+//!        └────────────┬───────┴─────────────────────┘
+//!                     ▼
+//!            CrossShardState (fleet-shared, one mutex)
+//!              open groups: one slot per *distinct* shard
+//!              seal at k slots: r ← FleetPredictor.recommend_r
+//!              GroupTracker (shard-tagged slots) + decode
+//!                     │ r parity jobs            ▲ parity outputs
+//!                     ▼                          │
+//!            parity driver thread ──▶ shared parity sessions
+//!            (one session per r_index, ceil(shards·m / k) instances)
+//! ```
+//!
+//! - **Topology.** A group's k slots come from k *distinct* shards (the
+//!   state never places two batches of one shard in the same group), so
+//!   killing an entire shard costs every group at most one slot — which
+//!   decodes like any single-instance loss as long as one parity
+//!   survives. The parity queries live in a *shared cross-shard pool*
+//!   (their own sessions, their own fault domain), not in any data
+//!   shard.
+//! - **Redundancy.** Group r is chosen at seal time by a fleet-level
+//!   [`FleetPredictor`]: per-shard unavailability estimates merged with
+//!   a Poisson-binomial tail over the k most unavailable domains, so a
+//!   correlated fault observed on one shard warms *every* group's r.
+//! - **Resolution.** Data completions resolve natively inside their own
+//!   shard's session as always. Decoded slots are routed back to the
+//!   owning shard through per-shard queues, drained by that session's
+//!   [`RedundancyScheme::drain_external`] hook at its pump cadence — so
+//!   a fully dead shard still delivers reconstructions to its clients.
+//! - **Tails.** Open groups that outlive the loss horizon (a drained or
+//!   idle shard would otherwise strand them) are *short-sealed*: padded
+//!   with zero-input phantom slots that resolve immediately, so the real
+//!   queries still get parity protection instead of riding the SLO.
+//!
+//! The user-facing tier is
+//! [`crate::coordinator::shards::CrossShardFrontend`]; this module holds
+//! the shared state, the per-shard scheme, the parity-leg schemes, and
+//! the parity driver thread. [`CrossShardState`] is deliberately
+//! clock-free (every method takes the observation instant), so the
+//! seeded property suites drive it without a cluster.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::faults::FaultPlan;
+use crate::coordinator::adaptive::{FleetPredictor, PredictorConfig};
+use crate::coordinator::batcher::SealedBatch;
+use crate::coordinator::coding::{GroupTracker, Resolutions};
+use crate::coordinator::encoder::Encoder;
+use crate::coordinator::metrics::Outcome;
+use crate::coordinator::scheme::{
+    job, DispatchPlan, PoolLayout, RedundancyScheme, Resolution, SchemeTelemetry, Target,
+};
+use crate::coordinator::service::{ModelSet, RunResult, ServiceConfig};
+use crate::coordinator::session::{ServiceBuilder, ServiceHandle};
+use crate::runtime::instance::{Completion, Job, JobKind};
+use crate::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+
+/// Sizing and pacing knobs of the cross-shard coding tier.
+#[derive(Clone, Debug)]
+pub struct CrossShardConfig {
+    /// Coding-group size; each group's slots come from k distinct shards.
+    pub k: usize,
+    /// Per-group parity floor.
+    pub r_min: usize,
+    /// Per-group parity ceiling (the shared pool is provisioned for it).
+    pub r_max: usize,
+    /// Data shards the groups stripe over (must be >= k).
+    pub shards: usize,
+    /// Per-shard straggler-predictor knobs (fleet-merged at seal time).
+    pub predictor: PredictorConfig,
+    /// A sealed group still unresolved after this long counts its
+    /// missing slots as per-shard losses; open groups older than it are
+    /// short-sealed; groups are abandoned at 4x this horizon.
+    pub miss_horizon: Duration,
+}
+
+impl CrossShardConfig {
+    /// The declarative form used by `mode: "cross-shard"` configs.
+    pub fn new(
+        k: usize,
+        r_min: usize,
+        r_max: usize,
+        shards: usize,
+        halflife: Duration,
+    ) -> CrossShardConfig {
+        CrossShardConfig {
+            k,
+            r_min,
+            r_max,
+            shards,
+            predictor: PredictorConfig { halflife, ..PredictorConfig::default() },
+            miss_horizon: (halflife * 2).max(Duration::from_millis(200)),
+        }
+    }
+}
+
+/// One encoded parity batch bound for the shared pool, as b single-row
+/// queries (the parity session's batcher reassembles them into the exact
+/// `[b, …]` shape its executable was compiled for).
+pub struct ParityJob {
+    pub group: u64,
+    pub r_index: usize,
+    pub rows: Vec<Tensor>,
+}
+
+/// Messages to the parity driver thread.
+pub(crate) enum ParityMsg {
+    Job(ParityJob),
+    Stop,
+}
+
+/// Live operating point of the cross-shard tier.
+#[derive(Clone, Debug)]
+pub struct CrossShardTelemetry {
+    /// Redundancy chosen for the most recently sealed group.
+    pub last_r: usize,
+    /// Worst per-shard unavailability estimate.
+    pub fleet_unavailability: f64,
+    /// Per-shard unavailability estimates, indexed by shard.
+    pub per_shard_unavailability: Vec<f64>,
+    pub groups_sealed: u64,
+    pub parity_jobs: u64,
+    /// Total cross-shard reconstructions so far.
+    pub reconstructions: u64,
+    /// Groups currently tracked (open + sealed-unresolved).
+    pub open_groups: usize,
+}
+
+/// A data batch waiting in an unsealed group.
+struct OpenSlot {
+    shard: usize,
+    ids: Vec<u64>,
+    input: Tensor,
+    /// Data output that raced ahead of the group's seal.
+    early: Option<(Tensor, Instant)>,
+}
+
+/// An unsealed coding group: at most one slot per shard.
+struct OpenGroup {
+    id: u64,
+    created: Instant,
+    slots: Vec<OpenSlot>,
+    has_shard: Vec<bool>,
+}
+
+/// Bookkeeping for the stale-group sweep.
+struct SealedMeta {
+    group: u64,
+    at: Instant,
+    losses_counted: bool,
+}
+
+struct Inner {
+    cfg: CrossShardConfig,
+    /// `r_max` §3.5 weight rows; a group sealed with r uses the first r.
+    encoders: Vec<Encoder>,
+    tracker: GroupTracker,
+    open: Vec<OpenGroup>,
+    next_group: u64,
+    predictor: FleetPredictor,
+    /// Wired by the tier before any shard can seal; `None` in pure
+    /// property tests (parities are then fed via `on_parity`).
+    parity_tx: Option<mpsc::Sender<ParityMsg>>,
+    /// (r_index, first session qid of the parity batch) -> group.
+    parity_routes: HashMap<(usize, u64), u64>,
+    /// (group, slot) -> data dispatch instant (predictor latency obs).
+    dispatch_at: HashMap<(u64, usize), Instant>,
+    /// Sealed groups awaiting the stale sweep, oldest first.
+    sealed: VecDeque<SealedMeta>,
+    /// Groups whose stuck slots were already counted as losses.
+    loss_counted: HashSet<u64>,
+    /// Decoded (query ids, at) per shard, awaiting that session's drain.
+    external: Vec<VecDeque<(Vec<u64>, Instant)>>,
+    recon_by_shard: Vec<u64>,
+    /// Zero tensor shaped like model outputs (phantom slots of short
+    /// groups); captured from the first output observed fleet-wide.
+    out_zeros: Option<Tensor>,
+    last_sweep: Instant,
+    last_r: usize,
+    groups_sealed: u64,
+    parity_jobs: u64,
+}
+
+/// Throttle on the stale sweep (mirrors the rateless scheme's).
+const SWEEP_EVERY: Duration = Duration::from_millis(25);
+
+/// Route a batch of tracker resolutions: decoded slots go to their
+/// owning shard's external queue (and count as that shard's loss unless
+/// the sweep already counted the group); native verdicts were already
+/// resolved inside their own session; phantom slots (empty ids) are
+/// bookkeeping only.
+fn apply_tracker(inner: &mut Inner, group: u64, res: Resolutions, at: Instant) {
+    let counted = inner.loss_counted.contains(&group);
+    for sr in res.resolved {
+        if !sr.reconstructed || sr.query_ids.is_empty() {
+            continue;
+        }
+        if !counted {
+            inner.predictor.observe_losses(sr.tag, 1, at);
+        }
+        if sr.tag < inner.external.len() {
+            inner.recon_by_shard[sr.tag] += 1;
+            inner.external[sr.tag].push_back((sr.query_ids, at));
+        } else {
+            log::error!("cross-shard: decoded slot with out-of-range tag {}", sr.tag);
+        }
+    }
+}
+
+/// Seal one group: pick r from the fleet predictor, register the
+/// shard-tagged slots, encode + dispatch r parities, pad short groups
+/// with phantom slots, and replay any early data completions.
+fn seal(inner: &mut Inner, og: OpenGroup, now: Instant) {
+    let k = inner.cfg.k;
+    let gid = og.id;
+    if og.slots.len() < k && inner.out_zeros.is_none() {
+        // No output observed fleet-wide yet, so phantom slots cannot be
+        // shaped (and nothing is decodable anyway): drop the group
+        // uncoded — its queries resolve natively or via the session SLO.
+        for s in 0..og.slots.len() {
+            inner.dispatch_at.remove(&(gid, s));
+        }
+        return;
+    }
+    let r = inner.predictor.recommend_r(k, inner.cfg.r_min, inner.cfg.r_max, now);
+    inner.last_r = r;
+    inner.groups_sealed += 1;
+
+    let mut ids = Vec::with_capacity(k);
+    let mut tags = Vec::with_capacity(k);
+    let mut inputs = Vec::with_capacity(k);
+    let mut early = Vec::with_capacity(k);
+    let first_shard = og.slots[0].shard;
+    for s in og.slots {
+        ids.push(s.ids);
+        tags.push(s.shard);
+        inputs.push(s.input);
+        early.push(s.early);
+    }
+    let phantom_from = ids.len();
+    while ids.len() < k {
+        // Short groups (stale/drain flush) pad with phantoms: zero
+        // input to the encoder, zero output fed back below, no query
+        // ids — only the real slots remain "missing" to the decoder.
+        ids.push(Vec::new());
+        tags.push(first_shard);
+        inputs.push(Tensor::zeros(inputs[0].shape().to_vec()));
+        early.push(None);
+    }
+    inner.tracker.register_tagged(gid, ids, r, tags);
+    inner.sealed.push_back(SealedMeta { group: gid, at: now, losses_counted: false });
+
+    let mut parities = Vec::with_capacity(r);
+    {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        for (ri, enc) in inner.encoders.iter().take(r).enumerate() {
+            match enc.encode_batches(&refs) {
+                Ok(parity) => parities.push((ri, parity)),
+                Err(e) => log::error!("cross-shard encode failed: {e}"),
+            }
+        }
+    }
+    for (ri, parity) in parities {
+        inner.parity_jobs += 1;
+        if let Some(tx) = &inner.parity_tx {
+            let _ = tx.send(ParityMsg::Job(ParityJob {
+                group: gid,
+                r_index: ri,
+                rows: parity.unbatch(),
+            }));
+        }
+    }
+
+    if phantom_from < k {
+        let zeros = inner.out_zeros.clone().expect("guarded above");
+        for slot in phantom_from..k {
+            let res = inner.tracker.on_data(gid, slot, zeros.clone());
+            apply_tracker(inner, gid, res, now);
+        }
+    }
+    for (slot, e) in early.into_iter().enumerate() {
+        if let Some((out, at)) = e {
+            let res = inner.tracker.on_data(gid, slot, out);
+            apply_tracker(inner, gid, res, at);
+        }
+    }
+}
+
+impl Inner {
+    fn sweep(&mut self, now: Instant) {
+        if now.saturating_duration_since(self.last_sweep) < SWEEP_EVERY {
+            return;
+        }
+        self.last_sweep = now;
+        // Raise the horizon when the fleet itself is slow, so healthy
+        // but slow groups are not misread as losses.
+        let mean_ms = self.predictor.mean_latency_ms();
+        let horizon = self
+            .cfg
+            .miss_horizon
+            .max(Duration::from_secs_f64(8.0 * mean_ms / 1e3));
+        let abandon_after = horizon * 4;
+
+        // Open groups past the horizon will not fill on their own (a
+        // drained or idle shard): short-seal them so their real slots
+        // get parity protection instead of riding the SLO.
+        let mut i = 0;
+        while i < self.open.len() {
+            if now.saturating_duration_since(self.open[i].created) > horizon {
+                let og = self.open.remove(i);
+                seal(self, og, now);
+            } else {
+                i += 1;
+            }
+        }
+
+        // Sealed groups: stuck slots become per-shard loss observations
+        // at the horizon; the group is abandoned at 4x (its queries
+        // default via their sessions' SLO).
+        let mut keep = VecDeque::with_capacity(self.sealed.len());
+        while let Some(mut meta) = self.sealed.pop_front() {
+            let age = now.saturating_duration_since(meta.at);
+            if !self.tracker.contains(meta.group) {
+                // Fully resolved (or abandoned): once old enough that no
+                // in-flight completion can still reference it, drop the
+                // dispatch stamps and parity routes its zombies never
+                // consumed (a dead parity instance would otherwise leak
+                // one route entry per swallowed parity job, forever).
+                if age > horizon {
+                    for s in 0..self.cfg.k {
+                        self.dispatch_at.remove(&(meta.group, s));
+                    }
+                    self.loss_counted.remove(&meta.group);
+                    let gid = meta.group;
+                    self.parity_routes.retain(|_, g| *g != gid);
+                } else {
+                    keep.push_back(meta);
+                }
+                continue;
+            }
+            if age > horizon && !meta.losses_counted {
+                let unresolved = self.tracker.unresolved_slots(meta.group);
+                if !unresolved.is_empty() {
+                    for &slot in &unresolved {
+                        if let Some(tag) = self.tracker.slot_tag(meta.group, slot) {
+                            self.predictor.observe_losses(tag, 1, now);
+                        }
+                    }
+                    self.loss_counted.insert(meta.group);
+                }
+                meta.losses_counted = true;
+            }
+            if age > abandon_after {
+                self.tracker.abandon(meta.group);
+                for s in 0..self.cfg.k {
+                    self.dispatch_at.remove(&(meta.group, s));
+                }
+                self.loss_counted.remove(&meta.group);
+                let gid = meta.group;
+                self.parity_routes.retain(|_, g| *g != gid);
+                continue;
+            }
+            keep.push_back(meta);
+        }
+        self.sealed = keep;
+    }
+}
+
+/// Fleet-shared coding state: open groups, the shard-tagged
+/// [`GroupTracker`], the [`FleetPredictor`], and the per-shard decoded
+/// queues. One mutex, short critical sections; every entry point takes
+/// the observation instant so the property suites can drive it without
+/// threads or clocks.
+pub struct CrossShardState {
+    inner: Mutex<Inner>,
+}
+
+impl CrossShardState {
+    pub fn new(cfg: CrossShardConfig) -> CrossShardState {
+        assert!(cfg.k >= 2, "cross-shard coding needs k >= 2");
+        assert!(
+            cfg.r_min >= 1 && cfg.r_min <= cfg.r_max && cfg.r_max <= cfg.k,
+            "need 1 <= r_min <= r_max <= k, got r_min={} r_max={} k={}",
+            cfg.r_min,
+            cfg.r_max,
+            cfg.k
+        );
+        assert!(
+            cfg.shards >= cfg.k,
+            "groups stripe k={} slots over distinct shards; need shards >= k, got {}",
+            cfg.k,
+            cfg.shards
+        );
+        let encoders: Vec<Encoder> =
+            (0..cfg.r_max).map(|ri| Encoder::sum_r(cfg.k, ri)).collect();
+        let inner = Inner {
+            tracker: GroupTracker::new(cfg.k, &encoders),
+            encoders,
+            open: Vec::new(),
+            next_group: 0,
+            predictor: FleetPredictor::new(cfg.shards, cfg.predictor.clone()),
+            parity_tx: None,
+            parity_routes: HashMap::new(),
+            dispatch_at: HashMap::new(),
+            sealed: VecDeque::new(),
+            loss_counted: HashSet::new(),
+            external: (0..cfg.shards).map(|_| VecDeque::new()).collect(),
+            recon_by_shard: vec![0; cfg.shards],
+            out_zeros: None,
+            last_sweep: Instant::now(),
+            last_r: cfg.r_min,
+            groups_sealed: 0,
+            parity_jobs: 0,
+            cfg,
+        };
+        CrossShardState { inner: Mutex::new(inner) }
+    }
+
+    /// Wire the parity driver's channel (done by the tier before any
+    /// shard serves traffic).
+    pub(crate) fn set_parity_sender(&self, tx: mpsc::Sender<ParityMsg>) {
+        self.inner.lock().unwrap().parity_tx = Some(tx);
+    }
+
+    /// Offer one sealed data batch from `shard`; returns the (group,
+    /// slot) it was assigned — the batch joins the first open group not
+    /// yet containing this shard (or starts a new one), and the group
+    /// seals once it holds k slots from k distinct shards.
+    pub fn offer(
+        &self,
+        shard: usize,
+        ids: Vec<u64>,
+        input: Tensor,
+        now: Instant,
+    ) -> (u64, usize) {
+        let mut g = self.inner.lock().unwrap();
+        assert!(shard < g.cfg.shards, "shard {shard} out of range");
+        let k = g.cfg.k;
+        let idx = match g.open.iter().position(|og| !og.has_shard[shard]) {
+            Some(i) => i,
+            None => {
+                let id = g.next_group;
+                g.next_group += 1;
+                let shards = g.cfg.shards;
+                g.open.push(OpenGroup {
+                    id,
+                    created: now,
+                    slots: Vec::with_capacity(k),
+                    has_shard: vec![false; shards],
+                });
+                g.open.len() - 1
+            }
+        };
+        let gid = g.open[idx].id;
+        let slot = g.open[idx].slots.len();
+        g.open[idx].slots.push(OpenSlot { shard, ids, input, early: None });
+        g.open[idx].has_shard[shard] = true;
+        g.dispatch_at.insert((gid, slot), now);
+        if g.open[idx].slots.len() == k {
+            let og = g.open.remove(idx);
+            seal(&mut g, og, now);
+        }
+        g.sweep(now);
+        (gid, slot)
+    }
+
+    /// Feed a data completion from `shard` for (group, slot).
+    pub fn on_data(
+        &self,
+        shard: usize,
+        group: u64,
+        slot: usize,
+        instance: usize,
+        output: Tensor,
+        at: Instant,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        if g.out_zeros.is_none() {
+            g.out_zeros = Some(Tensor::zeros(output.shape().to_vec()));
+        }
+        if let Some(t0) = g.dispatch_at.remove(&(group, slot)) {
+            g.predictor.observe_completion(
+                shard,
+                instance,
+                at.saturating_duration_since(t0),
+                at,
+            );
+        }
+        if let Some(og) = g.open.iter_mut().find(|og| og.id == group) {
+            // The group has not sealed yet: buffer the output so the
+            // tracker sees it at registration time.
+            if slot < og.slots.len() && og.slots[slot].early.is_none() {
+                og.slots[slot].early = Some((output, at));
+            }
+        } else {
+            let res = g.tracker.on_data(group, slot, output);
+            apply_tracker(&mut g, group, res, at);
+        }
+        g.sweep(at);
+    }
+
+    /// Feed a parity output for a known (group, r_index) — the pure-test
+    /// entry; the serving path arrives via [`CrossShardState::on_parity_output`].
+    pub fn on_parity(&self, group: u64, r_index: usize, output: Tensor, at: Instant) {
+        let mut g = self.inner.lock().unwrap();
+        if g.out_zeros.is_none() {
+            g.out_zeros = Some(Tensor::zeros(output.shape().to_vec()));
+        }
+        let res = g.tracker.on_parity(group, r_index, output);
+        apply_tracker(&mut g, group, res, at);
+        g.sweep(at);
+    }
+
+    /// Feed a parity-session completion, resolving the (group, r_index)
+    /// it belongs to via the route the driver recorded at submit time.
+    pub(crate) fn on_parity_output(
+        &self,
+        r_index: usize,
+        first_qid: u64,
+        output: Tensor,
+        at: Instant,
+    ) {
+        let group = {
+            let mut g = self.inner.lock().unwrap();
+            match g.parity_routes.remove(&(r_index, first_qid)) {
+                Some(group) => group,
+                None => {
+                    // Benign for a straggling parity whose group already
+                    // retired (the sweep cleans routes past the horizon).
+                    log::debug!(
+                        "cross-shard: parity completion with no live route \
+                         (r{r_index}, qid {first_qid})"
+                    );
+                    return;
+                }
+            }
+        };
+        self.on_parity(group, r_index, output, at);
+    }
+
+    /// Record which group a just-submitted parity batch serves (keyed by
+    /// the batch's first parity-session query id).
+    pub(crate) fn record_parity_route(&self, r_index: usize, first_qid: u64, group: u64) {
+        self.inner.lock().unwrap().parity_routes.insert((r_index, first_qid), group);
+    }
+
+    /// Take the decoded (query ids, at) pairs owed to `shard`, running
+    /// the stale sweep on the way (this is the call every shard's
+    /// session makes at its pump cadence, so it also drives sweeps when
+    /// traffic stalls).
+    pub fn drain_decoded(&self, shard: usize, now: Instant) -> Vec<(Vec<u64>, Instant)> {
+        let mut g = self.inner.lock().unwrap();
+        g.sweep(now);
+        g.external[shard].drain(..).collect()
+    }
+
+    pub(crate) fn drain_shard_resolutions(&self, shard: usize) -> Vec<Resolution> {
+        self.drain_decoded(shard, Instant::now())
+            .into_iter()
+            .map(|(ids, at)| Resolution {
+                query_ids: ids,
+                at,
+                outcome: Outcome::Reconstructed,
+            })
+            .collect()
+    }
+
+    /// Short-seal every open group now (drain aid): queries waiting in
+    /// groups that will not fill get their parity protection instead of
+    /// riding the session SLO.
+    pub fn flush_open(&self, now: Instant) {
+        let mut g = self.inner.lock().unwrap();
+        let open = std::mem::take(&mut g.open);
+        for og in open {
+            if og.slots.is_empty() {
+                continue;
+            }
+            seal(&mut g, og, now);
+        }
+    }
+
+    /// Cross-shard reconstructions whose decoded slot belonged to `shard`.
+    pub fn reconstructions_for(&self, shard: usize) -> u64 {
+        self.inner.lock().unwrap().recon_by_shard[shard]
+    }
+
+    /// Total cross-shard reconstructions.
+    pub fn reconstructions(&self) -> u64 {
+        self.inner.lock().unwrap().tracker.reconstructions
+    }
+
+    /// Parity count a sealed group carries (None once resolved/unknown).
+    pub fn group_r(&self, group: u64) -> Option<usize> {
+        self.inner.lock().unwrap().tracker.group_r(group)
+    }
+
+    /// Whether a sealed group is still tracked.
+    pub fn contains(&self, group: u64) -> bool {
+        self.inner.lock().unwrap().tracker.contains(group)
+    }
+
+    /// Unresolved slots of a sealed group.
+    pub fn unresolved_slots(&self, group: u64) -> Vec<usize> {
+        self.inner.lock().unwrap().tracker.unresolved_slots(group)
+    }
+
+    /// Groups still accumulating slots.
+    pub fn open_groups(&self) -> usize {
+        self.inner.lock().unwrap().open.len()
+    }
+
+    pub(crate) fn scheme_telemetry(&self) -> SchemeTelemetry {
+        let g = self.inner.lock().unwrap();
+        SchemeTelemetry {
+            last_r: g.last_r,
+            unavailability: g.predictor.fleet_unavailability(Instant::now()),
+            groups_sealed: g.groups_sealed,
+            parity_jobs: g.parity_jobs,
+        }
+    }
+
+    /// The tier-level view: fleet + per-shard estimates and counters.
+    pub fn fleet_telemetry(&self) -> CrossShardTelemetry {
+        let g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        CrossShardTelemetry {
+            last_r: g.last_r,
+            fleet_unavailability: g.predictor.fleet_unavailability(now),
+            per_shard_unavailability: (0..g.cfg.shards)
+                .map(|s| g.predictor.shard_unavailability(s, now))
+                .collect(),
+            groups_sealed: g.groups_sealed,
+            parity_jobs: g.parity_jobs,
+            reconstructions: g.tracker.reconstructions,
+            open_groups: g.open.len() + g.tracker.open_groups(),
+        }
+    }
+}
+
+// ------------------------------------------------------------------------
+// Per-shard data scheme
+// ------------------------------------------------------------------------
+
+/// The per-shard face of the cross-shard code: lives inside one shard's
+/// session as its [`RedundancyScheme`], forwards every sealed batch to
+/// the fleet state for group assignment, resolves its own data
+/// completions natively, and drains decoded slots owed to this shard
+/// through [`RedundancyScheme::drain_external`].
+pub struct CrossShardScheme {
+    shard: usize,
+    state: Arc<CrossShardState>,
+}
+
+impl CrossShardScheme {
+    pub fn new(shard: usize, state: Arc<CrossShardState>) -> CrossShardScheme {
+        CrossShardScheme { shard, state }
+    }
+}
+
+impl RedundancyScheme for CrossShardScheme {
+    fn name(&self) -> &'static str {
+        "cross-shard"
+    }
+
+    fn extra_instances(&self, _m: usize) -> usize {
+        // Parity lives in the tier's shared pool, not in any data shard.
+        0
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        PoolLayout { deployed: (0..m).collect(), parity: Vec::new(), approx: None }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let now = Instant::now();
+        let (group, slot) =
+            self.state
+                .offer(self.shard, batch.query_ids.clone(), batch.input.clone(), now);
+        DispatchPlan {
+            jobs: vec![(
+                Target::Deployed,
+                Job {
+                    kind: JobKind::Data { group, slot },
+                    input: batch.input,
+                    query_ids: batch.query_ids,
+                    dispatched_at: now,
+                },
+            )],
+            resolutions: self.state.drain_shard_resolutions(self.shard),
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        let mut out = Vec::new();
+        if let JobKind::Data { group, slot } = c.kind {
+            // Predictions go straight back to clients (§3.1), then feed
+            // the fleet decode state.
+            out.push(Resolution {
+                query_ids: c.query_ids.clone(),
+                at: c.finished_at,
+                outcome: Outcome::Native,
+            });
+            self.state.on_data(self.shard, group, slot, c.instance, c.output, c.finished_at);
+        }
+        out.extend(self.state.drain_shard_resolutions(self.shard));
+        out
+    }
+
+    fn drain_external(&mut self) -> Vec<Resolution> {
+        self.state.drain_shard_resolutions(self.shard)
+    }
+
+    fn reconstructions(&self) -> u64 {
+        self.state.reconstructions_for(self.shard)
+    }
+
+    fn telemetry(&self) -> Option<SchemeTelemetry> {
+        Some(self.state.scheme_telemetry())
+    }
+}
+
+// ------------------------------------------------------------------------
+// Parity leg
+// ------------------------------------------------------------------------
+
+/// Scheme of one shared-parity-pool session (one session per r_index):
+/// every sealed batch — the driver submits exactly one encoded parity
+/// batch's rows at a time, so batches align 1:1 with parity jobs — runs
+/// on the parity pool, resolves natively within this session, and its
+/// output feeds the fleet decode state via the route the driver
+/// recorded.
+pub(crate) struct ParityTapScheme {
+    r_index: usize,
+    state: Arc<CrossShardState>,
+    next_group: u64,
+}
+
+impl ParityTapScheme {
+    pub(crate) fn new(r_index: usize, state: Arc<CrossShardState>) -> ParityTapScheme {
+        ParityTapScheme { r_index, state, next_group: 0 }
+    }
+}
+
+impl RedundancyScheme for ParityTapScheme {
+    fn name(&self) -> &'static str {
+        "cross-shard-parity"
+    }
+
+    fn extra_instances(&self, _m: usize) -> usize {
+        0
+    }
+
+    fn layout(&self, m: usize) -> PoolLayout {
+        PoolLayout { deployed: (0..m).collect(), parity: Vec::new(), approx: None }
+    }
+
+    fn plan_dispatch(&mut self, batch: SealedBatch) -> DispatchPlan {
+        let gid = self.next_group;
+        self.next_group += 1;
+        DispatchPlan {
+            jobs: vec![(
+                Target::Deployed,
+                job(JobKind::Replica { group: gid, slot: 0 }, &batch),
+            )],
+            resolutions: Vec::new(),
+        }
+    }
+
+    fn on_completion(&mut self, c: Completion) -> Vec<Resolution> {
+        match c.kind {
+            JobKind::Replica { .. } => {
+                if let Some(&fid) = c.query_ids.first() {
+                    self.state.on_parity_output(
+                        self.r_index,
+                        fid,
+                        c.output.clone(),
+                        c.finished_at,
+                    );
+                }
+                vec![Resolution {
+                    query_ids: c.query_ids,
+                    at: c.finished_at,
+                    outcome: Outcome::Native,
+                }]
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// The shared parity pool: one session per parity index (each pool runs
+/// that index's parity model), all owned by one driver thread that
+/// submits [`ParityJob`]s and pumps completions back into the fleet
+/// state.
+pub(crate) struct ParityLeg {
+    tx: mpsc::Sender<ParityMsg>,
+    handle: Option<JoinHandle<Vec<RunResult>>>,
+    faults: Vec<Arc<FaultPlan>>,
+    per_pool: usize,
+}
+
+impl ParityLeg {
+    /// Build `r_max` parity sessions (`per` instances each) and start
+    /// the driver thread. `tx`/`rx` are the job channel the fleet state
+    /// already holds a sender of.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn start(
+        cfg: &ServiceConfig,
+        state: &Arc<CrossShardState>,
+        models: &ModelSet,
+        sample_query: &Tensor,
+        per: usize,
+        r_max: usize,
+        tx: mpsc::Sender<ParityMsg>,
+        rx: mpsc::Receiver<ParityMsg>,
+    ) -> anyhow::Result<ParityLeg> {
+        let mut handles = Vec::with_capacity(r_max);
+        let mut faults = Vec::with_capacity(r_max);
+        for ri in 0..r_max {
+            let mut pc = cfg.clone();
+            pc.m = per;
+            // Independent fault domain with a decorrelated seed; the
+            // tier's scheduled faults target data shard 0 only.
+            pc.seed =
+                SplitMix64::new(cfg.seed ^ 0x9A21_17CE ^ ((ri as u64) << 24)).next_u64();
+            pc.fault_schedule.clear();
+            // Teardown must terminate even if parity instances die:
+            // force an SLO backstop on the leg.
+            pc.slo = Some(cfg.slo.unwrap_or(Duration::from_secs(5)));
+            let leg_models = ModelSet {
+                deployed: models
+                    .parities
+                    .get(ri)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "cross-shard r_max={r_max} needs parity model {ri}, \
+                             ModelSet has {}",
+                            models.parities.len()
+                        )
+                    })?
+                    .clone(),
+                parities: Vec::new(),
+                approx: None,
+            };
+            let handle = ServiceBuilder::new(pc)
+                .with_scheme(Box::new(ParityTapScheme::new(ri, state.clone())))
+                .build(&leg_models, sample_query)?;
+            faults.push(handle.fault_plan());
+            handles.push(handle);
+        }
+        let driver_state = state.clone();
+        let handle = std::thread::Builder::new()
+            .name("cross-shard-parity".into())
+            .spawn(move || driver_loop(handles, rx, driver_state))
+            .expect("spawn cross-shard parity driver");
+        Ok(ParityLeg { tx, handle: Some(handle), faults, per_pool: per })
+    }
+
+    /// Instances in each per-r_index parity pool.
+    pub(crate) fn pool_size(&self) -> usize {
+        self.per_pool
+    }
+
+    /// Fault plan of the r_index-th parity pool (chaos drills).
+    pub(crate) fn fault_plan(&self, r_index: usize) -> Arc<FaultPlan> {
+        self.faults[r_index].clone()
+    }
+
+    /// Permanently kill one instance of the r_index-th parity pool.
+    pub(crate) fn kill(&self, r_index: usize, instance: usize) {
+        self.faults[r_index].kill(instance);
+    }
+
+    /// Stop the driver, drain the parity sessions, and return their run
+    /// records (parity queries, separate from client traffic).
+    pub(crate) fn stop(mut self) -> Vec<RunResult> {
+        let _ = self.tx.send(ParityMsg::Stop);
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Drop for ParityLeg {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = self.tx.send(ParityMsg::Stop);
+            let _ = h.join();
+        }
+    }
+}
+
+fn submit_parity(handles: &mut [ServiceHandle], state: &CrossShardState, job: ParityJob) {
+    let Some(h) = handles.get_mut(job.r_index) else {
+        log::error!("cross-shard: parity job for unprovisioned r_index {}", job.r_index);
+        return;
+    };
+    // The rows of one job are exactly one session batch (rows.len() ==
+    // the leg's batch_size), so the batch seals during the last submit
+    // and its first query id keys the route. The route is recorded
+    // before this thread next polls, and completions are only processed
+    // in poll — no race.
+    let mut first = None;
+    for row in job.rows {
+        let qid = h.submit(row);
+        first.get_or_insert(qid);
+    }
+    if let Some(fid) = first {
+        state.record_parity_route(job.r_index, fid, job.group);
+    }
+}
+
+fn driver_loop(
+    mut handles: Vec<ServiceHandle>,
+    rx: mpsc::Receiver<ParityMsg>,
+    state: Arc<CrossShardState>,
+) -> Vec<RunResult> {
+    let mut stopping = false;
+    while !stopping {
+        match rx.recv_timeout(Duration::from_millis(1)) {
+            Ok(ParityMsg::Job(job)) => submit_parity(&mut handles, &state, job),
+            Ok(ParityMsg::Stop) => stopping = true,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
+        }
+        // Drain the burst behind the first message before pumping.
+        while !stopping {
+            match rx.try_recv() {
+                Ok(ParityMsg::Job(job)) => submit_parity(&mut handles, &state, job),
+                Ok(ParityMsg::Stop) => stopping = true,
+                Err(_) => break,
+            }
+        }
+        for h in &mut handles {
+            let _ = h.poll();
+        }
+    }
+    // Absorb jobs that raced the stop signal (shards seal tail groups
+    // right up to their own drain), then drain and shut down. The leg's
+    // forced SLO makes drain terminate even with dead parity instances.
+    while let Ok(msg) = rx.try_recv() {
+        if let ParityMsg::Job(job) = msg {
+            submit_parity(&mut handles, &state, job);
+        }
+    }
+    handles
+        .into_iter()
+        .map(|mut h| {
+            let _ = h.drain();
+            h.shutdown()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(k: usize, r_min: usize, r_max: usize, shards: usize) -> CrossShardConfig {
+        CrossShardConfig::new(k, r_min, r_max, shards, Duration::from_millis(50))
+    }
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::new(vec![1, v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn config_bounds_are_enforced() {
+        for (k, r_min, r_max, shards) in
+            [(1usize, 1usize, 1usize, 4usize), (2, 0, 1, 4), (2, 2, 1, 4), (2, 1, 3, 4), (3, 1, 2, 2)]
+        {
+            let res = std::panic::catch_unwind(|| CrossShardState::new(cfg(k, r_min, r_max, shards)));
+            assert!(res.is_err(), "k={k} r_min={r_min} r_max={r_max} shards={shards} must be rejected");
+        }
+    }
+
+    #[test]
+    fn groups_stripe_across_distinct_shards() {
+        let st = CrossShardState::new(cfg(2, 1, 2, 3));
+        let now = Instant::now();
+        let (g0, s0) = st.offer(0, vec![10], t(vec![1.0, 1.0]), now);
+        assert_eq!((g0, s0), (0, 0));
+        // A second batch from the same shard must open a NEW group.
+        let (g1, s1) = st.offer(0, vec![11], t(vec![2.0, 2.0]), now);
+        assert_eq!((g1, s1), (1, 0));
+        assert_eq!(st.open_groups(), 2);
+        // A different shard joins (and seals) the first open group.
+        let (g2, s2) = st.offer(1, vec![12], t(vec![3.0, 3.0]), now);
+        assert_eq!((g2, s2), (0, 1));
+        assert_eq!(st.open_groups(), 1, "sealed group left the open set");
+        assert_eq!(st.group_r(0), Some(1), "healthy fleet seals at the floor");
+        assert!(st.contains(0));
+    }
+
+    #[test]
+    fn whole_shard_loss_decodes_and_routes_to_the_owning_shard() {
+        let st = CrossShardState::new(cfg(2, 1, 2, 3));
+        let now = Instant::now();
+        st.offer(0, vec![10], t(vec![1.0, 2.0]), now);
+        st.offer(1, vec![20], t(vec![3.0, 4.0]), now); // seals group 0
+        // Shard 0 answers; shard 1 is dead. The parity decodes slot 1
+        // and the decoded ids land in shard 1's queue only.
+        st.on_data(0, 0, 0, 0, t(vec![1.0, 2.0]), now);
+        assert!(st.drain_decoded(1, now).is_empty(), "nothing decodable yet");
+        st.on_parity(0, 0, t(vec![4.0, 6.0]), now);
+        let owed0 = st.drain_decoded(0, now);
+        assert!(owed0.is_empty(), "shard 0 resolved natively, nothing owed");
+        let owed1 = st.drain_decoded(1, now);
+        assert_eq!(owed1.len(), 1);
+        assert_eq!(owed1[0].0, vec![20]);
+        assert_eq!(st.reconstructions_for(1), 1);
+        assert_eq!(st.reconstructions_for(0), 0);
+        assert!(!st.contains(0), "fully resolved group evicted");
+    }
+
+    #[test]
+    fn early_data_buffers_until_the_group_seals() {
+        let st = CrossShardState::new(cfg(2, 1, 2, 2));
+        let now = Instant::now();
+        st.offer(0, vec![1], t(vec![1.0]), now);
+        // Completion for the open group's slot 0 before the seal.
+        st.on_data(0, 0, 0, 0, t(vec![1.0]), now);
+        st.offer(1, vec![2], t(vec![2.0]), now); // seals; replays the buffer
+        // Parity alone now decodes slot 1.
+        st.on_parity(0, 0, t(vec![3.0]), now);
+        let owed = st.drain_decoded(1, now);
+        assert_eq!(owed.len(), 1);
+        assert_eq!(owed[0].0, vec![2]);
+    }
+
+    #[test]
+    fn flush_short_seals_the_tail_with_phantom_slots() {
+        let st = CrossShardState::new(cfg(3, 1, 3, 3));
+        let now = Instant::now();
+        // Shape the phantom-output template: any observed output does it
+        // (here a completion for a long-gone group).
+        st.on_data(0, 999, 0, 0, t(vec![0.0, 0.0]), now);
+        // One lonely slot from shard 0; the fleet then goes quiet.
+        st.offer(0, vec![7], t(vec![1.0, 1.0]), now);
+        st.flush_open(now);
+        assert_eq!(st.open_groups(), 0);
+        assert!(st.contains(0), "short group registered with the tracker");
+        // Its real slot is the only unresolved one (phantoms resolved).
+        assert_eq!(st.unresolved_slots(0), vec![0]);
+        // The parity decodes it even though the group never filled.
+        st.on_parity(0, 0, t(vec![5.0, 5.0]), now);
+        let owed = st.drain_decoded(0, now);
+        assert_eq!(owed.len(), 1);
+        assert_eq!(owed[0].0, vec![7]);
+    }
+
+    #[test]
+    fn stale_open_groups_short_seal_via_the_sweep() {
+        let st = CrossShardState::new(cfg(2, 1, 2, 2));
+        let t0 = Instant::now();
+        st.on_data(0, 999, 0, 0, t(vec![0.0]), t0); // phantom template
+        st.offer(0, vec![9], t(vec![1.0]), t0);
+        assert_eq!(st.open_groups(), 1);
+        // Past the horizon (200 ms floor), any drain sweeps it sealed.
+        let later = t0 + Duration::from_millis(400);
+        let _ = st.drain_decoded(0, later);
+        assert_eq!(st.open_groups(), 0, "stale open group short-sealed");
+        assert!(st.contains(0));
+        st.on_parity(0, 0, t(vec![4.0]), later);
+        let owed = st.drain_decoded(0, later);
+        assert_eq!(owed.len(), 1, "tail query decoded instead of riding the SLO");
+        assert_eq!(owed[0].0, vec![9]);
+    }
+
+    #[test]
+    fn scheme_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<CrossShardScheme>();
+        assert_send::<ParityTapScheme>();
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn bare_session_rejects_cross_shard_mode() {
+        use crate::cluster::hardware::GPU;
+        use crate::coordinator::service::Mode;
+        use crate::runtime::engine::Executable;
+
+        let exe = Executable::load("no/such/file", "m.test", &[4], 1, 8).unwrap();
+        let models = ModelSet { deployed: exe, parities: Vec::new(), approx: None };
+        let cfg = ServiceConfig::defaults(
+            Mode::CrossShard {
+                k: 2,
+                r_min: 1,
+                r_max: 2,
+                halflife: Duration::from_millis(500),
+            },
+            &GPU,
+        );
+        let sample = Tensor::zeros(vec![4]);
+        let err = ServiceBuilder::new(cfg).build(&models, &sample);
+        assert!(err.is_err(), "cross-shard groups span sessions; a bare build must fail");
+        assert!(err.unwrap_err().to_string().contains("CrossShardFrontend"));
+    }
+}

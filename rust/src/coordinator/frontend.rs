@@ -154,6 +154,12 @@ struct ClientCore {
     /// Admission-fairness weight (see [`ServingFrontend::client_with_weight`]):
     /// this client's share of the load limit is `weight / Σ weights`.
     weight: f64,
+    /// Whether `weight` is currently folded into the frontend's total.
+    /// The sharded tier mints one passive leg per shard and activates
+    /// only the routed one, so weighted shares are not diluted by legs
+    /// the router never sends traffic to (see
+    /// [`ServiceClient::activate_weight`]).
+    weight_registered: AtomicBool,
     submitted: AtomicU64,
     resolved: AtomicU64,
     rejected: AtomicU64,
@@ -168,11 +174,12 @@ struct ClientCore {
 }
 
 impl ClientCore {
-    fn new(id: u64, window: Duration, weight: f64) -> ClientCore {
+    fn new(id: u64, window: Duration, weight: f64, registered: bool) -> ClientCore {
         assert!(weight.is_finite() && weight > 0.0, "client weight must be finite and > 0");
         ClientCore {
             id,
             weight,
+            weight_registered: AtomicBool::new(registered),
             submitted: AtomicU64::new(0),
             resolved: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -324,6 +331,7 @@ impl ServiceClient {
             self.shared.next_client.fetch_add(1, Ordering::Relaxed),
             self.shared.client_window,
             self.core.weight,
+            true,
         ));
         self.shared.add_weight(self.core.weight);
         ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
@@ -332,6 +340,32 @@ impl ServiceClient {
     /// This client's admission-fairness weight.
     pub fn weight(&self) -> f64 {
         self.core.weight
+    }
+
+    /// Fold this client's fairness weight into the frontend's total
+    /// (idempotent across clones — the weight counts once). The sharded
+    /// tier calls this on the leg its router assigns a client to, so a
+    /// shard's fair-share denominator counts only the clients actually
+    /// routed to it.
+    pub fn activate_weight(&self) {
+        if !self.core.weight_registered.swap(true, Ordering::SeqCst) {
+            self.shared.add_weight(self.core.weight);
+        }
+    }
+
+    /// Remove this client's fairness weight from the frontend's total
+    /// (idempotent) — the counterpart of
+    /// [`ServiceClient::activate_weight`] when the router moves the
+    /// client to another shard (drain/restore).
+    pub fn deactivate_weight(&self) {
+        if self.core.weight_registered.swap(false, Ordering::SeqCst) {
+            self.shared.add_weight(-self.core.weight);
+        }
+    }
+
+    /// Whether this client's weight is currently registered here.
+    pub fn weight_active(&self) -> bool {
+        self.core.weight_registered.load(Ordering::SeqCst)
     }
 
     /// Submit one query through admission control. On success the query
@@ -614,9 +648,31 @@ impl ServingFrontend {
             self.shared.next_client.fetch_add(1, Ordering::Relaxed),
             self.shared.client_window,
             weight,
+            true,
         ));
         self.shared.add_weight(weight);
         ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
+    }
+
+    /// Mint a client whose fairness weight is *not* yet counted in this
+    /// frontend's total. The sharded tier mints one such leg per shard
+    /// and then [`ServiceClient::activate_weight`]s only the leg its
+    /// router assigns — weights follow the routing instead of being
+    /// diluted across every shard.
+    pub fn passive_client_with_weight(&self, weight: f64) -> ServiceClient {
+        let core = Arc::new(ClientCore::new(
+            self.shared.next_client.fetch_add(1, Ordering::Relaxed),
+            self.shared.client_window,
+            weight,
+            false,
+        ));
+        ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
+    }
+
+    /// Sum of the fairness weights currently registered with this
+    /// frontend (the fair-share denominator).
+    pub fn total_weight(&self) -> f64 {
+        self.shared.total_weight()
     }
 
     /// The admission policy clients are subject to.
@@ -650,6 +706,12 @@ impl ServingFrontend {
     /// Fail an instance of this frontend's cluster for a bounded window.
     pub fn fail_instance_for(&self, instance: usize, dur: Duration) {
         self.faults.fail_for(instance, dur);
+    }
+
+    /// This frontend's cluster fault plan (the surface the deterministic
+    /// fault-injection harness in `tests/common` scripts against).
+    pub fn fault_plan(&self) -> Arc<FaultPlan> {
+        self.faults.clone()
     }
 
     /// Stop admitting, let in-flight queries resolve (deliveries keep
@@ -945,6 +1007,7 @@ mod tests {
                     shared.next_client.fetch_add(1, Ordering::Relaxed),
                     shared.client_window,
                     weight,
+                    true,
                 )),
                 shared: shared.clone(),
                 tx: tx.clone(),
@@ -970,6 +1033,48 @@ mod tests {
         shared.session_backlog.store(2 * LIMIT, Ordering::Release);
         assert!(!light.under_fair_share(LIMIT, LIMIT));
         assert!(matches!(light.admit(), Err(SubmitError::Rejected { .. })));
+    }
+
+    /// Passive legs count nothing until activated; activation and
+    /// deactivation are idempotent (clones share the flag), so a weight
+    /// is folded in exactly once no matter how often the router rehomes.
+    #[test]
+    fn passive_weight_activation_is_idempotent() {
+        let (tx, _rx) = mpsc::channel();
+        let tx = Arc::new(Mutex::new(tx));
+        let shared = Arc::new(FrontendShared {
+            policy: AdmissionPolicy::Unbounded,
+            client_window: Duration::from_secs(1),
+            next_id: AtomicU64::new(0),
+            next_client: AtomicU64::new(0),
+            queued: AtomicUsize::new(0),
+            in_submit: AtomicUsize::new(0),
+            session_backlog: AtomicUsize::new(0),
+            total_weight: AtomicU64::new(0.0f64.to_bits()),
+            window_p99_us: AtomicU64::new(0),
+            rejected_total: AtomicU64::new(0),
+            rejects_unfolded: AtomicU64::new(0),
+            open: AtomicBool::new(true),
+            gate: Mutex::new(()),
+            gate_cv: Condvar::new(),
+            window: Mutex::new(LatencyWindow::default()),
+        });
+        let passive = ServiceClient {
+            core: Arc::new(ClientCore::new(0, Duration::from_secs(1), 2.5, false)),
+            shared: shared.clone(),
+            tx,
+        };
+        assert!(!passive.weight_active());
+        assert_eq!(shared.total_weight(), 0.0);
+        let clone = passive.clone();
+        passive.activate_weight();
+        clone.activate_weight(); // shared flag: counted once
+        assert!(clone.weight_active());
+        assert!((shared.total_weight() - 2.5).abs() < 1e-12);
+        clone.deactivate_weight();
+        passive.deactivate_weight();
+        assert!(!passive.weight_active());
+        assert!(shared.total_weight().abs() < 1e-12);
     }
 
     /// End-to-end routing is covered by `tests/frontend_concurrency.rs`

@@ -35,6 +35,13 @@
 //!   shard-transparent [`shards::ShardedClient`]s, an optional fleet-wide
 //!   offered-load cap, per-shard fault injection, and shutdown that
 //!   merges per-shard results into one run record.
+//! - [`cross_shard`] makes the coding groups themselves span those fault
+//!   domains: [`shards::CrossShardFrontend`] stripes each group's k data
+//!   batches over k distinct shards and serves parities from a shared
+//!   cross-shard pool, with per-group r sized by a fleet-level
+//!   straggler predictor ([`adaptive::FleetPredictor`]) — a whole-shard
+//!   kill costs each group at most one slot and decodes like any
+//!   single-instance loss.
 //! - [`metrics`] carries both aggregation surfaces: cumulative
 //!   [`metrics::RunMetrics`] for a whole run and the sliding
 //!   [`metrics::LatencyWindow`] behind every live snapshot.
@@ -45,6 +52,7 @@
 pub mod adaptive;
 pub mod batcher;
 pub mod coding;
+pub mod cross_shard;
 pub mod decoder;
 pub mod encoder;
 pub mod frontend;

@@ -232,6 +232,19 @@ pub trait RedundancyScheme: Send {
     /// resolves each query at most once (first verdict wins).
     fn on_completion(&mut self, c: Completion) -> Vec<Resolution>;
 
+    /// Resolutions that originated *outside* this session's own dispatch
+    /// and completion callbacks — e.g. a cross-shard decode performed by
+    /// another session's parity leg
+    /// ([`crate::coordinator::cross_shard`]). The session calls this at
+    /// its pump cadence, so externally decoded queries resolve promptly
+    /// even when this session's own cluster is entirely dead and no
+    /// completion will ever fire again. The default is empty, which is
+    /// correct for any scheme whose resolutions always ride a local
+    /// callback.
+    fn drain_external(&mut self) -> Vec<Resolution> {
+        Vec::new()
+    }
+
     /// Total decoder reconstructions performed so far.
     fn reconstructions(&self) -> u64 {
         0
@@ -260,6 +273,14 @@ impl Mode {
                     ),
                 ))
             }
+            // A cross-shard coding group spans sessions, so no single
+            // session can instantiate it. ServiceBuilder::build rejects
+            // the mode with a proper error before ever reaching here;
+            // the sharded tier injects per-shard CrossShardScheme
+            // instances via ServiceBuilder::with_scheme instead.
+            Mode::CrossShard { .. } => unreachable!(
+                "Mode::CrossShard is served through shards::CrossShardFrontend"
+            ),
         }
     }
 }
@@ -325,11 +346,11 @@ impl ParmScheme {
             }
             _ => return,
         };
-        for (_slot, ids, _out, reconstructed) in res.resolved {
+        for sr in res.resolved {
             out.push(Resolution {
-                query_ids: ids,
+                query_ids: sr.query_ids,
                 at,
-                outcome: if reconstructed {
+                outcome: if sr.reconstructed {
                     Outcome::Reconstructed
                 } else {
                     Outcome::Native

@@ -41,6 +41,16 @@ pub enum Mode {
     /// `[r_min, r_max]` from a learned straggler predictor whose
     /// observations decay with the given half-life.
     Rateless { k: usize, r_min: usize, r_max: usize, halflife: Duration },
+    /// Cross-shard coding ([`crate::coordinator::cross_shard`]): coding
+    /// groups stripe their k data batches over k *distinct* shards and
+    /// send parities to a shared cross-shard pool, so a whole-shard
+    /// fault costs each group at most one slot. Per-group r in
+    /// `[r_min, r_max]` comes from a fleet-level straggler predictor
+    /// with the given evidence half-life. Serve it through
+    /// [`crate::coordinator::shards::CrossShardFrontend`] — a bare
+    /// session cannot host it (groups span sessions), and
+    /// `ServiceBuilder::build` rejects it with an error.
+    CrossShard { k: usize, r_min: usize, r_max: usize, halflife: Duration },
 }
 
 impl Mode {
@@ -56,6 +66,10 @@ impl Mode {
             Mode::Replication { .. } => 0,
             // Provisioned for the ceiling: r_max parity pools.
             Mode::Rateless { k, r_max, .. } => (m + k - 1) / k * r_max,
+            // Per *data shard* this mode adds nothing: the parity pool
+            // is provisioned separately by the cross-shard tier
+            // (ceil(shards*m/k) instances per r index).
+            Mode::CrossShard { .. } => 0,
         }
     }
 
@@ -67,6 +81,7 @@ impl Mode {
             Mode::ApproxBackup { .. } => "approx-backup",
             Mode::Replication { .. } => "replication",
             Mode::Rateless { .. } => "rateless",
+            Mode::CrossShard { .. } => "cross-shard",
         }
     }
 }

@@ -67,11 +67,14 @@ pub struct Resolved {
 /// Builds the cluster substrate for a [`ServiceHandle`].
 pub struct ServiceBuilder {
     cfg: ServiceConfig,
+    /// Explicit strategy object overriding `cfg.mode` (see
+    /// [`ServiceBuilder::with_scheme`]).
+    scheme: Option<Box<dyn RedundancyScheme>>,
 }
 
 impl ServiceBuilder {
     pub fn new(cfg: ServiceConfig) -> ServiceBuilder {
-        ServiceBuilder { cfg }
+        ServiceBuilder { cfg, scheme: None }
     }
 
     pub fn config(&self) -> &ServiceConfig {
@@ -83,13 +86,35 @@ impl ServiceBuilder {
         &mut self.cfg
     }
 
+    /// Serve this session with an explicit scheme instance instead of
+    /// instantiating `cfg.mode`. This is how schemes that share state
+    /// *across* sessions are injected — the cross-shard tier hands each
+    /// shard a [`crate::coordinator::cross_shard::CrossShardScheme`]
+    /// bound to the fleet's shared coding state. The scheme's
+    /// `extra_instances`/`layout` drive pool provisioning exactly as a
+    /// mode-instantiated scheme's would.
+    pub fn with_scheme(mut self, scheme: Box<dyn RedundancyScheme>) -> ServiceBuilder {
+        self.scheme = Some(scheme);
+        self
+    }
+
     /// Assemble the cluster and start serving. `sample_query` calibrates
     /// the service-time model (any representative query tensor).
     pub fn build(self, models: &ModelSet, sample_query: &Tensor) -> anyhow::Result<ServiceHandle> {
-        let cfg = self.cfg;
+        let ServiceBuilder { cfg, scheme } = self;
         let started = Instant::now();
         let mut rng = Pcg64::new(cfg.seed);
-        let scheme = cfg.mode.scheme();
+        let scheme = match scheme {
+            Some(s) => s,
+            None => {
+                anyhow::ensure!(
+                    !matches!(cfg.mode, crate::coordinator::service::Mode::CrossShard { .. }),
+                    "Mode::CrossShard coding groups span sessions; serve it through \
+                     shards::CrossShardFrontend (a bare session cannot host it)"
+                );
+                cfg.mode.scheme()
+            }
+        };
 
         // ---- cluster substrate ----
         let extra = scheme.extra_instances(cfg.m);
@@ -551,6 +576,13 @@ impl ServiceHandle {
         }
         while let Ok(c) = self.rx.try_recv() {
             self.on_completion(c);
+        }
+        // Resolutions decided outside this session's own completions
+        // (cross-shard decodes performed by the shared parity leg).
+        // Pump-driven, so they land even when this session's cluster is
+        // entirely dead and no completion will ever arrive again.
+        for r in self.scheme.drain_external() {
+            self.apply_resolution(r);
         }
         self.sweep_slo();
     }

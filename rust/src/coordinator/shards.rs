@@ -40,13 +40,18 @@
 //! concatenate), and [`ShardedFrontend::window`] merges the live
 //! per-shard [`WindowSnapshot`]s for fleet-wide p50/p99/p99.9.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+use crate::cluster::faults::FaultPlan;
+use crate::coordinator::cross_shard::{
+    CrossShardConfig, CrossShardScheme, CrossShardState, CrossShardTelemetry, ParityLeg,
+};
 use crate::coordinator::frontend::{ClientStats, ServiceClient, ServingFrontend, SubmitError};
 use crate::coordinator::metrics::WindowSnapshot;
-use crate::coordinator::service::{ModelSet, RunResult, ServiceConfig};
+use crate::coordinator::scheme::RedundancyScheme;
+use crate::coordinator::service::{Mode, ModelSet, RunResult, ServiceConfig};
 use crate::coordinator::session::{QueryId, Resolved, ServiceBuilder};
 use crate::tensor::Tensor;
 
@@ -67,8 +72,15 @@ fn splitmix64(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
-fn tag(shard: usize, fid: QueryId) -> QueryId {
+/// Tag a shard-local query id with its serving shard (the top byte), so
+/// ids stay unique across every leg of the tier. Public so property
+/// suites can pin the no-collision invariant directly.
+pub fn tag_id(shard: usize, fid: QueryId) -> QueryId {
     ((shard as u64) << SHARD_SHIFT) | fid
+}
+
+fn tag(shard: usize, fid: QueryId) -> QueryId {
+    tag_id(shard, fid)
 }
 
 /// The shard a sharded [`QueryId`] was served by.
@@ -171,11 +183,79 @@ impl ShardRouter {
     }
 }
 
+/// Sentinel for "no shard holds this client's weight".
+const NO_SHARD: usize = usize::MAX;
+
+/// One tier client's per-shard legs plus which shard currently holds
+/// its admission-fairness weight. Weights *follow the router*: a leg
+/// registers its weight only on the shard the router assigns, and
+/// drain/restore moves it — so a shard's fair-share denominator counts
+/// exactly the clients it actually serves (the ROADMAP dilution fix).
+struct WeightHome {
+    client_id: u64,
+    legs: Vec<ServiceClient>,
+    /// Shard whose frontend currently holds the weight ([`NO_SHARD`]
+    /// before first routing or when every shard is down).
+    active: AtomicUsize,
+}
+
+impl WeightHome {
+    fn rehome(&self, router: &ShardRouter) {
+        let next = router.route(self.client_id).unwrap_or(NO_SHARD);
+        let prev = self.active.swap(next, Ordering::SeqCst);
+        if prev == next {
+            return;
+        }
+        if prev != NO_SHARD {
+            self.legs[prev].deactivate_weight();
+        }
+        if next != NO_SHARD {
+            self.legs[next].activate_weight();
+        }
+    }
+}
+
+impl Drop for WeightHome {
+    fn drop(&mut self) {
+        // The last clone of this client is gone: give its weight back to
+        // whatever shard currently holds it, so transient clients never
+        // permanently inflate a shard's fair-share denominator.
+        let active = self.active.load(Ordering::SeqCst);
+        if active != NO_SHARD {
+            self.legs[active].deactivate_weight();
+        }
+    }
+}
+
 /// State shared by the tier's frontend handle and every client.
 struct ShardShared {
     router: RwLock<ShardRouter>,
     global_backlog: Option<usize>,
     next_client: AtomicU64,
+    /// Every live client's weight home (weights move on drain/restore).
+    /// Weak: the strong references live in the `ShardedClient` clones,
+    /// so a dropped client's home is pruned on the next sweep instead
+    /// of accumulating forever.
+    homes: Mutex<Vec<std::sync::Weak<WeightHome>>>,
+}
+
+impl ShardShared {
+    /// Re-derive every live client's weight placement from the current
+    /// ring, pruning dropped clients (lock order: router before homes,
+    /// everywhere — including the mint path, so a client minted
+    /// concurrently with a drain is either swept here or sees the
+    /// updated ring itself).
+    fn rehome_all(&self) {
+        let router = self.router.read().unwrap();
+        let mut homes = self.homes.lock().unwrap();
+        homes.retain(|w| match w.upgrade() {
+            Some(home) => {
+                home.rehome(&router);
+                true
+            }
+            None => false,
+        });
+    }
 }
 
 /// N independent serving sessions behind one consistent-hash router.
@@ -218,6 +298,26 @@ impl ShardedFrontend {
         sample_query: &Tensor,
     ) -> anyhow::Result<ShardedFrontend> {
         anyhow::ensure!(
+            !matches!(cfg.mode, Mode::CrossShard { .. }),
+            "Mode::CrossShard coding groups span shards; serve it through \
+             CrossShardFrontend::start"
+        );
+        ShardedFrontend::start_with(cfg, spec, models, sample_query, |_| None)
+    }
+
+    /// [`ShardedFrontend::start`] with an optional per-shard scheme
+    /// override: `scheme_for_shard(s)` returning `Some` injects that
+    /// strategy into shard s's session (how the cross-shard tier binds
+    /// every shard to one fleet-shared coding state); `None` falls back
+    /// to instantiating `cfg.mode` as usual.
+    pub(crate) fn start_with(
+        cfg: ServiceConfig,
+        spec: ShardSpec,
+        models: &ModelSet,
+        sample_query: &Tensor,
+        mut scheme_for_shard: impl FnMut(usize) -> Option<Box<dyn RedundancyScheme>>,
+    ) -> anyhow::Result<ShardedFrontend> {
+        anyhow::ensure!(
             (1..=MAX_SHARDS).contains(&spec.shards),
             "shards must be in 1..={MAX_SHARDS}, got {}",
             spec.shards
@@ -233,7 +333,11 @@ impl ShardedFrontend {
                 // baseline the tier exists to preserve.
                 shard_cfg.fault_schedule.clear();
             }
-            frontends.push(ServiceBuilder::new(shard_cfg).serve(models, sample_query)?);
+            let mut builder = ServiceBuilder::new(shard_cfg);
+            if let Some(scheme) = scheme_for_shard(s) {
+                builder = builder.with_scheme(scheme);
+            }
+            frontends.push(builder.serve(models, sample_query)?);
         }
         Ok(ShardedFrontend {
             frontends,
@@ -241,6 +345,7 @@ impl ShardedFrontend {
                 router: RwLock::new(ShardRouter::new(spec.shards, spec.vnodes)),
                 global_backlog: spec.global_backlog,
                 next_client: AtomicU64::new(0),
+                homes: Mutex::new(Vec::new()),
             }),
         })
     }
@@ -250,20 +355,49 @@ impl ShardedFrontend {
     }
 
     /// Mint a shard-transparent client (a fresh identity on every shard,
-    /// routed by its id).
+    /// routed by its id) with the default fairness weight of 1.
     ///
-    /// Note on admission fairness: each leg registers the default weight
-    /// on *every* shard, so a shard's fair-share denominator counts the
-    /// whole fleet of tier clients, not just the ones routed to it —
-    /// weighted shares are diluted by the shard count (the per-client
-    /// one-slot floor and the 2x-limit ceiling still apply). Per-routed-
-    /// shard weight accounting is an open item (see ROADMAP).
+    /// Admission fairness follows the routing: the client's weight is
+    /// registered only on the shard the router currently assigns it,
+    /// and moves when drain/restore remaps the client — so a shard's
+    /// weighted fair shares are computed over exactly the clients it
+    /// serves, undiluted by the rest of the fleet.
     pub fn client(&self) -> ShardedClient {
-        ShardedClient {
-            id: self.shared.next_client.fetch_add(1, Ordering::Relaxed),
-            legs: self.frontends.iter().map(ServingFrontend::client).collect(),
-            shared: self.shared.clone(),
+        self.client_with_weight(1.0)
+    }
+
+    /// [`ShardedFrontend::client`] with an explicit admission-fairness
+    /// weight (see [`ServingFrontend::client_with_weight`] for the
+    /// carve-out semantics on the routed shard).
+    pub fn client_with_weight(&self, weight: f64) -> ShardedClient {
+        let id = self.shared.next_client.fetch_add(1, Ordering::Relaxed);
+        let legs: Vec<ServiceClient> = self
+            .frontends
+            .iter()
+            .map(|f| f.passive_client_with_weight(weight))
+            .collect();
+        let home = Arc::new(WeightHome {
+            client_id: id,
+            legs: legs.clone(),
+            active: AtomicUsize::new(NO_SHARD),
+        });
+        {
+            // Hold router (read) + homes across rehome AND registration
+            // — same order as rehome_all — so a concurrent drain/restore
+            // cannot slip between them and leave this client's weight on
+            // a shard the router no longer assigns it.
+            let router = self.shared.router.read().unwrap();
+            let mut homes = self.shared.homes.lock().unwrap();
+            home.rehome(&router);
+            homes.push(Arc::downgrade(&home));
         }
+        ShardedClient { id, legs, home, shared: self.shared.clone() }
+    }
+
+    /// Fairness weight currently registered with one shard's frontend
+    /// (observability for the weight-follows-router invariant).
+    pub fn shard_total_weight(&self, shard: usize) -> f64 {
+        self.frontends[shard].total_weight()
     }
 
     /// The shard the router currently assigns to `client_id` (`None` if
@@ -275,14 +409,18 @@ impl ShardedFrontend {
     /// Take a shard out of the routing ring: *subsequent* submits from
     /// its clients walk clockwise to the next live shard, while queries
     /// already in the shard keep resolving and its session still shows
-    /// up (and is drained) in [`ShardedFrontend::shutdown`].
+    /// up (and is drained) in [`ShardedFrontend::shutdown`]. Remapped
+    /// clients' fairness weights move with them.
     pub fn drain_shard(&self, shard: usize) {
         self.shared.router.write().unwrap().set_down(shard, true);
+        self.shared.rehome_all();
     }
 
-    /// Put a drained shard back into the ring.
+    /// Put a drained shard back into the ring (its original clients'
+    /// weights return with their routes).
     pub fn restore_shard(&self, shard: usize) {
         self.shared.router.write().unwrap().set_down(shard, false);
+        self.shared.rehome_all();
     }
 
     /// Live shard count (shards not drained).
@@ -301,6 +439,12 @@ impl ShardedFrontend {
     /// Fail one instance of one shard for a bounded window.
     pub fn fail_instance_for(&self, shard: usize, instance: usize, dur: Duration) {
         self.frontends[shard].fail_instance_for(instance, dur);
+    }
+
+    /// One shard's cluster fault plan (the surface the deterministic
+    /// fault-injection harness in `tests/common` scripts against).
+    pub fn fault_plan(&self, shard: usize) -> Arc<FaultPlan> {
+        self.frontends[shard].fault_plan()
     }
 
     /// Summed admission-load estimate across every shard (what the
@@ -355,6 +499,9 @@ pub struct ShardedClient {
     id: u64,
     /// One per-shard identity, indexed by shard.
     legs: Vec<ServiceClient>,
+    /// Keeps this client's weight home alive; when the last clone drops,
+    /// the home's Drop releases the weight and the tier prunes it.
+    home: Arc<WeightHome>,
     shared: Arc<ShardShared>,
 }
 
@@ -367,6 +514,17 @@ impl ShardedClient {
     /// The shard the router currently assigns this client to.
     pub fn shard(&self) -> Option<usize> {
         self.shared.router.read().unwrap().route(self.id)
+    }
+
+    /// The shard currently holding this client's admission weight
+    /// (`None` when every shard is down). Equal to
+    /// [`ShardedClient::shard`] except in the instant between a
+    /// drain/restore and its rehome sweep.
+    pub fn weight_shard(&self) -> Option<usize> {
+        match self.home.active.load(Ordering::SeqCst) {
+            NO_SHARD => None,
+            s => Some(s),
+        }
     }
 
     /// Submit one query through the routed shard's admission control
@@ -443,6 +601,219 @@ impl ShardedClient {
     pub fn window(&self) -> WindowSnapshot {
         let snaps: Vec<WindowSnapshot> = self.legs.iter().map(ServiceClient::window).collect();
         WindowSnapshot::merge_all(&snaps)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Cross-shard coding tier
+// ------------------------------------------------------------------------
+
+/// The sharded tier with coding groups that *span* the shards
+/// ([`Mode::CrossShard`]): every group stripes its k data batches over k
+/// distinct shards and sends its parities to a shared cross-shard pool,
+/// so killing an entire shard costs each group at most one slot — which
+/// decodes like any single-instance loss. Group redundancy is sized by
+/// a fleet-level straggler predictor that merges per-shard estimates
+/// (see [`crate::coordinator::cross_shard`] for the data flow).
+///
+/// The client surface is identical to [`ShardedFrontend`]'s — the same
+/// [`ShardedClient`] type, routing, admission, weight-follows-router
+/// fairness, windows, and merged shutdown — plus the parity pool's own
+/// run records and the fleet coding telemetry.
+pub struct CrossShardFrontend {
+    tier: ShardedFrontend,
+    parity: ParityLeg,
+    state: Arc<CrossShardState>,
+    /// Deployed instances per data shard ([`CrossShardFrontend::kill_shard`]).
+    shard_m: usize,
+}
+
+/// What [`CrossShardFrontend::shutdown`] returns.
+pub struct CrossShardRunResult {
+    /// The data shards' merged + per-shard records (client traffic).
+    pub fleet: ShardedRunResult,
+    /// The shared parity pool's session records, in r_index order.
+    /// These count *parity* queries, deliberately kept out of the fleet
+    /// record so client-traffic conservation stays auditable.
+    pub parity: Vec<RunResult>,
+    /// Final fleet coding telemetry (sealed groups, parity jobs,
+    /// reconstructions, per-shard unavailability).
+    pub telemetry: CrossShardTelemetry,
+}
+
+impl CrossShardFrontend {
+    /// Stand up the cross-shard tier: `spec.shards` data shards (each an
+    /// independent session running [`CrossShardScheme`] against one
+    /// fleet-shared coding state) plus `r_max` shared parity sessions of
+    /// `ceil(shards·m / k)` instances each (ParM's m/k provisioning at
+    /// fleet scale). Requires `cfg.mode` to be [`Mode::CrossShard`] and
+    /// `spec.shards >= k`; `models` must carry `r_max` parity
+    /// executables.
+    pub fn start(
+        cfg: ServiceConfig,
+        spec: ShardSpec,
+        models: &ModelSet,
+        sample_query: &Tensor,
+    ) -> anyhow::Result<CrossShardFrontend> {
+        let Mode::CrossShard { k, r_min, r_max, halflife } = cfg.mode else {
+            anyhow::bail!(
+                "CrossShardFrontend needs Mode::CrossShard, got mode {:?}",
+                cfg.mode.name()
+            );
+        };
+        anyhow::ensure!(
+            spec.shards >= k,
+            "cross-shard groups stripe k={k} slots over distinct shards; \
+             need shards >= k, got {}",
+            spec.shards
+        );
+        let state = Arc::new(CrossShardState::new(CrossShardConfig::new(
+            k,
+            r_min,
+            r_max,
+            spec.shards,
+            halflife,
+        )));
+        // Wire the parity channel before any shard can seal a group.
+        let (ptx, prx) = mpsc::channel();
+        state.set_parity_sender(ptx.clone());
+        let tier = {
+            let st = state.clone();
+            ShardedFrontend::start_with(cfg.clone(), spec, models, sample_query, move |s| {
+                Some(Box::new(CrossShardScheme::new(s, st.clone())) as Box<dyn RedundancyScheme>)
+            })?
+        };
+        let per = (spec.shards * cfg.m + k - 1) / k;
+        let parity =
+            ParityLeg::start(&cfg, &state, models, sample_query, per, r_max, ptx, prx)?;
+        Ok(CrossShardFrontend { tier, parity, state, shard_m: cfg.m })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.tier.shards()
+    }
+
+    /// Instances in each per-r_index shared parity pool.
+    pub fn parity_pool_size(&self) -> usize {
+        self.parity.pool_size()
+    }
+
+    /// Mint a shard-transparent client (same surface as
+    /// [`ShardedFrontend::client`]).
+    pub fn client(&self) -> ShardedClient {
+        self.tier.client()
+    }
+
+    /// Mint a client with an explicit admission-fairness weight.
+    pub fn client_with_weight(&self, weight: f64) -> ShardedClient {
+        self.tier.client_with_weight(weight)
+    }
+
+    /// The shard the router currently assigns to `client_id`.
+    pub fn route_of(&self, client_id: u64) -> Option<usize> {
+        self.tier.route_of(client_id)
+    }
+
+    /// Take a data shard out of the routing ring (in-flight queries keep
+    /// resolving; stranded open groups short-seal at the loss horizon).
+    pub fn drain_shard(&self, shard: usize) {
+        self.tier.drain_shard(shard);
+    }
+
+    /// Put a drained shard back into the ring.
+    pub fn restore_shard(&self, shard: usize) {
+        self.tier.restore_shard(shard);
+    }
+
+    pub fn live_shards(&self) -> usize {
+        self.tier.live_shards()
+    }
+
+    /// Permanently kill one deployed instance of one data shard.
+    pub fn kill_instance(&self, shard: usize, instance: usize) {
+        self.tier.kill_instance(shard, instance);
+    }
+
+    /// Kill *every* deployed instance of one data shard — the
+    /// whole-fault-domain loss this tier exists to absorb: each coding
+    /// group loses at most its one slot there and decodes from the
+    /// shared parity pool.
+    pub fn kill_shard(&self, shard: usize) {
+        for i in 0..self.shard_m {
+            self.tier.kill_instance(shard, i);
+        }
+    }
+
+    /// Fail one instance of one data shard for a bounded window.
+    pub fn fail_instance_for(&self, shard: usize, instance: usize, dur: Duration) {
+        self.tier.fail_instance_for(shard, instance, dur);
+    }
+
+    /// One data shard's fault plan (harness surface).
+    pub fn fault_plan(&self, shard: usize) -> Arc<FaultPlan> {
+        self.tier.fault_plan(shard)
+    }
+
+    /// The r_index-th parity pool's fault plan (harness surface).
+    pub fn parity_fault_plan(&self, r_index: usize) -> Arc<FaultPlan> {
+        self.parity.fault_plan(r_index)
+    }
+
+    /// Permanently kill one instance of the r_index-th parity pool.
+    pub fn kill_parity_instance(&self, r_index: usize, instance: usize) {
+        self.parity.kill(r_index, instance);
+    }
+
+    /// Summed admission-load estimate across the data shards.
+    pub fn load(&self) -> usize {
+        self.tier.load()
+    }
+
+    /// Total admission rejects across the data shards.
+    pub fn rejected(&self) -> u64 {
+        self.tier.rejected()
+    }
+
+    /// One data shard's live window.
+    pub fn shard_window(&self, shard: usize) -> WindowSnapshot {
+        self.tier.shard_window(shard)
+    }
+
+    /// Fleet-wide live metrics (data shards merged).
+    pub fn window(&self) -> WindowSnapshot {
+        self.tier.window()
+    }
+
+    /// Fairness weight currently registered on one shard.
+    pub fn shard_total_weight(&self, shard: usize) -> f64 {
+        self.tier.shard_total_weight(shard)
+    }
+
+    /// Live fleet coding telemetry: last chosen r, per-shard and fleet
+    /// unavailability, groups sealed, parity jobs, reconstructions.
+    pub fn telemetry(&self) -> CrossShardTelemetry {
+        self.state.fleet_telemetry()
+    }
+
+    /// Short-seal every open coding group now. Call when offered load
+    /// pauses (end of a drive phase) so tail queries get their parity
+    /// protection immediately instead of at the loss horizon.
+    pub fn flush_open_groups(&self) {
+        self.state.flush_open(Instant::now());
+    }
+
+    /// Shut the tier down: short-seal the tail, drain the data shards
+    /// (decodes keep landing while they drain), then stop the parity
+    /// pool, returning the fleet record, the parity records, and the
+    /// final telemetry. As with every drain in this stack, resolution
+    /// of queries that lost both their data and their decode path needs
+    /// an SLO in the config — set one when serving under failures.
+    pub fn shutdown(self) -> anyhow::Result<CrossShardRunResult> {
+        self.state.flush_open(Instant::now());
+        let fleet = self.tier.shutdown()?;
+        let telemetry = self.state.fleet_telemetry();
+        let parity = self.parity.stop();
+        Ok(CrossShardRunResult { fleet, parity, telemetry })
     }
 }
 

@@ -30,7 +30,13 @@
 //! with admission control
 //! ([`coordinator::frontend::AdmissionPolicy`]) at `submit`, per-client
 //! accounting, and live windowed metrics
-//! ([`coordinator::metrics::LatencyWindow`]) on every surface.
+//! ([`coordinator::metrics::LatencyWindow`]) on every surface. At fleet
+//! scale, [`coordinator::shards::ShardedFrontend`] routes clients over N
+//! independent sessions (consistent hashing, per-shard fault domains),
+//! and [`coordinator::shards::CrossShardFrontend`] stripes each coding
+//! group *across* those domains with a shared parity pool
+//! ([`coordinator::cross_shard`]), so even the loss of an entire shard
+//! decodes like a single-instance failure.
 //!
 //! Orientation: the top-level `README.md` covers the what and the
 //! quickstart; `docs/ARCHITECTURE.md` maps every thread and channel from

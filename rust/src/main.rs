@@ -19,7 +19,7 @@ use parm::cluster::hardware;
 use parm::coordinator::encoder::Encoder;
 use parm::coordinator::frontend::AdmissionPolicy;
 use parm::coordinator::service::{Mode, ServiceConfig};
-use parm::coordinator::shards::{ShardSpec, ShardedFrontend};
+use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedFrontend};
 use parm::experiments::{accuracy, latency, table1};
 use parm::util::cli::Cli;
 use parm::workload::QuerySource;
@@ -107,19 +107,25 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt(
             "mode",
             "parm",
-            "parm | none | equal-resources | approx-backup | replication | rateless",
+            "parm | none | equal-resources | approx-backup | replication | rateless \
+             | cross-shard (needs --shards >= k)",
         )
         .opt("k", "2", "coding-group size")
-        .opt("redundancy-min", "1", "rateless: parity floor per coding group")
+        .opt(
+            "redundancy-min",
+            "1",
+            "rateless/cross-shard: parity floor per coding group",
+        )
         .opt(
             "redundancy-max",
             "2",
-            "rateless: parity ceiling per coding group (pools are provisioned for this)",
+            "rateless/cross-shard: parity ceiling per coding group (pools are \
+             provisioned for this)",
         )
         .opt(
             "predictor-halflife-ms",
             "1000",
-            "rateless: straggler-predictor evidence half-life",
+            "rateless/cross-shard: straggler-predictor evidence half-life",
         )
         .opt("cluster", "gpu", "hardware profile: gpu | cpu")
         .opt("rate", "0", "query rate qps (0 = 60% utilization)")
@@ -163,10 +169,13 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let k = a.get_usize("k");
     let batch = a.get_usize("batch");
     let with_approx = a.get("mode") == "approx-backup";
-    // Rateless provisions parity pools for the ceiling, so it needs
-    // redundancy-max parity executables; every other mode needs one.
-    let parities =
-        if a.get("mode") == "rateless" { a.get_usize("redundancy-max").max(1) } else { 1 };
+    // Rateless and cross-shard provision parity pools for the ceiling,
+    // so they need redundancy-max parity executables; other modes need
+    // one.
+    let parities = match a.get("mode") {
+        "rateless" | "cross-shard" => a.get_usize("redundancy-max").max(1),
+        _ => 1,
+    };
     let models = latency::load_models(&m, batch, k, parities, with_approx)?;
     let ds = m.dataset(latency::LATENCY_DATASET)?;
     let source = QuerySource::from_dataset(&m, ds)?;
@@ -177,7 +186,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         "equal-resources" => Mode::EqualResources { k },
         "approx-backup" => Mode::ApproxBackup { k },
         "replication" => Mode::Replication { copies: 2 },
-        "rateless" => {
+        "rateless" | "cross-shard" => {
             let r_min = a.get_usize("redundancy-min");
             let r_max = a.get_usize("redundancy-max");
             if !(1..=r_max).contains(&r_min) || r_max > k {
@@ -187,7 +196,11 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             if halflife.is_zero() {
                 anyhow::bail!("--predictor-halflife-ms must be > 0");
             }
-            Mode::Rateless { k, r_min, r_max, halflife }
+            if a.get("mode") == "rateless" {
+                Mode::Rateless { k, r_min, r_max, halflife }
+            } else {
+                Mode::CrossShard { k, r_min, r_max, halflife }
+            }
         }
         other => anyhow::bail!("unknown mode {other:?}"),
     };
@@ -238,6 +251,23 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     }
     let clients = a.get_usize("clients").max(1);
     let shards = a.get_usize("shards");
+    if matches!(cfg.mode, Mode::CrossShard { .. }) {
+        if shards < k {
+            anyhow::bail!(
+                "--mode cross-shard stripes k={k} slots over distinct shards; \
+                 pass --shards >= {k}"
+            );
+        }
+        let spec = ShardSpec {
+            shards,
+            vnodes: a.get_usize("vnodes"),
+            global_backlog: match a.get_usize("global-backlog") {
+                0 => None,
+                n => Some(n),
+            },
+        };
+        return serve_cross_shard(cfg, spec, &models, &source, a.get_u64("queries"), rate, clients);
+    }
     if shards > 1 {
         let spec = ShardSpec {
             shards,
@@ -416,6 +446,90 @@ fn serve_sharded(
     Ok(())
 }
 
+/// Drive `clients` concurrent submitter threads through the cross-shard
+/// coding tier (groups striped over distinct shards, shared parity
+/// pool), then report per-client stats, the fleet coding telemetry, and
+/// the merged run records.
+fn serve_cross_shard(
+    cfg: ServiceConfig,
+    spec: ShardSpec,
+    models: &parm::coordinator::service::ModelSet,
+    source: &QuerySource,
+    n: u64,
+    rate: f64,
+    clients: usize,
+) -> anyhow::Result<()> {
+    let seed = cfg.seed;
+    let tier = CrossShardFrontend::start(cfg, spec, models, &source.queries[0])?;
+    println!(
+        "serving {n} queries from {clients} clients over {} shards at {rate:.0} qps total \
+         (cross-shard coding groups; shared parity pools of {} instances each)",
+        tier.shards(),
+        tier.parity_pool_size(),
+    );
+    let done = drive_paced_clients(n, rate, clients, seed, source, || tier.client());
+    // Tail groups get parity protection before the wait-out.
+    tier.flush_open_groups();
+    println!(
+        "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10} {:>10}",
+        "client", "shard", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)", "recovered"
+    );
+    for client in done {
+        let st = client.stats();
+        let w = client.window();
+        println!(
+            "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10.3} {:>10.3} {:>10}",
+            client.id(),
+            client.shard().map_or_else(|| "-".into(), |s| s.to_string()),
+            st.submitted,
+            st.resolved,
+            st.rejected,
+            w.p50_ms,
+            w.p99_ms,
+            st.recovered,
+        );
+    }
+    let t = tier.telemetry();
+    println!(
+        "coding: groups={} parity_jobs={} (overhead {:.3}) last_r={} recon={} \
+         fleet_unavail={:.4}",
+        t.groups_sealed,
+        t.parity_jobs,
+        if t.groups_sealed > 0 { t.parity_jobs as f64 / t.groups_sealed as f64 } else { 0.0 },
+        t.last_r,
+        t.reconstructions,
+        t.fleet_unavailability
+    );
+    println!("fleet window:   {}", tier.window().report("merged"));
+    let res = tier.shutdown()?;
+    for (s, r) in res.fleet.per_shard.iter().enumerate() {
+        println!(
+            "shard {s}: resolved={} rejected={} recovered={} dropped_jobs={}",
+            r.metrics.total(),
+            r.rejected,
+            r.metrics.reconstructed,
+            r.dropped_jobs
+        );
+    }
+    for (ri, r) in res.parity.iter().enumerate() {
+        println!(
+            "parity pool r{ri}: parity_queries={} defaulted={} dropped_jobs={}",
+            r.metrics.total(),
+            r.metrics.defaulted,
+            r.dropped_jobs
+        );
+    }
+    let mut metrics = res.fleet.merged.metrics;
+    println!("{}", metrics.report("fleet total"));
+    println!(
+        "wall={:.1}s cross-shard reconstructions={} rejected={}",
+        res.fleet.merged.wall.as_secs_f64(),
+        res.telemetry.reconstructions,
+        res.fleet.merged.rejected
+    );
+    Ok(())
+}
+
 /// Drive `clients` concurrent submitter threads through the multi-client
 /// frontend, splitting `n` queries and `rate` evenly, then report
 /// per-client windowed stats and the session's run result.
@@ -476,15 +590,16 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
     let exp = parm::config::ExperimentConfig::from_file(a.get("config"))?;
     let m = Manifest::load_default()?;
     let (k, with_approx) = match &exp.service.mode {
-        Mode::Parm { k, .. } | Mode::EqualResources { k } | Mode::Rateless { k, .. } => {
-            (*k, false)
-        }
+        Mode::Parm { k, .. }
+        | Mode::EqualResources { k }
+        | Mode::Rateless { k, .. }
+        | Mode::CrossShard { k, .. } => (*k, false),
         Mode::ApproxBackup { k } => (*k, true),
         _ => (2, false),
     };
     let r = match &exp.service.mode {
         Mode::Parm { encoders, .. } => encoders.len(),
-        Mode::Rateless { r_max, .. } => *r_max,
+        Mode::Rateless { r_max, .. } | Mode::CrossShard { r_max, .. } => *r_max,
         _ => 1,
     };
     let models = latency::load_models(&m, exp.service.batch_size, k, r, with_approx)?;
@@ -514,6 +629,11 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
         let mean = parm::coordinator::service::measure_service(&models.deployed, &probe, 20);
         exp.utilization * cfg.m as f64 / mean.as_secs_f64()
     };
+    if matches!(cfg.mode, Mode::CrossShard { .. }) {
+        // Config validation guarantees shards >= k for this mode.
+        let clients = exp.shards.shards * 4;
+        return serve_cross_shard(cfg, exp.shards, &models, &source, exp.queries, rate, clients);
+    }
     if exp.shards.shards > 1 {
         // Sharded experiments serve paced concurrent clients (4 per
         // shard) through the consistent-hash tier and report the merged

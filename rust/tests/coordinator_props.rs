@@ -52,8 +52,8 @@ fn tracker_resolves_each_slot_exactly_once_any_order() {
                 Some(s) => tr.on_data(g, s, t),
                 None => tr.on_parity(g, 0, t),
             };
-            for (_, ids, _, _) in res.resolved {
-                for id in ids {
+            for sr in res.resolved {
+                for id in sr.query_ids {
                     *resolved.entry(id).or_insert(0) += 1;
                 }
             }
@@ -136,12 +136,12 @@ fn tracker_variable_r_recovers_up_to_r_losses_never_panics() {
                 Ev::Data { slot, out } => tr.on_data(g, slot, out),
                 Ev::Parity { r_index, out } => tr.on_parity(g, r_index, out),
             };
-            for (_, ids, out, _) in res.resolved {
-                for id in ids {
+            for sr in res.resolved {
+                for id in sr.query_ids {
                     resolved
                         .entry(id)
                         .and_modify(|e| e.0 += 1)
-                        .or_insert((1, out.clone()));
+                        .or_insert((1, sr.output.clone()));
                 }
             }
         }
@@ -298,6 +298,115 @@ fn decode_general_single_missing_agrees_with_fast_path() {
             decoder::decode_r1(&weights[pj], parities[pj].as_ref().unwrap(), &data, j).unwrap();
         assert_eq!(general, vec![(j, fast)], "seed {seed} k={k} r={r} j={j}");
     }
+}
+
+/// INVARIANT (cross-shard decode): for random (k, r, shard-kill sets) a
+/// fleet coding state whose groups stripe over k distinct shards
+/// reconstructs any <= r unavailable slots once its parities arrive —
+/// with each decoded slot routed to exactly the shard that owned it —
+/// while > r losses never decode and never panic (stray parities beyond
+/// the group's r included).
+#[test]
+fn cross_shard_decode_recovers_up_to_r_losses_for_random_kill_sets() {
+    use parm::coordinator::cross_shard::{CrossShardConfig, CrossShardState};
+    use std::time::{Duration, Instant};
+
+    for seed in 0..120u64 {
+        let mut rng = Pcg64::new(9000 + seed);
+        let k = 2 + (seed as usize % 3); // k in 2..=4
+        let r = 1 + (rng.below(k as u64) as usize); // r in 1..=k
+        let shards = k + rng.below(3) as usize; // k..=k+2 fault domains
+        // r_min == r_max pins the per-group redundancy for the trial.
+        let st = CrossShardState::new(CrossShardConfig::new(
+            k,
+            r,
+            r,
+            shards,
+            Duration::from_secs(5), // long horizon: no sweep interference
+        ));
+        let now = Instant::now();
+        let dim = 4;
+
+        // One group striped over k random distinct shards.
+        let group_shards = rng.choose_distinct(shards, k);
+        let mut placed = Vec::new(); // (group, slot, shard, qid)
+        for (i, &shard) in group_shards.iter().enumerate() {
+            let qid = 100 + i as u64;
+            let (g, slot) = st.offer(shard, vec![qid], rand_tensor(&mut rng, dim), now);
+            assert_eq!(g, 0, "seed {seed}: one group only");
+            placed.push((g, slot, shard, qid));
+        }
+        assert_eq!(st.group_r(0), Some(r), "seed {seed}: pinned r");
+
+        // Kill set: `losses` of the group's shards never answer.
+        let losses = rng.below(k as u64 + 1) as usize; // 0..=k
+        let killed: Vec<usize> = rng.choose_distinct(k, losses);
+        for (i, &(g, slot, shard, _)) in placed.iter().enumerate() {
+            if !killed.contains(&i) {
+                st.on_data(shard, g, slot, 0, rand_tensor(&mut rng, dim), now);
+            }
+        }
+        // All r parities arrive, plus a stray one beyond the group's r —
+        // which must be a harmless no-op, never a panic.
+        for ri in 0..r {
+            st.on_parity(0, ri, rand_tensor(&mut rng, dim), now);
+        }
+        st.on_parity(0, r, rand_tensor(&mut rng, dim), now);
+
+        if losses <= r {
+            assert!(!st.contains(0), "seed {seed}: recoverable group fully resolved");
+            for (i, &(_, _, shard, qid)) in placed.iter().enumerate() {
+                let owed = st.drain_decoded(shard, now);
+                if killed.contains(&i) {
+                    assert_eq!(
+                        owed.len(),
+                        1,
+                        "seed {seed}: killed shard {shard} owed its decoded slot"
+                    );
+                    assert_eq!(owed[0].0, vec![qid], "seed {seed}: routed to the owner");
+                } else {
+                    assert!(owed.is_empty(), "seed {seed}: native slots owe nothing");
+                }
+            }
+            assert_eq!(st.reconstructions(), losses as u64, "seed {seed}");
+        } else {
+            assert!(st.contains(0), "seed {seed}: >r losses cannot decode");
+            let unresolved = st.unresolved_slots(0);
+            assert_eq!(unresolved.len(), losses, "seed {seed}: exactly the kills stuck");
+            for &slot in &unresolved {
+                assert!(killed.contains(&slot), "seed {seed}: stuck slot {slot} was killed");
+            }
+            for &(_, _, shard, _) in &placed {
+                assert!(st.drain_decoded(shard, now).is_empty(), "seed {seed}");
+            }
+            assert_eq!(st.reconstructions(), 0, "seed {seed}");
+        }
+    }
+}
+
+/// INVARIANT: shard-tagged QueryIds never collide across legs — distinct
+/// (shard, local id) pairs map to distinct fleet-wide ids, and the shard
+/// always round-trips out of the tag.
+#[test]
+fn shard_tagged_query_ids_never_collide_across_legs() {
+    use parm::coordinator::shards::{shard_of, tag_id, MAX_SHARDS};
+
+    let mut rng = Pcg64::new(0x71D5);
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..20_000 {
+        let shard = rng.below(MAX_SHARDS as u64 + 1) as usize;
+        let fid = rng.below(1u64 << 56);
+        let tagged = tag_id(shard, fid);
+        assert_eq!(shard_of(tagged), shard, "shard survives tagging");
+        assert_eq!(tagged & ((1u64 << 56) - 1), fid, "local id survives tagging");
+        if let Some(prev) = seen.insert(tagged, (shard, fid)) {
+            assert_eq!(prev, (shard, fid), "distinct legs must never share an id");
+        }
+    }
+    // Exhaustive on the boundary: every shard with the same local id.
+    let ids: std::collections::HashSet<u64> =
+        (0..=MAX_SHARDS).map(|s| tag_id(s, 12_345)).collect();
+    assert_eq!(ids.len(), MAX_SHARDS + 1);
 }
 
 /// INVARIANT: a live serving session conserves queries — across schemes

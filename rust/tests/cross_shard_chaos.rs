@@ -1,0 +1,315 @@
+//! Chaos soak for the cross-shard coding tier, driven by the
+//! deterministic fault harness in `tests/common`:
+//!
+//! - **acceptance**: killing one *entire* data shard mid-run loses zero
+//!   accepted queries — every query resolves natively or via cross-shard
+//!   decode — while fixed single-shard ParM under the same seed, spec,
+//!   and fault step loses queries to SLO defaults (its groups lose data
+//!   and parity together);
+//! - **soak**: many seeded trials (`PARM_CHAOS_TRIALS`, default 40 in
+//!   debug / 200 in release; CI's chaos job runs 200) drive correlated
+//!   shard kills at seeded-random steps through the harness, asserting
+//!   exactly-once delivery and merged `RunResult` conservation
+//!   (offered = resolved + rejected) on every trial.
+//!
+//! Like the other cluster suites these spawn full simulated clusters,
+//! run serialized, and skip with a message when artifacts are missing
+//! under `--features pjrt`.
+
+mod common;
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use common::{FaultScript, FaultSurface};
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::{AdmissionPolicy, SubmitError};
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::session::Resolved;
+use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedClient, ShardedFrontend};
+use parm::experiments::latency;
+use parm::workload::QuerySource;
+
+/// Each test spawns full simulated clusters; serialize to keep the
+/// timing paths representative.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(r_max: usize) -> Option<(QuerySource, ModelSet)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP cross_shard_chaos: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    match latency::load_models(&m, 1, 2, r_max, false) {
+        Ok(models) => Some((src, models)),
+        Err(e) => {
+            eprintln!("SKIP cross_shard_chaos: {e}");
+            None
+        }
+    }
+}
+
+/// Round-robin the queries over the clients from one thread, firing the
+/// fault script at its scripted steps; returns (accepted ids, rejected
+/// count, resolutions collected so far).
+fn drive(
+    clients: &[ShardedClient],
+    src: &QuerySource,
+    n: u64,
+    script: &mut FaultScript,
+    surface: &FaultSurface,
+) -> (HashSet<u64>, u64, Vec<Resolved>) {
+    let mut submitted = HashSet::new();
+    let mut rejected = 0u64;
+    let mut got = Vec::new();
+    for i in 0..n {
+        script.apply(i, surface);
+        let c = &clients[(i as usize) % clients.len()];
+        match c.submit(src.queries[(i as usize) % src.len()].clone()) {
+            Ok(id) => {
+                assert!(submitted.insert(id), "tier ids must be unique");
+            }
+            Err(SubmitError::Rejected { .. } | SubmitError::SloShed { .. }) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        for c in clients {
+            got.extend(c.poll());
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    (submitted, rejected, got)
+}
+
+/// Sweep every client until `want` resolutions arrived (or timeout).
+fn collect(clients: &[ShardedClient], got: &mut Vec<Resolved>, want: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while got.len() < want && Instant::now() < deadline {
+        let mut any = false;
+        for c in clients {
+            for r in c.poll() {
+                got.push(r);
+                any = true;
+            }
+        }
+        if !any {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// The tentpole acceptance: a whole-shard kill mid-run costs the
+/// cross-shard tier nothing (every query native or reconstructed),
+/// while per-shard ParM under the same seed and fault step pays in SLO
+/// defaults.
+#[test]
+fn whole_shard_kill_loses_zero_where_single_shard_parm_loses() {
+    let _guard = serial();
+    const SHARDS: usize = 3;
+    const M: usize = 2;
+    const CLIENTS: usize = 9;
+    const N: u64 = 270;
+    const KILL_STEP: u64 = 60;
+    const SEED: u64 = 0xC505;
+    let Some((src, models)) = setup(2) else { return };
+    let spec = ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None };
+    let slo = Duration::from_millis(1500);
+
+    // --- cross-shard coding tier ---
+    let mut cfg = ServiceConfig::defaults(
+        Mode::CrossShard {
+            k: 2,
+            r_min: 1,
+            r_max: 2,
+            halflife: Duration::from_millis(150),
+        },
+        &GPU,
+    );
+    cfg.m = M;
+    cfg.shuffles = 0;
+    cfg.seed = SEED;
+    cfg.slo = Some(slo);
+    let tier = CrossShardFrontend::start(cfg, spec, &models, &src.queries[0])
+        .expect("cross-shard tier builds");
+    let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+    let victim = tier.route_of(clients[0].id()).expect("live shard");
+    let surface = FaultSurface::sharded((0..SHARDS).map(|s| tier.fault_plan(s)).collect(), M);
+    let mut script = FaultScript::builder(SEED).kill_shard_at(KILL_STEP, victim).build();
+
+    let (submitted, rejected, mut got) = drive(&clients, &src, N, &mut script, &surface);
+    assert_eq!(rejected, 0, "unbounded admission accepts everything");
+    // Tail groups get their parity protection now instead of at the
+    // loss horizon.
+    tier.flush_open_groups();
+    collect(&clients, &mut got, submitted.len(), Duration::from_secs(12));
+
+    assert_eq!(got.len(), submitted.len(), "every accepted query resolves");
+    let ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), got.len(), "no duplicate resolutions");
+    assert_eq!(ids, submitted, "exactly the submitted ids");
+
+    let res = tier.shutdown().expect("clean shutdown");
+    let metrics = res.fleet.merged.metrics;
+    assert_eq!(metrics.total(), N, "fleet record conserves the run");
+    assert_eq!(
+        metrics.defaulted, 0,
+        "a whole-shard kill must lose nothing: every query resolves \
+         natively or via cross-shard decode (recon={}, telemetry {:?})",
+        metrics.reconstructed, res.telemetry
+    );
+    assert!(
+        metrics.reconstructed > 0,
+        "the killed shard's queries must come back via decode"
+    );
+    assert!(
+        res.fleet.per_shard[victim].dropped_jobs > 0,
+        "the killed shard must actually have swallowed jobs"
+    );
+    assert_eq!(res.telemetry.reconstructions, metrics.reconstructed);
+
+    // --- baseline: per-shard ParM, same seed, same fault step ---
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
+        &GPU,
+    );
+    cfg.m = M;
+    cfg.shuffles = 0;
+    cfg.seed = SEED;
+    cfg.slo = Some(slo);
+    let parm = ShardedFrontend::start(cfg, spec, &models, &src.queries[0])
+        .expect("sharded ParM builds");
+    let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| parm.client()).collect();
+    let parm_victim = parm.route_of(clients[0].id()).expect("live shard");
+    assert_eq!(parm_victim, victim, "same seed, same routing, same victim");
+    // Whole-shard kill for ParM includes its in-shard parity instances
+    // (m + ceil(m/k) ids) — data and parity die together, the
+    // correlated case intra-shard coding cannot absorb.
+    let per_shard_instances = M + (M + 1) / 2;
+    let surface = FaultSurface::sharded(
+        (0..SHARDS).map(|s| parm.fault_plan(s)).collect(),
+        per_shard_instances,
+    );
+    let mut script = FaultScript::builder(SEED).kill_shard_at(KILL_STEP, victim).build();
+
+    let (submitted, _rejected, mut got) = drive(&clients, &src, N, &mut script, &surface);
+    collect(&clients, &mut got, submitted.len(), Duration::from_secs(12));
+    assert_eq!(got.len(), submitted.len(), "SLO backstop still resolves everything");
+
+    let res = parm.shutdown().expect("clean shutdown");
+    let metrics = res.merged.metrics;
+    assert_eq!(metrics.total(), N);
+    assert!(
+        metrics.defaulted > 0,
+        "single-shard ParM loses its killed shard's queries to defaults \
+         (data + parity share the fault domain)"
+    );
+}
+
+fn soak_trials() -> u64 {
+    if let Ok(v) = std::env::var("PARM_CHAOS_TRIALS") {
+        if let Ok(n) = v.parse() {
+            return n;
+        }
+    }
+    if cfg!(debug_assertions) {
+        40
+    } else {
+        200
+    }
+}
+
+/// Seeded soak: correlated shard kills at seeded-random steps; on every
+/// trial the tier must deliver exactly once and its merged record must
+/// conserve the offered traffic (submitted = resolved + rejected).
+#[test]
+fn chaos_soak_conserves_queries_across_seeded_trials() {
+    let _guard = serial();
+    const SHARDS: usize = 3;
+    const M: usize = 1;
+    const CLIENTS: usize = 6;
+    const N: u64 = 36;
+    let Some((src, models)) = setup(2) else { return };
+    let trials = soak_trials();
+    let t0 = Instant::now();
+
+    for trial in 0..trials {
+        let seed = 0x50AC + trial * 7919;
+        let mut cfg = ServiceConfig::defaults(
+            Mode::CrossShard {
+                k: 2,
+                r_min: 1,
+                r_max: 2,
+                halflife: Duration::from_millis(100),
+            },
+            &GPU,
+        );
+        cfg.m = M;
+        cfg.shuffles = 0;
+        cfg.seed = seed;
+        cfg.slo = Some(Duration::from_millis(700));
+        if trial % 2 == 1 {
+            // Exercise the reject path of the conservation equation on
+            // half the trials.
+            cfg.admission = AdmissionPolicy::RejectAbove { backlog: 8 };
+        }
+        let spec = ShardSpec { shards: SHARDS, vnodes: 32, global_backlog: None };
+        let tier = CrossShardFrontend::start(cfg, spec, &models, &src.queries[0])
+            .unwrap_or_else(|e| panic!("trial {trial}: tier builds: {e}"));
+        let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+        let surface =
+            FaultSurface::sharded((0..SHARDS).map(|s| tier.fault_plan(s)).collect(), M);
+        // Correlated burst: 1 or 2 whole shards die together at a
+        // seeded-random step mid-run.
+        let mut builder = FaultScript::builder(seed);
+        let step = builder.random_step(4, 16);
+        let burst = 1 + (trial % 2) as usize;
+        let mut script = builder.random_correlated_kill_at(step, SHARDS, burst).build();
+
+        let (submitted, rejected, mut got) = drive(&clients, &src, N, &mut script, &surface);
+        assert!(script.done(), "trial {trial}: the scripted burst fired");
+        tier.flush_open_groups();
+        collect(&clients, &mut got, submitted.len(), Duration::from_secs(8));
+
+        // Exactly-once delivery.
+        assert_eq!(
+            got.len(),
+            submitted.len(),
+            "trial {trial} (seed {seed:#x}): every accepted query resolves"
+        );
+        let ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), got.len(), "trial {trial}: no duplicate resolutions");
+        assert_eq!(ids, submitted, "trial {trial}: exactly the accepted ids");
+
+        // Merged-record conservation: offered = resolved + rejected.
+        let res = tier.shutdown().unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        let metrics = &res.fleet.merged.metrics;
+        assert_eq!(
+            metrics.total(),
+            submitted.len() as u64,
+            "trial {trial}: resolved equals accepted"
+        );
+        assert_eq!(res.fleet.merged.rejected, rejected, "trial {trial}: rejects conserved");
+        assert_eq!(
+            metrics.offered(),
+            N,
+            "trial {trial}: offered = resolved + rejected"
+        );
+        let sum_resolved: u64 = res.fleet.per_shard.iter().map(|r| r.metrics.total()).sum();
+        let sum_rejected: u64 = res.fleet.per_shard.iter().map(|r| r.rejected).sum();
+        assert_eq!(sum_resolved, metrics.total(), "trial {trial}: per-shard sums agree");
+        assert_eq!(sum_rejected, res.fleet.merged.rejected, "trial {trial}");
+    }
+    eprintln!(
+        "cross_shard_chaos soak: {trials} trials in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -6,10 +6,15 @@
 //! fabricated artifact inventory (timing/shape semantics are real, trained
 //! accuracy is not — which the serving-path assertions never rely on).
 //! With `--features pjrt` they require `make artifacts` and skip with a
-//! message otherwise.
+//! message otherwise. Mid-run faults are scripted through the
+//! deterministic harness in `tests/common` (step-indexed, seeded).
+
+mod common;
 
 use std::collections::HashSet;
 use std::time::Duration;
+
+use common::{FaultScript, FaultSurface};
 
 use parm::artifacts::Manifest;
 use parm::cluster::hardware::GPU;
@@ -225,14 +230,16 @@ fn live_handle_submit_drain_across_instance_failure() {
         .build(&models, &src.queries[0])
         .expect("session builds");
 
+    // Undetected zombie from the 50th submit on: keeps taking jobs,
+    // never answers — scripted through the deterministic fault harness
+    // against the session's own fault plan.
+    let surface = FaultSurface::single(handle.fault_plan(), 4);
+    let mut script = FaultScript::builder(0x7E57).kill_instance_at(50, 0, 0).build();
+
     let mut submitted = HashSet::new();
     let mut resolved = Vec::new();
     for i in 0..200u64 {
-        if i == 50 {
-            // Undetected zombie from here on: keeps taking jobs, never
-            // answers. The handle's fault surface injects it live.
-            handle.kill_instance(0);
-        }
+        script.apply(i, &surface);
         let id = handle.submit(src.queries[(i as usize) % src.len()].clone());
         assert!(submitted.insert(id), "ids must be unique");
         resolved.extend(handle.poll());

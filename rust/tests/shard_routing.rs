@@ -17,11 +17,16 @@
 //!
 //! Like `frontend_concurrency.rs`, the cluster tests spawn full
 //! simulated clusters, so they run serialized and skip (with a message)
-//! if artifacts are missing under `--features pjrt`.
+//! if artifacts are missing under `--features pjrt`. Mid-run faults are
+//! scripted through the deterministic harness in `tests/common` (step-
+//! indexed, seeded) instead of ad-hoc sleep-then-kill logic.
+
+mod common;
 
 use std::collections::HashSet;
 use std::time::{Duration, Instant};
 
+use common::{FaultScript, FaultSurface};
 use parm::artifacts::Manifest;
 use parm::cluster::hardware::GPU;
 use parm::coordinator::encoder::Encoder;
@@ -89,15 +94,37 @@ fn cross_shard_conservation_with_shard_kill() {
     .expect("sharded tier builds");
     assert_eq!(tier.shards(), SHARDS);
 
+    // Scripted whole-shard zombie, step-indexed on client 0's traffic:
+    // at its 5th submit, *both* deployed instances (ids 0..m=2) of the
+    // shard serving client 0 die, so that shard degrades to parity
+    // reconstructions and SLO defaults while the other shards' routing
+    // and accounting stay untouched.
+    let killed_shard = tier.route_of(0).expect("live shard");
+
     let mut joins = Vec::new();
     for c in 0..CLIENTS {
         let client = tier.client();
         let queries = src.queries.clone();
+        // The script is driven by client 0 alone (one chaos timeline).
+        let mut chaos = if c == 0 {
+            Some((
+                FaultScript::builder(0x5A4D).kill_shard_at(5, killed_shard).build(),
+                FaultSurface::sharded(
+                    (0..SHARDS).map(|s| tier.fault_plan(s)).collect(),
+                    2,
+                ),
+            ))
+        } else {
+            None
+        };
         joins.push(std::thread::spawn(move || {
             let home = client.shard().expect("live shard");
             let mut submitted = HashSet::new();
             let mut got = Vec::new();
             for i in 0..PER {
+                if let Some((script, surface)) = chaos.as_mut() {
+                    script.apply(i, surface);
+                }
                 let id = client
                     .submit(queries[(c + i as usize) % queries.len()].clone())
                     .expect("unbounded admission accepts");
@@ -115,15 +142,6 @@ fn cross_shard_conservation_with_shard_kill() {
             (submitted, got, client)
         }));
     }
-
-    // Undetected zombies mid-run, scoped to the shard serving client 0:
-    // with *both* deployed instances (ids 0..m=2) dead, that shard
-    // degrades to parity reconstructions and SLO defaults, while the
-    // other shards' routing and accounting must stay untouched.
-    std::thread::sleep(Duration::from_millis(20));
-    let killed_shard = tier.route_of(0).expect("live shard");
-    tier.kill_instance(killed_shard, 0);
-    tier.kill_instance(killed_shard, 1);
 
     let mut grand_total = 0u64;
     for j in joins {
@@ -285,6 +303,88 @@ fn global_cap_sheds_and_lands_in_merged_accounting() {
     assert_eq!(res.merged.metrics.offered(), ATTEMPTS as u64);
     let sum_rejected: u64 = res.per_shard.iter().map(|r| r.rejected).sum();
     assert_eq!(sum_rejected, rejected, "rejects tallied against the routed shards");
+}
+
+/// Regression for the ROADMAP fairness-dilution item: a tier client's
+/// admission weight is registered only on the shard the router assigns
+/// it — not on every shard — and the weight moves with the route on
+/// drain/restore, so each shard's fair-share denominator counts exactly
+/// its own residents.
+#[test]
+fn weight_follows_router_on_drain() {
+    let _guard = serial();
+    const SHARDS: usize = 3;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg = ServiceConfig::defaults(Mode::NoRedundancy, &GPU);
+    cfg.m = 1;
+    cfg.shuffles = 0;
+    cfg.seed = 0xFA12;
+
+    let tier = ShardedFrontend::start(
+        cfg,
+        ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None },
+        &models,
+        &src.queries[0],
+    )
+    .expect("sharded tier builds");
+
+    let clients: Vec<_> = (0..12).map(|_| tier.client()).collect();
+    let heavy = tier.client_with_weight(3.0);
+
+    let placement = |tier: &ShardedFrontend| {
+        let mut per = vec![0.0f64; SHARDS];
+        for c in &clients {
+            per[c.shard().expect("live shard")] += 1.0;
+        }
+        per[heavy.shard().expect("live shard")] += 3.0;
+        per
+    };
+    let expect = placement(&tier);
+    for (s, &w) in expect.iter().enumerate() {
+        assert!(
+            (tier.shard_total_weight(s) - w).abs() < 1e-9,
+            "shard {s} must hold exactly its residents' weight ({w}), got {}",
+            tier.shard_total_weight(s)
+        );
+    }
+    let total: f64 = (0..SHARDS).map(|s| tier.shard_total_weight(s)).sum();
+    assert!((total - 15.0).abs() < 1e-9, "weights registered once fleet-wide, not per shard");
+
+    // Drain the heavy client's home: every resident's weight moves with
+    // its new route; the drained shard holds none.
+    let home = heavy.shard().expect("live shard");
+    assert_eq!(heavy.weight_shard(), Some(home), "weight sits where the router points");
+    tier.drain_shard(home);
+    assert_ne!(heavy.shard().expect("survivors stay live"), home);
+    assert_eq!(heavy.weight_shard(), heavy.shard(), "weight moved with the route");
+    assert!(
+        tier.shard_total_weight(home).abs() < 1e-9,
+        "a drained shard keeps no admission weight"
+    );
+    let after = placement(&tier);
+    for (s, &w) in after.iter().enumerate() {
+        assert!(
+            (tier.shard_total_weight(s) - w).abs() < 1e-9,
+            "post-drain shard {s}: want {w}, got {}",
+            tier.shard_total_weight(s)
+        );
+    }
+    let total: f64 = (0..SHARDS).map(|s| tier.shard_total_weight(s)).sum();
+    assert!((total - 15.0).abs() < 1e-9, "drain moves weight, never loses it");
+
+    // Restore: consistent hashing brings every original route — and its
+    // weight — back.
+    tier.restore_shard(home);
+    for (s, &w) in expect.iter().enumerate() {
+        assert!(
+            (tier.shard_total_weight(s) - w).abs() < 1e-9,
+            "post-restore shard {s}: want {w}, got {}",
+            tier.shard_total_weight(s)
+        );
+    }
+    tier.shutdown().expect("clean shutdown");
 }
 
 #[test]
