@@ -1,0 +1,281 @@
+//! Elastic fleet, operated over the admin socket — the full lifecycle
+//! the embedded control plane exists for: a cross-shard coding tier
+//! serves paced clients while an "operator" (this process, speaking the
+//! same line-oriented JSON protocol `parm admin` uses) scales the fleet
+//! out, rides through the whole-shard kill the extra capacity was
+//! bought for, and scales back in — all without pausing the data path
+//! or losing an accepted query.
+//!
+//! Timeline (fractions of the run):
+//!   t=0.25  `add-shard` over the socket; the shared parity pool
+//!           re-provisions toward ceil(shards*m/k) while serving.
+//!   t=0.50  every instance of shard 1 is killed (undetected zombies);
+//!           coding groups decode from surviving slots + shared parity.
+//!   t=0.75  `drain` + `remove-shard` retire the added shard; its
+//!           ring points vanish, in-flight queries still resolve.
+//!
+//! Along the way the example prints raw admin replies (`status`,
+//! `recommend`, `telemetry`) exactly as an operator would see them.
+//!
+//! Run with: `cargo run --release --example elastic_serve`
+//! Knobs: PARM_CLIENTS (default 10), PARM_QUERIES_PER_CLIENT (default
+//! 90), PARM_SHARDS (default 3).
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!(
+        "elastic_serve drives the control plane over a unix domain socket, \
+         which this platform does not support"
+    );
+}
+
+#[cfg(unix)]
+fn main() -> anyhow::Result<()> {
+    imp::run()
+}
+
+#[cfg(unix)]
+mod imp {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::path::Path;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use parm::artifacts::Manifest;
+    use parm::cluster::hardware::GPU;
+    use parm::coordinator::control::{AdminServer, ControlPlane, Fleet, FleetRunResult};
+    use parm::coordinator::service::{Mode, ServiceConfig};
+    use parm::coordinator::shards::{CrossShardFrontend, ShardSpec};
+    use parm::experiments::latency;
+    use parm::util::json::Json;
+    use parm::util::rng::Pcg64;
+    use parm::workload::QuerySource;
+
+    fn env_or(name: &str, default: u64) -> u64 {
+        std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// One admin round trip, exactly as `parm admin` performs it: a
+    /// fresh connection, one JSON line out, one JSON line back.
+    fn admin(socket: &Path, req: Json) -> anyhow::Result<Json> {
+        let mut stream = UnixStream::connect(socket)?;
+        stream.write_all(req.to_string().as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        let mut reply = String::new();
+        BufReader::new(stream).read_line(&mut reply)?;
+        let parsed = Json::parse(reply.trim())?;
+        anyhow::ensure!(
+            parsed.at(&["ok"]).as_bool() == Some(true),
+            "admin request {req} failed: {}",
+            reply.trim()
+        );
+        Ok(parsed)
+    }
+
+    /// Parity-pool re-provisioning is generational and asynchronous;
+    /// poll `status` until size and target agree on `want`.
+    fn wait_pool(socket: &Path, want: usize) -> anyhow::Result<()> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let st = admin(socket, Json::obj().set("cmd", "status"))?;
+            if st.at(&["parity_pool", "size"]).as_usize() == Some(want)
+                && st.at(&["parity_pool", "target"]).as_usize() == Some(want)
+            {
+                return Ok(());
+            }
+            anyhow::ensure!(Instant::now() < deadline, "parity pool never reached {want}: {st}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    pub fn run() -> anyhow::Result<()> {
+        parm::util::logging::init();
+        let clients = env_or("PARM_CLIENTS", 10).max(2) as usize;
+        let per = env_or("PARM_QUERIES_PER_CLIENT", 90).max(20);
+        let shards = env_or("PARM_SHARDS", 3).max(2) as usize;
+        let k = 2usize;
+        let m_per_shard = 2usize;
+        let r_max = 2usize;
+        let pool_for = |s: usize| ((s * m_per_shard + k - 1) / k).max(1);
+
+        let manifest = Manifest::load_default()?;
+        let ds = manifest.dataset(latency::LATENCY_DATASET)?;
+        let source = QuerySource::from_dataset(&manifest, ds)?;
+        let models = latency::load_models(&manifest, 1, k, r_max, false)?;
+
+        let rate = 220.0;
+        let per_rate = rate / clients as f64;
+        let run_secs = per as f64 / per_rate;
+        let scale_out_at = Duration::from_secs_f64(run_secs * 0.25);
+        let kill_at = Duration::from_secs_f64(run_secs * 0.50);
+        let scale_in_at = Duration::from_secs_f64(run_secs * 0.75);
+        let victim = 1usize; // an ORIGINAL shard — the added one must outlive the fault
+
+        let mut cfg = ServiceConfig::defaults(
+            Mode::CrossShard { k, r_min: 1, r_max, halflife: Duration::from_millis(400) },
+            &GPU,
+        );
+        cfg.m = m_per_shard;
+        cfg.shuffles = 0;
+        cfg.seed = 0xE1A57;
+        cfg.slo = Some(Duration::from_secs(2));
+
+        let tier = CrossShardFrontend::start(
+            cfg,
+            ShardSpec { shards, vnodes: 64, global_backlog: None },
+            &models,
+            &source.queries[0],
+        )?;
+        let plane = Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
+        let socket =
+            std::env::temp_dir().join(format!("parm-elastic-serve-{}.sock", std::process::id()));
+        let server = AdminServer::bind(&socket, Arc::clone(&plane))?;
+        println!(
+            "{clients} clients x {per} queries over {shards} shards at {rate:.0} qps; \
+             admin endpoint at {}",
+            socket.display()
+        );
+        println!(
+            "timeline: add-shard t={:.1}s | kill shard {victim} whole t={:.1}s | \
+             drain+remove t={:.1}s\n",
+            scale_out_at.as_secs_f64(),
+            kill_at.as_secs_f64(),
+            scale_in_at.as_secs_f64()
+        );
+
+        let start = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let client = plane.client().expect("fleet is live");
+            let queries = source.queries.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::new(0xE1A5EED ^ (c as u64) << 13);
+                let mut due = Instant::now();
+                let mut accepted = 0u64;
+                for i in 0..per {
+                    due += Duration::from_secs_f64(rng.exponential(per_rate));
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    if client.submit(queries[i as usize % queries.len()].clone()).is_ok() {
+                        accepted += 1;
+                    }
+                    let _ = client.poll();
+                }
+                while client.stats().resolved < accepted {
+                    if client.next(Duration::from_secs(8)).is_none() {
+                        break;
+                    }
+                }
+                client
+            }));
+        }
+
+        let sleep_until = |at: Duration| {
+            let now = start.elapsed();
+            if at > now {
+                std::thread::sleep(at - now);
+            }
+        };
+
+        // --- operator timeline, entirely over the wire ---
+        sleep_until(scale_out_at);
+        let reply = admin(&socket, Json::obj().set("cmd", "add-shard"))?;
+        let added = reply.at(&["shard"]).as_usize().expect("add-shard reply names the shard");
+        wait_pool(&socket, pool_for(shards + 1))?;
+        println!(
+            "t={:.1}s: scaled OUT -> shard {added} joined the ring, parity pool at {}\n  {reply}",
+            start.elapsed().as_secs_f64(),
+            pool_for(shards + 1)
+        );
+
+        sleep_until(kill_at);
+        for i in 0..m_per_shard {
+            plane.kill_instance(victim, i)?;
+        }
+        println!(
+            "t={:.1}s: killed EVERY instance of shard {victim} (undetected zombies)",
+            start.elapsed().as_secs_f64()
+        );
+        std::thread::sleep(Duration::from_millis(600));
+        let rec = admin(&socket, Json::obj().set("cmd", "recommend"))?;
+        println!("t={:.1}s: recommend -> {rec}", start.elapsed().as_secs_f64());
+
+        sleep_until(scale_in_at);
+        let drained = admin(&socket, Json::obj().set("cmd", "drain").set("shard", added))?;
+        admin(&socket, Json::obj().set("cmd", "remove-shard").set("shard", added))?;
+        wait_pool(&socket, pool_for(shards))?;
+        println!(
+            "t={:.1}s: scaled IN -> shard {added} drained ({drained}) and retired, \
+             parity pool back at {}",
+            start.elapsed().as_secs_f64(),
+            pool_for(shards)
+        );
+        let status = admin(&socket, Json::obj().set("cmd", "status"))?;
+        println!("  status -> {status}\n");
+
+        println!(
+            "{:<8} {:>6} {:>9} {:>9} {:>10} {:>10} {:>10} {:>9}",
+            "client", "shard", "submitted", "resolved", "p50(ms)", "p99(ms)", "recovered", "default"
+        );
+        let mut joined = Vec::new();
+        for j in joins {
+            joined.push(j.join().expect("client thread"));
+        }
+        plane.flush_open_groups()?;
+        let mut total_recovered = 0u64;
+        let mut total_defaulted = 0u64;
+        for client in &joined {
+            let st = client.stats();
+            let w = client.window();
+            total_recovered += st.recovered;
+            total_defaulted += st.defaulted;
+            println!(
+                "{:<8} {:>6} {:>9} {:>9} {:>10.3} {:>10.3} {:>10} {:>9}",
+                client.id(),
+                client.shard().map_or_else(|| "-".into(), |s| s.to_string()),
+                st.submitted,
+                st.resolved,
+                w.p50_ms,
+                w.p99_ms,
+                st.recovered,
+                st.defaulted,
+            );
+        }
+
+        let telemetry = admin(&socket, Json::obj().set("cmd", "telemetry"))?;
+        println!("\ntelemetry -> {telemetry}");
+
+        server.stop();
+        let res = match plane.shutdown()? {
+            FleetRunResult::CrossShard(res) => res,
+            FleetRunResult::Sharded(_) => unreachable!("plane owns a cross-shard fleet"),
+        };
+        let t = &res.telemetry;
+        println!(
+            "\ncoding: groups={} parity_jobs={} reconstructions={}",
+            t.groups_sealed, t.parity_jobs, t.reconstructions
+        );
+        let mut metrics = res.fleet.merged.metrics;
+        println!("{}", metrics.report("fleet total"));
+        let sum_resolved: u64 = res.fleet.per_shard.iter().map(|r| r.metrics.total()).sum();
+        assert_eq!(metrics.total(), sum_resolved, "merged record equals per-shard sums");
+        assert_eq!(
+            res.fleet.per_shard.len(),
+            shards + 1,
+            "the retired shard still reports its run record"
+        );
+        println!(
+            "\n✓ scale-out -> whole-shard kill -> scale-in, all over the admin socket: \
+             {} reconstructions, {} recovered at clients, {} defaults",
+            t.reconstructions, total_recovered, total_defaulted
+        );
+        if total_defaulted == 0 {
+            println!("✓ zero queries lost to the SLO across the whole reconfiguration timeline");
+        }
+        Ok(())
+    }
+}

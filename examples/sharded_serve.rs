@@ -113,7 +113,7 @@ fn main() -> anyhow::Result<()> {
         start.elapsed().as_secs_f64()
     );
     sleep_until(drain_at);
-    tier.drain_shard(degraded);
+    tier.drain_shard(degraded).expect("drain the degraded shard");
     println!(
         "t={:.1}s: drained shard {degraded} from the ring ({} live shards remain)\n",
         start.elapsed().as_secs_f64(),

@@ -1,0 +1,371 @@
+//! Elastic vs. static fleet through the same whole-shard fault: does
+//! runtime reconfiguration cost anything on the data path?
+//!
+//! Both fleets are cross-shard coding tiers serving the same paced
+//! multi-client workload from the same seed. The *elastic* run drives
+//! the control plane through the full lifecycle mid-run — scale out to
+//! shards+1 (parity pool re-provisions toward ceil(shards*m/k) while
+//! serving), ride a whole-shard kill of an original shard, then drain
+//! and retire the added shard — while the *static* run keeps its
+//! initial fleet and absorbs the identical kill.
+//!
+//! Emits `bench_out/elastic.json`: per scheme, resolved / reconstructed
+//! / defaulted counts, recovery rate, and p50/p99/p99.9 latency, plus
+//! the elastic run's event timeline (each reconfiguration step with the
+//! rolling-window p99 observed at that moment). Asserts conservation —
+//! every offered query is accounted for in both schemes — and that the
+//! elastic fleet's parity pool tracked its target through both resizes.
+//!
+//! Env knobs: PARM_BENCH_QUERIES (default 1600).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedClient};
+use parm::experiments::latency;
+use parm::util::json::Json;
+use parm::util::rng::Pcg64;
+use parm::workload::QuerySource;
+
+const SHARDS: usize = 3;
+const M: usize = 2;
+const K: usize = 2;
+const R_MAX: usize = 2;
+const CLIENTS: usize = 8;
+const SEED: u64 = 0xE1B3;
+const VICTIM: usize = 1; // an original shard — the elastic margin must outlive it
+
+struct Row {
+    scheme: &'static str,
+    resolved: u64,
+    reconstructed: u64,
+    defaulted: u64,
+    rejected: u64,
+    recovery_rate: f64,
+    parity_overhead: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+    events: Vec<Json>,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme)
+            .set("resolved", self.resolved as usize)
+            .set("reconstructed", self.reconstructed as usize)
+            .set("defaulted", self.defaulted as usize)
+            .set("rejected", self.rejected as usize)
+            .set("recovery_rate", self.recovery_rate)
+            .set("parity_overhead", self.parity_overhead)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("p999_ms", self.p999_ms)
+            .set("events", Json::Arr(self.events.clone()))
+    }
+}
+
+fn pool_for(shards: usize) -> usize {
+    ((shards * M + K - 1) / K).max(1)
+}
+
+/// Parity-pool re-provisioning is generational and asynchronous; block
+/// until size and target agree on `want`.
+fn wait_pool(plane: &ControlPlane, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let size = plane.parity_pool_size().ok().flatten();
+        let target = plane.parity_pool_target().ok().flatten();
+        if size == Some(want) && target == Some(want) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "parity pool never reached {want} (size {size:?} target {target:?})"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Paced Poisson clients; returns once every accepted query resolved.
+fn drive(clients: Vec<ShardedClient>, queries: &[parm::tensor::Tensor], per: u64, per_rate: f64) {
+    let mut joins = Vec::new();
+    for (c, client) in clients.into_iter().enumerate() {
+        let queries = queries.to_vec();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(SEED ^ 0xE7A ^ (c as u64) << 9);
+            let mut due = Instant::now();
+            let mut accepted = 0u64;
+            for i in 0..per {
+                due += Duration::from_secs_f64(rng.exponential(per_rate));
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if client.submit(queries[i as usize % queries.len()].clone()).is_ok() {
+                    accepted += 1;
+                }
+                let _ = client.poll();
+            }
+            while client.stats().resolved < accepted {
+                if client.next(Duration::from_secs(8)).is_none() {
+                    break;
+                }
+            }
+        }));
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+}
+
+fn service_config() -> ServiceConfig {
+    let mut cfg = ServiceConfig::defaults(
+        Mode::CrossShard {
+            k: K,
+            r_min: 1,
+            r_max: R_MAX,
+            halflife: Duration::from_millis(300),
+        },
+        &GPU,
+    );
+    cfg.m = M;
+    cfg.shuffles = 0;
+    cfg.seed = SEED;
+    cfg.slo = Some(Duration::from_millis(1500));
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let m = Manifest::load_default()?;
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_600);
+
+    let models = latency::load_models(&m, 1, K, R_MAX, false)?;
+    let ds = m.dataset(latency::LATENCY_DATASET)?;
+    let source = QuerySource::from_dataset(&m, ds)?;
+    let rate = 320.0;
+    let per = n / CLIENTS as u64;
+    let per_rate = rate / CLIENTS as f64;
+    let run_secs = per as f64 / per_rate;
+    let scale_out_at = Duration::from_secs_f64(run_secs * 0.25);
+    let kill_at = Duration::from_secs_f64(run_secs * 0.45);
+    let scale_in_at = Duration::from_secs_f64(run_secs * 0.70);
+    let spec = ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None };
+
+    println!(
+        "elastic sweep: {n} queries, {CLIENTS} clients, {SHARDS} shards (m={M}), \
+         shard {VICTIM} dies whole at t={:.1}s of {run_secs:.1}s",
+        kill_at.as_secs_f64()
+    );
+    println!(
+        "elastic timeline: add-shard t={:.1}s, drain+remove t={:.1}s",
+        scale_out_at.as_secs_f64(),
+        scale_in_at.as_secs_f64()
+    );
+    println!(
+        "{:<9} {:>9} {:>9} {:>9} {:>9} {:>9} {:>10} {:>9} {:>9} {:>10}",
+        "scheme", "resolved", "recon", "default", "rejected", "recovery", "overhead", "p50(ms)", "p99(ms)", "p99.9(ms)"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- elastic: scale out -> whole-shard kill -> scale in ---
+    {
+        let tier = CrossShardFrontend::start(service_config(), spec, &models, &source.queries[0])?;
+        let plane = Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
+        let clients: Vec<ShardedClient> =
+            (0..CLIENTS).map(|_| plane.client().expect("fleet is live")).collect();
+        let start = Instant::now();
+        let timeline = {
+            let plane = Arc::clone(&plane);
+            std::thread::spawn(move || {
+                let mut events = Vec::new();
+                let mut mark = |plane: &ControlPlane, event: &str| {
+                    let w = plane.window().expect("fleet is live");
+                    events.push(
+                        Json::obj()
+                            .set("event", event)
+                            .set("t_s", start.elapsed().as_secs_f64())
+                            .set("live", plane.live_shards().expect("fleet is live"))
+                            .set(
+                                "parity_pool",
+                                plane.parity_pool_size().expect("fleet is live").unwrap_or(0),
+                            )
+                            .set("window_p99_ms", w.p99_ms)
+                            .set("window_p999_ms", w.p999_ms),
+                    );
+                };
+                let sleep_until = |at: Duration| {
+                    let now = start.elapsed();
+                    if at > now {
+                        std::thread::sleep(at - now);
+                    }
+                };
+
+                sleep_until(scale_out_at);
+                let added = plane.add_shard().expect("scale out");
+                assert_eq!(added, SHARDS, "append-only shard indices");
+                wait_pool(&plane, pool_for(SHARDS + 1));
+                mark(&plane, "scale-out");
+
+                sleep_until(kill_at);
+                for i in 0..M {
+                    plane.kill_instance(VICTIM, i).expect("fleet is live");
+                }
+                mark(&plane, "kill-shard");
+
+                sleep_until(scale_in_at);
+                assert!(plane.drain(added).expect("drain the elastic margin"));
+                plane.remove_shard(added).expect("retire the elastic margin");
+                wait_pool(&plane, pool_for(SHARDS));
+                mark(&plane, "scale-in");
+                events
+            })
+        };
+        drive(clients, &source.queries, per, per_rate);
+        let events = timeline.join().expect("timeline thread");
+        plane.flush_open_groups()?;
+        assert_eq!(plane.shards()?, SHARDS + 1, "retired slot keeps its index");
+        assert_eq!(plane.provisioned_shards()?, SHARDS, "back to the initial footprint");
+        let res = match plane.shutdown()? {
+            FleetRunResult::CrossShard(res) => res,
+            FleetRunResult::Sharded(_) => unreachable!("plane owns a cross-shard fleet"),
+        };
+        assert_eq!(
+            res.fleet.per_shard.len(),
+            SHARDS + 1,
+            "the retired shard still reports its run record"
+        );
+        let t = &res.telemetry;
+        let overhead = if t.groups_sealed > 0 {
+            t.parity_jobs as f64 / t.groups_sealed as f64
+        } else {
+            0.0
+        };
+        let mut metrics = res.fleet.merged.metrics;
+        assert_eq!(metrics.offered(), n, "elastic run conserves every offered query");
+        rows.push(Row {
+            scheme: "elastic",
+            resolved: metrics.total(),
+            reconstructed: metrics.reconstructed,
+            defaulted: metrics.defaulted,
+            rejected: metrics.rejected,
+            recovery_rate: recovery(metrics.reconstructed, metrics.defaulted),
+            parity_overhead: overhead,
+            p50_ms: metrics.latency.median(),
+            p99_ms: metrics.latency.p99(),
+            p999_ms: metrics.latency.p999(),
+            events,
+        });
+        print_row(rows.last().unwrap());
+    }
+
+    // --- static baseline: same fleet, same kill, no reconfiguration ---
+    {
+        let tier = CrossShardFrontend::start(service_config(), spec, &models, &source.queries[0])?;
+        let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+        let killer = {
+            let plan = tier.fault_plan(VICTIM);
+            std::thread::spawn(move || {
+                std::thread::sleep(kill_at);
+                for i in 0..M {
+                    plan.kill(i);
+                }
+            })
+        };
+        drive(clients, &source.queries, per, per_rate);
+        let _ = killer.join();
+        tier.flush_open_groups();
+        let res = tier.shutdown()?;
+        let t = &res.telemetry;
+        let overhead = if t.groups_sealed > 0 {
+            t.parity_jobs as f64 / t.groups_sealed as f64
+        } else {
+            0.0
+        };
+        let mut metrics = res.fleet.merged.metrics;
+        assert_eq!(metrics.offered(), n, "static run conserves every offered query");
+        rows.push(Row {
+            scheme: "static",
+            resolved: metrics.total(),
+            reconstructed: metrics.reconstructed,
+            defaulted: metrics.defaulted,
+            rejected: metrics.rejected,
+            recovery_rate: recovery(metrics.reconstructed, metrics.defaulted),
+            parity_overhead: overhead,
+            p50_ms: metrics.latency.median(),
+            p99_ms: metrics.latency.p99(),
+            p999_ms: metrics.latency.p999(),
+            events: Vec::new(),
+        });
+        print_row(rows.last().unwrap());
+    }
+
+    let json = Json::Arr(rows.iter().map(Row::to_json).collect());
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = "bench_out/elastic.json";
+    if std::fs::write(path, json.to_string()).is_ok() {
+        println!("(wrote {path})");
+    }
+
+    // Headline: reconfiguration is invisible to correctness. Both runs
+    // account for every query; the elastic run additionally resized its
+    // parity pool twice (checked inline) and retired a shard mid-run.
+    let elastic = &rows[0];
+    let fixed = &rows[1];
+    assert!(
+        elastic.reconstructed > 0,
+        "the whole-shard kill must exercise cross-shard decode in the elastic run"
+    );
+    assert!(
+        fixed.reconstructed > 0,
+        "the whole-shard kill must exercise cross-shard decode in the static run"
+    );
+    println!(
+        "elastic: recovery {:.3} p99 {:.3}ms p99.9 {:.3}ms vs static: recovery {:.3} \
+         p99 {:.3}ms p99.9 {:.3}ms",
+        elastic.recovery_rate,
+        elastic.p99_ms,
+        elastic.p999_ms,
+        fixed.recovery_rate,
+        fixed.p99_ms,
+        fixed.p999_ms
+    );
+    println!("ok: scale-out -> whole-shard kill -> scale-in conserved every offered query");
+    Ok(())
+}
+
+/// Of the queries that lost their own prediction, the fraction decode
+/// brought back (1.0 when nothing was lost at all).
+fn recovery(reconstructed: u64, defaulted: u64) -> f64 {
+    let lost = reconstructed + defaulted;
+    if lost == 0 {
+        return 1.0;
+    }
+    reconstructed as f64 / lost as f64
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<9} {:>9} {:>9} {:>9} {:>9} {:>9.3} {:>10.3} {:>9.3} {:>9.3} {:>10.3}",
+        r.scheme,
+        r.resolved,
+        r.reconstructed,
+        r.defaulted,
+        r.rejected,
+        r.recovery_rate,
+        r.parity_overhead,
+        r.p50_ms,
+        r.p99_ms,
+        r.p999_ms,
+    );
+}

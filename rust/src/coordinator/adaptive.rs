@@ -296,7 +296,14 @@ pub(crate) fn poisson_binomial_tail(ps: &[f64], r: usize) -> f64 {
 /// k *most unavailable* shards: conservative for groups striped over
 /// healthy shards, exact for the groups most at risk.
 pub struct FleetPredictor {
+    cfg: PredictorConfig,
     shards: Vec<StragglerPredictor>,
+    /// Per-shard membership flag. Shard indices are append-only across
+    /// the fleet's lifetime (the elastic tier never reuses a slot), so a
+    /// retired shard keeps its predictor — frozen, excluded from every
+    /// fleet-level aggregate — and [`FleetPredictor::grow_to`] only ever
+    /// appends.
+    active: Vec<bool>,
     target_miss: f64,
 }
 
@@ -306,11 +313,37 @@ impl FleetPredictor {
         FleetPredictor {
             target_miss: cfg.target_miss,
             shards: (0..shards).map(|_| StragglerPredictor::new(cfg.clone())).collect(),
+            active: vec![true; shards],
+            cfg,
         }
     }
 
     pub fn shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Append fresh (active) per-shard predictors up to `shards` total;
+    /// a smaller or equal count is a no-op. A new shard starts from the
+    /// prior, not from any retired shard's history.
+    pub fn grow_to(&mut self, shards: usize) {
+        while self.shards.len() < shards {
+            self.shards.push(StragglerPredictor::new(self.cfg.clone()));
+            self.active.push(true);
+        }
+    }
+
+    /// Include or exclude `shard` from fleet-level aggregates (scale-in
+    /// retires a shard; its index stays valid forever). Out-of-range is
+    /// a no-op.
+    pub fn set_active(&mut self, shard: usize, active: bool) {
+        if let Some(a) = self.active.get_mut(shard) {
+            *a = active;
+        }
+    }
+
+    /// Whether `shard` currently counts toward fleet aggregates.
+    pub fn is_active(&self, shard: usize) -> bool {
+        self.active.get(shard).copied().unwrap_or(false)
     }
 
     /// Feed one data completion observed on `shard`.
@@ -321,41 +354,53 @@ impl FleetPredictor {
         latency: Duration,
         now: Instant,
     ) {
-        self.shards[shard].observe_completion(instance, latency, now);
+        if let Some(p) = self.shards.get_mut(shard) {
+            p.observe_completion(instance, latency, now);
+        }
     }
 
     /// Feed `n` hard losses attributed to `shard`.
     pub fn observe_losses(&mut self, shard: usize, n: usize, now: Instant) {
-        self.shards[shard].observe_losses(n, now);
+        if let Some(p) = self.shards.get_mut(shard) {
+            p.observe_losses(n, now);
+        }
     }
 
-    /// One shard's unavailability estimate.
+    /// One shard's unavailability estimate (retired shards report the
+    /// decayed remainder of their history).
     pub fn shard_unavailability(&self, shard: usize, now: Instant) -> f64 {
         self.shards[shard].unavailability(now)
     }
 
-    /// The worst per-shard estimate — the headline number (a group's
-    /// weakest fault domain dominates its loss probability).
-    pub fn fleet_unavailability(&self, now: Instant) -> f64 {
+    /// Iterator over the active shards' predictors.
+    fn active_preds(&self) -> impl Iterator<Item = &StragglerPredictor> {
         self.shards
             .iter()
-            .map(|p| p.unavailability(now))
-            .fold(0.0, f64::max)
+            .zip(self.active.iter())
+            .filter_map(|(p, &a)| if a { Some(p) } else { None })
     }
 
-    /// The slowest shard's pool-wide EWMA latency in ms (0 before any
-    /// completion) — drives loss-horizon scaling like the single-pool
-    /// predictor's mean.
+    /// The worst active per-shard estimate — the headline number (a
+    /// group's weakest fault domain dominates its loss probability).
+    pub fn fleet_unavailability(&self, now: Instant) -> f64 {
+        self.active_preds().map(|p| p.unavailability(now)).fold(0.0, f64::max)
+    }
+
+    /// The slowest active shard's pool-wide EWMA latency in ms (0 before
+    /// any completion) — drives loss-horizon scaling like the
+    /// single-pool predictor's mean.
     pub fn mean_latency_ms(&self) -> f64 {
-        self.shards.iter().map(StragglerPredictor::mean_latency_ms).fold(0.0, f64::max)
+        self.active_preds().map(StragglerPredictor::mean_latency_ms).fold(0.0, f64::max)
     }
 
     /// Smallest `r` in `[r_min, r_max]` keeping the Poisson-binomial
-    /// tail over the k most unavailable shards under `target_miss`;
-    /// `r_max` if none does.
+    /// tail over the k most unavailable *active* shards under
+    /// `target_miss`; `r_max` if none does.
     pub fn recommend_r(&self, k: usize, r_min: usize, r_max: usize, now: Instant) -> usize {
-        let mut ps: Vec<f64> =
-            self.shards.iter().map(|p| p.unavailability(now)).collect();
+        let mut ps: Vec<f64> = self.active_preds().map(|p| p.unavailability(now)).collect();
+        if ps.is_empty() {
+            return r_min;
+        }
         ps.sort_by(|a, b| b.total_cmp(a));
         ps.truncate(k);
         // Guarded by the tier (shards >= k), but stay total: pad with
@@ -1005,6 +1050,46 @@ mod tests {
         let later = base + Duration::from_secs(5);
         assert!(f.fleet_unavailability(later) < 0.05);
         assert_eq!(f.recommend_r(2, 1, 2, later), 1);
+    }
+
+    /// Elastic membership: a retired shard's (possibly terrible) history
+    /// stops influencing fleet aggregates, and a freshly grown shard
+    /// starts from the prior — indices are append-only, so both
+    /// directions only ever flip flags or push new predictors.
+    #[test]
+    fn fleet_predictor_grows_and_retires_shards() {
+        let cfg = PredictorConfig {
+            halflife: Duration::from_millis(100),
+            ..PredictorConfig::default()
+        };
+        let mut f = FleetPredictor::new(2, cfg);
+        let base = Instant::now();
+        for shard in 0..2 {
+            for i in 0..30 {
+                f.observe_completion(shard, i % 2, Duration::from_millis(10), base);
+            }
+        }
+        f.observe_losses(1, 60, base);
+        assert!(f.fleet_unavailability(base) > 0.5);
+
+        // Retiring the sick shard drops it from every aggregate...
+        f.set_active(1, false);
+        assert!(!f.is_active(1));
+        assert!(f.fleet_unavailability(base) < 0.05);
+        assert_eq!(f.recommend_r(2, 1, 2, base), 1);
+        // ...but its per-index estimate stays readable.
+        assert!(f.shard_unavailability(1, base) > 0.5);
+
+        // Growth appends fresh active predictors; smaller is a no-op.
+        f.grow_to(4);
+        assert_eq!(f.shards(), 4);
+        assert!(f.is_active(3));
+        f.grow_to(3);
+        assert_eq!(f.shards(), 4);
+        // Out-of-range observations are ignored, never a panic.
+        f.observe_losses(99, 5, base);
+        f.observe_completion(99, 0, Duration::from_millis(5), base);
+        assert!(f.fleet_unavailability(base) < 0.05);
     }
 
     #[test]

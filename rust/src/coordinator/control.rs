@@ -1,0 +1,824 @@
+//! Embedded control plane: runtime fleet reconfiguration behind an
+//! operator-facing admin surface.
+//!
+//! The elastic primitives live on the tiers themselves —
+//! [`ShardedFrontend::add_shard`], [`CrossShardFrontend::remove_shard`],
+//! drain/restore, [`ShardedFrontend::set_admission`] — but an operator
+//! needs one place that (a) owns whichever tier is serving, (b)
+//! serializes reconfiguration commands against each other, (c) keeps
+//! working after the fleet shuts down (every op degrades to a clean
+//! [`ReconfigError::Closed`]), and (d) speaks a wire protocol a human
+//! can drive with `parm admin`. That is [`ControlPlane`]:
+//!
+//! ```text
+//!   parm admin status ──▶ UnixStream ──▶ AdminServer (accept thread)
+//!                                             │ one line = one command
+//!                                             ▼
+//!                                      ControlPlane::handle_line
+//!                                             │ add/remove/drain/…
+//!                                             ▼
+//!                              ShardedFrontend / CrossShardFrontend
+//! ```
+//!
+//! **Strictly non-blocking for the data path.** Admin commands run on
+//! the admin server's connection threads and only take the same brief
+//! slot/ring lock windows the tiers' own reconfiguration entry points
+//! take; the query path (`submit`/`poll`/`next`) never waits on an
+//! in-progress admin command beyond those windows. Slow commands
+//! (`add-shard` stands up a whole session) block only their own
+//! connection.
+//!
+//! **Reconfiguration state machine.** Per shard slot:
+//! `live ⇄ drained → retired` (drain/restore flip the ring flag;
+//! remove retires the slot forever — indices are append-only). Every
+//! transition is idempotent or a clean error, never a panic; see
+//! [`ShardRouter::drain_shard`] for the `Ok(true)`/`Ok(false)`/`Err`
+//! contract the whole module follows.
+//!
+//! **Wire protocol.** Line-oriented JSON over a local Unix socket: one
+//! request object per line, one response object per line, keyed by
+//! `"cmd"`. Responses always carry `"ok"`. See [`ControlPlane::handle_line`].
+//!
+//! **Predictor → scale flow.** For a cross-shard fleet, `recommend`
+//! reads the [`FleetPredictor`]-backed fleet unavailability from the
+//! tier's telemetry and compares it against the
+//! [`ControlPlaneConfig`] thresholds: sustained unavailability above
+//! `scale_out_threshold` recommends adding a shard; a calm fleet above
+//! `min_shards` recommends retiring the worst drained-or-trailing
+//! shard. The decision is advisory — the operator (or an external
+//! autoscaler looping `parm admin recommend`) applies it.
+//!
+//! [`ShardedFrontend::add_shard`]: crate::coordinator::shards::ShardedFrontend::add_shard
+//! [`CrossShardFrontend::remove_shard`]: crate::coordinator::shards::CrossShardFrontend::remove_shard
+//! [`ShardedFrontend::set_admission`]: crate::coordinator::shards::ShardedFrontend::set_admission
+//! [`ShardRouter::drain_shard`]: crate::coordinator::shards::ShardRouter::drain_shard
+//! [`FleetPredictor`]: crate::coordinator::adaptive::FleetPredictor
+
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::cluster::faults::FaultPlan;
+use crate::coordinator::frontend::AdmissionPolicy;
+use crate::coordinator::metrics::WindowSnapshot;
+use crate::coordinator::shards::{
+    CrossShardFrontend, CrossShardRunResult, ReconfigError, ShardedClient,
+    ShardedFrontend, ShardedRunResult,
+};
+use crate::util::json::Json;
+
+/// The serving tier a control plane owns (either flavor exposes the
+/// same elastic surface; the cross-shard tier adds parity-pool
+/// re-provisioning and coding telemetry).
+pub enum Fleet {
+    Sharded(ShardedFrontend),
+    CrossShard(CrossShardFrontend),
+}
+
+/// What [`ControlPlane::shutdown`] returns.
+pub enum FleetRunResult {
+    Sharded(ShardedRunResult),
+    CrossShard(CrossShardRunResult),
+}
+
+impl FleetRunResult {
+    /// The client-traffic fleet record, whichever tier produced it.
+    pub fn fleet(&self) -> &ShardedRunResult {
+        match self {
+            FleetRunResult::Sharded(r) => r,
+            FleetRunResult::CrossShard(r) => &r.fleet,
+        }
+    }
+}
+
+/// Thresholds of the advisory autoscaling hook (`recommend`).
+#[derive(Clone, Copy, Debug)]
+pub struct ControlPlaneConfig {
+    /// Fleet unavailability (cross-shard) or windowed reject rate
+    /// (sharded) at or above which `recommend` suggests scale-out.
+    pub scale_out_threshold: f64,
+    /// Signal at or below which a fleet larger than `min_shards` gets a
+    /// scale-in suggestion.
+    pub scale_in_threshold: f64,
+    /// `recommend` never suggests shrinking below this many live shards.
+    pub min_shards: usize,
+    /// `recommend` never suggests growing past this many provisioned
+    /// shards.
+    pub max_shards: usize,
+}
+
+impl Default for ControlPlaneConfig {
+    fn default() -> ControlPlaneConfig {
+        ControlPlaneConfig {
+            scale_out_threshold: 0.25,
+            scale_in_threshold: 0.02,
+            min_shards: 2,
+            max_shards: 16,
+        }
+    }
+}
+
+/// Advisory output of [`ControlPlane::recommendation`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Stand up one more shard.
+    ScaleOut { reason: String },
+    /// Drain-then-remove this shard.
+    ScaleIn { shard: usize, reason: String },
+    /// Leave the fleet alone.
+    Hold,
+}
+
+/// Owns a live fleet and exposes every runtime-reconfiguration verb,
+/// both programmatically and as the line-oriented JSON protocol the
+/// admin socket speaks. All methods take `&self`; reconfiguration
+/// commands are serialized by an internal mutex (on top of the tiers'
+/// own serialization), and after [`ControlPlane::shutdown`] every op
+/// returns [`ReconfigError::Closed`] instead of panicking.
+pub struct ControlPlane {
+    fleet: RwLock<Option<Fleet>>,
+    /// Serializes reconfiguration verbs (add/remove/drain/restore/
+    /// set-admission) so concurrent admin connections apply in a
+    /// definite order. Read-only surfaces never take it.
+    ops: Mutex<()>,
+    cfg: ControlPlaneConfig,
+}
+
+impl ControlPlane {
+    pub fn new(fleet: Fleet) -> ControlPlane {
+        ControlPlane::with_config(fleet, ControlPlaneConfig::default())
+    }
+
+    pub fn with_config(fleet: Fleet, cfg: ControlPlaneConfig) -> ControlPlane {
+        ControlPlane { fleet: RwLock::new(Some(fleet)), ops: Mutex::new(()), cfg }
+    }
+
+    /// Run `f` against the live fleet, or [`ReconfigError::Closed`]
+    /// after shutdown.
+    fn with_fleet<T>(&self, f: impl FnOnce(&Fleet) -> T) -> Result<T, ReconfigError> {
+        match self.fleet.read().unwrap().as_ref() {
+            Some(fleet) => Ok(f(fleet)),
+            None => Err(ReconfigError::Closed),
+        }
+    }
+
+    /// Mint a shard-transparent client of the live fleet (`None` after
+    /// shutdown). Existing clients keep working across every
+    /// reconfiguration — only shutdown ends them.
+    pub fn client(&self) -> Option<ShardedClient> {
+        self.fleet.read().unwrap().as_ref().map(|fleet| match fleet {
+            Fleet::Sharded(t) => t.client(),
+            Fleet::CrossShard(t) => t.client(),
+        })
+    }
+
+    /// Mint a client with an explicit admission-fairness weight.
+    pub fn client_with_weight(&self, weight: f64) -> Option<ShardedClient> {
+        self.fleet.read().unwrap().as_ref().map(|fleet| match fleet {
+            Fleet::Sharded(t) => t.client_with_weight(weight),
+            Fleet::CrossShard(t) => t.client_with_weight(weight),
+        })
+    }
+
+    /// Stand up one more shard (see [`ShardedFrontend::add_shard`];
+    /// on a cross-shard fleet the parity pool is re-provisioned toward
+    /// the new `ceil(shards·m/k)` target as well). Returns the new
+    /// shard's index.
+    ///
+    /// [`ShardedFrontend::add_shard`]: crate::coordinator::shards::ShardedFrontend::add_shard
+    pub fn add_shard(&self) -> anyhow::Result<usize> {
+        let _ops = self.ops.lock().unwrap();
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.add_shard(),
+            Fleet::CrossShard(t) => t.add_shard(),
+        })?
+    }
+
+    /// Drain, reroute, and tear one shard down (cross-shard fleets also
+    /// retire its coding lane and shrink the parity pool). Idempotent
+    /// per the module contract: double-remove is a clean
+    /// [`ReconfigError::RemovedShard`].
+    pub fn remove_shard(&self, shard: usize) -> anyhow::Result<()> {
+        let _ops = self.ops.lock().unwrap();
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.remove_shard(shard),
+            Fleet::CrossShard(t) => t.remove_shard(shard),
+        })?
+    }
+
+    /// Take a shard out of the routing ring. `Ok(true)` = transitioned,
+    /// `Ok(false)` = already drained (no-op).
+    pub fn drain(&self, shard: usize) -> Result<bool, ReconfigError> {
+        let _ops = self.ops.lock().unwrap();
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.drain_shard(shard),
+            Fleet::CrossShard(t) => t.drain_shard(shard),
+        })?
+    }
+
+    /// Put a drained shard back. `Ok(false)` = it was already live.
+    pub fn restore(&self, shard: usize) -> Result<bool, ReconfigError> {
+        let _ops = self.ops.lock().unwrap();
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.restore_shard(shard),
+            Fleet::CrossShard(t) => t.restore_shard(shard),
+        })?
+    }
+
+    /// Swap the admission policy on every live shard (late-added shards
+    /// inherit it).
+    pub fn set_admission(&self, policy: AdmissionPolicy) -> Result<(), ReconfigError> {
+        let _ops = self.ops.lock().unwrap();
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.set_admission(policy),
+            Fleet::CrossShard(t) => t.set_admission(policy),
+        })
+    }
+
+    /// Total shard slots ever allocated (including retired ones).
+    pub fn shards(&self) -> Result<usize, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.shards(),
+            Fleet::CrossShard(t) => t.shards(),
+        })
+    }
+
+    /// Shards with running sessions (drained or not).
+    pub fn provisioned_shards(&self) -> Result<usize, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.provisioned_shards(),
+            Fleet::CrossShard(t) => t.provisioned_shards(),
+        })
+    }
+
+    /// Shards currently accepting routes.
+    pub fn live_shards(&self) -> Result<usize, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.live_shards(),
+            Fleet::CrossShard(t) => t.live_shards(),
+        })
+    }
+
+    /// Per-r_index parity pool size (`None` on a plain sharded fleet).
+    pub fn parity_pool_size(&self) -> Result<Option<usize>, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(_) => None,
+            Fleet::CrossShard(t) => Some(t.parity_pool_size()),
+        })
+    }
+
+    /// The parity pool size the current fleet calls for (`None` on a
+    /// plain sharded fleet).
+    pub fn parity_pool_target(&self) -> Result<Option<usize>, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(_) => None,
+            Fleet::CrossShard(t) => Some(t.parity_pool_target()),
+        })
+    }
+
+    /// One shard's fault plan (deterministic-chaos harness surface).
+    pub fn fault_plan(&self, shard: usize) -> Result<Arc<FaultPlan>, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.fault_plan(shard),
+            Fleet::CrossShard(t) => t.fault_plan(shard),
+        })
+    }
+
+    /// Permanently kill one instance of one shard.
+    pub fn kill_instance(&self, shard: usize, instance: usize) -> Result<(), ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.kill_instance(shard, instance),
+            Fleet::CrossShard(t) => t.kill_instance(shard, instance),
+        })
+    }
+
+    /// Short-seal every open cross-shard coding group (no-op on a plain
+    /// sharded fleet).
+    pub fn flush_open_groups(&self) -> Result<(), ReconfigError> {
+        self.with_fleet(|fleet| {
+            if let Fleet::CrossShard(t) = fleet {
+                t.flush_open_groups();
+            }
+        })
+    }
+
+    /// Fleet-wide merged live window.
+    pub fn window(&self) -> Result<WindowSnapshot, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.window(),
+            Fleet::CrossShard(t) => t.window(),
+        })
+    }
+
+    /// One shard's live window.
+    pub fn shard_window(&self, shard: usize) -> Result<WindowSnapshot, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.shard_window(shard),
+            Fleet::CrossShard(t) => t.shard_window(shard),
+        })
+    }
+
+    /// Fleet shape + health at a glance, as the admin protocol's
+    /// `status` reply payload.
+    pub fn status(&self) -> Result<Json, ReconfigError> {
+        self.with_fleet(|fleet| {
+            let (tier, shards, provisioned, live, load, rejected) = match fleet {
+                Fleet::Sharded(t) => ("sharded", t.shards(), t.provisioned_shards(), t.live_shards(), t.load(), t.rejected()),
+                Fleet::CrossShard(t) => ("cross-shard", t.shards(), t.provisioned_shards(), t.live_shards(), t.load(), t.rejected()),
+            };
+            let states: Vec<Json> = (0..shards)
+                .map(|s| {
+                    let state = match fleet {
+                        Fleet::Sharded(t) => t.shard_state(s),
+                        Fleet::CrossShard(t) => t.shard_state(s),
+                    };
+                    Json::obj().set("shard", s).set("state", state)
+                })
+                .collect();
+            let mut out = Json::obj()
+                .set("tier", tier)
+                .set("shards", shards)
+                .set("provisioned", provisioned)
+                .set("live", live)
+                .set("load", load)
+                .set("rejected", rejected)
+                .set("shard_states", Json::Arr(states));
+            if let Fleet::CrossShard(t) = fleet {
+                out = out.set(
+                    "parity_pool",
+                    Json::obj()
+                        .set("size", t.parity_pool_size())
+                        .set("target", t.parity_pool_target()),
+                );
+            }
+            out
+        })
+    }
+
+    /// The raw coding telemetry (`None` on a plain sharded fleet) — the
+    /// programmatic counterpart of the JSON `telemetry` command.
+    pub fn cross_telemetry(
+        &self,
+    ) -> Result<Option<crate::coordinator::cross_shard::CrossShardTelemetry>, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(_) => None,
+            Fleet::CrossShard(t) => Some(t.telemetry()),
+        })
+    }
+
+    /// Merged + per-shard windows, scheme telemetry, and per-shard
+    /// predictor estimates, as the admin protocol's `telemetry` reply
+    /// payload.
+    pub fn telemetry(&self) -> Result<Json, ReconfigError> {
+        self.with_fleet(|fleet| {
+            let shards = match fleet {
+                Fleet::Sharded(t) => t.shards(),
+                Fleet::CrossShard(t) => t.shards(),
+            };
+            let merged = match fleet {
+                Fleet::Sharded(t) => t.window(),
+                Fleet::CrossShard(t) => t.window(),
+            };
+            let per_shard: Vec<Json> = (0..shards)
+                .map(|s| {
+                    let w = match fleet {
+                        Fleet::Sharded(t) => t.shard_window(s),
+                        Fleet::CrossShard(t) => t.shard_window(s),
+                    };
+                    window_json(&w).set("shard", s)
+                })
+                .collect();
+            let mut out = Json::obj()
+                .set("window", window_json(&merged))
+                .set("per_shard", Json::Arr(per_shard));
+            if let Fleet::CrossShard(t) = fleet {
+                let tel = t.telemetry();
+                out = out.set(
+                    "coding",
+                    Json::obj()
+                        .set("last_r", tel.last_r)
+                        .set("fleet_unavailability", tel.fleet_unavailability)
+                        .set(
+                            "per_shard_unavailability",
+                            Json::Arr(
+                                tel.per_shard_unavailability
+                                    .iter()
+                                    .map(|&u| Json::Num(u))
+                                    .collect(),
+                            ),
+                        )
+                        .set("groups_sealed", tel.groups_sealed)
+                        .set("parity_jobs", tel.parity_jobs)
+                        .set("reconstructions", tel.reconstructions)
+                        .set("open_groups", tel.open_groups),
+                );
+            }
+            out
+        })
+    }
+
+    /// The advisory predictor→scale hook: compare the fleet's health
+    /// signal against the configured thresholds. Cross-shard fleets use
+    /// the [`FleetPredictor`]-backed fleet unavailability; plain sharded
+    /// fleets fall back to the windowed reject rate (their only
+    /// fleet-level pressure signal).
+    ///
+    /// [`FleetPredictor`]: crate::coordinator::adaptive::FleetPredictor
+    pub fn recommendation(&self) -> Result<ScaleDecision, ReconfigError> {
+        self.with_fleet(|fleet| {
+            let (signal, label, shards, provisioned, live) = match fleet {
+                Fleet::CrossShard(t) => {
+                    let tel = t.telemetry();
+                    (
+                        tel.fleet_unavailability,
+                        "fleet unavailability",
+                        t.shards(),
+                        t.provisioned_shards(),
+                        t.live_shards(),
+                    )
+                }
+                Fleet::Sharded(t) => (
+                    t.window().reject_rate,
+                    "windowed reject rate",
+                    t.shards(),
+                    t.provisioned_shards(),
+                    t.live_shards(),
+                ),
+            };
+            if signal >= self.cfg.scale_out_threshold && provisioned < self.cfg.max_shards {
+                return ScaleDecision::ScaleOut {
+                    reason: format!(
+                        "{label} {signal:.3} >= {:.3} with {provisioned} provisioned shards",
+                        self.cfg.scale_out_threshold
+                    ),
+                };
+            }
+            if signal <= self.cfg.scale_in_threshold && live > self.cfg.min_shards {
+                // Prefer retiring an already-drained shard; otherwise
+                // the newest live one (append-only indices make the
+                // newest the natural elastic margin).
+                let candidate = (0..shards)
+                    .rev()
+                    .find(|&s| {
+                        let state = match fleet {
+                            Fleet::Sharded(t) => t.shard_state(s),
+                            Fleet::CrossShard(t) => t.shard_state(s),
+                        };
+                        state == "drained"
+                    })
+                    .or_else(|| {
+                        (0..shards).rev().find(|&s| {
+                            let state = match fleet {
+                                Fleet::Sharded(t) => t.shard_state(s),
+                                Fleet::CrossShard(t) => t.shard_state(s),
+                            };
+                            state == "live"
+                        })
+                    });
+                if let Some(shard) = candidate {
+                    return ScaleDecision::ScaleIn {
+                        shard,
+                        reason: format!(
+                            "{label} {signal:.3} <= {:.3} with {live} live shards",
+                            self.cfg.scale_in_threshold
+                        ),
+                    };
+                }
+            }
+            ScaleDecision::Hold
+        })
+    }
+
+    /// Handle one admin-protocol request line, returning the response
+    /// line (without the trailing newline). Never panics; malformed
+    /// input and invalid operations come back as `{"ok":false,...}`.
+    ///
+    /// Requests: `{"cmd":"ping"}` · `{"cmd":"status"}` ·
+    /// `{"cmd":"telemetry"}` · `{"cmd":"recommend"}` ·
+    /// `{"cmd":"drain","shard":N}` · `{"cmd":"restore","shard":N}` ·
+    /// `{"cmd":"add-shard"}` · `{"cmd":"remove-shard","shard":N}` ·
+    /// `{"cmd":"set-admission","policy":"unbounded"|"reject-above"|
+    /// "block"|"slo-aware",...}` (with `backlog`, `timeout_ms`,
+    /// `slo_ms` as each policy needs).
+    pub fn handle_line(&self, line: &str) -> String {
+        match self.handle(line) {
+            Ok(body) => body.set("ok", true).to_string(),
+            Err(e) => Json::obj().set("ok", false).set("error", e).to_string(),
+        }
+    }
+
+    fn handle(&self, line: &str) -> Result<Json, String> {
+        let req = Json::parse(line.trim()).map_err(|e| format!("bad request: {e}"))?;
+        let cmd = req
+            .at(&["cmd"])
+            .as_str()
+            .ok_or_else(|| "missing \"cmd\"".to_string())?;
+        let shard_arg = || {
+            req.at(&["shard"])
+                .as_usize()
+                .ok_or_else(|| format!("{cmd} needs a \"shard\" index"))
+        };
+        match cmd {
+            "ping" => Ok(Json::obj()),
+            "status" => self.status().map_err(|e| e.to_string()),
+            "telemetry" => self.telemetry().map_err(|e| e.to_string()),
+            "recommend" => {
+                let d = self.recommendation().map_err(|e| e.to_string())?;
+                Ok(decision_json(&d))
+            }
+            "drain" => {
+                let changed = self.drain(shard_arg()?).map_err(|e| e.to_string())?;
+                Ok(Json::obj().set("changed", changed))
+            }
+            "restore" => {
+                let changed = self.restore(shard_arg()?).map_err(|e| e.to_string())?;
+                Ok(Json::obj().set("changed", changed))
+            }
+            "add-shard" => {
+                let s = self.add_shard().map_err(|e| e.to_string())?;
+                Ok(Json::obj().set("shard", s))
+            }
+            "remove-shard" => {
+                let s = shard_arg()?;
+                self.remove_shard(s).map_err(|e| e.to_string())?;
+                Ok(Json::obj().set("shard", s))
+            }
+            "set-admission" => {
+                let policy = parse_policy(&req)?;
+                self.set_admission(policy).map_err(|e| e.to_string())?;
+                Ok(Json::obj().set("policy", format!("{policy:?}")))
+            }
+            other => Err(format!("unknown command {other:?}")),
+        }
+    }
+
+    /// Take the fleet down (each tier drains in-flight queries) and
+    /// return the merged run record. Every subsequent op — including a
+    /// second `shutdown` — fails with [`ReconfigError::Closed`].
+    pub fn shutdown(&self) -> anyhow::Result<FleetRunResult> {
+        let _ops = self.ops.lock().unwrap();
+        let fleet = self.fleet.write().unwrap().take();
+        match fleet {
+            Some(Fleet::Sharded(t)) => Ok(FleetRunResult::Sharded(t.shutdown()?)),
+            Some(Fleet::CrossShard(t)) => Ok(FleetRunResult::CrossShard(t.shutdown()?)),
+            None => Err(ReconfigError::Closed.into()),
+        }
+    }
+}
+
+/// A [`WindowSnapshot`] as the admin protocol's JSON shape.
+fn window_json(w: &WindowSnapshot) -> Json {
+    Json::obj()
+        .set("window_s", w.window.as_secs_f64())
+        .set("resolved", w.resolved)
+        .set("rejected", w.rejected)
+        .set("p50_ms", w.p50_ms)
+        .set("p99_ms", w.p99_ms)
+        .set("p999_ms", w.p999_ms)
+        .set("recovery_rate", w.recovery_rate)
+        .set("reject_rate", w.reject_rate)
+        .set("default_rate", w.default_rate)
+        .set("qps", w.qps)
+}
+
+fn decision_json(d: &ScaleDecision) -> Json {
+    match d {
+        ScaleDecision::ScaleOut { reason } => Json::obj()
+            .set("action", "scale-out")
+            .set("reason", reason.clone()),
+        ScaleDecision::ScaleIn { shard, reason } => Json::obj()
+            .set("action", "scale-in")
+            .set("shard", *shard)
+            .set("reason", reason.clone()),
+        ScaleDecision::Hold => Json::obj().set("action", "hold"),
+    }
+}
+
+/// Parse the `set-admission` request body into a policy.
+fn parse_policy(req: &Json) -> Result<AdmissionPolicy, String> {
+    let name = req
+        .at(&["policy"])
+        .as_str()
+        .ok_or_else(|| "set-admission needs a \"policy\"".to_string())?;
+    let backlog = req.at(&["backlog"]).as_usize();
+    match name {
+        "unbounded" => Ok(AdmissionPolicy::Unbounded),
+        "reject-above" => Ok(AdmissionPolicy::RejectAbove {
+            backlog: backlog.ok_or_else(|| "reject-above needs \"backlog\"".to_string())?,
+        }),
+        "block" => Ok(AdmissionPolicy::Block {
+            backlog: backlog.ok_or_else(|| "block needs \"backlog\"".to_string())?,
+            timeout: Duration::from_millis(
+                req.at(&["timeout_ms"]).as_f64().unwrap_or(100.0) as u64
+            ),
+        }),
+        "slo-aware" => Ok(AdmissionPolicy::SloAware {
+            p99: Duration::from_secs_f64(
+                req.at(&["slo_ms"])
+                    .as_f64()
+                    .ok_or_else(|| "slo-aware needs \"slo_ms\"".to_string())?
+                    / 1e3,
+            ),
+            backlog: backlog.unwrap_or(usize::MAX),
+        }),
+        other => Err(format!("unknown policy {other:?}")),
+    }
+}
+
+// ------------------------------------------------------------------------
+// Admin socket server
+// ------------------------------------------------------------------------
+
+/// Line-oriented JSON admin endpoint on a local Unix socket.
+///
+/// One accept thread; each connection gets its own thread (a slow
+/// `add-shard` must not block a concurrent `status`). Stopping the
+/// server (or dropping it) joins every thread and removes the socket
+/// file. Unix-only — `parm serve --admin-socket` is gated accordingly.
+#[cfg(unix)]
+pub struct AdminServer {
+    path: std::path::PathBuf,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+#[cfg(unix)]
+impl AdminServer {
+    /// Bind `path` (an existing socket file there is replaced) and start
+    /// serving `plane`.
+    pub fn bind(
+        path: impl AsRef<std::path::Path>,
+        plane: Arc<ControlPlane>,
+    ) -> anyhow::Result<AdminServer> {
+        use std::os::unix::net::UnixListener;
+        use std::sync::atomic::{AtomicBool, Ordering};
+
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .map_err(|e| anyhow::anyhow!("bind admin socket {}: {e}", path.display()))?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("parm-admin".into())
+            .spawn(move || {
+                let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+                while !thread_stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let plane = plane.clone();
+                            let conn_stop = thread_stop.clone();
+                            conns.push(std::thread::spawn(move || {
+                                serve_conn(stream, &plane, &conn_stop);
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(e) => {
+                            log::warn!("admin socket accept failed: {e}");
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                    }
+                    conns.retain(|h| !h.is_finished());
+                }
+                for h in conns {
+                    let _ = h.join();
+                }
+            })
+            .expect("spawn admin accept thread");
+        Ok(AdminServer { path, stop, accept: Some(accept) })
+    }
+
+    /// The socket path this server is bound to.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Stop accepting, join every connection thread, remove the socket
+    /// file.
+    pub fn stop(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(unix)]
+impl Drop for AdminServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// One admin connection: read a request line, write the response line,
+/// repeat until EOF, error, or server stop. The read timeout bounds how
+/// long a stopping server waits on an idle connection.
+#[cfg(unix)]
+fn serve_conn(
+    stream: std::os::unix::net::UnixStream,
+    plane: &ControlPlane,
+    stop: &std::sync::atomic::AtomicBool,
+) {
+    use std::io::{BufRead, BufReader, Write};
+    use std::sync::atomic::Ordering;
+
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    while !stop.load(Ordering::SeqCst) {
+        // read_line appends, so a request split across read timeouts
+        // accumulates in `buf` until the newline lands — only a handled
+        // line clears it.
+        match reader.read_line(&mut buf) {
+            Ok(0) => return, // EOF: client hung up.
+            Ok(_) => {
+                if !buf.trim().is_empty() {
+                    let reply = plane.handle_line(&buf);
+                    if writer
+                        .write_all(reply.as_bytes())
+                        .and_then(|()| writer.write_all(b"\n"))
+                        .and_then(|()| writer.flush())
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                buf.clear();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_rejects_malformed_input_cleanly() {
+        // A closed plane still answers protocol errors without touching
+        // the (absent) fleet.
+        let plane = ControlPlane {
+            fleet: RwLock::new(None),
+            ops: Mutex::new(()),
+            cfg: ControlPlaneConfig::default(),
+        };
+        for bad in ["", "not json", "{}", "{\"cmd\":\"no-such\"}", "{\"cmd\":\"drain\"}"] {
+            let reply = Json::parse(&plane.handle_line(bad)).unwrap();
+            assert_eq!(reply.at(&["ok"]).as_bool(), Some(false), "input {bad:?}");
+            assert!(reply.at(&["error"]).as_str().is_some());
+        }
+        // Ping needs no fleet.
+        let reply = Json::parse(&plane.handle_line("{\"cmd\":\"ping\"}")).unwrap();
+        assert_eq!(reply.at(&["ok"]).as_bool(), Some(true));
+        // Fleet ops on a closed plane: clean Closed errors.
+        let reply = Json::parse(&plane.handle_line("{\"cmd\":\"status\"}")).unwrap();
+        assert_eq!(reply.at(&["ok"]).as_bool(), Some(false));
+        assert!(reply.at(&["error"]).as_str().unwrap().contains("shut down"));
+        assert!(matches!(plane.drain(0), Err(ReconfigError::Closed)));
+        assert!(matches!(plane.restore(0), Err(ReconfigError::Closed)));
+        assert!(plane.add_shard().is_err());
+        assert!(plane.client().is_none());
+    }
+
+    #[test]
+    fn policy_parsing_covers_every_variant() {
+        let p = |s: &str| parse_policy(&Json::parse(s).unwrap());
+        assert_eq!(
+            p(r#"{"policy":"unbounded"}"#).unwrap(),
+            AdmissionPolicy::Unbounded
+        );
+        assert_eq!(
+            p(r#"{"policy":"reject-above","backlog":64}"#).unwrap(),
+            AdmissionPolicy::RejectAbove { backlog: 64 }
+        );
+        assert_eq!(
+            p(r#"{"policy":"block","backlog":32,"timeout_ms":50}"#).unwrap(),
+            AdmissionPolicy::Block { backlog: 32, timeout: Duration::from_millis(50) }
+        );
+        assert_eq!(
+            p(r#"{"policy":"slo-aware","slo_ms":250,"backlog":128}"#).unwrap(),
+            AdmissionPolicy::SloAware { p99: Duration::from_millis(250), backlog: 128 }
+        );
+        assert!(p(r#"{"policy":"reject-above"}"#).is_err(), "backlog required");
+        assert!(p(r#"{"policy":"slo-aware"}"#).is_err(), "slo_ms required");
+        assert!(p(r#"{"policy":"martian"}"#).is_err());
+        assert!(p(r#"{}"#).is_err());
+    }
+}

@@ -51,6 +51,7 @@
 //! seeded property suites drive it without a cluster.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -122,6 +123,11 @@ pub struct ParityJob {
 /// Messages to the parity driver thread.
 pub(crate) enum ParityMsg {
     Job(ParityJob),
+    /// Re-provision every per-r_index pool to `per` instances: fresh
+    /// sessions (a new epoch) take over new jobs while the outgoing
+    /// generation finishes its in-flight parity work before retiring —
+    /// no open group loses its protection mid-resize.
+    Resize { per: usize },
     Stop,
 }
 
@@ -177,8 +183,12 @@ struct Inner {
     /// Wired by the tier before any shard can seal; `None` in pure
     /// property tests (parities are then fed via `on_parity`).
     parity_tx: Option<mpsc::Sender<ParityMsg>>,
-    /// (r_index, first session qid of the parity batch) -> group.
-    parity_routes: HashMap<(usize, u64), u64>,
+    /// (r_index, pool epoch, first session qid of the parity batch) ->
+    /// group. The epoch disambiguates generations across parity-pool
+    /// resizes: a fresh session restarts its qids at zero, so without it
+    /// a stale route from a retired generation could claim a new job's
+    /// completion.
+    parity_routes: HashMap<(usize, u64, u64), u64>,
     /// (group, slot) -> data dispatch instant (predictor latency obs).
     dispatch_at: HashMap<(u64, usize), Instant>,
     /// Sealed groups awaiting the stale sweep, oldest first.
@@ -438,6 +448,48 @@ impl CrossShardState {
         self.inner.lock().unwrap().parity_tx = Some(tx);
     }
 
+    /// Extend the striping width to `shards` (elastic scale-out). Shard
+    /// indices are append-only fleet-wide, so growth only ever extends
+    /// the per-shard vectors; a smaller or equal count is a no-op.
+    /// Already-open groups widen their shard masks so the new shard can
+    /// join them immediately.
+    pub fn grow_to(&self, shards: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if shards <= g.cfg.shards {
+            return;
+        }
+        g.cfg.shards = shards;
+        g.predictor.grow_to(shards);
+        while g.external.len() < shards {
+            g.external.push(VecDeque::new());
+        }
+        g.recon_by_shard.resize(shards, 0);
+        for og in &mut g.open {
+            og.has_shard.resize(shards, false);
+        }
+    }
+
+    /// Take a shard out of the coding fleet (elastic scale-in). Its
+    /// index stays valid forever (append-only), but the predictor stops
+    /// counting it toward fleet unavailability and any decoded slots
+    /// still queued for it are dropped — the owning session is already
+    /// gone, so nobody could deliver them. Idempotent.
+    pub fn retire_shard(&self, shard: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if shard >= g.cfg.shards {
+            return;
+        }
+        g.predictor.set_active(shard, false);
+        let dropped = g.external[shard].len();
+        if dropped > 0 {
+            log::debug!(
+                "cross-shard: retiring shard {shard} dropped {dropped} \
+                 undeliverable decoded batches"
+            );
+        }
+        g.external[shard].clear();
+    }
+
     /// Offer one sealed data batch from `shard`; returns the (group,
     /// slot) it was assigned — the batch joins the first open group not
     /// yet containing this shard (or starts a new one), and the group
@@ -532,20 +584,21 @@ impl CrossShardState {
     pub(crate) fn on_parity_output(
         &self,
         r_index: usize,
+        epoch: u64,
         first_qid: u64,
         output: Tensor,
         at: Instant,
     ) {
         let group = {
             let mut g = self.inner.lock().unwrap();
-            match g.parity_routes.remove(&(r_index, first_qid)) {
+            match g.parity_routes.remove(&(r_index, epoch, first_qid)) {
                 Some(group) => group,
                 None => {
                     // Benign for a straggling parity whose group already
                     // retired (the sweep cleans routes past the horizon).
                     log::debug!(
                         "cross-shard: parity completion with no live route \
-                         (r{r_index}, qid {first_qid})"
+                         (r{r_index}, epoch {epoch}, qid {first_qid})"
                     );
                     return;
                 }
@@ -555,9 +608,19 @@ impl CrossShardState {
     }
 
     /// Record which group a just-submitted parity batch serves (keyed by
-    /// the batch's first parity-session query id).
-    pub(crate) fn record_parity_route(&self, r_index: usize, first_qid: u64, group: u64) {
-        self.inner.lock().unwrap().parity_routes.insert((r_index, first_qid), group);
+    /// the pool generation and the batch's first parity-session query id).
+    pub(crate) fn record_parity_route(
+        &self,
+        r_index: usize,
+        epoch: u64,
+        first_qid: u64,
+        group: u64,
+    ) {
+        self.inner
+            .lock()
+            .unwrap()
+            .parity_routes
+            .insert((r_index, epoch, first_qid), group);
     }
 
     /// Take the decoded (query ids, at) pairs owed to `shard`, running
@@ -747,13 +810,21 @@ impl RedundancyScheme for CrossShardScheme {
 /// recorded.
 pub(crate) struct ParityTapScheme {
     r_index: usize,
+    /// Pool generation this session belongs to; baked into every route
+    /// lookup so qids restarting at zero after a resize cannot collide
+    /// with a retiring generation's in-flight routes.
+    epoch: u64,
     state: Arc<CrossShardState>,
     next_group: u64,
 }
 
 impl ParityTapScheme {
-    pub(crate) fn new(r_index: usize, state: Arc<CrossShardState>) -> ParityTapScheme {
-        ParityTapScheme { r_index, state, next_group: 0 }
+    pub(crate) fn new(
+        r_index: usize,
+        epoch: u64,
+        state: Arc<CrossShardState>,
+    ) -> ParityTapScheme {
+        ParityTapScheme { r_index, epoch, state, next_group: 0 }
     }
 }
 
@@ -788,6 +859,7 @@ impl RedundancyScheme for ParityTapScheme {
                 if let Some(&fid) = c.query_ids.first() {
                     self.state.on_parity_output(
                         self.r_index,
+                        self.epoch,
                         fid,
                         c.output.clone(),
                         c.finished_at,
@@ -804,15 +876,71 @@ impl RedundancyScheme for ParityTapScheme {
     }
 }
 
+/// Builds one parity session: (r_index, per-pool instances, epoch) ->
+/// handle. Owned by the driver thread so [`ParityMsg::Resize`] can stamp
+/// out a fresh generation without touching the caller.
+type ParityFactory = Box<dyn Fn(usize, usize, u64) -> anyhow::Result<ServiceHandle> + Send>;
+
+fn parity_factory(
+    cfg: &ServiceConfig,
+    state: &Arc<CrossShardState>,
+    models: &ModelSet,
+    sample_query: &Tensor,
+    r_max: usize,
+) -> ParityFactory {
+    let cfg = cfg.clone();
+    let state = state.clone();
+    let parities = models.parities.clone();
+    let sample = sample_query.clone();
+    Box::new(move |ri: usize, per: usize, epoch: u64| {
+        let mut pc = cfg.clone();
+        pc.m = per;
+        // Independent fault domain with a decorrelated seed (the tier's
+        // scheduled faults target data shard 0 only); the epoch keeps
+        // successive generations of the same pool decorrelated too.
+        pc.seed = SplitMix64::new(
+            cfg.seed ^ 0x9A21_17CE ^ ((ri as u64) << 24) ^ (epoch << 48),
+        )
+        .next_u64();
+        pc.fault_schedule.clear();
+        // Teardown must terminate even if parity instances die: force an
+        // SLO backstop on the leg.
+        pc.slo = Some(cfg.slo.unwrap_or(Duration::from_secs(5)));
+        let leg_models = ModelSet {
+            deployed: parities
+                .get(ri)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "cross-shard r_max={r_max} needs parity model {ri}, \
+                         ModelSet has {}",
+                        parities.len()
+                    )
+                })?
+                .clone(),
+            parities: Vec::new(),
+            approx: None,
+        };
+        ServiceBuilder::new(pc)
+            .with_scheme(Box::new(ParityTapScheme::new(ri, epoch, state.clone())))
+            .build(&leg_models, &sample)
+    })
+}
+
 /// The shared parity pool: one session per parity index (each pool runs
 /// that index's parity model), all owned by one driver thread that
 /// submits [`ParityJob`]s and pumps completions back into the fleet
-/// state.
+/// state. [`ParityLeg::resize`] re-provisions every pool at runtime:
+/// the driver stands up a fresh generation (next epoch) for new jobs and
+/// keeps pumping the outgoing one until its in-flight parity work
+/// resolves, so no coding group loses protection across the swap.
 pub(crate) struct ParityLeg {
     tx: mpsc::Sender<ParityMsg>,
     handle: Option<JoinHandle<Vec<RunResult>>>,
-    faults: Vec<Arc<FaultPlan>>,
-    per_pool: usize,
+    /// Current generation's fault plans, refreshed by the driver on each
+    /// completed resize (chaos drills always target the live pools).
+    faults: Arc<Mutex<Vec<Arc<FaultPlan>>>>,
+    /// Instances per r_index pool in the current generation.
+    per_pool: Arc<AtomicUsize>,
 }
 
 impl ParityLeg {
@@ -830,65 +958,54 @@ impl ParityLeg {
         tx: mpsc::Sender<ParityMsg>,
         rx: mpsc::Receiver<ParityMsg>,
     ) -> anyhow::Result<ParityLeg> {
+        let factory = parity_factory(cfg, state, models, sample_query, r_max);
         let mut handles = Vec::with_capacity(r_max);
-        let mut faults = Vec::with_capacity(r_max);
+        let mut plans = Vec::with_capacity(r_max);
         for ri in 0..r_max {
-            let mut pc = cfg.clone();
-            pc.m = per;
-            // Independent fault domain with a decorrelated seed; the
-            // tier's scheduled faults target data shard 0 only.
-            pc.seed =
-                SplitMix64::new(cfg.seed ^ 0x9A21_17CE ^ ((ri as u64) << 24)).next_u64();
-            pc.fault_schedule.clear();
-            // Teardown must terminate even if parity instances die:
-            // force an SLO backstop on the leg.
-            pc.slo = Some(cfg.slo.unwrap_or(Duration::from_secs(5)));
-            let leg_models = ModelSet {
-                deployed: models
-                    .parities
-                    .get(ri)
-                    .ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "cross-shard r_max={r_max} needs parity model {ri}, \
-                             ModelSet has {}",
-                            models.parities.len()
-                        )
-                    })?
-                    .clone(),
-                parities: Vec::new(),
-                approx: None,
-            };
-            let handle = ServiceBuilder::new(pc)
-                .with_scheme(Box::new(ParityTapScheme::new(ri, state.clone())))
-                .build(&leg_models, sample_query)?;
-            faults.push(handle.fault_plan());
+            let handle = factory(ri, per, 0)?;
+            plans.push(handle.fault_plan());
             handles.push(handle);
         }
+        let faults = Arc::new(Mutex::new(plans));
+        let per_pool = Arc::new(AtomicUsize::new(per));
         let driver_state = state.clone();
+        let driver_faults = faults.clone();
+        let driver_per = per_pool.clone();
         let handle = std::thread::Builder::new()
             .name("cross-shard-parity".into())
-            .spawn(move || driver_loop(handles, rx, driver_state))
+            .spawn(move || {
+                driver_loop(factory, handles, rx, driver_state, driver_faults, driver_per)
+            })
             .expect("spawn cross-shard parity driver");
-        Ok(ParityLeg { tx, handle: Some(handle), faults, per_pool: per })
+        Ok(ParityLeg { tx, handle: Some(handle), faults, per_pool })
     }
 
-    /// Instances in each per-r_index parity pool.
+    /// Instances in each per-r_index parity pool (current generation).
     pub(crate) fn pool_size(&self) -> usize {
-        self.per_pool
+        self.per_pool.load(Ordering::SeqCst)
+    }
+
+    /// Ask the driver to re-provision every pool to `per` instances.
+    /// Asynchronous and idempotent: a no-op if `per` already matches by
+    /// the time the driver sees it; [`ParityLeg::pool_size`] reflects
+    /// the swap once the new generation is serving.
+    pub(crate) fn resize(&self, per: usize) {
+        let _ = self.tx.send(ParityMsg::Resize { per });
     }
 
     /// Fault plan of the r_index-th parity pool (chaos drills).
     pub(crate) fn fault_plan(&self, r_index: usize) -> Arc<FaultPlan> {
-        self.faults[r_index].clone()
+        self.faults.lock().unwrap()[r_index].clone()
     }
 
     /// Permanently kill one instance of the r_index-th parity pool.
     pub(crate) fn kill(&self, r_index: usize, instance: usize) {
-        self.faults[r_index].kill(instance);
+        self.faults.lock().unwrap()[r_index].kill(instance);
     }
 
     /// Stop the driver, drain the parity sessions, and return their run
-    /// records (parity queries, separate from client traffic).
+    /// records (parity queries, separate from client traffic), one per
+    /// r_index — resize generations of the same pool are merged.
     pub(crate) fn stop(mut self) -> Vec<RunResult> {
         let _ = self.tx.send(ParityMsg::Stop);
         match self.handle.take() {
@@ -907,7 +1024,12 @@ impl Drop for ParityLeg {
     }
 }
 
-fn submit_parity(handles: &mut [ServiceHandle], state: &CrossShardState, job: ParityJob) {
+fn submit_parity(
+    handles: &mut [ServiceHandle],
+    state: &CrossShardState,
+    job: ParityJob,
+    epoch: u64,
+) {
     let Some(h) = handles.get_mut(job.r_index) else {
         log::error!("cross-shard: parity job for unprovisioned r_index {}", job.r_index);
         return;
@@ -923,19 +1045,79 @@ fn submit_parity(handles: &mut [ServiceHandle], state: &CrossShardState, job: Pa
         first.get_or_insert(qid);
     }
     if let Some(fid) = first {
-        state.record_parity_route(job.r_index, fid, job.group);
+        state.record_parity_route(job.r_index, epoch, fid, job.group);
     }
 }
 
+/// Swap in a fresh generation of parity sessions sized `per`. All-or-
+/// nothing: if any pool fails to build, the current generation keeps
+/// serving and the resize is dropped with an error log. Old sessions go
+/// to `retiring`, where the driver pumps them until their in-flight
+/// parity work resolves.
+#[allow(clippy::too_many_arguments)]
+fn apply_resize(
+    factory: &ParityFactory,
+    per: usize,
+    epoch: &mut u64,
+    handles: &mut [ServiceHandle],
+    retiring: &mut Vec<(usize, ServiceHandle)>,
+    faults: &Mutex<Vec<Arc<FaultPlan>>>,
+    per_pool: &AtomicUsize,
+) {
+    if per == 0 || per == per_pool.load(Ordering::SeqCst) {
+        return;
+    }
+    let next_epoch = *epoch + 1;
+    let mut fresh = Vec::with_capacity(handles.len());
+    for ri in 0..handles.len() {
+        match factory(ri, per, next_epoch) {
+            Ok(h) => fresh.push(h),
+            Err(e) => {
+                log::error!(
+                    "cross-shard: parity resize to {per} failed at r{ri}: {e}; \
+                     keeping the current pools"
+                );
+                return;
+            }
+        }
+    }
+    *epoch = next_epoch;
+    let mut plans = faults.lock().unwrap();
+    for (ri, new) in fresh.into_iter().enumerate() {
+        plans[ri] = new.fault_plan();
+        let old = std::mem::replace(&mut handles[ri], new);
+        retiring.push((ri, old));
+    }
+    per_pool.store(per, Ordering::SeqCst);
+}
+
 fn driver_loop(
+    factory: ParityFactory,
     mut handles: Vec<ServiceHandle>,
     rx: mpsc::Receiver<ParityMsg>,
     state: Arc<CrossShardState>,
+    faults: Arc<Mutex<Vec<Arc<FaultPlan>>>>,
+    per_pool: Arc<AtomicUsize>,
 ) -> Vec<RunResult> {
+    let r_max = handles.len();
+    let mut epoch: u64 = 0;
+    // Outgoing generations still owing parity completions, plus the
+    // per-r_index run records of generations already retired.
+    let mut retiring: Vec<(usize, ServiceHandle)> = Vec::new();
+    let mut retired: Vec<Vec<RunResult>> = (0..r_max).map(|_| Vec::new()).collect();
     let mut stopping = false;
     while !stopping {
         match rx.recv_timeout(Duration::from_millis(1)) {
-            Ok(ParityMsg::Job(job)) => submit_parity(&mut handles, &state, job),
+            Ok(ParityMsg::Job(job)) => submit_parity(&mut handles, &state, job, epoch),
+            Ok(ParityMsg::Resize { per }) => apply_resize(
+                &factory,
+                per,
+                &mut epoch,
+                &mut handles,
+                &mut retiring,
+                &faults,
+                &per_pool,
+            ),
             Ok(ParityMsg::Stop) => stopping = true,
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => stopping = true,
@@ -943,7 +1125,16 @@ fn driver_loop(
         // Drain the burst behind the first message before pumping.
         while !stopping {
             match rx.try_recv() {
-                Ok(ParityMsg::Job(job)) => submit_parity(&mut handles, &state, job),
+                Ok(ParityMsg::Job(job)) => submit_parity(&mut handles, &state, job, epoch),
+                Ok(ParityMsg::Resize { per }) => apply_resize(
+                    &factory,
+                    per,
+                    &mut epoch,
+                    &mut handles,
+                    &mut retiring,
+                    &faults,
+                    &per_pool,
+                ),
                 Ok(ParityMsg::Stop) => stopping = true,
                 Err(_) => break,
             }
@@ -951,20 +1142,44 @@ fn driver_loop(
         for h in &mut handles {
             let _ = h.poll();
         }
+        // Pump outgoing generations; shut each down once its in-flight
+        // parity work has resolved (the forced SLO bounds the wait).
+        let mut i = 0;
+        while i < retiring.len() {
+            let _ = retiring[i].1.poll();
+            if retiring[i].1.in_flight() == 0 {
+                let (ri, h) = retiring.swap_remove(i);
+                retired[ri].push(h.shutdown());
+            } else {
+                i += 1;
+            }
+        }
     }
     // Absorb jobs that raced the stop signal (shards seal tail groups
     // right up to their own drain), then drain and shut down. The leg's
     // forced SLO makes drain terminate even with dead parity instances.
     while let Ok(msg) = rx.try_recv() {
         if let ParityMsg::Job(job) = msg {
-            submit_parity(&mut handles, &state, job);
+            submit_parity(&mut handles, &state, job, epoch);
         }
+    }
+    for (ri, mut h) in retiring {
+        let _ = h.drain();
+        retired[ri].push(h.shutdown());
     }
     handles
         .into_iter()
-        .map(|mut h| {
+        .enumerate()
+        .map(|(ri, mut h)| {
             let _ = h.drain();
-            h.shutdown()
+            let last = h.shutdown();
+            if retired[ri].is_empty() {
+                last
+            } else {
+                let mut parts = std::mem::take(&mut retired[ri]);
+                parts.push(last);
+                RunResult::merged(&parts)
+            }
         })
         .collect()
 }

@@ -73,7 +73,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -211,7 +211,9 @@ impl ClientCore {
 
 /// State shared by the frontend handle, every client, and the dispatcher.
 struct FrontendShared {
-    policy: AdmissionPolicy,
+    /// Admission policy, swappable at runtime by the control plane
+    /// ([`ServingFrontend::set_policy`]); read per admission decision.
+    policy: RwLock<AdmissionPolicy>,
     /// Window length for the frontend-wide and per-client aggregators.
     client_window: Duration,
     /// Next frontend-level query id (ids are unique across clients).
@@ -485,7 +487,8 @@ impl ServiceClient {
     }
 
     fn admit(&self) -> Result<(), SubmitError> {
-        match self.shared.policy {
+        let policy = *self.shared.policy.read().unwrap();
+        match policy {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::RejectAbove { backlog: limit } => {
                 let load = self.shared.load();
@@ -595,7 +598,7 @@ impl ServingFrontend {
     ) -> ServingFrontend {
         let (tx, rx) = mpsc::channel();
         let shared = Arc::new(FrontendShared {
-            policy,
+            policy: RwLock::new(policy),
             client_window: window,
             next_id: AtomicU64::new(0),
             next_client: AtomicU64::new(0),
@@ -677,7 +680,17 @@ impl ServingFrontend {
 
     /// The admission policy clients are subject to.
     pub fn policy(&self) -> AdmissionPolicy {
-        self.shared.policy
+        *self.shared.policy.read().unwrap()
+    }
+
+    /// Swap the admission policy at runtime (the control plane's
+    /// `set-admission` op). Takes effect on the next admission decision;
+    /// queries already admitted or mid-wait under the old policy finish
+    /// under its terms. Block-policy waiters are woken so a loosened
+    /// policy reaches them promptly.
+    pub fn set_policy(&self, policy: AdmissionPolicy) {
+        *self.shared.policy.write().unwrap() = policy;
+        self.shared.gate_cv.notify_all();
     }
 
     /// Current admission-control load estimate (session backlog plus
@@ -787,12 +800,14 @@ fn dispatcher_loop(
     let mut disconnected = false;
     // SloAware admission reads the published windowed p99; refreshing a
     // snapshot sorts the window's events, so throttle it and skip the
-    // work entirely for policies that never read it.
-    let publish_p99 = matches!(shared.policy, AdmissionPolicy::SloAware { .. });
+    // work entirely for policies that never read it. Re-checked every
+    // iteration: the policy can be swapped at runtime (set_policy).
     const P99_REFRESH: Duration = Duration::from_millis(10);
     let mut p99_published_at = Instant::now();
 
     while shutdown_reply.is_none() && !disconnected {
+        let publish_p99 =
+            matches!(*shared.policy.read().unwrap(), AdmissionPolicy::SloAware { .. });
         match rx.recv_timeout(PUMP) {
             Ok(Msg::Submit { fid, client, input }) => {
                 submit_one(&mut handle, &mut routes, &shared, fid, client, input);
@@ -983,7 +998,7 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let tx = Arc::new(Mutex::new(tx));
         let shared = Arc::new(FrontendShared {
-            policy: AdmissionPolicy::RejectAbove { backlog: LIMIT },
+            policy: RwLock::new(AdmissionPolicy::RejectAbove { backlog: LIMIT }),
             client_window: Duration::from_secs(1),
             next_id: AtomicU64::new(0),
             next_client: AtomicU64::new(0),
@@ -1043,7 +1058,7 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         let tx = Arc::new(Mutex::new(tx));
         let shared = Arc::new(FrontendShared {
-            policy: AdmissionPolicy::Unbounded,
+            policy: RwLock::new(AdmissionPolicy::Unbounded),
             client_window: Duration::from_secs(1),
             next_id: AtomicU64::new(0),
             next_client: AtomicU64::new(0),
@@ -1083,7 +1098,7 @@ mod tests {
     #[test]
     fn load_is_backlog_plus_queued() {
         let shared = FrontendShared {
-            policy: AdmissionPolicy::Unbounded,
+            policy: RwLock::new(AdmissionPolicy::Unbounded),
             client_window: Duration::from_secs(1),
             next_id: AtomicU64::new(0),
             next_client: AtomicU64::new(0),

@@ -42,6 +42,12 @@
 //!   straggler predictor ([`adaptive::FleetPredictor`]) — a whole-shard
 //!   kill costs each group at most one slot and decodes like any
 //!   single-instance loss.
+//! - [`control`] is the embedded control plane: [`control::ControlPlane`]
+//!   owns runtime reconfiguration of a live fleet (add/remove/drain/
+//!   restore shards, swap admission policy, re-provision the cross-shard
+//!   parity pool as the fleet resizes) and serves a line-oriented JSON
+//!   admin protocol over a local Unix socket
+//!   ([`control::AdminServer`]; `parm admin` is the client).
 //! - [`metrics`] carries both aggregation surfaces: cumulative
 //!   [`metrics::RunMetrics`] for a whole run and the sliding
 //!   [`metrics::LatencyWindow`] behind every live snapshot.
@@ -52,6 +58,7 @@
 pub mod adaptive;
 pub mod batcher;
 pub mod coding;
+pub mod control;
 pub mod cross_shard;
 pub mod decoder;
 pub mod encoder;

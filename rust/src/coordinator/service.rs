@@ -149,6 +149,10 @@ impl ServiceConfig {
 }
 
 /// Executables for the workload (loaded once, shared across configs).
+/// Cloning is cheap — the executables themselves are `Arc`-shared; the
+/// elastic tier keeps a clone so it can stamp out new shard sessions at
+/// runtime.
+#[derive(Clone)]
 pub struct ModelSet {
     pub deployed: Arc<Executable>,
     /// Parity executables in r_index order (ParM only).

@@ -1,5 +1,5 @@
 //! Sharded serving tier: multi-session dispatch with consistent-hash
-//! routing and merged cross-shard metrics.
+//! routing, merged cross-shard metrics, and *runtime elasticity*.
 //!
 //! The paper's setting is a prediction-serving *cluster* absorbing high
 //! query rates across many machines (§2.1, §6), but a single
@@ -35,10 +35,29 @@
 //! an optional fleet-wide offered-load cap ([`ShardSpec::global_backlog`])
 //! checked before the per-shard policy.
 //!
+//! # Elasticity
+//!
+//! The fleet is no longer fixed at construction.
+//! [`ShardedFrontend::add_shard`] stands up a fresh session at runtime
+//! and splices it into the ring with the minimal-remap guarantee of
+//! consistent hashing; [`ShardedFrontend::remove_shard`] reroutes its
+//! clients and tears the session down (draining in-flight queries into
+//! their owners' inboxes — nothing accepted is lost). Shard indices are
+//! **append-only**: a removed shard retires its slot forever, so
+//! [`QueryId`] tags never alias across fleet generations. The
+//! reconfiguration contract (see [`ShardRouter::drain_shard`]) is
+//! idempotency without panics: double-drain and restore-of-live are
+//! `Ok(false)` no-ops, remove-while-draining succeeds, and every invalid
+//! op (unknown index, removed shard, last live shard) is a clean
+//! [`ReconfigError`]. The embedded control plane
+//! ([`crate::coordinator::control`]) builds its admin surface directly
+//! on these primitives.
+//!
 //! [`ShardedFrontend::shutdown`] merges the per-shard
 //! [`RunResult`]s into one fleet record (exact — raw latency samples
-//! concatenate), and [`ShardedFrontend::window`] merges the live
-//! per-shard [`WindowSnapshot`]s for fleet-wide p50/p99/p99.9.
+//! concatenate, and retired shards' final records are folded back in),
+//! and [`ShardedFrontend::window`] merges the live per-shard
+//! [`WindowSnapshot`]s for fleet-wide p50/p99/p99.9.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
@@ -48,7 +67,9 @@ use crate::cluster::faults::FaultPlan;
 use crate::coordinator::cross_shard::{
     CrossShardConfig, CrossShardScheme, CrossShardState, CrossShardTelemetry, ParityLeg,
 };
-use crate::coordinator::frontend::{ClientStats, ServiceClient, ServingFrontend, SubmitError};
+use crate::coordinator::frontend::{
+    AdmissionPolicy, ClientStats, ServiceClient, ServingFrontend, SubmitError,
+};
 use crate::coordinator::metrics::WindowSnapshot;
 use crate::coordinator::scheme::RedundancyScheme;
 use crate::coordinator::service::{Mode, ModelSet, RunResult, ServiceConfig};
@@ -60,7 +81,9 @@ use crate::tensor::Tensor;
 /// queries from zero.
 const SHARD_SHIFT: u32 = 56;
 
-/// Hard cap on shard count (the id tag is one byte).
+/// Hard cap on shard count (the id tag is one byte). Because shard
+/// indices are append-only across add/remove, this bounds the number of
+/// shards ever *created* over a fleet's lifetime, not just the live set.
 pub const MAX_SHARDS: usize = 255;
 
 /// SplitMix64: cheap, well-mixed 64-bit hash for ring points and client
@@ -86,6 +109,31 @@ fn tag(shard: usize, fid: QueryId) -> QueryId {
 /// The shard a sharded [`QueryId`] was served by.
 pub fn shard_of(id: QueryId) -> usize {
     (id >> SHARD_SHIFT) as usize
+}
+
+/// Errors from runtime fleet reconfiguration. Every reconfiguration
+/// entry point — on [`ShardRouter`], [`ShardedFrontend`],
+/// [`CrossShardFrontend`], and the control plane — returns these
+/// instead of panicking, so an operator fat-fingering a shard index
+/// over the admin socket can never take the data path down.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ReconfigError {
+    /// The shard index was never allocated.
+    #[error("shard {0} does not exist")]
+    UnknownShard(usize),
+    /// The shard was removed from the fleet (slots retire forever; the
+    /// index is not reusable).
+    #[error("shard {0} was removed from the fleet")]
+    RemovedShard(usize),
+    /// The op would leave the ring with zero live shards.
+    #[error("removing shard {0} would leave no live shard in the ring")]
+    LastShard(usize),
+    /// The fleet has exhausted its [`MAX_SHARDS`] lifetime slot budget.
+    #[error("fleet at capacity: {0} shard slots already allocated (max {MAX_SHARDS})")]
+    AtCapacity(usize),
+    /// The fleet was shut down; no further reconfiguration is possible.
+    #[error("the fleet is shut down")]
+    Closed,
 }
 
 /// Sizing and policy knobs of the sharded tier.
@@ -123,10 +171,19 @@ impl ShardSpec {
 /// clockwise from it. Marking a shard down therefore remaps only the
 /// clients whose first point belonged to that shard — everyone else
 /// keeps their routing (the property the rerouting tests pin down).
+///
+/// The ring is elastic: [`ShardRouter::add_shard`] appends a new index
+/// whose vnode points are a pure function of `(shard, vnode)`, so
+/// growing N→N+1 produces exactly the ring a fresh (N+1)-shard router
+/// would have — the minimal-remap and exact-restore properties the
+/// seeded suite in `tests/coordinator_props.rs` pins. Removed shards
+/// retire their index forever (see [`ReconfigError::RemovedShard`]).
 pub struct ShardRouter {
-    /// (ring point, shard), sorted by point.
+    /// (ring point, shard), sorted by point. Removed shards own no
+    /// points.
     ring: Vec<(u64, usize)>,
     down: Vec<bool>,
+    removed: Vec<bool>,
     vnodes: usize,
 }
 
@@ -142,9 +199,16 @@ impl ShardRouter {
             }
         }
         ring.sort_unstable();
-        ShardRouter { ring, down: vec![false; shards], vnodes }
+        ShardRouter {
+            ring,
+            down: vec![false; shards],
+            removed: vec![false; shards],
+            vnodes,
+        }
     }
 
+    /// Total shard slots ever allocated, including retired ones (the
+    /// exclusive upper bound for shard indices).
     pub fn shards(&self) -> usize {
         self.down.len()
     }
@@ -153,18 +217,112 @@ impl ShardRouter {
         self.vnodes
     }
 
+    /// Shards still provisioned (not removed), drained or not.
+    pub fn present(&self) -> usize {
+        self.removed.iter().filter(|r| !**r).count()
+    }
+
     /// Shards currently accepting new routes.
     pub fn live(&self) -> usize {
-        self.down.iter().filter(|d| !**d).count()
+        (0..self.down.len())
+            .filter(|&s| !self.down[s] && !self.removed[s])
+            .count()
     }
 
     pub fn is_down(&self, shard: usize) -> bool {
         self.down[shard]
     }
 
+    pub fn is_removed(&self, shard: usize) -> bool {
+        self.removed[shard]
+    }
+
     /// Mark a shard down (drained: new routes skip it) or back up.
+    /// Unchecked primitive kept for tests and callers that manage their
+    /// own validity; operational paths use the checked, idempotent
+    /// [`ShardRouter::drain_shard`] / [`ShardRouter::restore_shard`].
     pub fn set_down(&mut self, shard: usize, down: bool) {
         self.down[shard] = down;
+    }
+
+    /// Take a shard out of the ring.
+    ///
+    /// Idempotency contract (shared by every reconfiguration op in this
+    /// module): `Ok(true)` means the state changed, `Ok(false)` means it
+    /// was already drained (a no-op, *not* an error — retried operator
+    /// commands must converge), and invalid targets (unknown index,
+    /// removed shard) are clean [`ReconfigError`]s. Never panics.
+    pub fn drain_shard(&mut self, shard: usize) -> Result<bool, ReconfigError> {
+        if shard >= self.down.len() {
+            return Err(ReconfigError::UnknownShard(shard));
+        }
+        if self.removed[shard] {
+            return Err(ReconfigError::RemovedShard(shard));
+        }
+        if self.down[shard] {
+            return Ok(false);
+        }
+        self.down[shard] = true;
+        Ok(true)
+    }
+
+    /// Put a drained shard back into the ring. `Ok(false)` if it was
+    /// already live (restore-of-live is a no-op); errors mirror
+    /// [`ShardRouter::drain_shard`].
+    pub fn restore_shard(&mut self, shard: usize) -> Result<bool, ReconfigError> {
+        if shard >= self.down.len() {
+            return Err(ReconfigError::UnknownShard(shard));
+        }
+        if self.removed[shard] {
+            return Err(ReconfigError::RemovedShard(shard));
+        }
+        if !self.down[shard] {
+            return Ok(false);
+        }
+        self.down[shard] = false;
+        Ok(true)
+    }
+
+    /// Allocate the next shard index and splice its vnode points into
+    /// the ring. Points depend only on `(shard, vnode)`, so the grown
+    /// ring equals a fresh router of the larger size: only keys whose
+    /// first point now belongs to the new shard remap (≈1/(N+1) of the
+    /// keyspace), and a subsequent [`ShardRouter::remove_shard`] of the
+    /// same index restores the original routing exactly.
+    pub fn add_shard(&mut self) -> usize {
+        let s = self.down.len();
+        for v in 0..self.vnodes {
+            self.ring.push((splitmix64(((s as u64) << 32) | v as u64), s));
+        }
+        self.ring.sort_unstable();
+        self.down.push(false);
+        self.removed.push(false);
+        s
+    }
+
+    /// Retire a shard: its vnode points leave the ring and its index is
+    /// never reused (so [`QueryId`] shard tags stay unique across the
+    /// fleet's whole history). Remove-while-draining is allowed — a
+    /// drained shard is the normal removal candidate. Errors: unknown
+    /// index, double-remove ([`ReconfigError::RemovedShard`]), or a
+    /// removal that would leave zero live shards
+    /// ([`ReconfigError::LastShard`]).
+    pub fn remove_shard(&mut self, shard: usize) -> Result<(), ReconfigError> {
+        if shard >= self.down.len() {
+            return Err(ReconfigError::UnknownShard(shard));
+        }
+        if self.removed[shard] {
+            return Err(ReconfigError::RemovedShard(shard));
+        }
+        let live_after = (0..self.down.len())
+            .filter(|&s| s != shard && !self.down[s] && !self.removed[s])
+            .count();
+        if live_after == 0 {
+            return Err(ReconfigError::LastShard(shard));
+        }
+        self.removed[shard] = true;
+        self.ring.retain(|&(_, s)| s != shard);
+        Ok(())
     }
 
     /// Route a client id to a live shard, or `None` if every shard is
@@ -175,7 +333,7 @@ impl ShardRouter {
         let start = self.ring.partition_point(|&(p, _)| p < h);
         for i in 0..self.ring.len() {
             let (_, s) = self.ring[(start + i) % self.ring.len()];
-            if !self.down[s] {
+            if !self.down[s] && !self.removed[s] {
                 return Some(s);
             }
         }
@@ -191,38 +349,55 @@ const NO_SHARD: usize = usize::MAX;
 /// registers its weight only on the shard the router assigns, and
 /// drain/restore moves it — so a shard's fair-share denominator counts
 /// exactly the clients it actually serves (the ROADMAP dilution fix).
-struct WeightHome {
+///
+/// Legs are **grow-only**: `add_shard` appends a leg for the new shard
+/// to every registered home, and retirement never takes a leg away from
+/// a client that already holds it — a retiring session drains its
+/// in-flight queries into that leg's inbox, so dropping it would strand
+/// deliveries. Slots retired before this client was minted are `None`.
+struct ClientHome {
     client_id: u64,
-    legs: Vec<ServiceClient>,
+    /// Fairness weight, remembered so late-added shards can mint this
+    /// client's passive leg with the same carve-out.
+    weight: f64,
+    /// One per-shard identity, indexed by shard slot.
+    legs: RwLock<Vec<Option<ServiceClient>>>,
     /// Shard whose frontend currently holds the weight ([`NO_SHARD`]
     /// before first routing or when every shard is down).
     active: AtomicUsize,
 }
 
-impl WeightHome {
+impl ClientHome {
     fn rehome(&self, router: &ShardRouter) {
         let next = router.route(self.client_id).unwrap_or(NO_SHARD);
         let prev = self.active.swap(next, Ordering::SeqCst);
         if prev == next {
             return;
         }
+        let legs = self.legs.read().unwrap();
         if prev != NO_SHARD {
-            self.legs[prev].deactivate_weight();
+            if let Some(Some(leg)) = legs.get(prev) {
+                leg.deactivate_weight();
+            }
         }
         if next != NO_SHARD {
-            self.legs[next].activate_weight();
+            if let Some(Some(leg)) = legs.get(next) {
+                leg.activate_weight();
+            }
         }
     }
 }
 
-impl Drop for WeightHome {
+impl Drop for ClientHome {
     fn drop(&mut self) {
         // The last clone of this client is gone: give its weight back to
         // whatever shard currently holds it, so transient clients never
         // permanently inflate a shard's fair-share denominator.
         let active = self.active.load(Ordering::SeqCst);
         if active != NO_SHARD {
-            self.legs[active].deactivate_weight();
+            if let Some(Some(leg)) = self.legs.get_mut().unwrap().get(active) {
+                leg.deactivate_weight();
+            }
         }
     }
 }
@@ -232,11 +407,11 @@ struct ShardShared {
     router: RwLock<ShardRouter>,
     global_backlog: Option<usize>,
     next_client: AtomicU64,
-    /// Every live client's weight home (weights move on drain/restore).
-    /// Weak: the strong references live in the `ShardedClient` clones,
-    /// so a dropped client's home is pruned on the next sweep instead
-    /// of accumulating forever.
-    homes: Mutex<Vec<std::sync::Weak<WeightHome>>>,
+    /// Every live client's weight home (weights move on drain/restore,
+    /// legs grow on add_shard). Weak: the strong references live in the
+    /// `ShardedClient` clones, so a dropped client's home is pruned on
+    /// the next sweep instead of accumulating forever.
+    homes: Mutex<Vec<std::sync::Weak<ClientHome>>>,
 }
 
 impl ShardShared {
@@ -258,15 +433,75 @@ impl ShardShared {
     }
 }
 
+/// One shard slot of the elastic tier: a live session, or the record of
+/// a session removed at runtime.
+enum ShardSlot {
+    Live(ServingFrontend),
+    /// Torn down by [`ShardedFrontend::remove_shard`]. Keeps the fault
+    /// plan (so the harness surface stays total over history) and the
+    /// session's final record for the shutdown merge — conservation
+    /// audits must still see the queries it served before retiring.
+    Retired {
+        faults: Arc<FaultPlan>,
+        result: Option<RunResult>,
+    },
+}
+
+impl ShardSlot {
+    fn live(&self) -> Option<&ServingFrontend> {
+        match self {
+            ShardSlot::Live(f) => Some(f),
+            ShardSlot::Retired { .. } => None,
+        }
+    }
+}
+
+/// Everything needed to stand up one more shard session at runtime:
+/// the base config, the model set, and the per-shard scheme factory the
+/// tier was started with. Guarded by a mutex that doubles as the
+/// reconfiguration serializer — the data path never takes it.
+struct ShardSpawner {
+    cfg: ServiceConfig,
+    /// `cfg.seed` as configured, before any per-shard decorrelation.
+    base_seed: u64,
+    models: ModelSet,
+    sample: Tensor,
+    scheme_for_shard: Box<dyn FnMut(usize) -> Option<Box<dyn RedundancyScheme>> + Send>,
+}
+
+impl ShardSpawner {
+    fn spawn(&mut self, s: usize) -> anyhow::Result<ServingFrontend> {
+        let mut shard_cfg = self.cfg.clone();
+        if s > 0 {
+            shard_cfg.seed = splitmix64(self.base_seed ^ ((s as u64) << 40));
+            // One scheduled fault must not fire in lockstep across
+            // the whole fleet — that would erase the healthy-shard
+            // baseline the tier exists to preserve.
+            shard_cfg.fault_schedule.clear();
+        }
+        let mut builder = ServiceBuilder::new(shard_cfg);
+        if let Some(scheme) = (self.scheme_for_shard)(s) {
+            builder = builder.with_scheme(scheme);
+        }
+        builder.serve(&self.models, &self.sample)
+    }
+}
+
 /// N independent serving sessions behind one consistent-hash router.
 ///
 /// Build with [`ShardedFrontend::start`], mint [`ShardedClient`]s with
 /// [`ShardedFrontend::client`], degrade shards with
 /// [`ShardedFrontend::kill_instance`] / [`ShardedFrontend::drain_shard`],
-/// observe the fleet with [`ShardedFrontend::window`], and finish with
+/// resize the fleet at runtime with [`ShardedFrontend::add_shard`] /
+/// [`ShardedFrontend::remove_shard`], observe the fleet with
+/// [`ShardedFrontend::window`], and finish with
 /// [`ShardedFrontend::shutdown`] for the merged run record.
 pub struct ShardedFrontend {
-    frontends: Vec<ServingFrontend>,
+    /// Indexed by shard; retired slots keep their index forever.
+    slots: RwLock<Vec<ShardSlot>>,
+    /// Runtime shard factory; its mutex serializes reconfiguration
+    /// (lock order: spawner → slots → router → homes → legs).
+    spawner: Mutex<ShardSpawner>,
     shared: Arc<ShardShared>,
 }
 
@@ -274,9 +509,11 @@ pub struct ShardedFrontend {
 /// record plus each shard's own, so callers can audit that the merge
 /// conserved every count.
 pub struct ShardedRunResult {
-    /// All shards folded together ([`RunResult::merged`]).
+    /// All shards folded together ([`RunResult::merged`]), including
+    /// shards removed at runtime.
     pub merged: RunResult,
-    /// Per-shard results, in shard order.
+    /// Per-shard results, in shard order (removed shards contribute the
+    /// record they had at teardown).
     pub per_shard: Vec<RunResult>,
 }
 
@@ -309,13 +546,15 @@ impl ShardedFrontend {
     /// override: `scheme_for_shard(s)` returning `Some` injects that
     /// strategy into shard s's session (how the cross-shard tier binds
     /// every shard to one fleet-shared coding state); `None` falls back
-    /// to instantiating `cfg.mode` as usual.
+    /// to instantiating `cfg.mode` as usual. The factory is retained so
+    /// [`ShardedFrontend::add_shard`] can stamp out late shards the
+    /// same way.
     pub(crate) fn start_with(
         cfg: ServiceConfig,
         spec: ShardSpec,
         models: &ModelSet,
         sample_query: &Tensor,
-        mut scheme_for_shard: impl FnMut(usize) -> Option<Box<dyn RedundancyScheme>>,
+        scheme_for_shard: impl FnMut(usize) -> Option<Box<dyn RedundancyScheme>> + Send + 'static,
     ) -> anyhow::Result<ShardedFrontend> {
         anyhow::ensure!(
             (1..=MAX_SHARDS).contains(&spec.shards),
@@ -323,24 +562,20 @@ impl ShardedFrontend {
             spec.shards
         );
         anyhow::ensure!(spec.vnodes >= 1, "vnodes must be >= 1");
-        let mut frontends = Vec::with_capacity(spec.shards);
+        let mut spawner = ShardSpawner {
+            base_seed: cfg.seed,
+            cfg,
+            models: models.clone(),
+            sample: sample_query.clone(),
+            scheme_for_shard: Box::new(scheme_for_shard),
+        };
+        let mut slots = Vec::with_capacity(spec.shards);
         for s in 0..spec.shards {
-            let mut shard_cfg = cfg.clone();
-            if s > 0 {
-                shard_cfg.seed = splitmix64(cfg.seed ^ ((s as u64) << 40));
-                // One scheduled fault must not fire in lockstep across
-                // the whole fleet — that would erase the healthy-shard
-                // baseline the tier exists to preserve.
-                shard_cfg.fault_schedule.clear();
-            }
-            let mut builder = ServiceBuilder::new(shard_cfg);
-            if let Some(scheme) = scheme_for_shard(s) {
-                builder = builder.with_scheme(scheme);
-            }
-            frontends.push(builder.serve(models, sample_query)?);
+            slots.push(ShardSlot::Live(spawner.spawn(s)?));
         }
         Ok(ShardedFrontend {
-            frontends,
+            slots: RwLock::new(slots),
+            spawner: Mutex::new(spawner),
             shared: Arc::new(ShardShared {
                 router: RwLock::new(ShardRouter::new(spec.shards, spec.vnodes)),
                 global_backlog: spec.global_backlog,
@@ -350,8 +585,21 @@ impl ShardedFrontend {
         })
     }
 
+    /// Total shard slots ever allocated (the exclusive upper bound for
+    /// shard indices), including slots retired by
+    /// [`ShardedFrontend::remove_shard`].
     pub fn shards(&self) -> usize {
-        self.frontends.len()
+        self.slots.read().unwrap().len()
+    }
+
+    /// Shards still provisioned (sessions running), drained or not.
+    pub fn provisioned_shards(&self) -> usize {
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|s| s.live().is_some())
+            .count()
     }
 
     /// Mint a shard-transparent client (a fresh identity on every shard,
@@ -371,14 +619,21 @@ impl ShardedFrontend {
     /// carve-out semantics on the routed shard).
     pub fn client_with_weight(&self, weight: f64) -> ShardedClient {
         let id = self.shared.next_client.fetch_add(1, Ordering::Relaxed);
-        let legs: Vec<ServiceClient> = self
-            .frontends
+        // Hold slots (read) across leg minting AND home registration, so
+        // a concurrent add_shard — which pushes new legs into registered
+        // homes under slots (write) — is ordered entirely before this
+        // mint (we see its slot) or entirely after (it sees our home).
+        // Either way the legs vector covers every shard the router can
+        // return. Lock order: slots → router → homes.
+        let slots = self.slots.read().unwrap();
+        let legs: Vec<Option<ServiceClient>> = slots
             .iter()
-            .map(|f| f.passive_client_with_weight(weight))
+            .map(|slot| slot.live().map(|f| f.passive_client_with_weight(weight)))
             .collect();
-        let home = Arc::new(WeightHome {
+        let home = Arc::new(ClientHome {
             client_id: id,
-            legs: legs.clone(),
+            weight,
+            legs: RwLock::new(legs),
             active: AtomicUsize::new(NO_SHARD),
         });
         {
@@ -391,13 +646,103 @@ impl ShardedFrontend {
             home.rehome(&router);
             homes.push(Arc::downgrade(&home));
         }
-        ShardedClient { id, legs, home, shared: self.shared.clone() }
+        drop(slots);
+        ShardedClient { id, home, shared: self.shared.clone() }
+    }
+
+    /// Stand up one more shard session and splice it into the ring.
+    ///
+    /// The new shard is stamped from the same config/models/scheme
+    /// factory as the originals (with a decorrelated seed), every
+    /// existing client grows a passive leg on it before it can receive
+    /// a route, and consistent hashing guarantees only ≈1/(N+1) of the
+    /// client population remaps onto it. Returns the new shard's index.
+    /// Serialized with every other reconfiguration op; the data path
+    /// never blocks on it beyond brief slot/ring lock windows.
+    pub fn add_shard(&self) -> anyhow::Result<usize> {
+        let mut spawner = self.spawner.lock().unwrap();
+        let s = self.slots.read().unwrap().len();
+        if s >= MAX_SHARDS {
+            return Err(ReconfigError::AtCapacity(s).into());
+        }
+        let fe = spawner.spawn(s)?;
+        {
+            let mut slots = self.slots.write().unwrap();
+            debug_assert_eq!(slots.len(), s, "reconfiguration must be serialized");
+            let mut homes = self.shared.homes.lock().unwrap();
+            homes.retain(|w| match w.upgrade() {
+                Some(home) => {
+                    home.legs
+                        .write()
+                        .unwrap()
+                        .push(Some(fe.passive_client_with_weight(home.weight)));
+                    true
+                }
+                None => false,
+            });
+            slots.push(ShardSlot::Live(fe));
+        }
+        self.shared.router.write().unwrap().add_shard();
+        self.shared.rehome_all();
+        Ok(s)
+    }
+
+    /// Tear a shard down at runtime: retire it from the ring (rerouting
+    /// its clients with their weights), then shut its session down —
+    /// in-flight queries drain into their owners' inboxes, so accepted
+    /// work is never lost. The teardown runs outside every tier lock
+    /// (draining can take a while; the data path must not stall behind
+    /// it). The slot's final [`RunResult`] is folded into
+    /// [`ShardedFrontend::shutdown`]'s merge. Errors are the
+    /// [`ShardRouter::remove_shard`] contract: clean, never panicking.
+    pub fn remove_shard(&self, shard: usize) -> anyhow::Result<()> {
+        let _reconfig = self.spawner.lock().unwrap();
+        self.shared.router.write().unwrap().remove_shard(shard)?;
+        self.shared.rehome_all();
+        let fe = {
+            let mut slots = self.slots.write().unwrap();
+            let slot = &mut slots[shard];
+            let faults = match slot.live() {
+                Some(f) => f.fault_plan(),
+                // Router bookkeeping and slots move in lockstep under
+                // the spawner lock, so a routable shard is always live.
+                None => return Ok(()),
+            };
+            match std::mem::replace(slot, ShardSlot::Retired { faults, result: None }) {
+                ShardSlot::Live(f) => f,
+                ShardSlot::Retired { .. } => unreachable!(),
+            }
+        };
+        let result = fe.shutdown()?;
+        if let ShardSlot::Retired { result: stash, .. } =
+            &mut self.slots.write().unwrap()[shard]
+        {
+            *stash = Some(result);
+        }
+        Ok(())
+    }
+
+    /// Swap the admission policy on every live shard (and on the
+    /// spawner, so late-added shards inherit it). Takes effect on the
+    /// next admission decision; in-flight queries are untouched.
+    pub fn set_admission(&self, policy: AdmissionPolicy) {
+        let mut spawner = self.spawner.lock().unwrap();
+        spawner.cfg.admission = policy;
+        let slots = self.slots.read().unwrap();
+        for slot in slots.iter() {
+            if let Some(f) = slot.live() {
+                f.set_policy(policy);
+            }
+        }
     }
 
     /// Fairness weight currently registered with one shard's frontend
-    /// (observability for the weight-follows-router invariant).
+    /// (observability for the weight-follows-router invariant). Retired
+    /// shards hold no weight.
     pub fn shard_total_weight(&self, shard: usize) -> f64 {
-        self.frontends[shard].total_weight()
+        self.slots.read().unwrap()[shard]
+            .live()
+            .map_or(0.0, ServingFrontend::total_weight)
     }
 
     /// The shard the router currently assigns to `client_id` (`None` if
@@ -410,78 +755,146 @@ impl ShardedFrontend {
     /// its clients walk clockwise to the next live shard, while queries
     /// already in the shard keep resolving and its session still shows
     /// up (and is drained) in [`ShardedFrontend::shutdown`]. Remapped
-    /// clients' fairness weights move with them.
-    pub fn drain_shard(&self, shard: usize) {
-        self.shared.router.write().unwrap().set_down(shard, true);
-        self.shared.rehome_all();
+    /// clients' fairness weights move with them. Idempotent: `Ok(true)`
+    /// if the shard transitioned, `Ok(false)` if it was already drained.
+    pub fn drain_shard(&self, shard: usize) -> Result<bool, ReconfigError> {
+        let changed = self.shared.router.write().unwrap().drain_shard(shard)?;
+        if changed {
+            self.shared.rehome_all();
+        }
+        Ok(changed)
     }
 
     /// Put a drained shard back into the ring (its original clients'
-    /// weights return with their routes).
-    pub fn restore_shard(&self, shard: usize) {
-        self.shared.router.write().unwrap().set_down(shard, false);
-        self.shared.rehome_all();
+    /// weights return with their routes). Idempotent: `Ok(false)` if it
+    /// was already live.
+    pub fn restore_shard(&self, shard: usize) -> Result<bool, ReconfigError> {
+        let changed = self.shared.router.write().unwrap().restore_shard(shard)?;
+        if changed {
+            self.shared.rehome_all();
+        }
+        Ok(changed)
     }
 
-    /// Live shard count (shards not drained).
+    /// Live shard count (shards not drained and not removed).
     pub fn live_shards(&self) -> usize {
         self.shared.router.read().unwrap().live()
+    }
+
+    /// One shard's ring state: `"live"`, `"drained"`, `"retired"`, or
+    /// `"unknown"` for an index never allocated (total, for operator
+    /// surfaces that must not panic on bad input).
+    pub fn shard_state(&self, shard: usize) -> &'static str {
+        let router = self.shared.router.read().unwrap();
+        if shard >= router.shards() {
+            "unknown"
+        } else if router.is_removed(shard) {
+            "retired"
+        } else if router.is_down(shard) {
+            "drained"
+        } else {
+            "live"
+        }
     }
 
     /// Permanently kill one instance *of one shard* (the paper's
     /// undetected-zombie failure model, scoped to a fault domain): that
     /// shard degrades to its redundancy scheme while the others keep
-    /// their latency profile.
+    /// their latency profile. A no-op (with a warning) on retired
+    /// shards.
     pub fn kill_instance(&self, shard: usize, instance: usize) {
-        self.frontends[shard].kill_instance(instance);
+        if let Some(f) = self.slots.read().unwrap()[shard].live() {
+            f.kill_instance(instance);
+        } else {
+            log::warn!("kill_instance: shard {shard} is retired");
+        }
     }
 
     /// Fail one instance of one shard for a bounded window.
     pub fn fail_instance_for(&self, shard: usize, instance: usize, dur: Duration) {
-        self.frontends[shard].fail_instance_for(instance, dur);
+        if let Some(f) = self.slots.read().unwrap()[shard].live() {
+            f.fail_instance_for(instance, dur);
+        } else {
+            log::warn!("fail_instance_for: shard {shard} is retired");
+        }
     }
 
     /// One shard's cluster fault plan (the surface the deterministic
     /// fault-injection harness in `tests/common` scripts against).
+    /// Total over the fleet's history: retired shards keep their plan.
     pub fn fault_plan(&self, shard: usize) -> Arc<FaultPlan> {
-        self.frontends[shard].fault_plan()
+        match &self.slots.read().unwrap()[shard] {
+            ShardSlot::Live(f) => f.fault_plan(),
+            ShardSlot::Retired { faults, .. } => faults.clone(),
+        }
     }
 
-    /// Summed admission-load estimate across every shard (what the
+    /// Summed admission-load estimate across every live shard (what the
     /// global offered-load cap bounds).
     pub fn load(&self) -> usize {
-        self.frontends.iter().map(ServingFrontend::load).sum()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .filter_map(ShardSlot::live)
+            .map(ServingFrontend::load)
+            .sum()
     }
 
     /// Total admission rejects across every shard (including global-cap
-    /// rejects, which are tallied against the routed shard).
+    /// rejects, which are tallied against the routed shard, and rejects
+    /// recorded by shards since removed).
     pub fn rejected(&self) -> u64 {
-        self.frontends.iter().map(ServingFrontend::rejected).sum()
+        self.slots
+            .read()
+            .unwrap()
+            .iter()
+            .map(|slot| match slot {
+                ShardSlot::Live(f) => f.rejected(),
+                ShardSlot::Retired { result, .. } => {
+                    result.as_ref().map_or(0, |r| r.rejected)
+                }
+            })
+            .sum()
     }
 
-    /// One shard's live window.
+    /// One shard's live window (zero for retired shards).
     pub fn shard_window(&self, shard: usize) -> WindowSnapshot {
-        self.frontends[shard].window()
+        self.slots.read().unwrap()[shard]
+            .live()
+            .map_or_else(|| WindowSnapshot::zero(Duration::ZERO), ServingFrontend::window)
     }
 
-    /// Fleet-wide live metrics: every shard's window merged
+    /// Fleet-wide live metrics: every live shard's window merged
     /// ([`WindowSnapshot::merge`] — counts exact, quantiles
     /// resolved-weighted).
     pub fn window(&self) -> WindowSnapshot {
-        let snaps: Vec<WindowSnapshot> =
-            self.frontends.iter().map(ServingFrontend::window).collect();
+        let slots = self.slots.read().unwrap();
+        let snaps: Vec<WindowSnapshot> = slots
+            .iter()
+            .filter_map(ShardSlot::live)
+            .map(ServingFrontend::window)
+            .collect();
         WindowSnapshot::merge_all(&snaps)
     }
 
     /// Shut every shard down (each drains its in-flight queries) and
-    /// merge the per-shard [`RunResult`]s into one fleet record. The
-    /// merged `submitted`/`resolved`/`rejected` totals equal the
-    /// per-shard sums by construction — `per_shard` is returned so tests
-    /// and reports can verify exactly that.
+    /// merge the per-shard [`RunResult`]s into one fleet record —
+    /// including shards removed at runtime, whose final records were
+    /// stashed at teardown. The merged `submitted`/`resolved`/`rejected`
+    /// totals equal the per-shard sums by construction — `per_shard` is
+    /// returned so tests and reports can verify exactly that.
     pub fn shutdown(self) -> anyhow::Result<ShardedRunResult> {
-        let mut per_shard = Vec::with_capacity(self.frontends.len());
-        for f in self.frontends {
-            per_shard.push(f.shutdown()?);
+        let slots = self.slots.into_inner().unwrap();
+        let mut per_shard = Vec::with_capacity(slots.len());
+        for (s, slot) in slots.into_iter().enumerate() {
+            match slot {
+                ShardSlot::Live(f) => per_shard.push(f.shutdown()?),
+                ShardSlot::Retired { result: Some(r), .. } => per_shard.push(r),
+                ShardSlot::Retired { result: None, .. } => {
+                    log::warn!("shard {s}: retired without a run record (teardown failed)");
+                }
+            }
         }
         Ok(ShardedRunResult { merged: RunResult::merged(&per_shard), per_shard })
     }
@@ -493,15 +906,15 @@ impl ShardedFrontend {
 /// [`ServiceClient`]); `Send + Sync`, so one client can be driven from
 /// several threads. Submissions route to the client's current shard;
 /// completions are swept from every shard, so rerouting mid-run (a
-/// drained shard) never strands a delivery.
+/// drained shard) never strands a delivery. Legs live behind the home's
+/// lock so the tier can grow them when shards are added at runtime.
 #[derive(Clone)]
 pub struct ShardedClient {
     id: u64,
-    /// One per-shard identity, indexed by shard.
-    legs: Vec<ServiceClient>,
-    /// Keeps this client's weight home alive; when the last clone drops,
-    /// the home's Drop releases the weight and the tier prunes it.
-    home: Arc<WeightHome>,
+    /// Keeps this client's weight home (and per-shard legs) alive; when
+    /// the last clone drops, the home's Drop releases the weight and
+    /// the tier prunes it.
+    home: Arc<ClientHome>,
     shared: Arc<ShardShared>,
 }
 
@@ -534,24 +947,32 @@ impl ShardedClient {
         let Some(shard) = self.shared.router.read().unwrap().route(self.id) else {
             return Err(SubmitError::Closed);
         };
+        let legs = self.home.legs.read().unwrap();
         if let Some(cap) = self.shared.global_backlog {
-            let load: usize = self.legs.iter().map(ServiceClient::load).sum();
+            let load: usize = legs.iter().flatten().map(ServiceClient::load).sum();
             if load >= cap {
                 // Tally against the shard that would have served it, so
                 // the fleet's merged RunResult still covers offered load.
-                self.legs[shard].note_reject();
+                if let Some(Some(leg)) = legs.get(shard) {
+                    leg.note_reject();
+                }
                 return Err(SubmitError::Rejected { load, limit: cap });
             }
         }
-        let fid = self.legs[shard].submit(input)?;
+        let Some(Some(leg)) = legs.get(shard) else {
+            return Err(SubmitError::Closed);
+        };
+        let fid = leg.submit(input)?;
         Ok(tag(shard, fid))
     }
 
     /// Non-blocking: take every prediction delivered to this client on
     /// any shard, ids re-tagged fleet-wide.
     pub fn poll(&self) -> Vec<Resolved> {
+        let legs = self.home.legs.read().unwrap();
         let mut out = Vec::new();
-        for (s, leg) in self.legs.iter().enumerate() {
+        for (s, leg) in legs.iter().enumerate() {
+            let Some(leg) = leg else { continue };
             for r in leg.poll() {
                 out.push(Resolved { id: tag(s, r.id), ..r });
             }
@@ -561,31 +982,44 @@ impl ShardedClient {
 
     /// Block up to `timeout` for the next prediction from any shard.
     /// Sweeps every leg, parking briefly on the currently-routed shard
-    /// (where new deliveries land) between sweeps.
+    /// (where new deliveries land) between sweeps. The park happens on
+    /// a leg clone with the legs lock released, so a concurrent
+    /// add_shard never waits on a parked client.
     pub fn next(&self, timeout: Duration) -> Option<Resolved> {
         let deadline = Instant::now() + timeout;
         loop {
-            for (s, leg) in self.legs.iter().enumerate() {
-                if let Some(r) = leg.try_next() {
-                    return Some(Resolved { id: tag(s, r.id), ..r });
+            let primary = {
+                let legs = self.home.legs.read().unwrap();
+                for (s, leg) in legs.iter().enumerate() {
+                    let Some(leg) = leg else { continue };
+                    if let Some(r) = leg.try_next() {
+                        return Some(Resolved { id: tag(s, r.id), ..r });
+                    }
                 }
-            }
+                let p = self.shared.router.read().unwrap().route(self.id).unwrap_or(0);
+                legs.get(p).and_then(|l| l.clone()).map(|leg| (p, leg))
+            };
             let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            let primary = self.shared.router.read().unwrap().route(self.id).unwrap_or(0);
             let park = (deadline - now).min(Duration::from_millis(2));
-            if let Some(r) = self.legs[primary].next(park) {
-                return Some(Resolved { id: tag(primary, r.id), ..r });
+            match primary {
+                Some((p, leg)) => {
+                    if let Some(r) = leg.next(park) {
+                        return Some(Resolved { id: tag(p, r.id), ..r });
+                    }
+                }
+                None => std::thread::sleep(park),
             }
         }
     }
 
     /// This client's counters summed across every shard it touched.
     pub fn stats(&self) -> ClientStats {
+        let legs = self.home.legs.read().unwrap();
         let mut total = ClientStats::default();
-        for leg in &self.legs {
+        for leg in legs.iter().flatten() {
             let s = leg.stats();
             total.submitted += s.submitted;
             total.resolved += s.resolved;
@@ -599,7 +1033,9 @@ impl ShardedClient {
 
     /// This client's live window merged across shards.
     pub fn window(&self) -> WindowSnapshot {
-        let snaps: Vec<WindowSnapshot> = self.legs.iter().map(ServiceClient::window).collect();
+        let legs = self.home.legs.read().unwrap();
+        let snaps: Vec<WindowSnapshot> =
+            legs.iter().flatten().map(ServiceClient::window).collect();
         WindowSnapshot::merge_all(&snaps)
     }
 }
@@ -620,21 +1056,32 @@ impl ShardedClient {
 /// [`ShardedClient`] type, routing, admission, weight-follows-router
 /// fairness, windows, and merged shutdown — plus the parity pool's own
 /// run records and the fleet coding telemetry.
+///
+/// The tier is elastic end to end: [`CrossShardFrontend::add_shard`] /
+/// [`CrossShardFrontend::remove_shard`] resize the data fleet *and*
+/// re-provision the shared parity pool toward `ceil(shards·m/k)`
+/// instances per r_index (asynchronously — in-flight parity jobs finish
+/// on the outgoing sessions before they retire, so no open group loses
+/// its protection mid-resize).
 pub struct CrossShardFrontend {
     tier: ShardedFrontend,
     parity: ParityLeg,
     state: Arc<CrossShardState>,
     /// Deployed instances per data shard ([`CrossShardFrontend::kill_shard`]).
     shard_m: usize,
+    /// Coding-group width (parity pool provisioning divisor).
+    k: usize,
 }
 
 /// What [`CrossShardFrontend::shutdown`] returns.
 pub struct CrossShardRunResult {
     /// The data shards' merged + per-shard records (client traffic).
     pub fleet: ShardedRunResult,
-    /// The shared parity pool's session records, in r_index order.
-    /// These count *parity* queries, deliberately kept out of the fleet
-    /// record so client-traffic conservation stays auditable.
+    /// The shared parity pool's session records, in r_index order
+    /// (sessions rotated out by a runtime resize are merged into their
+    /// r_index's record). These count *parity* queries, deliberately
+    /// kept out of the fleet record so client-traffic conservation
+    /// stays auditable.
     pub parity: Vec<RunResult>,
     /// Final fleet coding telemetry (sealed groups, parity jobs,
     /// reconstructions, per-shard unavailability).
@@ -686,16 +1133,70 @@ impl CrossShardFrontend {
         let per = (spec.shards * cfg.m + k - 1) / k;
         let parity =
             ParityLeg::start(&cfg, &state, models, sample_query, per, r_max, ptx, prx)?;
-        Ok(CrossShardFrontend { tier, parity, state, shard_m: cfg.m })
+        Ok(CrossShardFrontend { tier, parity, state, shard_m: cfg.m, k })
     }
 
+    /// Total shard slots ever allocated (including retired ones).
     pub fn shards(&self) -> usize {
         self.tier.shards()
     }
 
-    /// Instances in each per-r_index shared parity pool.
+    /// Data shards still provisioned (sessions running).
+    pub fn provisioned_shards(&self) -> usize {
+        self.tier.provisioned_shards()
+    }
+
+    /// Instances in each per-r_index shared parity pool (the currently
+    /// *active* generation; resizes apply asynchronously).
     pub fn parity_pool_size(&self) -> usize {
         self.parity.pool_size()
+    }
+
+    /// The parity pool size the current fleet calls for:
+    /// `ceil(provisioned·m / k)`, ParM's m/k provisioning at fleet
+    /// scale. [`CrossShardFrontend::parity_pool_size`] converges to
+    /// this after a resize.
+    pub fn parity_pool_target(&self) -> usize {
+        ((self.tier.provisioned_shards() * self.shard_m + self.k - 1) / self.k).max(1)
+    }
+
+    /// Stand up one more data shard at runtime. The shared coding state
+    /// grows first (so the new shard can offer batches the moment
+    /// traffic reaches it), then the tier adds the session, then the
+    /// parity pool is re-provisioned toward the new
+    /// [`CrossShardFrontend::parity_pool_target`]. Returns the new
+    /// shard's index.
+    pub fn add_shard(&self) -> anyhow::Result<usize> {
+        self.state.grow_to(self.tier.shards() + 1);
+        let s = self.tier.add_shard()?;
+        // A concurrent add could have raced the pre-grow; make sure the
+        // state covers the index the tier actually allocated.
+        self.state.grow_to(s + 1);
+        self.parity.resize(self.parity_pool_target());
+        Ok(s)
+    }
+
+    /// Tear one data shard down at runtime: reroute its clients, drain
+    /// its session, retire its coding-state lane, and shrink the parity
+    /// pool toward the new target. Refuses to shrink the fleet below k
+    /// provisioned shards (groups must still stripe over k distinct
+    /// shards).
+    pub fn remove_shard(&self, shard: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.tier.provisioned_shards() > self.k,
+            "cross-shard groups stripe over k={} distinct shards; cannot \
+             shrink the fleet below that",
+            self.k
+        );
+        self.tier.remove_shard(shard)?;
+        self.state.retire_shard(shard);
+        self.parity.resize(self.parity_pool_target());
+        Ok(())
+    }
+
+    /// Swap the admission policy on every live data shard.
+    pub fn set_admission(&self, policy: AdmissionPolicy) {
+        self.tier.set_admission(policy);
     }
 
     /// Mint a shard-transparent client (same surface as
@@ -716,17 +1217,24 @@ impl CrossShardFrontend {
 
     /// Take a data shard out of the routing ring (in-flight queries keep
     /// resolving; stranded open groups short-seal at the loss horizon).
-    pub fn drain_shard(&self, shard: usize) {
-        self.tier.drain_shard(shard);
+    /// Idempotent — see [`ShardedFrontend::drain_shard`].
+    pub fn drain_shard(&self, shard: usize) -> Result<bool, ReconfigError> {
+        self.tier.drain_shard(shard)
     }
 
-    /// Put a drained shard back into the ring.
-    pub fn restore_shard(&self, shard: usize) {
-        self.tier.restore_shard(shard);
+    /// Put a drained shard back into the ring. Idempotent — see
+    /// [`ShardedFrontend::restore_shard`].
+    pub fn restore_shard(&self, shard: usize) -> Result<bool, ReconfigError> {
+        self.tier.restore_shard(shard)
     }
 
     pub fn live_shards(&self) -> usize {
         self.tier.live_shards()
+    }
+
+    /// One shard's ring state (see [`ShardedFrontend::shard_state`]).
+    pub fn shard_state(&self, shard: usize) -> &'static str {
+        self.tier.shard_state(shard)
     }
 
     /// Permanently kill one deployed instance of one data shard.
@@ -889,5 +1397,53 @@ mod tests {
         router.set_down(1, true);
         assert_eq!(router.route(7), None);
         assert_eq!(router.live(), 0);
+    }
+
+    #[test]
+    fn grown_ring_equals_fresh_ring_of_same_size() {
+        let mut grown = ShardRouter::new(3, 32);
+        assert_eq!(grown.add_shard(), 3);
+        let fresh = ShardRouter::new(4, 32);
+        for client in 0..2_000u64 {
+            assert_eq!(grown.route(client), fresh.route(client));
+        }
+    }
+
+    #[test]
+    fn remove_restores_prior_routing_exactly() {
+        let mut router = ShardRouter::new(3, 32);
+        let before: Vec<usize> =
+            (0..2_000u64).map(|c| router.route(c).unwrap()).collect();
+        let s = router.add_shard();
+        router.remove_shard(s).unwrap();
+        for (c, &was) in before.iter().enumerate() {
+            assert_eq!(router.route(c as u64).unwrap(), was, "client {c} moved");
+        }
+    }
+
+    #[test]
+    fn reconfig_ops_are_idempotent_and_never_panic() {
+        let mut router = ShardRouter::new(3, 16);
+        // Double drain: transition then no-op.
+        assert_eq!(router.drain_shard(1), Ok(true));
+        assert_eq!(router.drain_shard(1), Ok(false));
+        // Restore of live shard: no-op.
+        assert_eq!(router.restore_shard(0), Ok(false));
+        assert_eq!(router.restore_shard(1), Ok(true));
+        // Remove-while-draining is allowed.
+        assert_eq!(router.drain_shard(2), Ok(true));
+        assert_eq!(router.remove_shard(2), Ok(()));
+        // Double remove, and ops on a removed shard, are clean errors.
+        assert_eq!(router.remove_shard(2), Err(ReconfigError::RemovedShard(2)));
+        assert_eq!(router.drain_shard(2), Err(ReconfigError::RemovedShard(2)));
+        assert_eq!(router.restore_shard(2), Err(ReconfigError::RemovedShard(2)));
+        // Unknown indices are clean errors.
+        assert_eq!(router.drain_shard(9), Err(ReconfigError::UnknownShard(9)));
+        assert_eq!(router.remove_shard(9), Err(ReconfigError::UnknownShard(9)));
+        // Cannot remove the last live shard (shard 1 is drained: with 0
+        // gone, nothing live would remain).
+        assert_eq!(router.remove_shard(0), Err(ReconfigError::LastShard(0)));
+        assert_eq!(router.present(), 2);
+        assert_eq!(router.live(), 1);
     }
 }

@@ -6,7 +6,13 @@
 //!   serve                     — run the serving loop at a rate and report
 //!                               (--clients N > 1 serves N concurrent
 //!                               submitters through the multi-client
-//!                               frontend with --admission control)
+//!                               frontend with --admission control;
+//!                               --admin-socket PATH exposes the control
+//!                               plane on a unix socket while serving)
+//!   admin                     — drive a live fleet's control plane over
+//!                               its admin socket (status, drain, restore,
+//!                               add-shard, remove-shard, set-admission,
+//!                               telemetry, recommend)
 //!   table1                    — the toy coded-computation example
 //!
 //! Every paper figure has a dedicated bench (`cargo bench --bench …`);
@@ -33,12 +39,13 @@ fn main() -> anyhow::Result<()> {
         "list" => cmd_list(),
         "accuracy" => cmd_accuracy(rest),
         "serve" => cmd_serve(rest),
+        "admin" => cmd_admin(rest),
         "experiment" => cmd_experiment(rest),
         "table1" => cmd_table1(),
         _ => {
             println!(
                 "parm — Parity Models prediction serving\n\n\
-                 usage: parm <list|accuracy|serve|experiment|table1> [options]\n\
+                 usage: parm <list|accuracy|serve|admin|experiment|table1> [options]\n\
                  run `parm <cmd> --help` for per-command options"
             );
             Ok(())
@@ -141,6 +148,12 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .opt("shards", "1", "serving shards (>1 serves via the consistent-hash sharded tier)")
         .opt("vnodes", "64", "virtual nodes per shard on the hash ring")
         .opt("global-backlog", "0", "fleet-wide offered-load cap over all shards (0 = none)")
+        .opt(
+            "admin-socket",
+            "",
+            "expose the control plane on this unix socket while serving \
+             (sharded/cross-shard tiers; drive it with `parm admin`)",
+        )
         .opt(
             "admission",
             "unbounded",
@@ -251,6 +264,10 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     }
     let clients = a.get_usize("clients").max(1);
     let shards = a.get_usize("shards");
+    let admin_socket = match a.get("admin-socket") {
+        "" => None,
+        path => Some(path.to_string()),
+    };
     if matches!(cfg.mode, Mode::CrossShard { .. }) {
         if shards < k {
             anyhow::bail!(
@@ -266,7 +283,16 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
                 n => Some(n),
             },
         };
-        return serve_cross_shard(cfg, spec, &models, &source, a.get_u64("queries"), rate, clients);
+        return serve_cross_shard(
+            cfg,
+            spec,
+            &models,
+            &source,
+            a.get_u64("queries"),
+            rate,
+            clients,
+            admin_socket.as_deref(),
+        );
     }
     if shards > 1 {
         let spec = ShardSpec {
@@ -277,7 +303,19 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
                 n => Some(n),
             },
         };
-        return serve_sharded(cfg, spec, &models, &source, a.get_u64("queries"), rate, clients);
+        return serve_sharded(
+            cfg,
+            spec,
+            &models,
+            &source,
+            a.get_u64("queries"),
+            rate,
+            clients,
+            admin_socket.as_deref(),
+        );
+    }
+    if admin_socket.is_some() {
+        anyhow::bail!("--admin-socket needs the sharded tier; pass --shards > 1");
     }
     // A bare session enforces no admission policy (see ServiceConfig
     // docs), so any bounding policy routes through the frontend — even
@@ -394,14 +432,20 @@ fn serve_sharded(
     n: u64,
     rate: f64,
     clients: usize,
+    admin_socket: Option<&str>,
 ) -> anyhow::Result<()> {
+    use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
     let seed = cfg.seed;
     let tier = ShardedFrontend::start(cfg, spec, models, &source.queries[0])?;
     println!(
         "serving {n} queries from {clients} clients over {} shards at {rate:.0} qps total",
         tier.shards()
     );
-    let done = drive_paced_clients(n, rate, clients, seed, source, || tier.client());
+    let plane = std::sync::Arc::new(ControlPlane::new(Fleet::Sharded(tier)));
+    let _admin = bind_admin(&plane, admin_socket)?;
+    let done = drive_paced_clients(n, rate, clients, seed, source, || {
+        plane.client().expect("fleet is live")
+    });
     println!(
         "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10}",
         "client", "shard", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)"
@@ -420,11 +464,14 @@ fn serve_sharded(
             w.p99_ms,
         );
     }
-    for s in 0..tier.shards() {
-        println!("shard {s} window: {}", tier.shard_window(s).report("live"));
+    for s in 0..plane.shards()? {
+        println!("shard {s} window: {}", plane.shard_window(s)?.report("live"));
     }
-    println!("fleet window:   {}", tier.window().report("merged"));
-    let res = tier.shutdown()?;
+    println!("fleet window:   {}", plane.window()?.report("merged"));
+    let res = match plane.shutdown()? {
+        FleetRunResult::Sharded(res) => res,
+        FleetRunResult::CrossShard(_) => unreachable!("plane owns a sharded fleet"),
+    };
     for (s, r) in res.per_shard.iter().enumerate() {
         println!(
             "shard {s}: resolved={} rejected={} reconstructions={} dropped_jobs={}",
@@ -458,7 +505,9 @@ fn serve_cross_shard(
     n: u64,
     rate: f64,
     clients: usize,
+    admin_socket: Option<&str>,
 ) -> anyhow::Result<()> {
+    use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
     let seed = cfg.seed;
     let tier = CrossShardFrontend::start(cfg, spec, models, &source.queries[0])?;
     println!(
@@ -467,9 +516,13 @@ fn serve_cross_shard(
         tier.shards(),
         tier.parity_pool_size(),
     );
-    let done = drive_paced_clients(n, rate, clients, seed, source, || tier.client());
+    let plane = std::sync::Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
+    let _admin = bind_admin(&plane, admin_socket)?;
+    let done = drive_paced_clients(n, rate, clients, seed, source, || {
+        plane.client().expect("fleet is live")
+    });
     // Tail groups get parity protection before the wait-out.
-    tier.flush_open_groups();
+    plane.flush_open_groups()?;
     println!(
         "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10} {:>10}",
         "client", "shard", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)", "recovered"
@@ -489,7 +542,7 @@ fn serve_cross_shard(
             st.recovered,
         );
     }
-    let t = tier.telemetry();
+    let t = plane.cross_telemetry()?.expect("plane owns a cross-shard fleet");
     println!(
         "coding: groups={} parity_jobs={} (overhead {:.3}) last_r={} recon={} \
          fleet_unavail={:.4}",
@@ -500,8 +553,11 @@ fn serve_cross_shard(
         t.reconstructions,
         t.fleet_unavailability
     );
-    println!("fleet window:   {}", tier.window().report("merged"));
-    let res = tier.shutdown()?;
+    println!("fleet window:   {}", plane.window()?.report("merged"));
+    let res = match plane.shutdown()? {
+        FleetRunResult::CrossShard(res) => res,
+        FleetRunResult::Sharded(_) => unreachable!("plane owns a cross-shard fleet"),
+    };
     for (s, r) in res.fleet.per_shard.iter().enumerate() {
         println!(
             "shard {s}: resolved={} rejected={} recovered={} dropped_jobs={}",
@@ -528,6 +584,113 @@ fn serve_cross_shard(
         res.fleet.merged.rejected
     );
     Ok(())
+}
+
+/// Bind the control-plane admin endpoint when a socket path was given.
+/// The returned guard keeps the endpoint serving until it drops.
+#[cfg(unix)]
+fn bind_admin(
+    plane: &std::sync::Arc<parm::coordinator::control::ControlPlane>,
+    path: Option<&str>,
+) -> anyhow::Result<Option<parm::coordinator::control::AdminServer>> {
+    match path {
+        Some(p) if !p.is_empty() => {
+            let server = parm::coordinator::control::AdminServer::bind(p, plane.clone())?;
+            println!("admin endpoint at {p} — drive it with `parm admin --socket {p} status`");
+            Ok(Some(server))
+        }
+        _ => Ok(None),
+    }
+}
+
+#[cfg(not(unix))]
+fn bind_admin(
+    _plane: &std::sync::Arc<parm::coordinator::control::ControlPlane>,
+    path: Option<&str>,
+) -> anyhow::Result<Option<()>> {
+    match path {
+        Some(p) if !p.is_empty() => {
+            anyhow::bail!("--admin-socket {p:?} needs unix domain sockets")
+        }
+        _ => Ok(None),
+    }
+}
+
+fn cmd_admin(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "parm admin",
+        "drive a live fleet's control plane: parm admin --socket PATH \
+         <status|telemetry|recommend|ping|drain|restore|add-shard|remove-shard|set-admission>",
+    )
+    .req("socket", "admin socket path (the serve side's --admin-socket)")
+    .opt("shard", "", "shard index for drain / restore / remove-shard")
+    .opt("policy", "", "set-admission: unbounded | reject-above | block | slo-aware")
+    .opt("backlog", "", "set-admission: backlog bound")
+    .opt("timeout-ms", "", "set-admission block: max wait before rejecting")
+    .opt("slo-ms", "", "set-admission slo-aware: p99 shedding target");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let cmd = a
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("parm admin needs a command; run `parm admin --help`"))?;
+    let mut req = parm::util::json::Json::obj().set("cmd", cmd);
+    if !a.get("shard").is_empty() {
+        req = req.set("shard", a.get_usize("shard"));
+    }
+    if !a.get("policy").is_empty() {
+        req = req.set("policy", a.get("policy"));
+    }
+    if !a.get("backlog").is_empty() {
+        req = req.set("backlog", a.get_usize("backlog"));
+    }
+    if !a.get("timeout-ms").is_empty() {
+        req = req.set("timeout_ms", a.get_f64("timeout-ms"));
+    }
+    if !a.get("slo-ms").is_empty() {
+        req = req.set("slo_ms", a.get_f64("slo-ms"));
+    }
+    let reply = admin_roundtrip(a.get("socket"), &req.to_string())?;
+    println!("{reply}");
+    let parsed = parm::util::json::Json::parse(&reply)?;
+    if parsed.at(&["ok"]).as_bool() != Some(true) {
+        anyhow::bail!(
+            "command failed: {}",
+            parsed.at(&["error"]).as_str().unwrap_or("unknown error")
+        );
+    }
+    Ok(())
+}
+
+/// One request/response round-trip against the admin socket.
+#[cfg(unix)]
+fn admin_roundtrip(socket: &str, line: &str) -> anyhow::Result<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::os::unix::net::UnixStream::connect(socket).map_err(|e| {
+        anyhow::anyhow!("connect {socket}: {e} (is `parm serve --admin-socket` running?)")
+    })?;
+    let mut writer = stream.try_clone()?;
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply)?;
+    if reply.trim().is_empty() {
+        anyhow::bail!("server closed the connection without a reply");
+    }
+    Ok(reply.trim().to_string())
+}
+
+#[cfg(not(unix))]
+fn admin_roundtrip(_socket: &str, _line: &str) -> anyhow::Result<String> {
+    anyhow::bail!("parm admin needs unix domain sockets")
 }
 
 /// Drive `clients` concurrent submitter threads through the multi-client
@@ -632,14 +795,32 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
     if matches!(cfg.mode, Mode::CrossShard { .. }) {
         // Config validation guarantees shards >= k for this mode.
         let clients = exp.shards.shards * 4;
-        return serve_cross_shard(cfg, exp.shards, &models, &source, exp.queries, rate, clients);
+        return serve_cross_shard(
+            cfg,
+            exp.shards,
+            &models,
+            &source,
+            exp.queries,
+            rate,
+            clients,
+            exp.admin_socket.as_deref(),
+        );
     }
     if exp.shards.shards > 1 {
         // Sharded experiments serve paced concurrent clients (4 per
         // shard) through the consistent-hash tier and report the merged
         // fleet record instead of a single-session latency row.
         let clients = exp.shards.shards * 4;
-        return serve_sharded(cfg, exp.shards, &models, &source, exp.queries, rate, clients);
+        return serve_sharded(
+            cfg,
+            exp.shards,
+            &models,
+            &source,
+            exp.queries,
+            rate,
+            clients,
+            exp.admin_socket.as_deref(),
+        );
     }
     let row = latency::run_point(&cfg, &models, &source, exp.queries, rate, cfg.mode.name())?;
     println!("{}", parm::experiments::latency::LatencyRow::header());

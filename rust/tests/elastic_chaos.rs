@@ -1,0 +1,392 @@
+//! Elastic-fleet chaos: drive scale-out and scale-in through the *real*
+//! admin socket mid-run, under open-loop load, with a deterministic
+//! `FaultScript` kill layered on top.
+//!
+//! Each seeded trial serves a cross-shard fleet wrapped in a
+//! [`ControlPlane`] + [`AdminServer`], then — from the load loop, by
+//! socket round-trips exactly as `parm admin` would issue them —
+//! adds a shard, watches the shared parity pool re-provision to
+//! `ceil(shards·m/k)`, kills a shard (one instance or the whole fault
+//! domain, alternating by trial), drains and removes the added shard,
+//! and watches the pool shrink back. Invariants per trial:
+//!
+//! - exactly-once delivery: every accepted query resolves exactly once,
+//!   across both reconfigurations and the kill;
+//! - conservation: offered = resolved + rejected in the merged record,
+//!   and per-shard sums agree (including the retired shard's record);
+//! - the parity pool tracks `ceil(shards·m/k)` across both resizes;
+//! - the admin protocol answers every command with `"ok":true` and
+//!   reports the removed shard as `"retired"`.
+//!
+//! Unix-only (the admin surface is a Unix socket). Trials:
+//! `PARM_ELASTIC_TRIALS`, default 2.
+#![cfg(unix)]
+
+mod common;
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{FaultScript, FaultSurface};
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::control::{AdminServer, ControlPlane, Fleet, FleetRunResult};
+use parm::coordinator::frontend::SubmitError;
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::session::Resolved;
+use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedClient};
+use parm::experiments::latency;
+use parm::util::json::Json;
+use parm::workload::QuerySource;
+
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(r_max: usize) -> Option<(QuerySource, ModelSet)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP elastic_chaos: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    match latency::load_models(&m, 1, 2, r_max, false) {
+        Ok(models) => Some((src, models)),
+        Err(e) => {
+            eprintln!("SKIP elastic_chaos: {e}");
+            None
+        }
+    }
+}
+
+fn trials() -> u64 {
+    std::env::var("PARM_ELASTIC_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2)
+}
+
+/// One `parm admin`-style round-trip: fresh connection, one request
+/// line, one `"ok":true` reply (anything else panics with the error).
+fn admin(socket: &std::path::Path, req: Json) -> Json {
+    let stream = UnixStream::connect(socket)
+        .unwrap_or_else(|e| panic!("connect {}: {e}", socket.display()));
+    let mut writer = stream.try_clone().unwrap();
+    writer.write_all(req.to_string().as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"));
+    assert_eq!(
+        reply.at(&["ok"]).as_bool(),
+        Some(true),
+        "admin command {req} failed: {reply}"
+    );
+    reply
+}
+
+/// Poll `status` until the parity pool reaches its target (resizes are
+/// generational and asynchronous) and the target equals `want`.
+fn wait_pool(socket: &std::path::Path, want: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let status = admin(socket, Json::obj().set("cmd", "status"));
+        let size = status.at(&["parity_pool", "size"]).as_usize();
+        let target = status.at(&["parity_pool", "target"]).as_usize();
+        if size == Some(want) && target == Some(want) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "parity pool stuck at size={size:?} target={target:?}, want {want}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn collect(clients: &[ShardedClient], got: &mut Vec<Resolved>, want: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while got.len() < want && Instant::now() < deadline {
+        let mut any = false;
+        for c in clients {
+            for r in c.poll() {
+                got.push(r);
+                any = true;
+            }
+        }
+        if !any {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Scale 3 → 4 → 3 through the admin socket mid-run, with a scripted
+/// kill in between: exactly-once delivery, offered = resolved +
+/// rejected, and a parity pool that tracks `ceil(shards·m/k)`.
+#[test]
+fn elastic_scale_cycle_over_admin_socket_conserves_queries() {
+    let _guard = serial();
+    const SHARDS: usize = 3;
+    const M: usize = 2;
+    const K: usize = 2;
+    const CLIENTS: usize = 8;
+    const N: u64 = 160;
+    const ADD_AT: u64 = 30;
+    const KILL_AT: u64 = 70;
+    const SHRINK_AT: u64 = 110;
+    let Some((src, models)) = setup(2) else { return };
+    let n_trials = trials();
+    let t0 = Instant::now();
+
+    for trial in 0..n_trials {
+        let seed = 0xE1A5 + trial * 7919;
+        let mut cfg = ServiceConfig::defaults(
+            Mode::CrossShard {
+                k: K,
+                r_min: 1,
+                r_max: 2,
+                halflife: Duration::from_millis(150),
+            },
+            &GPU,
+        );
+        cfg.m = M;
+        cfg.shuffles = 0;
+        cfg.seed = seed;
+        cfg.slo = Some(Duration::from_millis(1500));
+        let spec = ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None };
+        let tier = CrossShardFrontend::start(cfg, spec, &models, &src.queries[0])
+            .unwrap_or_else(|e| panic!("trial {trial}: tier builds: {e}"));
+        let surface =
+            FaultSurface::sharded((0..SHARDS).map(|s| tier.fault_plan(s)).collect(), M);
+        // Alternate the layered fault: an undetected zombie instance on
+        // even trials, a whole-fault-domain loss on odd ones. The victim
+        // (shard 1) is never the shard we scale in.
+        let mut script = if trial % 2 == 0 {
+            FaultScript::builder(seed).kill_instance_at(KILL_AT, 1, 0).build()
+        } else {
+            FaultScript::builder(seed).kill_shard_at(KILL_AT, 1).build()
+        };
+
+        let plane = Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
+        let clients: Vec<ShardedClient> =
+            (0..CLIENTS).map(|_| plane.client().expect("fleet is live")).collect();
+        let socket = std::env::temp_dir()
+            .join(format!("parm-elastic-{}-{trial}.sock", std::process::id()));
+        let server = AdminServer::bind(&socket, plane.clone())
+            .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+
+        let status = admin(&socket, Json::obj().set("cmd", "status"));
+        assert_eq!(status.at(&["shards"]).as_usize(), Some(SHARDS));
+        assert_eq!(
+            status.at(&["parity_pool", "target"]).as_usize(),
+            Some((SHARDS * M + K - 1) / K),
+        );
+
+        let mut submitted = HashSet::new();
+        let mut rejected = 0u64;
+        let mut got = Vec::new();
+        let mut added = usize::MAX;
+        for i in 0..N {
+            script.apply(i, &surface);
+            if i == ADD_AT {
+                let reply = admin(&socket, Json::obj().set("cmd", "add-shard"));
+                added = reply.at(&["shard"]).as_usize().expect("new shard index");
+                assert_eq!(added, SHARDS, "trial {trial}: append-only indices");
+                wait_pool(&socket, ((SHARDS + 1) * M + K - 1) / K, Duration::from_secs(10));
+            }
+            if i == SHRINK_AT {
+                let reply = admin(
+                    &socket,
+                    Json::obj().set("cmd", "drain").set("shard", added),
+                );
+                assert_eq!(reply.at(&["changed"]).as_bool(), Some(true), "trial {trial}");
+                admin(&socket, Json::obj().set("cmd", "remove-shard").set("shard", added));
+                wait_pool(&socket, (SHARDS * M + K - 1) / K, Duration::from_secs(10));
+            }
+            let c = &clients[(i as usize) % clients.len()];
+            match c.submit(src.queries[(i as usize) % src.len()].clone()) {
+                Ok(id) => {
+                    assert!(submitted.insert(id), "trial {trial}: tier ids unique");
+                }
+                Err(SubmitError::Rejected { .. } | SubmitError::SloShed { .. }) => rejected += 1,
+                Err(e) => panic!("trial {trial}: unexpected submit error: {e}"),
+            }
+            for c in &clients {
+                got.extend(c.poll());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(script.done(), "trial {trial}: the scripted kill fired");
+
+        // The admin surface stays coherent after the full cycle: the
+        // scaled-in shard reads as retired, the fleet is back to 3 live.
+        let status = admin(&socket, Json::obj().set("cmd", "status"));
+        assert_eq!(status.at(&["shards"]).as_usize(), Some(SHARDS + 1));
+        assert_eq!(status.at(&["provisioned"]).as_usize(), Some(SHARDS));
+        let states = status.at(&["shard_states"]).as_arr().expect("states");
+        assert_eq!(states[added].at(&["state"]).as_str(), Some("retired"), "trial {trial}");
+        let telemetry = admin(&socket, Json::obj().set("cmd", "telemetry"));
+        assert!(telemetry.at(&["window", "qps"]).as_f64().is_some());
+        let rec = admin(&socket, Json::obj().set("cmd", "recommend"));
+        assert!(rec.at(&["action"]).as_str().is_some());
+
+        plane.flush_open_groups().expect("fleet is live");
+        collect(&clients, &mut got, submitted.len(), Duration::from_secs(15));
+
+        // Exactly-once delivery across scale-out, kill, and scale-in.
+        assert_eq!(
+            got.len(),
+            submitted.len(),
+            "trial {trial} (seed {seed:#x}): every accepted query resolves"
+        );
+        let ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+        assert_eq!(ids.len(), got.len(), "trial {trial}: no duplicate resolutions");
+        assert_eq!(ids, submitted, "trial {trial}: exactly the accepted ids");
+
+        server.stop();
+        let res = match plane.shutdown().unwrap_or_else(|e| panic!("trial {trial}: {e}")) {
+            FleetRunResult::CrossShard(res) => res,
+            FleetRunResult::Sharded(_) => unreachable!("cross-shard fleet"),
+        };
+        let metrics = &res.fleet.merged.metrics;
+        assert_eq!(
+            metrics.total(),
+            submitted.len() as u64,
+            "trial {trial}: resolved equals accepted"
+        );
+        assert_eq!(res.fleet.merged.rejected, rejected, "trial {trial}: rejects conserved");
+        assert_eq!(metrics.offered(), N, "trial {trial}: offered = resolved + rejected");
+        // Per-shard sums agree — including the retired shard's record.
+        assert_eq!(res.fleet.per_shard.len(), SHARDS + 1, "trial {trial}");
+        let sum_resolved: u64 = res.fleet.per_shard.iter().map(|r| r.metrics.total()).sum();
+        assert_eq!(sum_resolved, metrics.total(), "trial {trial}: per-shard sums agree");
+        // Shutdown tore the admin surface down with the fleet.
+        assert!(plane.client().is_none(), "trial {trial}: plane is closed");
+        assert!(
+            UnixStream::connect(&socket).is_err(),
+            "trial {trial}: stopped server removed its socket"
+        );
+    }
+    eprintln!(
+        "elastic_chaos: {n_trials} trials in {:.1}s",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+/// The reconfiguration contract over the wire: invalid operations come
+/// back as clean `"ok":false` protocol errors — never a panic, never a
+/// wedged fleet — and valid retries converge (idempotency).
+#[test]
+fn admin_protocol_rejects_invalid_ops_cleanly() {
+    let _guard = serial();
+    const SHARDS: usize = 3;
+    let Some((src, models)) = setup(2) else { return };
+    let mut cfg = ServiceConfig::defaults(
+        Mode::CrossShard {
+            k: 2,
+            r_min: 1,
+            r_max: 2,
+            halflife: Duration::from_millis(150),
+        },
+        &GPU,
+    );
+    cfg.m = 1;
+    cfg.shuffles = 0;
+    cfg.seed = 0xBAD0;
+    cfg.slo = Some(Duration::from_millis(1500));
+    let spec = ShardSpec { shards: SHARDS, vnodes: 32, global_backlog: None };
+    let tier = CrossShardFrontend::start(cfg, spec, &models, &src.queries[0])
+        .expect("tier builds");
+    let plane = Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
+    let client = plane.client().expect("fleet is live");
+    let socket =
+        std::env::temp_dir().join(format!("parm-elastic-bad-{}.sock", std::process::id()));
+    let server = AdminServer::bind(&socket, plane.clone()).expect("bind admin socket");
+
+    let send = |req: Json| -> Json {
+        let stream = UnixStream::connect(&socket).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        writer.write_all(req.to_string().as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        BufReader::new(stream).read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    let fails = |req: Json| {
+        let reply = send(req.clone());
+        assert_eq!(reply.at(&["ok"]).as_bool(), Some(false), "{req} must fail: {reply}");
+        assert!(reply.at(&["error"]).as_str().is_some(), "{req}: error text present");
+    };
+
+    // Unknown shard, double-drain no-op, restore-of-live no-op.
+    fails(Json::obj().set("cmd", "drain").set("shard", 99usize));
+    fails(Json::obj().set("cmd", "remove-shard").set("shard", 99usize));
+    fails(Json::obj().set("cmd", "set-admission").set("policy", "martian"));
+    fails(Json::obj().set("cmd", "no-such-command"));
+    let r = admin(&socket, Json::obj().set("cmd", "drain").set("shard", 1usize));
+    assert_eq!(r.at(&["changed"]).as_bool(), Some(true));
+    let r = admin(&socket, Json::obj().set("cmd", "drain").set("shard", 1usize));
+    assert_eq!(r.at(&["changed"]).as_bool(), Some(false), "double-drain is a no-op");
+    let r = admin(&socket, Json::obj().set("cmd", "restore").set("shard", 1usize));
+    assert_eq!(r.at(&["changed"]).as_bool(), Some(true));
+    let r = admin(&socket, Json::obj().set("cmd", "restore").set("shard", 1usize));
+    assert_eq!(r.at(&["changed"]).as_bool(), Some(false), "restore-of-live is a no-op");
+    // Remove-while-draining is allowed (a drained shard is the normal
+    // removal candidate) — then a double-remove and a drain of the
+    // retired slot are clean errors.
+    let r = admin(&socket, Json::obj().set("cmd", "drain").set("shard", 2usize));
+    assert_eq!(r.at(&["changed"]).as_bool(), Some(true));
+    admin(&socket, Json::obj().set("cmd", "remove-shard").set("shard", 2usize));
+    fails(Json::obj().set("cmd", "remove-shard").set("shard", 2usize));
+    fails(Json::obj().set("cmd", "drain").set("shard", 2usize));
+    // Shrinking below k distinct data shards is refused (2 provisioned
+    // shards remain, and cross-shard groups stripe over k=2).
+    fails(Json::obj().set("cmd", "remove-shard").set("shard", 0usize));
+    // A valid admission swap round-trips.
+    admin(
+        &socket,
+        Json::obj()
+            .set("cmd", "set-admission")
+            .set("policy", "reject-above")
+            .set("backlog", 4096usize),
+    );
+
+    // The data path survived all of it.
+    let id = client.submit(src.queries[0].clone()).expect("fleet still serves");
+    plane.flush_open_groups().expect("fleet is live");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut resolved = Vec::new();
+    while resolved.is_empty() && Instant::now() < deadline {
+        resolved.extend(client.poll());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(resolved.len(), 1, "query resolves after the abuse");
+    assert_eq!(resolved[0].id, id);
+
+    server.stop();
+    // Ops after shutdown: clean Closed over the wire too.
+    let socket2 =
+        std::env::temp_dir().join(format!("parm-elastic-bad2-{}.sock", std::process::id()));
+    let server2 = AdminServer::bind(&socket2, plane.clone()).expect("rebind");
+    let _ = plane.shutdown().expect("clean shutdown");
+    let stream = UnixStream::connect(&socket2).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    writer.write_all(b"{\"cmd\":\"status\"}\n").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).unwrap();
+    assert_eq!(reply.at(&["ok"]).as_bool(), Some(false));
+    assert!(reply.at(&["error"]).as_str().unwrap().contains("shut down"));
+    server2.stop();
+}

@@ -219,7 +219,7 @@ fn drained_shard_reroutes_subsequent_submits() {
         ids.insert(id);
     }
 
-    tier.drain_shard(home);
+    tier.drain_shard(home).expect("first drain transitions");
     assert_eq!(tier.live_shards(), SHARDS - 1);
     let rerouted = client.shard().expect("surviving shards stay live");
     assert_ne!(rerouted, home, "drained shard must not receive new routes");
@@ -247,7 +247,7 @@ fn drained_shard_reroutes_subsequent_submits() {
 
     // Restoring the shard brings the original route back (consistent
     // hashing: nothing else moved in between).
-    tier.restore_shard(home);
+    tier.restore_shard(home).expect("restore of a drained shard transitions");
     assert_eq!(client.shard(), Some(home));
 
     let res = tier.shutdown().expect("clean shutdown");
@@ -356,7 +356,7 @@ fn weight_follows_router_on_drain() {
     // its new route; the drained shard holds none.
     let home = heavy.shard().expect("live shard");
     assert_eq!(heavy.weight_shard(), Some(home), "weight sits where the router points");
-    tier.drain_shard(home);
+    tier.drain_shard(home).expect("first drain transitions");
     assert_ne!(heavy.shard().expect("survivors stay live"), home);
     assert_eq!(heavy.weight_shard(), heavy.shard(), "weight moved with the route");
     assert!(
@@ -376,7 +376,7 @@ fn weight_follows_router_on_drain() {
 
     // Restore: consistent hashing brings every original route — and its
     // weight — back.
-    tier.restore_shard(home);
+    tier.restore_shard(home).expect("restore of a drained shard transitions");
     for (s, &w) in expect.iter().enumerate() {
         assert!(
             (tier.shard_total_weight(s) - w).abs() < 1e-9,
