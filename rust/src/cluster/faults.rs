@@ -10,18 +10,30 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::journal::{Event, FaultKind, Recorder};
+
 /// Lock-free fault schedule: per-instance "failed until" timestamps,
 /// stored as nanos since the plan's epoch.
 pub struct FaultPlan {
     epoch: std::time::Instant,
     failed_until: Vec<AtomicU64>,
+    /// Journal hook: every mutation is recorded here, so the event log
+    /// captures faults from *any* source — scripted harness, scheduled
+    /// injector, or a manual chaos-drill kill. Disabled by default.
+    recorder: Recorder,
 }
 
 impl FaultPlan {
     pub fn new(n_instances: usize) -> Arc<FaultPlan> {
+        Self::new_recorded(n_instances, Recorder::disabled())
+    }
+
+    /// A plan whose mutations land in a serving-path journal.
+    pub fn new_recorded(n_instances: usize, recorder: Recorder) -> Arc<FaultPlan> {
         Arc::new(FaultPlan {
             epoch: std::time::Instant::now(),
             failed_until: (0..n_instances).map(|_| AtomicU64::new(0)).collect(),
+            recorder,
         })
     }
 
@@ -29,16 +41,31 @@ impl FaultPlan {
     pub fn fail_for(&self, instance: usize, dur: Duration) {
         let until = (self.epoch.elapsed() + dur).as_nanos() as u64;
         self.failed_until[instance].store(until, Ordering::Relaxed);
+        self.recorder.record(&Event::Fault {
+            instance: instance as u64,
+            kind: FaultKind::FailFor as u8,
+            arg: dur.as_micros() as u64,
+        });
     }
 
     /// Permanently fail an instance.
     pub fn kill(&self, instance: usize) {
         self.failed_until[instance].store(u64::MAX, Ordering::Relaxed);
+        self.recorder.record(&Event::Fault {
+            instance: instance as u64,
+            kind: FaultKind::Kill as u8,
+            arg: 0,
+        });
     }
 
     /// Clear any failure on an instance.
     pub fn heal(&self, instance: usize) {
         self.failed_until[instance].store(0, Ordering::Relaxed);
+        self.recorder.record(&Event::Fault {
+            instance: instance as u64,
+            kind: FaultKind::Heal as u8,
+            arg: 0,
+        });
     }
 
     pub fn is_failed(&self, instance: usize) -> bool {

@@ -14,12 +14,15 @@
 //! - [`tenancy::Tenancy`] adds light co-located inference load on a subset
 //!   of instances (§5.2.4);
 //! - [`faults::FaultPlan`] injects hard failures (instances that stop
-//!   responding), the limiting case of a slowdown.
+//!   responding), the limiting case of a slowdown;
+//! - [`chaos::FaultScript`] scripts all of the above deterministically:
+//!   seeded, step-indexed fault timelines against any serving tier.
 //!
 //! All injected delays scale by `time_scale` so experiments can run
 //! compressed (e.g. 0.2x) while preserving the ratios that determine
 //! queueing behaviour; EXPERIMENTS.md records the scale used per figure.
 
+pub mod chaos;
 pub mod faults;
 pub mod hardware;
 pub mod network;

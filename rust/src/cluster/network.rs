@@ -21,6 +21,11 @@ use super::hardware::Profile;
 pub struct Network {
     /// Number of active background flows on each instance's link.
     contention: Vec<AtomicU32>,
+    /// Chaos-injected phantom flows per link (subset of `contention`),
+    /// tracked separately so [`Network::restore_link`] removes exactly
+    /// what [`Network::degrade_link`] added and never touches live
+    /// shuffle flows.
+    degraded: Vec<AtomicU32>,
     profile: &'static Profile,
 }
 
@@ -28,6 +33,7 @@ impl Network {
     pub fn new(n_instances: usize, profile: &'static Profile) -> Arc<Self> {
         Arc::new(Self {
             contention: (0..n_instances).map(|_| AtomicU32::new(0)).collect(),
+            degraded: (0..n_instances).map(|_| AtomicU32::new(0)).collect(),
             profile,
         })
     }
@@ -55,6 +61,33 @@ impl Network {
 
     fn leave(&self, instance: usize) {
         self.contention[instance].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Degrade `instance`'s link by pinning `flows` phantom background
+    /// flows on it: transfers see `flows` extra fair-share contenders and
+    /// the worker's head-of-line delay scales with them, exactly as if
+    /// that many shuffles were stuck on the link. Replaces any previous
+    /// degradation on the instance (set `flows = 0` to clear). The
+    /// scriptable network-chaos primitive `FaultAction::DegradeLink`
+    /// drives this.
+    pub fn degrade_link(&self, instance: usize, flows: u32) {
+        let prev = self.degraded[instance].swap(flows, Ordering::Relaxed);
+        if flows >= prev {
+            self.contention[instance].fetch_add(flows - prev, Ordering::Relaxed);
+        } else {
+            self.contention[instance].fetch_sub(prev - flows, Ordering::Relaxed);
+        }
+    }
+
+    /// Clear any chaos-injected degradation on `instance`'s link (live
+    /// shuffle flows are untouched).
+    pub fn restore_link(&self, instance: usize) {
+        self.degrade_link(instance, 0);
+    }
+
+    /// Phantom flows currently pinned on `instance` by chaos injection.
+    pub fn degraded_flows(&self, instance: usize) -> u32 {
+        self.degraded[instance].load(Ordering::Relaxed)
     }
 }
 
@@ -182,6 +215,27 @@ mod tests {
         gen.stop();
         let total: u32 = (0..8).map(|i| net.active_flows(i)).sum();
         assert_eq!(total, 0, "all flows released on stop");
+    }
+
+    #[test]
+    fn degrade_restore_inflates_and_clears() {
+        let net = Network::new(4, &GPU);
+        let base = net.transfer_time(1, 1 << 20);
+        net.degrade_link(1, 8);
+        assert_eq!(net.active_flows(1), 8);
+        assert_eq!(net.degraded_flows(1), 8);
+        let degraded = net.transfer_time(1, 1 << 20);
+        assert!((degraded.as_secs_f64() / base.as_secs_f64() - 9.0).abs() < 1e-6);
+        // Re-degrading replaces, never stacks.
+        net.degrade_link(1, 3);
+        assert_eq!(net.active_flows(1), 3);
+        // Restore clears chaos flows but leaves live shuffle flows alone.
+        net.enter(1);
+        net.restore_link(1);
+        assert_eq!(net.active_flows(1), 1);
+        assert_eq!(net.degraded_flows(1), 0);
+        net.leave(1);
+        assert_eq!(net.transfer_time(1, 1 << 20), base);
     }
 
     #[test]

@@ -495,6 +495,8 @@ pub struct RatelessScheme {
     last_r: usize,
     groups_sealed: u64,
     parity_jobs: u64,
+    /// Serving-path journal (disabled unless the session attached one).
+    recorder: crate::coordinator::journal::Recorder,
 }
 
 /// Throttle on the stale-group sweep.
@@ -526,6 +528,7 @@ impl RatelessScheme {
             last_r: cfg.r_min,
             groups_sealed: 0,
             parity_jobs: 0,
+            recorder: crate::coordinator::journal::Recorder::disabled(),
             cfg,
         }
     }
@@ -564,6 +567,12 @@ impl RatelessScheme {
         // as losses, a late reconstruction must not count them again.
         let already_counted = self.loss_counted.contains(&group);
         for sr in res.resolved {
+            if sr.reconstructed {
+                self.recorder.record(&crate::coordinator::journal::Event::Decode {
+                    group,
+                    slot: sr.slot as u64,
+                });
+            }
             if sr.reconstructed && !already_counted {
                 // A reconstructed slot's own prediction never arrived in
                 // time: one hard-loss observation.
@@ -677,6 +686,11 @@ impl RedundancyScheme for RatelessScheme {
             self.groups_sealed += 1;
             let ids: Vec<Vec<u64>> = self.accum.iter().map(|(i, _)| i.clone()).collect();
             self.tracker.register_with_r(gid, ids, r);
+            self.recorder.record(&crate::coordinator::journal::Event::Seal {
+                group: gid,
+                k: self.cfg.k as u64,
+                r: r as u64,
+            });
             self.next_group += 1;
             self.sealed
                 .push_back(SealedMeta { group: gid, at: now, losses_counted: false });
@@ -750,6 +764,10 @@ impl RedundancyScheme for RatelessScheme {
             groups_sealed: self.groups_sealed,
             parity_jobs: self.parity_jobs,
         })
+    }
+
+    fn attach_recorder(&mut self, recorder: crate::coordinator::journal::Recorder) {
+        self.recorder = recorder;
     }
 }
 

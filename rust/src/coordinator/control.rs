@@ -59,6 +59,7 @@ use std::time::Duration;
 
 use crate::cluster::faults::FaultPlan;
 use crate::coordinator::frontend::AdmissionPolicy;
+use crate::coordinator::journal::{Event, Recorder, ReconfigVerb};
 use crate::coordinator::metrics::WindowSnapshot;
 use crate::coordinator::shards::{
     CrossShardFrontend, CrossShardRunResult, ReconfigError, ShardedClient,
@@ -87,6 +88,25 @@ impl FleetRunResult {
             FleetRunResult::Sharded(r) => r,
             FleetRunResult::CrossShard(r) => &r.fleet,
         }
+    }
+}
+
+/// The fleet's base journal handle (disabled unless the run was started
+/// with a live [`Recorder`] in its [`ServiceConfig`]).
+///
+/// [`ServiceConfig`]: crate::coordinator::service::ServiceConfig
+fn fleet_recorder(fleet: &Fleet) -> Recorder {
+    match fleet {
+        Fleet::Sharded(t) => t.recorder(),
+        Fleet::CrossShard(t) => t.recorder(),
+    }
+}
+
+/// Journal one applied reconfiguration verb.
+fn record_reconfig(fleet: &Fleet, verb: ReconfigVerb, shard: usize) {
+    let rec = fleet_recorder(fleet);
+    if rec.enabled() {
+        rec.record(&Event::Reconfig { verb: verb as u8, shard: shard as u64 });
     }
 }
 
@@ -187,9 +207,13 @@ impl ControlPlane {
     /// [`ShardedFrontend::add_shard`]: crate::coordinator::shards::ShardedFrontend::add_shard
     pub fn add_shard(&self) -> anyhow::Result<usize> {
         let _ops = self.ops.lock().unwrap();
-        self.with_fleet(|fleet| match fleet {
-            Fleet::Sharded(t) => t.add_shard(),
-            Fleet::CrossShard(t) => t.add_shard(),
+        self.with_fleet(|fleet| {
+            let s = match fleet {
+                Fleet::Sharded(t) => t.add_shard(),
+                Fleet::CrossShard(t) => t.add_shard(),
+            }?;
+            record_reconfig(fleet, ReconfigVerb::AddShard, s);
+            Ok(s)
         })?
     }
 
@@ -199,9 +223,13 @@ impl ControlPlane {
     /// [`ReconfigError::RemovedShard`].
     pub fn remove_shard(&self, shard: usize) -> anyhow::Result<()> {
         let _ops = self.ops.lock().unwrap();
-        self.with_fleet(|fleet| match fleet {
-            Fleet::Sharded(t) => t.remove_shard(shard),
-            Fleet::CrossShard(t) => t.remove_shard(shard),
+        self.with_fleet(|fleet| {
+            match fleet {
+                Fleet::Sharded(t) => t.remove_shard(shard),
+                Fleet::CrossShard(t) => t.remove_shard(shard),
+            }?;
+            record_reconfig(fleet, ReconfigVerb::RemoveShard, shard);
+            Ok(())
         })?
     }
 
@@ -209,18 +237,30 @@ impl ControlPlane {
     /// `Ok(false)` = already drained (no-op).
     pub fn drain(&self, shard: usize) -> Result<bool, ReconfigError> {
         let _ops = self.ops.lock().unwrap();
-        self.with_fleet(|fleet| match fleet {
-            Fleet::Sharded(t) => t.drain_shard(shard),
-            Fleet::CrossShard(t) => t.drain_shard(shard),
+        self.with_fleet(|fleet| {
+            let changed = match fleet {
+                Fleet::Sharded(t) => t.drain_shard(shard),
+                Fleet::CrossShard(t) => t.drain_shard(shard),
+            }?;
+            if changed {
+                record_reconfig(fleet, ReconfigVerb::Drain, shard);
+            }
+            Ok(changed)
         })?
     }
 
     /// Put a drained shard back. `Ok(false)` = it was already live.
     pub fn restore(&self, shard: usize) -> Result<bool, ReconfigError> {
         let _ops = self.ops.lock().unwrap();
-        self.with_fleet(|fleet| match fleet {
-            Fleet::Sharded(t) => t.restore_shard(shard),
-            Fleet::CrossShard(t) => t.restore_shard(shard),
+        self.with_fleet(|fleet| {
+            let changed = match fleet {
+                Fleet::Sharded(t) => t.restore_shard(shard),
+                Fleet::CrossShard(t) => t.restore_shard(shard),
+            }?;
+            if changed {
+                record_reconfig(fleet, ReconfigVerb::Restore, shard);
+            }
+            Ok(changed)
         })?
     }
 
@@ -228,9 +268,12 @@ impl ControlPlane {
     /// inherit it).
     pub fn set_admission(&self, policy: AdmissionPolicy) -> Result<(), ReconfigError> {
         let _ops = self.ops.lock().unwrap();
-        self.with_fleet(|fleet| match fleet {
-            Fleet::Sharded(t) => t.set_admission(policy),
-            Fleet::CrossShard(t) => t.set_admission(policy),
+        self.with_fleet(|fleet| {
+            match fleet {
+                Fleet::Sharded(t) => t.set_admission(policy),
+                Fleet::CrossShard(t) => t.set_admission(policy),
+            }
+            record_reconfig(fleet, ReconfigVerb::SetAdmission, 0);
         })
     }
 
@@ -280,6 +323,18 @@ impl ControlPlane {
         self.with_fleet(|fleet| match fleet {
             Fleet::Sharded(t) => t.fault_plan(shard),
             Fleet::CrossShard(t) => t.fault_plan(shard),
+        })
+    }
+
+    /// One live shard's link-contention model (`None` for retired
+    /// shards) — the network-chaos surface.
+    pub fn network(
+        &self,
+        shard: usize,
+    ) -> Result<Option<Arc<crate::cluster::network::Network>>, ReconfigError> {
+        self.with_fleet(|fleet| match fleet {
+            Fleet::Sharded(t) => t.network(shard),
+            Fleet::CrossShard(t) => t.network(shard),
         })
     }
 

@@ -205,6 +205,10 @@ struct Inner {
     last_r: usize,
     groups_sealed: u64,
     parity_jobs: u64,
+    /// Serving-path journal for fleet-level events (group seals and
+    /// cross-shard decodes); the per-shard sessions record their own
+    /// submit/dispatch/complete events through their tagged clones.
+    recorder: crate::coordinator::journal::Recorder,
 }
 
 /// Throttle on the stale sweep (mirrors the rateless scheme's).
@@ -226,6 +230,12 @@ fn apply_tracker(inner: &mut Inner, group: u64, res: Resolutions, at: Instant) {
         }
         if sr.tag < inner.external.len() {
             inner.recon_by_shard[sr.tag] += 1;
+            inner
+                .recorder
+                .record(&crate::coordinator::journal::Event::Decode {
+                    group,
+                    slot: sr.slot as u64,
+                });
             inner.external[sr.tag].push_back((sr.query_ids, at));
         } else {
             log::error!("cross-shard: decoded slot with out-of-range tag {}", sr.tag);
@@ -251,6 +261,11 @@ fn seal(inner: &mut Inner, og: OpenGroup, now: Instant) {
     let r = inner.predictor.recommend_r(k, inner.cfg.r_min, inner.cfg.r_max, now);
     inner.last_r = r;
     inner.groups_sealed += 1;
+    inner.recorder.record(&crate::coordinator::journal::Event::Seal {
+        group: gid,
+        k: k as u64,
+        r: r as u64,
+    });
 
     let mut ids = Vec::with_capacity(k);
     let mut tags = Vec::with_capacity(k);
@@ -437,6 +452,7 @@ impl CrossShardState {
             last_r: cfg.r_min,
             groups_sealed: 0,
             parity_jobs: 0,
+            recorder: crate::coordinator::journal::Recorder::disabled(),
             cfg,
         };
         CrossShardState { inner: Mutex::new(inner) }
@@ -446,6 +462,13 @@ impl CrossShardState {
     /// shard serves traffic).
     pub(crate) fn set_parity_sender(&self, tx: mpsc::Sender<ParityMsg>) {
         self.inner.lock().unwrap().parity_tx = Some(tx);
+    }
+
+    /// Join a serving-path journal: fleet-level seals and decodes are
+    /// recorded through this handle (the tier wires it from the config's
+    /// recorder at startup).
+    pub fn set_recorder(&self, recorder: crate::coordinator::journal::Recorder) {
+        self.inner.lock().unwrap().recorder = recorder;
     }
 
     /// Extend the striping width to `shards` (elastic scale-out). Shard
@@ -906,6 +929,11 @@ fn parity_factory(
         // Teardown must terminate even if parity instances die: force an
         // SLO backstop on the leg.
         pc.slo = Some(cfg.slo.unwrap_or(Duration::from_secs(5)));
+        // Parity sessions host internal parity jobs, not client queries;
+        // their session-local events would collide with data-shard tags
+        // in the journal. The journal sees parity activity through the
+        // fleet state's Seal/Decode events instead.
+        pc.recorder = crate::coordinator::journal::Recorder::disabled();
         let leg_models = ModelSet {
             deployed: parities
                 .get(ri)

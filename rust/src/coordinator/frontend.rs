@@ -579,6 +579,9 @@ pub struct ServingFrontend {
     /// The session's fault plan, retained so chaos drills can target
     /// this frontend's cluster after the handle moved to the dispatcher.
     faults: Arc<FaultPlan>,
+    /// The session's link-contention model, retained for the same
+    /// reason: network-chaos scripts degrade links through it.
+    network: Arc<crate::cluster::network::Network>,
     dispatcher: Option<JoinHandle<()>>,
 }
 
@@ -615,6 +618,7 @@ impl ServingFrontend {
             window: Mutex::new(LatencyWindow::new(window)),
         });
         let faults = handle.fault_plan();
+        let network = handle.network();
         let dispatcher_shared = shared.clone();
         let dispatcher = std::thread::Builder::new()
             .name("frontend-dispatcher".into())
@@ -624,6 +628,7 @@ impl ServingFrontend {
             shared,
             tx: Arc::new(Mutex::new(tx)),
             faults,
+            network,
             dispatcher: Some(dispatcher),
         }
     }
@@ -725,6 +730,12 @@ impl ServingFrontend {
     /// fault-injection harness in `tests/common` scripts against).
     pub fn fault_plan(&self) -> Arc<FaultPlan> {
         self.faults.clone()
+    }
+
+    /// This frontend's cluster link-contention model — the surface
+    /// network-chaos scripts degrade and restore links through.
+    pub fn network(&self) -> Arc<crate::cluster::network::Network> {
+        self.network.clone()
     }
 
     /// Stop admitting, let in-flight queries resolve (deliveries keep

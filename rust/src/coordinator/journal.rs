@@ -1,0 +1,988 @@
+//! Binary, delta-encoded serving-path event journal — record any run,
+//! replay it deterministically, assert it byte-identical.
+//!
+//! Every serving surface in the stack can carry a [`Recorder`]: the
+//! session records submits, dispatches and resolutions; the schemes
+//! record group seals and decodes; the fault plan records every injected
+//! failure (whatever injected it — a `FaultScript`, the scheduled
+//! injector, or a manual `kill_instance`); the sharded tier records
+//! routing; the control plane records reconfigurations. The result is a
+//! single causally-ordered event log of the run — the debugging substrate
+//! ROADMAP item 3 calls for: a failing chaos trial is no longer a
+//! one-off, it is a file.
+//!
+//! ## Format
+//!
+//! A journal is `b"PMJL"` + a version byte, then a flat sequence of
+//! records:
+//!
+//! ```text
+//! [varint delta_ts_us] [varint shard] [u8 kind] [payload...]
+//! ```
+//!
+//! - `delta_ts_us`: microseconds since the previous record (the first
+//!   record's delta is since the recorder's epoch). Timestamps are read
+//!   under the writer lock, so deltas are never negative and the log is
+//!   totally ordered even when many shard sessions record concurrently.
+//! - `shard`: which fault domain emitted the event (0 for a bare
+//!   session; the sharded tier tags each shard's recorder clone).
+//! - `kind` + payload: one of [`Event`]'s variants. Integers are
+//!   minimal-length LEB128 varints, strings are length-prefixed UTF-8 —
+//!   every event has exactly one encoding, which is what makes
+//!   byte-identity a meaningful assertion.
+//!
+//! The log opens with exactly one [`Event::Start`] (the seed and mode —
+//! the seeding contract: a journal names the seed that produced it) and
+//! closes with exactly one [`Event::End`] carrying the run's resolved
+//! totals, written by [`Recorder::finish`].
+//!
+//! ## Replay
+//!
+//! Live runs are threaded and racy: worker completions interleave
+//! differently run to run, so re-running the *simulation* cannot
+//! reproduce a journal bit-for-bit. [`replay`] therefore re-executes the
+//! **event stream** through a deterministic interpreter: it walks every
+//! record, enforces the serving path's causal invariants (no duplicate
+//! submit, no resolution without a submit, exactly-once termination),
+//! recomputes the outcome totals from the `Complete`/`Reject` events,
+//! checks them against the recorded `End` footer, and re-encodes the
+//! stream. Because the codec is canonical, the re-encoded journal is
+//! byte-identical to the input — replaying a journal twice yields the
+//! same bytes, the property the regression suite and the CI replay lane
+//! pin. A journal that fails any invariant is a recorder bug, and
+//! `replay` says so instead of round-tripping garbage.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Outcome;
+use crate::coordinator::service::RunResult;
+use crate::util::rng::fnv1a;
+
+/// Journal magic: "PMJL" (Parity-Models JournaL).
+pub const MAGIC: [u8; 4] = *b"PMJL";
+/// Format version (bump on any codec change).
+pub const VERSION: u8 = 1;
+
+/// One serving-path event. See the module docs for where each kind is
+/// recorded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Run header: the seed and mode that produced this journal, and how
+    /// many shards the run started with.
+    Start { seed: u64, mode: String, shards: u64 },
+    /// A query entered a session (`ServiceHandle::submit`). `qid` is the
+    /// session-local query id; the (shard, qid) pair is unique run-wide.
+    Submit { qid: u64 },
+    /// The sharded router sent a query to a shard. `qid` is the
+    /// shard-tagged id the client observed.
+    Route { qid: u64, shard: u64 },
+    /// A job left the session for an instance pool. `kind` is a
+    /// [`JobClass`] byte; `detail` is the slot (data/replica) or r_index
+    /// (parity); `queries` is the number of query ids riding the job.
+    Dispatch { group: u64, kind: u8, detail: u64, queries: u64 },
+    /// A coding group sealed with k data slots and r parities.
+    Seal { group: u64, k: u64, r: u64 },
+    /// A query resolved. `outcome` is an [`Outcome`] byte
+    /// ([`outcome_byte`]); latency as observed by the session.
+    Complete { qid: u64, outcome: u8, latency_us: u64 },
+    /// A decoder reconstructed `slot` of coding group `group`.
+    Decode { group: u64, slot: u64 },
+    /// A fault-plan mutation. `kind` is a [`FaultKind`] byte; `arg` is
+    /// the window in microseconds for `FailFor`, the phantom-flow count
+    /// for `Degrade`, 0 otherwise.
+    Fault { instance: u64, kind: u8, arg: u64 },
+    /// A control-plane reconfiguration. `verb` is a [`ReconfigVerb`]
+    /// byte; `shard` the target (0 for fleet-wide verbs).
+    Reconfig { verb: u8, shard: u64 },
+    /// Admission control turned away `n` queries.
+    Reject { n: u64 },
+    /// Run footer: the resolved totals the live run reported.
+    End {
+        native: u64,
+        reconstructed: u64,
+        replica: u64,
+        defaulted: u64,
+        rejected: u64,
+        reconstructions: u64,
+        wall_us: u64,
+    },
+}
+
+/// Job classification for [`Event::Dispatch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum JobClass {
+    Data = 0,
+    Parity = 1,
+    Replica = 2,
+    Background = 3,
+}
+
+/// Fault classification for [`Event::Fault`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FaultKind {
+    /// Bounded brown-out (`FaultPlan::fail_for`); `arg` = window in us.
+    FailFor = 0,
+    /// Permanent kill (`FaultPlan::kill`).
+    Kill = 1,
+    /// Failure cleared (`FaultPlan::heal`).
+    Heal = 2,
+    /// Link degraded (`Network::degrade_link`); `arg` = phantom flows.
+    Degrade = 3,
+    /// Link restored (`Network::restore_link`).
+    Restore = 4,
+}
+
+/// Reconfiguration verbs for [`Event::Reconfig`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ReconfigVerb {
+    AddShard = 0,
+    RemoveShard = 1,
+    Drain = 2,
+    Restore = 3,
+    SetAdmission = 4,
+}
+
+/// Canonical byte for an [`Outcome`] (stable across versions).
+pub fn outcome_byte(o: Outcome) -> u8 {
+    match o {
+        Outcome::Native => 0,
+        Outcome::Reconstructed => 1,
+        Outcome::Replica => 2,
+        Outcome::Default => 3,
+    }
+}
+
+/// Inverse of [`outcome_byte`].
+pub fn byte_outcome(b: u8) -> Option<Outcome> {
+    Some(match b {
+        0 => Outcome::Native,
+        1 => Outcome::Reconstructed,
+        2 => Outcome::Replica,
+        3 => Outcome::Default,
+        _ => return None,
+    })
+}
+
+const K_START: u8 = 0;
+const K_SUBMIT: u8 = 1;
+const K_ROUTE: u8 = 2;
+const K_DISPATCH: u8 = 3;
+const K_SEAL: u8 = 4;
+const K_COMPLETE: u8 = 5;
+const K_DECODE: u8 = 6;
+const K_FAULT: u8 = 7;
+const K_RECONFIG: u8 = 8;
+const K_REJECT: u8 = 9;
+const K_END: u8 = 10;
+
+// ---------------------------------------------------------------- codec
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_varint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Decode errors. `NonCanonical` means the bytes parse but are not the
+/// encoding this writer produces (over-long varint, trailing garbage) —
+/// a journal we did not write.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum JournalError {
+    #[error("journal io: {0}")]
+    Io(String),
+    #[error("bad magic (not a PMJL journal)")]
+    BadMagic,
+    #[error("unsupported journal version {0}")]
+    BadVersion(u8),
+    #[error("truncated journal at byte {0}")]
+    Truncated(usize),
+    #[error("non-canonical encoding at byte {0}")]
+    NonCanonical(usize),
+    #[error("unknown event kind {kind} at byte {at}")]
+    UnknownKind { kind: u8, at: usize },
+    #[error("journal invariant violated: {0}")]
+    Invariant(String),
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u8(&mut self) -> Result<u8, JournalError> {
+        let b = *self.bytes.get(self.at).ok_or(JournalError::Truncated(self.at))?;
+        self.at += 1;
+        Ok(b)
+    }
+
+    fn varint(&mut self) -> Result<u64, JournalError> {
+        let start = self.at;
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift == 63 && b > 1 {
+                return Err(JournalError::NonCanonical(start));
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                // Reject over-long encodings (a continuation byte that
+                // contributed nothing): one value, one encoding.
+                if b == 0 && shift != 0 {
+                    return Err(JournalError::NonCanonical(start));
+                }
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(JournalError::NonCanonical(start));
+            }
+        }
+    }
+
+    fn str(&mut self) -> Result<String, JournalError> {
+        let len = self.varint()? as usize;
+        let end = self.at.checked_add(len).ok_or(JournalError::Truncated(self.at))?;
+        if end > self.bytes.len() {
+            return Err(JournalError::Truncated(self.at));
+        }
+        let s = std::str::from_utf8(&self.bytes[self.at..end])
+            .map_err(|_| JournalError::NonCanonical(self.at))?
+            .to_string();
+        self.at = end;
+        Ok(s)
+    }
+
+    fn done(&self) -> bool {
+        self.at >= self.bytes.len()
+    }
+}
+
+/// An event with its decoded timing context.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TimedEvent {
+    /// Absolute microseconds since the recorder epoch.
+    pub ts_us: u64,
+    /// Shard tag of the recorder clone that emitted it.
+    pub shard: u64,
+    pub event: Event,
+}
+
+fn encode_record(buf: &mut Vec<u8>, delta_us: u64, shard: u64, ev: &Event) {
+    put_varint(buf, delta_us);
+    put_varint(buf, shard);
+    match ev {
+        Event::Start { seed, mode, shards } => {
+            buf.push(K_START);
+            put_varint(buf, *seed);
+            put_str(buf, mode);
+            put_varint(buf, *shards);
+        }
+        Event::Submit { qid } => {
+            buf.push(K_SUBMIT);
+            put_varint(buf, *qid);
+        }
+        Event::Route { qid, shard } => {
+            buf.push(K_ROUTE);
+            put_varint(buf, *qid);
+            put_varint(buf, *shard);
+        }
+        Event::Dispatch { group, kind, detail, queries } => {
+            buf.push(K_DISPATCH);
+            put_varint(buf, *group);
+            buf.push(*kind);
+            put_varint(buf, *detail);
+            put_varint(buf, *queries);
+        }
+        Event::Seal { group, k, r } => {
+            buf.push(K_SEAL);
+            put_varint(buf, *group);
+            put_varint(buf, *k);
+            put_varint(buf, *r);
+        }
+        Event::Complete { qid, outcome, latency_us } => {
+            buf.push(K_COMPLETE);
+            put_varint(buf, *qid);
+            buf.push(*outcome);
+            put_varint(buf, *latency_us);
+        }
+        Event::Decode { group, slot } => {
+            buf.push(K_DECODE);
+            put_varint(buf, *group);
+            put_varint(buf, *slot);
+        }
+        Event::Fault { instance, kind, arg } => {
+            buf.push(K_FAULT);
+            put_varint(buf, *instance);
+            buf.push(*kind);
+            put_varint(buf, *arg);
+        }
+        Event::Reconfig { verb, shard } => {
+            buf.push(K_RECONFIG);
+            buf.push(*verb);
+            put_varint(buf, *shard);
+        }
+        Event::Reject { n } => {
+            buf.push(K_REJECT);
+            put_varint(buf, *n);
+        }
+        Event::End {
+            native,
+            reconstructed,
+            replica,
+            defaulted,
+            rejected,
+            reconstructions,
+            wall_us,
+        } => {
+            buf.push(K_END);
+            put_varint(buf, *native);
+            put_varint(buf, *reconstructed);
+            put_varint(buf, *replica);
+            put_varint(buf, *defaulted);
+            put_varint(buf, *rejected);
+            put_varint(buf, *reconstructions);
+            put_varint(buf, *wall_us);
+        }
+    }
+}
+
+fn decode_event(cur: &mut Cursor) -> Result<Event, JournalError> {
+    let kind = cur.u8()?;
+    Ok(match kind {
+        K_START => Event::Start {
+            seed: cur.varint()?,
+            mode: cur.str()?,
+            shards: cur.varint()?,
+        },
+        K_SUBMIT => Event::Submit { qid: cur.varint()? },
+        K_ROUTE => Event::Route { qid: cur.varint()?, shard: cur.varint()? },
+        K_DISPATCH => Event::Dispatch {
+            group: cur.varint()?,
+            kind: cur.u8()?,
+            detail: cur.varint()?,
+            queries: cur.varint()?,
+        },
+        K_SEAL => Event::Seal { group: cur.varint()?, k: cur.varint()?, r: cur.varint()? },
+        K_COMPLETE => Event::Complete {
+            qid: cur.varint()?,
+            outcome: cur.u8()?,
+            latency_us: cur.varint()?,
+        },
+        K_DECODE => Event::Decode { group: cur.varint()?, slot: cur.varint()? },
+        K_FAULT => Event::Fault {
+            instance: cur.varint()?,
+            kind: cur.u8()?,
+            arg: cur.varint()?,
+        },
+        K_RECONFIG => Event::Reconfig { verb: cur.u8()?, shard: cur.varint()? },
+        K_REJECT => Event::Reject { n: cur.varint()? },
+        K_END => Event::End {
+            native: cur.varint()?,
+            reconstructed: cur.varint()?,
+            replica: cur.varint()?,
+            defaulted: cur.varint()?,
+            rejected: cur.varint()?,
+            reconstructions: cur.varint()?,
+            wall_us: cur.varint()?,
+        },
+        other => return Err(JournalError::UnknownKind { kind: other, at: cur.at - 1 }),
+    })
+}
+
+/// Decode a journal into its timed event sequence (header validated,
+/// canonicality *not* asserted — [`replay`] does that).
+pub fn decode(bytes: &[u8]) -> Result<Vec<TimedEvent>, JournalError> {
+    if bytes.len() < 5 || bytes[..4] != MAGIC {
+        return Err(JournalError::BadMagic);
+    }
+    if bytes[4] != VERSION {
+        return Err(JournalError::BadVersion(bytes[4]));
+    }
+    let mut cur = Cursor { bytes, at: 5 };
+    let mut out = Vec::new();
+    let mut ts = 0u64;
+    while !cur.done() {
+        let delta = cur.varint()?;
+        let shard = cur.varint()?;
+        ts += delta;
+        out.push(TimedEvent { ts_us: ts, shard, event: decode_event(&mut cur)? });
+    }
+    Ok(out)
+}
+
+/// FNV-1a digest of a journal's bytes — what the CI replay lane diffs.
+pub fn digest(bytes: &[u8]) -> u64 {
+    fnv1a(bytes)
+}
+
+// ------------------------------------------------------------- recorder
+
+struct WriterState {
+    buf: Vec<u8>,
+    last_ts_us: u64,
+    finished: bool,
+    events: u64,
+}
+
+struct RecorderInner {
+    epoch: Instant,
+    state: Mutex<WriterState>,
+}
+
+/// Cheap-clone handle onto a shared journal writer. The default
+/// ([`Recorder::disabled`]) records nothing and costs one branch per
+/// hook, so every serving surface carries one unconditionally.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<RecorderInner>>,
+    shard: u64,
+}
+
+impl fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            Some(_) => write!(f, "Recorder(shard={})", self.shard),
+            None => write!(f, "Recorder(disabled)"),
+        }
+    }
+}
+
+impl Recorder {
+    /// A recorder that drops everything (the default on every config).
+    pub fn disabled() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Start a live journal: writes the header and the [`Event::Start`]
+    /// record. `seed`/`mode` are the run's seeding contract; `shards`
+    /// the starting fleet width (1 for a bare session).
+    pub fn start(seed: u64, mode: &str, shards: u64) -> Recorder {
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        let rec = Recorder {
+            inner: Some(Arc::new(RecorderInner {
+                epoch: Instant::now(),
+                state: Mutex::new(WriterState {
+                    buf,
+                    last_ts_us: 0,
+                    finished: false,
+                    events: 0,
+                }),
+            })),
+            shard: 0,
+        };
+        rec.record(&Event::Start { seed, mode: mode.to_string(), shards });
+        rec
+    }
+
+    /// Whether events will actually be written. Hot paths check this
+    /// before building event payloads.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// A clone tagged with a shard id: events it records carry `shard`
+    /// in their framing. The sharded tier hands each shard session a
+    /// tagged clone of one underlying writer.
+    pub fn tagged(&self, shard: u64) -> Recorder {
+        Recorder { inner: self.inner.clone(), shard }
+    }
+
+    /// Append one event. Timestamps are taken under the writer lock, so
+    /// the log's deltas are non-negative by construction even with many
+    /// threads recording.
+    pub fn record(&self, ev: &Event) {
+        let Some(inner) = &self.inner else { return };
+        let mut st = inner.state.lock().unwrap();
+        if st.finished {
+            return;
+        }
+        let ts = inner.epoch.elapsed().as_micros() as u64;
+        let ts = ts.max(st.last_ts_us);
+        let delta = ts - st.last_ts_us;
+        st.last_ts_us = ts;
+        st.events += 1;
+        encode_record(&mut st.buf, delta, self.shard, ev);
+    }
+
+    /// Events recorded so far.
+    pub fn events(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.state.lock().unwrap().events)
+    }
+
+    /// Write the [`Event::End`] footer from a finished run's result and
+    /// return the complete journal bytes. Idempotent: later calls (and
+    /// later `record`s) are no-ops returning the sealed bytes.
+    pub fn finish(&self, res: &RunResult) -> Vec<u8> {
+        self.finish_totals(&EndTotals::of(res))
+    }
+
+    /// [`Recorder::finish`] from explicit totals (fleet-merged results).
+    pub fn finish_totals(&self, t: &EndTotals) -> Vec<u8> {
+        let Some(inner) = &self.inner else { return Vec::new() };
+        {
+            let st = inner.state.lock().unwrap();
+            if st.finished {
+                return st.buf.clone();
+            }
+        }
+        self.record(&Event::End {
+            native: t.native,
+            reconstructed: t.reconstructed,
+            replica: t.replica,
+            defaulted: t.defaulted,
+            rejected: t.rejected,
+            reconstructions: t.reconstructions,
+            wall_us: t.wall_us,
+        });
+        let mut st = inner.state.lock().unwrap();
+        st.finished = true;
+        st.buf.clone()
+    }
+
+    /// Finish and write the journal to a file.
+    pub fn finish_to_file(&self, path: &str, res: &RunResult) -> Result<(), JournalError> {
+        let bytes = self.finish(res);
+        std::fs::write(path, bytes).map_err(|e| JournalError::Io(e.to_string()))
+    }
+}
+
+/// The resolved totals carried by [`Event::End`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EndTotals {
+    pub native: u64,
+    pub reconstructed: u64,
+    pub replica: u64,
+    pub defaulted: u64,
+    pub rejected: u64,
+    pub reconstructions: u64,
+    pub wall_us: u64,
+}
+
+impl EndTotals {
+    pub fn of(res: &RunResult) -> EndTotals {
+        EndTotals {
+            native: res.metrics.native,
+            reconstructed: res.metrics.reconstructed,
+            replica: res.metrics.replica,
+            defaulted: res.metrics.defaulted,
+            rejected: res.metrics.rejected,
+            reconstructions: res.reconstructions,
+            wall_us: res.wall.as_micros() as u64,
+        }
+    }
+}
+
+// --------------------------------------------------------------- replay
+
+/// What [`replay`] proved about a journal.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// The run's seed, from [`Event::Start`].
+    pub seed: u64,
+    /// The redundancy mode name, from [`Event::Start`].
+    pub mode: String,
+    /// Records interpreted (including Start/End).
+    pub events: u64,
+    /// Queries submitted across all shards.
+    pub submits: u64,
+    /// Outcome totals recomputed from the event stream — verified equal
+    /// to the recorded [`Event::End`] footer.
+    pub totals: EndTotals,
+    /// Submitted queries with no terminal event (a run cut short; zero
+    /// for drained runs).
+    pub leaked: u64,
+    /// Coding groups sealed / decoder reconstructions observed.
+    pub seals: u64,
+    pub decodes: u64,
+    /// Fault / reconfiguration events observed.
+    pub faults: u64,
+    pub reconfigs: u64,
+    /// The re-encoded journal — byte-identical to the input (verified).
+    pub journal: Vec<u8>,
+    /// [`digest`] of `journal`.
+    pub digest: u64,
+}
+
+/// Deterministically re-execute a journal's event stream: validate the
+/// serving path's causal invariants, recompute the outcome totals,
+/// check them against the recorded footer, and re-encode the stream
+/// byte-identically. See the module docs for why replay interprets the
+/// log rather than re-running the threaded simulation.
+pub fn replay(bytes: &[u8]) -> Result<ReplayReport, JournalError> {
+    let events = decode(bytes)?;
+    let inv = |msg: String| JournalError::Invariant(msg);
+
+    let Some(first) = events.first() else {
+        return Err(inv("empty journal (no Start)".into()));
+    };
+    let Event::Start { seed, mode, .. } = &first.event else {
+        return Err(inv("journal does not begin with Start".into()));
+    };
+
+    // (shard, qid) -> still pending. The shard tag scopes session-local
+    // query ids, which restart from zero in every shard session.
+    let mut pending: HashMap<(u64, u64), ()> = HashMap::new();
+    let mut totals = EndTotals::default();
+    let mut submits = 0u64;
+    let mut seals = 0u64;
+    let mut decodes = 0u64;
+    let mut faults = 0u64;
+    let mut reconfigs = 0u64;
+    let mut footer: Option<EndTotals> = None;
+
+    for (i, te) in events.iter().enumerate() {
+        if footer.is_some() {
+            return Err(inv(format!("event after End at record {i}")));
+        }
+        match &te.event {
+            Event::Start { .. } => {
+                if i != 0 {
+                    return Err(inv(format!("second Start at record {i}")));
+                }
+            }
+            Event::Submit { qid } => {
+                if pending.insert((te.shard, *qid), ()).is_some() {
+                    return Err(inv(format!(
+                        "duplicate submit of query {qid} on shard {}",
+                        te.shard
+                    )));
+                }
+                submits += 1;
+            }
+            Event::Complete { qid, outcome, .. } => {
+                if pending.remove(&(te.shard, *qid)).is_none() {
+                    return Err(inv(format!(
+                        "completion of unknown or already-resolved query {qid} on shard {}",
+                        te.shard
+                    )));
+                }
+                match byte_outcome(*outcome) {
+                    Some(Outcome::Native) => totals.native += 1,
+                    Some(Outcome::Reconstructed) => totals.reconstructed += 1,
+                    Some(Outcome::Replica) => totals.replica += 1,
+                    Some(Outcome::Default) => totals.defaulted += 1,
+                    None => return Err(inv(format!("unknown outcome byte {outcome}"))),
+                }
+            }
+            Event::Reject { n } => totals.rejected += n,
+            Event::Seal { k, r, .. } => {
+                if *k == 0 {
+                    return Err(inv(format!("group sealed with k=0 at record {i}")));
+                }
+                seals += 1;
+                let _ = r;
+            }
+            Event::Decode { .. } => decodes += 1,
+            Event::Fault { .. } => faults += 1,
+            Event::Reconfig { .. } => reconfigs += 1,
+            Event::Route { .. } | Event::Dispatch { .. } => {}
+            Event::End {
+                native,
+                reconstructed,
+                replica,
+                defaulted,
+                rejected,
+                reconstructions,
+                wall_us,
+            } => {
+                footer = Some(EndTotals {
+                    native: *native,
+                    reconstructed: *reconstructed,
+                    replica: *replica,
+                    defaulted: *defaulted,
+                    rejected: *rejected,
+                    reconstructions: *reconstructions,
+                    wall_us: *wall_us,
+                });
+            }
+        }
+    }
+
+    let Some(f) = footer else {
+        return Err(inv("journal does not end with End".into()));
+    };
+    // The recomputed outcome totals must equal what the live run
+    // reported — this is the "replay reproduces the RunResult" check.
+    if (f.native, f.reconstructed, f.replica, f.defaulted, f.rejected)
+        != (
+            totals.native,
+            totals.reconstructed,
+            totals.replica,
+            totals.defaulted,
+            totals.rejected,
+        )
+    {
+        return Err(inv(format!(
+            "footer totals (native={} reconstructed={} replica={} defaulted={} rejected={}) \
+             disagree with replayed events (native={} reconstructed={} replica={} \
+             defaulted={} rejected={})",
+            f.native,
+            f.reconstructed,
+            f.replica,
+            f.defaulted,
+            f.rejected,
+            totals.native,
+            totals.reconstructed,
+            totals.replica,
+            totals.defaulted,
+            totals.rejected,
+        )));
+    }
+    totals.reconstructions = f.reconstructions;
+    totals.wall_us = f.wall_us;
+
+    // Re-encode with recorded timestamps; the canonical codec makes
+    // this byte-identical to any journal this writer produced.
+    let mut out = Vec::with_capacity(bytes.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    let mut last = 0u64;
+    for te in &events {
+        encode_record(&mut out, te.ts_us - last, te.shard, &te.event);
+        last = te.ts_us;
+    }
+    if out != bytes {
+        return Err(JournalError::NonCanonical(0));
+    }
+
+    let digest = digest(&out);
+    Ok(ReplayReport {
+        seed: *seed,
+        mode: mode.clone(),
+        events: events.len() as u64,
+        submits,
+        totals,
+        leaked: pending.len() as u64,
+        seals,
+        decodes,
+        faults,
+        reconfigs,
+        journal: out,
+        digest,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample_events(rng: &mut Pcg64, n: usize) -> Vec<Event> {
+        let mut evs = Vec::new();
+        for qid in 0..n as u64 {
+            evs.push(Event::Submit { qid });
+        }
+        for qid in 0..n as u64 {
+            evs.push(Event::Complete {
+                qid,
+                outcome: (rng.below(4)) as u8,
+                latency_us: rng.below(1_000_000),
+            });
+        }
+        evs
+    }
+
+    fn record_all(evs: &[Event]) -> (Recorder, Vec<u8>) {
+        let rec = Recorder::start(42, "parm", 1);
+        for e in evs {
+            rec.record(e);
+        }
+        let mut totals = EndTotals::default();
+        for e in evs {
+            if let Event::Complete { outcome, .. } = e {
+                match byte_outcome(*outcome).unwrap() {
+                    Outcome::Native => totals.native += 1,
+                    Outcome::Reconstructed => totals.reconstructed += 1,
+                    Outcome::Replica => totals.replica += 1,
+                    Outcome::Default => totals.defaulted += 1,
+                }
+            }
+        }
+        let bytes = rec.finish_totals(&totals);
+        (rec, bytes)
+    }
+
+    #[test]
+    fn varint_roundtrip_canonical() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..2000 {
+            let v = rng.next_u64() >> (rng.below(64) as u32);
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut cur = Cursor { bytes: &buf, at: 0 };
+            assert_eq!(cur.varint().unwrap(), v);
+            assert!(cur.done());
+        }
+        // Over-long encodings are rejected: 0x80 0x00 is 0 in two bytes.
+        let mut cur = Cursor { bytes: &[0x80, 0x00], at: 0 };
+        assert!(matches!(cur.varint(), Err(JournalError::NonCanonical(_))));
+    }
+
+    #[test]
+    fn event_codec_roundtrip() {
+        let evs = vec![
+            Event::Start { seed: 0xDEAD, mode: "cross-shard".into(), shards: 4 },
+            Event::Submit { qid: 17 },
+            Event::Route { qid: (3 << 32) | 17, shard: 3 },
+            Event::Dispatch { group: 2, kind: JobClass::Parity as u8, detail: 1, queries: 4 },
+            Event::Seal { group: 2, k: 3, r: 2 },
+            Event::Complete { qid: 17, outcome: 1, latency_us: 1234 },
+            Event::Decode { group: 2, slot: 1 },
+            Event::Fault { instance: 5, kind: FaultKind::Kill as u8, arg: 0 },
+            Event::Reconfig { verb: ReconfigVerb::Drain as u8, shard: 2 },
+            Event::Reject { n: 3 },
+            Event::End {
+                native: 1,
+                reconstructed: 2,
+                replica: 3,
+                defaulted: 4,
+                rejected: 5,
+                reconstructions: 6,
+                wall_us: 7,
+            },
+        ];
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        for (i, e) in evs.iter().enumerate() {
+            encode_record(&mut buf, i as u64 * 10, (i % 3) as u64, e);
+        }
+        let back = decode(&buf).unwrap();
+        assert_eq!(back.len(), evs.len());
+        for (te, e) in back.iter().zip(&evs) {
+            assert_eq!(&te.event, e);
+        }
+        // Timestamps accumulate the deltas.
+        assert_eq!(back[2].ts_us, 30);
+    }
+
+    #[test]
+    fn recorded_journal_replays_byte_identical() {
+        let mut rng = Pcg64::new(99);
+        let evs = sample_events(&mut rng, 50);
+        let (_rec, bytes) = record_all(&evs);
+        let r1 = replay(&bytes).unwrap();
+        assert_eq!(r1.journal, bytes, "replay re-encodes byte-identically");
+        let r2 = replay(&r1.journal).unwrap();
+        assert_eq!(r2.journal, r1.journal, "replay is idempotent");
+        assert_eq!(r1.digest, r2.digest);
+        assert_eq!(r1.submits, 50);
+        assert_eq!(r1.leaked, 0);
+        assert_eq!(r1.seed, 42);
+        assert_eq!(r1.mode, "parm");
+    }
+
+    #[test]
+    fn replay_rejects_causality_violations() {
+        // Complete without submit.
+        let rec = Recorder::start(1, "parm", 1);
+        rec.record(&Event::Complete { qid: 9, outcome: 0, latency_us: 1 });
+        let bytes = rec.finish_totals(&EndTotals { native: 1, ..EndTotals::default() });
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+
+        // Duplicate submit.
+        let rec = Recorder::start(1, "parm", 1);
+        rec.record(&Event::Submit { qid: 4 });
+        rec.record(&Event::Submit { qid: 4 });
+        let bytes = rec.finish_totals(&EndTotals::default());
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+
+        // Double completion.
+        let rec = Recorder::start(1, "parm", 1);
+        rec.record(&Event::Submit { qid: 4 });
+        rec.record(&Event::Complete { qid: 4, outcome: 0, latency_us: 1 });
+        rec.record(&Event::Complete { qid: 4, outcome: 0, latency_us: 1 });
+        let bytes = rec.finish_totals(&EndTotals { native: 2, ..EndTotals::default() });
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+    }
+
+    #[test]
+    fn replay_rejects_footer_mismatch() {
+        let rec = Recorder::start(1, "parm", 1);
+        rec.record(&Event::Submit { qid: 0 });
+        rec.record(&Event::Complete { qid: 0, outcome: 0, latency_us: 10 });
+        // Footer claims a reconstruction that never happened.
+        let bytes = rec.finish_totals(&EndTotals { reconstructed: 1, ..EndTotals::default() });
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+    }
+
+    #[test]
+    fn shard_tags_scope_query_ids() {
+        // Two shards both submit qid 0 — distinct queries, no clash.
+        let rec = Recorder::start(5, "cross-shard", 2);
+        let s0 = rec.tagged(0);
+        let s1 = rec.tagged(1);
+        s0.record(&Event::Submit { qid: 0 });
+        s1.record(&Event::Submit { qid: 0 });
+        s0.record(&Event::Complete { qid: 0, outcome: 0, latency_us: 5 });
+        s1.record(&Event::Complete { qid: 0, outcome: 1, latency_us: 9 });
+        let bytes = rec.finish_totals(&EndTotals {
+            native: 1,
+            reconstructed: 1,
+            ..EndTotals::default()
+        });
+        let rep = replay(&bytes).unwrap();
+        assert_eq!(rep.submits, 2);
+        assert_eq!((rep.totals.native, rep.totals.reconstructed), (1, 1));
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let rec = Recorder::disabled();
+        assert!(!rec.enabled());
+        rec.record(&Event::Submit { qid: 1 });
+        assert_eq!(rec.events(), 0);
+        assert!(rec.finish_totals(&EndTotals::default()).is_empty());
+    }
+
+    #[test]
+    fn finish_is_idempotent_and_seals() {
+        let rec = Recorder::start(3, "rateless", 1);
+        rec.record(&Event::Submit { qid: 0 });
+        rec.record(&Event::Complete { qid: 0, outcome: 0, latency_us: 2 });
+        let a = rec.finish_totals(&EndTotals { native: 1, ..EndTotals::default() });
+        // Post-finish records are dropped; a second finish returns the
+        // same sealed bytes.
+        rec.record(&Event::Submit { qid: 1 });
+        let b = rec.finish_totals(&EndTotals { native: 7, ..EndTotals::default() });
+        assert_eq!(a, b);
+        assert!(replay(&a).is_ok());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert_eq!(decode(b"nope"), Err(JournalError::BadMagic));
+        let mut v = MAGIC.to_vec();
+        v.push(99);
+        assert_eq!(decode(&v), Err(JournalError::BadVersion(99)));
+        let mut v = MAGIC.to_vec();
+        v.push(VERSION);
+        v.extend_from_slice(&[0, 0, 42]); // delta 0, shard 0, unknown kind 42
+        assert!(matches!(decode(&v), Err(JournalError::UnknownKind { kind: 42, .. })));
+        let mut v = MAGIC.to_vec();
+        v.push(VERSION);
+        v.push(0x80); // truncated varint
+        assert!(matches!(decode(&v), Err(JournalError::Truncated(_))));
+    }
+}

@@ -51,6 +51,10 @@
 //! - [`metrics`] carries both aggregation surfaces: cumulative
 //!   [`metrics::RunMetrics`] for a whole run and the sliding
 //!   [`metrics::LatencyWindow`] behind every live snapshot.
+//! - [`journal`] is the deterministic record/replay substrate: a binary,
+//!   delta-encoded event log ([`journal::Recorder`]) every surface above
+//!   can write into, replayable byte-identically with
+//!   [`journal::replay`] (`parm replay` on the CLI).
 //!
 //! The thread-and-channel map of the whole stack is drawn in
 //! `docs/ARCHITECTURE.md`.
@@ -63,6 +67,7 @@ pub mod cross_shard;
 pub mod decoder;
 pub mod encoder;
 pub mod frontend;
+pub mod journal;
 pub mod metrics;
 pub mod scheme;
 pub mod service;

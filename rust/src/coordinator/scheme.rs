@@ -255,6 +255,15 @@ pub trait RedundancyScheme: Send {
     fn telemetry(&self) -> Option<SchemeTelemetry> {
         None
     }
+
+    /// Join the session's serving-path journal
+    /// ([`crate::coordinator::journal`]): schemes that manage coding
+    /// groups record their [`Seal`](crate::coordinator::journal::Event::Seal)
+    /// and [`Decode`](crate::coordinator::journal::Event::Decode) events
+    /// through the handed recorder. The default drops it — correct for
+    /// schemes with no group state worth journaling (replication and the
+    /// no-redundancy baselines).
+    fn attach_recorder(&mut self, _recorder: crate::coordinator::journal::Recorder) {}
 }
 
 impl Mode {
@@ -317,6 +326,8 @@ pub struct ParmScheme {
     /// Data completions that raced ahead of their group's registration
     /// (only ever for the open group; drained when it seals).
     orphans: HashMap<u64, Vec<Completion>>,
+    /// Serving-path journal (disabled unless the session attached one).
+    recorder: crate::coordinator::journal::Recorder,
 }
 
 impl ParmScheme {
@@ -330,6 +341,7 @@ impl ParmScheme {
             accum: Vec::new(),
             next_group: 0,
             orphans: HashMap::new(),
+            recorder: crate::coordinator::journal::Recorder::disabled(),
         }
     }
 
@@ -347,6 +359,15 @@ impl ParmScheme {
             _ => return,
         };
         for sr in res.resolved {
+            if sr.reconstructed {
+                self.recorder.record(&crate::coordinator::journal::Event::Decode {
+                    group: match c.kind {
+                        JobKind::Data { group, .. } | JobKind::Parity { group, .. } => group,
+                        _ => 0,
+                    },
+                    slot: sr.slot as u64,
+                });
+            }
             out.push(Resolution {
                 query_ids: sr.query_ids,
                 at,
@@ -392,6 +413,11 @@ impl RedundancyScheme for ParmScheme {
             // Seal the coding group: register, encode, dispatch parities.
             let ids: Vec<Vec<u64>> = self.accum.iter().map(|(i, _)| i.clone()).collect();
             self.tracker.register(gid, ids);
+            self.recorder.record(&crate::coordinator::journal::Event::Seal {
+                group: gid,
+                k: self.k as u64,
+                r: self.encoders.len() as u64,
+            });
             self.next_group += 1;
             let inputs: Vec<&crate::tensor::Tensor> =
                 self.accum.iter().map(|(_, t)| t).collect();
@@ -453,6 +479,10 @@ impl RedundancyScheme for ParmScheme {
 
     fn reconstructions(&self) -> u64 {
         self.tracker.reconstructions
+    }
+
+    fn attach_recorder(&mut self, recorder: crate::coordinator::journal::Recorder) {
+        self.recorder = recorder;
     }
 }
 

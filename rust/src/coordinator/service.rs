@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 use crate::cluster::hardware::Profile;
 use crate::coordinator::encoder::Encoder;
 use crate::coordinator::frontend::AdmissionPolicy;
+use crate::coordinator::journal::Recorder;
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::session::ServiceBuilder;
 use crate::runtime::engine::Executable;
@@ -123,6 +124,13 @@ pub struct ServiceConfig {
     /// Length of the live sliding-window metrics aggregator (see
     /// [`crate::coordinator::session::ServiceHandle::window_snapshot`]).
     pub metrics_window: Duration,
+    /// Serving-path event journal ([`crate::coordinator::journal`]).
+    /// Disabled by default; hand a live [`Recorder`] to capture every
+    /// submit/dispatch/seal/complete/decode/fault/reconfig event for
+    /// deterministic replay. Cloning the config clones the handle — the
+    /// sharded tier re-tags per-shard clones so one journal records the
+    /// whole fleet.
+    pub recorder: Recorder,
 }
 
 impl ServiceConfig {
@@ -144,6 +152,7 @@ impl ServiceConfig {
             modeled_execution: true,
             admission: AdmissionPolicy::Unbounded,
             metrics_window: Duration::from_secs(10),
+            recorder: Recorder::disabled(),
         }
     }
 }

@@ -43,6 +43,7 @@ use crate::cluster::faults::FaultPlan;
 use crate::cluster::network::{Network, ShuffleGen};
 use crate::cluster::tenancy::Tenancy;
 use crate::coordinator::batcher::{Batcher, PendingQuery, SealedBatch};
+use crate::coordinator::journal::{outcome_byte, Event, JobClass, Recorder};
 use crate::coordinator::metrics::{LatencyWindow, Outcome, RunMetrics, WindowSnapshot};
 use crate::coordinator::scheme::{RedundancyScheme, Resolution, SchemeTelemetry, Target};
 use crate::coordinator::service::{measure_service, ModelSet, RunResult, ServiceConfig};
@@ -104,7 +105,8 @@ impl ServiceBuilder {
         let ServiceBuilder { cfg, scheme } = self;
         let started = Instant::now();
         let mut rng = Pcg64::new(cfg.seed);
-        let scheme = match scheme {
+        let recorder = cfg.recorder.clone();
+        let mut scheme = match scheme {
             Some(s) => s,
             None => {
                 anyhow::ensure!(
@@ -117,10 +119,16 @@ impl ServiceBuilder {
         };
 
         // ---- cluster substrate ----
+        // Mode-instantiated and injected schemes alike join the session's
+        // journal; the default hook is a no-op for schemes that keep no
+        // group state worth recording.
+        scheme.attach_recorder(recorder.clone());
         let extra = scheme.extra_instances(cfg.m);
         let total_instances = cfg.m + extra;
         let network = Network::new(total_instances, cfg.profile);
-        let faults = FaultPlan::new(total_instances);
+        // Every fault lands in the journal regardless of who injected it
+        // (scripted harness, scheduled injector, or a manual kill).
+        let faults = FaultPlan::new_recorded(total_instances, recorder.clone());
         let sample = Tensor::batch(&vec![sample_query.clone(); cfg.batch_size.max(1)])?;
 
         // Per-pool execution mode: calibrate a service-time model from the
@@ -252,6 +260,7 @@ impl ServiceBuilder {
             // randomness (tenancy, shuffles, pools, then arrivals) stays
             // one continuous seeded sequence as in the seed's Service::run.
             rng,
+            recorder,
         })
     }
 }
@@ -326,6 +335,8 @@ pub struct ServiceHandle {
     env: Arc<WorkerEnv>,
     /// Continuation of the builder's seeded stream (open-loop arrivals).
     rng: Pcg64,
+    /// Serving-path journal (disabled unless the config carried one).
+    recorder: Recorder,
 }
 
 impl ServiceHandle {
@@ -384,6 +395,14 @@ impl ServiceHandle {
         self.faults.clone()
     }
 
+    /// The session's link-contention model (the same instance the
+    /// workers consult). Lets chaos harnesses degrade links
+    /// ([`Network::degrade_link`]) with the same reach `fault_plan`
+    /// gives them over hard failures.
+    pub fn network(&self) -> Arc<Network> {
+        self.env.network.clone()
+    }
+
     /// Submit one query; returns its id. The query joins the current
     /// batch and is dispatched per the scheme when the batch seals (or on
     /// the batch timeout — serviced by `poll`/`drain`).
@@ -393,6 +412,7 @@ impl ServiceHandle {
         self.submitted += 1;
         let arrived = Instant::now();
         self.pending.insert(id, arrived);
+        self.recorder.record(&Event::Submit { qid: id });
         if let Some(sealed) = self.batcher.offer(PendingQuery { id, input, arrived }) {
             self.dispatch_sealed(sealed);
         }
@@ -444,6 +464,7 @@ impl ServiceHandle {
         }
         self.metrics.record_rejected(n);
         self.window.record_rejects(n, Instant::now());
+        self.recorder.record(&Event::Reject { n });
     }
 
     /// Block until every submitted query has resolved (flushing any
@@ -563,6 +584,51 @@ impl ServiceHandle {
         }
     }
 
+    /// Drive a recorded or generated [`Trace`] through this handle:
+    /// arrivals at the trace's own offsets (scaled by `time_scale`, so
+    /// compressed experiments replay compressed), query tensors drawn by
+    /// the trace's `query_idx`. The open-loop contract matches
+    /// [`ServiceHandle::run_open_loop`]: arrivals never wait for
+    /// completions; completions fold in between arrivals. Does not
+    /// drain.
+    pub fn run_trace(&mut self, queries: &[Tensor], trace: &crate::workload::trace::Trace) {
+        self.run_trace_scaled(queries, trace, 1.0);
+    }
+
+    /// [`ServiceHandle::run_trace`] with an explicit time-compression
+    /// factor on the trace's arrival offsets (1.0 = as recorded).
+    pub fn run_trace_scaled(
+        &mut self,
+        queries: &[Tensor],
+        trace: &crate::workload::trace::Trace,
+        time_scale: f64,
+    ) {
+        assert!(!queries.is_empty(), "trace replay needs at least one query tensor");
+        let start = Instant::now();
+        for (i, &offset) in trace.arrivals.iter().enumerate() {
+            let due = start + Duration::from_secs_f64(offset.max(0.0) * time_scale);
+            loop {
+                self.pump(None);
+                let now = Instant::now();
+                if now >= due {
+                    break;
+                }
+                let mut wake = due;
+                if let Some(d) = self.next_deadline() {
+                    if d < wake {
+                        wake = d;
+                    }
+                }
+                let now = Instant::now();
+                if wake > now {
+                    std::thread::sleep(wake - now);
+                }
+            }
+            let qi = trace.query_idx.get(i).copied().unwrap_or(i);
+            self.submit(queries[qi % queries.len()].clone());
+        }
+    }
+
     /// Process due batches, available completions, and SLO expirations.
     /// `wait`: block up to this long for the first completion.
     fn pump(&mut self, wait: Option<Duration>) {
@@ -607,6 +673,25 @@ impl ServiceHandle {
         }
         if let Some(pools) = &self.pools {
             for (target, job) in plan.jobs {
+                if self.recorder.enabled() {
+                    use crate::runtime::instance::JobKind;
+                    let (group, kind, detail) = match job.kind {
+                        JobKind::Data { group, slot } => (group, JobClass::Data, slot as u64),
+                        JobKind::Parity { group, r_index } => {
+                            (group, JobClass::Parity, r_index as u64)
+                        }
+                        JobKind::Replica { group, slot } => {
+                            (group, JobClass::Replica, slot as u64)
+                        }
+                        JobKind::Background => (0, JobClass::Background, 0),
+                    };
+                    self.recorder.record(&Event::Dispatch {
+                        group,
+                        kind: kind as u8,
+                        detail,
+                        queries: job.query_ids.len() as u64,
+                    });
+                }
                 pools.dispatch(target, job);
             }
         }
@@ -627,6 +712,13 @@ impl ServiceHandle {
                 self.metrics.record(arrived, r.at, r.outcome);
                 self.window.record(r.outcome, latency, r.at);
                 self.resolved_count += 1;
+                // Inside the dedup branch: the journal sees exactly one
+                // terminal event per query, the invariant replay checks.
+                self.recorder.record(&Event::Complete {
+                    qid: id,
+                    outcome: outcome_byte(r.outcome),
+                    latency_us: latency.as_micros() as u64,
+                });
                 self.resolved_out.push_back(Resolved { id, outcome: r.outcome, latency });
             }
         }
@@ -646,6 +738,11 @@ impl ServiceHandle {
             self.metrics.record_default(slo);
             self.window.record(Outcome::Default, slo, now);
             self.resolved_count += 1;
+            self.recorder.record(&Event::Complete {
+                qid: id,
+                outcome: outcome_byte(Outcome::Default),
+                latency_us: slo.as_micros() as u64,
+            });
             self.resolved_out.push_back(Resolved {
                 id,
                 outcome: Outcome::Default,

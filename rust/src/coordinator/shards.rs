@@ -407,6 +407,10 @@ struct ShardShared {
     router: RwLock<ShardRouter>,
     global_backlog: Option<usize>,
     next_client: AtomicU64,
+    /// Base (untagged) serving-path journal handle; clients record
+    /// routing decisions through it, shards record through per-shard
+    /// tagged clones.
+    recorder: crate::coordinator::journal::Recorder,
     /// Every live client's weight home (weights move on drain/restore,
     /// legs grow on add_shard). Weak: the strong references live in the
     /// `ShardedClient` clones, so a dropped client's home is pruned on
@@ -472,6 +476,9 @@ struct ShardSpawner {
 impl ShardSpawner {
     fn spawn(&mut self, s: usize) -> anyhow::Result<ServingFrontend> {
         let mut shard_cfg = self.cfg.clone();
+        // Session-local query ids restart at zero in every shard: the
+        // per-shard tag is what keeps them distinct in the journal.
+        shard_cfg.recorder = self.cfg.recorder.tagged(s as u64);
         if s > 0 {
             shard_cfg.seed = splitmix64(self.base_seed ^ ((s as u64) << 40));
             // One scheduled fault must not fire in lockstep across
@@ -573,6 +580,7 @@ impl ShardedFrontend {
         for s in 0..spec.shards {
             slots.push(ShardSlot::Live(spawner.spawn(s)?));
         }
+        let recorder = spawner.cfg.recorder.clone();
         Ok(ShardedFrontend {
             slots: RwLock::new(slots),
             spawner: Mutex::new(spawner),
@@ -580,6 +588,7 @@ impl ShardedFrontend {
                 router: RwLock::new(ShardRouter::new(spec.shards, spec.vnodes)),
                 global_backlog: spec.global_backlog,
                 next_client: AtomicU64::new(0),
+                recorder,
                 homes: Mutex::new(Vec::new()),
             }),
         })
@@ -829,6 +838,18 @@ impl ShardedFrontend {
         }
     }
 
+    /// One live shard's link-contention model (`None` for retired
+    /// shards) — the scriptable network-chaos surface.
+    pub fn network(&self, shard: usize) -> Option<Arc<crate::cluster::network::Network>> {
+        self.slots.read().unwrap()[shard].live().map(ServingFrontend::network)
+    }
+
+    /// The tier's base journal handle (what the control plane records
+    /// reconfiguration events through).
+    pub fn recorder(&self) -> crate::coordinator::journal::Recorder {
+        self.shared.recorder.clone()
+    }
+
     /// Summed admission-load estimate across every live shard (what the
     /// global offered-load cap bounds).
     pub fn load(&self) -> usize {
@@ -963,6 +984,12 @@ impl ShardedClient {
             return Err(SubmitError::Closed);
         };
         let fid = leg.submit(input)?;
+        if self.shared.recorder.enabled() {
+            self.shared.recorder.record(&crate::coordinator::journal::Event::Route {
+                qid: tag(shard, fid),
+                shard: shard as u64,
+            });
+        }
         Ok(tag(shard, fid))
     }
 
@@ -1124,6 +1151,9 @@ impl CrossShardFrontend {
         // Wire the parity channel before any shard can seal a group.
         let (ptx, prx) = mpsc::channel();
         state.set_parity_sender(ptx.clone());
+        // Fleet-level Seal/Decode events carry the base (untagged)
+        // journal handle; per-shard events are tagged by the spawner.
+        state.set_recorder(cfg.recorder.clone());
         let tier = {
             let st = state.clone();
             ShardedFrontend::start_with(cfg.clone(), spec, models, sample_query, move |s| {
@@ -1235,6 +1265,17 @@ impl CrossShardFrontend {
     /// One shard's ring state (see [`ShardedFrontend::shard_state`]).
     pub fn shard_state(&self, shard: usize) -> &'static str {
         self.tier.shard_state(shard)
+    }
+
+    /// One live data shard's link-contention model (see
+    /// [`ShardedFrontend::network`]).
+    pub fn network(&self, shard: usize) -> Option<Arc<crate::cluster::network::Network>> {
+        self.tier.network(shard)
+    }
+
+    /// The fleet's base journal handle (see [`ShardedFrontend::recorder`]).
+    pub fn recorder(&self) -> crate::coordinator::journal::Recorder {
+        self.tier.recorder()
     }
 
     /// Permanently kill one deployed instance of one data shard.

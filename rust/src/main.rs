@@ -13,6 +13,9 @@
 //!                               its admin socket (status, drain, restore,
 //!                               add-shard, remove-shard, set-admission,
 //!                               telemetry, recommend)
+//!   replay                    — re-execute a serving-path journal recorded
+//!                               with `serve --record` and verify it
+//!                               (byte-identical re-encode, outcome totals)
 //!   table1                    — the toy coded-computation example
 //!
 //! Every paper figure has a dedicated bench (`cargo bench --bench …`);
@@ -41,11 +44,12 @@ fn main() -> anyhow::Result<()> {
         "serve" => cmd_serve(rest),
         "admin" => cmd_admin(rest),
         "experiment" => cmd_experiment(rest),
+        "replay" => cmd_replay(rest),
         "table1" => cmd_table1(),
         _ => {
             println!(
                 "parm — Parity Models prediction serving\n\n\
-                 usage: parm <list|accuracy|serve|admin|experiment|table1> [options]\n\
+                 usage: parm <list|accuracy|serve|admin|experiment|replay|table1> [options]\n\
                  run `parm <cmd> --help` for per-command options"
             );
             Ok(())
@@ -167,6 +171,18 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             "SLO in ms (0 = none; stragglers past it get default predictions; \
              slo-aware admission sheds at this p99)",
         )
+        .opt(
+            "scenario",
+            "",
+            "replace live Poisson pacing with a named workload scenario: \
+             poisson | diurnal | flash-crowd | zipf | multi-tenant-burst",
+        )
+        .opt(
+            "record",
+            "",
+            "record the serving-path event journal to this file \
+             (re-execute and verify it with `parm replay`)",
+        )
         .flag("tenancy", "enable light multitenancy instead of shuffles");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -268,6 +284,38 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         "" => None,
         path => Some(path.to_string()),
     };
+    let record = match a.get("record") {
+        "" => None,
+        path => Some(path.to_string()),
+    };
+    if record.is_some() {
+        // Arm the serving-path journal before any tier spawns so the
+        // recorder handle propagates to every shard session.
+        cfg.recorder = parm::coordinator::journal::Recorder::start(
+            cfg.seed,
+            a.get("mode"),
+            shards.max(1) as u64,
+        );
+    }
+    let drive = match a.get("scenario") {
+        "" => Drive::Paced { n: a.get_u64("queries"), rate, clients },
+        name => {
+            let trace = parm::workload::scenario::generate(
+                name,
+                cfg.seed,
+                a.get_u64("queries") as usize,
+                rate,
+                source.queries.len(),
+            )
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario {name:?}; the catalogue has: {}",
+                    parm::workload::scenario::names().join(", ")
+                )
+            })?;
+            Drive::Trace { name: name.to_string(), trace }
+        }
+    };
     if matches!(cfg.mode, Mode::CrossShard { .. }) {
         if shards < k {
             anyhow::bail!(
@@ -288,10 +336,9 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             spec,
             &models,
             &source,
-            a.get_u64("queries"),
-            rate,
-            clients,
+            &drive,
             admin_socket.as_deref(),
+            record.as_deref(),
         );
     }
     if shards > 1 {
@@ -308,10 +355,9 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             spec,
             &models,
             &source,
-            a.get_u64("queries"),
-            rate,
-            clients,
+            &drive,
             admin_socket.as_deref(),
+            record.as_deref(),
         );
     }
     if admin_socket.is_some() {
@@ -319,15 +365,92 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     }
     // A bare session enforces no admission policy (see ServiceConfig
     // docs), so any bounding policy routes through the frontend — even
-    // with a single client.
-    if clients == 1 && cfg.admission == AdmissionPolicy::Unbounded {
+    // with a single client. Recording and scenario traces also route
+    // through the frontend: it exposes the run record the journal
+    // footer needs and replays arbitrary arrival schedules.
+    if clients == 1
+        && cfg.admission == AdmissionPolicy::Unbounded
+        && record.is_none()
+        && matches!(drive, Drive::Paced { .. })
+    {
         let row =
             latency::run_point(&cfg, &models, &source, a.get_u64("queries"), rate, a.get("mode"))?;
         println!("{}", parm::experiments::latency::LatencyRow::header());
         println!("{}", row.line());
         return Ok(());
     }
-    serve_multi_client(cfg, &models, &source, a.get_u64("queries"), rate, clients)
+    serve_multi_client(cfg, &models, &source, &drive, record.as_deref())
+}
+
+/// How a serve subcommand offers load: `clients` paced-Poisson submitter
+/// threads splitting `n` and `rate` evenly, or a scenario trace replayed
+/// on one open-loop submitter at its recorded offsets.
+enum Drive {
+    Paced { n: u64, rate: f64, clients: usize },
+    Trace { name: String, trace: parm::workload::trace::Trace },
+}
+
+impl Drive {
+    fn describe(&self) -> String {
+        match self {
+            Drive::Paced { n, rate, clients } => {
+                format!("{n} queries from {clients} paced clients at {rate:.0} qps total")
+            }
+            Drive::Trace { name, trace } => format!(
+                "{} arrivals from scenario {name:?} (nominal {:.0} qps, CV\u{b2} {:.2})",
+                trace.len(),
+                trace.rate_qps,
+                trace.stats().1,
+            ),
+        }
+    }
+}
+
+/// Dispatch a [`Drive`] through whichever client type the serving tier
+/// mints.
+fn drive_clients<C: PacedClient>(
+    drive: &Drive,
+    seed: u64,
+    source: &QuerySource,
+    mut mint: impl FnMut() -> C,
+) -> Vec<C> {
+    match drive {
+        Drive::Paced { n, rate, clients } => {
+            drive_paced_clients(*n, *rate, *clients, seed, source, mint)
+        }
+        Drive::Trace { trace, .. } => vec![drive_trace_client(trace, source, mint())],
+    }
+}
+
+/// Replay a trace's arrival schedule through one client: offer each
+/// query at its recorded offset (open loop — arrivals never wait for
+/// completions), then wait out everything that was accepted.
+fn drive_trace_client<C: PacedClient>(
+    trace: &parm::workload::trace::Trace,
+    source: &QuerySource,
+    client: C,
+) -> C {
+    use std::time::{Duration, Instant};
+    let start = Instant::now();
+    let mut accepted = 0u64;
+    for (i, &offset) in trace.arrivals.iter().enumerate() {
+        let due = start + Duration::from_secs_f64(offset.max(0.0));
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let query = &source.queries[trace.query_idx[i] % source.queries.len()];
+        if client.offer(query.clone()) {
+            accepted += 1;
+        }
+        client.sweep(); // keep the inbox from growing
+    }
+    while client.resolved() < accepted {
+        if !client.wait_next(Duration::from_secs(10)) {
+            break;
+        }
+    }
+    client
 }
 
 /// The submit/poll/next/stats surface the paced CLI driver needs — the
@@ -429,23 +552,19 @@ fn serve_sharded(
     spec: ShardSpec,
     models: &parm::coordinator::service::ModelSet,
     source: &QuerySource,
-    n: u64,
-    rate: f64,
-    clients: usize,
+    drive: &Drive,
     admin_socket: Option<&str>,
+    record: Option<&str>,
 ) -> anyhow::Result<()> {
     use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
     let seed = cfg.seed;
+    let recorder = cfg.recorder.clone();
     let tier = ShardedFrontend::start(cfg, spec, models, &source.queries[0])?;
-    println!(
-        "serving {n} queries from {clients} clients over {} shards at {rate:.0} qps total",
-        tier.shards()
-    );
+    println!("serving {} over {} shards", drive.describe(), tier.shards());
     let plane = std::sync::Arc::new(ControlPlane::new(Fleet::Sharded(tier)));
     let _admin = bind_admin(&plane, admin_socket)?;
-    let done = drive_paced_clients(n, rate, clients, seed, source, || {
-        plane.client().expect("fleet is live")
-    });
+    let done =
+        drive_clients(drive, seed, source, || plane.client().expect("fleet is live"));
     println!(
         "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10}",
         "client", "shard", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)"
@@ -472,6 +591,13 @@ fn serve_sharded(
         FleetRunResult::Sharded(res) => res,
         FleetRunResult::CrossShard(_) => unreachable!("plane owns a sharded fleet"),
     };
+    if let Some(path) = record {
+        recorder.finish_to_file(path, &res.merged)?;
+        println!(
+            "journal: {} events to {path} — verify with `parm replay {path}`",
+            recorder.events()
+        );
+    }
     for (s, r) in res.per_shard.iter().enumerate() {
         println!(
             "shard {s}: resolved={} rejected={} reconstructions={} dropped_jobs={}",
@@ -502,25 +628,25 @@ fn serve_cross_shard(
     spec: ShardSpec,
     models: &parm::coordinator::service::ModelSet,
     source: &QuerySource,
-    n: u64,
-    rate: f64,
-    clients: usize,
+    drive: &Drive,
     admin_socket: Option<&str>,
+    record: Option<&str>,
 ) -> anyhow::Result<()> {
     use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
     let seed = cfg.seed;
+    let recorder = cfg.recorder.clone();
     let tier = CrossShardFrontend::start(cfg, spec, models, &source.queries[0])?;
     println!(
-        "serving {n} queries from {clients} clients over {} shards at {rate:.0} qps total \
-         (cross-shard coding groups; shared parity pools of {} instances each)",
+        "serving {} over {} shards (cross-shard coding groups; shared parity pools of {} \
+         instances each)",
+        drive.describe(),
         tier.shards(),
         tier.parity_pool_size(),
     );
     let plane = std::sync::Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
     let _admin = bind_admin(&plane, admin_socket)?;
-    let done = drive_paced_clients(n, rate, clients, seed, source, || {
-        plane.client().expect("fleet is live")
-    });
+    let done =
+        drive_clients(drive, seed, source, || plane.client().expect("fleet is live"));
     // Tail groups get parity protection before the wait-out.
     plane.flush_open_groups()?;
     println!(
@@ -558,6 +684,13 @@ fn serve_cross_shard(
         FleetRunResult::CrossShard(res) => res,
         FleetRunResult::Sharded(_) => unreachable!("plane owns a cross-shard fleet"),
     };
+    if let Some(path) = record {
+        recorder.finish_to_file(path, &res.fleet.merged)?;
+        println!(
+            "journal: {} events to {path} — verify with `parm replay {path}`",
+            recorder.events()
+        );
+    }
     for (s, r) in res.fleet.per_shard.iter().enumerate() {
         println!(
             "shard {s}: resolved={} rejected={} recovered={} dropped_jobs={}",
@@ -700,18 +833,15 @@ fn serve_multi_client(
     cfg: ServiceConfig,
     models: &parm::coordinator::service::ModelSet,
     source: &QuerySource,
-    n: u64,
-    rate: f64,
-    clients: usize,
+    drive: &Drive,
+    record: Option<&str>,
 ) -> anyhow::Result<()> {
     let seed = cfg.seed;
+    let recorder = cfg.recorder.clone();
     let frontend = parm::coordinator::session::ServiceBuilder::new(cfg)
         .serve(models, &source.queries[0])?;
-    println!(
-        "serving {n} queries from {clients} clients at {rate:.0} qps total (policy {:?})",
-        frontend.policy()
-    );
-    let done = drive_paced_clients(n, rate, clients, seed, source, || frontend.client());
+    println!("serving {} (policy {:?})", drive.describe(), frontend.policy());
+    let done = drive_clients(drive, seed, source, || frontend.client());
     println!(
         "{:<8} {:>9} {:>9} {:>9} {:>10} {:>10} {:>9} {:>9}",
         "client", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)", "recovered", "default"
@@ -727,6 +857,13 @@ fn serve_multi_client(
     }
     println!("\nfrontend window: {}", frontend.window().report("all-clients"));
     let res = frontend.shutdown()?;
+    if let Some(path) = record {
+        recorder.finish_to_file(path, &res)?;
+        println!(
+            "journal: {} events to {path} — verify with `parm replay {path}`",
+            recorder.events()
+        );
+    }
     let mut metrics = res.metrics;
     println!("{}", metrics.report("run total"));
     println!(
@@ -794,37 +931,82 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
     };
     if matches!(cfg.mode, Mode::CrossShard { .. }) {
         // Config validation guarantees shards >= k for this mode.
-        let clients = exp.shards.shards * 4;
+        let drive = Drive::Paced { n: exp.queries, rate, clients: exp.shards.shards * 4 };
         return serve_cross_shard(
             cfg,
             exp.shards,
             &models,
             &source,
-            exp.queries,
-            rate,
-            clients,
+            &drive,
             exp.admin_socket.as_deref(),
+            None,
         );
     }
     if exp.shards.shards > 1 {
         // Sharded experiments serve paced concurrent clients (4 per
         // shard) through the consistent-hash tier and report the merged
         // fleet record instead of a single-session latency row.
-        let clients = exp.shards.shards * 4;
+        let drive = Drive::Paced { n: exp.queries, rate, clients: exp.shards.shards * 4 };
         return serve_sharded(
             cfg,
             exp.shards,
             &models,
             &source,
-            exp.queries,
-            rate,
-            clients,
+            &drive,
             exp.admin_socket.as_deref(),
+            None,
         );
     }
     let row = latency::run_point(&cfg, &models, &source, exp.queries, rate, cfg.mode.name())?;
     println!("{}", parm::experiments::latency::LatencyRow::header());
     println!("{}", row.line());
+    Ok(())
+}
+
+fn cmd_replay(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "parm replay",
+        "re-execute a recorded serving-path journal and verify it: \
+         parm replay <journal> (record one with `parm serve --record PATH`)",
+    );
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("parm replay needs a journal path"))?;
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("read journal {path}: {e}"))?;
+    let r = parm::coordinator::journal::replay(&bytes)
+        .map_err(|e| anyhow::anyhow!("replay {path}: {e}"))?;
+    println!(
+        "replayed {path}: {} records, re-encode byte-identical (digest {:016x})",
+        r.events, r.digest
+    );
+    println!("  run:     seed={} mode={}", r.seed, r.mode);
+    println!(
+        "  queries: submitted={} native={} reconstructed={} replica={} defaulted={} \
+         rejected={} leaked={}",
+        r.submits,
+        r.totals.native,
+        r.totals.reconstructed,
+        r.totals.replica,
+        r.totals.defaulted,
+        r.totals.rejected,
+        r.leaked,
+    );
+    println!(
+        "  coding:  groups_sealed={} decodes={} reconstructions={}",
+        r.seals, r.decodes, r.totals.reconstructions
+    );
+    println!("  chaos:   faults={} reconfigs={}", r.faults, r.reconfigs);
+    println!("  wall:    {:.3}s", r.totals.wall_us as f64 / 1e6);
     Ok(())
 }
 

@@ -4,8 +4,12 @@
 //! [`QuerySource`] cycles a dataset's test split (the latency experiments
 //! draw from the Cat-v-Dog stand-in); arrival pacing itself lives in the
 //! service generator loop (`coordinator::service`), which consumes
-//! exponential inter-arrival gaps from the experiment RNG.
+//! exponential inter-arrival gaps from the experiment RNG. Recorded or
+//! generated arrival schedules are [`trace::Trace`]s; the named
+//! production-shaped generators (diurnal curves, flash crowds, Zipf
+//! tenants, correlated bursts) live in [`scenario`].
 
+pub mod scenario;
 pub mod trace;
 
 use crate::artifacts::{DatasetEntry, Labels, Manifest};

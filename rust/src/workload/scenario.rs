@@ -1,0 +1,402 @@
+//! Production-shaped scenario library: named, seeded workload
+//! generators.
+//!
+//! The paper's clients offer steady Poisson load (§5.1); production
+//! traffic does not. Each generator here produces an ordinary
+//! [`Trace`], so every scenario replays through the same machinery —
+//! `ServiceHandle::run_trace`, `parm serve --scenario`, and the
+//! record/replay journal — against every redundancy mode, with the
+//! [`FaultScript`](crate::cluster::chaos::FaultScript) chaos harness and
+//! link degradation layered on top.
+//!
+//! The catalogue:
+//!
+//! | name               | shape |
+//! |--------------------|-------|
+//! | `poisson`          | steady Poisson at the nominal rate (baseline) |
+//! | `diurnal`          | sinusoidal rate over the trace horizon (day/night curve) |
+//! | `flash-crowd`      | steady load with an 8x burst over the middle fifth |
+//! | `zipf`             | 8 tenants with Zipf(1.1) heavy-tailed per-client rates |
+//! | `multi-tenant-burst` | 4 equal tenants; twice, a correlated pair spikes 6x |
+//!
+//! All generators are pure functions of `(seed, n, rate, pool)`: the
+//! same arguments produce the same trace on every host, which is what
+//! lets the CI scenario lane smoke-run the catalogue and diff digests.
+//! Time-varying shapes are sampled by Poisson thinning — candidate
+//! arrivals at the peak rate, each kept with probability
+//! `rate(t)/peak` — so gaps stay exactly exponential conditional on the
+//! instantaneous rate.
+
+use crate::util::rng::Pcg64;
+use crate::workload::trace::Trace;
+
+/// A named generator in the scenario catalogue.
+pub struct Scenario {
+    /// Catalogue key (`parm serve --scenario NAME`).
+    pub name: &'static str,
+    /// One-line operator-facing description.
+    pub description: &'static str,
+    generate: fn(&mut Pcg64, usize, f64, usize) -> Trace,
+}
+
+impl Scenario {
+    /// Generate this scenario's trace: `n` arrivals at nominal `rate`
+    /// qps drawing from a pool of `pool` query tensors.
+    pub fn generate(&self, seed: u64, n: usize, rate: f64, pool: usize) -> Trace {
+        assert!(n > 0 && rate > 0.0 && pool > 0, "scenario needs n, rate, pool > 0");
+        let mut rng = Pcg64::new(seed);
+        (self.generate)(&mut rng, n, rate, pool)
+    }
+}
+
+/// The scenario catalogue, in documentation order.
+pub const SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "poisson",
+        description: "steady Poisson arrivals at the nominal rate (the paper's client)",
+        generate: gen_poisson,
+    },
+    Scenario {
+        name: "diurnal",
+        description: "sinusoidal diurnal load curve: rate swings +/-60% over the horizon",
+        generate: gen_diurnal,
+    },
+    Scenario {
+        name: "flash-crowd",
+        description: "flash crowd: steady load with an 8x burst over the middle fifth",
+        generate: gen_flash_crowd,
+    },
+    Scenario {
+        name: "zipf",
+        description: "8 tenants with Zipf(1.1) heavy-tailed per-client request rates",
+        generate: gen_zipf,
+    },
+    Scenario {
+        name: "multi-tenant-burst",
+        description: "4 equal tenants; twice, a correlated pair spikes 6x together",
+        generate: gen_multi_tenant_burst,
+    },
+];
+
+/// Look up a scenario by catalogue name.
+pub fn scenario(name: &str) -> Option<&'static Scenario> {
+    SCENARIOS.iter().find(|s| s.name == name)
+}
+
+/// Generate `name`'s trace, or `None` for an unknown name.
+pub fn generate(name: &str, seed: u64, n: usize, rate: f64, pool: usize) -> Option<Trace> {
+    scenario(name).map(|s| s.generate(seed, n, rate, pool))
+}
+
+/// The catalogue's names, for CLI help and error messages.
+pub fn names() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|s| s.name).collect()
+}
+
+// ------------------------------------------------------------ generators
+
+fn gen_poisson(rng: &mut Pcg64, n: usize, rate: f64, pool: usize) -> Trace {
+    Trace::poisson(rng, n, rate, pool)
+}
+
+/// Nonhomogeneous Poisson arrivals by thinning: candidates at `peak`,
+/// kept with probability `rate_at(t)/peak`. `rate_at` must never exceed
+/// `peak`.
+fn thinned_arrivals(
+    rng: &mut Pcg64,
+    n: usize,
+    peak: f64,
+    mut rate_at: impl FnMut(f64) -> f64,
+) -> Vec<f64> {
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += rng.exponential(peak);
+        let r = rate_at(t);
+        debug_assert!(r <= peak * (1.0 + 1e-9));
+        if r > 0.0 && rng.next_f64() < r / peak {
+            out.push(t);
+        }
+    }
+    out
+}
+
+fn uniform_query_idx(rng: &mut Pcg64, n: usize, pool: usize) -> Vec<usize> {
+    (0..n).map(|_| rng.below(pool as u64) as usize).collect()
+}
+
+/// Sinusoidal day/night curve: `rate * (1 + 0.6 sin(2πt/horizon))`,
+/// one full period over the expected trace horizon `n/rate`.
+fn gen_diurnal(rng: &mut Pcg64, n: usize, rate: f64, pool: usize) -> Trace {
+    const DEPTH: f64 = 0.6;
+    let horizon = n as f64 / rate;
+    let peak = rate * (1.0 + DEPTH);
+    let arrivals = thinned_arrivals(rng, n, peak, |t| {
+        rate * (1.0 + DEPTH * (2.0 * std::f64::consts::PI * t / horizon).sin())
+    });
+    let query_idx = uniform_query_idx(rng, n, pool);
+    Trace { arrivals, query_idx, client: Vec::new(), rate_qps: rate }
+}
+
+/// Steady load with a burst: 8x the nominal rate across the middle
+/// fifth of the horizon (the thundering herd after a push notification).
+fn gen_flash_crowd(rng: &mut Pcg64, n: usize, rate: f64, pool: usize) -> Trace {
+    const MULT: f64 = 8.0;
+    let horizon = n as f64 / rate;
+    let (burst_lo, burst_hi) = (0.4 * horizon, 0.6 * horizon);
+    let arrivals = thinned_arrivals(rng, n, rate * MULT, |t| {
+        if (burst_lo..burst_hi).contains(&t) {
+            rate * MULT
+        } else {
+            rate
+        }
+    });
+    let query_idx = uniform_query_idx(rng, n, pool);
+    Trace { arrivals, query_idx, client: Vec::new(), rate_qps: rate }
+}
+
+/// Zipf(s) weights for `n` ranks: `w_i ∝ 1/(i+1)^s`, normalized.
+fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    let raw: Vec<f64> = (0..n).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|w| w / total).collect()
+}
+
+/// Draw an index from a normalized weight vector.
+fn weighted_pick(rng: &mut Pcg64, weights: &[f64]) -> usize {
+    let mut u = rng.next_f64();
+    for (i, &w) in weights.iter().enumerate() {
+        if u < w {
+            return i;
+        }
+        u -= w;
+    }
+    weights.len() - 1
+}
+
+/// 8 tenants whose request rates follow Zipf(1.1): the heaviest tenant
+/// offers ~6x the lightest's load. The superposition of per-tenant
+/// Poisson streams is Poisson at the total rate with each arrival
+/// attributed by weight, which is how it is sampled. Each tenant favors
+/// its own slice of the query pool (hot-set locality).
+fn gen_zipf(rng: &mut Pcg64, n: usize, rate: f64, pool: usize) -> Trace {
+    const TENANTS: usize = 8;
+    const SKEW: f64 = 1.1;
+    let weights = zipf_weights(TENANTS, SKEW);
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity(n);
+    let mut query_idx = Vec::with_capacity(n);
+    let mut client = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exponential(rate);
+        arrivals.push(t);
+        let c = weighted_pick(rng, &weights);
+        client.push(c as u32);
+        // A tenant's queries cluster on its own eighth of the pool, with
+        // a 1-in-4 spill to the whole pool.
+        let idx = if pool >= TENANTS && rng.below(4) != 0 {
+            let slice = pool / TENANTS;
+            (c * slice + rng.below(slice as u64) as usize) % pool
+        } else {
+            rng.below(pool as u64) as usize
+        };
+        query_idx.push(idx);
+    }
+    Trace { arrivals, query_idx, client, rate_qps: rate }
+}
+
+/// 4 equal tenants; at two seeded instants a random pair of tenants
+/// spikes to 6x its base rate for a tenth of the horizon — the
+/// correlated burst case cross-shard coding sizes its r for.
+fn gen_multi_tenant_burst(rng: &mut Pcg64, n: usize, rate: f64, pool: usize) -> Trace {
+    const TENANTS: usize = 4;
+    const MULT: f64 = 6.0;
+    const BURSTS: usize = 2;
+    let horizon = n as f64 / rate;
+    let base = rate / TENANTS as f64;
+
+    // Seeded burst windows: [start, start + horizon/10) each, and the
+    // pair of tenants spiking in each.
+    let mut windows = Vec::with_capacity(BURSTS);
+    for b in 0..BURSTS {
+        // Burst b starts somewhere in its own half of the horizon, so
+        // the two bursts never merge into one long plateau.
+        let half = horizon / BURSTS as f64;
+        let start = b as f64 * half + rng.next_f64() * (half - horizon / 10.0).max(0.0);
+        let pair = rng.choose_distinct(TENANTS, 2);
+        windows.push((start, start + horizon / 10.0, pair));
+    }
+
+    let tenant_rate = |tenant: usize, t: f64| -> f64 {
+        let bursting = windows
+            .iter()
+            .any(|(lo, hi, pair)| t >= *lo && t < *hi && pair.contains(&tenant));
+        if bursting {
+            base * MULT
+        } else {
+            base
+        }
+    };
+    let total_rate =
+        |t: f64| -> f64 { (0..TENANTS).map(|c| tenant_rate(c, t)).sum() };
+    // Peak: both members of a pair bursting at once.
+    let peak = base * (TENANTS as f64 - 2.0 + 2.0 * MULT);
+
+    let mut t = 0.0;
+    let mut arrivals = Vec::with_capacity(n);
+    let mut client = Vec::with_capacity(n);
+    while arrivals.len() < n {
+        t += rng.exponential(peak);
+        let total = total_rate(t);
+        if rng.next_f64() < total / peak {
+            arrivals.push(t);
+            // Attribute the arrival by instantaneous tenant rate.
+            let mut u = rng.next_f64() * total;
+            let mut picked = TENANTS - 1;
+            for c in 0..TENANTS {
+                let r = tenant_rate(c, t);
+                if u < r {
+                    picked = c;
+                    break;
+                }
+                u -= r;
+            }
+            client.push(picked as u32);
+        }
+    }
+    let query_idx = uniform_query_idx(rng, n, pool);
+    Trace { arrivals, query_idx, client, rate_qps: rate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_shape(t: &Trace, n: usize, pool: usize) {
+        assert_eq!(t.len(), n);
+        assert_eq!(t.query_idx.len(), n);
+        assert!(t.arrivals.windows(2).all(|w| w[1] >= w[0]), "monotone");
+        assert!(t.arrivals.iter().all(|a| a.is_finite() && *a >= 0.0));
+        assert!(t.query_idx.iter().all(|&i| i < pool));
+        if !t.client.is_empty() {
+            assert_eq!(t.client.len(), n);
+        }
+    }
+
+    #[test]
+    fn every_scenario_generates_valid_deterministic_traces() {
+        for s in SCENARIOS {
+            let a = s.generate(7, 400, 200.0, 16);
+            let b = s.generate(7, 400, 200.0, 16);
+            assert_eq!(a, b, "{} must be pure in its seed", s.name);
+            check_shape(&a, 400, 16);
+            let c = s.generate(8, 400, 200.0, 16);
+            assert_ne!(a.arrivals, c.arrivals, "{} must vary by seed", s.name);
+            // Every scenario's trace must survive the strict JSON
+            // round-trip exactly — that is what makes it replayable.
+            let back = Trace::from_json_text(&a.to_json().to_string()).unwrap();
+            assert_eq!(back, a, "{} round-trip", s.name);
+        }
+    }
+
+    #[test]
+    fn catalogue_lookup() {
+        assert!(scenario("diurnal").is_some());
+        assert!(scenario("no-such").is_none());
+        assert!(generate("no-such", 1, 10, 10.0, 4).is_none());
+        assert_eq!(names().len(), SCENARIOS.len());
+        let t = generate("flash-crowd", 1, 100, 100.0, 8).unwrap();
+        assert_eq!(t.len(), 100);
+    }
+
+    #[test]
+    fn diurnal_rate_actually_varies() {
+        let t = scenario("diurnal").unwrap().generate(3, 4000, 400.0, 8);
+        // Quarter 1 rides the sine peak, quarter 3 the trough: the peak
+        // quarter must hold substantially more arrivals.
+        let horizon = t.arrivals.last().copied().unwrap();
+        let q = |lo: f64, hi: f64| {
+            t.arrivals
+                .iter()
+                .filter(|&&a| a >= lo * horizon && a < hi * horizon)
+                .count() as f64
+        };
+        let peak_quarter = q(0.0, 0.25);
+        let trough_quarter = q(0.5, 0.75);
+        assert!(
+            peak_quarter > 1.5 * trough_quarter,
+            "peak {peak_quarter} vs trough {trough_quarter}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_is_burstier_than_poisson() {
+        let flash = scenario("flash-crowd").unwrap().generate(5, 3000, 300.0, 8);
+        let steady = scenario("poisson").unwrap().generate(5, 3000, 300.0, 8);
+        let (_, cv2_flash) = flash.stats();
+        let (_, cv2_steady) = steady.stats();
+        assert!(
+            cv2_flash > cv2_steady + 0.5,
+            "flash CV² {cv2_flash} vs steady {cv2_steady}"
+        );
+    }
+
+    #[test]
+    fn zipf_tenants_are_heavy_tailed() {
+        let t = scenario("zipf").unwrap().generate(11, 8000, 500.0, 64);
+        assert_eq!(t.n_clients(), 8);
+        let mut counts = vec![0usize; 8];
+        for &c in &t.client {
+            counts[c as usize] += 1;
+        }
+        // Zipf(1.1) over 8 ranks: tenant 0 carries ~32% of the load,
+        // tenant 7 ~3%. Allow generous sampling slack.
+        assert!(counts[0] > 4 * counts[7], "{counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn multi_tenant_bursts_are_correlated() {
+        let t = scenario("multi-tenant-burst")
+            .unwrap()
+            .generate(13, 6000, 600.0, 8);
+        assert_eq!(t.n_clients(), 4);
+        // Sliding tenth-of-horizon windows: in the densest window, the
+        // two bursting tenants together must dominate (correlated spike),
+        // and that window must be denser than the sparsest by a wide
+        // margin.
+        let horizon = t.arrivals.last().copied().unwrap();
+        let win = horizon / 10.0;
+        let mut best: (usize, f64) = (0, 0.0);
+        let mut worst = usize::MAX;
+        for step in 0..90 {
+            let lo = step as f64 * horizon / 100.0;
+            let cnt = t
+                .arrivals
+                .iter()
+                .filter(|&&a| a >= lo && a < lo + win)
+                .count();
+            if cnt > best.0 {
+                best = (cnt, lo);
+            }
+            worst = worst.min(cnt);
+        }
+        assert!(best.0 as f64 > 2.0 * worst as f64, "{best:?} vs {worst}");
+        // Inside the densest window, two tenants carry most arrivals.
+        let (lo, hi) = (best.1, best.1 + win);
+        let mut counts = vec![0usize; 4];
+        for (i, &a) in t.arrivals.iter().enumerate() {
+            if a >= lo && a < hi {
+                counts[t.client[i] as usize] += 1;
+            }
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let top2: usize = sorted[..2].iter().sum();
+        let total: usize = sorted.iter().sum();
+        assert!(
+            top2 as f64 > 0.7 * total as f64,
+            "burst not concentrated on a tenant pair: {counts:?}"
+        );
+    }
+}

@@ -5,6 +5,14 @@
 //! arrival offsets (seconds) plus the query index each arrival drew —
 //! replaying one reproduces a run's offered load exactly, independent of
 //! the RNG, which also makes A/B comparisons across schemes noise-free.
+//! Named production-shaped generators (diurnal curves, flash crowds,
+//! Zipf tenants) live in [`crate::workload::scenario`]; they all produce
+//! this type.
+//!
+//! Parsing is strict: a malformed document — missing arrays, non-numeric
+//! entries, non-monotone offsets, length mismatches — is a
+//! [`TraceError::Invalid`], never a silently truncated trace. A trace
+//! that loads is a trace that replays.
 
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -15,6 +23,11 @@ pub struct Trace {
     pub arrivals: Vec<f64>,
     /// Index into the query pool per arrival.
     pub query_idx: Vec<usize>,
+    /// Client (tenant) attribution per arrival — empty for single-client
+    /// traces; when present, the same length as `arrivals`. Multi-tenant
+    /// scenario generators fill this so replays can fan arrivals out over
+    /// per-tenant frontend clients.
+    pub client: Vec<u32>,
     /// Nominal rate the trace was generated at (metadata).
     pub rate_qps: f64,
 }
@@ -40,7 +53,7 @@ impl Trace {
             arrivals.push(t);
             query_idx.push(rng.below(pool_size as u64) as usize);
         }
-        Trace { arrivals, query_idx, rate_qps: rate }
+        Trace { arrivals, query_idx, client: Vec::new(), rate_qps: rate }
     }
 
     pub fn len(&self) -> usize {
@@ -51,39 +64,52 @@ impl Trace {
         self.arrivals.is_empty()
     }
 
-    /// Offered-load summary: mean inter-arrival gap and burstiness (CV²).
+    /// Client attribution of arrival `i` (0 for single-client traces).
+    pub fn client_of(&self, i: usize) -> u32 {
+        self.client.get(i).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct clients the trace attributes arrivals to (1
+    /// for single-client traces).
+    pub fn n_clients(&self) -> usize {
+        self.client.iter().copied().max().map_or(1, |m| m as usize + 1)
+    }
+
+    /// Offered-load summary: mean inter-arrival gap and burstiness
+    /// (CV², variance over squared mean of the gaps). A trace whose
+    /// arrivals all land on the same instant has zero mean gap; its CV²
+    /// is reported as 0 (perfectly regular), not NaN.
     pub fn stats(&self) -> (f64, f64) {
         if self.arrivals.len() < 2 {
             return (f64::NAN, f64::NAN);
         }
         let gaps: Vec<f64> = self.arrivals.windows(2).map(|w| w[1] - w[0]).collect();
         let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        if mean <= 0.0 {
+            // All gaps zero (or numerically so): var/mean² would be 0/0.
+            return (mean, 0.0);
+        }
         let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
         (mean, var / (mean * mean))
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("rate_qps", self.rate_qps)
             .set("arrivals", self.arrivals.clone())
-            .set("query_idx", self.query_idx.iter().map(|&i| i as f64).collect::<Vec<_>>())
+            .set("query_idx", self.query_idx.iter().map(|&i| i as f64).collect::<Vec<_>>());
+        if !self.client.is_empty() {
+            j = j.set("client", self.client.iter().map(|&c| c as f64).collect::<Vec<_>>());
+        }
+        j
     }
 
     pub fn from_json_text(text: &str) -> Result<Trace, TraceError> {
         let j = Json::parse(text)?;
-        let arrivals: Vec<f64> = j
-            .at(&["arrivals"])
-            .as_arr()
-            .ok_or_else(|| TraceError::Invalid("missing arrivals".into()))?
-            .iter()
-            .filter_map(Json::as_f64)
-            .collect();
-        let query_idx: Vec<usize> = j
-            .at(&["query_idx"])
-            .as_arr()
-            .ok_or_else(|| TraceError::Invalid("missing query_idx".into()))?
-            .iter()
-            .filter_map(Json::as_usize)
+        let arrivals = float_array(&j, "arrivals")?;
+        let query_idx: Vec<usize> = index_array(&j, "query_idx")?
+            .into_iter()
+            .map(|v| v as usize)
             .collect();
         if arrivals.len() != query_idx.len() {
             return Err(TraceError::Invalid(format!(
@@ -95,9 +121,26 @@ impl Trace {
         if arrivals.windows(2).any(|w| w[1] < w[0]) {
             return Err(TraceError::Invalid("arrivals must be non-decreasing".into()));
         }
+        let client: Vec<u32> = if j.at(&["client"]).as_arr().is_some() {
+            let c = index_array(&j, "client")?;
+            if c.len() != arrivals.len() {
+                return Err(TraceError::Invalid(format!(
+                    "client ({}) vs arrivals ({}) length mismatch",
+                    c.len(),
+                    arrivals.len()
+                )));
+            }
+            if let Some(&big) = c.iter().find(|&&v| v > u64::from(u32::MAX)) {
+                return Err(TraceError::Invalid(format!("client id {big} out of range")));
+            }
+            c.into_iter().map(|v| v as u32).collect()
+        } else {
+            Vec::new()
+        };
         Ok(Trace {
             arrivals,
             query_idx,
+            client,
             rate_qps: j.at(&["rate_qps"]).as_f64().unwrap_or(f64::NAN),
         })
     }
@@ -108,8 +151,45 @@ impl Trace {
     }
 
     pub fn load(path: &str) -> Result<Trace, TraceError> {
-        Ok(Self::from_json_text(&std::fs::read_to_string(path)?)?)
+        Self::from_json_text(&std::fs::read_to_string(path)?)
     }
+}
+
+/// `key` as an array of finite floats — any missing array or
+/// non-numeric / non-finite entry is [`TraceError::Invalid`], never a
+/// silent skip.
+fn float_array(j: &Json, key: &str) -> Result<Vec<f64>, TraceError> {
+    let arr = j
+        .at(&[key])
+        .as_arr()
+        .ok_or_else(|| TraceError::Invalid(format!("missing {key}")))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| match v.as_f64() {
+            Some(f) if f.is_finite() => Ok(f),
+            Some(f) => Err(TraceError::Invalid(format!("{key}[{i}] is not finite ({f})"))),
+            None => Err(TraceError::Invalid(format!("{key}[{i}] is not a number"))),
+        })
+        .collect()
+}
+
+/// `key` as an array of non-negative integers (rejects fractions and
+/// negatives — `as usize` would silently saturate them).
+fn index_array(j: &Json, key: &str) -> Result<Vec<u64>, TraceError> {
+    let floats = float_array(j, key)?;
+    floats
+        .into_iter()
+        .enumerate()
+        .map(|(i, f)| {
+            if f < 0.0 || f.fract() != 0.0 || f >= 9e15 {
+                Err(TraceError::Invalid(format!(
+                    "{key}[{i}] is not a non-negative integer ({f})"
+                )))
+            } else {
+                Ok(f as u64)
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -142,16 +222,83 @@ mod tests {
     }
 
     #[test]
+    fn seeded_roundtrip_is_exact_for_100_random_traces() {
+        // Json prints floats with Rust's shortest-round-trip Display, so
+        // serialize → parse must reproduce every trace *exactly* (full
+        // PartialEq, not approximate) — including the optional client
+        // column.
+        let mut rng = Pcg64::new(0xC0FFEE);
+        for trial in 0..100 {
+            let n = 1 + rng.below(200) as usize;
+            let rate = 0.5 + rng.below(10_000) as f64 / 10.0;
+            let pool = 1 + rng.below(64) as usize;
+            let mut t = Trace::poisson(&mut rng, n, rate, pool);
+            if trial % 2 == 1 {
+                let tenants = 1 + rng.below(8) as u32;
+                t.client = (0..n).map(|_| rng.below(u64::from(tenants)) as u32).collect();
+            }
+            let text = t.to_json().to_string();
+            let back = Trace::from_json_text(&text)
+                .unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+            assert_eq!(back, t, "trial {trial} round-trip not exact");
+        }
+    }
+
+    #[test]
     fn rejects_malformed() {
+        // Missing arrays.
         assert!(Trace::from_json_text("{}").is_err());
+        assert!(Trace::from_json_text(r#"{"arrivals": [0.5]}"#).is_err());
+        // Non-monotone offsets.
         assert!(Trace::from_json_text(
             r#"{"arrivals": [1, 0], "query_idx": [0, 0]}"#
         )
         .is_err());
+        // Length mismatches.
         assert!(Trace::from_json_text(
             r#"{"arrivals": [1], "query_idx": [0, 1]}"#
         )
         .is_err());
+        assert!(Trace::from_json_text(
+            r#"{"arrivals": [1, 2], "query_idx": [0, 1], "client": [0]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric_entries_instead_of_truncating() {
+        // filter_map-style parsing would silently drop the string and
+        // yield a 1-entry trace; strict parsing must refuse.
+        for bad in [
+            r#"{"arrivals": [0.5, "x"], "query_idx": [0, 1]}"#,
+            r#"{"arrivals": [0.5, null], "query_idx": [0, 1]}"#,
+            r#"{"arrivals": [0.5, 1.0], "query_idx": [0, "x"]}"#,
+            r#"{"arrivals": [0.5, 1.0], "query_idx": [0, -1]}"#,
+            r#"{"arrivals": [0.5, 1.0], "query_idx": [0, 1.5]}"#,
+            r#"{"arrivals": [0.5, NaN], "query_idx": [0, 1]}"#,
+            r#"{"arrivals": [0.5, 1.0], "query_idx": [0, 1], "client": [0, true]}"#,
+        ] {
+            match Trace::from_json_text(bad) {
+                Err(TraceError::Invalid(_)) => {}
+                other => panic!("{bad} should be Invalid, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stats_zero_gap_trace_is_finite() {
+        // Every arrival at the same instant: mean gap 0. CV² used to be
+        // 0/0 = NaN; it must come back 0 (a perfectly regular burst).
+        let t = Trace {
+            arrivals: vec![2.0; 8],
+            query_idx: vec![0; 8],
+            client: Vec::new(),
+            rate_qps: 1.0,
+        };
+        let (mean, cv2) = t.stats();
+        assert_eq!(mean, 0.0);
+        assert_eq!(cv2, 0.0);
+        assert!(cv2.is_finite());
     }
 
     #[test]

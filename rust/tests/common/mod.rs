@@ -1,202 +1,8 @@
-//! Deterministic fault-injection harness shared by the integration
-//! suites.
-//!
-//! Chaos used to be ad hoc per test: a sleep, then a hand-rolled
-//! `kill_instance` at whatever instant the scheduler reached. This
-//! harness makes fault timelines *data*: a seeded [`FaultScript`] of
-//! (step, action) events, where a step is the index of a submitted
-//! query — not wall time — so the same seed produces the same fault
-//! pattern relative to the traffic on every run and host. Tests drive
-//! it with one line in their submit loop:
-//!
-//! ```ignore
-//! let surface = FaultSurface::sharded(plans, m);
-//! let mut script = FaultScript::builder(seed)
-//!     .kill_shard_at(40, 1)
-//!     .straggle_at(60, 0, 1, Duration::from_millis(50))
-//!     .build();
-//! for i in 0..n {
-//!     script.apply(i, &surface);
-//!     client.submit(...);
-//! }
-//! ```
-//!
-//! Actions cover the repo's failure models: single-instance zombies
-//! (`KillInstance`), whole-fault-domain loss (`KillShard`), bounded
-//! brown-outs (`Straggle`), and correlated multi-shard bursts
-//! (`CorrelatedKill` — the case cross-shard coding sizes its r for).
+//! Shared test-harness surface: the deterministic fault-injection
+//! harness now lives in the library ([`parm::cluster::chaos`]) so
+//! examples, benches, and the `parm` CLI can script chaos too; the
+//! integration suites keep importing it from here.
 
-#![allow(dead_code)]
+#![allow(unused_imports)]
 
-use std::sync::Arc;
-use std::time::Duration;
-
-use parm::cluster::faults::FaultPlan;
-use parm::util::rng::Pcg64;
-
-/// One scripted fault.
-#[derive(Clone, Debug)]
-pub enum FaultAction {
-    /// Permanently kill one instance of one shard (undetected zombie).
-    KillInstance { shard: usize, instance: usize },
-    /// Permanently kill every instance of one shard (whole fault
-    /// domain).
-    KillShard { shard: usize },
-    /// Fail one instance for a bounded window (brown-out).
-    Straggle { shard: usize, instance: usize, dur: Duration },
-    /// Correlated burst: kill every instance of several shards at once.
-    CorrelatedKill { shards: Vec<usize> },
-}
-
-/// Where scripted faults land: the per-shard fault plans of whatever is
-/// under test (a bare session, a `ShardedFrontend`, a
-/// `CrossShardFrontend` — all expose `fault_plan(...)`), plus the
-/// instance count a whole-shard kill must cover.
-pub struct FaultSurface {
-    instances_per_shard: usize,
-    plans: Vec<Arc<FaultPlan>>,
-}
-
-impl FaultSurface {
-    /// A single-session target (shard index is always 0).
-    pub fn single(plan: Arc<FaultPlan>, instances: usize) -> FaultSurface {
-        FaultSurface { instances_per_shard: instances, plans: vec![plan] }
-    }
-
-    /// A sharded target: one fault plan per shard, `instances_per_shard`
-    /// deployed instances each (ids 0..m within each shard's plan).
-    pub fn sharded(plans: Vec<Arc<FaultPlan>>, instances_per_shard: usize) -> FaultSurface {
-        assert!(!plans.is_empty());
-        FaultSurface { instances_per_shard, plans }
-    }
-
-    pub fn shards(&self) -> usize {
-        self.plans.len()
-    }
-
-    pub fn instances_per_shard(&self) -> usize {
-        self.instances_per_shard
-    }
-
-    pub fn kill(&self, shard: usize, instance: usize) {
-        self.plans[shard].kill(instance);
-    }
-
-    pub fn fail_for(&self, shard: usize, instance: usize, dur: Duration) {
-        self.plans[shard].fail_for(instance, dur);
-    }
-
-    fn kill_shard(&self, shard: usize) {
-        for i in 0..self.instances_per_shard {
-            self.plans[shard].kill(i);
-        }
-    }
-}
-
-/// A seeded, step-indexed fault timeline. Build with
-/// [`FaultScript::builder`]; call [`FaultScript::apply`] once per
-/// submitted query with the query's index.
-pub struct FaultScript {
-    /// (step, action), sorted by step.
-    events: Vec<(u64, FaultAction)>,
-    next: usize,
-}
-
-impl FaultScript {
-    pub fn builder(seed: u64) -> FaultScriptBuilder {
-        FaultScriptBuilder { rng: Pcg64::new(seed), events: Vec::new() }
-    }
-
-    /// Fire every action due at or before `step`.
-    pub fn apply(&mut self, step: u64, surface: &FaultSurface) {
-        while self.next < self.events.len() && self.events[self.next].0 <= step {
-            match &self.events[self.next].1 {
-                FaultAction::KillInstance { shard, instance } => {
-                    surface.kill(*shard, *instance);
-                }
-                FaultAction::KillShard { shard } => surface.kill_shard(*shard),
-                FaultAction::Straggle { shard, instance, dur } => {
-                    surface.fail_for(*shard, *instance, *dur);
-                }
-                FaultAction::CorrelatedKill { shards } => {
-                    for &s in shards {
-                        surface.kill_shard(s);
-                    }
-                }
-            }
-            self.next += 1;
-        }
-    }
-
-    /// Whether every scripted action has fired.
-    pub fn done(&self) -> bool {
-        self.next >= self.events.len()
-    }
-
-    /// The scripted actions (inspection/logging).
-    pub fn events(&self) -> &[(u64, FaultAction)] {
-        &self.events
-    }
-}
-
-/// Builder for [`FaultScript`]: explicit placements plus seeded random
-/// choices (which shard dies, which shards fail together) so soak
-/// suites get diverse-but-reproducible trials from one seed.
-pub struct FaultScriptBuilder {
-    rng: Pcg64,
-    events: Vec<(u64, FaultAction)>,
-}
-
-impl FaultScriptBuilder {
-    pub fn kill_instance_at(mut self, step: u64, shard: usize, instance: usize) -> Self {
-        self.events.push((step, FaultAction::KillInstance { shard, instance }));
-        self
-    }
-
-    pub fn kill_shard_at(mut self, step: u64, shard: usize) -> Self {
-        self.events.push((step, FaultAction::KillShard { shard }));
-        self
-    }
-
-    pub fn straggle_at(
-        mut self,
-        step: u64,
-        shard: usize,
-        instance: usize,
-        dur: Duration,
-    ) -> Self {
-        self.events.push((step, FaultAction::Straggle { shard, instance, dur }));
-        self
-    }
-
-    pub fn correlated_kill_at(mut self, step: u64, shards: Vec<usize>) -> Self {
-        self.events.push((step, FaultAction::CorrelatedKill { shards }));
-        self
-    }
-
-    /// Kill one seeded-random shard out of `shards` at `step`.
-    pub fn random_shard_kill_at(mut self, step: u64, shards: usize) -> Self {
-        let s = self.rng.below(shards as u64) as usize;
-        self.events.push((step, FaultAction::KillShard { shard: s }));
-        self
-    }
-
-    /// Kill `count` seeded-random distinct shards together at `step`
-    /// (the correlated burst).
-    pub fn random_correlated_kill_at(mut self, step: u64, shards: usize, count: usize) -> Self {
-        let picked = self.rng.choose_distinct(shards, count.min(shards));
-        self.events.push((step, FaultAction::CorrelatedKill { shards: picked }));
-        self
-    }
-
-    /// A seeded step in `[lo, hi]` (for randomizing *when* a scripted
-    /// fault lands).
-    pub fn random_step(&mut self, lo: u64, hi: u64) -> u64 {
-        self.rng.range_u64(lo, hi)
-    }
-
-    pub fn build(mut self) -> FaultScript {
-        self.events.sort_by_key(|&(step, _)| step);
-        FaultScript { events: self.events, next: 0 }
-    }
-}
+pub use parm::cluster::chaos::{FaultAction, FaultScript, FaultScriptBuilder, FaultSurface};
