@@ -10,6 +10,13 @@
 //! after the burst clears both decay back — redundancy priced to the
 //! cluster's actual health, not provisioned for the worst case.
 //!
+//! The run is also followed through the session's metric registry
+//! ([`parm::telemetry`]): a [`Capture`] samples the same
+//! `parm_session_window_*` and `parm_scheme_*` gauges an operator
+//! would scrape off `--metrics-addr`, and at the end the scrape-side
+//! view must agree with the in-process one — the ramp to the ceiling
+//! is visible on both pipes.
+//!
 //! Run with: `cargo run --release --example adaptive_serve`
 //! Knobs: PARM_QUERIES (default 1500), PARM_HALFLIFE_MS (default 250).
 
@@ -20,6 +27,7 @@ use parm::cluster::hardware::GPU;
 use parm::coordinator::service::{Mode, ServiceConfig};
 use parm::coordinator::session::ServiceBuilder;
 use parm::experiments::latency;
+use parm::telemetry::series::Capture;
 use parm::util::rng::Pcg64;
 use parm::workload::QuerySource;
 
@@ -60,6 +68,12 @@ fn main() -> anyhow::Result<()> {
     // Instances 0 and 1 fail together: a two-deep straggler burst.
     cfg.fault_schedule = vec![(0, burst_at, burst_len), (1, burst_at, burst_len)];
     let mut handle = ServiceBuilder::new(cfg).build(&models, &source.queries[0])?;
+    // Shadow the live log with the operator's view: the same gauges a
+    // `/metrics` scrape serves, sampled off the session's registry.
+    let registry = handle.registry();
+    let mut cap = Capture::session(&registry, Duration::from_millis(200))
+        .with_extra("r", "parm_scheme_last_r")
+        .with_extra("unavailability", "parm_scheme_unavailability");
 
     println!(
         "{n} queries at {rate:.0} qps over ~{run_secs:.1}s; instances 0+1 fail at \
@@ -102,6 +116,7 @@ fn main() -> anyhow::Result<()> {
                     t.unavailability,
                     overhead,
                 );
+                cap.sample();
                 next_sample += sample_every;
             }
             if now >= due {
@@ -116,6 +131,8 @@ fn main() -> anyhow::Result<()> {
         handle.submit(source.queries[(i as usize) % source.queries.len()].clone());
     }
     let _ = handle.drain();
+    handle.publish_telemetry();
+    cap.sample();
     let final_t = handle.scheme_telemetry().expect("telemetry");
     let r_after_decay = final_t.last_r;
     let res = handle.shutdown();
@@ -135,6 +152,19 @@ fn main() -> anyhow::Result<()> {
         "the straggler burst must ramp r to the ceiling (max seen {max_r_seen})"
     );
     println!("✓ r ramped to {max_r_seen} during the burst");
+    // The registry watched the same burst: the gauges fold in on the
+    // session pump's cadence, so the scrape-side timeline sees the
+    // ramp too (the burst spans many fold intervals).
+    let scraped_r = cap
+        .rows()
+        .iter()
+        .filter_map(|row| row.at(&["r"]).as_f64())
+        .fold(0.0_f64, f64::max);
+    assert!(
+        scraped_r as usize >= r_max,
+        "the registry's parm_scheme_last_r must show the ramp (max {scraped_r})"
+    );
+    println!("✓ the metric registry saw the same ramp (parm_scheme_last_r peaked at {scraped_r})");
     if r_after_decay == r_min {
         println!("✓ r decayed back to the floor after the burst cleared");
     } else {

@@ -15,7 +15,11 @@
 //!           ring points vanish, in-flight queries still resolve.
 //!
 //! Along the way the example prints raw admin replies (`status`,
-//! `recommend`, `telemetry`) exactly as an operator would see them.
+//! `recommend`, `telemetry`) exactly as an operator would see them,
+//! and scrapes its own Prometheus endpoint ([`parm::telemetry::Exporter`]
+//! over the fleet's metric registry) mid-fault — the shard-state,
+//! reconfiguration-verb, and merged-window families answer live while
+//! the killed shard is being decoded around.
 //!
 //! Run with: `cargo run --release --example elastic_serve`
 //! Knobs: PARM_CLIENTS (default 10), PARM_QUERIES_PER_CLIENT (default
@@ -36,7 +40,8 @@ fn main() -> anyhow::Result<()> {
 
 #[cfg(unix)]
 mod imp {
-    use std::io::{BufRead, BufReader, Write};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{SocketAddr, TcpStream};
     use std::os::unix::net::UnixStream;
     use std::path::Path;
     use std::sync::Arc;
@@ -48,6 +53,7 @@ mod imp {
     use parm::coordinator::service::{Mode, ServiceConfig};
     use parm::coordinator::shards::{CrossShardFrontend, ShardSpec};
     use parm::experiments::latency;
+    use parm::telemetry::Exporter;
     use parm::util::json::Json;
     use parm::util::rng::Pcg64;
     use parm::workload::QuerySource;
@@ -72,6 +78,16 @@ mod imp {
             reply.trim()
         );
         Ok(parsed)
+    }
+
+    /// One Prometheus scrape, as any monitoring agent would take it.
+    fn scrape(addr: SocketAddr) -> anyhow::Result<String> {
+        let mut stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n")?;
+        let mut out = String::new();
+        stream.read_to_string(&mut out)?;
+        Ok(out)
     }
 
     /// Parity-pool re-provisioning is generational and asynchronous;
@@ -132,9 +148,16 @@ mod imp {
         let socket =
             std::env::temp_dir().join(format!("parm-elastic-serve-{}.sock", std::process::id()));
         let server = AdminServer::bind(&socket, Arc::clone(&plane))?;
+        // The operator-facing metrics pipe: the fleet's registry behind
+        // a Prometheus endpoint, with the plane's scrape-time sampler
+        // folding fresh shard/window state into every render.
+        let registry = plane.registry();
+        let sampler = plane.register_sampler();
+        let exporter = Exporter::bind("127.0.0.1:0", registry.clone())?;
+        let metrics_addr = exporter.local_addr();
         println!(
             "{clients} clients x {per} queries over {shards} shards at {rate:.0} qps; \
-             admin endpoint at {}",
+             admin endpoint at {}, metrics at http://{metrics_addr}/metrics",
             socket.display()
         );
         println!(
@@ -203,6 +226,23 @@ mod imp {
         std::thread::sleep(Duration::from_millis(600));
         let rec = admin(&socket, Json::obj().set("cmd", "recommend"))?;
         println!("t={:.1}s: recommend -> {rec}", start.elapsed().as_secs_f64());
+        let scraped = scrape(metrics_addr)?;
+        assert!(
+            scraped.contains("parm_reconfig_total{verb=\"add_shard\"}"),
+            "the scale-out verb must be on the endpoint by now"
+        );
+        println!(
+            "t={:.1}s: /metrics mid-fault (selected families):",
+            start.elapsed().as_secs_f64()
+        );
+        for line in scraped.lines().filter(|l| {
+            l.starts_with("parm_shards{")
+                || l.starts_with("parm_fleet_window_p99_ms")
+                || l.starts_with("parm_reconfig_total")
+                || l.starts_with("parm_parity_pool")
+        }) {
+            println!("    {line}");
+        }
 
         sleep_until(scale_in_at);
         let drained = admin(&socket, Json::obj().set("cmd", "drain").set("shard", added))?;
@@ -248,7 +288,16 @@ mod imp {
 
         let telemetry = admin(&socket, Json::obj().set("cmd", "telemetry"))?;
         println!("\ntelemetry -> {telemetry}");
+        // The admin view is computed from the same registry the
+        // endpoint serves; spot-check they agree on resolved totals.
+        let final_scrape = scrape(metrics_addr)?;
+        assert!(
+            final_scrape.contains("parm_fleet_window_resolved"),
+            "merged fleet window must be on the endpoint"
+        );
 
+        registry.drop_sampler(sampler);
+        exporter.shutdown();
         server.stop();
         let res = match plane.shutdown()? {
             FleetRunResult::CrossShard(res) => res,

@@ -15,6 +15,15 @@
 //! with redundancy_max >= 2, rateless recovers strictly more unavailable
 //! predictions than ParM under the same multi-instance fault plan.
 //!
+//! Each run is also sampled through the telemetry registry
+//! ([`parm::telemetry::series`]): the session's `parm_session_window_*`
+//! gauges plus the adaptive scheme's operating point (`last_r`,
+//! `unavailability`, `parity_overhead` — zeros under fixed-topology
+//! ParM, which registers no scheme gauges). The highest-intensity pair
+//! lands in `bench_out/adaptive_redundancy_{parm,rateless}_timeseries.json`,
+//! showing the rateless ramp-up across the fault and the overhead decay
+//! after it.
+//!
 //! Env knobs: PARM_BENCH_QUERIES (default 2500), PARM_BENCH_FAULTS
 //! (comma list, default "0,1,2").
 
@@ -26,6 +35,7 @@ use parm::coordinator::encoder::Encoder;
 use parm::coordinator::service::{Mode, ServiceConfig};
 use parm::coordinator::session::ServiceBuilder;
 use parm::experiments::latency;
+use parm::telemetry::series::Capture;
 use parm::util::json::Json;
 use parm::workload::QuerySource;
 
@@ -88,6 +98,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut rows: Vec<Row> = Vec::new();
+    let max_faults = intensities.iter().copied().max().unwrap_or(0);
+    let sample = Duration::from_millis(250);
     for &faults in &intensities {
         let schedule: Vec<(usize, Duration, Duration)> = (0..faults.min(M))
             .map(|i| (i, Duration::from_secs_f64(run_secs * 0.25), Duration::ZERO))
@@ -112,8 +124,23 @@ fn main() -> anyhow::Result<()> {
             cfg.fault_schedule = schedule.clone();
 
             let mut handle = ServiceBuilder::new(cfg).build(&models, &source.queries[0])?;
-            handle.run_open_loop(&source.queries, n, rate);
+            // Sample the run's timeline off the session's metric
+            // registry — the same gauges an operator would scrape.
+            let registry = handle.registry();
+            let mut cap = Capture::session(&registry, sample)
+                .with_extra("last_r", "parm_scheme_last_r")
+                .with_extra("unavailability", "parm_scheme_unavailability")
+                .with_extra("parity_overhead", "parm_scheme_parity_overhead");
+            handle.run_open_loop_observed(&source.queries, n, rate, Some(sample), &mut |_t, w| {
+                parm::telemetry::publish_window(&registry, "parm_session_window_", &[], &w);
+                cap.sample();
+            });
             let _ = handle.drain();
+            if faults == max_faults {
+                handle.publish_telemetry();
+                cap.sample();
+                cap.emit(&format!("adaptive_redundancy_{tag}_timeseries"));
+            }
             let telemetry = handle.scheme_telemetry();
             let res = handle.shutdown();
             let overhead = match telemetry {

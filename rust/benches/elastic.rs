@@ -12,8 +12,13 @@
 //! Emits `bench_out/elastic.json`: per scheme, resolved / reconstructed
 //! / defaulted counts, recovery rate, and p50/p99/p99.9 latency, plus
 //! the elastic run's event timeline (each reconfiguration step with the
-//! rolling-window p99 observed at that moment). Asserts conservation —
-//! every offered query is accounted for in both schemes — and that the
+//! rolling-window p99 observed at that moment). The timeline rows come
+//! off the fleet's metric registry via [`parm::telemetry::series`] —
+//! the same `parm_fleet_window_*` / `parm_shards` / parity-pool gauges
+//! an operator scrapes — and the continuous series (periodic samples
+//! plus the marked reconfiguration events) additionally lands in
+//! `bench_out/elastic_timeseries.json`. Asserts conservation — every
+//! offered query is accounted for in both schemes — and that the
 //! elastic fleet's parity pool tracked its target through both resizes.
 //!
 //! Env knobs: PARM_BENCH_QUERIES (default 1600).
@@ -27,6 +32,7 @@ use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
 use parm::coordinator::service::{Mode, ServiceConfig};
 use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedClient};
 use parm::experiments::latency;
+use parm::telemetry::series::Capture;
 use parm::util::json::Json;
 use parm::util::rng::Pcg64;
 use parm::workload::QuerySource;
@@ -187,52 +193,53 @@ fn main() -> anyhow::Result<()> {
         let start = Instant::now();
         let timeline = {
             let plane = Arc::clone(&plane);
+            // The sampler folds fleet state into the registry on every
+            // Capture sample — the bench timeline reads the exact gauges
+            // a concurrent /metrics scrape would see.
+            let registry = plane.registry();
+            let sampler = plane.register_sampler();
             std::thread::spawn(move || {
-                let mut events = Vec::new();
-                let mut mark = |plane: &ControlPlane, event: &str| {
-                    let w = plane.window().expect("fleet is live");
-                    events.push(
-                        Json::obj()
-                            .set("event", event)
-                            .set("t_s", start.elapsed().as_secs_f64())
-                            .set("live", plane.live_shards().expect("fleet is live"))
-                            .set(
-                                "parity_pool",
-                                plane.parity_pool_size().expect("fleet is live").unwrap_or(0),
-                            )
-                            .set("window_p99_ms", w.p99_ms)
-                            .set("window_p999_ms", w.p999_ms),
-                    );
-                };
-                let sleep_until = |at: Duration| {
-                    let now = start.elapsed();
-                    if at > now {
-                        std::thread::sleep(at - now);
+                let mut cap = Capture::fleet(&registry, Duration::from_millis(250))
+                    .with_extra_labels("live", "parm_shards", &[("state", "live")])
+                    .with_extra("parity_pool", "parm_parity_pool_size");
+                let sleep_until = |cap: &mut Capture, at: Duration| {
+                    while start.elapsed() < at {
+                        let left = at - start.elapsed();
+                        std::thread::sleep(left.min(Duration::from_millis(50)));
+                        cap.tick();
                     }
                 };
 
-                sleep_until(scale_out_at);
+                sleep_until(&mut cap, scale_out_at);
                 let added = plane.add_shard().expect("scale out");
                 assert_eq!(added, SHARDS, "append-only shard indices");
                 wait_pool(&plane, pool_for(SHARDS + 1));
-                mark(&plane, "scale-out");
+                cap.mark("scale-out");
 
-                sleep_until(kill_at);
+                sleep_until(&mut cap, kill_at);
                 for i in 0..M {
                     plane.kill_instance(VICTIM, i).expect("fleet is live");
                 }
-                mark(&plane, "kill-shard");
+                cap.mark("kill-shard");
 
-                sleep_until(scale_in_at);
+                sleep_until(&mut cap, scale_in_at);
                 assert!(plane.drain(added).expect("drain the elastic margin"));
                 plane.remove_shard(added).expect("retire the elastic margin");
                 wait_pool(&plane, pool_for(SHARDS));
-                mark(&plane, "scale-in");
-                events
+                cap.mark("scale-in");
+                registry.drop_sampler(sampler);
+                cap
             })
         };
         drive(clients, &source.queries, per, per_rate);
-        let events = timeline.join().expect("timeline thread");
+        let series = timeline.join().expect("timeline thread");
+        series.emit("elastic_timeseries");
+        let events: Vec<Json> = series
+            .rows()
+            .iter()
+            .filter(|r| r.at(&["event"]).as_str().is_some())
+            .cloned()
+            .collect();
         plane.flush_open_groups()?;
         assert_eq!(plane.shards()?, SHARDS + 1, "retired slot keeps its index");
         assert_eq!(plane.provisioned_shards()?, SHARDS, "back to the initial footprint");

@@ -65,6 +65,8 @@ use crate::coordinator::shards::{
     CrossShardFrontend, CrossShardRunResult, ReconfigError, ShardedClient,
     ShardedFrontend, ShardedRunResult,
 };
+use crate::telemetry::registry::SamplerId;
+use crate::telemetry::{publish_window, Counter, Registry};
 use crate::util::json::Json;
 
 /// The serving tier a control plane owns (either flavor exposes the
@@ -107,6 +109,57 @@ fn record_reconfig(fleet: &Fleet, verb: ReconfigVerb, shard: usize) {
     let rec = fleet_recorder(fleet);
     if rec.enabled() {
         rec.record(&Event::Reconfig { verb: verb as u8, shard: shard as u64 });
+    }
+}
+
+/// The control plane's publications into the fleet metric registry:
+/// pre-registered reconfiguration-verb counters (so every verb exports
+/// as `0` from the first scrape) and the fleet generation, which
+/// increments once per *applied* reconfiguration.
+struct ControlTelemetry {
+    registry: Registry,
+    verb_add: Counter,
+    verb_remove: Counter,
+    verb_drain: Counter,
+    verb_restore: Counter,
+    verb_admission: Counter,
+    generation: Counter,
+}
+
+impl ControlTelemetry {
+    fn new(registry: Registry) -> ControlTelemetry {
+        let verb = |v: &str| {
+            registry.counter(
+                "parm_reconfig_total",
+                "Applied fleet reconfigurations, by verb.",
+                &[("verb", v)],
+            )
+        };
+        ControlTelemetry {
+            verb_add: verb("add_shard"),
+            verb_remove: verb("remove_shard"),
+            verb_drain: verb("drain"),
+            verb_restore: verb("restore"),
+            verb_admission: verb("set_admission"),
+            generation: registry.counter(
+                "parm_fleet_generation",
+                "Fleet configuration generation (one per applied reconfiguration).",
+                &[],
+            ),
+            registry,
+        }
+    }
+
+    /// Count one applied verb and advance the fleet generation.
+    fn applied(&self, verb: ReconfigVerb) {
+        match verb {
+            ReconfigVerb::AddShard => self.verb_add.inc(),
+            ReconfigVerb::RemoveShard => self.verb_remove.inc(),
+            ReconfigVerb::Drain => self.verb_drain.inc(),
+            ReconfigVerb::Restore => self.verb_restore.inc(),
+            ReconfigVerb::SetAdmission => self.verb_admission.inc(),
+        }
+        self.generation.inc();
     }
 }
 
@@ -161,6 +214,8 @@ pub struct ControlPlane {
     /// definite order. Read-only surfaces never take it.
     ops: Mutex<()>,
     cfg: ControlPlaneConfig,
+    /// Verb counters + fleet generation in the fleet's metric registry.
+    tele: ControlTelemetry,
 }
 
 impl ControlPlane {
@@ -169,7 +224,139 @@ impl ControlPlane {
     }
 
     pub fn with_config(fleet: Fleet, cfg: ControlPlaneConfig) -> ControlPlane {
-        ControlPlane { fleet: RwLock::new(Some(fleet)), ops: Mutex::new(()), cfg }
+        let registry = match &fleet {
+            Fleet::Sharded(t) => t.registry(),
+            Fleet::CrossShard(t) => t.registry(),
+        };
+        ControlPlane {
+            fleet: RwLock::new(Some(fleet)),
+            ops: Mutex::new(()),
+            cfg,
+            tele: ControlTelemetry::new(registry),
+        }
+    }
+
+    /// The fleet's metric registry — what [`ControlPlane::publish`]
+    /// folds fleet state into and a [`crate::telemetry::Exporter`]
+    /// scrapes.
+    pub fn registry(&self) -> Registry {
+        self.tele.registry.clone()
+    }
+
+    /// Register a scrape-time sampler that folds this plane's fleet
+    /// state into the registry ([`ControlPlane::publish`]) on every
+    /// render/snapshot, so a scrape always sees fresh fleet/per-shard
+    /// windows without anyone polling. The sampler holds only a weak
+    /// reference — once the plane is dropped it degrades to a no-op
+    /// (drop it explicitly with
+    /// [`crate::telemetry::Registry::drop_sampler`] for a clean
+    /// registry).
+    pub fn register_sampler(self: &Arc<ControlPlane>) -> SamplerId {
+        let weak = Arc::downgrade(self);
+        self.tele.registry.sampler(move || {
+            if let Some(plane) = weak.upgrade() {
+                let _ = plane.publish();
+            }
+        })
+    }
+
+    /// Fold the fleet's current state into the metric registry: the
+    /// merged fleet window (`parm_fleet_window_*`), every shard's
+    /// window (`parm_shard_window_*{shard=...}`), shard counts, load,
+    /// parity-pool occupancy vs. target, and the cross-shard coding
+    /// telemetry. Runs on the caller's thread (scraper or admin
+    /// connection), touching only the same brief windows the tiers' own
+    /// read surfaces take — never the ops lock.
+    pub fn publish(&self) -> Result<(), ReconfigError> {
+        self.with_fleet(|fleet| {
+            let reg = &self.tele.registry;
+            let (shards, provisioned, live, load, rejected, merged) = match fleet {
+                Fleet::Sharded(t) => (
+                    t.shards(),
+                    t.provisioned_shards(),
+                    t.live_shards(),
+                    t.load(),
+                    t.rejected(),
+                    t.window(),
+                ),
+                Fleet::CrossShard(t) => (
+                    t.shards(),
+                    t.provisioned_shards(),
+                    t.live_shards(),
+                    t.load(),
+                    t.rejected(),
+                    t.window(),
+                ),
+            };
+            publish_window(reg, "parm_fleet_window_", &[], &merged);
+            for s in 0..shards {
+                let w = match fleet {
+                    Fleet::Sharded(t) => t.shard_window(s),
+                    Fleet::CrossShard(t) => t.shard_window(s),
+                };
+                let label = s.to_string();
+                publish_window(reg, "parm_shard_window_", &[("shard", &label)], &w);
+            }
+            let shard_gauge = |state: &str, v: usize| {
+                reg.gauge("parm_shards", "Shard slots, by lifecycle state.", &[("state", state)])
+                    .set(v as f64);
+            };
+            shard_gauge("total", shards);
+            shard_gauge("provisioned", provisioned);
+            shard_gauge("live", live);
+            reg.gauge("parm_fleet_load", "Summed admission-load estimate across live shards.", &[])
+                .set(load as f64);
+            reg.counter("parm_fleet_rejected_total", "Admission rejects across the fleet.", &[])
+                .raise_to(rejected);
+            if let Fleet::CrossShard(t) = fleet {
+                reg.gauge(
+                    "parm_parity_pool_size",
+                    "Instances per r_index in the shared parity pool (active generation).",
+                    &[],
+                )
+                .set(t.parity_pool_size() as f64);
+                reg.gauge(
+                    "parm_parity_pool_target",
+                    "Parity pool size the current fleet calls for (ceil(shards*m/k)).",
+                    &[],
+                )
+                .set(t.parity_pool_target() as f64);
+                let tel = t.telemetry();
+                reg.gauge("parm_coding_last_r", "Redundancy chosen for the last sealed group.", &[])
+                    .set(tel.last_r as f64);
+                reg.gauge(
+                    "parm_coding_fleet_unavailability",
+                    "Fleet-level straggler-predictor unavailability estimate.",
+                    &[],
+                )
+                .set(tel.fleet_unavailability);
+                for (s, &u) in tel.per_shard_unavailability.iter().enumerate() {
+                    let label = s.to_string();
+                    reg.gauge(
+                        "parm_shard_unavailability",
+                        "Per-shard straggler-predictor unavailability estimate.",
+                        &[("shard", &label)],
+                    )
+                    .set(u);
+                }
+                reg.gauge("parm_coding_open_groups", "Cross-shard coding groups still open.", &[])
+                    .set(tel.open_groups as f64);
+                reg.counter("parm_coding_groups_sealed_total", "Cross-shard groups sealed.", &[])
+                    .raise_to(tel.groups_sealed);
+                reg.counter(
+                    "parm_coding_parity_jobs_total",
+                    "Parity jobs dispatched to the shared pool.",
+                    &[],
+                )
+                .raise_to(tel.parity_jobs);
+                reg.counter(
+                    "parm_coding_reconstructions_total",
+                    "Predictions recovered by cross-shard decode.",
+                    &[],
+                )
+                .raise_to(tel.reconstructions);
+            }
+        })
     }
 
     /// Run `f` against the live fleet, or [`ReconfigError::Closed`]
@@ -213,6 +400,7 @@ impl ControlPlane {
                 Fleet::CrossShard(t) => t.add_shard(),
             }?;
             record_reconfig(fleet, ReconfigVerb::AddShard, s);
+            self.tele.applied(ReconfigVerb::AddShard);
             Ok(s)
         })?
     }
@@ -229,6 +417,7 @@ impl ControlPlane {
                 Fleet::CrossShard(t) => t.remove_shard(shard),
             }?;
             record_reconfig(fleet, ReconfigVerb::RemoveShard, shard);
+            self.tele.applied(ReconfigVerb::RemoveShard);
             Ok(())
         })?
     }
@@ -244,6 +433,7 @@ impl ControlPlane {
             }?;
             if changed {
                 record_reconfig(fleet, ReconfigVerb::Drain, shard);
+                self.tele.applied(ReconfigVerb::Drain);
             }
             Ok(changed)
         })?
@@ -259,6 +449,7 @@ impl ControlPlane {
             }?;
             if changed {
                 record_reconfig(fleet, ReconfigVerb::Restore, shard);
+                self.tele.applied(ReconfigVerb::Restore);
             }
             Ok(changed)
         })?
@@ -274,6 +465,7 @@ impl ControlPlane {
                 Fleet::CrossShard(t) => t.set_admission(policy),
             }
             record_reconfig(fleet, ReconfigVerb::SetAdmission, 0);
+            self.tele.applied(ReconfigVerb::SetAdmission);
         })
     }
 
@@ -423,52 +615,53 @@ impl ControlPlane {
     /// Merged + per-shard windows, scheme telemetry, and per-shard
     /// predictor estimates, as the admin protocol's `telemetry` reply
     /// payload.
+    ///
+    /// The reply is a *compatibility view over the metric registry*:
+    /// [`ControlPlane::publish`] folds the fleet state into the
+    /// registry first, then every number here is read back out of the
+    /// same gauges and counters a Prometheus scrape of the
+    /// [`crate::telemetry::Exporter`] sees — the Unix-socket reply and
+    /// the `/metrics` endpoint cannot drift.
     pub fn telemetry(&self) -> Result<Json, ReconfigError> {
-        self.with_fleet(|fleet| {
-            let shards = match fleet {
-                Fleet::Sharded(t) => t.shards(),
-                Fleet::CrossShard(t) => t.shards(),
-            };
-            let merged = match fleet {
-                Fleet::Sharded(t) => t.window(),
-                Fleet::CrossShard(t) => t.window(),
-            };
-            let per_shard: Vec<Json> = (0..shards)
-                .map(|s| {
-                    let w = match fleet {
-                        Fleet::Sharded(t) => t.shard_window(s),
-                        Fleet::CrossShard(t) => t.shard_window(s),
-                    };
-                    window_json(&w).set("shard", s)
+        self.publish()?;
+        let reg = &self.tele.registry;
+        let shards = reg
+            .value("parm_shards", &[("state", "total")])
+            .unwrap_or(0.0) as usize;
+        let per_shard: Vec<Json> = (0..shards)
+            .map(|s| {
+                let label = s.to_string();
+                window_json_from_registry(reg, "parm_shard_window_", &[("shard", &label)])
+                    .set("shard", s)
+            })
+            .collect();
+        let mut out = Json::obj()
+            .set("window", window_json_from_registry(reg, "parm_fleet_window_", &[]))
+            .set("per_shard", Json::Arr(per_shard));
+        if let Some(last_r) = reg.value("parm_coding_last_r", &[]) {
+            let read = |name: &str| reg.value(name, &[]).unwrap_or(0.0);
+            let per_u: Vec<Json> = (0..shards)
+                .filter_map(|s| {
+                    reg.value("parm_shard_unavailability", &[("shard", &s.to_string())])
                 })
+                .map(Json::Num)
                 .collect();
-            let mut out = Json::obj()
-                .set("window", window_json(&merged))
-                .set("per_shard", Json::Arr(per_shard));
-            if let Fleet::CrossShard(t) = fleet {
-                let tel = t.telemetry();
-                out = out.set(
-                    "coding",
-                    Json::obj()
-                        .set("last_r", tel.last_r)
-                        .set("fleet_unavailability", tel.fleet_unavailability)
-                        .set(
-                            "per_shard_unavailability",
-                            Json::Arr(
-                                tel.per_shard_unavailability
-                                    .iter()
-                                    .map(|&u| Json::Num(u))
-                                    .collect(),
-                            ),
-                        )
-                        .set("groups_sealed", tel.groups_sealed)
-                        .set("parity_jobs", tel.parity_jobs)
-                        .set("reconstructions", tel.reconstructions)
-                        .set("open_groups", tel.open_groups),
-                );
-            }
-            out
-        })
+            out = out.set(
+                "coding",
+                Json::obj()
+                    .set("last_r", last_r)
+                    .set(
+                        "fleet_unavailability",
+                        read("parm_coding_fleet_unavailability"),
+                    )
+                    .set("per_shard_unavailability", Json::Arr(per_u))
+                    .set("groups_sealed", read("parm_coding_groups_sealed_total"))
+                    .set("parity_jobs", read("parm_coding_parity_jobs_total"))
+                    .set("reconstructions", read("parm_coding_reconstructions_total"))
+                    .set("open_groups", read("parm_coding_open_groups")),
+            );
+        }
+        Ok(out)
     }
 
     /// The advisory predictor→scale hook: compare the fleet's health
@@ -620,19 +813,23 @@ impl ControlPlane {
     }
 }
 
-/// A [`WindowSnapshot`] as the admin protocol's JSON shape.
-fn window_json(w: &WindowSnapshot) -> Json {
+/// The admin protocol's window JSON shape, read back out of the
+/// registry gauges [`publish_window`] wrote (`{prefix}seconds`,
+/// `{prefix}resolved`, ...). Keeping the admin reply downstream of the
+/// registry is what pins it to the Prometheus endpoint.
+fn window_json_from_registry(reg: &Registry, prefix: &str, labels: &[(&str, &str)]) -> Json {
+    let read = |suffix: &str| reg.value(&format!("{prefix}{suffix}"), labels).unwrap_or(0.0);
     Json::obj()
-        .set("window_s", w.window.as_secs_f64())
-        .set("resolved", w.resolved)
-        .set("rejected", w.rejected)
-        .set("p50_ms", w.p50_ms)
-        .set("p99_ms", w.p99_ms)
-        .set("p999_ms", w.p999_ms)
-        .set("recovery_rate", w.recovery_rate)
-        .set("reject_rate", w.reject_rate)
-        .set("default_rate", w.default_rate)
-        .set("qps", w.qps)
+        .set("window_s", read("seconds"))
+        .set("resolved", read("resolved"))
+        .set("rejected", read("rejected"))
+        .set("p50_ms", read("p50_ms"))
+        .set("p99_ms", read("p99_ms"))
+        .set("p999_ms", read("p999_ms"))
+        .set("recovery_rate", read("recovery_rate"))
+        .set("reject_rate", read("reject_rate"))
+        .set("default_rate", read("default_rate"))
+        .set("qps", read("qps"))
 }
 
 fn decision_json(d: &ScaleDecision) -> Json {
@@ -833,6 +1030,7 @@ mod tests {
             fleet: RwLock::new(None),
             ops: Mutex::new(()),
             cfg: ControlPlaneConfig::default(),
+            tele: ControlTelemetry::new(Registry::new()),
         };
         for bad in ["", "not json", "{}", "{\"cmd\":\"no-such\"}", "{\"cmd\":\"drain\"}"] {
             let reply = Json::parse(&plane.handle_line(bad)).unwrap();

@@ -934,6 +934,10 @@ fn parity_factory(
         // in the journal. The journal sees parity activity through the
         // fleet state's Seal/Decode events instead.
         pc.recorder = crate::coordinator::journal::Recorder::disabled();
+        // Metric families likewise: scope each parity session under its
+        // r_index so parity traffic never collides with (or races) the
+        // data shards' label spaces in the shared fleet registry.
+        pc.telemetry = cfg.telemetry.scoped("parity_r", ri);
         let leg_models = ModelSet {
             deployed: parities
                 .get(ri)

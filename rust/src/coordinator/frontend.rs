@@ -81,6 +81,7 @@ use crate::cluster::faults::FaultPlan;
 use crate::coordinator::metrics::{LatencyWindow, Outcome, WindowSnapshot};
 use crate::coordinator::service::{ModelSet, RunResult};
 use crate::coordinator::session::{QueryId, Resolved, ServiceBuilder, ServiceHandle};
+use crate::telemetry::{Counter, Gauge, Registry};
 use crate::tensor::Tensor;
 
 /// How the frontend admits queries when the cluster falls behind.
@@ -245,6 +246,16 @@ struct FrontendShared {
     gate_cv: Condvar,
     /// Frontend-wide sliding window across all clients.
     window: Mutex<LatencyWindow>,
+    /// The session's metric registry (possibly shard-scoped) — the
+    /// frontend publishes admission verdicts and client weights into it.
+    registry: Registry,
+    /// `parm_admission_total{verdict="accepted"}`.
+    tele_accepted: Counter,
+    /// `parm_admission_total{verdict="rejected"}` (every shed path:
+    /// RejectAbove, Block timeout, SLO shed, shutdown-interrupted wait).
+    tele_rejected: Counter,
+    /// `parm_client_weight_total` — the live fair-share denominator.
+    tele_weight_total: Gauge,
 }
 
 impl FrontendShared {
@@ -266,10 +277,25 @@ impl FrontendShared {
                 Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
-                Ok(_) => return,
+                Ok(_) => {
+                    self.tele_weight_total.set(f64::from_bits(next));
+                    return;
+                }
                 Err(seen) => cur = seen,
             }
         }
+    }
+
+    /// Export one client's fairness weight as
+    /// `parm_client_weight{client="<id>"}` (mint-time, not hot path).
+    fn publish_client_weight(&self, id: u64, weight: f64) {
+        self.registry
+            .gauge(
+                "parm_client_weight",
+                "Admission-fairness weight of one client.",
+                &[("client", &id.to_string())],
+            )
+            .set(weight);
     }
 
     fn total_weight(&self) -> f64 {
@@ -336,6 +362,7 @@ impl ServiceClient {
             true,
         ));
         self.shared.add_weight(self.core.weight);
+        self.shared.publish_client_weight(core.id, core.weight);
         ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
     }
 
@@ -398,6 +425,7 @@ impl ServiceClient {
             self.core.submitted.fetch_sub(1, Ordering::Relaxed);
             return Err(SubmitError::Closed);
         }
+        self.shared.tele_accepted.inc();
         Ok(fid)
     }
 
@@ -562,6 +590,7 @@ impl ServiceClient {
         self.core.rejected.fetch_add(1, Ordering::Relaxed);
         self.shared.rejected_total.fetch_add(1, Ordering::Relaxed);
         self.shared.rejects_unfolded.fetch_add(1, Ordering::Relaxed);
+        self.shared.tele_rejected.inc();
         let now = Instant::now();
         self.core.window.lock().unwrap().record_rejects(1, now);
         self.shared.window.lock().unwrap().record_rejects(1, now);
@@ -600,6 +629,14 @@ impl ServingFrontend {
         window: Duration,
     ) -> ServingFrontend {
         let (tx, rx) = mpsc::channel();
+        let registry = handle.registry();
+        let verdict = |v: &str| {
+            registry.counter(
+                "parm_admission_total",
+                "Admission decisions at the frontend, by verdict.",
+                &[("verdict", v)],
+            )
+        };
         let shared = Arc::new(FrontendShared {
             policy: RwLock::new(policy),
             client_window: window,
@@ -616,6 +653,14 @@ impl ServingFrontend {
             gate: Mutex::new(()),
             gate_cv: Condvar::new(),
             window: Mutex::new(LatencyWindow::new(window)),
+            tele_accepted: verdict("accepted"),
+            tele_rejected: verdict("rejected"),
+            tele_weight_total: registry.gauge(
+                "parm_client_weight_total",
+                "Sum of registered client fairness weights (fair-share denominator).",
+                &[],
+            ),
+            registry,
         });
         let faults = handle.fault_plan();
         let network = handle.network();
@@ -659,6 +704,7 @@ impl ServingFrontend {
             true,
         ));
         self.shared.add_weight(weight);
+        self.shared.publish_client_weight(core.id, weight);
         ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
     }
 
@@ -674,6 +720,7 @@ impl ServingFrontend {
             weight,
             false,
         ));
+        self.shared.publish_client_weight(core.id, weight);
         ServiceClient { core, shared: self.shared.clone(), tx: self.tx.clone() }
     }
 
@@ -712,6 +759,12 @@ impl ServingFrontend {
     /// Frontend-wide live windowed metrics across all clients.
     pub fn window(&self) -> WindowSnapshot {
         self.shared.window.lock().unwrap().snapshot(Instant::now())
+    }
+
+    /// The metric registry this frontend (and its session) publishes
+    /// into — hand it to a [`crate::telemetry::Exporter`] to scrape.
+    pub fn registry(&self) -> Registry {
+        self.shared.registry.clone()
     }
 
     /// Fault-injection surface (mirrors

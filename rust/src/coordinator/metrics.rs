@@ -236,10 +236,11 @@ impl LatencyWindow {
             return 0.0;
         }
         let mut lat: Vec<f64> = self.events.iter().map(|&(_, ms, _)| ms).collect();
-        // Nearest-rank p99, matching Summary::percentile.
+        // Nearest-rank p99, matching Summary::percentile. total_cmp keeps
+        // the selection total even if a NaN ever slipped into the ring —
+        // an observability readout must not panic the dispatcher.
         let rank = ((0.99 * lat.len() as f64).ceil() as usize).clamp(1, lat.len());
-        let (_, v, _) =
-            lat.select_nth_unstable_by(rank - 1, |a, b| a.partial_cmp(b).expect("NaN latency"));
+        let (_, v, _) = lat.select_nth_unstable_by(rank - 1, |a, b| a.total_cmp(b));
         *v
     }
 
@@ -339,7 +340,14 @@ impl WindowSnapshot {
     /// hull of its inputs; a side with `resolved == 0` carries no
     /// weight). For exact fleet quantiles over a whole run, merge
     /// [`RunMetrics`] instead, which keeps raw samples.
+    ///
+    /// The merge is NaN-proof: the fields are public, so a snapshot
+    /// assembled elsewhere may carry non-finite quantiles or rates —
+    /// those are treated as `0.0` rather than poisoning the fleet view,
+    /// and the output is always finite.
     pub fn merge(&self, other: &WindowSnapshot) -> WindowSnapshot {
+        // Non-finite inputs carry no information; treat them as absent.
+        let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
         let resolved = self.resolved + other.resolved;
         let rejected = self.rejected + other.rejected;
         let offered = resolved + rejected;
@@ -347,15 +355,16 @@ impl WindowSnapshot {
             if resolved == 0 {
                 0.0
             } else {
-                (a * self.resolved as f64 + b * other.resolved as f64) / resolved as f64
+                (finite(a) * self.resolved as f64 + finite(b) * other.resolved as f64)
+                    / resolved as f64
             }
         };
         // The rates are per-snapshot fractions; scale back to counts so
         // the merged rates are count-exact.
-        let recovered =
-            self.recovery_rate * self.resolved as f64 + other.recovery_rate * other.resolved as f64;
-        let defaulted =
-            self.default_rate * self.resolved as f64 + other.default_rate * other.resolved as f64;
+        let recovered = finite(self.recovery_rate) * self.resolved as f64
+            + finite(other.recovery_rate) * other.resolved as f64;
+        let defaulted = finite(self.default_rate) * self.resolved as f64
+            + finite(other.default_rate) * other.resolved as f64;
         WindowSnapshot {
             window: self.window.max(other.window),
             resolved,
@@ -366,7 +375,7 @@ impl WindowSnapshot {
             recovery_rate: if resolved == 0 { 0.0 } else { recovered / resolved as f64 },
             reject_rate: if offered == 0 { 0.0 } else { rejected as f64 / offered as f64 },
             default_rate: if resolved == 0 { 0.0 } else { defaulted / resolved as f64 },
-            qps: self.qps + other.qps,
+            qps: finite(self.qps) + finite(other.qps),
         }
     }
 

@@ -55,6 +55,15 @@
 //!   delta-encoded event log ([`journal::Recorder`]) every surface above
 //!   can write into, replayable byte-identically with
 //!   [`journal::replay`] (`parm replay` on the CLI).
+//! - Every tier above also publishes into the fleet-wide telemetry
+//!   registry ([`crate::telemetry::Registry`], carried by
+//!   [`service::ServiceConfig::telemetry`]): sessions count
+//!   submits/resolutions/outcomes, schemes publish their operating
+//!   point, the frontend publishes admission verdicts and client
+//!   weights, and the control plane publishes reconfig verbs plus the
+//!   merged fleet/per-shard windows — scraped via
+//!   [`crate::telemetry::Exporter`] and the `parm admin telemetry`
+//!   command, which read the same families.
 //!
 //! The thread-and-channel map of the whole stack is drawn in
 //! `docs/ARCHITECTURE.md`.

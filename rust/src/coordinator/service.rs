@@ -131,6 +131,21 @@ pub struct ServiceConfig {
     /// sharded tier re-tags per-shard clones so one journal records the
     /// whole fleet.
     pub recorder: Recorder,
+    /// Fleet-wide metric registry ([`crate::telemetry::Registry`]). The
+    /// session and everything stacked on it (frontend, scheme) publish
+    /// counters/gauges through cloned handles of this registry; hand in
+    /// one shared registry to aggregate a fleet (the sharded tier
+    /// re-scopes per-shard clones with a `shard` label, mirroring the
+    /// recorder). Defaults to a fresh private registry, so telemetry is
+    /// always on and always consistent — exporting it is the caller's
+    /// choice ([`crate::telemetry::Exporter`]).
+    pub telemetry: crate::telemetry::Registry,
+    /// Cadence at which the session folds its sliding window (and the
+    /// scheme's operating point) into registry gauges from its pump
+    /// loop. Snapshotting is O(window events); the default 250 ms
+    /// matches the bench sampling cadence and costs well under 1% of a
+    /// busy session's budget.
+    pub telemetry_every: Duration,
 }
 
 impl ServiceConfig {
@@ -153,6 +168,8 @@ impl ServiceConfig {
             admission: AdmissionPolicy::Unbounded,
             metrics_window: Duration::from_secs(10),
             recorder: Recorder::disabled(),
+            telemetry: crate::telemetry::Registry::new(),
+            telemetry_every: Duration::from_millis(250),
         }
     }
 }

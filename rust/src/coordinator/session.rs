@@ -50,11 +50,136 @@ use crate::coordinator::service::{measure_service, ModelSet, RunResult, ServiceC
 use crate::runtime::engine::Executable;
 use crate::runtime::instance::{Completion, Execution, ServiceModel, WorkerEnv};
 use crate::runtime::pool::Pool;
+use crate::telemetry::{Counter, Registry, Summary};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
 /// Identifier handed back by [`ServiceHandle::submit`].
 pub type QueryId = u64;
+
+/// The session's publications into the fleet-wide metric registry
+/// ([`crate::telemetry`]). Hot-path hooks (`on_submit`, `on_resolved`,
+/// `on_rejected`) are wait-free atomic bumps on pre-registered handles;
+/// the window/scheme gauges are folded in at `telemetry_every` cadence
+/// from the pump loop (`maybe_publish`) — never from a scraper.
+struct SessionTelemetry {
+    registry: Registry,
+    submitted: Counter,
+    resolved: Counter,
+    rejected: Counter,
+    outcome_native: Counter,
+    outcome_reconstructed: Counter,
+    outcome_replica: Counter,
+    outcome_default: Counter,
+    latency_ms: Summary,
+    every: Duration,
+    next_publish: Instant,
+}
+
+impl SessionTelemetry {
+    fn new(registry: Registry, every: Duration) -> SessionTelemetry {
+        let outcome = |o: &str| {
+            registry.counter(
+                "parm_outcome_total",
+                "Resolved queries by outcome.",
+                &[("outcome", o)],
+            )
+        };
+        SessionTelemetry {
+            submitted: registry.counter(
+                "parm_queries_submitted_total",
+                "Queries accepted into the session.",
+                &[],
+            ),
+            resolved: registry.counter(
+                "parm_queries_resolved_total",
+                "Queries resolved (any outcome, defaults included).",
+                &[],
+            ),
+            rejected: registry.counter(
+                "parm_queries_rejected_total",
+                "Queries turned away by admission control.",
+                &[],
+            ),
+            outcome_native: outcome("native"),
+            outcome_reconstructed: outcome("reconstructed"),
+            outcome_replica: outcome("replica"),
+            outcome_default: outcome("default"),
+            latency_ms: registry.summary(
+                "parm_latency_ms",
+                "Frontend arrival to prediction available, milliseconds.",
+                &[],
+            ),
+            every,
+            next_publish: Instant::now() + every,
+            registry,
+        }
+    }
+
+    fn on_resolved(&self, outcome: Outcome, latency: Duration) {
+        self.resolved.inc();
+        match outcome {
+            Outcome::Native => self.outcome_native.inc(),
+            Outcome::Reconstructed => self.outcome_reconstructed.inc(),
+            Outcome::Replica => self.outcome_replica.inc(),
+            Outcome::Default => self.outcome_default.inc(),
+        }
+        self.latency_ms.observe(latency.as_secs_f64() * 1e3);
+    }
+
+    /// Fold the live window and the scheme's operating point into
+    /// gauges if the cadence is due. Runs on the session's own pump
+    /// thread; cost is one window snapshot, same as any
+    /// `window_snapshot` caller pays.
+    fn maybe_publish(&mut self, window: &mut LatencyWindow, scheme: &dyn RedundancyScheme) {
+        let now = Instant::now();
+        if now < self.next_publish {
+            return;
+        }
+        let mut next = self.next_publish + self.every;
+        while next <= now {
+            next += self.every;
+        }
+        self.next_publish = next;
+        self.publish(window, scheme, now);
+    }
+
+    fn publish(&self, window: &mut LatencyWindow, scheme: &dyn RedundancyScheme, now: Instant) {
+        let snap = window.snapshot(now);
+        crate::telemetry::publish_window(&self.registry, "parm_session_window_", &[], &snap);
+        if let Some(t) = scheme.telemetry() {
+            self.registry
+                .gauge("parm_scheme_last_r", "Redundancy chosen for the last sealed group.", &[])
+                .set(t.last_r as f64);
+            self.registry
+                .gauge(
+                    "parm_scheme_unavailability",
+                    "Scheme's current per-slot unavailability estimate.",
+                    &[],
+                )
+                .set(t.unavailability);
+            self.registry
+                .counter("parm_scheme_groups_sealed_total", "Coding groups sealed.", &[])
+                .raise_to(t.groups_sealed);
+            self.registry
+                .counter(
+                    "parm_scheme_parity_jobs_total",
+                    "Parity jobs dispatched (sum of per-group r).",
+                    &[],
+                )
+                .raise_to(t.parity_jobs);
+            let overhead =
+                if t.groups_sealed == 0 { 0.0 } else { t.parity_jobs as f64 / t.groups_sealed as f64 };
+            self.registry
+                .gauge(
+                    "parm_scheme_parity_overhead",
+                    "Realized redundancy overhead: parity jobs per sealed group.",
+                    &[],
+                )
+                .set(overhead);
+        }
+    }
+}
 
 /// A query whose prediction is now available at the frontend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -261,6 +386,7 @@ impl ServiceBuilder {
             // one continuous seeded sequence as in the seed's Service::run.
             rng,
             recorder,
+            telemetry: SessionTelemetry::new(cfg.telemetry.clone(), cfg.telemetry_every),
         })
     }
 }
@@ -337,6 +463,8 @@ pub struct ServiceHandle {
     rng: Pcg64,
     /// Serving-path journal (disabled unless the config carried one).
     recorder: Recorder,
+    /// Publications into the fleet-wide metric registry.
+    telemetry: SessionTelemetry,
 }
 
 impl ServiceHandle {
@@ -355,6 +483,22 @@ impl ServiceHandle {
     /// the realized parity overhead. `None` for fixed-topology schemes.
     pub fn scheme_telemetry(&self) -> Option<SchemeTelemetry> {
         self.scheme.telemetry()
+    }
+
+    /// The metric registry this session publishes into (a clone of the
+    /// config's handle — possibly shard-scoped by the sharded tier).
+    /// Hand it to a [`crate::telemetry::Exporter`] to scrape it, or to a
+    /// [`crate::telemetry::series::Capture`] to sample it.
+    pub fn registry(&self) -> Registry {
+        self.telemetry.registry.clone()
+    }
+
+    /// Fold the live window and scheme gauges into the registry *now*,
+    /// regardless of the `telemetry_every` cadence — what `shutdown`
+    /// and the sharded tier's drain path call so the last window state
+    /// is visible to scrapers.
+    pub fn publish_telemetry(&mut self) {
+        self.telemetry.publish(&mut self.window, self.scheme.as_ref(), Instant::now());
     }
 
     /// Queries submitted so far.
@@ -412,6 +556,7 @@ impl ServiceHandle {
         self.submitted += 1;
         let arrived = Instant::now();
         self.pending.insert(id, arrived);
+        self.telemetry.submitted.inc();
         self.recorder.record(&Event::Submit { qid: id });
         if let Some(sealed) = self.batcher.offer(PendingQuery { id, input, arrived }) {
             self.dispatch_sealed(sealed);
@@ -464,6 +609,7 @@ impl ServiceHandle {
         }
         self.metrics.record_rejected(n);
         self.window.record_rejects(n, Instant::now());
+        self.telemetry.rejected.add(n);
         self.recorder.record(&Event::Reject { n });
     }
 
@@ -486,6 +632,7 @@ impl ServiceHandle {
     /// every pool, and report the session's metrics.
     pub fn shutdown(mut self) -> RunResult {
         let _ = self.drain();
+        self.publish_telemetry();
         if let Some(s) = self.shuffles.take() {
             s.stop();
         }
@@ -651,6 +798,7 @@ impl ServiceHandle {
             self.apply_resolution(r);
         }
         self.sweep_slo();
+        self.telemetry.maybe_publish(&mut self.window, self.scheme.as_ref());
     }
 
     fn dispatch_sealed(&mut self, mut sealed: SealedBatch) {
@@ -711,6 +859,7 @@ impl ServiceHandle {
                 let latency = r.at.saturating_duration_since(arrived);
                 self.metrics.record(arrived, r.at, r.outcome);
                 self.window.record(r.outcome, latency, r.at);
+                self.telemetry.on_resolved(r.outcome, latency);
                 self.resolved_count += 1;
                 // Inside the dedup branch: the journal sees exactly one
                 // terminal event per query, the invariant replay checks.
@@ -737,6 +886,7 @@ impl ServiceHandle {
             self.pending.remove(&id);
             self.metrics.record_default(slo);
             self.window.record(Outcome::Default, slo, now);
+            self.telemetry.on_resolved(Outcome::Default, slo);
             self.resolved_count += 1;
             self.recorder.record(&Event::Complete {
                 qid: id,

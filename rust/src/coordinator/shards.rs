@@ -479,6 +479,9 @@ impl ShardSpawner {
         // Session-local query ids restart at zero in every shard: the
         // per-shard tag is what keeps them distinct in the journal.
         shard_cfg.recorder = self.cfg.recorder.tagged(s as u64);
+        // Same discipline for metrics: every shard session publishes
+        // into the one fleet registry under its own `shard` label.
+        shard_cfg.telemetry = self.cfg.telemetry.scoped("shard", s);
         if s > 0 {
             shard_cfg.seed = splitmix64(self.base_seed ^ ((s as u64) << 40));
             // One scheduled fault must not fire in lockstep across
@@ -848,6 +851,12 @@ impl ShardedFrontend {
     /// reconfiguration events through).
     pub fn recorder(&self) -> crate::coordinator::journal::Recorder {
         self.shared.recorder.clone()
+    }
+
+    /// The fleet-wide metric registry (unscoped base handle; every shard
+    /// session publishes into it under its `shard` label).
+    pub fn registry(&self) -> crate::telemetry::Registry {
+        self.spawner.lock().unwrap().cfg.telemetry.clone()
     }
 
     /// Summed admission-load estimate across every live shard (what the
@@ -1276,6 +1285,11 @@ impl CrossShardFrontend {
     /// The fleet's base journal handle (see [`ShardedFrontend::recorder`]).
     pub fn recorder(&self) -> crate::coordinator::journal::Recorder {
         self.tier.recorder()
+    }
+
+    /// The fleet-wide metric registry (see [`ShardedFrontend::registry`]).
+    pub fn registry(&self) -> crate::telemetry::Registry {
+        self.tier.registry()
     }
 
     /// Permanently kill one deployed instance of one data shard.

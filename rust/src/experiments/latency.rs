@@ -63,70 +63,10 @@ impl LatencyRow {
     }
 }
 
-/// One periodic sample of a run's live window — the time-series view
-/// behind "p99 over time across a fault event" plots (Figure 11's story
-/// told as a timeline instead of end-of-run aggregates).
-#[derive(Clone, Debug)]
-pub struct TimeSeriesRow {
-    /// Milliseconds since the run started.
-    pub t_ms: f64,
-    /// Queries resolved inside the window at this instant.
-    pub resolved: u64,
-    pub p50_ms: f64,
-    pub p99_ms: f64,
-    pub p999_ms: f64,
-    pub qps: f64,
-    pub recovery_rate: f64,
-    pub reject_rate: f64,
-    pub default_rate: f64,
-}
-
-impl TimeSeriesRow {
-    pub fn from_snapshot(
-        t: Duration,
-        w: &crate::coordinator::metrics::WindowSnapshot,
-    ) -> TimeSeriesRow {
-        TimeSeriesRow {
-            t_ms: t.as_secs_f64() * 1e3,
-            resolved: w.resolved,
-            p50_ms: w.p50_ms,
-            p99_ms: w.p99_ms,
-            p999_ms: w.p999_ms,
-            qps: w.qps,
-            recovery_rate: w.recovery_rate,
-            reject_rate: w.reject_rate,
-            default_rate: w.default_rate,
-        }
-    }
-
-    pub fn to_json(&self) -> Json {
-        Json::obj()
-            .set("t_ms", self.t_ms)
-            .set("resolved", self.resolved as usize)
-            .set("p50_ms", self.p50_ms)
-            .set("p99_ms", self.p99_ms)
-            .set("p999_ms", self.p999_ms)
-            .set("qps", self.qps)
-            .set("recovery_rate", self.recovery_rate)
-            .set("reject_rate", self.reject_rate)
-            .set("default_rate", self.default_rate)
-    }
-
-    pub fn header() -> String {
-        format!(
-            "{:>9} {:>7} {:>9} {:>9} {:>9} {:>8} {:>9}",
-            "t(ms)", "n", "p50(ms)", "p99(ms)", "p99.9(ms)", "qps", "recovery"
-        )
-    }
-
-    pub fn line(&self) -> String {
-        format!(
-            "{:>9.0} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>8.0} {:>9.3}",
-            self.t_ms, self.resolved, self.p50_ms, self.p99_ms, self.p999_ms, self.qps,
-            self.recovery_rate
-        )
-    }
-}
+/// Time-series rows now live in the telemetry layer so bench output and
+/// operator-facing scrapes share one definition; re-exported here for
+/// the benches that import them through `experiments::latency`.
+pub use crate::telemetry::series::{Capture, TimeSeriesRow};
 
 /// Load the executables for a latency run at the given batch size.
 pub fn load_models(
@@ -264,7 +204,11 @@ pub fn run_point(
 }
 
 /// Like [`run_point`], but also sample the session's live window every
-/// `sample_every`, returning the aggregate row *and* the time series.
+/// `sample_every` through the telemetry registry, returning the
+/// aggregate row *and* the captured time series. Each observed window
+/// is published into `parm_session_window_*` and the row read back off
+/// those gauges, so the bench timeline is byte-for-byte what a
+/// concurrent `/metrics` scrape would have seen at the same instants.
 /// Pair it with a `cfg.fault_schedule` entry to watch the tail latency
 /// spike and (under ParM) recover across a fault event.
 pub fn run_point_timeseries(
@@ -275,22 +219,25 @@ pub fn run_point_timeseries(
     rate: f64,
     label: &str,
     sample_every: Duration,
-) -> anyhow::Result<(LatencyRow, Vec<TimeSeriesRow>)> {
+) -> anyhow::Result<(LatencyRow, Capture)> {
     let mut handle = ServiceBuilder::new(cfg.clone()).build(models, &source.queries[0])?;
-    let mut series = Vec::new();
-    let run_start = std::time::Instant::now();
+    let registry = handle.registry();
+    let mut cap = Capture::session(&registry, sample_every);
     handle.run_open_loop_observed(
         &source.queries,
         n_queries,
         rate,
         Some(sample_every),
-        &mut |t, w| series.push(TimeSeriesRow::from_snapshot(t, &w)),
+        &mut |_t, w| {
+            crate::telemetry::publish_window(&registry, "parm_session_window_", &[], &w);
+            cap.sample();
+        },
     );
     let _ = handle.drain();
-    // One last sample, stamped at the real elapsed time, so the series
-    // covers the drain tail (which can run long under faults/SLO).
-    let w = handle.window_snapshot();
-    series.push(TimeSeriesRow::from_snapshot(run_start.elapsed(), &w));
+    // One last sample so the series covers the drain tail (which can
+    // run long under faults/SLO).
+    handle.publish_telemetry();
+    cap.sample();
     let RunResult { mut metrics, mean_service, reconstructions, .. } = handle.shutdown();
     let util = rate * mean_service.as_secs_f64() / (cfg.batch_size.max(1) as f64 * cfg.m as f64);
     let row = LatencyRow {
@@ -305,7 +252,7 @@ pub fn run_point_timeseries(
         reconstructions,
         n: metrics.latency.len(),
     };
-    Ok((row, series))
+    Ok((row, cap))
 }
 
 /// The shared fault-event time-series scenario behind the fig11/13/14
@@ -360,7 +307,7 @@ pub fn run_fault_timeseries(
     );
     let (row, series) =
         run_point_timeseries(&cfg, &models, &source, ts_n, rate, label, sample)?;
-    emit_timeseries(name, &series);
+    series.emit(name);
     println!("aggregate: {}", row.line());
     Ok(row)
 }
@@ -424,21 +371,6 @@ fn batched_probe(source: &QuerySource, batch: usize) -> crate::tensor::Tensor {
             .collect::<Vec<_>>(),
     )
     .unwrap()
-}
-
-/// Write time-series rows to `bench_out/<name>.json` and print the table.
-pub fn emit_timeseries(name: &str, rows: &[TimeSeriesRow]) {
-    println!("\n=== {name} ===");
-    println!("{}", TimeSeriesRow::header());
-    for r in rows {
-        println!("{}", r.line());
-    }
-    let json = Json::Arr(rows.iter().map(|r| r.to_json()).collect());
-    let _ = std::fs::create_dir_all("bench_out");
-    let path = format!("bench_out/{name}.json");
-    if std::fs::write(&path, json.to_string()).is_ok() {
-        println!("(wrote {path})");
-    }
 }
 
 /// Write rows to `bench_out/<name>.json` and print the table.

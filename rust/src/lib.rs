@@ -38,6 +38,14 @@
 //! ([`coordinator::cross_shard`]), so even the loss of an entire shard
 //! decodes like a single-instance failure.
 //!
+//! Every tier publishes live metrics into one fleet-wide
+//! [`telemetry::Registry`] (wait-free counters/gauges/summaries),
+//! exported as Prometheus text over TCP ([`telemetry::Exporter`];
+//! `parm serve --metrics-addr`), streamed as JSON snapshots
+//! ([`telemetry::SnapshotLog`]; `--metrics-log`), and sampled into
+//! bench time-series ([`telemetry::series`]) — all strictly
+//! non-blocking for the serving path.
+//!
 //! Orientation: the top-level `README.md` covers the what and the
 //! quickstart; `docs/ARCHITECTURE.md` maps every thread and channel from
 //! builder to completion fan-out.
@@ -48,6 +56,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 pub mod workload;

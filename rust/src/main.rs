@@ -8,7 +8,10 @@
 //!                               submitters through the multi-client
 //!                               frontend with --admission control;
 //!                               --admin-socket PATH exposes the control
-//!                               plane on a unix socket while serving)
+//!                               plane on a unix socket while serving;
+//!                               --metrics-addr HOST:PORT serves Prometheus
+//!                               text and --metrics-log PATH streams JSON
+//!                               snapshots while serving)
 //!   admin                     — drive a live fleet's control plane over
 //!                               its admin socket (status, drain, restore,
 //!                               add-shard, remove-shard, set-admission,
@@ -183,6 +186,18 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             "record the serving-path event journal to this file \
              (re-execute and verify it with `parm replay`)",
         )
+        .opt(
+            "metrics-addr",
+            "",
+            "serve Prometheus text metrics on this HOST:PORT while serving \
+             (port 0 picks a free one; scrape with curl)",
+        )
+        .opt(
+            "metrics-log",
+            "",
+            "append one JSON metrics snapshot per interval to this file",
+        )
+        .opt("metrics-interval-ms", "1000", "snapshot interval for --metrics-log")
         .flag("tenancy", "enable light multitenancy instead of shuffles");
     let a = match cli.parse(argv) {
         Ok(a) => a,
@@ -288,6 +303,22 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         "" => None,
         path => Some(path.to_string()),
     };
+    // Metrics export rides on the run's registry (cfg.telemetry), which
+    // every tier — session, frontend, shards, control plane — publishes
+    // into. The guards stay alive for the whole serve and stop on drop.
+    let metrics_interval = a.get_duration_ms("metrics-interval-ms");
+    let _metrics = start_metrics(
+        &cfg.telemetry,
+        match a.get("metrics-addr") {
+            "" => None,
+            addr => Some(addr),
+        },
+        match a.get("metrics-log") {
+            "" => None,
+            path => Some(path),
+        },
+        metrics_interval,
+    )?;
     if record.is_some() {
         // Arm the serving-path journal before any tier spawns so the
         // recorder handle propagates to every shard session.
@@ -562,6 +593,8 @@ fn serve_sharded(
     let tier = ShardedFrontend::start(cfg, spec, models, &source.queries[0])?;
     println!("serving {} over {} shards", drive.describe(), tier.shards());
     let plane = std::sync::Arc::new(ControlPlane::new(Fleet::Sharded(tier)));
+    // Fleet/per-shard windows refresh at scrape time, not on a poll loop.
+    let _sampler = plane.register_sampler();
     let _admin = bind_admin(&plane, admin_socket)?;
     let done =
         drive_clients(drive, seed, source, || plane.client().expect("fleet is live"));
@@ -644,6 +677,8 @@ fn serve_cross_shard(
         tier.parity_pool_size(),
     );
     let plane = std::sync::Arc::new(ControlPlane::new(Fleet::CrossShard(tier)));
+    // Fleet/per-shard windows refresh at scrape time, not on a poll loop.
+    let _sampler = plane.register_sampler();
     let _admin = bind_admin(&plane, admin_socket)?;
     let done =
         drive_clients(drive, seed, source, || plane.client().expect("fleet is live"));
@@ -717,6 +752,42 @@ fn serve_cross_shard(
         res.fleet.merged.rejected
     );
     Ok(())
+}
+
+/// Export guards for one serve run: the Prometheus endpoint and/or the
+/// JSON snapshot log, both reading the run's registry. Dropping the
+/// struct stops both.
+struct MetricsGuards {
+    _exporter: Option<parm::telemetry::Exporter>,
+    _log: Option<parm::telemetry::SnapshotLog>,
+}
+
+/// Start whichever metrics outputs were requested (`None` flags are
+/// skipped) and print where they landed.
+fn start_metrics(
+    registry: &parm::telemetry::Registry,
+    addr: Option<&str>,
+    log_path: Option<&str>,
+    interval: std::time::Duration,
+) -> anyhow::Result<MetricsGuards> {
+    let exporter = match addr {
+        Some(addr) => {
+            let e = parm::telemetry::Exporter::bind(addr, registry.clone())?;
+            println!("metrics endpoint at http://{}/metrics", e.local_addr());
+            Some(e)
+        }
+        None => None,
+    };
+    let log = match log_path {
+        Some(path) => {
+            anyhow::ensure!(!interval.is_zero(), "--metrics-interval-ms must be > 0");
+            let l = parm::telemetry::SnapshotLog::start(path, registry.clone(), interval)?;
+            println!("metrics snapshots to {path} every {} ms", interval.as_millis());
+            Some(l)
+        }
+        None => None,
+    };
+    Ok(MetricsGuards { _exporter: exporter, _log: log })
 }
 
 /// Bind the control-plane admin endpoint when a socket path was given.
@@ -918,6 +989,14 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
             )
         })
         .collect();
+    // JSON-configured metrics export rides the same registry path as
+    // the serve flags (`metrics_addr` / `metrics_log` keys).
+    let _metrics = start_metrics(
+        &cfg.telemetry,
+        exp.metrics_addr.as_deref(),
+        exp.metrics_log.as_deref(),
+        exp.metrics_interval,
+    )?;
     let rate = if exp.rate_qps > 0.0 {
         exp.rate_qps
     } else {

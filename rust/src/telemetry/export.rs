@@ -1,0 +1,295 @@
+//! Getting the registry out of the process: a pull-style Prometheus
+//! text endpoint ([`Exporter`]) and a push-style JSON snapshot stream
+//! ([`SnapshotLog`]).
+//!
+//! Both are strictly non-blocking for the serving path. The exporter
+//! accepts on a dedicated thread and answers each scrape on its own
+//! short-lived connection thread with read/write timeouts, so a
+//! scraper that connects and then stalls mid-response wedges only its
+//! own connection thread (until the write timeout fires), never an
+//! accept, a render, or — above all — a submit. The snapshot log
+//! samples on its own thread at a fixed interval; a full disk or a
+//! dead file handle is logged and otherwise ignored.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::registry::Registry;
+
+/// Accept-loop poll cadence while idle (mirrors the admin socket's).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Patience for a scraper's request head; scrapes are local, so this
+/// is generous.
+const READ_TIMEOUT: Duration = Duration::from_millis(500);
+/// Per-`write` bound: a wedged scraper holds its connection thread at
+/// most this long per buffered write before the thread gives up.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Prometheus text endpoint over a local TCP listener.
+///
+/// Serves `GET` anything (the path is not inspected — every request is
+/// answered with the full registry rendering) with
+/// `Content-Type: text/plain; version=0.0.4`, one response per
+/// connection (`Connection: close`).
+///
+/// ```
+/// use parm::telemetry::{Exporter, Registry};
+///
+/// let registry = Registry::new();
+/// registry.counter("demo_total", "Demo.", &[]).inc();
+/// let exporter = Exporter::bind("127.0.0.1:0", registry).unwrap();
+/// // `curl http://{exporter.local_addr()}/metrics` would now answer.
+/// assert_ne!(exporter.local_addr().port(), 0);
+/// exporter.shutdown();
+/// ```
+pub struct Exporter {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Exporter {
+    /// Bind `addr` (e.g. `"127.0.0.1:9464"`; port 0 picks a free one)
+    /// and start answering scrapes with `registry`'s rendering.
+    pub fn bind(addr: &str, registry: Registry) -> anyhow::Result<Exporter> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("metrics: cannot bind {addr}: {e}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("parm-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let reg = registry.clone();
+                            // Detached: bounded by the read/write
+                            // timeouts, not by our shutdown.
+                            let _ = std::thread::Builder::new()
+                                .name("parm-metrics-conn".into())
+                                .spawn(move || serve_scrape(stream, &reg));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(e) => {
+                            log::warn!("metrics: accept failed: {e}");
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                    }
+                }
+            })
+            .expect("spawn parm-metrics");
+        Ok(Exporter { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. In-flight scrape
+    /// connections finish (or time out) on their own.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Answer one scrape: swallow the request head, render, write, close.
+/// Every error path is a plain return — a broken scraper costs us
+/// nothing but this thread.
+fn serve_scrape(mut stream: TcpStream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    // Read until the blank line ending the request head (or until the
+    // peer stalls/overflows — we answer anyway; scrapes are GETs).
+    let mut head = [0u8; 4096];
+    let mut n = 0;
+    while n < head.len() {
+        match stream.read(&mut head[n..]) {
+            Ok(0) => break,
+            Ok(k) => {
+                n += k;
+                if head[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // Render *before* writing: all registry locks are released by the
+    // time we block on the socket, so a wedged peer holds no lock.
+    let body = registry.render();
+    let header = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream
+        .write_all(header.as_bytes())
+        .and_then(|_| stream.write_all(body.as_bytes()))
+        .and_then(|_| stream.flush());
+}
+
+/// Push-style JSON snapshot stream: one
+/// `{"t_ms": ..., "families": {...}}` line appended to a file per
+/// interval, from the same registry the exporter serves
+/// (`parm serve --metrics-log PATH`). A final sample is written at
+/// shutdown so short runs always leave at least one.
+pub struct SnapshotLog {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl SnapshotLog {
+    /// Start sampling `registry` into `path` every `every`.
+    pub fn start(
+        path: impl AsRef<Path>,
+        registry: Registry,
+        every: Duration,
+    ) -> anyhow::Result<SnapshotLog> {
+        anyhow::ensure!(!every.is_zero(), "metrics-log interval must be non-zero");
+        let path: PathBuf = path.as_ref().to_path_buf();
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("metrics: cannot open {}: {e}", path.display()))?;
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("parm-metrics-log".into())
+            .spawn(move || {
+                let started = Instant::now();
+                let mut sample = |file: &mut std::fs::File| {
+                    let line = crate::util::json::Json::obj()
+                        .set("t_ms", started.elapsed().as_secs_f64() * 1000.0)
+                        .set("families", registry.snapshot_json());
+                    if let Err(e) = writeln!(file, "{line}") {
+                        log::warn!("metrics: snapshot log write failed: {e}");
+                    }
+                };
+                let (lock, cv) = &*stop2;
+                let mut stopped = lock.lock().unwrap();
+                loop {
+                    let (guard, timeout) = cv.wait_timeout(stopped, every).unwrap();
+                    stopped = guard;
+                    if *stopped {
+                        break;
+                    }
+                    if timeout.timed_out() {
+                        drop(stopped);
+                        sample(&mut file);
+                        stopped = lock.lock().unwrap();
+                    }
+                }
+                drop(stopped);
+                sample(&mut file); // final sample at shutdown
+            })
+            .expect("spawn parm-metrics-log");
+        Ok(SnapshotLog { stop, handle: Some(handle) })
+    }
+
+    /// Stop sampling (writes one final sample first).
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        *self.stop.0.lock().unwrap() = true;
+        self.stop.1.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SnapshotLog {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn exporter_serves_prometheus_text() {
+        let registry = Registry::new();
+        registry.counter("e2e_total", "h", &[]).add(7);
+        let exporter = Exporter::bind("127.0.0.1:0", registry).unwrap();
+        let reply = scrape(exporter.local_addr());
+        assert!(reply.starts_with("HTTP/1.0 200 OK"), "got: {reply}");
+        assert!(reply.contains("text/plain; version=0.0.4"));
+        assert!(reply.contains("e2e_total 7"));
+        exporter.shutdown();
+    }
+
+    #[test]
+    fn exporter_answers_concurrent_scrapes() {
+        let registry = Registry::new();
+        registry.gauge("g", "h", &[]).set(1.0);
+        let exporter = Exporter::bind("127.0.0.1:0", registry).unwrap();
+        let addr = exporter.local_addr();
+        let threads: Vec<_> = (0..4)
+            .map(|_| std::thread::spawn(move || scrape(addr)))
+            .collect();
+        for t in threads {
+            assert!(t.join().unwrap().contains("g 1"));
+        }
+        exporter.shutdown();
+    }
+
+    #[test]
+    fn snapshot_log_appends_samples() {
+        let registry = Registry::new();
+        registry.counter("s_total", "h", &[]).inc();
+        let dir = std::env::temp_dir().join(format!("parm_snap_{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("snap.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = SnapshotLog::start(&path, registry, Duration::from_millis(20)).unwrap();
+        std::thread::sleep(Duration::from_millis(70));
+        log.shutdown();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "expected interval samples plus the final one: {text}");
+        for line in lines {
+            let j = crate::util::json::Json::parse(line).expect("valid JSON line");
+            assert!(j.at(&["t_ms"]).as_f64().is_some());
+            assert!(!matches!(
+                j.at(&["families", "s_total"]),
+                crate::util::json::Json::Null
+            ));
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! First-class, strictly non-blocking observability for the serving
+//! stack.
+//!
+//! Three layers, one pipe:
+//!
+//! - [`registry`] — a lock-light [`Registry`] of named metric families
+//!   (counters, gauges, windowed-percentile summaries). Every tier
+//!   publishes into it through cheap cloneable handles: sessions count
+//!   submits/resolutions/rejects and outcome splits, schemes publish
+//!   their operating point (last r, unavailability, parity overhead),
+//!   the frontend publishes admission verdicts and per-client fairness
+//!   weights, the sharded/cross-shard tiers publish per-shard windows
+//!   and coding-group health, and the control plane publishes reconfig
+//!   verbs and the fleet generation. Hot-path writes are wait-free
+//!   atomic increments; registration (rare) takes a short write lock.
+//! - [`export`] — an [`Exporter`] serving the registry as Prometheus
+//!   text over a local TCP listener (`parm serve --metrics-addr`), and
+//!   a push-style [`SnapshotLog`] appending one JSON sample per
+//!   interval (`parm serve --metrics-log`). Both are strictly
+//!   non-blocking for the serving path: a stalled or absent scraper
+//!   can only ever stall its own connection thread, never a submit.
+//! - [`series`] — a [`Capture`] layer that samples the registry into
+//!   `bench_out/*_timeseries.json` rows, so bench time-series come from
+//!   the same pipe an operator would scrape instead of bespoke
+//!   per-bench sampling loops.
+//!
+//! The non-blocking contract, precisely: serving threads only ever
+//! touch atomics (`Counter::inc`, `Gauge::set`, `Summary::observe`) or
+//! a brief registration write lock at session/client setup; scrape-side
+//! work (running samplers, sorting summary rings, rendering text,
+//! socket writes) happens entirely on scraper/exporter threads.
+//! Telemetry failure — unbindable port, wedged scraper, full disk on
+//! the snapshot log — degrades observability, never serving.
+
+pub mod export;
+pub mod registry;
+pub mod series;
+
+pub use export::{Exporter, SnapshotLog};
+pub use registry::{Counter, Gauge, Registry, Summary};
+pub use series::Capture;
+
+/// Gauge-family suffixes shared by every windowed-metrics publisher
+/// (`parm_session_window_*`, `parm_fleet_window_*`,
+/// `parm_shard_window_*`): one gauge per [`WindowSnapshot`] field.
+///
+/// [`WindowSnapshot`]: crate::coordinator::metrics::WindowSnapshot
+pub const WINDOW_SUFFIXES: [&str; 10] = [
+    "seconds",
+    "resolved",
+    "rejected",
+    "p50_ms",
+    "p99_ms",
+    "p999_ms",
+    "recovery_rate",
+    "reject_rate",
+    "default_rate",
+    "qps",
+];
+
+/// Publish one [`WindowSnapshot`] as a gauge family under `prefix`
+/// (e.g. `parm_session_window_`), with the given extra labels. The
+/// shared helper behind every window publisher, so the exporter, the
+/// admin socket, and the series layer all read identical families.
+///
+/// [`WindowSnapshot`]: crate::coordinator::metrics::WindowSnapshot
+pub fn publish_window(
+    registry: &Registry,
+    prefix: &str,
+    labels: &[(&str, &str)],
+    snap: &crate::coordinator::metrics::WindowSnapshot,
+) {
+    let set = |suffix: &str, help: &str, v: f64| {
+        registry.gauge(&format!("{prefix}{suffix}"), help, labels).set(v);
+    };
+    set("seconds", "Length of the sliding metrics window (s).", snap.window.as_secs_f64());
+    set("resolved", "Queries resolved inside the window.", snap.resolved as f64);
+    set("rejected", "Queries rejected by admission inside the window.", snap.rejected as f64);
+    set("p50_ms", "Windowed median latency (ms).", snap.p50_ms);
+    set("p99_ms", "Windowed p99 latency (ms).", snap.p99_ms);
+    set("p999_ms", "Windowed p99.9 latency (ms).", snap.p999_ms);
+    set("recovery_rate", "Fraction of resolved queries recovered by redundancy.", snap.recovery_rate);
+    set("reject_rate", "rejected / (resolved + rejected) inside the window.", snap.reject_rate);
+    set("default_rate", "Fraction of resolved queries that fell back to the SLO default.", snap.default_rate);
+    set("qps", "Resolved-query throughput over the observed span.", snap.qps);
+}

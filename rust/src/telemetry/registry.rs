@@ -1,0 +1,615 @@
+//! The fleet-wide metric registry: named families of counters, gauges,
+//! and windowed-percentile summaries, published into via cheap
+//! cloneable handles and read out as Prometheus text or JSON.
+//!
+//! Design constraints (see the module docs in [`crate::telemetry`]):
+//!
+//! - **Wait-free hot path.** [`Counter::inc`], [`Gauge::set`], and
+//!   [`Summary::observe`] are plain atomic operations on `Arc`-shared
+//!   cells — no locks, no allocation, no syscalls. Serving threads
+//!   never pay more than a few atomic stores per query.
+//! - **Lock-light registration.** Creating or looking up a handle
+//!   takes a short `RwLock` write; it happens at session/client setup
+//!   and at scrape-refresh cadence, never per query. Registering the
+//!   same (name, labels) twice returns a handle onto the *same* cell,
+//!   so a re-provisioned shard continues its counters monotonically.
+//! - **Scrape-side heavy lifting.** Sorting summary rings, running
+//!   samplers, and rendering text all happen on the scraper's thread.
+//!
+//! A registry handle can be *scoped* ([`Registry::scoped`]): the clone
+//! stamps extra base labels (e.g. `shard="3"`) onto every family
+//! registered through it — how the sharded tier gives each shard
+//! session its own label space on one shared registry.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::util::json::Json;
+
+/// Ring capacity of a [`Summary`]: percentiles are computed over the
+/// most recent this-many observations (power of two; wrap is a mask).
+const SUMMARY_CAPACITY: usize = 1024;
+
+/// Metric family kinds, mirroring the Prometheus exposition types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Summary,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Summary => "summary",
+        }
+    }
+}
+
+/// A monotonically increasing counter. Cloning shares the cell.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    fn detached() -> Counter {
+        Counter { cell: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Wait-free increment (the hot-path operation).
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Wait-free add.
+    pub fn add(&self, n: u64) {
+        self.cell.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `total` if it is currently lower (no-op
+    /// otherwise). For mirroring a cumulative total maintained
+    /// elsewhere (e.g. a scheme's `groups_sealed`) while keeping the
+    /// exported series monotonic even if publishers race.
+    pub fn raise_to(&self, total: u64) {
+        self.cell.fetch_max(total, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// An instantaneous value (f64). Cloning shares the cell.
+#[derive(Clone)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    fn detached() -> Gauge {
+        Gauge { bits: Arc::new(AtomicU64::new(0f64.to_bits())) }
+    }
+
+    /// Wait-free store. Non-finite values are recorded as 0 so the
+    /// exported text never contains NaN/Inf.
+    pub fn set(&self, v: f64) {
+        let v = if v.is_finite() { v } else { 0.0 };
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+struct SummaryCore {
+    /// f64 bit patterns of the most recent observations (lock-free
+    /// ring; slots racing a wrap lose one sample, never block).
+    ring: Box<[AtomicU64]>,
+    /// Total observations ever; `head & (ring.len()-1)` is the slot.
+    head: AtomicU64,
+    /// Sum of observations in milli-units (value * 1000, truncated).
+    sum_milli: AtomicU64,
+}
+
+/// A windowed-percentile summary over the most recent observations
+/// (sample-windowed, not time-windowed: the last
+/// [`SUMMARY_CAPACITY`] = 1024 samples). Cloning shares the ring.
+#[derive(Clone)]
+pub struct Summary {
+    core: Arc<SummaryCore>,
+}
+
+impl Summary {
+    fn detached() -> Summary {
+        let ring = (0..SUMMARY_CAPACITY).map(|_| AtomicU64::new(0)).collect();
+        Summary {
+            core: Arc::new(SummaryCore {
+                ring,
+                head: AtomicU64::new(0),
+                sum_milli: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Wait-free record: one fetch_add for the slot, one store for the
+    /// sample, one fetch_add for the running sum.
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let i = self.core.head.fetch_add(1, Ordering::Relaxed) as usize & (self.core.ring.len() - 1);
+        self.core.ring[i].store(v.to_bits(), Ordering::Relaxed);
+        self.core.sum_milli.fetch_add((v.max(0.0) * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Observations ever recorded.
+    pub fn count(&self) -> u64 {
+        self.core.head.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations ever recorded.
+    pub fn sum(&self) -> f64 {
+        self.core.sum_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Nearest-rank quantile over the retained samples; `0.0` with no
+    /// samples (never NaN). Scrape-side only: copies and sorts up to
+    /// [`SUMMARY_CAPACITY`] values.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = (self.count() as usize).min(self.core.ring.len());
+        if n == 0 {
+            return 0.0;
+        }
+        let mut vals: Vec<f64> = self.core.ring[..n]
+            .iter()
+            .map(|b| f64::from_bits(b.load(Ordering::Relaxed)))
+            .filter(|v| v.is_finite())
+            .collect();
+        if vals.is_empty() {
+            return 0.0;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("finite values"));
+        let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+        vals[rank - 1]
+    }
+}
+
+/// The quantiles a [`Summary`] exports, as (q, label) pairs.
+pub const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")];
+
+#[derive(Clone)]
+enum Cell {
+    Counter(Counter),
+    Gauge(Gauge),
+    Summary(Summary),
+}
+
+struct Family {
+    kind: Kind,
+    help: String,
+    /// (sorted label pairs, cell) — a Vec scan suffices: family
+    /// cardinality is shards × clients, registration is rare.
+    series: Vec<(Vec<(String, String)>, Cell)>,
+}
+
+type Sampler = Box<dyn Fn() + Send + Sync>;
+
+#[derive(Default)]
+struct Inner {
+    families: RwLock<BTreeMap<String, Family>>,
+    /// Scrape-side refresh hooks (run by [`Registry::refresh`], i.e.
+    /// on render/snapshot — never on the serving path). The mutex also
+    /// serializes concurrent scrapers' refreshes.
+    samplers: Mutex<Vec<(u64, Sampler)>>,
+    next_sampler: AtomicU64,
+}
+
+/// Id returned by [`Registry::sampler`] for deregistration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SamplerId(u64);
+
+/// A cheap-clone handle onto one shared metric store. See the module
+/// docs for the design; in short: register handles once, increment
+/// them wait-free forever, render from any thread.
+///
+/// ```
+/// use parm::telemetry::Registry;
+///
+/// let registry = Registry::new();
+/// let hits = registry.counter("demo_hits_total", "Requests served.", &[]);
+/// hits.inc();
+/// hits.add(2);
+///
+/// let text = registry.render();
+/// assert!(text.contains("# TYPE demo_hits_total counter"));
+/// assert!(text.contains("demo_hits_total 3"));
+/// ```
+///
+/// Scoped handles stamp base labels onto everything registered through
+/// them:
+///
+/// ```
+/// use parm::telemetry::Registry;
+///
+/// let registry = Registry::new();
+/// let shard3 = registry.scoped("shard", 3);
+/// shard3.counter("demo_queries_total", "Queries.", &[]).inc();
+/// assert!(registry.render().contains("demo_queries_total{shard=\"3\"} 1"));
+/// ```
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+    /// Base labels stamped onto every registration through this handle.
+    scope: Vec<(String, String)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// A clone that stamps `key="value"` onto every family registered
+    /// through it (in addition to any labels passed at registration).
+    /// The sharded tier hands each shard session a `scoped("shard", s)`
+    /// clone of one fleet registry.
+    pub fn scoped(&self, key: &str, value: impl std::fmt::Display) -> Registry {
+        let mut scope = self.scope.clone();
+        scope.push((key.to_string(), value.to_string()));
+        Registry { inner: self.inner.clone(), scope }
+    }
+
+    fn canonical_labels(&self, labels: &[(&str, &str)]) -> Vec<(String, String)> {
+        let mut all: Vec<(String, String)> = self
+            .scope
+            .iter()
+            .cloned()
+            .chain(labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())))
+            .collect();
+        all.sort();
+        all.dedup();
+        all
+    }
+
+    /// Register-or-fetch one series cell. On a kind clash the handle is
+    /// returned *detached* (live but unexported) — telemetry misuse must
+    /// never panic a serving thread.
+    fn cell(&self, name: &str, help: &str, kind: Kind, labels: &[(&str, &str)]) -> Cell {
+        let labels = self.canonical_labels(labels);
+        let mut families = self.inner.families.write().unwrap();
+        let family = families.entry(name.to_string()).or_insert_with(|| Family {
+            kind,
+            help: help.to_string(),
+            series: Vec::new(),
+        });
+        if family.kind != kind {
+            log::error!(
+                "telemetry: family {name} registered as {:?}, requested as {kind:?}; detaching",
+                family.kind
+            );
+            return match kind {
+                Kind::Counter => Cell::Counter(Counter::detached()),
+                Kind::Gauge => Cell::Gauge(Gauge::detached()),
+                Kind::Summary => Cell::Summary(Summary::detached()),
+            };
+        }
+        if let Some((_, cell)) = family.series.iter().find(|(l, _)| *l == labels) {
+            return cell.clone();
+        }
+        let cell = match kind {
+            Kind::Counter => Cell::Counter(Counter::detached()),
+            Kind::Gauge => Cell::Gauge(Gauge::detached()),
+            Kind::Summary => Cell::Summary(Summary::detached()),
+        };
+        family.series.push((labels, cell.clone()));
+        cell
+    }
+
+    /// Register (or fetch) a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        match self.cell(name, help, Kind::Counter, labels) {
+            Cell::Counter(c) => c,
+            _ => Counter::detached(),
+        }
+    }
+
+    /// Register (or fetch) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        match self.cell(name, help, Kind::Gauge, labels) {
+            Cell::Gauge(g) => g,
+            _ => Gauge::detached(),
+        }
+    }
+
+    /// Register (or fetch) a windowed-percentile summary series.
+    pub fn summary(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Summary {
+        match self.cell(name, help, Kind::Summary, labels) {
+            Cell::Summary(s) => s,
+            _ => Summary::detached(),
+        }
+    }
+
+    /// Register a scrape-time refresh hook: `f` runs on the scraper's
+    /// thread at every [`Registry::refresh`] (render/snapshot), typically
+    /// to fold pull-only state (merged fleet windows, coding telemetry)
+    /// into gauges. Samplers must not call back into
+    /// render/snapshot/refresh.
+    pub fn sampler(&self, f: impl Fn() + Send + Sync + 'static) -> SamplerId {
+        let id = self.inner.next_sampler.fetch_add(1, Ordering::Relaxed);
+        self.inner.samplers.lock().unwrap().push((id, Box::new(f)));
+        SamplerId(id)
+    }
+
+    /// Remove a sampler registered with [`Registry::sampler`].
+    pub fn drop_sampler(&self, id: SamplerId) {
+        self.inner.samplers.lock().unwrap().retain(|(i, _)| *i != id.0);
+    }
+
+    /// Run every registered sampler (scrape-side; serialized across
+    /// concurrent scrapers).
+    pub fn refresh(&self) {
+        let samplers = self.inner.samplers.lock().unwrap();
+        for (_, f) in samplers.iter() {
+            f();
+        }
+    }
+
+    /// Current value of one counter/gauge series (`None` if absent).
+    /// Reads the live cell; does not run samplers — call
+    /// [`Registry::refresh`] first if sampled families must be fresh.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let labels = self.canonical_labels(labels);
+        let families = self.inner.families.read().unwrap();
+        let family = families.get(name)?;
+        let (_, cell) = family.series.iter().find(|(l, _)| *l == labels)?;
+        match cell {
+            Cell::Counter(c) => Some(c.get() as f64),
+            Cell::Gauge(g) => Some(g.get()),
+            Cell::Summary(_) => None,
+        }
+    }
+
+    /// Every (labels, value) of one counter/gauge family (empty if the
+    /// family is absent or a summary).
+    pub fn series(&self, name: &str) -> Vec<(Vec<(String, String)>, f64)> {
+        let families = self.inner.families.read().unwrap();
+        let Some(family) = families.get(name) else { return Vec::new() };
+        family
+            .series
+            .iter()
+            .filter_map(|(labels, cell)| match cell {
+                Cell::Counter(c) => Some((labels.clone(), c.get() as f64)),
+                Cell::Gauge(g) => Some((labels.clone(), g.get())),
+                Cell::Summary(_) => None,
+            })
+            .collect()
+    }
+
+    /// Render the registry as Prometheus text exposition format
+    /// (version 0.0.4), running samplers first. Scrape-side only.
+    pub fn render(&self) -> String {
+        self.refresh();
+        let mut out = String::new();
+        let families = self.inner.families.read().unwrap();
+        for (name, family) in families.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", escape_help(&family.help));
+            let _ = writeln!(out, "# TYPE {name} {}", family.kind.as_str());
+            for (labels, cell) in &family.series {
+                match cell {
+                    Cell::Counter(c) => {
+                        let _ = writeln!(out, "{name}{} {}", fmt_labels(labels, None), c.get());
+                    }
+                    Cell::Gauge(g) => {
+                        let _ =
+                            writeln!(out, "{name}{} {}", fmt_labels(labels, None), fmt_f64(g.get()));
+                    }
+                    Cell::Summary(s) => {
+                        for (q, ql) in QUANTILES {
+                            let _ = writeln!(
+                                out,
+                                "{name}{} {}",
+                                fmt_labels(labels, Some(ql)),
+                                fmt_f64(s.quantile(q))
+                            );
+                        }
+                        let _ = writeln!(
+                            out,
+                            "{name}_sum{} {}",
+                            fmt_labels(labels, None),
+                            fmt_f64(s.sum())
+                        );
+                        let _ =
+                            writeln!(out, "{name}_count{} {}", fmt_labels(labels, None), s.count());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The registry as one JSON object (the [`SnapshotLog`] sample and
+    /// the raw material of [`crate::telemetry::series`]), running
+    /// samplers first. Families map name → array of
+    /// `{labels, value}` (counters/gauges) or
+    /// `{labels, count, sum, p50, p99, p999}` (summaries).
+    ///
+    /// [`SnapshotLog`]: crate::telemetry::export::SnapshotLog
+    pub fn snapshot_json(&self) -> Json {
+        self.refresh();
+        let families = self.inner.families.read().unwrap();
+        let mut out = Json::obj();
+        for (name, family) in families.iter() {
+            let rows: Vec<Json> = family
+                .series
+                .iter()
+                .map(|(labels, cell)| {
+                    let mut lab = Json::obj();
+                    for (k, v) in labels {
+                        lab = lab.set(k.as_str(), v.as_str());
+                    }
+                    let row = Json::obj().set("labels", lab);
+                    match cell {
+                        Cell::Counter(c) => row.set("value", c.get()),
+                        Cell::Gauge(g) => row.set("value", g.get()),
+                        Cell::Summary(s) => row
+                            .set("count", s.count())
+                            .set("sum", s.sum())
+                            .set("p50", s.quantile(0.5))
+                            .set("p99", s.quantile(0.99))
+                            .set("p999", s.quantile(0.999)),
+                    }
+                })
+                .collect();
+            out = out.set(name.as_str(), Json::Arr(rows));
+        }
+        out
+    }
+}
+
+fn fmt_labels(labels: &[(String, String)], quantile: Option<&str>) -> String {
+    if labels.is_empty() && quantile.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some(q) = quantile {
+        parts.push(format!("quantile=\"{q}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Prometheus-safe float formatting: no NaN/Inf, integral values
+/// without a fraction.
+fn fmt_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return "0".to_string();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_shared_and_monotonic() {
+        let r = Registry::new();
+        let a = r.counter("t_total", "h", &[]);
+        let b = r.counter("t_total", "h", &[]);
+        a.inc();
+        b.add(4);
+        a.raise_to(3); // below current 5: no-op
+        assert_eq!(a.get(), 5);
+        b.raise_to(9);
+        assert_eq!(a.get(), 9);
+    }
+
+    #[test]
+    fn scoped_labels_stamp_and_sort() {
+        let r = Registry::new();
+        let s = r.scoped("shard", 2);
+        s.gauge("g", "h", &[("client", "7")]).set(1.5);
+        let series = r.series("g");
+        assert_eq!(series.len(), 1);
+        assert_eq!(
+            series[0].0,
+            vec![("client".to_string(), "7".to_string()), ("shard".to_string(), "2".to_string())]
+        );
+        assert_eq!(series[0].1, 1.5);
+        assert_eq!(r.value("g", &[("shard", "2"), ("client", "7")]), Some(1.5));
+    }
+
+    #[test]
+    fn kind_clash_detaches_instead_of_panicking() {
+        let r = Registry::new();
+        r.counter("x", "h", &[]).inc();
+        let g = r.gauge("x", "h", &[]);
+        g.set(7.0); // lands in a detached cell
+        assert_eq!(r.value("x", &[]), Some(1.0));
+        assert!(r.render().contains("x 1"));
+    }
+
+    #[test]
+    fn summary_quantiles_and_render() {
+        let r = Registry::new();
+        let s = r.summary("lat_ms", "h", &[]);
+        assert_eq!(s.quantile(0.99), 0.0, "empty summary reads zero, not NaN");
+        for i in 1..=100 {
+            s.observe(i as f64);
+        }
+        assert_eq!(s.quantile(0.5), 50.0);
+        assert_eq!(s.quantile(0.99), 99.0);
+        assert_eq!(s.count(), 100);
+        let text = r.render();
+        assert!(text.contains("lat_ms{quantile=\"0.5\"} 50"));
+        assert!(text.contains("lat_ms_count 100"));
+    }
+
+    #[test]
+    fn summary_ring_wraps_to_recent_samples() {
+        let r = Registry::new();
+        let s = r.summary("w", "h", &[]);
+        for _ in 0..SUMMARY_CAPACITY {
+            s.observe(1.0);
+        }
+        for _ in 0..SUMMARY_CAPACITY {
+            s.observe(100.0);
+        }
+        assert_eq!(s.quantile(0.5), 100.0, "old samples aged out");
+    }
+
+    #[test]
+    fn gauges_never_export_nan() {
+        let r = Registry::new();
+        let g = r.gauge("n", "h", &[]);
+        g.set(f64::NAN);
+        assert_eq!(g.get(), 0.0);
+        g.set(f64::INFINITY);
+        assert_eq!(g.get(), 0.0);
+    }
+
+    #[test]
+    fn samplers_run_on_refresh_and_drop() {
+        let r = Registry::new();
+        let g = r.gauge("sampled", "h", &[]);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        let g2 = g.clone();
+        let id = r.sampler(move || {
+            h2.fetch_add(1, Ordering::Relaxed);
+            g2.set(42.0);
+        });
+        let text = r.render();
+        assert!(text.contains("sampled 42"));
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        r.drop_sampler(id);
+        r.refresh();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = Registry::new();
+        r.gauge("e", "h", &[("k", "a\"b\\c")]).set(1.0);
+        assert!(r.render().contains("e{k=\"a\\\"b\\\\c\"} 1"));
+    }
+}

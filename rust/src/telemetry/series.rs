@@ -1,0 +1,345 @@
+//! Time-series capture from the registry: the benches' and examples'
+//! `bench_out/*_timeseries.json` rows, sampled from the *same* gauge
+//! families an operator would scrape, instead of bespoke per-bench
+//! sampling loops.
+//!
+//! A [`Capture`] is pointed at a window-gauge family prefix
+//! (`parm_session_window_*` for a bare session,
+//! `parm_fleet_window_*` for a control-plane fleet, or
+//! `parm_shard_window_*` plus a `shard` label for one shard) and
+//! sampled either on the caller's pacing loop ([`Capture::tick`]) or
+//! at explicit instants ([`Capture::sample`] / [`Capture::mark`]).
+//! Every sample runs the registry's samplers first, so pull-only state
+//! (merged fleet windows, coding telemetry) is as fresh as a scrape
+//! would see it.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use super::registry::Registry;
+use crate::util::json::Json;
+
+/// One periodic sample of a live window — the time-series view behind
+/// "p99 over time across a fault event" plots (Figure 11's story told
+/// as a timeline instead of end-of-run aggregates).
+#[derive(Clone, Debug)]
+pub struct TimeSeriesRow {
+    /// Milliseconds since the run started.
+    pub t_ms: f64,
+    /// Queries resolved inside the window at this instant.
+    pub resolved: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    pub qps: f64,
+    pub recovery_rate: f64,
+    pub reject_rate: f64,
+    pub default_rate: f64,
+}
+
+impl TimeSeriesRow {
+    pub fn from_snapshot(
+        t: Duration,
+        w: &crate::coordinator::metrics::WindowSnapshot,
+    ) -> TimeSeriesRow {
+        TimeSeriesRow {
+            t_ms: t.as_secs_f64() * 1e3,
+            resolved: w.resolved,
+            p50_ms: w.p50_ms,
+            p99_ms: w.p99_ms,
+            p999_ms: w.p999_ms,
+            qps: w.qps,
+            recovery_rate: w.recovery_rate,
+            reject_rate: w.reject_rate,
+            default_rate: w.default_rate,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("t_ms", self.t_ms)
+            .set("resolved", self.resolved as usize)
+            .set("p50_ms", self.p50_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("p999_ms", self.p999_ms)
+            .set("qps", self.qps)
+            .set("recovery_rate", self.recovery_rate)
+            .set("reject_rate", self.reject_rate)
+            .set("default_rate", self.default_rate)
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:>9} {:>7} {:>9} {:>9} {:>9} {:>8} {:>9}",
+            "t(ms)", "n", "p50(ms)", "p99(ms)", "p99.9(ms)", "qps", "recovery"
+        )
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:>9.0} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>8.0} {:>9.3}",
+            self.t_ms, self.resolved, self.p50_ms, self.p99_ms, self.p999_ms, self.qps,
+            self.recovery_rate
+        )
+    }
+}
+
+/// Samples window-gauge families out of a [`Registry`] into
+/// [`TimeSeriesRow`]-shaped JSON rows.
+pub struct Capture {
+    registry: Registry,
+    /// Gauge family prefix, e.g. `parm_session_window_`.
+    prefix: String,
+    /// Label selector applied to every family read.
+    labels: Vec<(String, String)>,
+    /// Extra row columns: (row key, full family name, extra labels
+    /// appended to the shared selector).
+    extras: Vec<(String, String, Vec<(String, String)>)>,
+    every: Duration,
+    start: Instant,
+    next: Instant,
+    rows: Vec<Json>,
+}
+
+impl Capture {
+    /// Capture a bare session's window (`parm_session_window_*`).
+    pub fn session(registry: &Registry, every: Duration) -> Capture {
+        Capture::new(registry, "parm_session_window_", every)
+    }
+
+    /// Capture a control-plane fleet's merged window
+    /// (`parm_fleet_window_*`).
+    pub fn fleet(registry: &Registry, every: Duration) -> Capture {
+        Capture::new(registry, "parm_fleet_window_", every)
+    }
+
+    /// Capture an arbitrary window-gauge family prefix.
+    pub fn new(registry: &Registry, prefix: &str, every: Duration) -> Capture {
+        assert!(!every.is_zero(), "capture cadence must be non-zero");
+        let now = Instant::now();
+        Capture {
+            registry: registry.clone(),
+            prefix: prefix.to_string(),
+            labels: Vec::new(),
+            extras: Vec::new(),
+            every,
+            start: now,
+            next: now + every,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Restrict reads to series carrying this label (e.g.
+    /// `("shard", "0")` against `parm_shard_window_*`).
+    pub fn with_label(mut self, key: &str, value: impl std::fmt::Display) -> Capture {
+        self.labels.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Add a column sampled from an arbitrary counter/gauge family
+    /// (e.g. `("last_r", "parm_scheme_last_r")`), read with the same
+    /// label selector as the window gauges.
+    pub fn with_extra(mut self, row_key: &str, family: &str) -> Capture {
+        self.extras.push((row_key.to_string(), family.to_string(), Vec::new()));
+        self
+    }
+
+    /// Like [`Capture::with_extra`], but with additional labels on the
+    /// read — how a fleet capture samples one series out of a labelled
+    /// family (e.g. `("live", "parm_shards", &[("state", "live")])`).
+    pub fn with_extra_labels(
+        mut self,
+        row_key: &str,
+        family: &str,
+        labels: &[(&str, &str)],
+    ) -> Capture {
+        let labels = labels.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect();
+        self.extras.push((row_key.to_string(), family.to_string(), labels));
+        self
+    }
+
+    /// Sample if the cadence is due (call from a pacing loop; cheap
+    /// when not due). Returns whether a sample was taken. Lagged ticks
+    /// skip forward instead of bursting.
+    pub fn tick(&mut self) -> bool {
+        let now = Instant::now();
+        if now < self.next {
+            return false;
+        }
+        self.sample_at(now);
+        let mut next = self.next + self.every;
+        while next <= now {
+            next += self.every;
+        }
+        self.next = next;
+        true
+    }
+
+    /// Take one sample now, regardless of cadence.
+    pub fn sample(&mut self) {
+        self.sample_at(Instant::now());
+    }
+
+    /// Take one sample now, annotated with an `event` field — how the
+    /// elastic bench stamps reconfiguration verbs onto its timeline.
+    pub fn mark(&mut self, event: &str) {
+        let row = self.row(Instant::now()).set("event", event);
+        self.rows.push(row);
+    }
+
+    fn sample_at(&mut self, now: Instant) {
+        let row = self.row(now);
+        self.rows.push(row);
+    }
+
+    fn read(&self, family: &str) -> f64 {
+        self.read_with(family, &[])
+    }
+
+    fn read_with(&self, family: &str, extra: &[(String, String)]) -> f64 {
+        let labels: Vec<(&str, &str)> = self
+            .labels
+            .iter()
+            .chain(extra.iter())
+            .map(|(k, v)| (k.as_str(), v.as_str()))
+            .collect();
+        self.registry.value(family, &labels).unwrap_or(0.0)
+    }
+
+    fn row(&self, now: Instant) -> Json {
+        // Same freshness as a scrape: run the samplers first.
+        self.registry.refresh();
+        let g = |suffix: &str| self.read(&format!("{}{suffix}", self.prefix));
+        let mut row = TimeSeriesRow {
+            t_ms: now.saturating_duration_since(self.start).as_secs_f64() * 1e3,
+            resolved: g("resolved") as u64,
+            p50_ms: g("p50_ms"),
+            p99_ms: g("p99_ms"),
+            p999_ms: g("p999_ms"),
+            qps: g("qps"),
+            recovery_rate: g("recovery_rate"),
+            reject_rate: g("reject_rate"),
+            default_rate: g("default_rate"),
+        }
+        .to_json();
+        for (key, family, extra) in &self.extras {
+            row = row.set(key.as_str(), self.read_with(family, extra));
+        }
+        row
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn rows(&self) -> &[Json] {
+        &self.rows
+    }
+
+    /// The captured rows as one JSON array.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.rows.clone())
+    }
+
+    /// Print the table and write the rows to `bench_out/<name>.json`
+    /// (the shape every `*_timeseries.json` consumer already reads).
+    pub fn emit(&self, name: &str) -> Option<PathBuf> {
+        println!("\n=== {name} ===");
+        println!("{}", TimeSeriesRow::header());
+        for row in &self.rows {
+            let f = |k: &str| row.at(&[k]).as_f64().unwrap_or(0.0);
+            let line = TimeSeriesRow {
+                t_ms: f("t_ms"),
+                resolved: f("resolved") as u64,
+                p50_ms: f("p50_ms"),
+                p99_ms: f("p99_ms"),
+                p999_ms: f("p999_ms"),
+                qps: f("qps"),
+                recovery_rate: f("recovery_rate"),
+                reject_rate: f("reject_rate"),
+                default_rate: f("default_rate"),
+            }
+            .line();
+            match row.at(&["event"]).as_str() {
+                Some(ev) => println!("{line}  <- {ev}"),
+                None => println!("{line}"),
+            }
+        }
+        let _ = std::fs::create_dir_all("bench_out");
+        let path = PathBuf::from(format!("bench_out/{name}.json"));
+        match std::fs::write(&path, self.to_json().to_string()) {
+            Ok(()) => {
+                println!("(wrote {})", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                log::warn!("telemetry: cannot write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::WindowSnapshot;
+
+    fn publish(registry: &Registry, p50: f64, resolved: u64) {
+        let snap = WindowSnapshot {
+            p50_ms: p50,
+            resolved,
+            qps: 10.0,
+            ..WindowSnapshot::zero(Duration::from_secs(1))
+        };
+        crate::telemetry::publish_window(registry, "parm_session_window_", &[], &snap);
+    }
+
+    #[test]
+    fn capture_reads_window_gauges() {
+        let registry = Registry::new();
+        publish(&registry, 4.5, 12);
+        let mut cap = Capture::session(&registry, Duration::from_millis(1));
+        cap.sample();
+        publish(&registry, 9.0, 20);
+        cap.mark("kill");
+        assert_eq!(cap.len(), 2);
+        let rows = cap.rows();
+        assert_eq!(rows[0].at(&["p50_ms"]).as_f64(), Some(4.5));
+        assert_eq!(rows[0].at(&["resolved"]).as_f64(), Some(12.0));
+        assert_eq!(rows[1].at(&["p50_ms"]).as_f64(), Some(9.0));
+        assert_eq!(rows[1].at(&["event"]).as_str(), Some("kill"));
+        assert!(rows[1].at(&["t_ms"]).as_f64().unwrap() >= rows[0].at(&["t_ms"]).as_f64().unwrap());
+    }
+
+    #[test]
+    fn capture_tick_respects_cadence() {
+        let registry = Registry::new();
+        publish(&registry, 1.0, 1);
+        let mut cap = Capture::session(&registry, Duration::from_secs(3600));
+        assert!(!cap.tick(), "cadence not due yet");
+        assert!(cap.is_empty());
+    }
+
+    #[test]
+    fn capture_extras_and_labels() {
+        let registry = Registry::new();
+        let shard = registry.scoped("shard", 1);
+        let snap = WindowSnapshot { p99_ms: 7.0, ..WindowSnapshot::zero(Duration::from_secs(1)) };
+        crate::telemetry::publish_window(&shard, "parm_shard_window_", &[], &snap);
+        shard.gauge("parm_scheme_last_r", "h", &[]).set(3.0);
+        shard.gauge("parm_shards", "h", &[("state", "live")]).set(5.0);
+        let mut cap = Capture::new(&registry, "parm_shard_window_", Duration::from_millis(1))
+            .with_label("shard", 1)
+            .with_extra("last_r", "parm_scheme_last_r")
+            .with_extra_labels("live", "parm_shards", &[("state", "live")]);
+        cap.sample();
+        assert_eq!(cap.rows()[0].at(&["p99_ms"]).as_f64(), Some(7.0));
+        assert_eq!(cap.rows()[0].at(&["last_r"]).as_f64(), Some(3.0));
+        assert_eq!(cap.rows()[0].at(&["live"]).as_f64(), Some(5.0));
+    }
+}

@@ -610,6 +610,94 @@ fn ring_scale_out_remaps_minimally_and_scale_in_restores_exactly() {
     }
 }
 
+/// INVARIANT (fleet window merge): for any set of per-shard snapshots —
+/// including zero-resolved shards and snapshots poisoned with NaN or
+/// infinite quantiles/rates — `WindowSnapshot::merge_all` yields all-finite
+/// fields, exact counts, count-exact rates, and quantiles inside the hull
+/// of the finite weighted inputs. An empty fleet merges to zero.
+#[test]
+fn window_merge_all_is_finite_exact_and_bounded() {
+    use parm::coordinator::metrics::WindowSnapshot;
+    use std::time::Duration;
+
+    assert_eq!(WindowSnapshot::merge_all(&[]).resolved, 0);
+    assert_eq!(WindowSnapshot::merge_all(&[]).p99_ms, 0.0);
+
+    for seed in 0..200u64 {
+        let mut rng = Pcg64::new(10_000 + seed);
+        let shards = 1 + rng.below(8) as usize;
+        let mut snaps = Vec::new();
+        let (mut resolved_sum, mut rejected_sum) = (0u64, 0u64);
+        let mut recovered_sum = 0.0f64;
+        // Hull of the p99s that actually carry weight (finite, resolved > 0).
+        let (mut p99_lo, mut p99_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for _ in 0..shards {
+            let mut s = WindowSnapshot::zero(Duration::from_secs(10));
+            // Roughly a third of the shards are idle this window.
+            s.resolved = if rng.next_f64() < 0.3 { 0 } else { rng.below(500) };
+            s.rejected = rng.below(100);
+            s.p50_ms = rng.next_f64() * 40.0;
+            s.p99_ms = s.p50_ms + rng.next_f64() * 60.0;
+            s.p999_ms = s.p99_ms * 1.2;
+            s.recovery_rate = rng.next_f64();
+            s.default_rate = rng.next_f64() * (1.0 - s.recovery_rate);
+            s.qps = s.resolved as f64 / 10.0;
+            // Poison ~1 in 4 snapshots with a non-finite field, as a
+            // buggy or torn external producer would.
+            if rng.next_f64() < 0.25 {
+                match rng.below(4) {
+                    0 => s.p99_ms = f64::NAN,
+                    1 => s.qps = f64::INFINITY,
+                    2 => s.recovery_rate = f64::NAN,
+                    _ => s.p50_ms = f64::NEG_INFINITY,
+                }
+            }
+            resolved_sum += s.resolved;
+            rejected_sum += s.rejected;
+            recovered_sum += if s.recovery_rate.is_finite() {
+                s.recovery_rate * s.resolved as f64
+            } else {
+                0.0
+            };
+            if s.resolved > 0 {
+                let p = if s.p99_ms.is_finite() { s.p99_ms } else { 0.0 };
+                p99_lo = p99_lo.min(p);
+                p99_hi = p99_hi.max(p);
+            }
+            snaps.push(s);
+        }
+        let m = WindowSnapshot::merge_all(&snaps);
+        for (name, v) in [
+            ("p50_ms", m.p50_ms),
+            ("p99_ms", m.p99_ms),
+            ("p999_ms", m.p999_ms),
+            ("recovery_rate", m.recovery_rate),
+            ("reject_rate", m.reject_rate),
+            ("default_rate", m.default_rate),
+            ("qps", m.qps),
+        ] {
+            assert!(v.is_finite(), "seed {seed}: merged {name} = {v} not finite");
+        }
+        assert_eq!(m.resolved, resolved_sum, "seed {seed}: counts exact");
+        assert_eq!(m.rejected, rejected_sum, "seed {seed}: counts exact");
+        let offered = resolved_sum + rejected_sum;
+        let want_reject = if offered == 0 { 0.0 } else { rejected_sum as f64 / offered as f64 };
+        assert!((m.reject_rate - want_reject).abs() < 1e-9, "seed {seed}");
+        let want_recovery =
+            if resolved_sum == 0 { 0.0 } else { recovered_sum / resolved_sum as f64 };
+        assert!((m.recovery_rate - want_recovery).abs() < 1e-9, "seed {seed}");
+        if resolved_sum == 0 {
+            assert_eq!(m.p99_ms, 0.0, "seed {seed}: no weight, zero quantiles");
+        } else {
+            assert!(
+                m.p99_ms >= p99_lo - 1e-9 && m.p99_ms <= p99_hi + 1e-9,
+                "seed {seed}: p99 {} outside weighted hull [{p99_lo}, {p99_hi}]",
+                m.p99_ms
+            );
+        }
+    }
+}
+
 /// INVARIANT (reconfiguration contract): drain/restore/remove are idempotent
 /// or clean errors under any operation sequence — never a panic, `remove`
 /// never retires the last live shard, and `route` answers exactly when at

@@ -1,0 +1,248 @@
+//! End-to-end telemetry: a live serving frontend scraped over real TCP
+//! while adversarial ("wedged") scrapers hold connections open, an
+//! instance dies mid-run, and admission sheds load.
+//!
+//! The contract under test is the exporter's core promise: scraping is
+//! strictly decoupled from serving. A scraper that connects and then
+//! stalls — never sending a request, or reading one byte of the
+//! response and then sitting on the socket — may wedge its own
+//! connection thread until a timeout, but must never delay a `submit`,
+//! drop a resolution, or skew the counters. Meanwhile a healthy scrape
+//! taken during the fault must show the standard family catalogue, and
+//! a second scrape must observe counters monotonically.
+//!
+//! Like the other cluster suites, this spawns a full simulated cluster:
+//! it runs serialized and skips (with a message) if artifacts are
+//! missing under `--features pjrt`.
+
+mod common;
+
+use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use common::{FaultScript, FaultSurface};
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::{AdmissionPolicy, SubmitError};
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
+use parm::experiments::latency;
+use parm::telemetry::Exporter;
+use parm::workload::QuerySource;
+
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup() -> Option<(Manifest, QuerySource)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP telemetry: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    Some((m, src))
+}
+
+fn models(m: &Manifest, k: usize) -> Option<ModelSet> {
+    match latency::load_models(m, 1, k, 1, false) {
+        Ok(ms) => Some(ms),
+        Err(e) => {
+            eprintln!("SKIP telemetry: {e}");
+            None
+        }
+    }
+}
+
+/// One healthy scrape: full request, read to EOF, return the body.
+fn scrape(addr: SocketAddr) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect to exporter");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).expect("read scrape response");
+    out
+}
+
+/// The value of an *unlabelled* series in a Prometheus text rendering.
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        l.strip_prefix(name)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .and_then(|v| v.trim().parse().ok())
+    })
+}
+
+/// A scraper frozen mid-conversation. `request` controls how far it
+/// gets before stalling: `false` connects and never speaks (wedging the
+/// connection thread in its request read), `true` sends the request and
+/// reads a single byte of the response, then sits on the socket.
+struct WedgedScraper {
+    stream: TcpStream,
+}
+
+impl WedgedScraper {
+    fn new(addr: SocketAddr, request: bool) -> WedgedScraper {
+        let mut stream = TcpStream::connect(addr).expect("connect to exporter");
+        if request {
+            stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+            let mut one = [0u8; 1];
+            assert_eq!(stream.read(&mut one).expect("first response byte"), 1);
+            assert_eq!(one[0], b'H', "response starts with the HTTP status line");
+        }
+        // From here on: total silence. The socket stays open until the
+        // struct drops at the end of the test.
+        WedgedScraper { stream }
+    }
+}
+
+/// The wedged-scraper chaos drill. Open-loop load with an instance kill
+/// mid-run while four stalled scrapers camp on the exporter; healthy
+/// scrapes interleave. Asserts exactly-once delivery, full accounting
+/// (offered = resolved + rejected), monotonic counters across scrapes,
+/// and — the headline — that no submit call stalled on scraper state.
+#[test]
+fn wedged_scraper_never_stalls_the_serving_path() {
+    let _guard = serial();
+    const N: u64 = 300;
+    const KILL_STEP: u64 = 120;
+    let Some((m, src)) = setup() else { return };
+    let Some(models) = models(&m, 2) else { return };
+
+    let mut cfg =
+        ServiceConfig::defaults(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] }, &GPU);
+    cfg.m = 4;
+    cfg.shuffles = 0;
+    cfg.seed = 0x7E1E;
+    cfg.slo = Some(Duration::from_secs(3)); // backstop for doubly-lost groups
+    cfg.admission = AdmissionPolicy::RejectAbove { backlog: 64 };
+
+    let frontend = ServiceBuilder::new(cfg)
+        .serve(&models, &src.queries[0])
+        .expect("frontend builds");
+    let exporter =
+        Exporter::bind("127.0.0.1:0", frontend.registry()).expect("exporter binds");
+    let addr = exporter.local_addr();
+
+    // Camp four stalled scrapers on the endpoint before any load: two
+    // silent connections (wedge the request read) and two that take one
+    // byte of a response and freeze (wedge any further write).
+    let _wedged: Vec<WedgedScraper> = vec![
+        WedgedScraper::new(addr, false),
+        WedgedScraper::new(addr, false),
+        WedgedScraper::new(addr, true),
+        WedgedScraper::new(addr, true),
+    ];
+
+    let surface = FaultSurface::single(frontend.fault_plan(), 4);
+    let mut script = FaultScript::builder(0x7E1E).kill_instance_at(KILL_STEP, 0, 0).build();
+
+    let client = frontend.client();
+    let mut submitted = HashSet::new();
+    let mut rejected = 0u64;
+    let mut got = Vec::new();
+    let mut max_submit = Duration::ZERO;
+    let mut mid_scrape = String::new();
+    for i in 0..N {
+        script.apply(i, &surface);
+        if i == KILL_STEP + 40 {
+            // A healthy scrape mid-fault, concurrent with the wedged
+            // four: the exporter answers each connection independently.
+            mid_scrape = scrape(addr);
+        }
+        let t0 = Instant::now();
+        match client.submit(src.queries[(i as usize) % src.len()].clone()) {
+            Ok(id) => {
+                assert!(submitted.insert(id), "frontend ids must be unique");
+            }
+            Err(SubmitError::Rejected { .. } | SubmitError::SloShed { .. }) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        max_submit = max_submit.max(t0.elapsed());
+        got.extend(client.poll());
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(script.done(), "the scripted kill fired");
+
+    // Exactly-once delivery: every accepted query resolves, to the
+    // submitting client, with no duplicates — fault and wedges included.
+    while got.len() < submitted.len() {
+        match client.next(Duration::from_secs(10)) {
+            Some(r) => got.push(r),
+            None => break,
+        }
+    }
+    assert_eq!(got.len(), submitted.len(), "every accepted query resolves");
+    let ids: HashSet<u64> = got.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), got.len(), "no duplicate resolutions");
+    assert_eq!(ids, submitted, "exactly the accepted ids");
+
+    // The submit path never waits on scraper state. The exporter's
+    // per-connection timeouts are 500 ms (read) and 2 s (write): if a
+    // wedged connection could reach into `submit`, at least one call
+    // would have absorbed a timeout-scale stall. The bound leaves
+    // generous room for scheduler noise while staying well below the
+    // smallest timeout.
+    assert!(
+        max_submit < Duration::from_millis(400),
+        "submit stalled {max_submit:?} — serving path coupled to scraper state?"
+    );
+
+    // The mid-fault healthy scrape carries the catalogue's hot families.
+    assert!(mid_scrape.starts_with("HTTP/1.0 200 OK"), "got: {mid_scrape}");
+    for family in [
+        "parm_queries_submitted_total",
+        "parm_queries_resolved_total",
+        "parm_queries_rejected_total",
+        "parm_outcome_total",
+        "parm_latency_ms",
+        "parm_admission_total",
+    ] {
+        assert!(mid_scrape.contains(family), "mid-run scrape is missing {family}");
+    }
+    let mid_submitted = metric_value(&mid_scrape, "parm_queries_submitted_total")
+        .expect("submitted counter is an unlabelled series");
+
+    // Full accounting, client-side and scrape-side.
+    let accepted = submitted.len() as u64;
+    let st = client.stats();
+    assert_eq!(st.submitted, accepted);
+    assert_eq!(st.rejected, rejected);
+    assert_eq!(st.resolved, accepted);
+
+    let res = frontend.shutdown().expect("clean shutdown");
+    assert_eq!(res.metrics.total(), accepted);
+    assert_eq!(res.metrics.offered(), accepted + rejected, "offered = resolved + rejected");
+
+    // The exporter outlives the session: a post-shutdown scrape still
+    // answers, counters are monotonic and agree with the run record.
+    let final_scrape = scrape(addr);
+    let end_submitted = metric_value(&final_scrape, "parm_queries_submitted_total")
+        .expect("submitted counter survives shutdown");
+    let end_resolved = metric_value(&final_scrape, "parm_queries_resolved_total").unwrap();
+    let end_rejected = metric_value(&final_scrape, "parm_queries_rejected_total").unwrap();
+    assert!(
+        end_submitted >= mid_submitted,
+        "counters must be monotonic across scrapes ({mid_submitted} -> {end_submitted})"
+    );
+    assert_eq!(end_submitted, accepted as f64, "scrape agrees with the client");
+    assert_eq!(end_resolved, accepted as f64);
+    assert_eq!(end_rejected, rejected as f64);
+    // Shutdown published the final window, so the series view an
+    // operator (or `telemetry::series::Capture`) reads is present too.
+    assert!(
+        final_scrape.contains("parm_session_window_seconds"),
+        "window gauges missing from the final scrape"
+    );
+
+    exporter.shutdown();
+}
