@@ -1,0 +1,226 @@
+//! Journal-mining throughput: how fast does the diagnostics layer
+//! (`coordinator::trace`) chew through a serving-path journal?
+//!
+//! Synthesizes a sharded chaos run's event stream (coding groups of
+//! k=2 with parity, periodic instance kills forcing decodes, a tail of
+//! admission rejects), then times each pipeline stage in isolation:
+//!
+//! - `decode`    — binary codec, bytes → `Vec<TimedEvent>`;
+//! - `replay`    — full invariant verification + byte-identical
+//!                 re-encode (the `parm replay` path);
+//! - `analyze`   — span trees + group fates + fault windows (the
+//!                 `parm trace` path);
+//! - `mine`      — `workload::Trace::from_journal` (the `parm mine`
+//!                 path);
+//! - `render`    — JSON report + Chrome trace-event export.
+//!
+//! Emits `bench_out/trace_mining.txt` with per-stage latency and
+//! events-per-second throughput. Env knobs: PARM_BENCH_QUERIES
+//! (default 20_000).
+
+use std::time::Duration;
+
+use parm::coordinator::journal::{self, EndTotals, Event, Recorder, TimedEvent};
+use parm::coordinator::trace::{analyze, chrome, report, AnalyzeOpts};
+use parm::util::stats;
+use parm::workload::trace::Trace;
+
+const K: u64 = 2;
+const SHARDS: u64 = 2;
+
+/// Deterministic synthetic run: `n` queries through k=2 coding groups
+/// striped over two shard tags, every 16th group losing a slot to a
+/// kill (decode + reconstructed outcome), plus a sprinkle of rejects.
+/// Returns the event stream and the matching footer totals.
+fn synth(n: u64) -> (Vec<TimedEvent>, EndTotals) {
+    let mut ev = Vec::with_capacity(n as usize * 6 / 2);
+    let mut totals = EndTotals::default();
+    let mut ts = 0u64;
+    let mut step = |ts: &mut u64| {
+        *ts += 37;
+        *ts
+    };
+    ev.push(TimedEvent {
+        ts_us: 0,
+        shard: 0,
+        event: Event::Start { seed: 0xBE7C, mode: "parm".into(), shards: SHARDS },
+    });
+    let groups = n / K;
+    for g in 0..groups {
+        let shard = g % SHARDS;
+        let qid = |slot: u64| (g / SHARDS) * K + slot;
+        for slot in 0..K {
+            ev.push(TimedEvent {
+                ts_us: step(&mut ts),
+                shard,
+                event: Event::Submit { qid: qid(slot) },
+            });
+        }
+        for slot in 0..K {
+            ev.push(TimedEvent {
+                ts_us: step(&mut ts),
+                shard,
+                event: Event::Dispatch { group: g, kind: 0, detail: slot, queries: 1 },
+            });
+        }
+        ev.push(TimedEvent {
+            ts_us: step(&mut ts),
+            shard,
+            event: Event::Dispatch { group: g, kind: 1, detail: 0, queries: 0 },
+        });
+        ev.push(TimedEvent {
+            ts_us: step(&mut ts),
+            shard,
+            event: Event::Seal { group: g, k: K, r: 1 },
+        });
+        let killed = g % 16 == 7;
+        if killed {
+            ev.push(TimedEvent {
+                ts_us: step(&mut ts),
+                shard,
+                event: Event::Fault { instance: 0, kind: 1, arg: 0 },
+            });
+            ev.push(TimedEvent {
+                ts_us: step(&mut ts),
+                shard,
+                event: Event::Decode { group: g, slot: 0 },
+            });
+            totals.reconstructions += 1;
+        }
+        for slot in 0..K {
+            let recovered = killed && slot == 0;
+            let lat = if recovered { 9_000 } else { 2_000 };
+            ev.push(TimedEvent {
+                ts_us: step(&mut ts) + lat,
+                shard,
+                event: Event::Complete {
+                    qid: qid(slot),
+                    outcome: u8::from(recovered),
+                    latency_us: lat,
+                },
+            });
+            if recovered {
+                totals.reconstructed += 1;
+            } else {
+                totals.native += 1;
+            }
+        }
+        if g % 64 == 11 {
+            ev.push(TimedEvent { ts_us: step(&mut ts), shard, event: Event::Reject { n: 1 } });
+            totals.rejected += 1;
+        }
+    }
+    // Timestamps above jump around (the +lat completes); journals are
+    // globally non-decreasing, so sort before footing.
+    ev.sort_by_key(|te| te.ts_us);
+    totals.wall_us = ev.last().map_or(0, |te| te.ts_us);
+    ev.push(TimedEvent {
+        ts_us: totals.wall_us,
+        shard: 0,
+        event: Event::End {
+            native: totals.native,
+            reconstructed: totals.reconstructed,
+            replica: totals.replica,
+            defaulted: totals.defaulted,
+            rejected: totals.rejected,
+            reconstructions: totals.reconstructions,
+            wall_us: totals.wall_us,
+        },
+    });
+    (ev, totals)
+}
+
+/// Encode the synthetic stream through the real recorder (its clock
+/// stamps the bytes; content is what the codec benches care about).
+fn encode(events: &[TimedEvent], totals: &EndTotals) -> Vec<u8> {
+    let rec = Recorder::start(0xBE7C, "parm", SHARDS);
+    let tags: Vec<Recorder> = (0..SHARDS).map(|s| rec.tagged(s)).collect();
+    for te in events {
+        match &te.event {
+            Event::Start { .. } | Event::End { .. } => {}
+            e => tags[te.shard as usize].record(e),
+        }
+    }
+    rec.finish_totals(totals)
+}
+
+fn main() {
+    let n: u64 = std::env::var("PARM_BENCH_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+    let (events, totals) = synth(n);
+    let bytes = encode(&events, &totals);
+    let n_events = events.len();
+    println!(
+        "trace-mining bench: {n} queries, {n_events} events, {} journal bytes",
+        bytes.len()
+    );
+
+    let opts = AnalyzeOpts::default();
+    // Sanity before timing: the synthetic journal verifies, and the
+    // analysis sees every query with exact phase accounting.
+    journal::replay(&bytes).expect("synthetic journal replays");
+    let a = analyze(&events, &opts);
+    assert_eq!(a.spans.len(), n as usize);
+    assert_eq!(a.open_spans(), 0);
+    assert_eq!(a.outcome_counts().reconstructed, totals.reconstructed);
+    for s in &a.spans {
+        let p = s.phases().expect("completed");
+        assert_eq!(p.queue_us + p.seal_wait_us + p.decode_wait_us + p.tail_us, p.total_us);
+    }
+    let mined = Trace::from_journal(&events).expect("mines");
+    assert_eq!(mined.len(), n as usize);
+
+    let mut lines = vec![format!(
+        "{:<28} {:>10} {:>10} {:>10} {:>14}",
+        "stage", "p50 ms", "p99 ms", "mean ms", "events/s"
+    )];
+    let budget = Duration::from_millis(400);
+    let mut row = |label: &str, s: &mut stats::Summary| {
+        let line = format!(
+            "{:<28} {:>10.2} {:>10.2} {:>10.2} {:>14.0}",
+            label,
+            s.median(),
+            s.p99(),
+            s.mean(),
+            n_events as f64 / (s.mean() / 1e3)
+        );
+        println!("{line}");
+        lines.push(line);
+    };
+
+    let mut s = stats::bench("decode", 3, 20, budget, || {
+        std::hint::black_box(journal::decode(&bytes).unwrap());
+    });
+    row("decode (bytes -> events)", &mut s);
+
+    let mut s = stats::bench("replay", 3, 20, budget, || {
+        std::hint::black_box(journal::replay(&bytes).unwrap());
+    });
+    row("replay (verify + re-encode)", &mut s);
+
+    let mut s = stats::bench("analyze", 3, 20, budget, || {
+        std::hint::black_box(analyze(&events, &opts));
+    });
+    row("analyze (spans + windows)", &mut s);
+
+    let mut s = stats::bench("mine", 3, 20, budget, || {
+        std::hint::black_box(Trace::from_journal(&events).unwrap());
+    });
+    row("mine (journal -> Trace)", &mut s);
+
+    let mut s = stats::bench("render-json", 3, 20, budget, || {
+        std::hint::black_box(report::render_json(&a).to_string());
+    });
+    row("render (json report)", &mut s);
+
+    let mut s = stats::bench("render-chrome", 3, 20, budget, || {
+        std::hint::black_box(chrome::chrome_trace(&a));
+    });
+    row("render (chrome export)", &mut s);
+
+    let _ = std::fs::create_dir_all("bench_out");
+    let _ = std::fs::write("bench_out/trace_mining.txt", lines.join("\n"));
+    println!("(wrote bench_out/trace_mining.txt)");
+}

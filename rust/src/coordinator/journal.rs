@@ -217,8 +217,13 @@ pub enum JournalError {
     NonCanonical(usize),
     #[error("unknown event kind {kind} at byte {at}")]
     UnknownKind { kind: u8, at: usize },
-    #[error("journal invariant violated: {0}")]
-    Invariant(String),
+    #[error("journal invariant violated at record {at}: {msg}")]
+    Invariant {
+        /// Index of the first record that violated the invariant (the
+        /// event index `parm replay` reports).
+        at: u64,
+        msg: String,
+    },
 }
 
 struct Cursor<'a> {
@@ -408,25 +413,68 @@ fn decode_event(cur: &mut Cursor) -> Result<Event, JournalError> {
     })
 }
 
-/// Decode a journal into its timed event sequence (header validated,
-/// canonicality *not* asserted — [`replay`] does that).
-pub fn decode(bytes: &[u8]) -> Result<Vec<TimedEvent>, JournalError> {
+/// Lazy record iterator over a journal's bytes — the iteration API the
+/// trace/mining layer ([`crate::coordinator::trace`]) walks journals
+/// with, without paying replay's re-verification. Decoding stops at the
+/// first malformed record: the error is yielded once and the iterator
+/// then fuses (no infinite loops on garbled input).
+pub struct EventIter<'a> {
+    cur: Cursor<'a>,
+    ts: u64,
+    failed: bool,
+}
+
+impl<'a> EventIter<'a> {
+    fn read_one(&mut self) -> Result<TimedEvent, JournalError> {
+        let start = self.cur.at;
+        let delta = self.cur.varint()?;
+        let shard = self.cur.varint()?;
+        // A garbled varint can claim an absurd delta; wrapping here was
+        // a debug-build panic. Overflow means bytes we never wrote.
+        self.ts = self
+            .ts
+            .checked_add(delta)
+            .ok_or(JournalError::NonCanonical(start))?;
+        Ok(TimedEvent { ts_us: self.ts, shard, event: decode_event(&mut self.cur)? })
+    }
+}
+
+impl<'a> Iterator for EventIter<'a> {
+    type Item = Result<TimedEvent, JournalError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.failed || self.cur.done() {
+            return None;
+        }
+        let item = self.read_one();
+        self.failed = item.is_err();
+        Some(item)
+    }
+}
+
+/// Validate a journal's header and iterate its records lazily. Each
+/// item is one decoded [`TimedEvent`] or the first decode error (after
+/// which the iterator ends).
+pub fn events(bytes: &[u8]) -> Result<EventIter<'_>, JournalError> {
     if bytes.len() < 5 || bytes[..4] != MAGIC {
         return Err(JournalError::BadMagic);
     }
     if bytes[4] != VERSION {
         return Err(JournalError::BadVersion(bytes[4]));
     }
-    let mut cur = Cursor { bytes, at: 5 };
-    let mut out = Vec::new();
-    let mut ts = 0u64;
-    while !cur.done() {
-        let delta = cur.varint()?;
-        let shard = cur.varint()?;
-        ts += delta;
-        out.push(TimedEvent { ts_us: ts, shard, event: decode_event(&mut cur)? });
-    }
-    Ok(out)
+    Ok(EventIter { cur: Cursor { bytes, at: 5 }, ts: 0, failed: false })
+}
+
+/// Decode a journal into its timed event sequence (header validated,
+/// canonicality *not* asserted — [`replay`] does that).
+pub fn decode(bytes: &[u8]) -> Result<Vec<TimedEvent>, JournalError> {
+    events(bytes)?.collect()
+}
+
+/// Read a journal file's raw bytes (IO errors mapped into
+/// [`JournalError::Io`], so callers stay in one error domain).
+pub fn read_file(path: &str) -> Result<Vec<u8>, JournalError> {
+    std::fs::read(path).map_err(|e| JournalError::Io(format!("{path}: {e}")))
 }
 
 /// FNV-1a digest of a journal's bytes — what the CI replay lane diffs.
@@ -631,13 +679,13 @@ pub struct ReplayReport {
 /// log rather than re-running the threaded simulation.
 pub fn replay(bytes: &[u8]) -> Result<ReplayReport, JournalError> {
     let events = decode(bytes)?;
-    let inv = |msg: String| JournalError::Invariant(msg);
+    let inv = |at: usize, msg: String| JournalError::Invariant { at: at as u64, msg };
 
     let Some(first) = events.first() else {
-        return Err(inv("empty journal (no Start)".into()));
+        return Err(inv(0, "empty journal (no Start)".into()));
     };
     let Event::Start { seed, mode, .. } = &first.event else {
-        return Err(inv("journal does not begin with Start".into()));
+        return Err(inv(0, "journal does not begin with Start".into()));
     };
 
     // (shard, qid) -> still pending. The shard tag scopes session-local
@@ -653,42 +701,45 @@ pub fn replay(bytes: &[u8]) -> Result<ReplayReport, JournalError> {
 
     for (i, te) in events.iter().enumerate() {
         if footer.is_some() {
-            return Err(inv(format!("event after End at record {i}")));
+            return Err(inv(i, "event after End".into()));
         }
         match &te.event {
             Event::Start { .. } => {
                 if i != 0 {
-                    return Err(inv(format!("second Start at record {i}")));
+                    return Err(inv(i, "second Start".into()));
                 }
             }
             Event::Submit { qid } => {
                 if pending.insert((te.shard, *qid), ()).is_some() {
-                    return Err(inv(format!(
-                        "duplicate submit of query {qid} on shard {}",
-                        te.shard
-                    )));
+                    return Err(inv(
+                        i,
+                        format!("duplicate submit of query {qid} on shard {}", te.shard),
+                    ));
                 }
                 submits += 1;
             }
             Event::Complete { qid, outcome, .. } => {
                 if pending.remove(&(te.shard, *qid)).is_none() {
-                    return Err(inv(format!(
-                        "completion of unknown or already-resolved query {qid} on shard {}",
-                        te.shard
-                    )));
+                    return Err(inv(
+                        i,
+                        format!(
+                            "completion of unknown or already-resolved query {qid} on shard {}",
+                            te.shard
+                        ),
+                    ));
                 }
                 match byte_outcome(*outcome) {
                     Some(Outcome::Native) => totals.native += 1,
                     Some(Outcome::Reconstructed) => totals.reconstructed += 1,
                     Some(Outcome::Replica) => totals.replica += 1,
                     Some(Outcome::Default) => totals.defaulted += 1,
-                    None => return Err(inv(format!("unknown outcome byte {outcome}"))),
+                    None => return Err(inv(i, format!("unknown outcome byte {outcome}"))),
                 }
             }
             Event::Reject { n } => totals.rejected += n,
             Event::Seal { k, r, .. } => {
                 if *k == 0 {
-                    return Err(inv(format!("group sealed with k=0 at record {i}")));
+                    return Err(inv(i, "group sealed with k=0".into()));
                 }
                 seals += 1;
                 let _ = r;
@@ -720,7 +771,7 @@ pub fn replay(bytes: &[u8]) -> Result<ReplayReport, JournalError> {
     }
 
     let Some(f) = footer else {
-        return Err(inv("journal does not end with End".into()));
+        return Err(inv(events.len().saturating_sub(1), "journal does not end with End".into()));
     };
     // The recomputed outcome totals must equal what the live run
     // reported — this is the "replay reproduces the RunResult" check.
@@ -733,7 +784,9 @@ pub fn replay(bytes: &[u8]) -> Result<ReplayReport, JournalError> {
             totals.rejected,
         )
     {
-        return Err(inv(format!(
+        return Err(inv(
+            events.len() - 1,
+            format!(
             "footer totals (native={} reconstructed={} replica={} defaulted={} rejected={}) \
              disagree with replayed events (native={} reconstructed={} replica={} \
              defaulted={} rejected={})",
@@ -747,7 +800,8 @@ pub fn replay(bytes: &[u8]) -> Result<ReplayReport, JournalError> {
             totals.replica,
             totals.defaulted,
             totals.rejected,
-        )));
+        ),
+        ));
     }
     totals.reconstructions = f.reconstructions;
     totals.wall_us = f.wall_us;
@@ -899,14 +953,14 @@ mod tests {
         let rec = Recorder::start(1, "parm", 1);
         rec.record(&Event::Complete { qid: 9, outcome: 0, latency_us: 1 });
         let bytes = rec.finish_totals(&EndTotals { native: 1, ..EndTotals::default() });
-        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant { .. })));
 
         // Duplicate submit.
         let rec = Recorder::start(1, "parm", 1);
         rec.record(&Event::Submit { qid: 4 });
         rec.record(&Event::Submit { qid: 4 });
         let bytes = rec.finish_totals(&EndTotals::default());
-        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant { .. })));
 
         // Double completion.
         let rec = Recorder::start(1, "parm", 1);
@@ -914,7 +968,7 @@ mod tests {
         rec.record(&Event::Complete { qid: 4, outcome: 0, latency_us: 1 });
         rec.record(&Event::Complete { qid: 4, outcome: 0, latency_us: 1 });
         let bytes = rec.finish_totals(&EndTotals { native: 2, ..EndTotals::default() });
-        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant { .. })));
     }
 
     #[test]
@@ -924,7 +978,7 @@ mod tests {
         rec.record(&Event::Complete { qid: 0, outcome: 0, latency_us: 10 });
         // Footer claims a reconstruction that never happened.
         let bytes = rec.finish_totals(&EndTotals { reconstructed: 1, ..EndTotals::default() });
-        assert!(matches!(replay(&bytes), Err(JournalError::Invariant(_))));
+        assert!(matches!(replay(&bytes), Err(JournalError::Invariant { .. })));
     }
 
     #[test]
@@ -984,5 +1038,88 @@ mod tests {
         v.push(VERSION);
         v.push(0x80); // truncated varint
         assert!(matches!(decode(&v), Err(JournalError::Truncated(_))));
+    }
+
+    #[test]
+    fn lazy_iterator_matches_decode_and_fuses_on_error() {
+        let mut rng = Pcg64::new(0x17E2);
+        let evs = sample_events(&mut rng, 30);
+        let (_rec, bytes) = record_all(&evs);
+        let eager = decode(&bytes).unwrap();
+        let lazy: Vec<TimedEvent> =
+            events(&bytes).unwrap().collect::<Result<_, _>>().unwrap();
+        assert_eq!(lazy, eager, "events() and decode() agree record for record");
+
+        // Cut mid-stream: the iterator yields the good prefix, exactly
+        // one error, then fuses.
+        let cut = &bytes[..bytes.len() - 3];
+        let mut it = events(cut).unwrap();
+        let mut good = 0usize;
+        let mut errs = 0usize;
+        for item in &mut it {
+            match item {
+                Ok(_) => good += 1,
+                Err(_) => errs += 1,
+            }
+        }
+        assert!(good < eager.len());
+        assert_eq!(errs, 1, "exactly one error, then the iterator ends");
+        assert!(it.next().is_none(), "fused after the error");
+    }
+
+    #[test]
+    fn timestamp_overflow_is_an_error_not_a_panic() {
+        // Two records whose deltas sum past u64::MAX: bytes we never
+        // wrote (a garbled varint in the wild). `ts += delta` used to
+        // wrap — a panic in debug builds.
+        let mut v = MAGIC.to_vec();
+        v.push(VERSION);
+        for _ in 0..2 {
+            put_varint(&mut v, u64::MAX); // delta
+            put_varint(&mut v, 0); // shard
+            v.push(K_SUBMIT);
+            put_varint(&mut v, 1); // qid
+        }
+        assert!(matches!(decode(&v), Err(JournalError::NonCanonical(_))));
+        assert!(matches!(replay(&v), Err(JournalError::NonCanonical(_))));
+    }
+
+    #[test]
+    fn invariant_errors_carry_the_record_index() {
+        let rec = Recorder::start(1, "parm", 1);
+        rec.record(&Event::Submit { qid: 4 });
+        rec.record(&Event::Submit { qid: 4 });
+        let bytes = rec.finish_totals(&EndTotals::default());
+        match replay(&bytes) {
+            // Record 0 is Start; the duplicate is the third record.
+            Err(JournalError::Invariant { at, ref msg }) => {
+                assert_eq!(at, 2, "the duplicate submit's own index: {msg}");
+                assert!(msg.contains("duplicate submit"), "{msg}");
+            }
+            other => panic!("expected an Invariant error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_fuzz_never_panics_or_loops() {
+        // Every truncation point of a real recorded journal must come
+        // back as a structured error (never a panic, never a hang), and
+        // seeded single-byte corruptions must return *something* —
+        // Ok for benign flips, Err otherwise — without panicking.
+        let mut rng = Pcg64::new(0xF022);
+        let evs = sample_events(&mut rng, 40);
+        let (_rec, bytes) = record_all(&evs);
+        assert!(replay(&bytes).is_ok());
+        for cut in 0..bytes.len() {
+            let r = replay(&bytes[..cut]);
+            assert!(r.is_err(), "a journal cut at byte {cut} cannot verify");
+        }
+        for _ in 0..500 {
+            let mut garbled = bytes.clone();
+            let at = rng.below(garbled.len() as u64) as usize;
+            garbled[at] ^= 1 << rng.below(8);
+            let _ = decode(&garbled); // must not panic
+            let _ = replay(&garbled); // must not panic
+        }
     }
 }

@@ -55,6 +55,12 @@
 //!   delta-encoded event log ([`journal::Recorder`]) every surface above
 //!   can write into, replayable byte-identically with
 //!   [`journal::replay`] (`parm replay` on the CLI).
+//! - [`trace`] mines that journal into diagnostics: per-query span
+//!   trees with exact phase accounting ([`trace::QuerySpan`]),
+//!   group-fate timelines ([`trace::GroupFate`]), and fault-impact
+//!   windows ([`trace::FaultWindow`]) — surfaced as `parm trace`
+//!   (text / JSON / Chrome trace-event export), `parm replay --report`,
+//!   and `parm mine` (journal → replayable [`crate::workload::Trace`]).
 //! - Every tier above also publishes into the fleet-wide telemetry
 //!   registry ([`crate::telemetry::Registry`], carried by
 //!   [`service::ServiceConfig::telemetry`]): sessions count
@@ -82,3 +88,4 @@ pub mod scheme;
 pub mod service;
 pub mod session;
 pub mod shards;
+pub mod trace;

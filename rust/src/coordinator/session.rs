@@ -72,9 +72,25 @@ struct SessionTelemetry {
     outcome_replica: Counter,
     outcome_default: Counter,
     latency_ms: Summary,
+    /// Slowest-query exemplars seen so far, worst first — the live-path
+    /// feed for the `parm_slow_query_*` gauge family, so operators see
+    /// which queries hurt without a journal mining pass.
+    slow: Vec<SlowExemplar>,
     every: Duration,
     next_publish: Instant,
 }
+
+/// One slowest-query exemplar: the same (qid, latency, outcome) triple
+/// `parm trace` reconstructs from the journal, published live.
+#[derive(Clone, Copy, Debug)]
+struct SlowExemplar {
+    qid: QueryId,
+    latency_ms: f64,
+    outcome: Outcome,
+}
+
+/// How many slowest-query exemplars the session keeps and publishes.
+const SLOW_EXEMPLARS: usize = 5;
 
 impl SessionTelemetry {
     fn new(registry: Registry, every: Duration) -> SessionTelemetry {
@@ -110,13 +126,14 @@ impl SessionTelemetry {
                 "Frontend arrival to prediction available, milliseconds.",
                 &[],
             ),
+            slow: Vec::new(),
             every,
             next_publish: Instant::now() + every,
             registry,
         }
     }
 
-    fn on_resolved(&self, outcome: Outcome, latency: Duration) {
+    fn on_resolved(&mut self, qid: QueryId, outcome: Outcome, latency: Duration) {
         self.resolved.inc();
         match outcome {
             Outcome::Native => self.outcome_native.inc(),
@@ -124,7 +141,18 @@ impl SessionTelemetry {
             Outcome::Replica => self.outcome_replica.inc(),
             Outcome::Default => self.outcome_default.inc(),
         }
-        self.latency_ms.observe(latency.as_secs_f64() * 1e3);
+        let ms = latency.as_secs_f64() * 1e3;
+        self.latency_ms.observe(ms);
+        // Keep the worst SLOW_EXEMPLARS, sorted worst-first. Only
+        // touched when the new latency beats the current floor, so the
+        // steady-state cost is one comparison.
+        if self.slow.len() < SLOW_EXEMPLARS
+            || ms > self.slow.last().map_or(0.0, |e| e.latency_ms)
+        {
+            let at = self.slow.partition_point(|e| e.latency_ms >= ms);
+            self.slow.insert(at, SlowExemplar { qid, latency_ms: ms, outcome });
+            self.slow.truncate(SLOW_EXEMPLARS);
+        }
     }
 
     /// Fold the live window and the scheme's operating point into
@@ -147,6 +175,32 @@ impl SessionTelemetry {
     fn publish(&self, window: &mut LatencyWindow, scheme: &dyn RedundancyScheme, now: Instant) {
         let snap = window.snapshot(now);
         crate::telemetry::publish_window(&self.registry, "parm_session_window_", &[], &snap);
+        for (i, e) in self.slow.iter().enumerate() {
+            let rank = i.to_string();
+            let labels = [("rank", rank.as_str())];
+            self.registry
+                .gauge(
+                    "parm_slow_query_latency_ms",
+                    "Latency of the rank-th slowest query so far.",
+                    &labels,
+                )
+                .set(e.latency_ms);
+            self.registry
+                .gauge(
+                    "parm_slow_query_qid",
+                    "Session-local query id of the rank-th slowest query.",
+                    &labels,
+                )
+                .set(e.qid as f64);
+            self.registry
+                .gauge(
+                    "parm_slow_query_outcome",
+                    "Outcome byte of the rank-th slowest query (0 native, 1 \
+                     reconstructed, 2 replica, 3 default).",
+                    &labels,
+                )
+                .set(f64::from(outcome_byte(e.outcome)));
+        }
         if let Some(t) = scheme.telemetry() {
             self.registry
                 .gauge("parm_scheme_last_r", "Redundancy chosen for the last sealed group.", &[])
@@ -859,7 +913,7 @@ impl ServiceHandle {
                 let latency = r.at.saturating_duration_since(arrived);
                 self.metrics.record(arrived, r.at, r.outcome);
                 self.window.record(r.outcome, latency, r.at);
-                self.telemetry.on_resolved(r.outcome, latency);
+                self.telemetry.on_resolved(id, r.outcome, latency);
                 self.resolved_count += 1;
                 // Inside the dedup branch: the journal sees exactly one
                 // terminal event per query, the invariant replay checks.
@@ -886,7 +940,7 @@ impl ServiceHandle {
             self.pending.remove(&id);
             self.metrics.record_default(slo);
             self.window.record(Outcome::Default, slo, now);
-            self.telemetry.on_resolved(Outcome::Default, slo);
+            self.telemetry.on_resolved(id, Outcome::Default, slo);
             self.resolved_count += 1;
             self.recorder.record(&Event::Complete {
                 qid: id,

@@ -111,6 +111,13 @@ pub fn shard_of(id: QueryId) -> usize {
     (id >> SHARD_SHIFT) as usize
 }
 
+/// The shard-local query id under the tag — inverse of [`tag_id`]
+/// together with [`shard_of`]. Journal mining uses this to bind a
+/// router-observed `Route` event back to the leg session's span.
+pub fn fid_of(id: QueryId) -> QueryId {
+    id & ((1u64 << SHARD_SHIFT) - 1)
+}
+
 /// Errors from runtime fleet reconfiguration. Every reconfiguration
 /// entry point — on [`ShardRouter`], [`ShardedFrontend`],
 /// [`CrossShardFrontend`], and the control plane — returns these

@@ -1,0 +1,180 @@
+//! Chrome trace-event export (`parm trace --chrome OUT.json`): the span
+//! trees rendered as a [Trace Event Format] document that
+//! `chrome://tracing` and Perfetto open directly.
+//!
+//! One **process** per shard (`pid` = shard tag), queries packed
+//! greedily onto **lanes** (`tid`) so overlapping spans stack instead
+//! of colliding, each completed span a complete (`X`) event with its
+//! non-zero phases as nested child slices, and every chaos event an
+//! instant (`i`) marker on its shard's track.
+//!
+//! [Trace Event Format]: https://docs.google.com/document/d/1CvAClvFfyA5R-PhYUmn5OOQtYMH4h6I0nSsKchNAySU
+
+use std::collections::HashMap;
+
+use crate::coordinator::trace::{Analysis, QuerySpan};
+use crate::util::json::Json;
+
+fn x_event(name: String, cat: &str, ts: u64, dur: u64, pid: u64, tid: u64) -> Json {
+    Json::obj()
+        .set("name", name)
+        .set("cat", cat)
+        .set("ph", "X")
+        .set("ts", ts)
+        .set("dur", dur)
+        .set("pid", pid)
+        .set("tid", tid)
+}
+
+/// Greedy lane packer: first lane whose last span ended by `start`,
+/// else a new lane. Returns the 1-based lane id.
+struct Lanes(Vec<u64>);
+
+impl Lanes {
+    fn assign(&mut self, start: u64, end: u64) -> u64 {
+        for (i, lane_end) in self.0.iter_mut().enumerate() {
+            if *lane_end <= start {
+                *lane_end = end;
+                return i as u64 + 1;
+            }
+        }
+        self.0.push(end);
+        self.0.len() as u64
+    }
+}
+
+fn span_events(s: &QuerySpan, tid: u64, out: &mut Vec<Json>) {
+    let Some(p) = s.phases() else { return };
+    let total = p.total_us.max(1);
+    out.push(
+        x_event(
+            format!("q{} [{}]", s.qid, s.outcome_tag()),
+            "query",
+            s.submit_us,
+            total,
+            s.shard,
+            tid,
+        )
+        .set(
+            "args",
+            Json::obj()
+                .set("qid", s.qid)
+                .set("group", s.group.map(Json::from).unwrap_or(Json::Null))
+                .set("outcome", s.outcome_tag())
+                .set("latency_us", s.latency_us.map(Json::from).unwrap_or(Json::Null)),
+        ),
+    );
+    // Nested phase slices: children must sit strictly inside the
+    // parent for the viewers to nest them, which the clamped markers
+    // guarantee.
+    let m0 = s.submit_us;
+    let m1 = m0 + p.queue_us;
+    let m2 = m1 + p.seal_wait_us;
+    let m3 = m2 + p.decode_wait_us;
+    for (name, lo, dur) in [
+        ("queue", m0, p.queue_us),
+        ("seal-wait", m1, p.seal_wait_us),
+        ("decode-wait", m2, p.decode_wait_us),
+        ("tail", m3, p.tail_us),
+    ] {
+        if dur > 0 {
+            out.push(x_event(name.to_string(), "phase", lo, dur, s.shard, tid));
+        }
+    }
+}
+
+/// Render the analysis as a Trace Event Format JSON document.
+pub fn chrome_trace(a: &Analysis) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    let mut lanes: HashMap<u64, Lanes> = HashMap::new();
+
+    // Spans in submit order per shard: the greedy packer needs starts
+    // non-decreasing, which submit order gives within a shard.
+    let mut ordered: Vec<&QuerySpan> = a.spans.iter().filter(|s| s.complete_us.is_some()).collect();
+    ordered.sort_by_key(|s| (s.shard, s.submit_us));
+    for s in ordered {
+        let end = s.complete_us.unwrap_or(s.submit_us).max(s.submit_us + 1);
+        let tid = lanes.entry(s.shard).or_insert_with(|| Lanes(Vec::new())).assign(s.submit_us, end);
+        span_events(s, tid, &mut events);
+    }
+
+    for c in &a.chaos {
+        events.push(
+            Json::obj()
+                .set("name", c.label())
+                .set("cat", "chaos")
+                .set("ph", "i")
+                .set("s", "g")
+                .set("ts", c.ts_us)
+                .set("pid", c.shard)
+                .set("tid", 0u64),
+        );
+    }
+
+    // Process metadata so the viewer names each shard's track.
+    let mut pids: Vec<u64> = lanes.keys().copied().collect();
+    for c in &a.chaos {
+        if !pids.contains(&c.shard) {
+            pids.push(c.shard);
+        }
+    }
+    pids.sort_unstable();
+    for pid in pids {
+        events.push(
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", pid)
+                .set("tid", 0u64)
+                .set("args", Json::obj().set("name", format!("shard {pid}"))),
+        );
+    }
+
+    Json::obj()
+        .set("traceEvents", events)
+        .set("displayTimeUnit", "ms")
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::journal::{Event, TimedEvent};
+    use crate::coordinator::trace::{analyze, AnalyzeOpts};
+
+    #[test]
+    fn export_is_valid_json_with_nested_phases_and_instants() {
+        let te = |ts_us, shard, event| TimedEvent { ts_us, shard, event };
+        let events = vec![
+            te(0, 0, Event::Start { seed: 1, mode: "parm".into(), shards: 1 }),
+            te(10, 0, Event::Submit { qid: 0 }),
+            te(12, 0, Event::Submit { qid: 1 }),
+            te(20, 0, Event::Dispatch { group: 1, kind: 0, detail: 0, queries: 2 }),
+            te(25, 0, Event::Seal { group: 1, k: 2, r: 1 }),
+            te(40, 0, Event::Fault { instance: 0, kind: 1, arg: 0 }),
+            te(80, 0, Event::Complete { qid: 0, outcome: 0, latency_us: 70 }),
+            te(95, 0, Event::Complete { qid: 1, outcome: 0, latency_us: 83 }),
+        ];
+        let a = analyze(&events, &AnalyzeOpts::default());
+        let doc = chrome_trace(&a);
+        let parsed = Json::parse(&doc).expect("valid trace json");
+        let evs = parsed.at(&["traceEvents"]).as_arr().expect("events array");
+        // 2 query slices + their phase children + 1 instant + 1 metadata.
+        assert!(evs.len() >= 4, "got {} events", evs.len());
+        let phases = evs
+            .iter()
+            .filter(|e| e.at(&["cat"]).as_str() == Some("phase"))
+            .count();
+        assert!(phases >= 2, "expected nested phase slices");
+        assert!(evs.iter().any(|e| e.at(&["ph"]).as_str() == Some("i")));
+        assert!(evs.iter().any(|e| e.at(&["ph"]).as_str() == Some("M")));
+        // Overlapping spans landed on distinct lanes.
+        let tids: Vec<usize> = evs
+            .iter()
+            .filter(|e| e.at(&["cat"]).as_str() == Some("query"))
+            .filter_map(|e| e.at(&["tid"]).as_usize())
+            .collect();
+        assert_eq!(tids.len(), 2);
+        assert_ne!(tids[0], tids[1]);
+    }
+}

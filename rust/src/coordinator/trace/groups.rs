@@ -1,0 +1,97 @@
+//! Group-fate timelines: one [`GroupFate`] per coding group the journal
+//! saw, tracking when it sealed, which slots the decoder reconstructed,
+//! how its queries ultimately resolved, and which faults landed inside
+//! its lifetime.
+//!
+//! # Scoping
+//!
+//! Per-shard schemes (ParM, rateless, replication) allocate group ids
+//! session-locally, so two shards can both own a "group 3" — those
+//! groups are keyed `(shard, group)`. The cross-shard tier allocates
+//! group ids from fleet-shared state and records seals/decodes through
+//! the untagged fleet recorder, so its groups are keyed fleet-wide
+//! (`shard == None`). [`crate::coordinator::trace::analyze`] picks the
+//! keying from the journal's `Start.mode`.
+
+use crate::coordinator::trace::span::OutcomeCounts;
+
+/// Everything the journal tells us about one coding group's life.
+#[derive(Clone, Debug)]
+pub struct GroupFate {
+    /// Owning shard tag for per-shard schemes; `None` for fleet-scoped
+    /// (cross-shard) groups.
+    pub shard: Option<u64>,
+    /// Group id, unique within its scope.
+    pub group: u64,
+    /// Data slots / parity count from the `Seal` event (0 until sealed).
+    pub k: u64,
+    pub r: u64,
+    /// First `Dispatch` into the group — when it started accumulating.
+    pub first_dispatch_us: Option<u64>,
+    /// `Seal` timestamp.
+    pub sealed_us: Option<u64>,
+    /// Latest terminal event among the group's attributed queries.
+    pub settled_us: Option<u64>,
+    /// Dispatch counts by job class (`Background` jobs are not groups).
+    pub data_jobs: u64,
+    pub parity_jobs: u64,
+    pub replica_jobs: u64,
+    /// Query ids attributed to the group via data dispatches.
+    pub queries: u64,
+    /// Decoder reconstructions: `(ts_us, slot)` per `Decode` event.
+    pub decodes: Vec<(u64, u64)>,
+    /// Terminal outcomes of the attributed queries.
+    pub outcomes: OutcomeCounts,
+    /// Fault events that landed on the group's dispatch shards between
+    /// its first dispatch and its settlement.
+    pub faults_hit: u64,
+    /// Distinct recorder tags that dispatched jobs into the group (for
+    /// cross-shard groups: the stripe).
+    pub dispatch_shards: Vec<u64>,
+}
+
+impl GroupFate {
+    pub(crate) fn new(shard: Option<u64>, group: u64) -> GroupFate {
+        GroupFate {
+            shard,
+            group,
+            k: 0,
+            r: 0,
+            first_dispatch_us: None,
+            sealed_us: None,
+            settled_us: None,
+            data_jobs: 0,
+            parity_jobs: 0,
+            replica_jobs: 0,
+            queries: 0,
+            decodes: Vec::new(),
+            outcomes: OutcomeCounts::default(),
+            faults_hit: 0,
+            dispatch_shards: Vec::new(),
+        }
+    }
+
+    pub(crate) fn note_dispatch_shard(&mut self, tag: u64) {
+        if !self.dispatch_shards.contains(&tag) {
+            self.dispatch_shards.push(tag);
+        }
+    }
+
+    /// Did the decoder have to step in for this group?
+    pub fn decoded(&self) -> bool {
+        !self.decodes.is_empty()
+    }
+
+    /// Seal → settle duration, when both ends were observed.
+    pub fn settle_us(&self) -> Option<u64> {
+        match (self.sealed_us, self.settled_us) {
+            (Some(s), Some(e)) => Some(e.saturating_sub(s)),
+            _ => None,
+        }
+    }
+
+    /// Parity actually used: reconstructions per parity dispatched.
+    pub fn parity_used(&self) -> bool {
+        self.decoded() && self.parity_jobs > 0
+    }
+}

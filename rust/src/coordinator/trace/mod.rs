@@ -1,0 +1,490 @@
+//! Journal mining: re-execute a recorded serving-path journal into
+//! per-query **span trees**, per-group **fate timelines**, and
+//! **fault-impact windows** — the diagnostics layer over
+//! [`crate::coordinator::journal`].
+//!
+//! ```text
+//!   journal bytes ──decode()──▶ [TimedEvent]
+//!        │                          │
+//!        ▼                          ▼
+//!   replay() verifies          analyze() mines
+//!   (causal invariants,        ├─ QuerySpan per submit: submit → route →
+//!    byte-identity)            │    dispatch → seal → decode → complete,
+//!                              │    phases summing exactly to latency
+//!                              ├─ GroupFate per coding group: seal time,
+//!                              │    slot reconstructions, parity usage,
+//!                              │    faults that landed inside its life
+//!                              └─ FaultWindow per chaos burst: latency /
+//!                                   outcome distribution before, during,
+//!                                   and after the event
+//! ```
+//!
+//! [`analyze`] is *tolerant* where [`crate::coordinator::journal::replay`]
+//! is strict: it never fails — a truncated or partially-corrupt stream
+//! yields spans for whatever prefix decoded, with missing markers
+//! clamped (see [`span::QuerySpan::phases`]). Verification is replay's
+//! job; mining answers "what happened to query 17".
+//!
+//! Surfaced as `parm trace <journal>` (report / `--json` /
+//! `--chrome` Perfetto export), `parm replay --report`, and
+//! `parm mine <journal>` (reconstruct a replayable
+//! [`crate::workload::Trace`] — see [`crate::workload::Trace::from_journal`]).
+
+pub mod chrome;
+pub mod groups;
+pub mod report;
+pub mod span;
+pub mod windows;
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::coordinator::journal::{byte_outcome, EndTotals, Event, JobClass, TimedEvent};
+use crate::coordinator::metrics::Outcome;
+use crate::coordinator::shards::{fid_of, shard_of};
+
+pub use groups::GroupFate;
+pub use span::{OutcomeCounts, Phases, QuerySpan};
+pub use windows::{ChaosEvent, ChaosKind, FaultWindow, WindowStats};
+
+/// Knobs for [`analyze`].
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyzeOpts {
+    /// Half-width W of each fault-impact window (pre `[T-W,T)`, during
+    /// `[T,T+W)`, post `[T+W,T+2W)`).
+    pub window_us: u64,
+    /// How many slowest-query exemplars the reports show.
+    pub slow: usize,
+}
+
+impl Default for AnalyzeOpts {
+    fn default() -> AnalyzeOpts {
+        AnalyzeOpts { window_us: 250_000, slow: 5 }
+    }
+}
+
+/// Everything [`analyze`] mined out of one journal.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// Run header fields (zero / empty when the journal lacks `Start`).
+    pub seed: u64,
+    pub mode: String,
+    pub shards: u64,
+    /// Records walked.
+    pub events: u64,
+    /// Wall-clock from the `End` footer (0 when absent).
+    pub wall_us: u64,
+    /// Admission rejections summed from `Reject` events.
+    pub rejected: u64,
+    /// The recorded `End` footer, when the run terminated cleanly.
+    pub footer: Option<EndTotals>,
+    /// One span per `Submit`, in submit order.
+    pub spans: Vec<QuerySpan>,
+    /// One fate per coding group, in first-appearance order.
+    pub groups: Vec<GroupFate>,
+    /// Impact windows per coalesced chaos burst.
+    pub windows: Vec<FaultWindow>,
+    /// The raw (uncoalesced) chaos stream.
+    pub chaos: Vec<ChaosEvent>,
+}
+
+impl Analysis {
+    /// Outcome histogram over completed spans — the totals the property
+    /// tests check against the `End` footer.
+    pub fn outcome_counts(&self) -> OutcomeCounts {
+        let mut c = OutcomeCounts::default();
+        for s in &self.spans {
+            if let Some(o) = s.outcome {
+                c.add(o);
+            }
+        }
+        c
+    }
+
+    /// The `n` slowest completed spans, worst first.
+    pub fn slowest(&self, n: usize) -> Vec<&QuerySpan> {
+        let mut done: Vec<&QuerySpan> =
+            self.spans.iter().filter(|s| s.complete_us.is_some()).collect();
+        done.sort_by_key(|s| std::cmp::Reverse(s.total_us().unwrap_or(0)));
+        done.truncate(n);
+        done
+    }
+
+    /// Submitted spans with no terminal event (a run cut short).
+    pub fn open_spans(&self) -> u64 {
+        self.spans.iter().filter(|s| s.complete_us.is_none()).count() as u64
+    }
+}
+
+/// Group-map key: per-shard schemes scope group ids by recorder tag;
+/// the cross-shard tier allocates fleet-wide ids (recorded under tag 0
+/// by the shared recorder, but dispatched under per-shard tags), so its
+/// groups key on the id alone.
+const FLEET: u64 = u64::MAX;
+
+/// Mine a decoded event stream. Never fails: any prefix of a valid
+/// journal — including one cut mid-run — produces a best-effort
+/// analysis (spans without terminal events stay open; see
+/// [`Analysis::open_spans`]).
+pub fn analyze(events: &[TimedEvent], opts: &AnalyzeOpts) -> Analysis {
+    let mut a = Analysis {
+        seed: 0,
+        mode: String::new(),
+        shards: 0,
+        events: events.len() as u64,
+        wall_us: 0,
+        rejected: 0,
+        footer: None,
+        spans: Vec::new(),
+        groups: Vec::new(),
+        windows: Vec::new(),
+        chaos: Vec::new(),
+    };
+    let mut fleet_groups = false;
+    // (tag, qid) -> span index. Session-local qids restart per shard,
+    // so the recorder tag scopes them — same keying replay verifies.
+    let mut span_ix: HashMap<(u64, u64), usize> = HashMap::new();
+    // Per-tag FIFO of submitted-but-not-yet-dispatched spans: sessions
+    // drain submissions in order, so the i-th data dispatch claims the
+    // i-th unclaimed submit. `queries` on the Dispatch says how many.
+    let mut fifo: HashMap<u64, VecDeque<usize>> = HashMap::new();
+    let mut group_ix: HashMap<(u64, u64), usize> = HashMap::new();
+    let mut completions: Vec<windows::CompletionSample> = Vec::new();
+
+    let group_scope = |fleet: bool, tag: u64| if fleet { FLEET } else { tag };
+
+    for te in events {
+        let tag = te.shard;
+        let ts = te.ts_us;
+        match &te.event {
+            Event::Start { seed, mode, shards } => {
+                a.seed = *seed;
+                a.mode = mode.clone();
+                a.shards = *shards;
+                fleet_groups = mode.contains("cross");
+            }
+            Event::Submit { qid } => {
+                let ix = a.spans.len();
+                a.spans.push(QuerySpan::new(tag, *qid, ts));
+                span_ix.insert((tag, *qid), ix);
+                fifo.entry(tag).or_default().push_back(ix);
+            }
+            Event::Route { qid, .. } => {
+                // Recorded by the router after the leg accepted, under
+                // the fleet tag; the tagged qid names the leg's span.
+                let key = (shard_of(*qid) as u64, fid_of(*qid));
+                if let Some(&ix) = span_ix.get(&key) {
+                    a.spans[ix].route_us = Some(ts);
+                    a.spans[ix].tagged_qid = Some(*qid);
+                }
+            }
+            Event::Dispatch { group, kind, queries, .. } => {
+                if *kind == JobClass::Background as u8 {
+                    continue;
+                }
+                let scope = group_scope(fleet_groups, tag);
+                let gi = *group_ix.entry((scope, *group)).or_insert_with(|| {
+                    let shard = if fleet_groups { None } else { Some(tag) };
+                    a.groups.push(GroupFate::new(shard, *group));
+                    a.groups.len() - 1
+                });
+                let fate = &mut a.groups[gi];
+                fate.first_dispatch_us.get_or_insert(ts);
+                fate.note_dispatch_shard(tag);
+                if *kind == JobClass::Parity as u8 {
+                    fate.parity_jobs += 1;
+                } else if *kind == JobClass::Replica as u8 {
+                    fate.replica_jobs += 1;
+                } else {
+                    fate.data_jobs += 1;
+                    // Claim the batch's queries off the submit FIFO.
+                    // (A query the SLO sweep already defaulted is still
+                    // claimed here — its span just completed first.)
+                    let q = fifo.entry(tag).or_default();
+                    for _ in 0..*queries {
+                        let Some(ix) = q.pop_front() else { break };
+                        let span = &mut a.spans[ix];
+                        span.group = Some(*group);
+                        span.dispatch_us.get_or_insert(ts);
+                        fate.queries += 1;
+                    }
+                }
+            }
+            Event::Seal { group, k, r } => {
+                let scope = group_scope(fleet_groups, tag);
+                let gi = *group_ix.entry((scope, *group)).or_insert_with(|| {
+                    let shard = if fleet_groups { None } else { Some(tag) };
+                    a.groups.push(GroupFate::new(shard, *group));
+                    a.groups.len() - 1
+                });
+                let fate = &mut a.groups[gi];
+                fate.k = *k;
+                fate.r = *r;
+                fate.sealed_us = Some(ts);
+            }
+            Event::Decode { group, slot } => {
+                let scope = group_scope(fleet_groups, tag);
+                if let Some(&gi) = group_ix.get(&(scope, *group)) {
+                    a.groups[gi].decodes.push((ts, *slot));
+                }
+            }
+            Event::Complete { qid, outcome, latency_us } => {
+                if let Some(&ix) = span_ix.get(&(tag, *qid)) {
+                    let span = &mut a.spans[ix];
+                    span.complete_us = Some(ts);
+                    span.latency_us = Some(*latency_us);
+                    span.outcome = byte_outcome(*outcome);
+                    if let Some(o) = span.outcome {
+                        completions.push((ts, *latency_us, o));
+                    }
+                }
+            }
+            Event::Fault { instance, kind, arg } => {
+                a.chaos.push(ChaosEvent {
+                    ts_us: ts,
+                    shard: tag,
+                    kind: ChaosKind::Fault { kind: *kind, instance: *instance, arg: *arg },
+                });
+            }
+            Event::Reconfig { verb, shard } => {
+                a.chaos.push(ChaosEvent {
+                    ts_us: ts,
+                    shard: tag,
+                    kind: ChaosKind::Reconfig { verb: *verb, target: *shard },
+                });
+            }
+            Event::Reject { n } => a.rejected += *n,
+            Event::End {
+                native,
+                reconstructed,
+                replica,
+                defaulted,
+                rejected,
+                reconstructions,
+                wall_us,
+            } => {
+                a.wall_us = *wall_us;
+                a.footer = Some(EndTotals {
+                    native: *native,
+                    reconstructed: *reconstructed,
+                    replica: *replica,
+                    defaulted: *defaulted,
+                    rejected: *rejected,
+                    reconstructions: *reconstructions,
+                    wall_us: *wall_us,
+                });
+            }
+        }
+    }
+
+    // Finalize: fold group state into spans (seal/decode markers — a
+    // span learns its seal time from its group) and span terminals into
+    // groups (outcome histogram, settle time).
+    for span in &mut a.spans {
+        let Some(g) = span.group else { continue };
+        let scope = group_scope(fleet_groups, span.shard);
+        let Some(&gi) = group_ix.get(&(scope, g)) else { continue };
+        let fate = &mut a.groups[gi];
+        if span.seal_us.is_none() {
+            span.seal_us = fate.sealed_us;
+        }
+        if span.outcome == Some(Outcome::Reconstructed) && span.decode_us.is_none() {
+            span.decode_us = fate.decodes.first().map(|&(ts, _)| ts);
+        }
+        if let Some(c) = span.complete_us {
+            fate.settled_us = Some(fate.settled_us.map_or(c, |s| s.max(c)));
+            if let Some(o) = span.outcome {
+                fate.outcomes.add(o);
+            }
+        }
+    }
+    for fate in &mut a.groups {
+        let Some(start) = fate.first_dispatch_us else { continue };
+        let end = fate.settled_us.or(fate.sealed_us).unwrap_or(start);
+        fate.faults_hit = a
+            .chaos
+            .iter()
+            .filter(|c| {
+                c.is_fault()
+                    && c.ts_us >= start
+                    && c.ts_us <= end
+                    && fate.dispatch_shards.contains(&c.shard)
+            })
+            .count() as u64;
+    }
+    a.windows = windows::fault_windows(&a.chaos, &completions, opts.window_us);
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn te(ts_us: u64, shard: u64, event: Event) -> TimedEvent {
+        TimedEvent { ts_us, shard, event }
+    }
+
+    fn dispatch(group: u64, kind: JobClass, detail: u64, queries: u64) -> Event {
+        Event::Dispatch { group, kind: kind as u8, detail, queries }
+    }
+
+    #[test]
+    fn analyze_reconstructs_a_parm_run_end_to_end() {
+        let events = vec![
+            te(0, 0, Event::Start { seed: 7, mode: "parm".into(), shards: 1 }),
+            te(10, 0, Event::Submit { qid: 0 }),
+            te(20, 0, Event::Submit { qid: 1 }),
+            te(30, 0, Event::Seal { group: 1, k: 2, r: 1 }),
+            te(31, 0, dispatch(1, JobClass::Data, 0, 1)),
+            te(32, 0, dispatch(1, JobClass::Data, 1, 1)),
+            te(33, 0, dispatch(1, JobClass::Parity, 0, 0)),
+            te(100, 0, Event::Complete { qid: 0, outcome: 0, latency_us: 90 }),
+            te(120, 0, Event::Fault { instance: 1, kind: 1, arg: 0 }),
+            te(150, 0, Event::Decode { group: 1, slot: 1 }),
+            te(160, 0, Event::Complete { qid: 1, outcome: 1, latency_us: 140 }),
+            te(200, 0, Event::Reject { n: 3 }),
+            te(
+                210,
+                0,
+                Event::End {
+                    native: 1,
+                    reconstructed: 1,
+                    replica: 0,
+                    defaulted: 0,
+                    rejected: 3,
+                    reconstructions: 1,
+                    wall_us: 210,
+                },
+            ),
+        ];
+        let a = analyze(&events, &AnalyzeOpts::default());
+
+        assert_eq!(a.mode, "parm");
+        assert_eq!(a.seed, 7);
+        assert_eq!(a.rejected, 3);
+        assert_eq!(a.spans.len(), 2);
+        assert_eq!(a.open_spans(), 0);
+
+        // Phase identity: durations sum exactly to end-to-end latency,
+        // and the journal-clock total matches the recorded payload.
+        for s in &a.spans {
+            let p = s.phases().unwrap();
+            assert_eq!(
+                p.queue_us + p.seal_wait_us + p.decode_wait_us + p.tail_us,
+                p.total_us
+            );
+            assert_eq!(Some(p.total_us), s.latency_us);
+        }
+
+        // The recovered span picked up its group's seal and decode.
+        let s1 = &a.spans[1];
+        assert_eq!(s1.outcome_tag(), "recovered");
+        assert_eq!(s1.group, Some(1));
+        assert_eq!(s1.dispatch_us, Some(32));
+        assert_eq!(s1.decode_us, Some(150));
+
+        // Trace-level outcomes equal the footer totals.
+        let footer = a.footer.expect("footer");
+        let counts = a.outcome_counts();
+        assert_eq!(counts.native, footer.native);
+        assert_eq!(counts.reconstructed, footer.reconstructed);
+        assert_eq!(counts.defaulted, footer.defaulted);
+        assert_eq!(a.rejected, footer.rejected);
+
+        // Group fate: sealed at 30, two data slots + one parity, both
+        // queries attributed, one reconstruction, the kill landed
+        // inside its lifetime.
+        assert_eq!(a.groups.len(), 1);
+        let g = &a.groups[0];
+        assert_eq!((g.k, g.r), (2, 1));
+        assert_eq!((g.data_jobs, g.parity_jobs, g.queries), (2, 1, 2));
+        assert_eq!(g.sealed_us, Some(30));
+        assert_eq!(g.settled_us, Some(160));
+        assert_eq!(g.decodes, vec![(150, 1)]);
+        assert!(g.parity_used());
+        assert_eq!(g.outcomes.total(), 2);
+        assert_eq!(g.faults_hit, 1);
+
+        // One chaos burst, one impact window.
+        assert_eq!(a.windows.len(), 1);
+        assert_eq!(a.chaos.len(), 1);
+    }
+
+    #[test]
+    fn complete_before_dispatch_still_attributes_via_fifo() {
+        // The session applies resolutions before recording the batch's
+        // Dispatch events, so a swept query terminates first. The FIFO
+        // claim must still bind it to its group, and the clamped phase
+        // model must still sum.
+        let events = vec![
+            te(0, 0, Event::Start { seed: 1, mode: "parm".into(), shards: 1 }),
+            te(10, 0, Event::Submit { qid: 0 }),
+            te(50, 0, Event::Complete { qid: 0, outcome: 3, latency_us: 40 }),
+            te(80, 0, dispatch(2, JobClass::Data, 0, 1)),
+        ];
+        let a = analyze(&events, &AnalyzeOpts::default());
+        let s = &a.spans[0];
+        assert_eq!(s.group, Some(2));
+        assert_eq!(s.dispatch_us, Some(80));
+        let p = s.phases().unwrap();
+        assert_eq!(p.total_us, 40);
+        assert_eq!(p.queue_us + p.seal_wait_us + p.decode_wait_us + p.tail_us, 40);
+        assert_eq!(a.groups[0].queries, 1);
+        assert_eq!(a.groups[0].outcomes.defaulted, 1);
+    }
+
+    #[test]
+    fn cross_shard_groups_are_fleet_scoped() {
+        // Two shards dispatch into the same fleet-level group id; the
+        // seal arrives under the untagged fleet recorder. One group,
+        // striped over both shards.
+        let events = vec![
+            te(0, 0, Event::Start { seed: 1, mode: "cross-shard".into(), shards: 2 }),
+            te(10, 0, Event::Submit { qid: 0 }),
+            te(11, 1, Event::Submit { qid: 0 }),
+            te(20, 0, dispatch(5, JobClass::Data, 0, 1)),
+            te(21, 1, dispatch(5, JobClass::Data, 1, 1)),
+            te(22, 0, Event::Seal { group: 5, k: 2, r: 1 }),
+            te(90, 0, Event::Complete { qid: 0, outcome: 0, latency_us: 80 }),
+            te(95, 1, Event::Complete { qid: 0, outcome: 0, latency_us: 84 }),
+        ];
+        let a = analyze(&events, &AnalyzeOpts::default());
+        assert_eq!(a.groups.len(), 1);
+        let g = &a.groups[0];
+        assert_eq!(g.shard, None);
+        assert_eq!(g.dispatch_shards, vec![0, 1]);
+        assert_eq!(g.queries, 2);
+        assert_eq!(g.outcomes.native, 2);
+        // Both spans exist independently under their shard tags.
+        assert_eq!(a.spans.len(), 2);
+        assert!(a.spans.iter().all(|s| s.seal_us == Some(22)));
+    }
+
+    #[test]
+    fn truncated_stream_yields_open_spans_not_errors() {
+        let events = vec![
+            te(0, 0, Event::Start { seed: 1, mode: "parm".into(), shards: 1 }),
+            te(10, 0, Event::Submit { qid: 0 }),
+            te(20, 0, Event::Submit { qid: 1 }),
+            te(30, 0, Event::Complete { qid: 0, outcome: 0, latency_us: 20 }),
+        ];
+        let a = analyze(&events, &AnalyzeOpts::default());
+        assert_eq!(a.open_spans(), 1);
+        assert!(a.footer.is_none());
+        assert_eq!(a.outcome_counts().total(), 1);
+    }
+
+    #[test]
+    fn route_events_bind_to_the_tagged_span() {
+        let tagged = crate::coordinator::shards::tag_id(1, 4);
+        let events = vec![
+            te(0, 0, Event::Start { seed: 1, mode: "sharded".into(), shards: 2 }),
+            te(10, 1, Event::Submit { qid: 4 }),
+            te(12, 0, Event::Route { qid: tagged, shard: 1 }),
+            te(90, 1, Event::Complete { qid: 4, outcome: 0, latency_us: 80 }),
+        ];
+        let a = analyze(&events, &AnalyzeOpts::default());
+        assert_eq!(a.spans.len(), 1);
+        assert_eq!(a.spans[0].route_us, Some(12));
+        assert_eq!(a.spans[0].tagged_qid, Some(tagged));
+    }
+}

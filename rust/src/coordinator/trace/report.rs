@@ -1,0 +1,405 @@
+//! Renderers for [`Analysis`](crate::coordinator::trace::Analysis):
+//! the human-readable `parm trace` report and the `--json` machine
+//! output the CI schema lane validates.
+
+use crate::coordinator::trace::span::percentile;
+use crate::coordinator::trace::{Analysis, AnalyzeOpts, FaultWindow, OutcomeCounts, QuerySpan};
+use crate::util::json::Json;
+
+/// Microseconds, humanized (`850us`, `12.3ms`, `1.20s`).
+pub fn fmt_us(us: u64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.2}s", us as f64 / 1e6)
+    } else if us >= 1_000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+struct PhaseDist {
+    p50: u64,
+    p99: u64,
+    max: u64,
+}
+
+fn dist(mut v: Vec<u64>) -> PhaseDist {
+    v.sort_unstable();
+    PhaseDist {
+        p50: percentile(&v, 50.0),
+        p99: percentile(&v, 99.0),
+        max: v.last().copied().unwrap_or(0),
+    }
+}
+
+/// Per-phase latency distributions over completed spans, in the order
+/// queue / seal-wait / decode-wait / tail / total.
+fn phase_dists(a: &Analysis) -> Vec<(&'static str, PhaseDist)> {
+    let mut cols: [Vec<u64>; 5] = Default::default();
+    for s in &a.spans {
+        if let Some(p) = s.phases() {
+            cols[0].push(p.queue_us);
+            cols[1].push(p.seal_wait_us);
+            cols[2].push(p.decode_wait_us);
+            cols[3].push(p.tail_us);
+            cols[4].push(p.total_us);
+        }
+    }
+    let names = ["queue", "seal-wait", "decode-wait", "tail", "total"];
+    names.into_iter().zip(cols.into_iter().map(dist)).collect()
+}
+
+fn outcome_line(c: &OutcomeCounts) -> String {
+    format!(
+        "native {} recovered {} replica {} defaulted {}",
+        c.native, c.reconstructed, c.replica, c.defaulted
+    )
+}
+
+// ---------------------------------------------------------------- text
+
+/// The `parm trace` human report.
+pub fn render_text(a: &Analysis, opts: &AnalyzeOpts) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let w = &mut out;
+
+    let _ = writeln!(
+        w,
+        "journal: mode={} seed={:#x} shards={} events={} wall={}",
+        a.mode,
+        a.seed,
+        a.shards,
+        a.events,
+        fmt_us(a.wall_us)
+    );
+    let counts = a.outcome_counts();
+    let _ = writeln!(
+        w,
+        "queries: {} submitted, {} open | {} | rejected {}",
+        a.spans.len(),
+        a.open_spans(),
+        outcome_line(&counts),
+        a.rejected
+    );
+    if a.footer.is_none() {
+        let _ = writeln!(w, "note: no End footer — journal cut mid-run");
+    }
+
+    let _ = writeln!(w, "\nphase latency (completed spans):");
+    let _ = writeln!(w, "  {:<12} {:>10} {:>10} {:>10}", "phase", "p50", "p99", "max");
+    for (name, d) in phase_dists(a) {
+        let _ = writeln!(
+            w,
+            "  {:<12} {:>10} {:>10} {:>10}",
+            name,
+            fmt_us(d.p50),
+            fmt_us(d.p99),
+            fmt_us(d.max)
+        );
+    }
+
+    let slow = a.slowest(opts.slow);
+    if !slow.is_empty() {
+        let _ = writeln!(w, "\nslowest queries:");
+        for s in slow {
+            let _ = writeln!(w, "  {}", span_line(s));
+        }
+    }
+
+    let decoded = a.groups.iter().filter(|g| g.decoded()).count();
+    let faulted = a.groups.iter().filter(|g| g.faults_hit > 0).count();
+    let _ = writeln!(
+        w,
+        "\ngroup fates: {} groups, {} decoded, {} hit by faults",
+        a.groups.len(),
+        decoded,
+        faulted
+    );
+    let interesting = a.groups.iter().filter(|g| g.decoded() || g.faults_hit > 0).count();
+    let mut shown = 0usize;
+    for g in a.groups.iter().filter(|g| g.decoded() || g.faults_hit > 0) {
+        if shown == 20 {
+            let _ = writeln!(w, "  ... ({} more)", interesting - shown);
+            break;
+        }
+        shown += 1;
+        let scope = match g.shard {
+            Some(s) => format!("shard {s}"),
+            None => format!("shards {:?}", g.dispatch_shards),
+        };
+        let slots: Vec<String> =
+            g.decodes.iter().map(|&(ts, slot)| format!("slot {slot}@{}", fmt_us(ts))).collect();
+        let _ = writeln!(
+            w,
+            "  group {} ({scope}): k={} r={} sealed@{} settle={} queries={} decodes=[{}] {} faults={}",
+            g.group,
+            g.k,
+            g.r,
+            g.sealed_us.map(fmt_us).unwrap_or_else(|| "-".into()),
+            g.settle_us().map(fmt_us).unwrap_or_else(|| "-".into()),
+            g.queries,
+            slots.join(", "),
+            outcome_line(&g.outcomes),
+            g.faults_hit
+        );
+    }
+
+    if a.windows.is_empty() {
+        let _ = writeln!(w, "\nfault-impact windows: none (no chaos events)");
+    } else {
+        let _ = writeln!(
+            w,
+            "\nfault-impact windows (W={}):",
+            fmt_us(a.windows[0].width_us)
+        );
+        for fw in &a.windows {
+            let _ = writeln!(w, "  {}", window_line(fw));
+        }
+    }
+    out
+}
+
+fn span_line(s: &QuerySpan) -> String {
+    let p = s.phases();
+    let total = s.total_us().unwrap_or(0);
+    match p {
+        Some(p) => format!(
+            "shard {} qid {} [{}] total={} queue={} seal-wait={} decode-wait={} tail={}",
+            s.shard,
+            s.qid,
+            s.outcome_tag(),
+            fmt_us(total),
+            fmt_us(p.queue_us),
+            fmt_us(p.seal_wait_us),
+            fmt_us(p.decode_wait_us),
+            fmt_us(p.tail_us)
+        ),
+        None => format!("shard {} qid {} [open]", s.shard, s.qid),
+    }
+}
+
+fn window_line(fw: &FaultWindow) -> String {
+    let seg = |name: &str, s: &crate::coordinator::trace::WindowStats| {
+        format!("{name} n={} p50={} p99={}", s.n, fmt_us(s.p50_us), fmt_us(s.p99_us))
+    };
+    format!(
+        "@{} shard {} {}{}: {} | {} | {}",
+        fmt_us(fw.at_us),
+        fw.shard,
+        fw.label,
+        if fw.count > 1 { format!(" (x{})", fw.count) } else { String::new() },
+        seg("pre", &fw.pre),
+        seg("during", &fw.during),
+        seg("post", &fw.post)
+    )
+}
+
+// ---------------------------------------------------------------- json
+
+fn opt_u64(v: Option<u64>) -> Json {
+    v.map(Json::from).unwrap_or(Json::Null)
+}
+
+fn outcomes_json(c: &OutcomeCounts) -> Json {
+    Json::obj()
+        .set("native", c.native)
+        .set("recovered", c.reconstructed)
+        .set("replica", c.replica)
+        .set("defaulted", c.defaulted)
+}
+
+fn span_json(s: &QuerySpan) -> Json {
+    let mut j = Json::obj()
+        .set("shard", s.shard)
+        .set("qid", s.qid)
+        .set("outcome", s.outcome_tag())
+        .set("submit_us", s.submit_us)
+        .set("route_us", opt_u64(s.route_us))
+        .set("dispatch_us", opt_u64(s.dispatch_us))
+        .set("seal_us", opt_u64(s.seal_us))
+        .set("decode_us", opt_u64(s.decode_us))
+        .set("complete_us", opt_u64(s.complete_us))
+        .set("latency_us", opt_u64(s.latency_us))
+        .set("group", opt_u64(s.group));
+    if let Some(p) = s.phases() {
+        j = j.set(
+            "phases",
+            Json::obj()
+                .set("queue_us", p.queue_us)
+                .set("seal_wait_us", p.seal_wait_us)
+                .set("decode_wait_us", p.decode_wait_us)
+                .set("tail_us", p.tail_us)
+                .set("total_us", p.total_us),
+        );
+    }
+    j
+}
+
+fn window_stats_json(s: &crate::coordinator::trace::WindowStats) -> Json {
+    Json::obj()
+        .set("n", s.n)
+        .set("mean_us", s.mean_us)
+        .set("p50_us", s.p50_us)
+        .set("p99_us", s.p99_us)
+        .set("outcomes", outcomes_json(&s.outcomes))
+}
+
+/// The `parm trace --json` document. Spans are complete; the group
+/// timeline is capped to the interesting (decoded or fault-hit) groups
+/// with `groups_truncated` flagging the cap.
+pub fn render_json(a: &Analysis) -> Json {
+    const GROUP_CAP: usize = 500;
+    let footer = match &a.footer {
+        Some(f) => Json::obj()
+            .set("native", f.native)
+            .set("reconstructed", f.reconstructed)
+            .set("replica", f.replica)
+            .set("defaulted", f.defaulted)
+            .set("rejected", f.rejected)
+            .set("reconstructions", f.reconstructions)
+            .set("wall_us", f.wall_us),
+        None => Json::Null,
+    };
+    let phase_json: Vec<Json> = phase_dists(a)
+        .into_iter()
+        .map(|(name, d)| {
+            Json::obj()
+                .set("phase", name)
+                .set("p50_us", d.p50)
+                .set("p99_us", d.p99)
+                .set("max_us", d.max)
+        })
+        .collect();
+    let interesting: Vec<&crate::coordinator::trace::GroupFate> =
+        a.groups.iter().filter(|g| g.decoded() || g.faults_hit > 0).collect();
+    let truncated = interesting.len() > GROUP_CAP;
+    let groups: Vec<Json> = interesting
+        .into_iter()
+        .take(GROUP_CAP)
+        .map(|g| {
+            Json::obj()
+                .set("group", g.group)
+                .set("shard", opt_u64(g.shard))
+                .set("k", g.k)
+                .set("r", g.r)
+                .set("first_dispatch_us", opt_u64(g.first_dispatch_us))
+                .set("sealed_us", opt_u64(g.sealed_us))
+                .set("settled_us", opt_u64(g.settled_us))
+                .set("queries", g.queries)
+                .set("data_jobs", g.data_jobs)
+                .set("parity_jobs", g.parity_jobs)
+                .set("replica_jobs", g.replica_jobs)
+                .set(
+                    "decodes",
+                    g.decodes
+                        .iter()
+                        .map(|&(ts, slot)| Json::obj().set("ts_us", ts).set("slot", slot))
+                        .collect::<Vec<Json>>(),
+                )
+                .set("outcomes", outcomes_json(&g.outcomes))
+                .set("faults_hit", g.faults_hit)
+                .set("dispatch_shards", g.dispatch_shards.clone())
+        })
+        .collect();
+    let windows: Vec<Json> = a
+        .windows
+        .iter()
+        .map(|fw| {
+            Json::obj()
+                .set("at_us", fw.at_us)
+                .set("shard", fw.shard)
+                .set("label", fw.label.as_str())
+                .set("count", fw.count)
+                .set("width_us", fw.width_us)
+                .set("pre", window_stats_json(&fw.pre))
+                .set("during", window_stats_json(&fw.during))
+                .set("post", window_stats_json(&fw.post))
+        })
+        .collect();
+    Json::obj()
+        .set("seed", a.seed)
+        .set("mode", a.mode.as_str())
+        .set("shards", a.shards)
+        .set("events", a.events)
+        .set("wall_us", a.wall_us)
+        .set("rejected", a.rejected)
+        .set("footer", footer)
+        .set("outcomes", outcomes_json(&a.outcome_counts()))
+        .set("open_spans", a.open_spans())
+        .set("phase_latency", phase_json)
+        .set("spans", a.spans.iter().map(span_json).collect::<Vec<Json>>())
+        .set("groups_total", a.groups.len())
+        .set("groups_truncated", truncated)
+        .set("groups", groups)
+        .set("windows", windows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::journal::{Event, TimedEvent};
+    use crate::coordinator::trace::analyze;
+
+    fn sample() -> Analysis {
+        let te = |ts_us, shard, event| TimedEvent { ts_us, shard, event };
+        let events = vec![
+            te(0, 0, Event::Start { seed: 9, mode: "parm".into(), shards: 1 }),
+            te(10, 0, Event::Submit { qid: 0 }),
+            te(
+                20,
+                0,
+                Event::Dispatch { group: 1, kind: 0, detail: 0, queries: 1 },
+            ),
+            te(25, 0, Event::Seal { group: 1, k: 1, r: 1 }),
+            te(60, 0, Event::Fault { instance: 0, kind: 1, arg: 0 }),
+            te(80, 0, Event::Decode { group: 1, slot: 0 }),
+            te(90, 0, Event::Complete { qid: 0, outcome: 1, latency_us: 80 }),
+            te(
+                100,
+                0,
+                Event::End {
+                    native: 0,
+                    reconstructed: 1,
+                    replica: 0,
+                    defaulted: 0,
+                    rejected: 0,
+                    reconstructions: 1,
+                    wall_us: 100,
+                },
+            ),
+        ];
+        analyze(&events, &AnalyzeOpts::default())
+    }
+
+    #[test]
+    fn text_report_mentions_every_section() {
+        let text = render_text(&sample(), &AnalyzeOpts::default());
+        for needle in
+            ["journal: mode=parm", "phase latency", "slowest queries", "group fates", "fault-impact"]
+        {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn json_report_round_trips_and_carries_the_schema() {
+        let doc = render_json(&sample()).to_string();
+        let parsed = Json::parse(&doc).expect("valid json");
+        assert_eq!(parsed.at(&["mode"]).as_str(), Some("parm"));
+        assert_eq!(parsed.at(&["spans"]).as_arr().map(<[Json]>::len), Some(1));
+        let span = &parsed.at(&["spans"]).as_arr().unwrap()[0];
+        assert_eq!(span.at(&["outcome"]).as_str(), Some("recovered"));
+        assert_eq!(span.at(&["phases", "total_us"]).as_usize(), Some(80));
+        assert_eq!(parsed.at(&["windows"]).as_arr().map(<[Json]>::len), Some(1));
+        assert_eq!(parsed.at(&["groups"]).as_arr().map(<[Json]>::len), Some(1));
+        assert_eq!(parsed.at(&["footer", "reconstructed"]).as_usize(), Some(1));
+    }
+
+    #[test]
+    fn fmt_us_humanizes() {
+        assert_eq!(fmt_us(850), "850us");
+        assert_eq!(fmt_us(12_345), "12.3ms");
+        assert_eq!(fmt_us(1_200_000), "1.20s");
+    }
+}

@@ -1,0 +1,200 @@
+//! Per-query span reconstruction: one [`QuerySpan`] per submitted query,
+//! carrying every serving-path marker the journal recorded for it and
+//! the derived per-phase durations.
+//!
+//! # The clamped-marker model
+//!
+//! A span's markers are `submit → route → dispatch → seal → decode →
+//! complete`. Not every query has every marker: a natively-served query
+//! never decodes, a single-session run never routes, and a query the
+//! SLO sweep defaulted may complete before its group ever dispatches
+//! (the session applies resolutions *before* recording the batch's
+//! `Dispatch` events). [`QuerySpan::phases`] therefore clamps each
+//! marker into `[previous marker, complete]` — a missing or out-of-order
+//! marker inherits its predecessor, contributing a zero-width phase —
+//! so the four phase durations **sum exactly** to the end-to-end
+//! latency by construction. That identity is the property test's
+//! anchor: no phase accounting ever leaks or double-counts time.
+
+use crate::coordinator::metrics::Outcome;
+
+/// One query's reconstructed serving-path timeline. All timestamps are
+/// absolute microseconds since the recorder epoch.
+#[derive(Clone, Debug)]
+pub struct QuerySpan {
+    /// Recorder tag of the session that accepted the submit (the shard
+    /// index in sharded runs, 0 in single-session runs).
+    pub shard: u64,
+    /// Session-local query id; `(shard, qid)` is unique run-wide.
+    pub qid: u64,
+    /// The shard-tagged id the routing client observed, when a `Route`
+    /// event matched this span.
+    pub tagged_qid: Option<u64>,
+    /// Coding group this query rode, once a data dispatch claimed it.
+    pub group: Option<u64>,
+    pub submit_us: u64,
+    pub route_us: Option<u64>,
+    pub dispatch_us: Option<u64>,
+    pub seal_us: Option<u64>,
+    pub decode_us: Option<u64>,
+    /// Terminal timestamp; `None` for queries leaked by a run cut short.
+    pub complete_us: Option<u64>,
+    /// Terminal outcome; `None` while incomplete.
+    pub outcome: Option<Outcome>,
+    /// The latency the live session measured (the `Complete` payload);
+    /// may differ from `complete_us - submit_us` by recorder-clock skew
+    /// of the enqueue path, usually by well under a millisecond.
+    pub latency_us: Option<u64>,
+}
+
+impl QuerySpan {
+    pub(crate) fn new(shard: u64, qid: u64, submit_us: u64) -> QuerySpan {
+        QuerySpan {
+            shard,
+            qid,
+            tagged_qid: None,
+            group: None,
+            submit_us,
+            route_us: None,
+            dispatch_us: None,
+            seal_us: None,
+            decode_us: None,
+            complete_us: None,
+            outcome: None,
+            latency_us: None,
+        }
+    }
+
+    /// Total journal-clock latency: `complete - submit`.
+    pub fn total_us(&self) -> Option<u64> {
+        self.complete_us.map(|c| c.saturating_sub(self.submit_us))
+    }
+
+    /// Per-phase durations under the clamped-marker model (see module
+    /// docs). `None` until the span completes. The four phases sum to
+    /// [`Phases::total_us`] exactly.
+    pub fn phases(&self) -> Option<Phases> {
+        let complete = self.complete_us?;
+        let m0 = self.submit_us.min(complete);
+        let m1 = self.dispatch_us.unwrap_or(m0).max(m0).min(complete);
+        let m2 = self.seal_us.unwrap_or(m1).max(m1).min(complete);
+        let m3 = self.decode_us.unwrap_or(m2).max(m2).min(complete);
+        Some(Phases {
+            queue_us: m1 - m0,
+            seal_wait_us: m2 - m1,
+            decode_wait_us: m3 - m2,
+            tail_us: complete - m3,
+            total_us: complete - m0,
+        })
+    }
+
+    /// Short outcome tag for reports: `native` / `recovered` /
+    /// `replica` / `defaulted`, or `open` while incomplete.
+    pub fn outcome_tag(&self) -> &'static str {
+        match self.outcome {
+            Some(Outcome::Native) => "native",
+            Some(Outcome::Reconstructed) => "recovered",
+            Some(Outcome::Replica) => "replica",
+            Some(Outcome::Default) => "defaulted",
+            None => "open",
+        }
+    }
+}
+
+/// Per-phase durations of a completed span. Invariant:
+/// `queue + seal_wait + decode_wait + tail == total`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Phases {
+    /// Submit → first data dispatch (batching/queueing delay).
+    pub queue_us: u64,
+    /// Dispatch → group seal (waiting for the group to fill).
+    pub seal_wait_us: u64,
+    /// Seal → decoder reconstruction (zero for natively-served spans).
+    pub decode_wait_us: u64,
+    /// Last marker → terminal event (worker execution + completion
+    /// fan-out).
+    pub tail_us: u64,
+    /// End-to-end: submit → complete.
+    pub total_us: u64,
+}
+
+/// Outcome histogram used by spans, groups, and fault windows alike.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OutcomeCounts {
+    pub native: u64,
+    pub reconstructed: u64,
+    pub replica: u64,
+    pub defaulted: u64,
+}
+
+impl OutcomeCounts {
+    pub fn add(&mut self, o: Outcome) {
+        match o {
+            Outcome::Native => self.native += 1,
+            Outcome::Reconstructed => self.reconstructed += 1,
+            Outcome::Replica => self.replica += 1,
+            Outcome::Default => self.defaulted += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.native + self.reconstructed + self.replica + self.defaulted
+    }
+}
+
+/// Nearest-rank percentile over an **already sorted** slice; 0 when
+/// empty. `p` in [0, 100].
+pub fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let rank = (p / 100.0 * sorted_us.len() as f64).ceil() as usize;
+    sorted_us[rank.clamp(1, sorted_us.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_sum_with_all_markers() {
+        let mut s = QuerySpan::new(0, 1, 100);
+        s.dispatch_us = Some(140);
+        s.seal_us = Some(150);
+        s.decode_us = Some(300);
+        s.complete_us = Some(420);
+        let p = s.phases().unwrap();
+        assert_eq!(p.queue_us, 40);
+        assert_eq!(p.seal_wait_us, 10);
+        assert_eq!(p.decode_wait_us, 150);
+        assert_eq!(p.tail_us, 120);
+        assert_eq!(
+            p.queue_us + p.seal_wait_us + p.decode_wait_us + p.tail_us,
+            p.total_us
+        );
+    }
+
+    #[test]
+    fn missing_and_out_of_order_markers_clamp_to_zero_width() {
+        // Complete precedes dispatch (the SLO-sweep race) and there is
+        // no seal/decode: everything clamps, phases still sum.
+        let mut s = QuerySpan::new(0, 1, 100);
+        s.dispatch_us = Some(900);
+        s.complete_us = Some(400);
+        let p = s.phases().unwrap();
+        assert_eq!(p.total_us, 300);
+        assert_eq!(p.queue_us + p.seal_wait_us + p.decode_wait_us + p.tail_us, 300);
+        assert_eq!(p.queue_us, 300); // dispatch clamped onto complete
+        assert_eq!(p.tail_us, 0);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50.0), 50);
+        assert_eq!(percentile(&v, 99.0), 99);
+        assert_eq!(percentile(&v, 100.0), 100);
+        assert_eq!(percentile(&[], 99.0), 0);
+        assert_eq!(percentile(&[7], 50.0), 7);
+    }
+}

@@ -1,0 +1,232 @@
+//! Fault-impact windows: for every chaos event (fault-plan mutation or
+//! control-plane reconfiguration) in the journal, the latency and
+//! outcome distribution of completions in the intervals **before**
+//! `[T-W, T)`, **during** `[T, T+W)`, and **after** `[T+W, T+2W)` the
+//! event, computed straight from the `Complete` stream.
+//!
+//! Chaos often arrives in bursts — a whole-shard kill is `m` instance
+//! kills recorded microseconds apart — so events of the same kind on
+//! the same shard within [`COALESCE_US`] collapse into one window with
+//! a `count`, anchored at the first event's timestamp.
+
+use crate::coordinator::metrics::Outcome;
+use crate::coordinator::trace::span::{percentile, OutcomeCounts};
+
+/// Chaos events closer than this (same shard, same kind) merge into one
+/// fault window.
+pub const COALESCE_US: u64 = 10_000;
+
+/// A `Fault` or `Reconfig` record, decoded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub ts_us: u64,
+    /// Recorder tag (shard index for per-shard fault plans).
+    pub shard: u64,
+    pub kind: ChaosKind,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// A fault-plan mutation ([`crate::coordinator::journal::FaultKind`]
+    /// byte).
+    Fault { kind: u8, instance: u64, arg: u64 },
+    /// A control-plane verb
+    /// ([`crate::coordinator::journal::ReconfigVerb`] byte).
+    Reconfig { verb: u8, target: u64 },
+}
+
+impl ChaosEvent {
+    /// Human label, e.g. `kill instance 2` or `reconfig drain shard 1`.
+    pub fn label(&self) -> String {
+        match &self.kind {
+            ChaosKind::Fault { kind, instance, arg } => match kind {
+                0 => format!("fail instance {instance} for {arg}us"),
+                1 => format!("kill instance {instance}"),
+                2 => format!("heal instance {instance}"),
+                3 => format!("degrade link {instance} ({arg} flows)"),
+                4 => format!("restore link {instance}"),
+                other => format!("fault kind {other} instance {instance}"),
+            },
+            ChaosKind::Reconfig { verb, target } => match verb {
+                0 => "reconfig add-shard".to_string(),
+                1 => format!("reconfig remove shard {target}"),
+                2 => format!("reconfig drain shard {target}"),
+                3 => format!("reconfig restore shard {target}"),
+                4 => "reconfig set-admission".to_string(),
+                other => format!("reconfig verb {other} shard {target}"),
+            },
+        }
+    }
+
+    /// Coalescing identity: events merge when shard and kind class
+    /// match (instance/arg may differ — a shard kill hits every
+    /// instance).
+    fn coalesce_key(&self) -> (u64, u8, bool) {
+        match &self.kind {
+            ChaosKind::Fault { kind, .. } => (self.shard, *kind, false),
+            ChaosKind::Reconfig { verb, .. } => (self.shard, *verb, true),
+        }
+    }
+
+    /// Is this a `Fault` (as opposed to a `Reconfig`)?
+    pub fn is_fault(&self) -> bool {
+        matches!(self.kind, ChaosKind::Fault { .. })
+    }
+}
+
+/// Latency/outcome distribution of one window interval.
+#[derive(Clone, Debug, Default)]
+pub struct WindowStats {
+    pub n: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub outcomes: OutcomeCounts,
+}
+
+impl WindowStats {
+    fn of(lat_us: &mut Vec<u64>, outcomes: OutcomeCounts) -> WindowStats {
+        lat_us.sort_unstable();
+        let n = lat_us.len() as u64;
+        let mean = if n == 0 {
+            0.0
+        } else {
+            lat_us.iter().sum::<u64>() as f64 / n as f64
+        };
+        WindowStats {
+            n,
+            mean_us: mean,
+            p50_us: percentile(lat_us, 50.0),
+            p99_us: percentile(lat_us, 99.0),
+            outcomes,
+        }
+    }
+}
+
+/// One chaos event (possibly coalesced) with its before/during/after
+/// completion distributions.
+#[derive(Clone, Debug)]
+pub struct FaultWindow {
+    /// Anchor timestamp (first event of the coalesced burst).
+    pub at_us: u64,
+    pub shard: u64,
+    pub label: String,
+    /// Raw events folded into this window (1 unless coalesced).
+    pub count: u64,
+    /// Half-window width W.
+    pub width_us: u64,
+    pub pre: WindowStats,
+    pub during: WindowStats,
+    pub post: WindowStats,
+}
+
+/// A terminal event as the window pass consumes it: completion
+/// timestamp, session-measured latency, outcome.
+pub type CompletionSample = (u64, u64, Outcome);
+
+fn stats_in(completions: &[CompletionSample], lo: u64, hi: u64) -> WindowStats {
+    let mut lats = Vec::new();
+    let mut outcomes = OutcomeCounts::default();
+    for &(ts, lat, out) in completions {
+        if ts >= lo && ts < hi {
+            lats.push(lat);
+            outcomes.add(out);
+        }
+    }
+    WindowStats::of(&mut lats, outcomes)
+}
+
+/// Coalesce a time-ordered chaos stream and compute the impact window
+/// around each burst. `completions` need not be sorted.
+pub fn fault_windows(
+    chaos: &[ChaosEvent],
+    completions: &[CompletionSample],
+    width_us: u64,
+) -> Vec<FaultWindow> {
+    let mut out: Vec<FaultWindow> = Vec::new();
+    let mut anchors: Vec<(ChaosEvent, u64)> = Vec::new();
+    for ev in chaos {
+        match anchors.last_mut() {
+            Some((first, count))
+                if first.coalesce_key() == ev.coalesce_key()
+                    && ev.ts_us.saturating_sub(first.ts_us) <= COALESCE_US =>
+            {
+                *count += 1;
+            }
+            _ => anchors.push((ev.clone(), 1)),
+        }
+    }
+    for (ev, count) in anchors {
+        let t = ev.ts_us;
+        out.push(FaultWindow {
+            at_us: t,
+            shard: ev.shard,
+            label: ev.label(),
+            count,
+            width_us,
+            pre: stats_in(completions, t.saturating_sub(width_us), t),
+            during: stats_in(completions, t, t.saturating_add(width_us)),
+            post: stats_in(
+                completions,
+                t.saturating_add(width_us),
+                t.saturating_add(2 * width_us),
+            ),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kill(ts: u64, shard: u64, instance: u64) -> ChaosEvent {
+        ChaosEvent {
+            ts_us: ts,
+            shard,
+            kind: ChaosKind::Fault { kind: 1, instance, arg: 0 },
+        }
+    }
+
+    #[test]
+    fn burst_of_kills_coalesces_into_one_window() {
+        let chaos =
+            vec![kill(1000, 2, 0), kill(1005, 2, 1), kill(1010, 2, 2), kill(400_000, 2, 0)];
+        let w = fault_windows(&chaos, &[], 50_000);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].count, 3);
+        assert_eq!(w[0].at_us, 1000);
+        assert_eq!(w[1].count, 1);
+    }
+
+    #[test]
+    fn different_shards_or_kinds_do_not_coalesce() {
+        let heal = ChaosEvent {
+            ts_us: 1002,
+            shard: 2,
+            kind: ChaosKind::Fault { kind: 2, instance: 0, arg: 0 },
+        };
+        let w = fault_windows(&[kill(1000, 2, 0), heal, kill(1004, 3, 0)], &[], 1000);
+        assert_eq!(w.len(), 3);
+    }
+
+    #[test]
+    fn windows_split_completions_and_show_latency_shift() {
+        // 10 fast completions before the fault, 10 slow during, 10
+        // fast after; W = 100ms.
+        let mut completions = Vec::new();
+        for i in 0..10u64 {
+            completions.push((900_000 + i * 1000, 2_000, Outcome::Native));
+            completions.push((1_000_000 + i * 1000, 90_000, Outcome::Reconstructed));
+            completions.push((1_100_000 + i * 1000, 2_500, Outcome::Native));
+        }
+        let w = fault_windows(&[kill(1_000_000, 0, 1)], &completions, 100_000);
+        assert_eq!(w.len(), 1);
+        let w = &w[0];
+        assert_eq!((w.pre.n, w.during.n, w.post.n), (10, 10, 10));
+        assert!(w.during.p99_us > w.pre.p99_us);
+        assert_eq!(w.during.outcomes.reconstructed, 10);
+        assert_eq!(w.pre.outcomes.native, 10);
+        assert!(w.during.mean_us > w.pre.mean_us);
+    }
+}

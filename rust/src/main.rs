@@ -18,7 +18,15 @@
 //!                               telemetry, recommend)
 //!   replay                    — re-execute a serving-path journal recorded
 //!                               with `serve --record` and verify it
-//!                               (byte-identical re-encode, outcome totals)
+//!                               (byte-identical re-encode, outcome totals;
+//!                               --report folds in the trace diagnostics)
+//!   trace                     — mine a journal into diagnostics: per-query
+//!                               phase breakdowns, group-fate timelines,
+//!                               fault-impact windows (--json machine
+//!                               output, --chrome OUT.json Perfetto export)
+//!   mine                      — reconstruct a replayable workload trace
+//!                               (arrivals + client attribution) from a
+//!                               journal; replay it with `serve --trace`
 //!   table1                    — the toy coded-computation example
 //!
 //! Every paper figure has a dedicated bench (`cargo bench --bench …`);
@@ -48,11 +56,14 @@ fn main() -> anyhow::Result<()> {
         "admin" => cmd_admin(rest),
         "experiment" => cmd_experiment(rest),
         "replay" => cmd_replay(rest),
+        "trace" => cmd_trace(rest),
+        "mine" => cmd_mine(rest),
         "table1" => cmd_table1(),
         _ => {
             println!(
                 "parm — Parity Models prediction serving\n\n\
-                 usage: parm <list|accuracy|serve|admin|experiment|replay|table1> [options]\n\
+                 usage: parm <list|accuracy|serve|admin|experiment|replay|trace|mine|table1> \
+                 [options]\n\
                  run `parm <cmd> --help` for per-command options"
             );
             Ok(())
@@ -179,6 +190,18 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             "",
             "replace live Poisson pacing with a named workload scenario: \
              poisson | diurnal | flash-crowd | zipf | multi-tenant-burst",
+        )
+        .opt(
+            "trace",
+            "",
+            "replay a recorded workload trace file (`parm mine` output or a \
+             saved scenario) instead of live pacing; excludes --scenario",
+        )
+        .opt(
+            "kill-shard",
+            "",
+            "MS:SHARD — kill every instance of SHARD (via the control plane) \
+             MS milliseconds into the run; needs --shards > 1",
         )
         .opt(
             "record",
@@ -328,9 +351,9 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             shards.max(1) as u64,
         );
     }
-    let drive = match a.get("scenario") {
-        "" => Drive::Paced { n: a.get_u64("queries"), rate, clients },
-        name => {
+    let drive = match (a.get("scenario"), a.get("trace")) {
+        ("", "") => Drive::Paced { n: a.get_u64("queries"), rate, clients },
+        (name, "") => {
             let trace = parm::workload::scenario::generate(
                 name,
                 cfg.seed,
@@ -345,6 +368,28 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
                 )
             })?;
             Drive::Trace { name: name.to_string(), trace }
+        }
+        ("", path) => {
+            let trace = parm::workload::trace::Trace::load(path)
+                .map_err(|e| anyhow::anyhow!("load trace {path}: {e}"))?;
+            anyhow::ensure!(!trace.is_empty(), "trace {path} has no arrivals");
+            Drive::Trace { name: path.to_string(), trace }
+        }
+        _ => anyhow::bail!("--scenario and --trace are mutually exclusive"),
+    };
+    let kill = match a.get("kill-shard") {
+        "" => None,
+        spec => {
+            let (ms, shard) = spec
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("--kill-shard wants MS:SHARD, e.g. 300:1"))?;
+            let ms: u64 =
+                ms.parse().map_err(|e| anyhow::anyhow!("--kill-shard delay {ms:?}: {e}"))?;
+            let victim: usize =
+                shard.parse().map_err(|e| anyhow::anyhow!("--kill-shard shard {shard:?}: {e}"))?;
+            anyhow::ensure!(shards > 1, "--kill-shard needs the sharded tier; pass --shards > 1");
+            anyhow::ensure!(victim < shards, "--kill-shard shard {victim} >= --shards {shards}");
+            Some((ms, victim))
         }
     };
     if matches!(cfg.mode, Mode::CrossShard { .. }) {
@@ -370,6 +415,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             &drive,
             admin_socket.as_deref(),
             record.as_deref(),
+            kill,
         );
     }
     if shards > 1 {
@@ -389,6 +435,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             &drive,
             admin_socket.as_deref(),
             record.as_deref(),
+            kill,
         );
     }
     if admin_socket.is_some() {
@@ -586,9 +633,11 @@ fn serve_sharded(
     drive: &Drive,
     admin_socket: Option<&str>,
     record: Option<&str>,
+    kill: Option<(u64, usize)>,
 ) -> anyhow::Result<()> {
     use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
     let seed = cfg.seed;
+    let instances = cfg.m;
     let recorder = cfg.recorder.clone();
     let tier = ShardedFrontend::start(cfg, spec, models, &source.queries[0])?;
     println!("serving {} over {} shards", drive.describe(), tier.shards());
@@ -596,8 +645,12 @@ fn serve_sharded(
     // Fleet/per-shard windows refresh at scrape time, not on a poll loop.
     let _sampler = plane.register_sampler();
     let _admin = bind_admin(&plane, admin_socket)?;
+    let killer = spawn_shard_killer(&plane, kill, instances);
     let done =
         drive_clients(drive, seed, source, || plane.client().expect("fleet is live"));
+    if let Some(h) = killer {
+        let _ = h.join();
+    }
     println!(
         "{:<8} {:>6} {:>9} {:>9} {:>9} {:>10} {:>10}",
         "client", "shard", "submitted", "resolved", "rejected", "p50(ms)", "p99(ms)"
@@ -664,9 +717,11 @@ fn serve_cross_shard(
     drive: &Drive,
     admin_socket: Option<&str>,
     record: Option<&str>,
+    kill: Option<(u64, usize)>,
 ) -> anyhow::Result<()> {
     use parm::coordinator::control::{ControlPlane, Fleet, FleetRunResult};
     let seed = cfg.seed;
+    let instances = cfg.m;
     let recorder = cfg.recorder.clone();
     let tier = CrossShardFrontend::start(cfg, spec, models, &source.queries[0])?;
     println!(
@@ -680,8 +735,12 @@ fn serve_cross_shard(
     // Fleet/per-shard windows refresh at scrape time, not on a poll loop.
     let _sampler = plane.register_sampler();
     let _admin = bind_admin(&plane, admin_socket)?;
+    let killer = spawn_shard_killer(&plane, kill, instances);
     let done =
         drive_clients(drive, seed, source, || plane.client().expect("fleet is live"));
+    if let Some(h) = killer {
+        let _ = h.join();
+    }
     // Tail groups get parity protection before the wait-out.
     plane.flush_open_groups()?;
     println!(
@@ -752,6 +811,31 @@ fn serve_cross_shard(
         res.fleet.merged.rejected
     );
     Ok(())
+}
+
+/// `--kill-shard MS:SHARD`: a timed whole-shard kill through the
+/// control plane — every instance of the victim shard dies `MS`
+/// milliseconds into the run, each kill recorded as a journal `Fault`
+/// event by the shard's fault plan. The reproducible-chaos counterpart
+/// to `parm admin`-driven kills, for recording fault-impact journals
+/// from the CLI.
+fn spawn_shard_killer(
+    plane: &std::sync::Arc<parm::coordinator::control::ControlPlane>,
+    kill: Option<(u64, usize)>,
+    instances: usize,
+) -> Option<std::thread::JoinHandle<()>> {
+    let (after_ms, shard) = kill?;
+    let plane = plane.clone();
+    Some(std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(after_ms));
+        let mut killed = 0usize;
+        for i in 0..instances {
+            if plane.kill_instance(shard, i).is_ok() {
+                killed += 1;
+            }
+        }
+        println!("chaos: killed {killed}/{instances} instances of shard {shard} at +{after_ms}ms");
+    }))
 }
 
 /// Export guards for one serve run: the Prometheus endpoint and/or the
@@ -1019,6 +1103,7 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
             &drive,
             exp.admin_socket.as_deref(),
             None,
+            None,
         );
     }
     if exp.shards.shards > 1 {
@@ -1034,6 +1119,7 @@ fn cmd_experiment(argv: Vec<String>) -> anyhow::Result<()> {
             &drive,
             exp.admin_socket.as_deref(),
             None,
+            None,
         );
     }
     let row = latency::run_point(&cfg, &models, &source, exp.queries, rate, cfg.mode.name())?;
@@ -1046,8 +1132,11 @@ fn cmd_replay(argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new(
         "parm replay",
         "re-execute a recorded serving-path journal and verify it: \
-         parm replay <journal> (record one with `parm serve --record PATH`)",
-    );
+         parm replay <journal> (record one with `parm serve --record PATH`); \
+         exits non-zero naming the first violated invariant and its event \
+         index when verification fails",
+    )
+    .flag("report", "append the trace diagnostics (phase latency, group fates, fault windows)");
     let a = match cli.parse(argv) {
         Ok(a) => a,
         Err(parm::util::cli::CliError::Help) => {
@@ -1060,8 +1149,7 @@ fn cmd_replay(argv: Vec<String>) -> anyhow::Result<()> {
         .positional
         .first()
         .ok_or_else(|| anyhow::anyhow!("parm replay needs a journal path"))?;
-    let bytes = std::fs::read(path)
-        .map_err(|e| anyhow::anyhow!("read journal {path}: {e}"))?;
+    let bytes = parm::coordinator::journal::read_file(path)?;
     let r = parm::coordinator::journal::replay(&bytes)
         .map_err(|e| anyhow::anyhow!("replay {path}: {e}"))?;
     println!(
@@ -1086,6 +1174,111 @@ fn cmd_replay(argv: Vec<String>) -> anyhow::Result<()> {
     );
     println!("  chaos:   faults={} reconfigs={}", r.faults, r.reconfigs);
     println!("  wall:    {:.3}s", r.totals.wall_us as f64 / 1e6);
+    if a.has_flag("report") {
+        use parm::coordinator::trace::{analyze, report, AnalyzeOpts};
+        let events = parm::coordinator::journal::decode(&bytes)?;
+        let opts = AnalyzeOpts::default();
+        println!("\n{}", report::render_text(&analyze(&events, &opts), &opts));
+    }
+    Ok(())
+}
+
+fn cmd_trace(argv: Vec<String>) -> anyhow::Result<()> {
+    use parm::coordinator::trace::{analyze, chrome, report, AnalyzeOpts};
+    let cli = Cli::new(
+        "parm trace",
+        "mine a recorded journal into diagnostics: per-query phase \
+         breakdowns, group-fate timelines, fault-impact windows: \
+         parm trace <journal> [--json] [--chrome OUT.json]",
+    )
+    .opt(
+        "window-ms",
+        "250",
+        "fault-impact half-window W: distributions over [T-W,T), [T,T+W), [T+W,T+2W)",
+    )
+    .opt("slow", "5", "slowest-query exemplars to show in the text report")
+    .opt(
+        "chrome",
+        "",
+        "also write a Chrome/Perfetto trace-event export (open in \
+         chrome://tracing or ui.perfetto.dev) to this path",
+    )
+    .flag("json", "machine-readable report on stdout instead of text");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("parm trace needs a journal path"))?;
+    let window_ms = a.get_f64("window-ms");
+    anyhow::ensure!(window_ms > 0.0, "--window-ms must be > 0");
+    let opts = AnalyzeOpts {
+        window_us: (window_ms * 1e3) as u64,
+        slow: a.get_usize("slow"),
+    };
+    let bytes = parm::coordinator::journal::read_file(path)?;
+    let events = parm::coordinator::journal::decode(&bytes)?;
+    let analysis = analyze(&events, &opts);
+    if a.has_flag("json") {
+        println!("{}", report::render_json(&analysis));
+    } else {
+        print!("{}", report::render_text(&analysis, &opts));
+    }
+    match a.get("chrome") {
+        "" => {}
+        out => {
+            std::fs::write(out, chrome::chrome_trace(&analysis))
+                .map_err(|e| anyhow::anyhow!("write chrome trace {out}: {e}"))?;
+            if !a.has_flag("json") {
+                println!("chrome trace-event export at {out}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_mine(argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "parm mine",
+        "reconstruct a replayable workload trace (arrival offsets + client \
+         attribution) from a recorded journal: parm mine <journal> --out trace.json; \
+         replay it with `parm serve --trace trace.json`",
+    )
+    .opt("out", "trace.json", "where to write the mined trace");
+    let a = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(parm::util::cli::CliError::Help) => {
+            println!("{}", cli.usage());
+            return Ok(());
+        }
+        Err(e) => anyhow::bail!("{e}"),
+    };
+    let path = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("parm mine needs a journal path"))?;
+    let bytes = parm::coordinator::journal::read_file(path)?;
+    let events = parm::coordinator::journal::decode(&bytes)?;
+    let trace = parm::workload::trace::Trace::from_journal(&events)
+        .map_err(|e| anyhow::anyhow!("mine {path}: {e}"))?;
+    let out = a.get("out");
+    trace.save(out).map_err(|e| anyhow::anyhow!("write trace {out}: {e}"))?;
+    let (mean_gap, cv2) = trace.stats();
+    println!(
+        "mined {} arrivals from {path} to {out}: {:.1} qps nominal, mean gap {:.3}ms, \
+         CV\u{b2} {cv2:.2}, burst ratio {:.2}, {} client(s)",
+        trace.len(),
+        trace.rate_qps,
+        mean_gap * 1e3,
+        trace.burst_ratio(20),
+        trace.n_clients(),
+    );
     Ok(())
 }
 

@@ -145,6 +145,74 @@ impl Trace {
         })
     }
 
+    /// Mine a recorded serving-path journal back into a replayable
+    /// trace: every `Submit` event becomes an arrival at its recorded
+    /// offset (`ts_us`, recorder-epoch-relative, so the replay
+    /// reproduces the run's inter-arrival pattern exactly). In sharded
+    /// journals the submitting shard becomes the client attribution —
+    /// replaying fans arrivals back over the same number of frontends.
+    /// The journal does not record which pool tensor each query drew,
+    /// so `query_idx` is sequential (replay paths index the pool
+    /// modulo its size).
+    ///
+    /// A journal with no `Submit` events is [`TraceError::Invalid`]:
+    /// there is no workload to replay.
+    pub fn from_journal(
+        events: &[crate::coordinator::journal::TimedEvent],
+    ) -> Result<Trace, TraceError> {
+        use crate::coordinator::journal::Event;
+        let mut arrivals = Vec::new();
+        let mut shards = Vec::new();
+        for te in events {
+            if let Event::Submit { .. } = te.event {
+                arrivals.push(te.ts_us as f64 / 1e6);
+                shards.push(te.shard);
+            }
+        }
+        if arrivals.is_empty() {
+            return Err(TraceError::Invalid("journal has no Submit events".into()));
+        }
+        // Journal timestamps are globally non-decreasing by
+        // construction (delta encoding), so arrivals are already a
+        // valid trace; assert the contract anyway against future codec
+        // drift.
+        debug_assert!(arrivals.windows(2).all(|w| w[1] >= w[0]));
+        let n = arrivals.len();
+        let span = arrivals[n - 1] - arrivals[0];
+        let rate = if n > 1 && span > 0.0 { (n - 1) as f64 / span } else { 0.0 };
+        // Only attribute clients when the run actually fanned over
+        // shards; single-session journals stay single-client.
+        let multi = shards.iter().any(|&s| s != shards[0]);
+        let client: Vec<u32> =
+            if multi { shards.into_iter().map(|s| s as u32).collect() } else { Vec::new() };
+        Ok(Trace { arrivals, query_idx: (0..n).collect(), client, rate_qps: rate })
+    }
+
+    /// Burstiness as peak-to-mean arrivals per bin over `bins` equal
+    /// time slices: 1.0 for perfectly uniform load, ≫1 for a flash
+    /// crowd. Degenerate traces (fewer than two arrivals, zero span,
+    /// `bins == 0`) report the all-in-one-bin ratio, `len` as f64, or
+    /// 1.0 as appropriate.
+    pub fn burst_ratio(&self, bins: usize) -> f64 {
+        if self.arrivals.len() < 2 || bins == 0 {
+            return 1.0;
+        }
+        let lo = self.arrivals[0];
+        let span = self.arrivals[self.arrivals.len() - 1] - lo;
+        if span <= 0.0 {
+            // Everything on one instant: one bin holds it all.
+            return self.arrivals.len() as f64;
+        }
+        let mut counts = vec![0u64; bins];
+        for &a in &self.arrivals {
+            let b = (((a - lo) / span) * bins as f64) as usize;
+            counts[b.min(bins - 1)] += 1;
+        }
+        let mean = self.arrivals.len() as f64 / bins as f64;
+        let peak = counts.iter().copied().max().unwrap_or(0) as f64;
+        peak / mean
+    }
+
     pub fn save(&self, path: &str) -> Result<(), TraceError> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
@@ -299,6 +367,92 @@ mod tests {
         assert_eq!(mean, 0.0);
         assert_eq!(cv2, 0.0);
         assert!(cv2.is_finite());
+    }
+
+    #[test]
+    fn from_journal_mines_submits_into_a_replayable_trace() {
+        use crate::coordinator::journal::{Event, TimedEvent};
+        let te = |ts_us, shard, event| TimedEvent { ts_us, shard, event };
+        let events = vec![
+            te(0, 0, Event::Start { seed: 1, mode: "sharded".into(), shards: 2 }),
+            te(10_000, 0, Event::Submit { qid: 0 }),
+            te(20_000, 1, Event::Submit { qid: 0 }),
+            te(25_000, 1, Event::Complete { qid: 0, outcome: 0, latency_us: 5000 }),
+            te(30_000, 0, Event::Submit { qid: 1 }),
+        ];
+        let t = Trace::from_journal(&events).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.arrivals, vec![0.01, 0.02, 0.03]);
+        assert_eq!(t.client, vec![0, 1, 0]);
+        assert_eq!(t.n_clients(), 2);
+        assert_eq!(t.query_idx, vec![0, 1, 2]);
+        // 2 gaps over 20ms = 100 qps.
+        assert!((t.rate_qps - 100.0).abs() < 1e-9, "{}", t.rate_qps);
+        // Mined traces satisfy the strict save/load contract.
+        let back = Trace::from_json_text(&t.to_json().to_string()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn from_journal_single_session_has_no_client_column() {
+        use crate::coordinator::journal::{Event, TimedEvent};
+        let events: Vec<TimedEvent> = (0..5)
+            .map(|i| TimedEvent {
+                ts_us: 1000 * (i + 1),
+                shard: 0,
+                event: Event::Submit { qid: i },
+            })
+            .collect();
+        let t = Trace::from_journal(&events).unwrap();
+        assert!(t.client.is_empty());
+        assert_eq!(t.n_clients(), 1);
+    }
+
+    #[test]
+    fn from_journal_rejects_empty() {
+        use crate::coordinator::journal::{Event, TimedEvent};
+        let events = vec![TimedEvent {
+            ts_us: 0,
+            shard: 0,
+            event: Event::Start { seed: 1, mode: "parm".into(), shards: 1 },
+        }];
+        assert!(matches!(Trace::from_journal(&events), Err(TraceError::Invalid(_))));
+        assert!(matches!(Trace::from_journal(&[]), Err(TraceError::Invalid(_))));
+    }
+
+    #[test]
+    fn burst_ratio_separates_uniform_from_flash_crowd() {
+        let uniform = Trace {
+            arrivals: (0..1000).map(|i| i as f64 / 100.0).collect(),
+            query_idx: vec![0; 1000],
+            client: Vec::new(),
+            rate_qps: 100.0,
+        };
+        let ratio = uniform.burst_ratio(10);
+        assert!(ratio < 1.2, "uniform ratio {ratio}");
+
+        // 90% of arrivals crammed into the last 10% of the window.
+        let mut arrivals: Vec<f64> = (0..100).map(|i| i as f64 / 10.0).collect();
+        arrivals.extend((0..900).map(|i| 9.0 + i as f64 / 900.0));
+        arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let crowd = Trace {
+            arrivals,
+            query_idx: vec![0; 1000],
+            client: Vec::new(),
+            rate_qps: 100.0,
+        };
+        let ratio = crowd.burst_ratio(10);
+        assert!(ratio > 5.0, "flash-crowd ratio {ratio}");
+
+        // Degenerate shapes stay finite.
+        assert_eq!(uniform.burst_ratio(0), 1.0);
+        let point = Trace {
+            arrivals: vec![1.0; 4],
+            query_idx: vec![0; 4],
+            client: Vec::new(),
+            rate_qps: 1.0,
+        };
+        assert_eq!(point.burst_ratio(10), 4.0);
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Trace-diagnostics regression suite for the journal-mining layer
+//! (`coordinator::trace` + `workload::Trace::from_journal`):
+//!
+//! - **phase accounting property**: for recorded ParM and Rateless
+//!   sharded runs, every completed span's phase durations sum exactly
+//!   to its end-to-end journal latency, trace-level outcome counts
+//!   equal the journal `End` footer totals, and seeded truncation /
+//!   corruption of the *real* recorded bytes never panics or loops —
+//!   it yields a structured `JournalError` or a clean prefix;
+//! - **fault-impact acceptance**: a cross-shard flash-crowd run with a
+//!   whole-shard kill mines into per-phase breakdowns, a group-fate
+//!   timeline in which the killed shard's groups resolved by decode,
+//!   and a kill window whose during-fault p99 exceeds the pre-fault
+//!   p99;
+//! - **mining fidelity**: a flash-crowd journal mines into a
+//!   `workload::Trace` whose arrival count / mean gap / burst ratio
+//!   match the generating scenario, and the mined trace replays
+//!   through a fresh serving tier cleanly.
+//!
+//! Like the other cluster suites these spawn full simulated clusters,
+//! run serialized, and skip with a message when artifacts are missing
+//! under `--features pjrt`.
+
+mod common;
+
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+use common::{FaultScript, FaultSurface};
+use parm::artifacts::Manifest;
+use parm::cluster::hardware::GPU;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::SubmitError;
+use parm::coordinator::journal::{self, Recorder};
+use parm::coordinator::service::{Mode, ModelSet, ServiceConfig};
+use parm::coordinator::session::Resolved;
+use parm::coordinator::shards::{CrossShardFrontend, ShardSpec, ShardedClient, ShardedFrontend};
+use parm::coordinator::trace::{analyze, AnalyzeOpts, Analysis};
+use parm::experiments::latency;
+use parm::workload::scenario;
+use parm::workload::trace::Trace;
+use parm::workload::QuerySource;
+
+/// Each test spawns full simulated clusters; serialize to keep the
+/// timing paths representative.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn setup(r_max: usize) -> Option<(QuerySource, ModelSet)> {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP journal_mining: {e}");
+            return None;
+        }
+    };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    match latency::load_models(&m, 1, 2, r_max, false) {
+        Ok(models) => Some((src, models)),
+        Err(e) => {
+            eprintln!("SKIP journal_mining: {e}");
+            None
+        }
+    }
+}
+
+/// Step-paced driver (1ms+ per step; the step index paces the fault
+/// script deterministically). Returns (accepted ids, rejected count,
+/// resolutions so far).
+fn drive_steps(
+    clients: &[ShardedClient],
+    src: &QuerySource,
+    trace: &Trace,
+    script: &mut FaultScript,
+    surface: &FaultSurface,
+) -> (HashSet<u64>, u64, Vec<Resolved>) {
+    let mut submitted = HashSet::new();
+    let mut rejected = 0u64;
+    let mut got = Vec::new();
+    for i in 0..trace.len() {
+        script.apply(i as u64, surface);
+        let ci = if trace.n_clients() > 1 { trace.client_of(i) as usize } else { i };
+        let c = &clients[ci % clients.len()];
+        match c.submit(src.queries[trace.query_idx[i] % src.len()].clone()) {
+            Ok(id) => {
+                assert!(submitted.insert(id), "tier ids must be unique");
+            }
+            Err(SubmitError::Rejected { .. } | SubmitError::SloShed { .. }) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        for c in clients {
+            got.extend(c.poll());
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    (submitted, rejected, got)
+}
+
+/// Arrival-paced driver: submits each query at its trace offset (the
+/// CLI `--trace` replay path's pacing), so the recorded journal's
+/// `Submit` timestamps reproduce the trace's inter-arrival structure.
+fn drive_paced(
+    clients: &[ShardedClient],
+    src: &QuerySource,
+    trace: &Trace,
+) -> (HashSet<u64>, Vec<Resolved>) {
+    let start = Instant::now();
+    let mut submitted = HashSet::new();
+    let mut got = Vec::new();
+    for i in 0..trace.len() {
+        let target = start + Duration::from_secs_f64(trace.arrivals[i]);
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            std::thread::sleep(target - now);
+        }
+        let ci = if trace.n_clients() > 1 { trace.client_of(i) as usize } else { i };
+        let c = &clients[ci % clients.len()];
+        match c.submit(src.queries[trace.query_idx[i] % src.len()].clone()) {
+            Ok(id) => {
+                assert!(submitted.insert(id), "tier ids must be unique");
+            }
+            Err(e) => panic!("unbounded admission accepts everything: {e}"),
+        }
+        for c in clients {
+            got.extend(c.poll());
+        }
+    }
+    (submitted, got)
+}
+
+/// Sweep every client until `want` resolutions arrived (or timeout).
+fn collect(clients: &[ShardedClient], got: &mut Vec<Resolved>, want: usize, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    while got.len() < want && Instant::now() < deadline {
+        let mut any = false;
+        for c in clients {
+            for r in c.poll() {
+                got.push(r);
+                any = true;
+            }
+        }
+        if !any {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// The phase-accounting identity on a real mined run: every completed
+/// span's four phases sum exactly to `complete - submit` on the
+/// journal clock, which in turn tracks the session-measured latency;
+/// and the trace-level outcome histogram equals the `End` footer.
+fn assert_phase_and_footer_identities(a: &Analysis, ctx: &str) {
+    assert!(!a.spans.is_empty(), "{ctx}: mined spans");
+    for s in &a.spans {
+        let Some(p) = s.phases() else {
+            panic!("{ctx}: q{} of shard {} never completed", s.qid, s.shard)
+        };
+        assert_eq!(
+            p.queue_us + p.seal_wait_us + p.decode_wait_us + p.tail_us,
+            p.total_us,
+            "{ctx}: phases sum exactly to end-to-end latency (q{} shard {})",
+            s.qid,
+            s.shard
+        );
+        assert_eq!(Some(p.total_us), s.total_us(), "{ctx}: total is complete - submit");
+        // The recorded `Complete` payload is the session's own latency
+        // measurement; the journal clock brackets the same interval
+        // with only enqueue-path skew between them.
+        let lat = s.latency_us.expect("completed span has a latency payload");
+        let skew = p.total_us.abs_diff(lat);
+        assert!(
+            skew < 50_000,
+            "{ctx}: journal-clock total {}us vs session latency {lat}us (skew {skew}us)",
+            p.total_us
+        );
+    }
+    let footer = a.footer.unwrap_or_else(|| panic!("{ctx}: clean run has an End footer"));
+    let counts = a.outcome_counts();
+    assert_eq!(counts.native, footer.native, "{ctx}: native totals");
+    assert_eq!(counts.reconstructed, footer.reconstructed, "{ctx}: reconstructed totals");
+    assert_eq!(counts.replica, footer.replica, "{ctx}: replica totals");
+    assert_eq!(counts.defaulted, footer.defaulted, "{ctx}: defaulted totals");
+    assert_eq!(a.rejected, footer.rejected, "{ctx}: rejected totals");
+    assert_eq!(a.open_spans(), 0, "{ctx}: a drained run leaves no open spans");
+}
+
+/// Seeded truncation/corruption fuzz over real recorded bytes: every
+/// mangled input must return — `Ok` for a clean prefix, a structured
+/// `JournalError` otherwise — never panic, never hang.
+fn fuzz_real_journal(bytes: &[u8], seed: u64, ctx: &str) {
+    let mut state = seed | 1;
+    let mut next = move |bound: u64| {
+        // SplitMix64 step: deterministic, dependency-free.
+        state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) % bound.max(1)
+    };
+    for round in 0..120 {
+        let cut = next(bytes.len() as u64 + 1) as usize;
+        let mut mangled = bytes[..cut].to_vec();
+        if round % 3 == 0 && !mangled.is_empty() {
+            // Flip a byte too: corruption, not just truncation.
+            let at = next(mangled.len() as u64) as usize;
+            mangled[at] ^= (1 + next(255)) as u8;
+        }
+        // Structured result either way; a panic or hang fails the test.
+        let decoded = journal::decode(&mangled);
+        let replayed = journal::replay(&mangled);
+        if let Err(e) = &replayed {
+            assert!(!format!("{e}").is_empty(), "{ctx}: error displays");
+        }
+        drop(decoded);
+        drop(replayed);
+    }
+    // The unmangled journal still replays after the fuzz pass.
+    journal::replay(bytes).unwrap_or_else(|e| panic!("{ctx}: pristine journal replays: {e}"));
+}
+
+/// ParM and Rateless sharded chaos runs mine into analyses that
+/// satisfy the phase-accounting and footer identities, and the real
+/// recorded bytes survive seeded truncation/corruption fuzzing.
+#[test]
+fn mined_phases_sum_and_outcomes_match_footer_for_parm_and_rateless() {
+    let _guard = serial();
+    const SHARDS: usize = 2;
+    const M: usize = 2;
+    const CLIENTS: usize = 4;
+    const N: usize = 80;
+    const SEED: u64 = 0x31A9;
+    let Some((src, models)) = setup(2) else { return };
+    let modes = [
+        ("parm", Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] }),
+        (
+            "rateless",
+            Mode::Rateless { k: 2, r_min: 1, r_max: 2, halflife: Duration::from_millis(150) },
+        ),
+    ];
+    for (name, mode) in modes {
+        let mut cfg = ServiceConfig::defaults(mode, &GPU);
+        cfg.m = M;
+        cfg.shuffles = 0;
+        cfg.seed = SEED;
+        cfg.slo = Some(Duration::from_millis(1500));
+        let recorder = Recorder::start(SEED, name, SHARDS as u64);
+        cfg.recorder = recorder.clone();
+        let spec = ShardSpec { shards: SHARDS, vnodes: 32, global_backlog: None };
+        let tier = ShardedFrontend::start(cfg, spec, &models, &src.queries[0])
+            .unwrap_or_else(|e| panic!("{name}: tier builds: {e}"));
+        let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+        let surface =
+            FaultSurface::sharded((0..SHARDS).map(|s| tier.fault_plan(s)).collect(), M);
+        let mut script = FaultScript::builder(SEED)
+            .kill_instance_at(12, 0, 0)
+            .straggle_at(24, 1, 0, Duration::from_millis(200))
+            .build();
+        let trace =
+            scenario::generate("zipf", SEED, N, 200.0, src.len()).expect("catalogue has zipf");
+
+        let (submitted, rejected, mut got) =
+            drive_steps(&clients, &src, &trace, &mut script, &surface);
+        assert!(script.done(), "{name}: the scripted faults fired");
+        assert_eq!(rejected, 0, "{name}: unbounded admission accepts everything");
+        collect(&clients, &mut got, submitted.len(), Duration::from_secs(12));
+        assert_eq!(got.len(), submitted.len(), "{name}: every accepted query resolves");
+        let res = tier.shutdown().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let bytes = recorder.finish(&res.merged);
+
+        let events = journal::decode(&bytes)
+            .unwrap_or_else(|e| panic!("{name}: clean journal decodes: {e}"));
+        let a = analyze(&events, &AnalyzeOpts::default());
+        assert_eq!(a.mode, name);
+        assert_eq!(a.spans.len(), submitted.len(), "{name}: one span per accepted query");
+        assert_phase_and_footer_identities(&a, name);
+        // Every span found its coding group through the dispatch FIFO.
+        assert!(
+            a.spans.iter().all(|s| s.group.is_some()),
+            "{name}: every query attributed to a group"
+        );
+        assert!(!a.groups.is_empty(), "{name}: group fates mined");
+        // The scripted kill and straggle produce chaos windows.
+        assert_eq!(a.chaos.len(), 2, "{name}: both scripted faults journaled");
+        assert!(!a.windows.is_empty(), "{name}: fault-impact windows computed");
+
+        fuzz_real_journal(&bytes, SEED ^ 0xF022, name);
+    }
+}
+
+/// The acceptance run: flash-crowd traffic through the cross-shard
+/// tier with a whole-shard kill mid-run. The mined analysis must show
+/// the killed shard's groups resolving by decode and a kill window
+/// whose during-fault tail exceeds the pre-fault tail.
+#[test]
+fn whole_shard_kill_shows_decode_fates_and_inflated_during_window() {
+    let _guard = serial();
+    const SHARDS: usize = 3;
+    const M: usize = 2;
+    const CLIENTS: usize = 6;
+    const N: usize = 200;
+    const KILL_STEP: u64 = 80;
+    const SEED: u64 = 0xFA11;
+    let Some((src, models)) = setup(2) else { return };
+    let mut cfg = ServiceConfig::defaults(
+        Mode::CrossShard { k: 2, r_min: 1, r_max: 2, halflife: Duration::from_millis(150) },
+        &GPU,
+    );
+    cfg.m = M;
+    cfg.shuffles = 0;
+    cfg.seed = SEED;
+    cfg.slo = Some(Duration::from_millis(1500));
+    let recorder = Recorder::start(SEED, "cross-shard", SHARDS as u64);
+    cfg.recorder = recorder.clone();
+    let spec = ShardSpec { shards: SHARDS, vnodes: 64, global_backlog: None };
+    let tier = CrossShardFrontend::start(cfg, spec, &models, &src.queries[0])
+        .expect("cross-shard tier builds");
+    let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+    // Kill a shard that demonstrably carries traffic.
+    let victim = tier.route_of(clients[0].id()).expect("live shard");
+    let surface = FaultSurface::sharded((0..SHARDS).map(|s| tier.fault_plan(s)).collect(), M)
+        .with_recorder(recorder.clone());
+    let mut script = FaultScript::builder(SEED).kill_shard_at(KILL_STEP, victim).build();
+    let trace = scenario::generate("flash-crowd", SEED, N, 400.0, src.len())
+        .expect("catalogue has flash-crowd");
+
+    let (submitted, rejected, mut got) =
+        drive_steps(&clients, &src, &trace, &mut script, &surface);
+    assert!(script.done(), "the shard kill fired");
+    assert_eq!(rejected, 0, "unbounded admission accepts everything");
+    tier.flush_open_groups();
+    collect(&clients, &mut got, submitted.len(), Duration::from_secs(15));
+    assert_eq!(got.len(), submitted.len(), "every accepted query resolves");
+    let res = tier.shutdown().expect("clean shutdown");
+    let bytes = recorder.finish(&res.fleet.merged);
+
+    let events = journal::decode(&bytes).expect("clean journal decodes");
+    let opts = AnalyzeOpts { window_us: 100_000, slow: 5 };
+    let a = analyze(&events, &opts);
+    assert_phase_and_footer_identities(&a, "cross-shard");
+
+    // Group fates: fleet-scoped, and the killed shard's groups came
+    // back via decode — at least one group both decoded and counts
+    // reconstructed outcomes, with the kill inside its lifetime.
+    assert!(a.groups.iter().all(|g| g.shard.is_none()), "cross-shard groups are fleet-scoped");
+    let decoded: Vec<_> = a.groups.iter().filter(|g| g.decoded()).collect();
+    assert!(!decoded.is_empty(), "the whole-shard kill forced decodes");
+    assert!(
+        decoded.iter().any(|g| g.outcomes.reconstructed > 0),
+        "decoded groups resolved queries by reconstruction"
+    );
+    assert!(
+        a.groups.iter().any(|g| g.faults_hit > 0),
+        "some group's lifetime contains the kill"
+    );
+    assert!(
+        a.outcome_counts().reconstructed > 0,
+        "the killed shard's queries completed as recovered"
+    );
+    // Decoded spans carry the full marker chain: a strictly positive
+    // decode-wait phase distinguishes them from native spans.
+    assert!(
+        a.spans
+            .iter()
+            .filter(|s| s.outcome_tag() == "recovered")
+            .any(|s| s.phases().is_some_and(|p| p.decode_wait_us > 0)),
+        "recovered spans show decode wait in their phase breakdown"
+    );
+
+    // The kill window: M coalesced kill events on the victim shard,
+    // completions on both sides, and a fatter during-fault tail.
+    let w = a
+        .windows
+        .iter()
+        .find(|w| w.label.starts_with("kill") && w.shard == victim as u64)
+        .expect("the shard kill has an impact window");
+    assert_eq!(w.count, M as u64, "all instance kills coalesce into one window");
+    assert!(w.pre.n > 0, "completions before the kill");
+    assert!(w.during.n > 0, "completions during the kill");
+    assert!(
+        w.during.p99_us > w.pre.p99_us,
+        "during-fault p99 ({}us over {} samples) exceeds pre-fault p99 ({}us over {})",
+        w.during.p99_us,
+        w.during.n,
+        w.pre.p99_us,
+        w.pre.n
+    );
+    assert!(
+        w.during.outcomes.reconstructed + w.post.outcomes.reconstructed > 0,
+        "recoveries land in the during/post windows"
+    );
+}
+
+/// Mining fidelity: a flash-crowd run's journal mines into a
+/// `workload::Trace` that reproduces the generating scenario's offered
+/// load (count, mean gap, burstiness) and replays cleanly through a
+/// fresh serving tier.
+#[test]
+fn mined_trace_matches_generating_scenario_and_replays() {
+    let _guard = serial();
+    const SHARDS: usize = 2;
+    const M: usize = 2;
+    const CLIENTS: usize = 4;
+    const N: usize = 100;
+    const SEED: u64 = 0x419E;
+    let Some((src, models)) = setup(2) else { return };
+    let scenario_trace = scenario::generate("flash-crowd", SEED, N, 100.0, src.len())
+        .expect("catalogue has flash-crowd");
+
+    let start_tier = |record: bool| {
+        let mut cfg =
+            ServiceConfig::defaults(Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] }, &GPU);
+        cfg.m = M;
+        cfg.shuffles = 0;
+        cfg.seed = SEED;
+        cfg.slo = Some(Duration::from_millis(1500));
+        let recorder = if record {
+            Recorder::start(SEED, "parm", SHARDS as u64)
+        } else {
+            Recorder::disabled()
+        };
+        cfg.recorder = recorder.clone();
+        let spec = ShardSpec { shards: SHARDS, vnodes: 32, global_backlog: None };
+        let tier = ShardedFrontend::start(cfg, spec, &models, &src.queries[0])
+            .expect("tier builds");
+        (tier, recorder)
+    };
+
+    // Record the scenario at its real arrival pacing.
+    let (tier, recorder) = start_tier(true);
+    let clients: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier.client()).collect();
+    let (submitted, mut got) = drive_paced(&clients, &src, &scenario_trace);
+    collect(&clients, &mut got, submitted.len(), Duration::from_secs(12));
+    assert_eq!(got.len(), submitted.len(), "every accepted query resolves");
+    let res = tier.shutdown().expect("clean shutdown");
+    let bytes = recorder.finish(&res.merged);
+
+    // Mine it back.
+    let events = journal::decode(&bytes).expect("clean journal decodes");
+    let mined = Trace::from_journal(&events).expect("journal has submits to mine");
+    assert_eq!(mined.len(), N, "one mined arrival per accepted query");
+    assert_eq!(mined.query_idx.len(), N);
+
+    let (want_gap, _) = scenario_trace.stats();
+    let (got_gap, _) = mined.stats();
+    let gap_err = (got_gap - want_gap).abs() / want_gap;
+    assert!(
+        gap_err < 0.30,
+        "mined mean gap {got_gap:.5}s within 30% of scenario {want_gap:.5}s (err {gap_err:.2})"
+    );
+    let want_burst = scenario_trace.burst_ratio(20);
+    let got_burst = mined.burst_ratio(20);
+    assert!(want_burst > 2.0, "flash-crowd scenario is bursty ({want_burst:.2})");
+    assert!(
+        got_burst > 2.0 && got_burst > 0.5 * want_burst,
+        "mined burstiness {got_burst:.2} preserves the flash crowd ({want_burst:.2})"
+    );
+
+    // File round trip, then replay the mined trace through a fresh
+    // tier at its own pacing — the `parm serve --trace` path.
+    let path = std::env::temp_dir().join(format!("parm-mined-{}.json", std::process::id()));
+    mined.save(path.to_str().unwrap()).expect("mined trace saves");
+    let loaded = Trace::load(path.to_str().unwrap()).expect("mined trace loads");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.len(), mined.len());
+    assert_eq!(loaded.n_clients(), mined.n_clients());
+
+    let (tier2, _) = start_tier(false);
+    let clients2: Vec<ShardedClient> = (0..CLIENTS).map(|_| tier2.client()).collect();
+    let (submitted2, mut got2) = drive_paced(&clients2, &src, &loaded);
+    assert_eq!(submitted2.len(), N, "the mined trace offers the same load");
+    collect(&clients2, &mut got2, submitted2.len(), Duration::from_secs(12));
+    assert_eq!(got2.len(), submitted2.len(), "the mined trace replays cleanly");
+    let res2 = tier2.shutdown().expect("clean shutdown of the replay tier");
+    assert_eq!(res2.merged.metrics.offered(), N as u64, "offered load conserved on replay");
+}
