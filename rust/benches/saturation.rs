@@ -1,0 +1,190 @@
+//! Saturation rig for the submit→dispatch→complete hot path (ROADMAP
+//! item 2): closed-loop clients hammer one serving shard with near-zero
+//! simulated worker time, so coordination overhead — batcher, coding
+//! bookkeeping, completion fan-out, admission accounting — is the
+//! bottleneck being measured, not the (synthetic) model.
+//!
+//! For each client count in the sweep, `PARM_BENCH_PIPELINE` queries per
+//! client are kept in flight for `PARM_BENCH_SECS` seconds; sustained
+//! qps is counted over the post-warmup span and the p99.9 comes from the
+//! session's own sliding window. The sweep point and its measured
+//! throughput are published into the session's metric registry
+//! (`parm_bench_*` gauges), so the `telemetry::series::Capture` rows in
+//! `bench_out/throughput.json` carry `clients` / `phase_qps` /
+//! `phase_p999_ms` columns next to the ordinary window columns —
+//! `scripts/perf_compare.sh` gates on `phase_qps`.
+//!
+//! Knobs: `PARM_BENCH_CLIENTS` (comma list, default `1,2,4,8`),
+//! `PARM_BENCH_SECS` (per phase, default 2), `PARM_BENCH_PIPELINE`
+//! (in-flight per client, default 8).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use parm::artifacts::Manifest;
+use parm::cluster::hardware;
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::frontend::{AdmissionPolicy, ServingFrontend};
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::session::ServiceBuilder;
+use parm::experiments::latency;
+use parm::telemetry::series::Capture;
+use parm::workload::QuerySource;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    parm::util::logging::init();
+    let manifest = Manifest::load_default()?;
+    let models = latency::load_models(&manifest, 1, 2, 1, false)?;
+    let source =
+        QuerySource::from_dataset(&manifest, manifest.dataset(latency::LATENCY_DATASET)?)?;
+    let query = source.queries[0].clone();
+
+    let clients_sweep: Vec<usize> = std::env::var("PARM_BENCH_CLIENTS")
+        .unwrap_or_else(|_| "1,2,4,8".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let phase_secs: f64 = env_or("PARM_BENCH_SECS", 2.0);
+    let pipeline: usize = env_or("PARM_BENCH_PIPELINE", 8);
+
+    // One shard, coding on (ParM k=2 r=1 — the bookkeeping-heavy path),
+    // batch size 1 (maximum per-query coordination work), and all
+    // simulated delays compressed to zero so the serving substrate is
+    // the only cost left.
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
+        &hardware::GPU,
+    );
+    cfg.m = 4;
+    cfg.batch_size = 1;
+    cfg.batch_timeout = Duration::from_millis(1);
+    cfg.shuffles = 0;
+    cfg.time_scale = 0.0;
+    cfg.seed = 0x5A70;
+    cfg.metrics_window = Duration::from_secs(1);
+    cfg.telemetry_every = Duration::from_millis(50);
+    cfg.admission = AdmissionPolicy::Unbounded;
+
+    let registry = cfg.telemetry.clone();
+    let g_clients = registry.gauge("parm_bench_clients", "Closed-loop clients this phase.", &[]);
+    let g_qps =
+        registry.gauge("parm_bench_phase_qps", "Sustained qps measured for the phase.", &[]);
+    let g_p999 =
+        registry.gauge("parm_bench_phase_p999_ms", "Windowed p99.9 at the phase end.", &[]);
+
+    let handle = ServiceBuilder::new(cfg).build(&models, &query)?;
+    let frontend = ServingFrontend::start_with_window(
+        handle,
+        AdmissionPolicy::Unbounded,
+        Duration::from_secs(1),
+    );
+
+    let mut cap = Capture::session(&registry, Duration::from_millis(250))
+        .with_extra("clients", "parm_bench_clients")
+        .with_extra("phase_qps", "parm_bench_phase_qps")
+        .with_extra("phase_p999_ms", "parm_bench_phase_p999_ms");
+
+    println!("{:>8} {:>12} {:>12} {:>12}", "clients", "qps/shard", "p99(ms)", "p99.9(ms)");
+    let mut best_qps = 0.0f64;
+    let mut offered_total = 0u64;
+    for &clients in &clients_sweep {
+        g_clients.set(clients as f64);
+        cap.mark(&format!("clients={clients}"));
+        let stop = Arc::new(AtomicBool::new(false));
+        let measuring = Arc::new(AtomicBool::new(false));
+        let measured = Arc::new(AtomicU64::new(0));
+        let mut threads = Vec::new();
+        for _ in 0..clients {
+            let client = frontend.client();
+            let q = query.clone();
+            let stop = stop.clone();
+            let measuring = measuring.clone();
+            let measured = measured.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut in_flight = 0usize;
+                let mut submitted = 0u64;
+                let mut resolved = 0u64;
+                loop {
+                    while !stop.load(Ordering::Relaxed) && in_flight < pipeline {
+                        if client.submit(q.clone()).is_ok() {
+                            in_flight += 1;
+                            submitted += 1;
+                        }
+                    }
+                    if in_flight == 0 {
+                        break;
+                    }
+                    if let Some(_r) = client.next(Duration::from_millis(200)) {
+                        in_flight -= 1;
+                        resolved += 1;
+                        let mut got = 1u64;
+                        while let Some(_r) = client.try_next() {
+                            in_flight -= 1;
+                            resolved += 1;
+                            got += 1;
+                        }
+                        if measuring.load(Ordering::Relaxed) {
+                            measured.fetch_add(got, Ordering::Relaxed);
+                        }
+                    } else if stop.load(Ordering::Relaxed) {
+                        // Nothing arrived for 200 ms after the phase
+                        // ended: whatever is left resolves via drain at
+                        // shutdown; stop waiting for it here.
+                        break;
+                    }
+                }
+                (submitted, resolved)
+            }));
+        }
+        // Warm up for a quarter of the phase, then measure the rest.
+        let warmup = Duration::from_secs_f64(phase_secs * 0.25);
+        let measure = Duration::from_secs_f64(phase_secs * 0.75);
+        let spin = |dur: Duration, cap: &mut Capture| {
+            let until = Instant::now() + dur;
+            while Instant::now() < until {
+                cap.tick();
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        };
+        spin(warmup, &mut cap);
+        measuring.store(true, Ordering::Relaxed);
+        let t0 = Instant::now();
+        spin(measure, &mut cap);
+        measuring.store(false, Ordering::Relaxed);
+        let span = t0.elapsed();
+        stop.store(true, Ordering::Relaxed);
+        for t in threads {
+            let (s, _r) = t.join().expect("client thread");
+            offered_total += s;
+        }
+        let qps = measured.load(Ordering::Relaxed) as f64 / span.as_secs_f64();
+        let w = frontend.window();
+        g_qps.set(qps);
+        g_p999.set(w.p999_ms);
+        cap.sample();
+        println!("{clients:>8} {qps:>12.0} {:>12.3} {:>12.3}", w.p99_ms, w.p999_ms);
+        best_qps = best_qps.max(qps);
+    }
+
+    cap.emit("throughput");
+    let result = frontend.shutdown()?;
+    println!(
+        "\nmax sustained qps/shard: {best_qps:.0}  (offered {offered_total}, \
+         session resolved {}, rejected {})",
+        result.metrics.total(),
+        result.rejected
+    );
+    assert!(
+        result.metrics.total() + result.rejected >= offered_total,
+        "conservation: every offered query must resolve or be rejected \
+         (offered {offered_total}, resolved {}, rejected {})",
+        result.metrics.total(),
+        result.rejected
+    );
+    Ok(())
+}

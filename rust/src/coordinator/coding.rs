@@ -18,12 +18,18 @@
 //! parities ([`GroupTracker::register_with_r`]), which is what lets the
 //! adaptive rateless scheme ([`crate::coordinator::adaptive`]) pick a
 //! per-group parity count at seal time while sharing this bookkeeping.
-
-use std::collections::HashMap;
+//!
+//! Storage is a preallocated slab (ROADMAP item 2): group bodies live in
+//! a recycled arena indexed by a [`ProbeMap`], so tracking a group costs
+//! a probe plus in-place `Vec` reuse rather than a `HashMap` insert with
+//! fresh heap boxes per group. Recycling can never alias a live group —
+//! the index maps only live ids, and a stale id simply probes to nothing
+//! (pinned by the property suite in `tests/coordinator_props.rs`).
 
 use crate::coordinator::decoder;
 use crate::coordinator::encoder::Encoder;
 use crate::tensor::Tensor;
+use crate::util::arena::ProbeMap;
 
 /// A sealed coding group's bookkeeping.
 #[derive(Debug)]
@@ -64,12 +70,95 @@ pub struct Resolutions {
     pub resolved: Vec<SlotResolution>,
 }
 
+/// Slab of group bodies with an id index and a free list. Evicted
+/// bodies keep their `Vec` capacities and are reused for later groups,
+/// so steady-state register/evict churn allocates nothing.
+struct GroupArena {
+    slots: Vec<GroupState>,
+    free: Vec<u32>,
+    index: ProbeMap<u32>,
+}
+
+impl GroupArena {
+    fn new() -> GroupArena {
+        GroupArena { slots: Vec::new(), free: Vec::new(), index: ProbeMap::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Slab position of a live group (None for evicted/stale ids — the
+    /// no-alias guarantee lives here: only the index resolves ids).
+    fn slot_of(&self, id: u64) -> Option<usize> {
+        self.index.get(id).map(|s| s as usize)
+    }
+
+    fn get(&self, id: u64) -> Option<&GroupState> {
+        self.slot_of(id).map(|s| &self.slots[s])
+    }
+
+    /// Install a group body for `id`, recycling a freed slab entry when
+    /// one is available. Re-registering a live id overwrites in place
+    /// (matching the `HashMap::insert` this replaced).
+    fn insert(&mut self, id: u64, k: usize, r: usize, query_ids: Vec<Vec<u64>>, tags: Vec<usize>) {
+        let si = if let Some(s) = self.index.get(id) {
+            s as usize
+        } else if let Some(s) = self.free.pop() {
+            self.index.insert(id, s);
+            s as usize
+        } else {
+            let s = self.slots.len();
+            self.slots.push(GroupState {
+                id,
+                data_outs: Vec::new(),
+                parity_outs: Vec::new(),
+                query_ids: Vec::new(),
+                tags: Vec::new(),
+                resolved: Vec::new(),
+            });
+            self.index.insert(id, s as u32);
+            s
+        };
+        let g = &mut self.slots[si];
+        g.id = id;
+        g.data_outs.clear();
+        g.data_outs.resize_with(k, || None);
+        g.parity_outs.clear();
+        g.parity_outs.resize_with(r, || None);
+        g.query_ids = query_ids;
+        g.tags = tags;
+        g.resolved.clear();
+        g.resolved.resize(k, false);
+    }
+
+    /// Evict a group: unmap the id and recycle the body (tensors dropped
+    /// now, buffers kept for the next group).
+    fn remove(&mut self, id: u64) -> bool {
+        let Some(s) = self.index.remove(id) else {
+            return false;
+        };
+        let g = &mut self.slots[s as usize];
+        g.data_outs.clear();
+        g.parity_outs.clear();
+        g.query_ids = Vec::new();
+        g.tags.clear();
+        g.resolved.clear();
+        self.free.push(s);
+        true
+    }
+
+    fn live_ids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.index.iter().map(|(id, _)| id)
+    }
+}
+
 /// Tracks in-flight coding groups and applies the decode rule.
 pub struct GroupTracker {
     k: usize,
     /// Weight vectors per parity model (r rows of k).
     weights: Vec<Vec<f32>>,
-    groups: HashMap<u64, GroupState>,
+    arena: GroupArena,
     /// Groups fully resolved and removed (stats).
     pub completed_groups: u64,
     /// Total reconstructions performed.
@@ -90,7 +179,7 @@ impl GroupTracker {
         GroupTracker {
             k,
             weights,
-            groups: HashMap::new(),
+            arena: GroupArena::new(),
             completed_groups: 0,
             reconstructions: 0,
         }
@@ -105,7 +194,12 @@ impl GroupTracker {
     }
 
     pub fn open_groups(&self) -> usize {
-        self.groups.len()
+        self.arena.len()
+    }
+
+    /// Ids of every group still tracked (order unspecified).
+    pub fn open_group_ids(&self) -> Vec<u64> {
+        self.arena.live_ids().collect()
     }
 
     /// Register a sealed group (slot -> query ids, in dispatch order)
@@ -143,42 +237,32 @@ impl GroupTracker {
             "group r={r} outside 1..={}",
             self.weights.len()
         );
-        self.groups.insert(
-            id,
-            GroupState {
-                id,
-                data_outs: (0..self.k).map(|_| None).collect(),
-                parity_outs: (0..r).map(|_| None).collect(),
-                query_ids,
-                tags,
-                resolved: vec![false; self.k],
-            },
-        );
+        self.arena.insert(id, self.k, r, query_ids, tags);
     }
 
     /// Whether a group is still tracked (registered and not fully
     /// resolved or abandoned).
     pub fn contains(&self, group: u64) -> bool {
-        self.groups.contains_key(&group)
+        self.arena.slot_of(group).is_some()
     }
 
     /// Parity count this group was registered with (None once gone).
     pub fn group_r(&self, group: u64) -> Option<usize> {
-        self.groups.get(&group).map(|g| g.parity_outs.len())
+        self.arena.get(group).map(|g| g.parity_outs.len())
     }
 
     /// Fault-domain tag a slot was registered with (None once the group
     /// is gone). Used by fleet-level coordinators to attribute stuck
     /// slots to their shard.
     pub fn slot_tag(&self, group: u64, slot: usize) -> Option<usize> {
-        self.groups.get(&group).and_then(|g| g.tags.get(slot).copied())
+        self.arena.get(group).and_then(|g| g.tags.get(slot).copied())
     }
 
     /// Slots of a tracked group that have not resolved yet (empty when
     /// the group is gone). Used by adaptive schemes to turn stale groups
     /// into straggler-predictor loss observations.
     pub fn unresolved_slots(&self, group: u64) -> Vec<usize> {
-        match self.groups.get(&group) {
+        match self.arena.get(group) {
             Some(g) => (0..self.k).filter(|&i| !g.resolved[i]).collect(),
             None => Vec::new(),
         }
@@ -187,9 +271,10 @@ impl GroupTracker {
     /// Feed a deployed-model completion for (group, slot).
     pub fn on_data(&mut self, group: u64, slot: usize, output: Tensor) -> Resolutions {
         let mut res = Resolutions::default();
-        let Some(g) = self.groups.get_mut(&group) else {
+        let Some(si) = self.arena.slot_of(group) else {
             return res; // group already fully resolved and evicted
         };
+        let g = &mut self.arena.slots[si];
         if slot >= g.data_outs.len() {
             log::warn!("group {group}: data completion for slot {slot} out of range");
             return res;
@@ -207,17 +292,18 @@ impl GroupTracker {
                 tag: g.tags[slot],
             });
         }
-        self.try_decode(group, &mut res);
-        self.evict_if_done(group);
+        self.try_decode(si, &mut res);
+        self.evict_if_done(group, si);
         res
     }
 
     /// Feed a parity-model completion for (group, r_index).
     pub fn on_parity(&mut self, group: u64, r_index: usize, output: Tensor) -> Resolutions {
         let mut res = Resolutions::default();
-        let Some(g) = self.groups.get_mut(&group) else {
+        let Some(si) = self.arena.slot_of(group) else {
             return res;
         };
+        let g = &mut self.arena.slots[si];
         if r_index >= g.parity_outs.len() {
             // A parity beyond this group's registered r (possible when an
             // adaptive scheme lowered r between groups): ignore, never
@@ -228,20 +314,18 @@ impl GroupTracker {
         if g.parity_outs[r_index].is_none() {
             g.parity_outs[r_index] = Some(output);
         }
-        self.try_decode(group, &mut res);
-        self.evict_if_done(group);
+        self.try_decode(si, &mut res);
+        self.evict_if_done(group, si);
         res
     }
 
     /// Drop a group (e.g. SLO expired for all of its queries).
     pub fn abandon(&mut self, group: u64) {
-        self.groups.remove(&group);
+        self.arena.remove(group);
     }
 
-    fn try_decode(&mut self, group: u64, res: &mut Resolutions) {
-        let Some(g) = self.groups.get_mut(&group) else {
-            return;
-        };
+    fn try_decode(&mut self, si: usize, res: &mut Resolutions) {
+        let g = &mut self.arena.slots[si];
         let missing: Vec<usize> = (0..self.k).filter(|&i| !g.resolved[i]).collect();
         if missing.is_empty() {
             return;
@@ -266,16 +350,14 @@ impl GroupTracker {
                     }
                 }
             }
-            Err(e) => log::debug!("group {group}: decode not possible: {e}"),
+            Err(e) => log::debug!("group {}: decode not possible: {e}", g.id),
         }
     }
 
-    fn evict_if_done(&mut self, group: u64) {
-        if let Some(g) = self.groups.get(&group) {
-            if g.resolved.iter().all(|&r| r) {
-                self.groups.remove(&group);
-                self.completed_groups += 1;
-            }
+    fn evict_if_done(&mut self, group: u64, si: usize) {
+        if self.arena.slots[si].resolved.iter().all(|&r| r) {
+            self.arena.remove(group);
+            self.completed_groups += 1;
         }
     }
 }
@@ -442,5 +524,25 @@ mod tests {
         tr.on_data(1, 0, t(vec![1.]));
         let r = tr.on_data(1, 0, t(vec![99.]));
         assert!(r.resolved.is_empty(), "second completion for same slot ignored");
+    }
+
+    #[test]
+    fn recycled_slab_entry_never_aliases_a_new_group() {
+        let mut tr = tracker(2);
+        // Group 1 completes and its slab entry is freed...
+        tr.register(1, vec![vec![10], vec![11]]);
+        tr.on_data(1, 0, t(vec![1.]));
+        tr.on_data(1, 1, t(vec![2.]));
+        assert_eq!(tr.open_groups(), 0);
+        // ...group 2 recycles that entry.
+        tr.register(2, vec![vec![20], vec![21]]);
+        // Stale traffic for id 1 must hit nothing — not group 2's slots.
+        assert!(tr.on_data(1, 0, t(vec![9.])).resolved.is_empty());
+        assert!(tr.on_parity(1, 0, t(vec![9.])).resolved.is_empty());
+        assert!(!tr.contains(1));
+        assert_eq!(tr.unresolved_slots(2), vec![0, 1], "group 2 untouched by stale id 1");
+        let r = tr.on_data(2, 0, t(vec![5.]));
+        assert_eq!(r.resolved[0].query_ids, vec![20]);
+        assert_eq!(tr.open_group_ids(), vec![2]);
     }
 }

@@ -68,6 +68,7 @@ use crate::coordinator::shards::{
 use crate::telemetry::registry::SamplerId;
 use crate::telemetry::{publish_window, Counter, Registry};
 use crate::util::json::Json;
+use crate::util::sync::{LockExt, RwLockExt};
 
 /// The serving tier a control plane owns (either flavor exposes the
 /// same elastic surface; the cross-shard tier adds parity-pool
@@ -362,7 +363,7 @@ impl ControlPlane {
     /// Run `f` against the live fleet, or [`ReconfigError::Closed`]
     /// after shutdown.
     fn with_fleet<T>(&self, f: impl FnOnce(&Fleet) -> T) -> Result<T, ReconfigError> {
-        match self.fleet.read().unwrap().as_ref() {
+        match self.fleet.pread().as_ref() {
             Some(fleet) => Ok(f(fleet)),
             None => Err(ReconfigError::Closed),
         }
@@ -372,7 +373,7 @@ impl ControlPlane {
     /// shutdown). Existing clients keep working across every
     /// reconfiguration — only shutdown ends them.
     pub fn client(&self) -> Option<ShardedClient> {
-        self.fleet.read().unwrap().as_ref().map(|fleet| match fleet {
+        self.fleet.pread().as_ref().map(|fleet| match fleet {
             Fleet::Sharded(t) => t.client(),
             Fleet::CrossShard(t) => t.client(),
         })
@@ -380,7 +381,7 @@ impl ControlPlane {
 
     /// Mint a client with an explicit admission-fairness weight.
     pub fn client_with_weight(&self, weight: f64) -> Option<ShardedClient> {
-        self.fleet.read().unwrap().as_ref().map(|fleet| match fleet {
+        self.fleet.pread().as_ref().map(|fleet| match fleet {
             Fleet::Sharded(t) => t.client_with_weight(weight),
             Fleet::CrossShard(t) => t.client_with_weight(weight),
         })
@@ -393,7 +394,7 @@ impl ControlPlane {
     ///
     /// [`ShardedFrontend::add_shard`]: crate::coordinator::shards::ShardedFrontend::add_shard
     pub fn add_shard(&self) -> anyhow::Result<usize> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops.plock();
         self.with_fleet(|fleet| {
             let s = match fleet {
                 Fleet::Sharded(t) => t.add_shard(),
@@ -410,7 +411,7 @@ impl ControlPlane {
     /// per the module contract: double-remove is a clean
     /// [`ReconfigError::RemovedShard`].
     pub fn remove_shard(&self, shard: usize) -> anyhow::Result<()> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops.plock();
         self.with_fleet(|fleet| {
             match fleet {
                 Fleet::Sharded(t) => t.remove_shard(shard),
@@ -425,7 +426,7 @@ impl ControlPlane {
     /// Take a shard out of the routing ring. `Ok(true)` = transitioned,
     /// `Ok(false)` = already drained (no-op).
     pub fn drain(&self, shard: usize) -> Result<bool, ReconfigError> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops.plock();
         self.with_fleet(|fleet| {
             let changed = match fleet {
                 Fleet::Sharded(t) => t.drain_shard(shard),
@@ -441,7 +442,7 @@ impl ControlPlane {
 
     /// Put a drained shard back. `Ok(false)` = it was already live.
     pub fn restore(&self, shard: usize) -> Result<bool, ReconfigError> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops.plock();
         self.with_fleet(|fleet| {
             let changed = match fleet {
                 Fleet::Sharded(t) => t.restore_shard(shard),
@@ -458,7 +459,7 @@ impl ControlPlane {
     /// Swap the admission policy on every live shard (late-added shards
     /// inherit it).
     pub fn set_admission(&self, policy: AdmissionPolicy) -> Result<(), ReconfigError> {
-        let _ops = self.ops.lock().unwrap();
+        let _ops = self.ops.plock();
         self.with_fleet(|fleet| {
             match fleet {
                 Fleet::Sharded(t) => t.set_admission(policy),
@@ -803,8 +804,8 @@ impl ControlPlane {
     /// return the merged run record. Every subsequent op — including a
     /// second `shutdown` — fails with [`ReconfigError::Closed`].
     pub fn shutdown(&self) -> anyhow::Result<FleetRunResult> {
-        let _ops = self.ops.lock().unwrap();
-        let fleet = self.fleet.write().unwrap().take();
+        let _ops = self.ops.plock();
+        let fleet = self.fleet.pwrite().take();
         match fleet {
             Some(Fleet::Sharded(t)) => Ok(FleetRunResult::Sharded(t.shutdown()?)),
             Some(Fleet::CrossShard(t)) => Ok(FleetRunResult::CrossShard(t.shutdown()?)),

@@ -67,6 +67,7 @@ use crate::coordinator::scheme::{
     job, DispatchPlan, PoolLayout, RedundancyScheme, Resolution, SchemeTelemetry, Target,
 };
 use crate::coordinator::service::{ModelSet, RunResult, ServiceConfig};
+use crate::util::sync::LockExt;
 use crate::coordinator::session::{ServiceBuilder, ServiceHandle};
 use crate::runtime::instance::{Completion, Job, JobKind};
 use crate::tensor::Tensor;
@@ -461,14 +462,14 @@ impl CrossShardState {
     /// Wire the parity driver's channel (done by the tier before any
     /// shard serves traffic).
     pub(crate) fn set_parity_sender(&self, tx: mpsc::Sender<ParityMsg>) {
-        self.inner.lock().unwrap().parity_tx = Some(tx);
+        self.inner.plock().parity_tx = Some(tx);
     }
 
     /// Join a serving-path journal: fleet-level seals and decodes are
     /// recorded through this handle (the tier wires it from the config's
     /// recorder at startup).
     pub fn set_recorder(&self, recorder: crate::coordinator::journal::Recorder) {
-        self.inner.lock().unwrap().recorder = recorder;
+        self.inner.plock().recorder = recorder;
     }
 
     /// Extend the striping width to `shards` (elastic scale-out). Shard
@@ -477,7 +478,7 @@ impl CrossShardState {
     /// Already-open groups widen their shard masks so the new shard can
     /// join them immediately.
     pub fn grow_to(&self, shards: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         if shards <= g.cfg.shards {
             return;
         }
@@ -498,7 +499,7 @@ impl CrossShardState {
     /// still queued for it are dropped — the owning session is already
     /// gone, so nobody could deliver them. Idempotent.
     pub fn retire_shard(&self, shard: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         if shard >= g.cfg.shards {
             return;
         }
@@ -524,7 +525,7 @@ impl CrossShardState {
         input: Tensor,
         now: Instant,
     ) -> (u64, usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         assert!(shard < g.cfg.shards, "shard {shard} out of range");
         let k = g.cfg.k;
         let idx = match g.open.iter().position(|og| !og.has_shard[shard]) {
@@ -565,7 +566,7 @@ impl CrossShardState {
         output: Tensor,
         at: Instant,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         if g.out_zeros.is_none() {
             g.out_zeros = Some(Tensor::zeros(output.shape().to_vec()));
         }
@@ -593,7 +594,7 @@ impl CrossShardState {
     /// Feed a parity output for a known (group, r_index) — the pure-test
     /// entry; the serving path arrives via [`CrossShardState::on_parity_output`].
     pub fn on_parity(&self, group: u64, r_index: usize, output: Tensor, at: Instant) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         if g.out_zeros.is_none() {
             g.out_zeros = Some(Tensor::zeros(output.shape().to_vec()));
         }
@@ -613,7 +614,7 @@ impl CrossShardState {
         at: Instant,
     ) {
         let group = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = self.inner.plock();
             match g.parity_routes.remove(&(r_index, epoch, first_qid)) {
                 Some(group) => group,
                 None => {
@@ -651,7 +652,7 @@ impl CrossShardState {
     /// session makes at its pump cadence, so it also drives sweeps when
     /// traffic stalls).
     pub fn drain_decoded(&self, shard: usize, now: Instant) -> Vec<(Vec<u64>, Instant)> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         g.sweep(now);
         g.external[shard].drain(..).collect()
     }
@@ -671,7 +672,7 @@ impl CrossShardState {
     /// groups that will not fill get their parity protection instead of
     /// riding the session SLO.
     pub fn flush_open(&self, now: Instant) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         let open = std::mem::take(&mut g.open);
         for og in open {
             if og.slots.is_empty() {
@@ -683,36 +684,36 @@ impl CrossShardState {
 
     /// Cross-shard reconstructions whose decoded slot belonged to `shard`.
     pub fn reconstructions_for(&self, shard: usize) -> u64 {
-        self.inner.lock().unwrap().recon_by_shard[shard]
+        self.inner.plock().recon_by_shard[shard]
     }
 
     /// Total cross-shard reconstructions.
     pub fn reconstructions(&self) -> u64 {
-        self.inner.lock().unwrap().tracker.reconstructions
+        self.inner.plock().tracker.reconstructions
     }
 
     /// Parity count a sealed group carries (None once resolved/unknown).
     pub fn group_r(&self, group: u64) -> Option<usize> {
-        self.inner.lock().unwrap().tracker.group_r(group)
+        self.inner.plock().tracker.group_r(group)
     }
 
     /// Whether a sealed group is still tracked.
     pub fn contains(&self, group: u64) -> bool {
-        self.inner.lock().unwrap().tracker.contains(group)
+        self.inner.plock().tracker.contains(group)
     }
 
     /// Unresolved slots of a sealed group.
     pub fn unresolved_slots(&self, group: u64) -> Vec<usize> {
-        self.inner.lock().unwrap().tracker.unresolved_slots(group)
+        self.inner.plock().tracker.unresolved_slots(group)
     }
 
     /// Groups still accumulating slots.
     pub fn open_groups(&self) -> usize {
-        self.inner.lock().unwrap().open.len()
+        self.inner.plock().open.len()
     }
 
     pub(crate) fn scheme_telemetry(&self) -> SchemeTelemetry {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.plock();
         SchemeTelemetry {
             last_r: g.last_r,
             unavailability: g.predictor.fleet_unavailability(Instant::now()),
@@ -723,7 +724,7 @@ impl CrossShardState {
 
     /// The tier-level view: fleet + per-shard estimates and counters.
     pub fn fleet_telemetry(&self) -> CrossShardTelemetry {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.plock();
         let now = Instant::now();
         CrossShardTelemetry {
             last_r: g.last_r,
@@ -1027,12 +1028,12 @@ impl ParityLeg {
 
     /// Fault plan of the r_index-th parity pool (chaos drills).
     pub(crate) fn fault_plan(&self, r_index: usize) -> Arc<FaultPlan> {
-        self.faults.lock().unwrap()[r_index].clone()
+        self.faults.plock()[r_index].clone()
     }
 
     /// Permanently kill one instance of the r_index-th parity pool.
     pub(crate) fn kill(&self, r_index: usize, instance: usize) {
-        self.faults.lock().unwrap()[r_index].kill(instance);
+        self.faults.plock()[r_index].kill(instance);
     }
 
     /// Stop the driver, drain the parity sessions, and return their run
@@ -1114,7 +1115,7 @@ fn apply_resize(
         }
     }
     *epoch = next_epoch;
-    let mut plans = faults.lock().unwrap();
+    let mut plans = faults.plock();
     for (ri, new) in fresh.into_iter().enumerate() {
         plans[ri] = new.fault_plan();
         let old = std::mem::replace(&mut handles[ri], new);

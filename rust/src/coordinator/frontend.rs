@@ -4,7 +4,7 @@
 //! The paper's setting is a prediction-serving system fronting many
 //! concurrent users (§2.1), but [`ServiceHandle`] is deliberately
 //! single-consumer — all of its methods take `&mut self` so the scheme,
-//! batcher, and pending map stay lock-free. This module closes the gap:
+//! batcher, and pending ring stay lock-free. This module closes the gap:
 //!
 //! ```text
 //!  client threads                dispatcher thread             workers
@@ -83,6 +83,7 @@ use crate::coordinator::service::{ModelSet, RunResult};
 use crate::coordinator::session::{QueryId, Resolved, ServiceBuilder, ServiceHandle};
 use crate::telemetry::{Counter, Gauge, Registry};
 use crate::tensor::Tensor;
+use crate::util::sync::{CondvarExt, LockExt, RwLockExt};
 
 /// How the frontend admits queries when the cluster falls behind.
 ///
@@ -203,8 +204,8 @@ impl ClientCore {
             }
             Outcome::Default => self.defaulted.fetch_add(1, Ordering::Relaxed),
         };
-        self.window.lock().unwrap().record(r.outcome, r.latency, Instant::now());
-        let mut inbox = self.inbox.lock().unwrap();
+        self.window.plock().record(r.outcome, r.latency, Instant::now());
+        let mut inbox = self.inbox.plock();
         inbox.push_back(r);
         self.inbox_cv.notify_all();
     }
@@ -431,13 +432,13 @@ impl ServiceClient {
 
     /// Non-blocking: take every prediction routed to this client so far.
     pub fn poll(&self) -> Vec<Resolved> {
-        self.core.inbox.lock().unwrap().drain(..).collect()
+        self.core.inbox.plock().drain(..).collect()
     }
 
     /// Non-blocking: take the single oldest prediction for this client,
     /// if any (the sharded tier sweeps many inboxes without draining).
     pub fn try_next(&self) -> Option<Resolved> {
-        self.core.inbox.lock().unwrap().pop_front()
+        self.core.inbox.plock().pop_front()
     }
 
     /// This frontend's current admission-load estimate (session backlog
@@ -450,7 +451,7 @@ impl ServiceClient {
     /// Block up to `timeout` for the next prediction for this client.
     pub fn next(&self, timeout: Duration) -> Option<Resolved> {
         let deadline = Instant::now() + timeout;
-        let mut inbox = self.core.inbox.lock().unwrap();
+        let mut inbox = self.core.inbox.plock();
         loop {
             if let Some(r) = inbox.pop_front() {
                 return Some(r);
@@ -462,8 +463,7 @@ impl ServiceClient {
             let (guard, _) = self
                 .core
                 .inbox_cv
-                .wait_timeout(inbox, deadline - now)
-                .unwrap();
+                .pwait_timeout(inbox, deadline - now);
             inbox = guard;
         }
     }
@@ -482,7 +482,7 @@ impl ServiceClient {
 
     /// This client's live windowed latency/recovery/reject summary.
     pub fn window(&self) -> WindowSnapshot {
-        self.core.window.lock().unwrap().snapshot(Instant::now())
+        self.core.window.plock().snapshot(Instant::now())
     }
 
     /// Weighted-fairness carve-out: when the frontend is saturated, a
@@ -515,7 +515,7 @@ impl ServiceClient {
     }
 
     fn admit(&self) -> Result<(), SubmitError> {
-        let policy = *self.shared.policy.read().unwrap();
+        let policy = *self.shared.policy.pread();
         match policy {
             AdmissionPolicy::Unbounded => Ok(()),
             AdmissionPolicy::RejectAbove { backlog: limit } => {
@@ -529,7 +529,7 @@ impl ServiceClient {
             }
             AdmissionPolicy::Block { backlog: limit, timeout } => {
                 let deadline = Instant::now() + timeout;
-                let mut waited = self.shared.gate.lock().unwrap();
+                let mut waited = self.shared.gate.plock();
                 loop {
                     // A shutdown mid-wait interrupts the waiter: the query
                     // was offered while the frontend was open, so it is
@@ -556,7 +556,7 @@ impl ServiceClient {
                     // Re-check at a few-ms cadence even without a notify,
                     // since load also drains via dispatcher publishes.
                     let wait = (deadline - now).min(Duration::from_millis(2));
-                    let (guard, _) = self.shared.gate_cv.wait_timeout(waited, wait).unwrap();
+                    let (guard, _) = self.shared.gate_cv.pwait_timeout(waited, wait);
                     waited = guard;
                 }
             }
@@ -592,8 +592,8 @@ impl ServiceClient {
         self.shared.rejects_unfolded.fetch_add(1, Ordering::Relaxed);
         self.shared.tele_rejected.inc();
         let now = Instant::now();
-        self.core.window.lock().unwrap().record_rejects(1, now);
-        self.shared.window.lock().unwrap().record_rejects(1, now);
+        self.core.window.plock().record_rejects(1, now);
+        self.shared.window.plock().record_rejects(1, now);
     }
 }
 
@@ -732,7 +732,7 @@ impl ServingFrontend {
 
     /// The admission policy clients are subject to.
     pub fn policy(&self) -> AdmissionPolicy {
-        *self.shared.policy.read().unwrap()
+        *self.shared.policy.pread()
     }
 
     /// Swap the admission policy at runtime (the control plane's
@@ -741,7 +741,7 @@ impl ServingFrontend {
     /// under its terms. Block-policy waiters are woken so a loosened
     /// policy reaches them promptly.
     pub fn set_policy(&self, policy: AdmissionPolicy) {
-        *self.shared.policy.write().unwrap() = policy;
+        *self.shared.policy.pwrite() = policy;
         self.shared.gate_cv.notify_all();
     }
 
@@ -758,7 +758,7 @@ impl ServingFrontend {
 
     /// Frontend-wide live windowed metrics across all clients.
     pub fn window(&self) -> WindowSnapshot {
-        self.shared.window.lock().unwrap().snapshot(Instant::now())
+        self.shared.window.plock().snapshot(Instant::now())
     }
 
     /// The metric registry this frontend (and its session) publishes
@@ -871,7 +871,7 @@ fn dispatcher_loop(
 
     while shutdown_reply.is_none() && !disconnected {
         let publish_p99 =
-            matches!(*shared.policy.read().unwrap(), AdmissionPolicy::SloAware { .. });
+            matches!(*shared.policy.pread(), AdmissionPolicy::SloAware { .. });
         match rx.recv_timeout(PUMP) {
             Ok(Msg::Submit { fid, client, input }) => {
                 submit_one(&mut handle, &mut routes, &shared, fid, client, input);
@@ -902,7 +902,7 @@ fn dispatcher_loop(
             // p99_ms is the cheap O(n)-selection path, not a full sorted
             // snapshot — this runs under the shared window lock that
             // route() also takes per completion.
-            let p99 = shared.window.lock().unwrap().p99_ms(now);
+            let p99 = shared.window.plock().p99_ms(now);
             shared.window_p99_us.store((p99 * 1e3) as u64, Ordering::Relaxed);
             p99_published_at = now;
         }
@@ -995,7 +995,7 @@ fn route(
     match routes.remove(&r.id) {
         Some((fid, client)) => {
             let out = Resolved { id: fid, outcome: r.outcome, latency: r.latency };
-            shared.window.lock().unwrap().record(out.outcome, out.latency, Instant::now());
+            shared.window.plock().record(out.outcome, out.latency, Instant::now());
             client.deliver(out);
         }
         None => log::warn!("frontend: resolution for unknown query id {}", r.id),

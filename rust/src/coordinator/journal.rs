@@ -60,6 +60,7 @@ use std::time::Instant;
 use crate::coordinator::metrics::Outcome;
 use crate::coordinator::service::RunResult;
 use crate::util::rng::fnv1a;
+use crate::util::sync::LockExt;
 
 /// Journal magic: "PMJL" (Parity-Models JournaL).
 pub const MAGIC: [u8; 4] = *b"PMJL";
@@ -561,7 +562,7 @@ impl Recorder {
     /// threads recording.
     pub fn record(&self, ev: &Event) {
         let Some(inner) = &self.inner else { return };
-        let mut st = inner.state.lock().unwrap();
+        let mut st = inner.state.plock();
         if st.finished {
             return;
         }
@@ -575,7 +576,7 @@ impl Recorder {
 
     /// Events recorded so far.
     pub fn events(&self) -> u64 {
-        self.inner.as_ref().map_or(0, |i| i.state.lock().unwrap().events)
+        self.inner.as_ref().map_or(0, |i| i.state.plock().events)
     }
 
     /// Write the [`Event::End`] footer from a finished run's result and
@@ -589,7 +590,7 @@ impl Recorder {
     pub fn finish_totals(&self, t: &EndTotals) -> Vec<u8> {
         let Some(inner) = &self.inner else { return Vec::new() };
         {
-            let st = inner.state.lock().unwrap();
+            let st = inner.state.plock();
             if st.finished {
                 return st.buf.clone();
             }
@@ -603,7 +604,7 @@ impl Recorder {
             reconstructions: t.reconstructions,
             wall_us: t.wall_us,
         });
-        let mut st = inner.state.lock().unwrap();
+        let mut st = inner.state.plock();
         st.finished = true;
         st.buf.clone()
     }

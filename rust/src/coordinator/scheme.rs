@@ -147,7 +147,6 @@
 //!   can surface the live operating point (last chosen `r`, the
 //!   unavailability estimate) to examples, benches, and dashboards.
 
-use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::coordinator::batcher::SealedBatch;
@@ -156,6 +155,7 @@ use crate::coordinator::encoder::Encoder;
 use crate::coordinator::metrics::Outcome;
 use crate::coordinator::service::Mode;
 use crate::runtime::instance::{Completion, Job, JobKind};
+use crate::util::arena::ProbeMap;
 
 /// Which pool a planned job goes to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -323,9 +323,11 @@ pub struct ParmScheme {
     /// Id of the open group; every id below it is sealed & registered, so
     /// "is this group registered?" is a comparison, not a set lookup.
     next_group: u64,
-    /// Data completions that raced ahead of their group's registration
-    /// (only ever for the open group; drained when it seals).
-    orphans: HashMap<u64, Vec<Completion>>,
+    /// Data completions that raced ahead of their group's registration.
+    /// Only the open group can orphan (drained when it seals), so this
+    /// holds at most one live entry — an association list beats a map:
+    /// no hashing, and the retired `Vec` bodies recycle via `swap_remove`.
+    orphans: Vec<(u64, Vec<Completion>)>,
     /// Serving-path journal (disabled unless the session attached one).
     recorder: crate::coordinator::journal::Recorder,
 }
@@ -340,13 +342,21 @@ impl ParmScheme {
             encoders,
             accum: Vec::new(),
             next_group: 0,
-            orphans: HashMap::new(),
+            orphans: Vec::new(),
             recorder: crate::coordinator::journal::Recorder::disabled(),
         }
     }
 
     fn registered(&self, group: u64) -> bool {
         group < self.next_group
+    }
+
+    /// Buffer a completion that raced ahead of its group's registration.
+    fn orphan(&mut self, group: u64, c: Completion) {
+        match self.orphans.iter_mut().find(|(g, _)| *g == group) {
+            Some((_, cs)) => cs.push(c),
+            None => self.orphans.push((group, vec![c])),
+        }
     }
 
     fn apply_tracked(&mut self, c: Completion, out: &mut Vec<Resolution>) {
@@ -437,7 +447,8 @@ impl RedundancyScheme for ParmScheme {
             }
             self.accum.clear();
             // Completions that arrived before the group registered.
-            if let Some(cs) = self.orphans.remove(&gid) {
+            if let Some(at) = self.orphans.iter().position(|(g, _)| *g == gid) {
+                let (_, cs) = self.orphans.swap_remove(at);
                 for c in cs {
                     self.apply_tracked(c, &mut plan.resolutions);
                 }
@@ -460,7 +471,7 @@ impl RedundancyScheme for ParmScheme {
                 if self.registered(group) {
                     self.apply_tracked(c, &mut out);
                 } else {
-                    self.orphans.entry(group).or_default().push(c);
+                    self.orphan(group, c);
                 }
             }
             JobKind::Parity { group, .. } => {
@@ -469,7 +480,7 @@ impl RedundancyScheme for ParmScheme {
                 if self.registered(group) {
                     self.apply_tracked(c, &mut out);
                 } else {
-                    self.orphans.entry(group).or_default().push(c);
+                    self.orphan(group, c);
                 }
             }
             JobKind::Replica { .. } | JobKind::Background => {}
@@ -493,22 +504,25 @@ impl RedundancyScheme for ParmScheme {
 /// First-copy-wins bookkeeping shared by every replica-style scheme.
 /// Entries are removed once all copies of a group completed, so memory
 /// stays bounded by in-flight work (plus any copies lost to failures).
+/// Group ids are dense sequential u64s, so a [`ProbeMap`] replaces the
+/// seed's `HashMap` on this per-completion path (ROADMAP item 2).
 #[derive(Default)]
 struct ReplicaTracker {
     /// group -> (resolved?, completions seen).
-    inflight: HashMap<u64, (bool, usize)>,
+    inflight: ProbeMap<(bool, u32)>,
 }
 
 impl ReplicaTracker {
     /// Returns the outcome to resolve with, if this completion is first.
     fn on_completion(&mut self, c: &Completion, copies: usize) -> Option<Outcome> {
         let JobKind::Replica { group, slot } = c.kind else { return None };
-        let entry = self.inflight.entry(group).or_insert((false, 0));
-        entry.1 += 1;
-        let first = !entry.0;
-        entry.0 = true;
-        if entry.1 >= copies {
-            self.inflight.remove(&group);
+        let (resolved, seen) = self.inflight.get(group).unwrap_or((false, 0));
+        let seen = seen + 1;
+        let first = !resolved;
+        if (seen as usize) >= copies {
+            self.inflight.remove(group);
+        } else {
+            self.inflight.insert(group, (true, seen));
         }
         if first {
             Some(if slot > 0 { Outcome::Replica } else { Outcome::Native })

@@ -16,13 +16,16 @@
 //!   [`ServiceHandle::shutdown`] stops the cluster and yields the run's
 //!   [`RunMetrics`]-bearing [`RunResult`].
 //!
-//! Threading: instance workers send [`Completion`]s directly on a cloned
-//! channel sender (the old worker→relay→collector hop is gone); the
+//! Threading: instance workers send [`Completion`]s on a sharded MPSC
+//! bus ([`crate::util::bus`]) — each worker's sender is pinned to one of
+//! N producer shards, so workers never contend on a single channel
+//! mutex, and the handle sweeps whole shards per lock acquisition
+//! instead of one `try_recv` per completion (ROADMAP item 2). The
 //! handle owns the receiving end plus all coordination state — batcher,
-//! scheme, pending map, metrics — and processes events on the caller's
-//! thread. Completions are timestamped by the workers, so lazy processing
-//! never distorts latency accounting. The handle is `Send` but
-//! single-consumer: to serve many concurrent submitters, hand it to
+//! scheme, pending table, metrics — and processes events on the
+//! caller's thread. Completions are timestamped by the workers, so lazy
+//! processing never distorts latency accounting. The handle is `Send`
+//! but single-consumer: to serve many concurrent submitters, hand it to
 //! [`crate::coordinator::frontend::ServingFrontend`], whose dispatcher
 //! thread multiplexes [`crate::coordinator::frontend::ServiceClient`]s
 //! onto it (see `docs/ARCHITECTURE.md` for the full thread/channel map).
@@ -32,9 +35,8 @@
 //! [`ServiceHandle::window_snapshot`] a running session at any time
 //! instead of waiting for `shutdown`.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -52,10 +54,43 @@ use crate::runtime::instance::{Completion, Execution, ServiceModel, WorkerEnv};
 use crate::runtime::pool::Pool;
 use crate::telemetry::{Counter, Registry, Summary};
 use crate::tensor::Tensor;
+use crate::util::bus::{self, BusReceiver, RecvStatus};
 use crate::util::rng::Pcg64;
+use crate::util::sync::{CondvarExt, LockExt};
 
 /// Identifier handed back by [`ServiceHandle::submit`].
 pub type QueryId = u64;
+
+/// Max completions folded per pacing-loop pass (see
+/// [`ServiceHandle::run_open_loop`]): small enough that the arrival
+/// due-check runs at sub-millisecond cadence under a completion flood,
+/// large enough that steady-state traffic clears in one pass.
+const PACE_FOLD_BUDGET: usize = 256;
+
+/// Pacing-loop hook for [`ServiceHandle::run_open_loop_observed`]: fire
+/// `sink` when the sample cadence is due (catching up if the loop lagged
+/// a tick) and report the next sample instant as an extra wake deadline.
+fn maybe_sample(
+    h: &mut ServiceHandle,
+    now: Instant,
+    start: Instant,
+    sample_every: Option<Duration>,
+    next_sample: &mut Option<Instant>,
+    sink: &mut dyn FnMut(Duration, WindowSnapshot),
+) -> Option<Instant> {
+    if let (Some(every), Some(at)) = (sample_every, *next_sample) {
+        if now >= at {
+            sink(now - start, h.window.snapshot(now));
+            // Fixed cadence; skip forward if we lagged a tick.
+            let mut next = at + every;
+            while next <= now {
+                next += every;
+            }
+            *next_sample = Some(next);
+        }
+    }
+    *next_sample
+}
 
 /// The session's publications into the fleet-wide metric registry
 /// ([`crate::telemetry`]). Hot-path hooks (`on_submit`, `on_resolved`,
@@ -355,7 +390,10 @@ impl ServiceBuilder {
 
         // ---- pools (layout dictated by the scheme) ----
         let layout = scheme.layout(cfg.m);
-        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        // One completion-bus shard per instance (capped): workers spread
+        // round-robin across shards, so no two instances share a channel
+        // lock on the completion path.
+        let (done_tx, done_rx) = bus::channel::<Completion>(total_instances.min(16));
         let deployed = Pool::spawn(
             "deployed",
             models.deployed.clone(),
@@ -405,7 +443,7 @@ impl ServiceBuilder {
             }
             None => None,
         };
-        // Workers hold the only senders: the channel disconnects once all
+        // Workers hold the only senders: the bus disconnects once all
         // pools shut down.
         drop(done_tx);
 
@@ -425,7 +463,8 @@ impl ServiceBuilder {
             faults,
             shuffles,
             fault_injector,
-            pending: HashMap::new(),
+            pending: PendingTable::new(),
+            sweep_buf: Vec::new(),
             resolved_out: VecDeque::new(),
             metrics: RunMetrics::default(),
             window: LatencyWindow::new(cfg.metrics_window),
@@ -494,12 +533,15 @@ pub struct ServiceHandle {
     batcher: Batcher,
     slo: Option<Duration>,
     pools: Option<PoolSet>,
-    rx: mpsc::Receiver<Completion>,
+    rx: BusReceiver<Completion>,
     faults: Arc<FaultPlan>,
     shuffles: Option<ShuffleGen>,
     fault_injector: Option<FaultInjector>,
     /// query id -> frontend arrival (pending queries only).
-    pending: HashMap<QueryId, Instant>,
+    pending: PendingTable,
+    /// Reusable buffer for completion sweeps (capacity persists across
+    /// pumps, so a steady-state sweep allocates nothing).
+    sweep_buf: Vec<Completion>,
     /// Resolved records not yet retrieved via poll()/drain().
     resolved_out: VecDeque<Resolved>,
     metrics: RunMetrics,
@@ -627,18 +669,23 @@ impl ServiceHandle {
     /// Service the session without blocking: flush due batches, fold in
     /// completions, apply SLO defaults; returns newly resolved queries.
     pub fn poll(&mut self) -> Vec<Resolved> {
-        self.pump(None);
+        self.service_pass(usize::MAX);
         self.take_resolved()
     }
 
     /// Like [`ServiceHandle::poll`], but block up to `wait` for the first
-    /// completion before folding in whatever else is ready. For
+    /// *resolution* before folding in whatever else is ready. For
     /// single-consumer serving loops that would otherwise busy-poll
-    /// between completions. (The multi-client frontend's dispatcher does
-    /// *not* use this — it blocks on its submission channel instead and
-    /// calls `poll` at its pump cadence.)
+    /// between completions. The wait is a single deadline shared by
+    /// every internal block — a completion sweep can never push total
+    /// blocking past `wait` (the seed's version stacked a full
+    /// `recv_timeout` on top of the drain and could block ~2×) — and
+    /// the handle wakes early for batch-timeout and SLO deadlines, so a
+    /// partial batch still seals mid-wait. (The multi-client frontend's
+    /// dispatcher does *not* use this — it blocks on its submission
+    /// channel instead and calls `poll` at its pump cadence.)
     pub fn poll_timeout(&mut self, wait: Duration) -> Vec<Resolved> {
-        self.pump(Some(wait));
+        self.pump_until(Instant::now() + wait);
         self.take_resolved()
     }
 
@@ -675,11 +722,17 @@ impl ServiceHandle {
         if let Some(sealed) = self.batcher.flush_all() {
             self.dispatch_sealed(sealed);
         }
+        let mut out = Vec::new();
         while self.resolved_count < self.submitted {
             // 5 ms granularity bounds SLO-sweep latency, as in the seed.
-            self.pump(Some(Duration::from_millis(5)));
+            // pump_until returns early once anything resolves, so harvest
+            // incrementally — waiting for the full set before draining
+            // `resolved_out` would spin without ever blocking.
+            self.pump_until(Instant::now() + Duration::from_millis(5));
+            out.extend(self.resolved_out.drain(..));
         }
-        self.take_resolved()
+        out.extend(self.resolved_out.drain(..));
+        out
     }
 
     /// Drain outstanding work, stop shuffles/fault injection, shut down
@@ -747,40 +800,9 @@ impl ServiceHandle {
         for i in 0..n_queries {
             next_arrival += self.rng.exponential(rate);
             let due = start + Duration::from_secs_f64(next_arrival);
-            loop {
-                self.pump(None);
-                let now = Instant::now();
-                if let (Some(every), Some(at)) = (sample_every, next_sample) {
-                    if now >= at {
-                        sink(now - start, self.window.snapshot(now));
-                        // Fixed cadence; skip forward if we lagged a tick.
-                        let mut next = at + every;
-                        while next <= now {
-                            next += every;
-                        }
-                        next_sample = Some(next);
-                    }
-                }
-                if now >= due {
-                    break;
-                }
-                // Honor batch timeouts and the sample cadence while pacing.
-                let mut wake = due;
-                if let Some(d) = self.next_deadline() {
-                    if d < wake {
-                        wake = d;
-                    }
-                }
-                if let Some(at) = next_sample {
-                    if at < wake {
-                        wake = at;
-                    }
-                }
-                let now = Instant::now();
-                if wake > now {
-                    std::thread::sleep(wake - now);
-                }
-            }
+            self.pace_until(due, &mut |h, now| {
+                maybe_sample(h, now, start, sample_every, &mut next_sample, sink)
+            });
             self.submit(queries[(i as usize) % queries.len()].clone());
         }
     }
@@ -808,42 +830,72 @@ impl ServiceHandle {
         let start = Instant::now();
         for (i, &offset) in trace.arrivals.iter().enumerate() {
             let due = start + Duration::from_secs_f64(offset.max(0.0) * time_scale);
-            loop {
-                self.pump(None);
-                let now = Instant::now();
-                if now >= due {
-                    break;
-                }
-                let mut wake = due;
-                if let Some(d) = self.next_deadline() {
-                    if d < wake {
-                        wake = d;
-                    }
-                }
-                let now = Instant::now();
-                if wake > now {
-                    std::thread::sleep(wake - now);
-                }
-            }
+            self.pace_until(due, &mut |_, _| None);
             let qi = trace.query_idx.get(i).copied().unwrap_or(i);
             self.submit(queries[qi % queries.len()].clone());
         }
     }
 
-    /// Process due batches, available completions, and SLO expirations.
-    /// `wait`: block up to this long for the first completion.
-    fn pump(&mut self, wait: Option<Duration>) {
+    /// Pace an open-loop driver to its next arrival: service the session
+    /// in *bounded* passes until `due`, then return. `wake_hint` runs
+    /// once per iteration with the current instant; it may do periodic
+    /// side work (metrics sampling) and return an extra wake deadline to
+    /// honor. Both open-loop drivers share this loop — the seed
+    /// duplicated it, and both copies folded in an unbounded completion
+    /// sweep *before* re-checking `due`, so a completion flood (tens of
+    /// thousands of queued completions at saturation) could push
+    /// arrivals milliseconds past their trace offsets. The
+    /// [`PACE_FOLD_BUDGET`] cap keeps each pass short enough that the
+    /// due-check runs at sub-millisecond cadence no matter how deep the
+    /// completion backlog is; leftover completions are picked up by
+    /// subsequent passes (or post-arrival slack) without distorting the
+    /// offered load.
+    fn pace_until(
+        &mut self,
+        due: Instant,
+        wake_hint: &mut dyn FnMut(&mut ServiceHandle, Instant) -> Option<Instant>,
+    ) {
+        loop {
+            let now = Instant::now();
+            let extra = wake_hint(self, now);
+            self.service_pass(PACE_FOLD_BUDGET);
+            let now = Instant::now();
+            if now >= due {
+                return;
+            }
+            // Honor batch timeouts and the hint's cadence while pacing —
+            // but never sleep if the bounded pass may have left backlog.
+            if self.rx.pending() > 0 {
+                continue;
+            }
+            let mut wake = due;
+            if let Some(d) = self.batcher.next_deadline() {
+                wake = wake.min(d);
+            }
+            if let Some(at) = extra {
+                wake = wake.min(at);
+            }
+            if wake > now {
+                std::thread::sleep(wake - now);
+            }
+        }
+    }
+
+    /// One non-blocking service pass: flush due batches, sweep up to
+    /// `budget` completions off the bus in one batched drain, fold in
+    /// external resolutions, apply SLO defaults. The budget is what lets
+    /// latency-sensitive callers (the pacing loop) bound a single pass
+    /// under a completion flood; control-path callers pass `usize::MAX`.
+    fn service_pass(&mut self, budget: usize) {
         if let Some(sealed) = self.batcher.flush_due(Instant::now()) {
             self.dispatch_sealed(sealed);
         }
-        if let Some(dur) = wait {
-            if let Ok(c) = self.rx.recv_timeout(dur) {
-                self.on_completion(c);
-            }
-        }
-        while let Ok(c) = self.rx.try_recv() {
+        let mut batch = std::mem::take(&mut self.sweep_buf);
+        self.rx.try_drain(&mut batch, budget);
+        for c in batch.drain(..) {
             self.on_completion(c);
         }
+        self.sweep_buf = batch;
         // Resolutions decided outside this session's own completions
         // (cross-shard decodes performed by the shared parity leg).
         // Pump-driven, so they land even when this session's cluster is
@@ -853,6 +905,54 @@ impl ServiceHandle {
         }
         self.sweep_slo();
         self.telemetry.maybe_publish(&mut self.window, self.scheme.as_ref());
+        // Conservation: every submitted query is exactly one of pending
+        // or resolved (the exactly-once invariant the journal replays).
+        debug_assert_eq!(self.pending.len() as u64, self.submitted - self.resolved_count);
+    }
+
+    /// Block until `deadline`, servicing the session; returns early as
+    /// soon as any query resolves. Wakes for batch-timeout and SLO
+    /// deadlines, so time-driven transitions happen on time even with no
+    /// completion traffic. Total blocking never exceeds `deadline`.
+    fn pump_until(&mut self, deadline: Instant) {
+        loop {
+            self.service_pass(usize::MAX);
+            if !self.resolved_out.is_empty() {
+                return;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let mut wake = deadline;
+            if let Some(d) = self.batcher.next_deadline() {
+                wake = wake.min(d);
+            }
+            if let Some(slo) = self.slo {
+                if let Some(arrived) = self.pending.earliest() {
+                    wake = wake.min(arrived + slo);
+                }
+            }
+            let mut batch = std::mem::take(&mut self.sweep_buf);
+            match self.rx.recv_deadline(wake, &mut batch, usize::MAX) {
+                RecvStatus::Items(_) => {
+                    for c in batch.drain(..) {
+                        self.on_completion(c);
+                    }
+                }
+                RecvStatus::TimedOut => {}
+                RecvStatus::Disconnected => {
+                    // All workers gone: nothing will ever arrive on the
+                    // bus again, so sleep out the wake interval instead
+                    // of spinning (SLO sweeps still need the wakeups).
+                    let now = Instant::now();
+                    if wake > now {
+                        std::thread::sleep(wake - now);
+                    }
+                }
+            }
+            self.sweep_buf = batch;
+        }
     }
 
     fn dispatch_sealed(&mut self, mut sealed: SealedBatch) {
@@ -909,7 +1009,7 @@ impl ServiceHandle {
     /// map is the dedup).
     fn apply_resolution(&mut self, r: Resolution) {
         for id in r.query_ids {
-            if let Some(arrived) = self.pending.remove(&id) {
+            if let Some(arrived) = self.pending.remove(id) {
                 let latency = r.at.saturating_duration_since(arrived);
                 self.metrics.record(arrived, r.at, r.outcome);
                 self.window.record(r.outcome, latency, r.at);
@@ -930,14 +1030,14 @@ impl ServiceHandle {
     fn sweep_slo(&mut self) {
         let Some(slo) = self.slo else { return };
         let now = Instant::now();
-        let expired: Vec<QueryId> = self
-            .pending
-            .iter()
-            .filter(|(_, &t)| now.duration_since(t) >= slo)
-            .map(|(&id, _)| id)
-            .collect();
+        // Arrivals are monotone in query id, so expirations are a prefix
+        // of the pending window: the sweep pops expired entries off the
+        // front and stops at the first live one — O(expired), not
+        // O(pending).
+        let Some(cutoff) = now.checked_sub(slo) else { return };
+        let mut expired = Vec::new();
+        self.pending.take_expired(cutoff, &mut expired);
         for id in expired {
-            self.pending.remove(&id);
             self.metrics.record_default(slo);
             self.window.record(Outcome::Default, slo, now);
             self.telemetry.on_resolved(id, Outcome::Default, slo);
@@ -996,7 +1096,7 @@ impl FaultInjector {
                 pending.sort_by_key(|&(_, at, _)| at);
                 let (lock, cv) = &*stop2;
                 for (inst, at, dur) in pending {
-                    let mut stopped = lock.lock().unwrap();
+                    let mut stopped = lock.plock();
                     loop {
                         if *stopped {
                             return;
@@ -1005,7 +1105,7 @@ impl FaultInjector {
                         if now >= at {
                             break;
                         }
-                        let (g, _) = cv.wait_timeout(stopped, at - now).unwrap();
+                        let (g, _) = cv.pwait_timeout(stopped, at - now);
                         stopped = g;
                     }
                     drop(stopped);
@@ -1027,10 +1127,180 @@ impl FaultInjector {
 
 impl Drop for FaultInjector {
     fn drop(&mut self) {
-        *self.stop.0.lock().unwrap() = true;
+        *self.stop.0.plock() = true;
         self.stop.1.notify_all();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Pending-query table exploiting the session's structure: query ids are
+/// assigned sequentially and arrivals are timestamped in id order, so
+/// the pending set is a contiguous id *window*. A ring of
+/// `Option<Instant>` indexed by `id - base` gives O(1) insert/remove
+/// with zero hashing, and — because arrival times are monotone in id —
+/// SLO expirations are always a prefix, so the sweep is O(expired)
+/// instead of a full scan of every in-flight query (ROADMAP item 2; the
+/// seed used a `HashMap` and scanned it per pump).
+struct PendingTable {
+    /// Query id of `ring[0]`.
+    base: QueryId,
+    /// Arrival per id in `[base, base + ring.len())`; `None` = resolved.
+    ring: VecDeque<Option<Instant>>,
+    /// Number of `Some` entries.
+    live: usize,
+}
+
+impl PendingTable {
+    fn new() -> PendingTable {
+        PendingTable { base: 0, ring: VecDeque::new(), live: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    /// Record a new pending query. Ids arrive in submit order; gaps are
+    /// tolerated (padded as already-resolved) but never produced by the
+    /// session.
+    fn insert(&mut self, id: QueryId, arrived: Instant) {
+        if self.ring.is_empty() {
+            self.base = id;
+        }
+        debug_assert!(id >= self.base + self.ring.len() as u64, "ids are sequential");
+        while self.base + (self.ring.len() as u64) < id {
+            self.ring.push_back(None);
+        }
+        self.ring.push_back(Some(arrived));
+        self.live += 1;
+    }
+
+    /// Resolve `id`, returning its arrival if it was still pending
+    /// (first-verdict-wins dedup relies on exactly this).
+    fn remove(&mut self, id: QueryId) -> Option<Instant> {
+        if id < self.base {
+            return None;
+        }
+        let idx = (id - self.base) as usize;
+        let arrived = self.ring.get_mut(idx)?.take();
+        if arrived.is_some() {
+            self.live -= 1;
+            self.compact();
+        }
+        arrived
+    }
+
+    /// Pop every pending query that arrived at or before `cutoff` into
+    /// `out`. Arrivals are monotone in id, so these are exactly the
+    /// leading live entries of the window.
+    fn take_expired(&mut self, cutoff: Instant, out: &mut Vec<QueryId>) {
+        loop {
+            match self.ring.front() {
+                Some(None) => {
+                    self.ring.pop_front();
+                    self.base += 1;
+                }
+                Some(Some(t)) if *t <= cutoff => {
+                    out.push(self.base);
+                    self.ring.pop_front();
+                    self.base += 1;
+                    self.live -= 1;
+                }
+                _ => return,
+            }
+        }
+    }
+
+    /// Arrival of the oldest pending query (the next SLO deadline's
+    /// anchor), if any.
+    fn earliest(&self) -> Option<Instant> {
+        self.ring.iter().find_map(|slot| *slot)
+    }
+
+    /// Drop resolved entries off the front so the window tracks the live
+    /// span. Called after every remove: amortized O(1), and it keeps the
+    /// ring from growing with session lifetime when queries resolve
+    /// roughly in order (the common case).
+    fn compact(&mut self) {
+        while let Some(None) = self.ring.front() {
+            self.ring.pop_front();
+            self.base += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod pending_tests {
+    use super::*;
+
+    fn t(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn insert_remove_roundtrip_in_and_out_of_order() {
+        let now = Instant::now();
+        let mut p = PendingTable::new();
+        for id in 0..5u64 {
+            p.insert(id, t(now, id * 10));
+        }
+        assert_eq!(p.len(), 5);
+        // Out-of-order resolution.
+        assert_eq!(p.remove(3), Some(t(now, 30)));
+        assert_eq!(p.remove(3), None, "second verdict is a no-op");
+        assert_eq!(p.remove(0), Some(t(now, 0)));
+        assert_eq!(p.remove(4), Some(t(now, 40)));
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.earliest(), Some(t(now, 10)));
+        assert_eq!(p.remove(1), Some(t(now, 10)));
+        assert_eq!(p.remove(2), Some(t(now, 20)));
+        assert_eq!(p.len(), 0);
+        assert!(p.earliest().is_none());
+        // Window fully compacted: ring does not grow with history.
+        assert!(p.ring.is_empty());
+    }
+
+    #[test]
+    fn remove_below_base_is_none() {
+        let now = Instant::now();
+        let mut p = PendingTable::new();
+        p.insert(10, now);
+        assert_eq!(p.remove(3), None);
+        assert_eq!(p.remove(10), Some(now));
+    }
+
+    #[test]
+    fn take_expired_pops_exactly_the_prefix() {
+        let now = Instant::now();
+        let mut p = PendingTable::new();
+        for id in 0..6u64 {
+            p.insert(id, t(now, id * 10));
+        }
+        // Resolve one mid-window entry; it must not appear as expired.
+        p.remove(1);
+        let mut out = Vec::new();
+        p.take_expired(t(now, 30), &mut out);
+        assert_eq!(out, vec![0, 2, 3]);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.earliest(), Some(t(now, 40)));
+        out.clear();
+        p.take_expired(t(now, 30), &mut out);
+        assert!(out.is_empty(), "sweep is idempotent below the cutoff");
+        p.take_expired(t(now, 1000), &mut out);
+        assert_eq!(out, vec![4, 5]);
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn window_restarts_after_emptying() {
+        let now = Instant::now();
+        let mut p = PendingTable::new();
+        p.insert(0, now);
+        assert_eq!(p.remove(0), Some(now));
+        // Much later id after the window emptied: base snaps forward.
+        p.insert(1000, t(now, 5));
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.remove(1000), Some(t(now, 5)));
     }
 }

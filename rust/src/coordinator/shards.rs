@@ -75,6 +75,7 @@ use crate::coordinator::scheme::RedundancyScheme;
 use crate::coordinator::service::{Mode, ModelSet, RunResult, ServiceConfig};
 use crate::coordinator::session::{QueryId, Resolved, ServiceBuilder};
 use crate::tensor::Tensor;
+use crate::util::sync::{LockExt, RwLockExt};
 
 /// Shard index lives in the top byte of a sharded [`QueryId`], so ids
 /// stay unique fleet-wide even though every shard numbers its own
@@ -381,7 +382,7 @@ impl ClientHome {
         if prev == next {
             return;
         }
-        let legs = self.legs.read().unwrap();
+        let legs = self.legs.pread();
         if prev != NO_SHARD {
             if let Some(Some(leg)) = legs.get(prev) {
                 leg.deactivate_weight();
@@ -432,8 +433,8 @@ impl ShardShared {
     /// concurrently with a drain is either swept here or sees the
     /// updated ring itself).
     fn rehome_all(&self) {
-        let router = self.router.read().unwrap();
-        let mut homes = self.homes.lock().unwrap();
+        let router = self.router.pread();
+        let mut homes = self.homes.plock();
         homes.retain(|w| match w.upgrade() {
             Some(home) => {
                 home.rehome(&router);
@@ -608,7 +609,7 @@ impl ShardedFrontend {
     /// shard indices), including slots retired by
     /// [`ShardedFrontend::remove_shard`].
     pub fn shards(&self) -> usize {
-        self.slots.read().unwrap().len()
+        self.slots.pread().len()
     }
 
     /// Shards still provisioned (sessions running), drained or not.
@@ -644,7 +645,7 @@ impl ShardedFrontend {
         // mint (we see its slot) or entirely after (it sees our home).
         // Either way the legs vector covers every shard the router can
         // return. Lock order: slots → router → homes.
-        let slots = self.slots.read().unwrap();
+        let slots = self.slots.pread();
         let legs: Vec<Option<ServiceClient>> = slots
             .iter()
             .map(|slot| slot.live().map(|f| f.passive_client_with_weight(weight)))
@@ -660,8 +661,8 @@ impl ShardedFrontend {
             // — same order as rehome_all — so a concurrent drain/restore
             // cannot slip between them and leave this client's weight on
             // a shard the router no longer assigns it.
-            let router = self.shared.router.read().unwrap();
-            let mut homes = self.shared.homes.lock().unwrap();
+            let router = self.shared.router.pread();
+            let mut homes = self.shared.homes.plock();
             home.rehome(&router);
             homes.push(Arc::downgrade(&home));
         }
@@ -679,16 +680,16 @@ impl ShardedFrontend {
     /// Serialized with every other reconfiguration op; the data path
     /// never blocks on it beyond brief slot/ring lock windows.
     pub fn add_shard(&self) -> anyhow::Result<usize> {
-        let mut spawner = self.spawner.lock().unwrap();
-        let s = self.slots.read().unwrap().len();
+        let mut spawner = self.spawner.plock();
+        let s = self.slots.pread().len();
         if s >= MAX_SHARDS {
             return Err(ReconfigError::AtCapacity(s).into());
         }
         let fe = spawner.spawn(s)?;
         {
-            let mut slots = self.slots.write().unwrap();
+            let mut slots = self.slots.pwrite();
             debug_assert_eq!(slots.len(), s, "reconfiguration must be serialized");
-            let mut homes = self.shared.homes.lock().unwrap();
+            let mut homes = self.shared.homes.plock();
             homes.retain(|w| match w.upgrade() {
                 Some(home) => {
                     home.legs
@@ -701,7 +702,7 @@ impl ShardedFrontend {
             });
             slots.push(ShardSlot::Live(fe));
         }
-        self.shared.router.write().unwrap().add_shard();
+        self.shared.router.pwrite().add_shard();
         self.shared.rehome_all();
         Ok(s)
     }
@@ -715,11 +716,11 @@ impl ShardedFrontend {
     /// [`ShardedFrontend::shutdown`]'s merge. Errors are the
     /// [`ShardRouter::remove_shard`] contract: clean, never panicking.
     pub fn remove_shard(&self, shard: usize) -> anyhow::Result<()> {
-        let _reconfig = self.spawner.lock().unwrap();
-        self.shared.router.write().unwrap().remove_shard(shard)?;
+        let _reconfig = self.spawner.plock();
+        self.shared.router.pwrite().remove_shard(shard)?;
         self.shared.rehome_all();
         let fe = {
-            let mut slots = self.slots.write().unwrap();
+            let mut slots = self.slots.pwrite();
             let slot = &mut slots[shard];
             let faults = match slot.live() {
                 Some(f) => f.fault_plan(),
@@ -734,7 +735,7 @@ impl ShardedFrontend {
         };
         let result = fe.shutdown()?;
         if let ShardSlot::Retired { result: stash, .. } =
-            &mut self.slots.write().unwrap()[shard]
+            &mut self.slots.pwrite()[shard]
         {
             *stash = Some(result);
         }
@@ -745,9 +746,9 @@ impl ShardedFrontend {
     /// spawner, so late-added shards inherit it). Takes effect on the
     /// next admission decision; in-flight queries are untouched.
     pub fn set_admission(&self, policy: AdmissionPolicy) {
-        let mut spawner = self.spawner.lock().unwrap();
+        let mut spawner = self.spawner.plock();
         spawner.cfg.admission = policy;
-        let slots = self.slots.read().unwrap();
+        let slots = self.slots.pread();
         for slot in slots.iter() {
             if let Some(f) = slot.live() {
                 f.set_policy(policy);
@@ -759,7 +760,7 @@ impl ShardedFrontend {
     /// (observability for the weight-follows-router invariant). Retired
     /// shards hold no weight.
     pub fn shard_total_weight(&self, shard: usize) -> f64 {
-        self.slots.read().unwrap()[shard]
+        self.slots.pread()[shard]
             .live()
             .map_or(0.0, ServingFrontend::total_weight)
     }
@@ -767,7 +768,7 @@ impl ShardedFrontend {
     /// The shard the router currently assigns to `client_id` (`None` if
     /// every shard is drained).
     pub fn route_of(&self, client_id: u64) -> Option<usize> {
-        self.shared.router.read().unwrap().route(client_id)
+        self.shared.router.pread().route(client_id)
     }
 
     /// Take a shard out of the routing ring: *subsequent* submits from
@@ -777,7 +778,7 @@ impl ShardedFrontend {
     /// clients' fairness weights move with them. Idempotent: `Ok(true)`
     /// if the shard transitioned, `Ok(false)` if it was already drained.
     pub fn drain_shard(&self, shard: usize) -> Result<bool, ReconfigError> {
-        let changed = self.shared.router.write().unwrap().drain_shard(shard)?;
+        let changed = self.shared.router.pwrite().drain_shard(shard)?;
         if changed {
             self.shared.rehome_all();
         }
@@ -788,7 +789,7 @@ impl ShardedFrontend {
     /// weights return with their routes). Idempotent: `Ok(false)` if it
     /// was already live.
     pub fn restore_shard(&self, shard: usize) -> Result<bool, ReconfigError> {
-        let changed = self.shared.router.write().unwrap().restore_shard(shard)?;
+        let changed = self.shared.router.pwrite().restore_shard(shard)?;
         if changed {
             self.shared.rehome_all();
         }
@@ -797,14 +798,14 @@ impl ShardedFrontend {
 
     /// Live shard count (shards not drained and not removed).
     pub fn live_shards(&self) -> usize {
-        self.shared.router.read().unwrap().live()
+        self.shared.router.pread().live()
     }
 
     /// One shard's ring state: `"live"`, `"drained"`, `"retired"`, or
     /// `"unknown"` for an index never allocated (total, for operator
     /// surfaces that must not panic on bad input).
     pub fn shard_state(&self, shard: usize) -> &'static str {
-        let router = self.shared.router.read().unwrap();
+        let router = self.shared.router.pread();
         if shard >= router.shards() {
             "unknown"
         } else if router.is_removed(shard) {
@@ -822,7 +823,7 @@ impl ShardedFrontend {
     /// their latency profile. A no-op (with a warning) on retired
     /// shards.
     pub fn kill_instance(&self, shard: usize, instance: usize) {
-        if let Some(f) = self.slots.read().unwrap()[shard].live() {
+        if let Some(f) = self.slots.pread()[shard].live() {
             f.kill_instance(instance);
         } else {
             log::warn!("kill_instance: shard {shard} is retired");
@@ -831,7 +832,7 @@ impl ShardedFrontend {
 
     /// Fail one instance of one shard for a bounded window.
     pub fn fail_instance_for(&self, shard: usize, instance: usize, dur: Duration) {
-        if let Some(f) = self.slots.read().unwrap()[shard].live() {
+        if let Some(f) = self.slots.pread()[shard].live() {
             f.fail_instance_for(instance, dur);
         } else {
             log::warn!("fail_instance_for: shard {shard} is retired");
@@ -842,7 +843,7 @@ impl ShardedFrontend {
     /// fault-injection harness in `tests/common` scripts against).
     /// Total over the fleet's history: retired shards keep their plan.
     pub fn fault_plan(&self, shard: usize) -> Arc<FaultPlan> {
-        match &self.slots.read().unwrap()[shard] {
+        match &self.slots.pread()[shard] {
             ShardSlot::Live(f) => f.fault_plan(),
             ShardSlot::Retired { faults, .. } => faults.clone(),
         }
@@ -851,7 +852,7 @@ impl ShardedFrontend {
     /// One live shard's link-contention model (`None` for retired
     /// shards) — the scriptable network-chaos surface.
     pub fn network(&self, shard: usize) -> Option<Arc<crate::cluster::network::Network>> {
-        self.slots.read().unwrap()[shard].live().map(ServingFrontend::network)
+        self.slots.pread()[shard].live().map(ServingFrontend::network)
     }
 
     /// The tier's base journal handle (what the control plane records
@@ -863,7 +864,7 @@ impl ShardedFrontend {
     /// The fleet-wide metric registry (unscoped base handle; every shard
     /// session publishes into it under its `shard` label).
     pub fn registry(&self) -> crate::telemetry::Registry {
-        self.spawner.lock().unwrap().cfg.telemetry.clone()
+        self.spawner.plock().cfg.telemetry.clone()
     }
 
     /// Summed admission-load estimate across every live shard (what the
@@ -897,7 +898,7 @@ impl ShardedFrontend {
 
     /// One shard's live window (zero for retired shards).
     pub fn shard_window(&self, shard: usize) -> WindowSnapshot {
-        self.slots.read().unwrap()[shard]
+        self.slots.pread()[shard]
             .live()
             .map_or_else(|| WindowSnapshot::zero(Duration::ZERO), ServingFrontend::window)
     }
@@ -906,7 +907,7 @@ impl ShardedFrontend {
     /// ([`WindowSnapshot::merge`] — counts exact, quantiles
     /// resolved-weighted).
     pub fn window(&self) -> WindowSnapshot {
-        let slots = self.slots.read().unwrap();
+        let slots = self.slots.pread();
         let snaps: Vec<WindowSnapshot> = slots
             .iter()
             .filter_map(ShardSlot::live)
@@ -963,7 +964,7 @@ impl ShardedClient {
 
     /// The shard the router currently assigns this client to.
     pub fn shard(&self) -> Option<usize> {
-        self.shared.router.read().unwrap().route(self.id)
+        self.shared.router.pread().route(self.id)
     }
 
     /// The shard currently holding this client's admission weight
@@ -981,10 +982,10 @@ impl ShardedClient {
     /// (after the fleet-wide cap, when configured). The returned id
     /// carries the serving shard in its top byte ([`shard_of`]).
     pub fn submit(&self, input: Tensor) -> Result<QueryId, SubmitError> {
-        let Some(shard) = self.shared.router.read().unwrap().route(self.id) else {
+        let Some(shard) = self.shared.router.pread().route(self.id) else {
             return Err(SubmitError::Closed);
         };
-        let legs = self.home.legs.read().unwrap();
+        let legs = self.home.legs.pread();
         if let Some(cap) = self.shared.global_backlog {
             let load: usize = legs.iter().flatten().map(ServiceClient::load).sum();
             if load >= cap {
@@ -1012,7 +1013,7 @@ impl ShardedClient {
     /// Non-blocking: take every prediction delivered to this client on
     /// any shard, ids re-tagged fleet-wide.
     pub fn poll(&self) -> Vec<Resolved> {
-        let legs = self.home.legs.read().unwrap();
+        let legs = self.home.legs.pread();
         let mut out = Vec::new();
         for (s, leg) in legs.iter().enumerate() {
             let Some(leg) = leg else { continue };
@@ -1032,14 +1033,14 @@ impl ShardedClient {
         let deadline = Instant::now() + timeout;
         loop {
             let primary = {
-                let legs = self.home.legs.read().unwrap();
+                let legs = self.home.legs.pread();
                 for (s, leg) in legs.iter().enumerate() {
                     let Some(leg) = leg else { continue };
                     if let Some(r) = leg.try_next() {
                         return Some(Resolved { id: tag(s, r.id), ..r });
                     }
                 }
-                let p = self.shared.router.read().unwrap().route(self.id).unwrap_or(0);
+                let p = self.shared.router.pread().route(self.id).unwrap_or(0);
                 legs.get(p).and_then(|l| l.clone()).map(|leg| (p, leg))
             };
             let now = Instant::now();
@@ -1060,7 +1061,7 @@ impl ShardedClient {
 
     /// This client's counters summed across every shard it touched.
     pub fn stats(&self) -> ClientStats {
-        let legs = self.home.legs.read().unwrap();
+        let legs = self.home.legs.pread();
         let mut total = ClientStats::default();
         for leg in legs.iter().flatten() {
             let s = leg.stats();
@@ -1076,7 +1077,7 @@ impl ShardedClient {
 
     /// This client's live window merged across shards.
     pub fn window(&self) -> WindowSnapshot {
-        let legs = self.home.legs.read().unwrap();
+        let legs = self.home.legs.pread();
         let snaps: Vec<WindowSnapshot> =
             legs.iter().flatten().map(ServiceClient::window).collect();
         WindowSnapshot::merge_all(&snaps)

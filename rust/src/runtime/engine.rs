@@ -23,6 +23,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::tensor::Tensor;
+use crate::util::sync::LockExt;
 
 #[derive(Debug, thiserror::Error)]
 pub enum EngineError {
@@ -69,7 +70,7 @@ pub fn client() -> Result<&'static xla::PjRtClient, EngineError> {
     }
     // Serialize creation so only one client is ever constructed, without
     // caching transient failures (a failed attempt may be retried later).
-    let _guard = CLIENT_INIT.lock().unwrap();
+    let _guard = CLIENT_INIT.plock();
     if let Some(c) = CLIENT.get() {
         return Ok(&c.0);
     }

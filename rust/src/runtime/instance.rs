@@ -12,7 +12,6 @@
 //! jitter rather than being fully synthetic.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -24,6 +23,7 @@ use crate::cluster::tenancy::Tenancy;
 use crate::cluster::{precise_sleep, scaled};
 use crate::runtime::engine::Executable;
 use crate::tensor::Tensor;
+use crate::util::bus::BusSender;
 use crate::util::queue::Queue;
 use crate::util::rng::Pcg64;
 
@@ -178,7 +178,7 @@ impl InstanceWorker {
         exe: Arc<Executable>,
         execution: Execution,
         queue: Queue<Job>,
-        completions: Sender<Completion>,
+        completions: BusSender<Completion>,
         env: Arc<WorkerEnv>,
         seed: u64,
     ) -> InstanceWorker {
@@ -201,7 +201,7 @@ fn worker_loop(
     exe: Arc<Executable>,
     execution: Execution,
     queue: Queue<Job>,
-    completions: Sender<Completion>,
+    completions: BusSender<Completion>,
     env: Arc<WorkerEnv>,
     seed: u64,
 ) {

@@ -6,11 +6,11 @@
 //! single-queue strategy is the paper's default (optimal for mean response
 //! time [37]); round-robin is provided for the §5.1 comparison note.
 
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 
 use crate::runtime::engine::Executable;
 use crate::runtime::instance::{Completion, Execution, InstanceWorker, Job, WorkerEnv};
+use crate::util::bus::BusSender;
 use crate::util::queue::Queue;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,7 +41,7 @@ impl Pool {
         execution: Execution,
         instance_ids: Vec<usize>,
         balancing: Balancing,
-        completions: Sender<Completion>,
+        completions: BusSender<Completion>,
         env: Arc<WorkerEnv>,
         seed: u64,
     ) -> Pool {

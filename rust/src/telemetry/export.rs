@@ -20,6 +20,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::registry::Registry;
+use crate::util::sync::{CondvarExt, LockExt};
 
 /// Accept-loop poll cadence while idle (mirrors the admin socket's).
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
@@ -190,9 +191,9 @@ impl SnapshotLog {
                     }
                 };
                 let (lock, cv) = &*stop2;
-                let mut stopped = lock.lock().unwrap();
+                let mut stopped = lock.plock();
                 loop {
-                    let (guard, timeout) = cv.wait_timeout(stopped, every).unwrap();
+                    let (guard, timeout) = cv.pwait_timeout(stopped, every);
                     stopped = guard;
                     if *stopped {
                         break;
@@ -200,7 +201,7 @@ impl SnapshotLog {
                     if timeout.timed_out() {
                         drop(stopped);
                         sample(&mut file);
-                        stopped = lock.lock().unwrap();
+                        stopped = lock.plock();
                     }
                 }
                 drop(stopped);
@@ -216,7 +217,7 @@ impl SnapshotLog {
     }
 
     fn stop_inner(&mut self) {
-        *self.stop.0.lock().unwrap() = true;
+        *self.stop.0.plock() = true;
         self.stop.1.notify_all();
         if let Some(h) = self.handle.take() {
             let _ = h.join();

@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::util::json::Json;
+use crate::util::sync::{LockExt, RwLockExt};
 
 /// Ring capacity of a [`Summary`]: percentiles are computed over the
 /// most recent this-many observations (power of two; wrap is a mask).
@@ -281,7 +282,7 @@ impl Registry {
     /// never panic a serving thread.
     fn cell(&self, name: &str, help: &str, kind: Kind, labels: &[(&str, &str)]) -> Cell {
         let labels = self.canonical_labels(labels);
-        let mut families = self.inner.families.write().unwrap();
+        let mut families = self.inner.families.pwrite();
         let family = families.entry(name.to_string()).or_insert_with(|| Family {
             kind,
             help: help.to_string(),
@@ -341,21 +342,26 @@ impl Registry {
     /// render/snapshot/refresh.
     pub fn sampler(&self, f: impl Fn() + Send + Sync + 'static) -> SamplerId {
         let id = self.inner.next_sampler.fetch_add(1, Ordering::Relaxed);
-        self.inner.samplers.lock().unwrap().push((id, Box::new(f)));
+        self.inner.samplers.plock().push((id, Box::new(f)));
         SamplerId(id)
     }
 
     /// Remove a sampler registered with [`Registry::sampler`].
     pub fn drop_sampler(&self, id: SamplerId) {
-        self.inner.samplers.lock().unwrap().retain(|(i, _)| *i != id.0);
+        self.inner.samplers.plock().retain(|(i, _)| *i != id.0);
     }
 
     /// Run every registered sampler (scrape-side; serialized across
-    /// concurrent scrapers).
+    /// concurrent scrapers). Each sampler runs under `catch_unwind`: one
+    /// panicking hook (a poisoned gauge source, a bug in a caller's
+    /// closure) logs and skips instead of killing the scraper thread and
+    /// poisoning the sampler list for every future scrape.
     pub fn refresh(&self) {
-        let samplers = self.inner.samplers.lock().unwrap();
-        for (_, f) in samplers.iter() {
-            f();
+        let samplers = self.inner.samplers.plock();
+        for (id, f) in samplers.iter() {
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f())).is_err() {
+                log::error!("telemetry sampler {id} panicked; metrics it feeds are stale");
+            }
         }
     }
 
@@ -364,7 +370,7 @@ impl Registry {
     /// [`Registry::refresh`] first if sampled families must be fresh.
     pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
         let labels = self.canonical_labels(labels);
-        let families = self.inner.families.read().unwrap();
+        let families = self.inner.families.pread();
         let family = families.get(name)?;
         let (_, cell) = family.series.iter().find(|(l, _)| *l == labels)?;
         match cell {
@@ -377,7 +383,7 @@ impl Registry {
     /// Every (labels, value) of one counter/gauge family (empty if the
     /// family is absent or a summary).
     pub fn series(&self, name: &str) -> Vec<(Vec<(String, String)>, f64)> {
-        let families = self.inner.families.read().unwrap();
+        let families = self.inner.families.pread();
         let Some(family) = families.get(name) else { return Vec::new() };
         family
             .series
@@ -395,7 +401,7 @@ impl Registry {
     pub fn render(&self) -> String {
         self.refresh();
         let mut out = String::new();
-        let families = self.inner.families.read().unwrap();
+        let families = self.inner.families.pread();
         for (name, family) in families.iter() {
             let _ = writeln!(out, "# HELP {name} {}", escape_help(&family.help));
             let _ = writeln!(out, "# TYPE {name} {}", family.kind.as_str());
@@ -441,7 +447,7 @@ impl Registry {
     /// [`SnapshotLog`]: crate::telemetry::export::SnapshotLog
     pub fn snapshot_json(&self) -> Json {
         self.refresh();
-        let families = self.inner.families.read().unwrap();
+        let families = self.inner.families.pread();
         let mut out = Json::obj();
         for (name, family) in families.iter() {
             let rows: Vec<Json> = family

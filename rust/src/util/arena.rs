@@ -1,0 +1,283 @@
+//! Preallocated id-indexed storage for the hot path (ROADMAP item 2).
+//!
+//! The coding tier keys everything by monotonically increasing u64 ids
+//! (group ids, query ids). `std::collections::HashMap` serves those keys
+//! correctly but expensively: SipHash per probe, per-entry heap boxes,
+//! and no way to recycle the `Vec`s inside evicted values. [`ProbeMap`]
+//! is the replacement index — an open-addressed linear-probe table from
+//! `u64` keys to small `Copy` values (slot numbers, counters) with
+//! backward-shift deletion, a splitmix64 finalizer for the hash, and no
+//! per-entry allocation. Slab owners (e.g. `GroupTracker`'s group arena)
+//! pair it with a free-listed `Vec` of recycled value bodies so the
+//! steady-state cost of open/close is two array writes and a probe.
+
+use std::fmt;
+
+const EMPTY: u64 = u64::MAX;
+
+#[inline]
+fn mix(key: u64) -> u64 {
+    // splitmix64 finalizer: cheap, and strong enough that sequential ids
+    // spread uniformly across the table.
+    let mut z = key.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Open-addressed `u64 -> V` map for hot-path bookkeeping. Keys must be
+/// `< u64::MAX` (that value is the empty sentinel) — all ids in this
+/// crate count up from 0, so the constraint is a debug assertion, not a
+/// real restriction.
+pub struct ProbeMap<V> {
+    keys: Vec<u64>,
+    vals: Vec<V>,
+    len: usize,
+}
+
+impl<V: Copy + Default> Default for ProbeMap<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V: Copy + Default> ProbeMap<V> {
+    pub fn new() -> Self {
+        Self::with_capacity(16)
+    }
+
+    /// Table sized for `n` entries without growing (rounded up to a
+    /// power of two at 3/4 load).
+    pub fn with_capacity(n: usize) -> Self {
+        let cap = (n.max(4) * 4 / 3 + 1).next_power_of_two();
+        ProbeMap { keys: vec![EMPTY; cap], vals: vec![V::default(); cap], len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn mask(&self) -> usize {
+        self.keys.len() - 1
+    }
+
+    /// Index of `key`, if present.
+    #[inline]
+    fn find(&self, key: u64) -> Option<usize> {
+        let mask = self.mask();
+        let mut i = (mix(key) as usize) & mask;
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(i);
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    pub fn contains_key(&self, key: u64) -> bool {
+        self.find(key).is_some()
+    }
+
+    pub fn get(&self, key: u64) -> Option<V> {
+        self.find(key).map(|i| self.vals[i])
+    }
+
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut V> {
+        self.find(key).map(|i| &mut self.vals[i])
+    }
+
+    /// Insert, returning the previous value if the key was present.
+    pub fn insert(&mut self, key: u64, val: V) -> Option<V> {
+        debug_assert!(key != EMPTY, "u64::MAX is the empty sentinel");
+        if (self.len + 1) * 4 > self.keys.len() * 3 {
+            self.grow();
+        }
+        let mask = self.mask();
+        let mut i = (mix(key) as usize) & mask;
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                let old = self.vals[i];
+                self.vals[i] = val;
+                return Some(old);
+            }
+            if k == EMPTY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return None;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Remove via backward-shift deletion (no tombstones: probe chains
+    /// stay short forever, which matters for a table that turns over
+    /// once per coding group).
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        let mut i = self.find(key)?;
+        let removed = self.vals[i];
+        let mask = self.mask();
+        self.keys[i] = EMPTY;
+        let mut j = i;
+        loop {
+            j = (j + 1) & mask;
+            let kj = self.keys[j];
+            if kj == EMPTY {
+                break;
+            }
+            let home = (mix(kj) as usize) & mask;
+            // Skip entries whose home slot lies cyclically in (i, j] —
+            // moving them into the hole would strand them before their
+            // probe chain starts.
+            let in_gap = if i < j { i < home && home <= j } else { home > i || home <= j };
+            if !in_gap {
+                self.keys[i] = kj;
+                self.vals[i] = self.vals[j];
+                self.keys[j] = EMPTY;
+                i = j;
+            }
+        }
+        self.len -= 1;
+        Some(removed)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u64, V)> + '_ {
+        self.keys
+            .iter()
+            .zip(self.vals.iter())
+            .filter(|(k, _)| **k != EMPTY)
+            .map(|(k, v)| (*k, *v))
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.iter_mut().for_each(|k| *k = EMPTY);
+        self.len = 0;
+    }
+
+    fn grow(&mut self) {
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; 0]);
+        let old_vals = std::mem::take(&mut self.vals);
+        let cap = (old_keys.len() * 2).max(8);
+        self.keys = vec![EMPTY; cap];
+        self.vals = vec![V::default(); cap];
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY {
+                self.insert(k, v);
+            }
+        }
+    }
+}
+
+impl<V: Copy + Default + fmt::Debug> fmt::Debug for ProbeMap<V> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_map().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use std::collections::HashMap;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m: ProbeMap<u32> = ProbeMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(7, 70), None);
+        assert_eq!(m.insert(7, 71), Some(70));
+        assert_eq!(m.get(7), Some(71));
+        assert!(m.contains_key(7));
+        assert_eq!(m.remove(7), Some(71));
+        assert_eq!(m.remove(7), None);
+        assert!(m.get(7).is_none());
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        let mut m: ProbeMap<u32> = ProbeMap::new();
+        m.insert(3, 1);
+        *m.get_mut(3).unwrap() += 41;
+        assert_eq!(m.get(3), Some(42));
+        assert!(m.get_mut(4).is_none());
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut m: ProbeMap<u64> = ProbeMap::with_capacity(4);
+        for i in 0..1000u64 {
+            m.insert(i, i * 2);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m.get(i), Some(i * 2), "key {i}");
+        }
+    }
+
+    #[test]
+    fn backward_shift_keeps_probe_chains_intact() {
+        // Dense sequential keys force long shared probe chains; deleting
+        // from the middle must not orphan later chain members.
+        let mut m: ProbeMap<u32> = ProbeMap::with_capacity(8);
+        for i in 0..64u64 {
+            m.insert(i, i as u32);
+        }
+        for i in (0..64u64).step_by(2) {
+            assert_eq!(m.remove(i), Some(i as u32));
+        }
+        for i in 0..64u64 {
+            let want = if i % 2 == 0 { None } else { Some(i as u32) };
+            assert_eq!(m.get(i), want, "key {i}");
+        }
+    }
+
+    #[test]
+    fn randomized_against_std_hashmap() {
+        let mut rng = Pcg64::new(0xA12E_7A);
+        let mut ours: ProbeMap<u32> = ProbeMap::new();
+        let mut reference: HashMap<u64, u32> = HashMap::new();
+        for step in 0..20_000u32 {
+            let key = rng.below(512) as u64;
+            match rng.below(3) {
+                0 => {
+                    assert_eq!(
+                        ours.insert(key, step),
+                        reference.insert(key, step),
+                        "insert {key} at step {step}"
+                    );
+                }
+                1 => {
+                    assert_eq!(
+                        ours.remove(key),
+                        reference.remove(&key),
+                        "remove {key} at step {step}"
+                    );
+                }
+                _ => {
+                    assert_eq!(
+                        ours.get(key),
+                        reference.get(&key).copied(),
+                        "get {key} at step {step}"
+                    );
+                }
+            }
+            assert_eq!(ours.len(), reference.len());
+        }
+        let mut got: Vec<(u64, u32)> = ours.iter().collect();
+        got.sort_unstable();
+        let mut want: Vec<(u64, u32)> = reference.into_iter().collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

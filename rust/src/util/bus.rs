@@ -1,0 +1,323 @@
+//! Sharded MPSC completion bus (ROADMAP item 2).
+//!
+//! The session's completion stream used to be one `std::sync::mpsc`
+//! channel: every worker across every pool funneled into a single
+//! internal mutex, and the session folded the backlog one `try_recv` at
+//! a time. This bus shards the producer side — each sender is pinned
+//! round-robin to one of N slots, so workers on different shards never
+//! contend on the same lock — and the consumer sweeps a whole shard per
+//! lock acquisition, swapping the filled `Vec` for an empty spare so a
+//! burst of completions is folded in one pass with zero allocation at
+//! steady state.
+//!
+//! Semantics match the mpsc channel the session grew up on:
+//! * senders are cheap to clone; dropping the last one disconnects the
+//!   bus (the receiver observes [`RecvStatus::Disconnected`] once
+//!   drained), which is how `drain()` learns every pool is gone;
+//! * dropping the receiver makes `send` return `Err(item)`, which is the
+//!   worker loop's exit signal;
+//! * all locks recover from poisoning ([`LockExt`]) so a panicking
+//!   worker cannot cascade into the dispatcher.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::util::sync::{CondvarExt, LockExt};
+
+struct Inner<T> {
+    shards: Vec<Mutex<Vec<T>>>,
+    /// Items pushed and not yet drained (advisory; exact under locks).
+    pending: AtomicUsize,
+    /// Live senders; 0 = disconnected.
+    producers: AtomicUsize,
+    /// False once the receiver is gone; sends then fail.
+    open: AtomicBool,
+    /// Round-robin shard assignment for cloned senders.
+    next_shard: AtomicUsize,
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+/// Producer handle, pinned to one shard; clone to mint more (each clone
+/// is pinned round-robin to the next shard).
+pub struct BusSender<T> {
+    inner: Arc<Inner<T>>,
+    shard: usize,
+}
+
+/// Single consumer; owns the spare buffers used for wholesale sweeps.
+pub struct BusReceiver<T> {
+    inner: Arc<Inner<T>>,
+    spares: Vec<Vec<T>>,
+    /// Rotates the first shard swept so no shard is starved by budgeted
+    /// drains.
+    cursor: usize,
+}
+
+/// Outcome of a blocking receive.
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvStatus {
+    /// `n > 0` items were appended to the caller's buffer.
+    Items(usize),
+    /// Deadline passed with nothing available.
+    TimedOut,
+    /// Every sender is gone and the bus is drained.
+    Disconnected,
+}
+
+/// Create a bus with `shards` producer slots (clamped to at least 1).
+pub fn channel<T>(shards: usize) -> (BusSender<T>, BusReceiver<T>) {
+    let n = shards.max(1);
+    let inner = Arc::new(Inner {
+        shards: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+        pending: AtomicUsize::new(0),
+        producers: AtomicUsize::new(1),
+        open: AtomicBool::new(true),
+        next_shard: AtomicUsize::new(1),
+        gate: Mutex::new(()),
+        cv: Condvar::new(),
+    });
+    let tx = BusSender { inner: inner.clone(), shard: 0 };
+    let rx = BusReceiver {
+        inner,
+        spares: (0..n).map(|_| Vec::new()).collect(),
+        cursor: 0,
+    };
+    (tx, rx)
+}
+
+impl<T> Clone for BusSender<T> {
+    fn clone(&self) -> Self {
+        self.inner.producers.fetch_add(1, Ordering::AcqRel);
+        let shard =
+            self.inner.next_shard.fetch_add(1, Ordering::Relaxed) % self.inner.shards.len();
+        BusSender { inner: self.inner.clone(), shard }
+    }
+}
+
+impl<T> Drop for BusSender<T> {
+    fn drop(&mut self) {
+        if self.inner.producers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last sender gone: wake the receiver so drain loops can
+            // observe the disconnect instead of sleeping out their
+            // timeout.
+            let _g = self.inner.gate.plock();
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
+impl<T> BusSender<T> {
+    /// Push one item. Fails (returning the item) once the receiver has
+    /// been dropped — the worker-loop exit signal.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        if !self.inner.open.load(Ordering::Acquire) {
+            return Err(item);
+        }
+        {
+            let mut q = self.inner.shards[self.shard].plock();
+            q.push(item);
+            // Counted under the shard lock, so the receiver's matching
+            // fetch_sub (also under this lock) can never underflow.
+            self.inner.pending.fetch_add(1, Ordering::Release);
+        }
+        // Taking the gate orders this wakeup after the receiver's
+        // pending re-check, so the notify cannot be lost.
+        drop(self.inner.gate.plock());
+        self.inner.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Drop for BusReceiver<T> {
+    fn drop(&mut self) {
+        self.inner.open.store(false, Ordering::Release);
+    }
+}
+
+impl<T> BusReceiver<T> {
+    /// Sweep up to `budget` items into `buf` without blocking; returns
+    /// how many were appended. Whole shards are swapped out against
+    /// reusable spares, so an unbudgeted sweep of a burst costs one lock
+    /// round per shard and no allocation.
+    pub fn try_drain(&mut self, buf: &mut Vec<T>, budget: usize) -> usize {
+        let n_shards = self.inner.shards.len();
+        let mut got = 0usize;
+        for step in 0..n_shards {
+            if got >= budget {
+                break;
+            }
+            let i = (self.cursor + step) % n_shards;
+            let mut q = self.inner.shards[i].plock();
+            let avail = q.len();
+            if avail == 0 {
+                continue;
+            }
+            let take = avail.min(budget - got);
+            if take == avail {
+                let spare = &mut self.spares[i];
+                std::mem::swap(&mut *q, spare);
+                self.inner.pending.fetch_sub(take, Ordering::Release);
+                drop(q);
+                buf.append(spare);
+            } else {
+                buf.extend(q.drain(..take));
+                self.inner.pending.fetch_sub(take, Ordering::Release);
+            }
+            got += take;
+        }
+        self.cursor = (self.cursor + 1) % n_shards;
+        got
+    }
+
+    /// Blocking receive: appends up to `budget` items to `buf`, waiting
+    /// until `deadline` for the first to arrive. Never waits past
+    /// `deadline` (the caller's wait budget is the hard bound — see the
+    /// `poll_timeout` double-wait fix).
+    pub fn recv_deadline(
+        &mut self,
+        deadline: Instant,
+        buf: &mut Vec<T>,
+        budget: usize,
+    ) -> RecvStatus {
+        loop {
+            let got = self.try_drain(buf, budget);
+            if got > 0 {
+                return RecvStatus::Items(got);
+            }
+            if self.inner.producers.load(Ordering::Acquire) == 0
+                && self.inner.pending.load(Ordering::Acquire) == 0
+            {
+                return RecvStatus::Disconnected;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return RecvStatus::TimedOut;
+            }
+            let gate = self.inner.gate.plock();
+            // Re-check under the gate: a sender that bumped `pending`
+            // before we parked also takes the gate, so either we see the
+            // item now or its notify lands after we wait.
+            if self.inner.pending.load(Ordering::Acquire) > 0 {
+                continue;
+            }
+            if self.inner.producers.load(Ordering::Acquire) == 0 {
+                return RecvStatus::Disconnected;
+            }
+            let (_g, _res) = self.inner.cv.pwait_timeout(gate, deadline - now);
+        }
+    }
+
+    /// Items pushed and not yet drained (advisory).
+    pub fn pending(&self) -> usize {
+        self.inner.pending.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fans_in_from_many_senders() {
+        let (tx, mut rx) = channel::<u32>(4);
+        let mut handles = Vec::new();
+        for p in 0..8u32 {
+            let txc = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u32 {
+                    txc.send(p * 100 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while got.len() < 800 {
+            match rx.recv_deadline(
+                Instant::now() + Duration::from_secs(2),
+                &mut got,
+                usize::MAX,
+            ) {
+                RecvStatus::Items(_) => {}
+                RecvStatus::TimedOut => panic!("timed out with {} items", got.len()),
+                RecvStatus::Disconnected => break,
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        let want: Vec<u32> = (0..8).flat_map(|p| (0..100).map(move |i| p * 100 + i)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn disconnects_when_last_sender_drops() {
+        let (tx, mut rx) = channel::<u32>(2);
+        tx.send(1).unwrap();
+        drop(tx);
+        let mut buf = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(1);
+        assert_eq!(rx.recv_deadline(deadline, &mut buf, usize::MAX), RecvStatus::Items(1));
+        assert_eq!(
+            rx.recv_deadline(deadline, &mut buf, usize::MAX),
+            RecvStatus::Disconnected
+        );
+    }
+
+    #[test]
+    fn send_fails_after_receiver_drops() {
+        let (tx, rx) = channel::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.send(9), Err(9));
+    }
+
+    #[test]
+    fn recv_deadline_respects_the_deadline() {
+        let (_tx, mut rx) = channel::<u32>(2);
+        let mut buf = Vec::new();
+        let t0 = Instant::now();
+        let status =
+            rx.recv_deadline(t0 + Duration::from_millis(30), &mut buf, usize::MAX);
+        assert_eq!(status, RecvStatus::TimedOut);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(29), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(300), "overshot: {waited:?}");
+    }
+
+    #[test]
+    fn budget_bounds_one_sweep_and_the_rest_survives() {
+        let (tx, mut rx) = channel::<u32>(3);
+        for i in 0..50 {
+            tx.send(i).unwrap();
+        }
+        let mut buf = Vec::new();
+        let got = rx.try_drain(&mut buf, 16);
+        assert!(got <= 16, "budget exceeded: {got}");
+        while rx.try_drain(&mut buf, 16) > 0 {}
+        buf.sort_unstable();
+        assert_eq!(buf, (0..50).collect::<Vec<_>>());
+        assert_eq!(rx.pending(), 0);
+    }
+
+    #[test]
+    fn wakes_blocked_receiver_on_send() {
+        let (tx, mut rx) = channel::<u32>(2);
+        let h = std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            let status = rx.recv_deadline(
+                Instant::now() + Duration::from_secs(2),
+                &mut buf,
+                usize::MAX,
+            );
+            (status, buf)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        tx.send(42).unwrap();
+        let (status, buf) = h.join().unwrap();
+        assert_eq!(status, RecvStatus::Items(1));
+        assert_eq!(buf, vec![42]);
+    }
+}

@@ -1,9 +1,12 @@
 //! From-scratch substrates the build image lacks crates for: PRNG, JSON,
 //! latency statistics, CLI parsing, and logging.
 
+pub mod arena;
+pub mod bus;
 pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod queue;
 pub mod rng;
 pub mod stats;
+pub mod sync;

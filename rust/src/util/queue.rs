@@ -3,17 +3,29 @@
 //!
 //! This is the paper's "single queue" (§5.1 Load balancing): the frontend
 //! pushes query batches, idle model instances pop them. Also used for the
-//! parity queue and the completion stream. Mutex + Condvar is entirely
-//! adequate at prediction-serving rates (thousands of ops/sec against
-//! millisecond-scale service times).
+//! parity queue. Mutex + Condvar is entirely adequate at
+//! prediction-serving rates (thousands of ops/sec against
+//! millisecond-scale service times). Two hot-path details:
+//! * `len()` reads a lock-free counter, because the frontend publishes
+//!   `backlog()` (a sum over every pool queue) on every admit decision —
+//!   taking every queue's mutex per submit was measurable contention;
+//! * all lock/wait sites recover from poisoning via
+//!   [`crate::util::sync`], so one panicking worker never cascades into
+//!   the other consumers of its queue.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+use crate::util::sync::{CondvarExt, LockExt};
 
 struct Inner<T> {
     q: Mutex<State<T>>,
     cv: Condvar,
+    /// Mirror of `items.len()`, maintained under the lock but readable
+    /// without it.
+    len: AtomicUsize,
 }
 
 struct State<T> {
@@ -41,16 +53,18 @@ impl<T> Queue<T> {
         Queue(Arc::new(Inner {
             q: Mutex::new(State { items: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
+            len: AtomicUsize::new(0),
         }))
     }
 
     /// Push an item. Returns Err(item) if the queue is closed.
     pub fn push(&self, item: T) -> Result<(), T> {
-        let mut st = self.0.q.lock().unwrap();
+        let mut st = self.0.q.plock();
         if st.closed {
             return Err(item);
         }
         st.items.push_back(item);
+        self.0.len.store(st.items.len(), Ordering::Release);
         drop(st);
         self.0.cv.notify_one();
         Ok(())
@@ -58,24 +72,26 @@ impl<T> Queue<T> {
 
     /// Blocking pop; None once the queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.0.q.lock().unwrap();
+        let mut st = self.0.q.plock();
         loop {
             if let Some(item) = st.items.pop_front() {
+                self.0.len.store(st.items.len(), Ordering::Release);
                 return Some(item);
             }
             if st.closed {
                 return None;
             }
-            st = self.0.cv.wait(st).unwrap();
+            st = self.0.cv.pwait(st);
         }
     }
 
     /// Pop with a timeout; None on timeout or closed-and-drained.
     pub fn pop_timeout(&self, dur: Duration) -> Option<T> {
         let deadline = std::time::Instant::now() + dur;
-        let mut st = self.0.q.lock().unwrap();
+        let mut st = self.0.q.plock();
         loop {
             if let Some(item) = st.items.pop_front() {
+                self.0.len.store(st.items.len(), Ordering::Release);
                 return Some(item);
             }
             if st.closed {
@@ -85,7 +101,7 @@ impl<T> Queue<T> {
             if now >= deadline {
                 return None;
             }
-            let (g, res) = self.0.cv.wait_timeout(st, deadline - now).unwrap();
+            let (g, res) = self.0.cv.pwait_timeout(st, deadline - now);
             st = g;
             if res.timed_out() && st.items.is_empty() {
                 return None;
@@ -94,11 +110,19 @@ impl<T> Queue<T> {
     }
 
     pub fn try_pop(&self) -> Option<T> {
-        self.0.q.lock().unwrap().items.pop_front()
+        let mut st = self.0.q.plock();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.0.len.store(st.items.len(), Ordering::Release);
+        }
+        item
     }
 
+    /// Lock-free queue depth (mirror counter; exact at quiescence,
+    /// momentarily stale under concurrent push/pop — fine for the
+    /// admission and balancing heuristics that read it).
     pub fn len(&self) -> usize {
-        self.0.q.lock().unwrap().items.len()
+        self.0.len.load(Ordering::Acquire)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -107,12 +131,12 @@ impl<T> Queue<T> {
 
     /// Close: wakes all blocked consumers; further pushes fail.
     pub fn close(&self) {
-        self.0.q.lock().unwrap().closed = true;
+        self.0.q.plock().closed = true;
         self.0.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.0.q.lock().unwrap().closed
+        self.0.q.plock().closed
     }
 }
 
@@ -126,9 +150,11 @@ mod tests {
         for i in 0..5 {
             q.push(i).unwrap();
         }
+        assert_eq!(q.len(), 5);
         for i in 0..5 {
             assert_eq!(q.pop(), Some(i));
         }
+        assert_eq!(q.len(), 0);
     }
 
     #[test]
@@ -184,5 +210,23 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         q.push(7).unwrap();
         assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn len_tracks_through_mixed_ops() {
+        let q: Queue<u32> = Queue::new();
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.try_pop(), Some(0));
+        assert_eq!(q.len(), 9);
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Some(1));
+        assert_eq!(q.len(), 8);
+        for _ in 0..8 {
+            q.pop();
+        }
+        assert!(q.is_empty());
+        assert!(q.try_pop().is_none());
+        assert_eq!(q.len(), 0);
     }
 }

@@ -1,0 +1,134 @@
+//! Poison-tolerant lock accessors for the serving tier.
+//!
+//! `std::sync::Mutex` poisons itself when a thread panics while holding
+//! the guard, and every later `.lock().unwrap()` then re-panics — so a
+//! single crashed scraper or worker thread cascades into the dispatcher,
+//! the control plane, and anything else sharing the lock. None of the
+//! state guarded in this crate becomes invalid when a holder panics
+//! (counters, queues, and windows are updated in place and stay
+//! internally consistent between statements that matter), so the right
+//! policy everywhere is to *recover* the guard via
+//! [`PoisonError::into_inner`] and keep serving.
+//!
+//! `lock.plock()` / `lock.pread()` / `lock.pwrite()` are drop-in
+//! replacements for the `.lock().unwrap()` family, and
+//! [`CondvarExt::pwait`] / [`CondvarExt::pwait_timeout`] cover the
+//! condvar re-acquire path (which can also return a poisoned guard).
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Poison-recovering accessors for `Mutex`.
+pub trait LockExt<T> {
+    /// Lock, recovering the guard if a previous holder panicked.
+    fn plock(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn plock(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Poison-recovering accessors for `RwLock`.
+pub trait RwLockExt<T> {
+    /// Read-lock, recovering the guard if a writer panicked.
+    fn pread(&self) -> RwLockReadGuard<'_, T>;
+    /// Write-lock, recovering the guard if a previous holder panicked.
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn pread(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Poison-recovering waits for `Condvar` (the re-acquired mutex can be
+/// poisoned by a panic that happened while this thread was parked).
+pub trait CondvarExt {
+    fn pwait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+    fn pwait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn pwait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.wait(guard).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn pwait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        self.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    #[test]
+    fn plock_recovers_after_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        let mc = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = mc.lock().unwrap();
+            panic!("holder dies with the guard");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        assert_eq!(*m.plock(), 7, "plock recovers the value");
+        *m.plock() = 8;
+        assert_eq!(*m.plock(), 8);
+    }
+
+    #[test]
+    fn pwrite_and_pread_recover_after_writer_panics() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let lc = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = lc.write().unwrap();
+            panic!("writer dies");
+        })
+        .join();
+        assert!(l.read().is_err());
+        assert_eq!(l.pread().len(), 3);
+        l.pwrite().push(4);
+        assert_eq!(l.pread().len(), 4);
+    }
+
+    #[test]
+    fn pwait_timeout_survives_poisoned_reacquire() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        // Poison the mutex first...
+        {
+            let pc = pair.clone();
+            let _ = std::thread::spawn(move || {
+                let _g = pc.0.lock().unwrap();
+                panic!("poison it");
+            })
+            .join();
+        }
+        // ...then wait on it: both the entry lock and the re-acquire
+        // inside wait_timeout must recover rather than re-panic.
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            let g = pair.0.plock();
+            let (_g, res) = pair.1.pwait_timeout(g, Duration::from_millis(5));
+            res.timed_out()
+        }));
+        assert_eq!(ok.ok(), Some(true));
+    }
+}

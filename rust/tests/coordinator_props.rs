@@ -767,3 +767,242 @@ fn ring_reconfiguration_never_panics_under_random_op_sequences() {
         assert!(router.route(rng.next_u64()).is_some(), "seed {seed}");
     }
 }
+
+/// INVARIANT (slab vs map): the slab/arena-backed [`GroupTracker`] is
+/// observationally identical to a plain `HashMap` reference model of its
+/// bookkeeping rule — register (variable r, shard tags), data/parity
+/// arrivals in any order (stale ids, out-of-range slots, and beyond-r
+/// parities included), decode-when-missing <= parities-available, and
+/// stale-group abandonment. Compared per step: the resolution stream
+/// (slot, reconstructed flag, query ids, tag), the open-group id set,
+/// per-group unresolved slots / r / tags, and both cumulative counters.
+#[test]
+fn slab_tracker_matches_hashmap_reference_under_group_churn() {
+    struct RefGroup {
+        query_ids: Vec<Vec<u64>>,
+        tags: Vec<usize>,
+        resolved: Vec<bool>,
+        parity_have: Vec<bool>,
+    }
+    #[derive(Default)]
+    struct RefModel {
+        groups: std::collections::HashMap<u64, RefGroup>,
+        completed: u64,
+        reconstructions: u64,
+    }
+    // (slot, reconstructed, query_ids, tag) — the observable payload of a
+    // SlotResolution minus the tensor (values are decode math, pinned by
+    // the decoder properties above; this property pins the bookkeeping).
+    type Obs = (usize, bool, Vec<u64>, usize);
+    impl RefModel {
+        fn settle(&mut self, g: u64, out: &mut Vec<Obs>) {
+            let grp = self.groups.get_mut(&g).unwrap();
+            let missing: Vec<usize> =
+                (0..grp.resolved.len()).filter(|&i| !grp.resolved[i]).collect();
+            let avail = grp.parity_have.iter().filter(|&&p| p).count();
+            if !missing.is_empty() && missing.len() <= avail {
+                for s in missing {
+                    grp.resolved[s] = true;
+                    self.reconstructions += 1;
+                    out.push((s, true, grp.query_ids[s].clone(), grp.tags[s]));
+                }
+            }
+            if grp.resolved.iter().all(|&r| r) {
+                self.groups.remove(&g);
+                self.completed += 1;
+            }
+        }
+        fn on_data(&mut self, g: u64, slot: usize) -> Vec<Obs> {
+            let mut out = Vec::new();
+            let Some(grp) = self.groups.get_mut(&g) else { return out };
+            if slot >= grp.resolved.len() {
+                return out;
+            }
+            if !grp.resolved[slot] {
+                grp.resolved[slot] = true;
+                out.push((slot, false, grp.query_ids[slot].clone(), grp.tags[slot]));
+            }
+            self.settle(g, &mut out);
+            out
+        }
+        fn on_parity(&mut self, g: u64, ri: usize) -> Vec<Obs> {
+            let mut out = Vec::new();
+            let Some(grp) = self.groups.get_mut(&g) else { return out };
+            if ri >= grp.parity_have.len() {
+                return out;
+            }
+            grp.parity_have[ri] = true;
+            self.settle(g, &mut out);
+            out
+        }
+    }
+
+    for seed in 0..150u64 {
+        let mut rng = Pcg64::new(12_000 + seed);
+        let k = 2 + (seed as usize % 3); // k in 2..=4
+        let r_max = 1 + (rng.below(k as u64) as usize);
+        let encoders: Vec<Encoder> = (0..r_max).map(|ri| Encoder::sum_r(k, ri)).collect();
+        let mut tr = GroupTracker::new(k, &encoders);
+        let mut reference = RefModel::default();
+        let mut next_group = 0u64;
+
+        for step in 0..400 {
+            match rng.below(10) {
+                // Register a fresh group (variable r, random shard tags).
+                0..=2 => {
+                    let g = next_group;
+                    next_group += 1;
+                    let r = 1 + (rng.below(r_max as u64) as usize);
+                    let ids: Vec<Vec<u64>> =
+                        (0..k).map(|s| vec![g * k as u64 + s as u64]).collect();
+                    let tags: Vec<usize> =
+                        (0..k).map(|_| rng.below(8) as usize).collect();
+                    tr.register_tagged(g, ids.clone(), r, tags.clone());
+                    reference.groups.insert(
+                        g,
+                        RefGroup {
+                            query_ids: ids,
+                            tags,
+                            resolved: vec![false; k],
+                            parity_have: vec![false; r],
+                        },
+                    );
+                }
+                // Abandon a random known id (live or stale).
+                3 => {
+                    if next_group > 0 {
+                        let g = rng.below(next_group);
+                        tr.abandon(g);
+                        reference.groups.remove(&g);
+                    }
+                }
+                // Data completion: random (possibly stale/unknown) group,
+                // random slot including one past the end.
+                4..=6 => {
+                    if next_group == 0 {
+                        continue;
+                    }
+                    let g = rng.below(next_group + 1);
+                    let slot = rng.below(k as u64 + 1) as usize;
+                    let got: Vec<Obs> = tr
+                        .on_data(g, slot, rand_tensor(&mut rng, 4))
+                        .resolved
+                        .into_iter()
+                        .map(|s| (s.slot, s.reconstructed, s.query_ids, s.tag))
+                        .collect();
+                    assert_eq!(got, reference.on_data(g, slot), "seed {seed} step {step}");
+                }
+                // Parity completion: random r_index including beyond-r.
+                _ => {
+                    if next_group == 0 {
+                        continue;
+                    }
+                    let g = rng.below(next_group + 1);
+                    let ri = rng.below(r_max as u64 + 1) as usize;
+                    let got: Vec<Obs> = tr
+                        .on_parity(g, ri, rand_tensor(&mut rng, 4))
+                        .resolved
+                        .into_iter()
+                        .map(|s| (s.slot, s.reconstructed, s.query_ids, s.tag))
+                        .collect();
+                    assert_eq!(got, reference.on_parity(g, ri), "seed {seed} step {step}");
+                }
+            }
+            // Observable state equality after every step.
+            assert_eq!(tr.open_groups(), reference.groups.len(), "seed {seed} step {step}");
+            let mut live = tr.open_group_ids();
+            live.sort_unstable();
+            let mut want: Vec<u64> = reference.groups.keys().copied().collect();
+            want.sort_unstable();
+            assert_eq!(live, want, "seed {seed} step {step}: live id sets");
+            for (&g, grp) in &reference.groups {
+                assert!(tr.contains(g), "seed {seed} step {step}");
+                assert_eq!(tr.group_r(g), Some(grp.parity_have.len()), "seed {seed}");
+                let unresolved: Vec<usize> =
+                    (0..k).filter(|&i| !grp.resolved[i]).collect();
+                assert_eq!(tr.unresolved_slots(g), unresolved, "seed {seed} step {step}");
+                for s in 0..k {
+                    assert_eq!(tr.slot_tag(g, s), Some(grp.tags[s]), "seed {seed}");
+                }
+            }
+            assert_eq!(tr.completed_groups, reference.completed, "seed {seed} step {step}");
+            assert_eq!(
+                tr.reconstructions, reference.reconstructions,
+                "seed {seed} step {step}"
+            );
+        }
+    }
+}
+
+/// INVARIANT (recycling safety): however many slab entries have been
+/// freed and reused, traffic for a retired group id is inert — it emits
+/// nothing and leaves every live group's unresolved slots, r, and query
+/// routing untouched. Live ids always resolve to their *own* queries,
+/// never a recycled predecessor's.
+#[test]
+fn recycled_group_ids_never_alias_inflight_groups() {
+    for seed in 0..100u64 {
+        let mut rng = Pcg64::new(13_000 + seed);
+        let k = 2;
+        let mut tr = GroupTracker::new(k, &[Encoder::sum(k)]);
+        let mut retired: Vec<u64> = Vec::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_group = 0u64;
+
+        for _ in 0..300 {
+            match rng.below(4) {
+                // Open a group (often recycling a freed slab body).
+                0 | 1 => {
+                    let g = next_group;
+                    next_group += 1;
+                    let ids: Vec<Vec<u64>> =
+                        (0..k).map(|s| vec![g * 10 + s as u64]).collect();
+                    tr.register(g, ids);
+                    live.push(g);
+                }
+                // Fully resolve a live group, freeing its slab entry.
+                2 if !live.is_empty() => {
+                    let g = live.swap_remove(rng.below(live.len() as u64) as usize);
+                    for s in 0..k {
+                        tr.on_data(g, s, rand_tensor(&mut rng, 3));
+                    }
+                    assert!(!tr.contains(g), "seed {seed}: group {g} evicted");
+                    retired.push(g);
+                }
+                // Replay stale traffic for a retired id.
+                _ if !retired.is_empty() => {
+                    let g = retired[rng.below(retired.len() as u64) as usize];
+                    let before: Vec<(u64, Vec<usize>)> =
+                        live.iter().map(|&l| (l, tr.unresolved_slots(l))).collect();
+                    let r1 = tr.on_data(g, rng.below(k as u64) as usize, rand_tensor(&mut rng, 3));
+                    let r2 = tr.on_parity(g, 0, rand_tensor(&mut rng, 3));
+                    assert!(
+                        r1.resolved.is_empty() && r2.resolved.is_empty(),
+                        "seed {seed}: stale id {g} resolved something"
+                    );
+                    assert!(!tr.contains(g), "seed {seed}: stale id {g} revived");
+                    for (l, unresolved) in before {
+                        assert_eq!(
+                            tr.unresolved_slots(l),
+                            unresolved,
+                            "seed {seed}: stale id {g} touched live group {l}"
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Every live group still routes to its own query ids.
+        for &g in &live {
+            let res = tr.on_data(g, 0, rand_tensor(&mut rng, 3));
+            if let Some(native) = res.resolved.iter().find(|s| !s.reconstructed) {
+                assert_eq!(
+                    native.query_ids,
+                    vec![g * 10],
+                    "seed {seed}: group {g} answers with a recycled predecessor's queries"
+                );
+            }
+        }
+        assert_eq!(tr.open_groups(), live.len(), "seed {seed}");
+    }
+}

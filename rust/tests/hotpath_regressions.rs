@@ -1,0 +1,204 @@
+//! Regression tests for the hot-path rearchitecture bugfix sweep.
+//!
+//! Three bugs rode along with the seed's serving loop and are pinned
+//! here so they cannot regress:
+//!
+//! 1. `poll_timeout` stacked its waits — a batch-timeout wait followed
+//!    by a full completion wait — so a caller asking for a 500 ms
+//!    budget could block for roughly double that, and worse, return
+//!    empty even though its query resolved the moment the batch flushed.
+//!    The rewrite drives one shared deadline through the pump and wakes
+//!    early for batcher/SLO deadlines.
+//! 2. The open-loop drivers (`run_open_loop` / `run_trace_scaled`)
+//!    duplicated a pacing loop that folded the *entire* completion
+//!    backlog between due-checks, so a completion flood pushed arrival
+//!    timestamps past their trace offsets. The shared `pace_until`
+//!    bounds each fold and re-checks the deadline every pass.
+//! 3. A panic on one thread while it held a coordinator or telemetry
+//!    lock poisoned that lock for everyone (~194 `.unwrap()` sites) and
+//!    cascaded a single fault into a fleet-wide crash. Locks now
+//!    recover via `PoisonError::into_inner` and registry samplers run
+//!    under `catch_unwind`.
+//!
+//! All three use the synthetic artifact backend (`Manifest::load_default`
+//! fabricates a deterministic inventory), so they run anywhere.
+
+use std::time::{Duration, Instant};
+
+use parm::coordinator::encoder::Encoder;
+use parm::coordinator::journal::{self, Event, Recorder};
+use parm::coordinator::service::{Mode, ServiceConfig};
+use parm::coordinator::session::{ServiceBuilder, ServiceHandle};
+use parm::experiments::latency;
+use parm::workload::trace::Trace;
+use parm::workload::QuerySource;
+
+/// Build a small ParM session against the synthetic backend, or `None`
+/// when executables are unavailable (the suite-wide skip idiom).
+fn build_session(
+    tweak: &mut dyn FnMut(&mut ServiceConfig),
+) -> Option<(ServiceHandle, QuerySource)> {
+    let Ok(m) = parm::artifacts::Manifest::load_default() else { return None };
+    let ds = m.dataset(latency::LATENCY_DATASET).unwrap().clone();
+    let src = QuerySource::from_dataset(&m, &ds).unwrap();
+    let Ok(models) = latency::load_models(&m, 1, 2, 1, false) else {
+        eprintln!("SKIP hotpath regression: no executables");
+        return None;
+    };
+    let mut cfg = ServiceConfig::defaults(
+        Mode::Parm { k: 2, encoders: vec![Encoder::sum(2)] },
+        &parm::cluster::hardware::GPU,
+    );
+    cfg.m = 2;
+    cfg.shuffles = 0;
+    cfg.time_scale = 0.0;
+    cfg.seed = 0x407;
+    tweak(&mut cfg);
+    let handle = ServiceBuilder::new(cfg).build(&models, &src.queries[0]).ok()?;
+    Some((handle, src))
+}
+
+/// BUG 1 (`poll_timeout` double wait): with a batch that only seals by
+/// timeout, the seed first slept out the batch deadline and then started
+/// a *fresh* full-length completion wait — and in the worst case
+/// returned nothing after ~2x the caller's budget because the flush
+/// only happened on entry to the next call. One submit + one
+/// `poll_timeout(500ms)` must return the resolved query in well under
+/// half the budget: the pump wakes at the 5 ms batcher deadline,
+/// flushes, and the modeled completion resolves immediately.
+#[test]
+fn poll_timeout_honors_a_single_shared_deadline() {
+    let Some((mut h, src)) = build_session(&mut |cfg| {
+        cfg.batch_size = 64; // never seals by count
+        cfg.batch_timeout = Duration::from_millis(5);
+    }) else {
+        return;
+    };
+    let id = h.submit(src.queries[0].clone());
+    let start = Instant::now();
+    let got = h.poll_timeout(Duration::from_millis(500));
+    let waited = start.elapsed();
+    assert_eq!(got.len(), 1, "query must resolve within one poll_timeout");
+    assert_eq!(got[0].id, id);
+    assert!(
+        waited < Duration::from_millis(250),
+        "poll_timeout blocked {waited:?} for a query that resolved at the \
+         5ms batch deadline — the wait is not honoring the shared deadline"
+    );
+    assert!(h.drain().is_empty());
+    h.shutdown();
+}
+
+/// BUG 2 (pacing drift): trace replay must keep its arrival schedule
+/// even when a deep completion backlog is draining underneath it. We
+/// pile up a few thousand unharvested completions, then replay a trace
+/// with 8 ms spacing and compare the journal's recorded submit
+/// timestamps against the trace offsets. The bounded `pace_until` fold
+/// keeps every arrival within tolerance; the seed's unbounded sweep let
+/// the backlog push arrivals late.
+#[test]
+fn trace_pacing_stays_on_schedule_under_completion_flood() {
+    let rec = Recorder::start(0xFEED, "parm", 1);
+    let rec_cfg = rec.clone();
+    let Some((mut h, src)) = build_session(&mut |cfg| {
+        cfg.batch_size = 1;
+        cfg.recorder = rec_cfg.clone();
+    }) else {
+        return;
+    };
+    // Flood: submit without polling so completions pile up on the bus.
+    let flood: usize = 4_000;
+    let mut ids = Vec::with_capacity(flood);
+    for i in 0..flood {
+        ids.push(h.submit(src.queries[i % src.len()].clone()));
+    }
+    // Let the (modeled, time_scale=0) workers finish into the bus.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let step = Duration::from_millis(8);
+    let n: usize = 12;
+    let trace = Trace {
+        arrivals: (0..n).map(|i| i as f64 * step.as_secs_f64()).collect(),
+        query_idx: Vec::new(),
+        client: Vec::new(),
+        rate_qps: 1.0 / step.as_secs_f64(),
+    };
+    h.run_trace(&src.queries, &trace);
+
+    let resolved = h.drain();
+    let mut got: Vec<u64> = resolved.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    // Qids are sequential, so the trace arrivals follow the flood ids.
+    let first = ids[0];
+    let expect: Vec<u64> = (first..first + (flood + n) as u64).collect();
+    assert_eq!(got, expect, "flood + trace queries each resolve exactly once");
+
+    let res = h.shutdown();
+    let bytes = rec.finish(&res);
+    let evs = journal::decode(&bytes).expect("journal decodes");
+    let trace_base = first + flood as u64;
+    let ts: Vec<u64> = evs
+        .iter()
+        .filter_map(|te| match te.event {
+            Event::Submit { qid } if qid >= trace_base => Some(te.ts_us),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(ts.len(), n, "every trace arrival was journaled");
+    // Compare inter-arrival schedule against the trace offsets, rebased
+    // to the first trace submit. Tolerance is generous for noisy CI
+    // hosts but far below the multi-step drift the unbounded sweep
+    // produced under this flood.
+    let tol_us: i64 = 40_000;
+    for (i, &t) in ts.iter().enumerate() {
+        let actual = (t - ts[0]) as i64;
+        let expected = (i as u64 * step.as_micros() as u64) as i64;
+        assert!(
+            (actual - expected).abs() <= tol_us,
+            "arrival {i}: {actual}us after first submit, trace offset {expected}us \
+             — pacing drifted past tolerance ({tol_us}us) under completion flood"
+        );
+    }
+}
+
+/// BUG 3 (lock-poisoning cascade): a sampler hook that panics mid-scrape
+/// used to unwind through the scrape, poison the registry's sampler
+/// list, and turn every later lock `.unwrap()` into a panic — one
+/// faulty hook took down telemetry and, through shared registry
+/// handles, the serving path. Now the scrape contains the panic
+/// (`catch_unwind`) and every lock recovers from poisoning, so the
+/// session keeps serving with exactly-once conservation and the
+/// registry stays scrapeable.
+#[test]
+fn panicking_sampler_neither_kills_scrapes_nor_breaks_conservation() {
+    let Some((mut h, src)) = build_session(&mut |_| {}) else { return };
+    let reg = h.registry();
+    reg.sampler(|| panic!("sampler bomb"));
+
+    // Scrape on another thread mid-run; it trips the bomb.
+    let reg_scrape = reg.clone();
+    let scraper = std::thread::spawn(move || reg_scrape.render());
+
+    let mut ids = Vec::new();
+    let mut resolved = Vec::new();
+    for i in 0..200usize {
+        ids.push(h.submit(src.queries[i % src.len()].clone()));
+        if i % 16 == 0 {
+            resolved.extend(h.poll());
+            h.publish_telemetry();
+        }
+    }
+    let rendered = scraper.join().expect("a panicking sampler must not kill the scraper thread");
+    assert!(!rendered.is_empty());
+
+    resolved.extend(h.drain());
+    let mut got: Vec<u64> = resolved.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids, "exactly-once conservation with a poisoned-sampler scrape mid-run");
+
+    // The registry must still be scrapeable afterward (the seed's
+    // poisoned mutex panicked every subsequent render).
+    assert!(!reg.render().is_empty());
+    let res = h.shutdown();
+    assert_eq!(res.metrics.total(), ids.len() as u64);
+}

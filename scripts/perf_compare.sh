@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Gate the saturation bench (rust/benches/saturation.rs) against the
+# committed baseline in scripts/perf_baseline.json.
+#
+# Usage:
+#   scripts/perf_compare.sh [results.json]
+#       Compare rust/bench_out/throughput.json (or the given file)
+#       against the baseline. Exits nonzero when sustained qps regresses
+#       by more than PARM_PERF_TOLERANCE (default 0.10 = 10%) — either
+#       on the sweep-wide max or on any client phase present in both.
+#       While the baseline is marked "provisional": true the script
+#       records the measurement and exits 0 instead of gating (the
+#       bootstrap state before a reference runner has published
+#       numbers).
+#
+#   scripts/perf_compare.sh --rebaseline [results.json]
+#       Rewrite scripts/perf_baseline.json from the given results and
+#       clear the provisional flag. Run this on the reference runner
+#       after an intentional performance change, sanity-check the
+#       numbers, and commit the file — the refreshed baseline is what
+#       every subsequent CI run gates against.
+#
+# The results file is the telemetry::series::Capture emission: a JSON
+# array of sampled rows; per-phase numbers live in the rows where the
+# phase_qps gauge changes (the bench sets it once per client phase).
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+MODE="compare"
+if [ "${1:-}" = "--rebaseline" ]; then
+    MODE="rebaseline"
+    shift
+fi
+RESULTS="${1:-$ROOT/rust/bench_out/throughput.json}"
+BASELINE="$ROOT/scripts/perf_baseline.json"
+TOL="${PARM_PERF_TOLERANCE:-0.10}"
+
+[ -f "$RESULTS" ] || { echo "perf_compare: no results at $RESULTS (run: cd rust && cargo bench --bench saturation)"; exit 1; }
+
+python3 - "$RESULTS" "$BASELINE" "$TOL" "$MODE" <<'EOF'
+import json, sys
+
+results_path, baseline_path, tol, mode = sys.argv[1:5]
+tol = float(tol)
+rows = json.load(open(results_path))
+
+# Extract one record per client phase: the bench publishes
+# parm_bench_phase_qps exactly once at the end of each phase, while
+# parm_bench_clients still holds that phase's client count.
+phases = {}
+prev = None
+for row in rows:
+    q = row.get("phase_qps") or 0.0
+    if q > 0 and q != prev:
+        clients = int(row.get("clients") or 0)
+        phases[str(clients)] = {
+            "qps": q,
+            "p999_ms": row.get("phase_p999_ms") or 0.0,
+        }
+    prev = q
+
+if not phases:
+    sys.exit("perf_compare: no phase rows in %s (phase_qps never set)" % results_path)
+max_qps = max(p["qps"] for p in phases.values())
+
+print("measured phases:")
+for c in sorted(phases, key=int):
+    p = phases[c]
+    print("  clients=%-4s qps=%-10.0f p999=%.3fms" % (c, p["qps"], p["p999_ms"]))
+print("measured max sustained qps: %.0f" % max_qps)
+
+if mode == "rebaseline":
+    doc = {
+        "bench": "saturation",
+        "provisional": False,
+        "max_qps": max_qps,
+        "phase_qps": {c: p["qps"] for c, p in phases.items()},
+        "phase_p999_ms": {c: p["p999_ms"] for c, p in phases.items()},
+        "note": "Reference-runner numbers; refresh with scripts/perf_compare.sh --rebaseline after intentional perf changes.",
+    }
+    with open(baseline_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print("rebaselined %s" % baseline_path)
+    sys.exit(0)
+
+base = json.load(open(baseline_path))
+if base.get("provisional") or base.get("max_qps") is None:
+    print("baseline is provisional: recording only, not gating.")
+    print("(publish one with: scripts/perf_compare.sh --rebaseline)")
+    sys.exit(0)
+
+failures = []
+floor = base["max_qps"] * (1.0 - tol)
+if max_qps < floor:
+    failures.append(
+        "max sustained qps %.0f < %.0f (baseline %.0f, tolerance %.0f%%)"
+        % (max_qps, floor, base["max_qps"], tol * 100)
+    )
+for c, bq in (base.get("phase_qps") or {}).items():
+    if c in phases and phases[c]["qps"] < bq * (1.0 - tol):
+        failures.append(
+            "clients=%s qps %.0f < %.0f (baseline %.0f, tolerance %.0f%%)"
+            % (c, phases[c]["qps"], bq * (1.0 - tol), bq, tol * 100)
+        )
+
+if failures:
+    print("PERF REGRESSION:")
+    for f in failures:
+        print("  " + f)
+    sys.exit(1)
+print("perf gate passed (tolerance %.0f%%)." % (tol * 100))
+EOF
